@@ -1,0 +1,157 @@
+//! Deep-zoom Mandelbrot — the "multipass real-time algorithm" motivation
+//! (paper §7: float-float ops "remain fast enough to be used in precise
+//! sensitive parts of real-time multipass algorithms").
+//!
+//! At zoom depths beyond ~2^-23 of the complex plane, binary32 pixel
+//! coordinates collapse onto each other and the image turns to banding;
+//! float-float keeps iterating correctly down to ~2^-45. We render the
+//! same window in f32, FF32 and f64 (truth), and report pixel agreement.
+//!
+//! ```bash
+//! cargo run --release --example mandelbrot_deep_zoom
+//! ```
+
+use ffgpu::ff::FF32;
+
+const W: usize = 64;
+const H: usize = 32;
+const MAX_ITER: u32 = 2048;
+
+/// Escape-time iteration in any arithmetic, via a small trait.
+trait Complexish: Copy {
+    fn from_f64(v: f64) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+impl Complexish for f32 {
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Complexish for f64 {
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+impl Complexish for FF32 {
+    fn from_f64(v: f64) -> Self {
+        FF32::from_f64(v)
+    }
+    fn mul(self, o: Self) -> Self {
+        self * o
+    }
+    fn add(self, o: Self) -> Self {
+        self + o
+    }
+    fn sub(self, o: Self) -> Self {
+        self - o
+    }
+    fn to_f64(self) -> f64 {
+        self.to_f64()
+    }
+}
+
+fn escape_time<T: Complexish>(cr: f64, ci: f64) -> u32 {
+    let (cr, ci) = (T::from_f64(cr), T::from_f64(ci));
+    let mut zr = T::from_f64(0.0);
+    let mut zi = T::from_f64(0.0);
+    for it in 0..MAX_ITER {
+        let zr2 = zr.mul(zr);
+        let zi2 = zi.mul(zi);
+        if zr2.to_f64() + zi2.to_f64() > 4.0 {
+            return it;
+        }
+        let new_zr = zr2.sub(zi2).add(cr);
+        zi = zr.mul(zi).add(zr.mul(zi)).add(ci); // 2·zr·zi + ci
+        zr = new_zr;
+    }
+    MAX_ITER
+}
+
+fn render<T: Complexish>(cx: f64, cy: f64, scale: f64) -> Vec<u32> {
+    let mut img = Vec::with_capacity(W * H);
+    for y in 0..H {
+        for x in 0..W {
+            let cr = cx + (x as f64 / W as f64 - 0.5) * scale;
+            let ci = cy + (y as f64 / H as f64 - 0.5) * scale * 0.5;
+            img.push(escape_time::<T>(cr, ci));
+        }
+    }
+    img
+}
+
+fn agreement(a: &[u32], b: &[u32]) -> f64 {
+    let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    same as f64 / a.len() as f64
+}
+
+fn ascii(img: &[u32]) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut s = String::new();
+    for y in 0..H {
+        for x in 0..W {
+            let v = img[y * W + x];
+            // log-scale the ramp so deep-zoom structure is visible
+            let lv = ((v.max(1) as f64).ln() / (MAX_ITER as f64).ln() * (RAMP.len() - 1) as f64) as usize;
+            let idx = lv.min(RAMP.len() - 1);
+            s.push(RAMP[idx] as char);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+fn main() {
+    // a seahorse-valley point, zoomed far past f32 resolution
+    let (cx, cy) = (-0.743643887037151, 0.131825904205330);
+    println!("deep zoom at ({cx}, {cy})\n");
+    println!("{:>12} {:>10} {:>10}", "scale", "f32 vs f64", "FF32 vs f64");
+    for exp in [-18i32, -24, -30, -33, -36] {
+        let scale = (exp as f64).exp2();
+        let truth = render::<f64>(cx, cy, scale);
+        let img32 = render::<f32>(cx, cy, scale);
+        let imgff = render::<FF32>(cx, cy, scale);
+        println!(
+            "{:>12} {:>9.1}% {:>9.1}%",
+            format!("2^{exp}"),
+            agreement(&img32, &truth) * 100.0,
+            agreement(&imgff, &truth) * 100.0
+        );
+    }
+
+    // show the collapse visually at 2^-36
+    let scale = (-36f64).exp2();
+    println!("\nf32 render at 2^-36 (banding = precision collapse):");
+    print!("{}", ascii(&render::<f32>(cx, cy, scale)));
+    println!("\nFF32 render at 2^-36 (matches f64):");
+    print!("{}", ascii(&render::<FF32>(cx, cy, scale)));
+}

@@ -1,0 +1,153 @@
+//! **End-to-end driver**: regenerates every table of the paper through
+//! the full three-layer stack and prints paper-vs-measured side by side.
+//! This is the run recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example paper_repro
+//! # quick mode:
+//! FFGPU_QUICK=1 cargo run --release --example paper_repro
+//! ```
+//!
+//! Stages:
+//!   1. Table 1 — format inventory (definitions).
+//!   2. Table 2 — paranoia over simulated GPU arithmetic.
+//!   3. Table 3 — operator timings, XLA/PJRT path (via the coordinator).
+//!   4. Table 4 — operator timings, native CPU path.
+//!   5. Table 5 — accuracy sweep vs the exact dyadic oracle
+//!      (native + XLA + simulated NV35).
+//!   6. selftest — artifacts vs native kernels, bit-exact.
+
+use ffgpu::coordinator::batcher::op_arity;
+use ffgpu::gpusim::{algorithms as sim, Format, GpuModel};
+use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
+use ffgpu::runtime::Runtime;
+use ffgpu::util::Timer;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::var("FFGPU_QUICK").is_ok();
+    let t0 = Instant::now();
+    let artifacts = PathBuf::from(
+        std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+
+    println!("==============================================================");
+    println!(" paper_repro — Da Graça & Defour 2006, full reproduction run");
+    println!("==============================================================\n");
+
+    // ---- Table 1 ----------------------------------------------------
+    println!("### Table 1 — representation formats");
+    for f in Format::table1() {
+        println!("  {:<14} sign 1  exp {:>2}  mant {:>2}  specials {}",
+                 f.name(), f.exp_bits, f.mant_bits,
+                 if f.has_specials { "yes" } else { "no" });
+    }
+
+    // ---- Table 2 ----------------------------------------------------
+    println!("\n### Table 2 — paranoia on simulated GPU arithmetic");
+    let samples = if quick { 20_000 } else { 300_000 };
+    print!("{}", paranoia_table::measure(samples, 0xE2E).render());
+
+    // ---- Table 3 ----------------------------------------------------
+    let rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("\nruntime unavailable ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+    println!("\n### Table 3 — float-float operators, XLA/PJRT path");
+    println!("platform: {}", rt.platform());
+    let timer = if quick { Timer::new(1, 3) } else { Timer::new(3, 9) };
+    let sizes: &[usize] = if quick { &[4096, 16384, 65536] } else { &workload::PAPER_SIZES };
+    let grid3 = timing::gpu_grid(&rt, sizes, &workload::PAPER_OPS, &timer, 0xE3E)
+        .expect("gpu grid");
+    print!("{}", grid3.render("measured (normalised to Add@4096)"));
+    let (psizes, p3) = timing::paper_table3();
+    println!("paper (7800GTX):");
+    for (s, r) in psizes.iter().zip(&p3) {
+        let cells: String = r.iter().map(|v| format!("{v:>8.2}")).collect();
+        println!("  {s:>9} {cells}");
+    }
+
+    // ---- Table 4 ----------------------------------------------------
+    println!("\n### Table 4 — float-float operators, native CPU path");
+    let grid4 = timing::cpu_grid(sizes, &workload::PAPER_OPS, &timer, 0xE4E);
+    print!("{}", grid4.render("measured (normalised to Add@4096)"));
+    let (_, p4) = timing::paper_table4();
+    println!("paper (Pentium IV 3.2GHz):");
+    for (s, r) in psizes.iter().zip(&p4) {
+        let cells: String = r.iter().map(|v| format!("{v:>9.2}")).collect();
+        println!("  {s:>9} {cells}");
+    }
+
+    // ---- Table 5 ----------------------------------------------------
+    println!("\n### Table 5 — measured accuracy (exact dyadic oracle)");
+    let acc_samples = if quick { 1 << 14 } else { 1 << 20 };
+    let ops = ["add12", "mul12", "add22", "mul22"];
+    println!("{:<8} {:>12} {:>12} {:>12} {:>10}",
+             "op", "native", "xla", "nv35-sim", "paper");
+    let m = GpuModel::NV35;
+    for (op, paper_val) in ops.iter().zip(["-48.0", "(exact)", "-33.7", "-45.0"]) {
+        let native = accuracy::measure_op(op, acc_samples, 1 << 14, 1, |op, planes| {
+            let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+            let (_, n_out) = op_arity(op).unwrap();
+            let mut outs = vec![vec![0.0f32; planes[0].len()]; n_out];
+            ffgpu::ff::vector::dispatch(op, &refs, &mut outs)?;
+            Ok(outs)
+        })
+        .unwrap();
+        let xla = accuracy::measure_op(op, acc_samples.min(1 << 18), 16384, 2,
+            |op, planes| {
+                let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+                rt.execute(&format!("{op}_n16384"), &refs)
+            })
+            .unwrap();
+        let simr = accuracy::measure_op(op, acc_samples.min(1 << 14), 1 << 12, 3,
+            |op, planes| {
+                let n = planes[0].len();
+                let mut outs = vec![vec![0.0f32; n]; 2];
+                for i in 0..n {
+                    let q = |p: usize| m.quantize(planes[p][i] as f64);
+                    let (h, l) = match op {
+                        "add12" => sim::add12(&m, q(0), q(1)),
+                        "mul12" => sim::mul12(&m, q(0), q(1)),
+                        "add22" => sim::add22(&m, (q(0), q(1)), (q(2), q(3))),
+                        "mul22" => sim::mul22(&m, (q(0), q(1)), (q(2), q(3))),
+                        other => return Err(format!("no sim for {other}")),
+                    };
+                    outs[0][i] = m.to_f64(h) as f32;
+                    outs[1][i] = m.to_f64(l) as f32;
+                }
+                Ok(outs)
+            })
+            .unwrap();
+        println!("{:<8} {:>12} {:>12} {:>12} {:>10}",
+                 op, native.display(), xla.display(), simr.display(), paper_val);
+    }
+
+    // ---- selftest -----------------------------------------------------
+    println!("\n### selftest — artifacts vs native kernels (bit-exact)");
+    let mut fails = 0;
+    for op in workload::PAPER_OPS.iter().chain(workload::EXT_OPS.iter()) {
+        let planes = workload::planes_for(op, 4096, 0xE5E);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let xla = rt.execute(&format!("{op}_n4096"), &refs).unwrap();
+        let (_, n_out) = op_arity(op).unwrap();
+        let mut native = vec![vec![0.0f32; 4096]; n_out];
+        ffgpu::ff::vector::dispatch(op, &refs, &mut native).unwrap();
+        let ok = xla.iter().zip(&native)
+            .all(|(a, b)| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        println!("  {op:<6} {}", if ok { "OK" } else { "FAIL" });
+        if !ok {
+            fails += 1;
+        }
+    }
+
+    println!("\n==============================================================");
+    println!(" paper_repro complete in {:.1}s  ({} failures)",
+             t0.elapsed().as_secs_f64(), fails);
+    println!("==============================================================");
+    std::process::exit(if fails == 0 { 0 } else { 1 });
+}

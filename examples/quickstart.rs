@@ -1,0 +1,54 @@
+//! Quickstart: the float-float format in 60 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ffgpu::ff::FF32;
+
+fn main() {
+    // --- the problem: f32 is 24 bits -------------------------------------
+    let a32 = 1.0f32;
+    let tiny32 = 1e-9f32;
+    println!("f32:  1.0 + 1e-9          = {:.12e}  (the 1e-9 is gone)", a32 + tiny32);
+
+    // --- the fix: a pair of f32s carries ~49 bits ------------------------
+    let a = FF32::from_f32(1.0);
+    let tiny = FF32::from_f64(1e-9);
+    let sum = a + tiny;
+    println!("FF32: 1.0 + 1e-9          = {:.12e}", sum.to_f64());
+    println!("      stored as hi={:e} lo={:e}", sum.hi, sum.lo);
+
+    // --- full arithmetic --------------------------------------------------
+    let pi = FF32::from_f64(std::f64::consts::PI);
+    let e = FF32::from_f64(std::f64::consts::E);
+    println!("\nπ·e   (FF32) = {:.15}", (pi * e).to_f64());
+    println!("π·e   (f64)  = {:.15}", std::f64::consts::PI * std::f64::consts::E);
+    println!("π/e   (FF32) = {:.15}", (pi / e).to_f64());
+    println!("√2    (FF32) = {:.15}", FF32::from_f32(2.0).sqrt22().to_f64());
+
+    // --- the building blocks (paper §4.1) ----------------------------------
+    let (s, r) = ffgpu::ff::two_sum(0.1f32, 0.2f32);
+    println!("\ntwo_sum(0.1, 0.2): s = {s:e}, exact rounding error r = {r:e}");
+    let (x, y) = ffgpu::ff::two_prod(1.1f32, 2.2f32);
+    println!("two_prod(1.1, 2.2): x = {x:e}, exact error y = {y:e}");
+    let (hi, lo) = ffgpu::ff::split(std::f32::consts::PI);
+    println!("split(π) = {hi:e} + {lo:e}  (12-bit halves, products stay exact)");
+
+    // --- accuracy check against f64 ---------------------------------------
+    let mut acc = FF32::ZERO;
+    let step = FF32::from_f64(0.1);
+    for _ in 0..1000 {
+        acc += step;
+    }
+    let err_ff = (acc.to_f64() - 100.0).abs();
+    let mut acc32 = 0.0f32;
+    for _ in 0..1000 {
+        acc32 += 0.1;
+    }
+    let err_f32 = (acc32 as f64 - 100.0).abs();
+    println!("\nsum of 1000 × 0.1:");
+    println!("  f32  error = {err_f32:.3e}");
+    println!("  FF32 error = {err_ff:.3e}  ({}x better)",
+             (err_f32 / err_ff.max(1e-300)) as u64);
+}

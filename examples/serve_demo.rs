@@ -1,0 +1,71 @@
+//! Coordinator serving demo: concurrent clients, dynamic batching,
+//! metrics — the L3 layer exercised as a service.
+//!
+//! ```bash
+//! cargo run --release --example serve_demo            # XLA backend
+//! FFGPU_BACKEND=cpu cargo run --release --example serve_demo
+//! ```
+
+use ffgpu::coordinator::service::Backend;
+use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::harness::workload;
+use ffgpu::util::Rng;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let artifacts = PathBuf::from(
+        std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let backend = match std::env::var("FFGPU_BACKEND").as_deref() {
+        Ok("cpu") => Backend::Cpu,
+        _ if artifacts.join("manifest.json").exists() => Backend::Xla(artifacts),
+        _ => {
+            println!("(no artifacts; falling back to CPU backend)");
+            Backend::Cpu
+        }
+    };
+    println!("backend: {backend:?}");
+    let svc = Service::start(ServiceConfig { backend, max_batch: 64, precompile: false })
+        .expect("service");
+
+    // a mixed workload: 8 clients, varying ops and sizes
+    let ops = ["add22", "mul22", "mul12", "add12", "div22"];
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..8u64 {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c);
+            let mut lat = Vec::new();
+            for round in 0..40 {
+                let op = ops[(c as usize + round) % ops.len()];
+                let n = 256 + rng.below(32_000);
+                let planes = workload::planes_for(op, n, rng.next_u64());
+                let t = Instant::now();
+                let out = h.call(op, planes).expect("call");
+                lat.push(t.elapsed().as_secs_f64());
+                assert_eq!(out[0].len(), n);
+            }
+            lat
+        }));
+    }
+    let mut all_lat: Vec<f64> = Vec::new();
+    for j in joins {
+        all_lat.extend(j.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| all_lat[((all_lat.len() as f64 * p) as usize).min(all_lat.len() - 1)];
+
+    let m = svc.metrics();
+    println!("\n{} requests in {wall:.2}s  ->  {:.0} req/s", m.requests,
+             m.requests as f64 / wall);
+    println!("elements processed: {} ({:.1} Melem/s)", m.elements,
+             m.elements as f64 / wall / 1e6);
+    println!("batches: {}  launches: {}  padding: {:.1}%", m.batches, m.launches,
+             m.padding_fraction() * 100.0);
+    println!("client latency: p50={:.2}ms  p95={:.2}ms  p99={:.2}ms",
+             pct(0.50) * 1e3, pct(0.95) * 1e3, pct(0.99) * 1e3);
+    println!("errors: {}", m.errors);
+}

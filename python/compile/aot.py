@@ -1,0 +1,102 @@
+"""AOT lowering: every L2 graph -> artifacts/<name>.hlo.txt + manifest.json.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 rust crate links) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly. Lowered with ``return_tuple=True``; the rust side
+unwraps with ``to_tuple1()``/``to_vec()``.
+
+Python runs exactly once (``make artifacts``); the rust binary is
+self-contained afterwards. Re-running is a no-op unless inputs changed
+(make dependency on this file + kernels/ + model.py).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(name, fn, args, meta, out_dir):
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    entry = dict(meta)
+    entry.update(
+        name=name,
+        file=fname,
+        hlo_bytes=len(text),
+        sha256=hashlib.sha256(text.encode()).hexdigest()[:16],
+        in_shapes=[list(a.shape) for a in args],
+        lower_seconds=round(time.time() - t0, 3),
+    )
+    return entry
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument("--sizes", type=int, nargs="*", default=None,
+                   help="override stream sizes (default: paper grid)")
+    p.add_argument("--ops", nargs="*", default=None,
+                   help="override operator list (default: all)")
+    p.add_argument("--block", type=int, default=None,
+                   help="override Pallas block size")
+    p.add_argument("--only", nargs="*", default=None,
+                   help="lower only these catalogue entries")
+    args = p.parse_args(argv)
+
+    kwargs = {}
+    if args.sizes:
+        kwargs["sizes"] = tuple(args.sizes)
+    if args.ops:
+        kwargs["ops"] = tuple(args.ops)
+    if args.block:
+        kwargs["block"] = args.block
+    cat = model.catalogue(**kwargs)
+    if args.only:
+        cat = {k: v for k, v in cat.items() if k in set(args.only)}
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "entries": []}
+    for name, (fn, ex_args, meta) in sorted(cat.items()):
+        entry = lower_one(name, fn, ex_args, meta, args.out)
+        manifest["entries"].append(entry)
+        print(f"  lowered {name:<28} {entry['hlo_bytes']:>9} B "
+              f"({entry['lower_seconds']}s)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out}",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

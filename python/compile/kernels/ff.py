@@ -1,0 +1,209 @@
+"""L1 Pallas kernels for the float-float operators.
+
+Each paper operator (Add12, Split, Mul12, Add22, Mul22, plus the Div22 /
+Mad22 extensions and the Add/Mul/Mad single-precision baselines of Tables
+3-4) is one **fused** elementwise Pallas kernel: the whole EFT sequence
+runs on a VMEM-resident block, exactly like the paper's fragment programs
+ran the whole sequence per texel. One ``pallas_call`` per operator — never
+one per EFT line — so the HBM<->VMEM traffic is one load per input plane
+and one store per output plane.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the 2006 fragment
+processor becomes a blocked VPU kernel. Streams are SoA ``(hi, lo)`` f32
+planes; ``BlockSpec`` expresses the HBM->VMEM schedule the paper expressed
+with texture fetches. Kernels are branch-free, as required on NV40-class
+pixel shaders (and as the paper recommends even where branches exist).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO that the rust runtime can
+compile and run. Real-TPU perf is estimated structurally in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Default VMEM block (elements). 4096 f32 = 16 KiB per plane; with the
+# widest kernel (mad22: 6 in + 2 out planes) that is 128 KiB of VMEM,
+# far under the 16 MiB budget, leaving room for double buffering.
+DEFAULT_BLOCK = 4096
+
+# Dekker splitting constant for binary32 (2^12 + 1); see ref.SPLIT_CONST_F32.
+_SPLIT = 4097.0
+
+
+def _block_elems(n: int, block: int) -> int:
+    """Block size actually used for a problem of n elements."""
+    return min(block, n)
+
+
+def _grid(n: int, block: int) -> int:
+    b = _block_elems(n, block)
+    assert n % b == 0, f"n={n} must be a multiple of block={b}"
+    return n // b
+
+
+# ---------------------------------------------------------------------------
+# In-kernel EFT sequences (operate on loaded VMEM values, branch-free)
+# ---------------------------------------------------------------------------
+# These mirror ref.py exactly but are written against plain array values so
+# they inline into a single kernel body.
+
+def _k_add12(a, b):
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def _k_fast_add12(a, b):
+    s = a + b
+    err = b - (s - a)
+    return s, err
+
+
+def _k_split(a):
+    """Veltkamp/Dekker 12|12 split via mantissa masking.
+
+    The paper's FP-only SPLIT (Th. 3) — ``c = a*(2^12+1); hi = c-(c-a)`` —
+    is *miscompiled by XLA*: an optimization pass folds the ``c - (c - a)``
+    error-extraction pattern back to ``a`` (observed on both jaxlib 0.8.2
+    and xla_extension 0.5.1; see DESIGN.md "XLA FP-rewrite hazard"). This
+    is the exact hazard the paper hit with Brook's DirectX backend in its
+    §5, where the generated fragment program had to be hand-corrected.
+    Our hand-correction: split via integer masking, which no FP pass can
+    touch. Clearing the low 12 explicit-mantissa bits leaves a 12-bit
+    ``hi`` (11 explicit + implicit); ``lo = a - hi`` is exact (Sterbenz)
+    and fits 12 bits, so all Mul12 sub-products stay exact — the Dekker
+    proof goes through unchanged.
+    """
+    bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+    a_hi = jax.lax.bitcast_convert_type(bits & jnp.uint32(0xFFFFF000), jnp.float32)
+    a_lo = a - a_hi
+    return a_hi, a_lo
+
+
+def _k_mul12(a, b):
+    x = a * b
+    a_hi, a_lo = _k_split(a)
+    b_hi, b_lo = _k_split(b)
+    err1 = x - (a_hi * b_hi)
+    err2 = err1 - (a_lo * b_hi)
+    err3 = err2 - (a_hi * b_lo)
+    y = (a_lo * b_lo) - err3
+    return x, y
+
+
+def _k_add22(ah, al, bh, bl):
+    sh, se = _k_add12(ah, bh)
+    te = (al + bl) + se
+    return _k_fast_add12(sh, te)
+
+
+def _k_mul22(ah, al, bh, bl):
+    ph, pl = _k_mul12(ah, bh)
+    pl = pl + (ah * bl + al * bh)
+    return _k_fast_add12(ph, pl)
+
+
+def _k_div22(ah, al, bh, bl):
+    q1 = ah / bh
+    th, tl = _k_mul12(q1, bh)
+    r = (((ah - th) - tl) + al - q1 * bl) / bh
+    return _k_fast_add12(q1, r)
+
+
+def _k_mad22(ah, al, bh, bl, ch, cl):
+    ph, pl = _k_mul22(ah, al, bh, bl)
+    return _k_add22(ph, pl, ch, cl)
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (refs -> refs)
+# ---------------------------------------------------------------------------
+
+def _body(fn, n_in, n_out):
+    """Wrap an elementwise value-function into a pallas kernel body."""
+
+    def kernel(*refs):
+        ins = [r[...] for r in refs[:n_in]]
+        outs = fn(*ins)
+        for o_ref, o in zip(refs[n_in:], outs):
+            o_ref[...] = o
+
+    kernel.__name__ = f"ffgpu_{fn.__name__.lstrip('_k_')}_kernel"
+    return kernel
+
+
+# Operator table: name -> (value_fn, n_inputs, n_outputs)
+OPS = {
+    # paper section 4 operators
+    "add12": (_k_add12, 2, 2),
+    "split": (lambda a: _k_split(a), 1, 2),
+    "mul12": (_k_mul12, 2, 2),
+    "add22": (_k_add22, 4, 2),
+    "mul22": (_k_mul22, 4, 2),
+    # extensions (paper §7 future work)
+    "div22": (_k_div22, 4, 2),
+    "mad22": (_k_mad22, 6, 2),
+    # single-precision baselines (Tables 3-4 comparators)
+    "add": (lambda a, b: (a + b,), 2, 1),
+    "mul": (lambda a, b: (a * b,), 2, 1),
+    "mad": (lambda a, b, c: (a * b + c,), 3, 1),
+}
+
+# Reference (pure-jnp) implementations keyed the same way, for pytest.
+REF_FNS = {
+    "add12": lambda a, b: ref.add12(a, b),
+    "split": lambda a: ref.split(a),
+    "mul12": lambda a, b: ref.mul12(a, b),
+    "add22": lambda ah, al, bh, bl: ref.add22(ah, al, bh, bl),
+    "mul22": lambda ah, al, bh, bl: ref.mul22(ah, al, bh, bl),
+    "div22": lambda ah, al, bh, bl: ref.div22(ah, al, bh, bl),
+    "mad22": lambda ah, al, bh, bl, ch, cl: ref.mad22(ah, al, bh, bl, ch, cl),
+    "add": ref.base_add,
+    "mul": ref.base_mul,
+    "mad": ref.base_mad,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def make_op(name: str, n: int, block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Build the Pallas elementwise operator `name` over length-n f32 streams.
+
+    Returns a callable taking ``n_in`` arrays of shape (n,) float32 and
+    returning a tuple of ``n_out`` arrays of shape (n,) float32.
+    """
+    fn, n_in, n_out = OPS[name]
+    b = _block_elems(n, block)
+    grid = _grid(n, block)
+    spec = pl.BlockSpec((b,), lambda i: (i,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(n_out)]
+
+    call = pl.pallas_call(
+        _body(fn, n_in, n_out),
+        grid=(grid,),
+        in_specs=[spec] * n_in,
+        out_specs=spec if n_out == 1 else [spec] * n_out,
+        out_shape=out_shape[0] if n_out == 1 else out_shape,
+        interpret=interpret,
+    )
+
+    def op(*args):
+        out = call(*args)
+        return (out,) if n_out == 1 else tuple(out)
+
+    op.__name__ = f"{name}_n{n}"
+    return op
+
+
+def op_arity(name: str) -> tuple[int, int]:
+    """(n_inputs, n_outputs) of operator `name` (stream planes)."""
+    _, n_in, n_out = OPS[name]
+    return n_in, n_out

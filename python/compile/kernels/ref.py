@@ -1,0 +1,234 @@
+"""Pure-jnp reference oracle for the float-float kernels.
+
+Every algorithm here is the textbook (Dekker/Knuth/Shewchuk) sequence the
+paper gives in section 4, written in plain ``jax.numpy`` with **no pallas**.
+These are the correctness oracles the Pallas kernels in :mod:`ff` are
+pytest-checked against, and also serve as the "exact" float64 references
+(pass ``dtype=jnp.float64`` with x64 enabled).
+
+Notation follows the paper: ``Add12`` is the error-free transformation of
+the sum (Knuth two-sum, the *branch-free* 6-op variant the paper prefers
+for GPUs), ``Split`` is Dekker's splitting, ``Mul12`` Dekker's exact
+product, ``Add22``/``Mul22`` the float-float add/mul of [5, 17].
+
+All functions are elementwise over arrays and return tuples of arrays.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Splitting constant for binary32: s = 12 (p=24, ceil(p/2)), 2^12 + 1.
+# The paper (Th. 3) allows any p/2 <= s <= p-1; Dekker's choice s=ceil(p/2)
+# maximises the bits of the low part. For float64 the constant is 2^27+1.
+SPLIT_CONST_F32 = 4097.0  # 2**12 + 1
+SPLIT_CONST_F64 = 134217729.0  # 2**27 + 1
+
+
+def _split_const(dtype) -> float:
+    return SPLIT_CONST_F64 if jnp.dtype(dtype) == jnp.float64 else SPLIT_CONST_F32
+
+
+# ---------------------------------------------------------------------------
+# Error-free transformations (paper section 4.1)
+# ---------------------------------------------------------------------------
+
+def add12(a, b):
+    """Knuth two-sum: s = a (+) b and r with s + r == a + b exactly.
+
+    Branch-free 6-flop variant (paper: "one with one test and another one,
+    that should be preferred, with 3 extra floating-point operations").
+    """
+    s = a + b
+    bb = s - a
+    err = (a - (s - bb)) + (b - bb)
+    return s, err
+
+
+def fast_add12(a, b):
+    """Dekker fast-two-sum; requires |a| >= |b| (or a == 0). 3 flops."""
+    s = a + b
+    err = b - (s - a)
+    return s, err
+
+
+def split_dekker(a):
+    """Dekker FP-only splitting, verbatim from the paper's Th. 3.
+
+    WARNING: only safe under *eager* execution. XLA's CPU fusion emitter
+    miscompiles the ``c - (c - a)`` error-extraction pattern when this
+    lands inside a fused computation (verified on jaxlib 0.8.2 and
+    xla_extension 0.5.1) — the modern incarnation of the paper's §5
+    Brook/DirectX hazard. The production kernels use :func:`split`
+    (mask-based) instead, and the runtime disables the ``fusion`` HLO
+    pass; see DESIGN.md. The GPU-conditions validation of Th. 3 itself
+    lives in the rust ``gpusim`` crate where we control the arithmetic.
+    """
+    a = jnp.asarray(a)
+    c = a * a.dtype.type(_split_const(a.dtype))
+    a_big = c - a
+    a_hi = c - a_big
+    a_lo = a - a_hi
+    return a_hi, a_lo
+
+
+def split(a):
+    """Veltkamp 12|12 split via mantissa masking: a == hi + lo exactly.
+
+    Equivalent to Dekker's split for every Mul12 purpose (all four
+    sub-products stay exact); immune to FP rewrites because the high part
+    is produced by integer masking. This is the kernel oracle.
+    """
+    a = jnp.asarray(a)
+    if a.dtype == jnp.float64:
+        bits = jax.lax.bitcast_convert_type(a, jnp.uint64)
+        a_hi = jax.lax.bitcast_convert_type(
+            bits & jnp.uint64(0xFFFFFFFFF8000000), jnp.float64)
+    else:
+        bits = jax.lax.bitcast_convert_type(a, jnp.uint32)
+        a_hi = jax.lax.bitcast_convert_type(
+            bits & jnp.uint32(0xFFFFF000), jnp.float32)
+    a_lo = a - a_hi
+    return a_hi, a_lo
+
+
+def mul12(a, b):
+    """Dekker exact product (paper Th. 4): x + y == a * b exactly."""
+    x = a * b
+    a_hi, a_lo = split(a)
+    b_hi, b_lo = split(b)
+    err1 = x - (a_hi * b_hi)
+    err2 = err1 - (a_lo * b_hi)
+    err3 = err2 - (a_hi * b_lo)
+    y = (a_lo * b_lo) - err3
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Float-float operators (paper Th. 5 / Th. 6)
+# ---------------------------------------------------------------------------
+
+def add22(ah, al, bh, bl):
+    """Float-float addition, branch-free (the GPU variant of the paper).
+
+    (rh + rl) == (ah + al) + (bh + bl) + delta, |delta| bounded per Th. 5.
+    """
+    sh, se = add12(ah, bh)
+    te = (al + bl) + se
+    rh, rl = fast_add12(sh, te)
+    return rh, rl
+
+
+def add22_accurate(ah, al, bh, bl):
+    """Higher-accuracy float-float add (two two-sums).
+
+    The double-double literature's "accurate" variant: EFT on both the high
+    and low planes. Used as a tighter comparator in accuracy sweeps.
+    """
+    sh, se = add12(ah, bh)
+    tl, te = add12(al, bl)
+    se = se + tl
+    sh2, se2 = fast_add12(sh, se)
+    se2 = se2 + te
+    rh, rl = fast_add12(sh2, se2)
+    return rh, rl
+
+
+def mul22(ah, al, bh, bl):
+    """Float-float multiplication (paper Th. 6): rel. error <= 2^-44."""
+    ph, pl = mul12(ah, bh)
+    pl = pl + (ah * bl + al * bh)
+    rh, rl = fast_add12(ph, pl)
+    return rh, rl
+
+
+def div22(ah, al, bh, bl):
+    """Float-float division (paper §7 future work; Dekker-style).
+
+    q1 = ah/bh; refine with one float-float residual step.
+    """
+    q1 = ah / bh
+    th, tl = mul12(q1, bh)
+    # residual r = (ah - th - tl + al - q1*bl) / bh
+    r = (((ah - th) - tl) + al - q1 * bl) / bh
+    rh, rl = fast_add12(q1, r)
+    return rh, rl
+
+
+def mad22(ah, al, bh, bl, ch, cl):
+    """Fused float-float multiply-add: (a*b) + c in float-float."""
+    ph, pl = mul22(ah, al, bh, bl)
+    return add22(ph, pl, ch, cl)
+
+
+# ---------------------------------------------------------------------------
+# Baseline single-precision ops (paper Tables 3/4 comparators)
+# ---------------------------------------------------------------------------
+
+def base_add(a, b):
+    return (a + b,)
+
+
+def base_mul(a, b):
+    return (a * b,)
+
+
+def base_mad(a, b, c):
+    return (a * b + c,)
+
+
+# ---------------------------------------------------------------------------
+# L2 composite references
+# ---------------------------------------------------------------------------
+
+def dot2(ah, al, bh, bl):
+    """Compensated float-float dot product: sum_i a_i * b_i in ff.
+
+    Reference sequential reduction (matches the scan order of the L2 graph).
+    Returns scalar (rh, rl).
+    """
+    init = (jnp.zeros((), ah.dtype), jnp.zeros((), ah.dtype))
+
+    def body(carry, xs):
+        sh, sl = carry
+        xah, xal, xbh, xbl = xs
+        ph, pl = mul22(xah, xal, xbh, xbl)
+        sh, sl = add22(sh, sl, ph, pl)
+        return (sh, sl), None
+
+    (sh, sl), _ = jax.lax.scan(body, init, (ah, al, bh, bl))
+    return sh, sl
+
+
+def horner2(ch, cl, xh, xl):
+    """Horner polynomial evaluation in float-float.
+
+    coeffs c[0..n-1] (highest degree first), scalar x; returns ff value.
+    """
+    init = (jnp.zeros((), xh.dtype), jnp.zeros((), xh.dtype))
+
+    def body(carry, c):
+        rh, rl = carry
+        cih, cil = c
+        th, tl = mul22(rh, rl, xh, xl)
+        rh, rl = add22(th, tl, cih, cil)
+        return (rh, rl), None
+
+    (rh, rl), _ = jax.lax.scan(body, init, (ch, cl))
+    return rh, rl
+
+
+def iterated_map(ah, al, bh, bl, iters: int):
+    """Multipass stream kernel: x <- x*b + a repeated `iters` times in ff.
+
+    Models the paper's "real-time multipass algorithms" (§7): the same
+    fragment program applied repeatedly to the stream.
+    """
+
+    def body(i, carry):
+        xh, xl = carry
+        th, tl = mul22(xh, xl, bh, bl)
+        return add22(th, tl, ah, al)
+
+    return jax.lax.fori_loop(0, iters, body, (ah, al))

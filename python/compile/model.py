@@ -1,0 +1,181 @@
+"""L2: the compute graphs the paper motivates, built on the L1 kernels.
+
+Three families of graphs, all AOT-lowered by :mod:`compile.aot`:
+
+1. **Stream operators** — one graph per (operator x stream size) from the
+   paper's evaluation grid (Tables 3-4): the Pallas kernel applied to the
+   whole stream. This is the paper's workload verbatim.
+
+2. **Multipass** — the same fragment program applied ``iters`` times to the
+   stream (paper §7: "precise sensitive parts of real-time multipass
+   algorithms"). Exercises XLA loop fusion around the Pallas body.
+
+3. **Compensated algorithms** (paper §7 future work) — float-float dot
+   product and Horner polynomial evaluation: elementwise Pallas kernel for
+   the products, jnp-level float-float reduction on top.
+
+Everything is float32 SoA: a float-float stream is a pair of (n,) planes
+(hi, lo). Python here runs at build time only; the rust runtime executes
+the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ff, ref
+
+# The paper's evaluation sizes (Tables 3 and 4).
+PAPER_SIZES = (4096, 16384, 65536, 262144, 1048576)
+
+# Extended artifact grid: power-of-two steps between the paper sizes so
+# the coordinator's pad-to-next-size waste stays below 2x (L3 §Perf).
+EXTENDED_SIZES = (4096, 8192, 16384, 32768, 65536, 131072, 262144, 524288, 1048576)
+
+# Operators in the paper's column order, plus the §7 extensions.
+PAPER_OPS = ("add", "mul", "mad", "add12", "mul12", "add22", "mul22")
+EXT_OPS = ("div22", "mad22", "split")
+ALL_OPS = PAPER_OPS + EXT_OPS
+
+
+# ---------------------------------------------------------------------------
+# 1. Stream operators
+# ---------------------------------------------------------------------------
+
+def stream_op(name: str, n: int, block: int = ff.DEFAULT_BLOCK):
+    """The (op, n) stream graph: n_in planes of shape (n,) -> n_out planes."""
+    op = ff.make_op(name, n, block)
+
+    def graph(*planes):
+        return op(*planes)
+
+    graph.__name__ = f"stream_{name}_n{n}"
+    return graph
+
+
+def stream_op_args(name: str, n: int):
+    """Example ShapeDtypeStructs for lowering `stream_op(name, n)`."""
+    n_in, _ = ff.op_arity(name)
+    return tuple(jax.ShapeDtypeStruct((n,), jnp.float32) for _ in range(n_in))
+
+
+# ---------------------------------------------------------------------------
+# 2. Multipass iterated map
+# ---------------------------------------------------------------------------
+
+def multipass(n: int, iters: int, block: int = ff.DEFAULT_BLOCK):
+    """x <- x (*) b (+) a, `iters` passes, all in float-float on the stream.
+
+    Inputs: ah, al, bh, bl planes of shape (n,). Outputs: xh, xl planes.
+    """
+    mul22 = ff.make_op("mul22", n, block)
+    add22 = ff.make_op("add22", n, block)
+
+    def graph(ah, al, bh, bl):
+        def body(_, carry):
+            xh, xl = carry
+            th, tl = mul22(xh, xl, bh, bl)
+            rh, rl = add22(th, tl, ah, al)
+            return (rh, rl)
+
+        xh, xl = jax.lax.fori_loop(0, iters, body, (ah, al))
+        return xh, xl
+
+    graph.__name__ = f"multipass_n{n}_k{iters}"
+    return graph
+
+
+def multipass_args(n: int):
+    s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return (s, s, s, s)
+
+
+# ---------------------------------------------------------------------------
+# 3. Compensated algorithms (paper §7)
+# ---------------------------------------------------------------------------
+
+def dot2(n: int, block: int = ff.DEFAULT_BLOCK):
+    """Float-float dot product of two ff streams -> scalar ff.
+
+    Products via the Pallas mul22 kernel; reduction via a log-depth
+    float-float pairwise tree (jnp add22), which keeps the reduction error
+    O(log n) in ulps and lowers to a compact HLO graph.
+    """
+    mul22 = ff.make_op("mul22", n, block)
+
+    def graph(ah, al, bh, bl):
+        ph, pl = mul22(ah, al, bh, bl)
+        # pairwise float-float reduction; n is a power of two in our grid
+        while ph.shape[0] > 1:
+            half = ph.shape[0] // 2
+            ph, pl = ref.add22(ph[:half], pl[:half], ph[half:], pl[half:])
+        return ph[0], pl[0]
+
+    graph.__name__ = f"dot2_n{n}"
+    return graph
+
+
+def dot2_args(n: int):
+    s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    return (s, s, s, s)
+
+
+def horner2(degree: int):
+    """Float-float Horner evaluation of a degree-`degree` polynomial.
+
+    Inputs: ch, cl of shape (degree+1,) highest-first, xh, xl scalars ().
+    """
+
+    def graph(ch, cl, xh, xl):
+        return ref.horner2(ch, cl, xh, xl)
+
+    graph.__name__ = f"horner2_d{degree}"
+    return graph
+
+
+def horner2_args(degree: int):
+    c = jax.ShapeDtypeStruct((degree + 1,), jnp.float32)
+    s = jax.ShapeDtypeStruct((), jnp.float32)
+    return (c, c, s, s)
+
+
+# ---------------------------------------------------------------------------
+# Catalogue used by aot.py (name -> (graph fn, example args, meta))
+# ---------------------------------------------------------------------------
+
+def catalogue(sizes=EXTENDED_SIZES, ops=ALL_OPS, *, block: int = ff.DEFAULT_BLOCK,
+              multipass_iters: int = 16, composite_n: int = 65536,
+              horner_degree: int = 31):
+    """Full artifact catalogue: {name: (fn, args, meta)}."""
+    cat = {}
+    for op in ops:
+        n_in, n_out = ff.op_arity(op)
+        for n in sizes:
+            name = f"{op}_n{n}"
+            cat[name] = (
+                stream_op(op, n, block),
+                stream_op_args(op, n),
+                {"kind": "stream", "op": op, "n": n,
+                 "n_in": n_in, "n_out": n_out, "block": min(block, n)},
+            )
+    mp_n = composite_n
+    cat[f"multipass_n{mp_n}_k{multipass_iters}"] = (
+        multipass(mp_n, multipass_iters, block),
+        multipass_args(mp_n),
+        {"kind": "multipass", "op": "multipass", "n": mp_n,
+         "iters": multipass_iters, "n_in": 4, "n_out": 2, "block": min(block, mp_n)},
+    )
+    cat[f"dot2_n{composite_n}"] = (
+        dot2(composite_n, block),
+        dot2_args(composite_n),
+        {"kind": "dot2", "op": "dot2", "n": composite_n,
+         "n_in": 4, "n_out": 2, "block": min(block, composite_n)},
+    )
+    cat[f"horner2_d{horner_degree}"] = (
+        horner2(horner_degree),
+        horner2_args(horner_degree),
+        {"kind": "horner2", "op": "horner2", "degree": horner_degree,
+         "n": horner_degree + 1, "n_in": 4, "n_out": 2, "block": 0},
+    )
+    return cat

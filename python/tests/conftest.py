@@ -1,0 +1,18 @@
+"""Pytest config: XLA flags MUST be set before jax initializes a backend.
+
+``--xla_disable_hlo_passes=fusion`` works around the XLA CPU fusion
+miscompilation of error-free-transformation chains (DESIGN.md §4b "XLA
+FP-rewrite hazard"). The rust runtime sets the same flag programmatically
+in ``runtime::client``; keeping both sides identical means the pytest
+oracle checks validate exactly what the coordinator will execute.
+"""
+
+import os
+import sys
+
+# allow `pytest python/tests/` from the repo root as well as `cd python`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+_FLAG = "--xla_disable_hlo_passes=fusion"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()

@@ -1,0 +1,58 @@
+"""AOT pipeline: lowering produces loadable HLO text + a sound manifest."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def tiny_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    rc = aot.main(["--out", str(out), "--sizes", "256", "--block", "128",
+                   "--ops", "add", "add22", "mul12"])
+    assert rc == 0
+    return out
+
+
+def test_manifest_schema(tiny_artifacts):
+    with open(tiny_artifacts / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text-v1"
+    names = {e["name"] for e in manifest["entries"]}
+    assert {"add_n256", "add22_n256", "mul12_n256"} <= names
+    for e in manifest["entries"]:
+        assert (tiny_artifacts / e["file"]).exists()
+        assert e["hlo_bytes"] > 0
+        assert e["n_in"] >= 1 and e["n_out"] >= 1
+
+
+def test_hlo_text_is_parseable(tiny_artifacts):
+    """HLO text must start with HloModule and contain an ENTRY computation
+    (what HloModuleProto::from_text_file on the rust side requires)."""
+    for f in os.listdir(tiny_artifacts):
+        if not f.endswith(".hlo.txt"):
+            continue
+        text = (tiny_artifacts / f).read_text()
+        assert text.startswith("HloModule"), f
+        assert "ENTRY" in text, f
+
+
+def test_mask_split_in_artifacts(tiny_artifacts):
+    """The fold-proof mask split must be what ships (DESIGN.md §4b)."""
+    text = (tiny_artifacts / "mul12_n256.hlo.txt").read_text()
+    assert "4294963200" in text or "and(" in text, "mask split missing"
+    assert "4097" not in text, "FP-only Dekker split leaked into artifacts"
+
+
+def test_only_filter():
+    cat = model.catalogue(sizes=(256,), ops=("add",))
+    assert "add_n256" in cat
+    # catalogue always appends the composites
+    assert any(k.startswith("dot2_") for k in cat)
+    assert any(k.startswith("multipass_") for k in cat)
+    assert any(k.startswith("horner2_") for k in cat)

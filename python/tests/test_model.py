@@ -1,0 +1,94 @@
+"""L2 composite graphs: multipass, dot2, horner2 vs numpy-f64 references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ff, ref
+
+
+def _ff_pairs(rng, n, scale=4.0):
+    d = rng.normal(size=n) * np.exp(rng.uniform(-scale, scale, size=n))
+    hi = d.astype(np.float32)
+    lo = (d - hi).astype(np.float32)
+    return d, jnp.asarray(hi), jnp.asarray(lo)
+
+
+def test_stream_op_catalogue_arities():
+    cat = model.catalogue(sizes=(256,), ops=("add22", "mul", "split"))
+    for name, (fn, args, meta) in cat.items():
+        assert meta["n_in"] == len(args) or meta["kind"] != "stream"
+        out = jax.jit(fn)(*args_to_zeros(args))
+        out = out if isinstance(out, tuple) else (out,)
+        assert len(out) == meta["n_out"]
+
+
+def args_to_zeros(args):
+    return tuple(jnp.zeros(a.shape, a.dtype) for a in args)
+
+
+def test_dot2_accuracy():
+    """ff dot product ~2^-40 relative vs f64; f32 dot much worse on
+    ill-conditioned data."""
+    rng = np.random.default_rng(3)
+    n = 4096
+    a64, ah, al = _ff_pairs(rng, n, scale=8.0)
+    b64, bh, bl = _ff_pairs(rng, n, scale=8.0)
+    g = model.dot2(n, block=1024)
+    rh, rl = jax.jit(g)(ah, al, bh, bl)
+    got = float(rh) + float(rl)
+    want = float(np.dot(a64, b64))
+    rel = abs(got - want) / abs(want)
+    f32 = float(np.dot(np.asarray(ah), np.asarray(bh)))
+    rel32 = abs(f32 - want) / abs(want)
+    assert rel < 2.0**-38, f"dot2 rel err 2^{np.log2(rel + 1e-300):.1f}"
+    assert rel <= rel32 + 1e-18
+
+
+def test_multipass_matches_reference():
+    """x <- x*b + a iterated: pallas-pipelined graph == scalar f-f model."""
+    rng = np.random.default_rng(5)
+    n, iters = 512, 8
+    _, ah, al = _ff_pairs(rng, n, scale=0.5)
+    # keep |b| < 1 so the iteration stays bounded
+    b64 = rng.uniform(-0.9, 0.9, size=n)
+    bh = b64.astype(np.float32)
+    bl = (b64 - bh).astype(np.float32)
+    g = model.multipass(n, iters, block=256)
+    xh, xl = jax.jit(g)(ah, al, jnp.asarray(bh), jnp.asarray(bl))
+    # reference via jitted ref ops (same arithmetic path)
+    rxh, rxl = ah, al
+    mul = jax.jit(ref.mul22)
+    add = jax.jit(ref.add22)
+    for _ in range(iters):
+        th, tl = mul(rxh, rxl, jnp.asarray(bh), jnp.asarray(bl))
+        rxh, rxl = add(th, tl, ah, al)
+    np.testing.assert_array_equal(np.asarray(xh), np.asarray(rxh))
+    np.testing.assert_array_equal(np.asarray(xl), np.asarray(rxl))
+
+
+def test_horner2_vs_f64():
+    """float-float Horner gets ~f64 accuracy on a wobbly polynomial."""
+    rng = np.random.default_rng(9)
+    deg = 15
+    c64 = rng.normal(size=deg + 1)
+    ch = c64.astype(np.float32)
+    cl = (c64 - ch).astype(np.float32)
+    x64 = 1.337
+    xh = np.float32(x64)
+    xl = np.float32(x64 - float(xh))
+    g = model.horner2(deg)
+    rh, rl = jax.jit(g)(jnp.asarray(ch), jnp.asarray(cl),
+                        jnp.asarray(xh), jnp.asarray(xl))
+    got = float(rh) + float(rl)
+    want = 0.0
+    for c in c64:
+        want = want * x64 + c
+    assert abs(got - want) / abs(want) < 2.0**-40
+
+
+def test_paper_grid_constants():
+    assert model.PAPER_SIZES == (4096, 16384, 65536, 262144, 1048576)
+    assert model.PAPER_OPS == ("add", "mul", "mad", "add12", "mul12",
+                               "add22", "mul22")

@@ -1,0 +1,124 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. branch-free vs branchy Add22 (paper §4: "we should avoid tests
+//!    even at the expense of extra computations") — on a 2026 OoO core
+//!    vs what the paper saw on a Pentium IV;
+//! 2. mask split vs FP-only Dekker split (our §4b workaround vs the
+//!    paper-verbatim sequence) — cost of the workaround;
+//! 3. sloppy (11-flop) vs accurate (20-flop) Add22 — accuracy/cost
+//!    trade the double-double literature debates;
+//! 4. two_prod (17-flop Dekker) vs two_prod_fma (2-flop hardware FMA) —
+//!    what 2006 GPUs were missing.
+
+use ffgpu::ff::{self, FF32};
+use ffgpu::util::{Rng, Timer};
+
+fn planes(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut out = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    for _ in 0..n {
+        let (h, l) = rng.ff_pair(-8, 8);
+        out.0.push(h);
+        out.1.push(l);
+        let (h, l) = rng.ff_pair(-8, 8);
+        out.2.push(h);
+        out.3.push(l);
+    }
+    out
+}
+
+fn main() {
+    let n = 1 << 20;
+    let timer = Timer::new(3, 9);
+    let (ah, al, bh, bl) = planes(n, 0xAB1A);
+    let mut rh = vec![0.0f32; n];
+    let mut rl = vec![0.0f32; n];
+
+    println!("ablations over {n} elements (median of 9)\n");
+
+    // 1. branch-free vs branchy Add22
+    let t_free = timer.median_secs(|| {
+        ff::vector::add22(&ah, &al, &bh, &bl, &mut rh, &mut rl);
+        std::hint::black_box(&rh);
+    });
+    let t_branchy = timer.median_secs(|| {
+        ff::vector::add22_branchy(&ah, &al, &bh, &bl, &mut rh, &mut rl);
+        std::hint::black_box(&rh);
+    });
+    println!("add22 branch-free : {:.3} ms", t_free * 1e3);
+    println!("add22 branchy     : {:.3} ms  ({:+.0}% vs branch-free; paper saw ~2.8x on P4)",
+             t_branchy * 1e3, (t_branchy / t_free - 1.0) * 100.0);
+
+    // 2. mask vs Dekker split
+    let a: Vec<f32> = ah.clone();
+    let t_mask = timer.median_secs(|| {
+        let mut acc = 0.0f32;
+        for &v in &a {
+            let (h, l) = ff::split(v);
+            acc += h + l;
+        }
+        std::hint::black_box(acc);
+    });
+    let t_dekker = timer.median_secs(|| {
+        let mut acc = 0.0f32;
+        for &v in &a {
+            let (h, l) = ff::split_dekker(v);
+            acc += h + l;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("\nsplit mask        : {:.3} ms", t_mask * 1e3);
+    println!("split dekker (FP) : {:.3} ms  ({:+.0}%)",
+             t_dekker * 1e3, (t_dekker / t_mask - 1.0) * 100.0);
+
+    // 3. sloppy vs accurate Add22: cost + accuracy on cancelling data
+    let t_acc = timer.median_secs(|| {
+        for i in 0..n {
+            let r = FF32::from_parts(ah[i], al[i])
+                .add22_accurate(FF32::from_parts(bh[i], bl[i]));
+            rh[i] = r.hi;
+            rl[i] = r.lo;
+        }
+        std::hint::black_box(&rh);
+    });
+    println!("\nadd22 sloppy(11op): {:.3} ms", t_free * 1e3);
+    println!("add22 accurate(20): {:.3} ms  ({:+.0}%)",
+             t_acc * 1e3, (t_acc / t_free - 1.0) * 100.0);
+    // accuracy on adversarial (cancelling) inputs
+    let mut rng = Rng::new(7);
+    let (mut worst_sloppy, mut worst_acc) = (0.0f64, 0.0f64);
+    for _ in 0..200_000 {
+        let (h, l) = rng.ff_pair(-4, 4);
+        let a = FF32::from_parts(h, l);
+        let b = FF32::from_parts(-h, (l as f64 * 0.9) as f32); // near-cancel
+        let want = a.to_f64() + b.to_f64();
+        if want == 0.0 {
+            continue;
+        }
+        worst_sloppy = worst_sloppy.max(((a.add22(b).to_f64() - want) / want).abs());
+        worst_acc = worst_acc.max(((a.add22_accurate(b).to_f64() - want) / want).abs());
+    }
+    println!("  worst rel err under cancellation: sloppy 2^{:.1}, accurate 2^{:.1}",
+             worst_sloppy.log2(), worst_acc.log2());
+
+    // 4. Dekker two_prod vs hardware FMA
+    let t_dek = timer.median_secs(|| {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = ff::two_prod(ah[i], bh[i]);
+            acc += x + y;
+        }
+        std::hint::black_box(acc);
+    });
+    let t_fma = timer.median_secs(|| {
+        let mut acc = 0.0f32;
+        for i in 0..n {
+            let (x, y) = ff::two_prod_fma(ah[i], bh[i]);
+            acc += x + y;
+        }
+        std::hint::black_box(acc);
+    });
+    println!("\ntwo_prod dekker   : {:.3} ms  (the 2006-GPU 17-flop path)", t_dek * 1e3);
+    println!("two_prod fma      : {:.3} ms  ({:.1}x — what shader model 3.0 lacked)",
+             t_fma * 1e3, t_dek / t_fma);
+}

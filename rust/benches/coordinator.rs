@@ -1,0 +1,71 @@
+//! Bench: coordinator throughput/latency — the L3 hot path.
+//!
+//! Not a paper table (the paper has no serving layer); this is the §Perf
+//! instrument for L3: requests/s and per-batch latency across request
+//! sizes and client counts, on both backends.
+
+use ffgpu::coordinator::service::Backend;
+use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::harness::workload;
+use ffgpu::util::Rng;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn bench_backend(name: &str, backend: Backend) {
+    println!("== backend: {name}");
+    for (clients, req_n, rounds) in
+        [(1usize, 4096usize, 200usize), (4, 4096, 100), (8, 1000, 100), (4, 100_000, 20)]
+    {
+        let svc = Service::start(ServiceConfig {
+            backend: backend.clone(),
+            max_batch: 64,
+            precompile: false,
+        })
+        .expect("service");
+        // warmup (compiles artifacts on first touch)
+        let h = svc.handle();
+        let planes = workload::planes_for("add22", req_n, 1);
+        h.call("add22", planes).unwrap();
+
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64);
+                for _ in 0..rounds {
+                    let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                    h.call("add22", planes).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = svc.metrics();
+        let total_req = (clients * rounds) as f64;
+        let total_elems = total_req * req_n as f64;
+        println!(
+            "  {clients} clients x {req_n:>6} elems: {:>8.0} req/s  {:>7.1} Melem/s  \
+             batches={:<5} pad={:>4.1}%  lat mean={:.2}ms",
+            total_req / wall,
+            total_elems / wall / 1e6,
+            m.batches,
+            m.padding_fraction() * 100.0,
+            m.mean_latency_s * 1e3,
+        );
+    }
+}
+
+fn main() {
+    bench_backend("cpu (native kernels)", Backend::Cpu);
+    let artifacts = PathBuf::from(
+        std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if artifacts.join("manifest.json").exists() {
+        bench_backend("xla (PJRT artifacts)", Backend::Xla(artifacts));
+    } else {
+        println!("(skipping xla backend: no artifacts)");
+    }
+}

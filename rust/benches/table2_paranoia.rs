@@ -1,0 +1,19 @@
+//! Bench: paper Table 2 — paranoia error-interval measurement over the
+//! simulated GPU models (plus measurement throughput, since the sweep
+//! itself is a workload).
+
+use ffgpu::harness::paranoia_table;
+use std::time::Instant;
+
+fn main() {
+    let samples = 500_000;
+    let t0 = Instant::now();
+    let table = paranoia_table::measure(samples, 0x7AB2);
+    let secs = t0.elapsed().as_secs_f64();
+    print!("{}", table.render());
+    println!(
+        "\nmeasurement: {} probes x 4 models x 4 ops in {secs:.2}s ({:.1}M op-evals/s)",
+        samples,
+        (samples as f64 * 16.0) / secs / 1e6
+    );
+}

@@ -1,0 +1,68 @@
+//! Bench: paper Table 3 — float-float operators on the "GPU" (XLA/PJRT)
+//! path, normalised to the single-precision Add at 4096 elements.
+//!
+//! `cargo bench --bench table3_gpu` prints the measured grid next to the
+//! paper's, plus the derived shape checks EXPERIMENTS.md tracks
+//! (Add12 ≈ Add; Add22/Mul22 within a small multiple of Add; cost growth
+//! with size far flatter than the CPU path's).
+//!
+//! No criterion in the vendored set: benches are plain `main()`s with
+//! the shared [`ffgpu::util::Timer`] protocol (warmup + median).
+
+use ffgpu::harness::{timing, workload};
+use ffgpu::runtime::Runtime;
+use ffgpu::util::Timer;
+use std::path::PathBuf;
+
+fn main() {
+    let artifacts = PathBuf::from(
+        std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let rt = match Runtime::new(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("table3_gpu: {e} — run `make artifacts` first");
+            return;
+        }
+    };
+    let timer = Timer::new(3, 9);
+    println!("platform: {}", rt.platform());
+    let grid = timing::gpu_grid(&rt, &workload::PAPER_SIZES, &workload::PAPER_OPS,
+                                &timer, 0x7AB3)
+        .expect("gpu grid");
+    print!("{}", grid.render("Table 3 (measured) — XLA/PJRT path, normalised to Add@4096"));
+
+    // raw seconds for the record
+    println!("\nraw median seconds:");
+    for (si, &n) in grid.sizes.iter().enumerate() {
+        let row: Vec<String> = grid.seconds[si].iter().map(|s| format!("{s:.3e}")).collect();
+        println!("  n={n:>8}: {}", row.join("  "));
+    }
+
+    // paper reference + shape checks
+    let (_, paper) = timing::paper_table3();
+    println!("\npaper Table 3 (7800GTX, 2006):");
+    for (s, r) in workload::PAPER_SIZES.iter().zip(&paper) {
+        let cells: String = r.iter().map(|v| format!("{v:>7.2}")).collect();
+        println!("  n={s:>8}: {cells}");
+    }
+
+    let norm = grid.normalised();
+    let col = |op: &str| grid.ops.iter().position(|o| o == op).unwrap();
+    let shape_checks = [
+        ("Add12 ~ Add at 4096 (paper 1.09x)",
+         norm[0][col("add12")] / norm[0][col("add")], 0.5, 4.0),
+        ("Add22 / Add at 4096 (paper 1.55x)",
+         norm[0][col("add22")] / norm[0][col("add")], 0.8, 8.0),
+        ("Mul22 / Add at 4096 (paper 1.54x)",
+         norm[0][col("mul22")] / norm[0][col("add")], 0.8, 8.0),
+        ("Add growth 4096->1M (paper 10.6x)",
+         norm[4][col("add")] / norm[0][col("add")], 2.0, 300.0),
+    ];
+    println!("\nshape checks:");
+    for (name, v, lo, hi) in shape_checks {
+        let ok = v >= lo && v <= hi;
+        println!("  [{}] {name}: {v:.2} (accept {lo}..{hi})",
+                 if ok { "ok" } else { "!!" });
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench: paper Table 4 — float-float operators on the CPU path
+//! (native rust scalar kernels), normalised to Add at 4096.
+//!
+//! Reproduces the paper's CPU protocol including the *branchy* Add22
+//! (their CPU library variant whose test "breaks the execution
+//! pipeline"). Shape checks: Add22-branchy costs the most among the ff
+//! ops; CPU small-to-large growth far exceeds the GPU path's.
+
+use ffgpu::harness::{timing, workload};
+use ffgpu::util::Timer;
+
+fn main() {
+    let timer = Timer::new(3, 9);
+    let grid = timing::cpu_grid(&workload::PAPER_SIZES, &workload::PAPER_OPS,
+                                &timer, 0x7AB4);
+    print!("{}", grid.render("Table 4 (measured) — native CPU path, normalised to Add@4096"));
+
+    println!("\nraw median seconds:");
+    for (si, &n) in grid.sizes.iter().enumerate() {
+        let row: Vec<String> = grid.seconds[si].iter().map(|s| format!("{s:.3e}")).collect();
+        println!("  n={n:>8}: {}", row.join("  "));
+    }
+
+    let (_, paper) = timing::paper_table4();
+    println!("\npaper Table 4 (Pentium IV HT 3.2GHz, 2006):");
+    for (s, r) in workload::PAPER_SIZES.iter().zip(&paper) {
+        let cells: String = r.iter().map(|v| format!("{v:>8.2}")).collect();
+        println!("  n={s:>8}: {cells}");
+    }
+
+    let norm = grid.normalised();
+    let col = |op: &str| grid.ops.iter().position(|o| o == op).unwrap();
+    let ff_cost_1m = norm[4][col("mul22")] / norm[4][col("mul")];
+    let add22_vs_mul22 = norm[4][col("add22")] / norm[4][col("mul22")];
+    let growth = norm[4][col("add")] / norm[0][col("add")];
+    println!("\nshape checks:");
+    println!("  [{}] Mul22/Mul at 1M (paper ~4.1x): {ff_cost_1m:.2} (accept 2..12)",
+             if (2.0..12.0).contains(&ff_cost_1m) { "ok" } else { "!!" });
+    println!("  [{}] branchy Add22 vs Mul22 at 1M (paper 2.8x): {add22_vs_mul22:.2} (accept 0.8..8)",
+             if (0.8..8.0).contains(&add22_vs_mul22) { "ok" } else { "!!" });
+    println!("  [{}] Add growth 4096->1M (paper 270x incl. cache effects): {growth:.1} (accept 100..3000)",
+             if (100.0..3000.0).contains(&growth) { "ok" } else { "!!" });
+}

@@ -1,0 +1,86 @@
+//! Bench: paper Table 5 — measured accuracy sweep (2^24 vectors per op
+//! by default, like the paper; override with FFGPU_SAMPLES).
+//!
+//! Three executors: native CPU kernels, XLA artifacts, and the simulated
+//! NV35 GPU — the last reproduces the paper's measured rows (its -48.0
+//! Add12 anomaly comes from truncated-with-guard addition, not from the
+//! algorithms).
+
+use ffgpu::coordinator::batcher::op_arity;
+use ffgpu::gpusim::{algorithms as sim, GpuModel};
+use ffgpu::harness::accuracy;
+use ffgpu::runtime::Runtime;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let samples: usize = std::env::var("FFGPU_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1 << 24);
+    let ops = ["add12", "mul12", "add22", "mul22"];
+    println!("Table 5 sweep: {samples} samples per op\n");
+
+    let t0 = Instant::now();
+    println!("native CPU kernels (IEEE RN):");
+    for op in ops {
+        let row = accuracy::measure_op(op, samples, 1 << 16, 0x7AB5, |op, planes| {
+            let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+            let (_, n_out) = op_arity(op).unwrap();
+            let mut outs = vec![vec![0.0f32; planes[0].len()]; n_out];
+            ffgpu::ff::vector::dispatch(op, &refs, &mut outs)?;
+            Ok(outs)
+        })
+        .unwrap();
+        println!("  {:<6} {}", row.op, row.display());
+    }
+    println!("  ({:.1}s)", t0.elapsed().as_secs_f64());
+
+    // XLA path at a reduced sample count (PJRT dispatch dominates)
+    let artifacts = PathBuf::from(
+        std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if let Ok(rt) = Runtime::new(&artifacts) {
+        let xs = samples.min(1 << 20);
+        println!("\nXLA artifacts via PJRT ({xs} samples):");
+        for op in ops {
+            let row = accuracy::measure_op(op, xs, 65536, 0x7AB6, |op, planes| {
+                let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+                rt.execute(&format!("{op}_n65536"), &refs)
+            })
+            .unwrap();
+            println!("  {:<6} {}", row.op, row.display());
+        }
+    }
+
+    // simulated NV35 (scalar soft-float: reduced count)
+    let gs = samples.min(1 << 16);
+    println!("\nsimulated NV35 GPU arithmetic ({gs} samples):");
+    let m = GpuModel::NV35;
+    for op in ops {
+        let row = accuracy::measure_op(op, gs, 1 << 12, 0x7AB7, |op, planes| {
+            let n = planes[0].len();
+            let mut outs = vec![vec![0.0f32; n]; 2];
+            for i in 0..n {
+                let q = |p: usize| m.quantize(planes[p][i] as f64);
+                let (h, l) = match op {
+                    "add12" => sim::add12(&m, q(0), q(1)),
+                    "mul12" => sim::mul12(&m, q(0), q(1)),
+                    "add22" => sim::add22(&m, (q(0), q(1)), (q(2), q(3))),
+                    "mul22" => sim::mul22(&m, (q(0), q(1)), (q(2), q(3))),
+                    other => return Err(format!("no sim for {other}")),
+                };
+                outs[0][i] = m.to_f64(h) as f32;
+                outs[1][i] = m.to_f64(l) as f32;
+            }
+            Ok(outs)
+        })
+        .unwrap();
+        println!("  {:<6} {}", row.op, row.display());
+    }
+
+    println!("\npaper Table 5 (2006 hardware):");
+    for (op, v) in accuracy::paper_table5() {
+        println!("  {op:<6} {v}");
+    }
+}

@@ -1,0 +1,241 @@
+//! Dynamic batching onto fixed artifact sizes.
+//!
+//! AOT compilation fixes stream lengths (the paper's grid: 4096 …
+//! 1048576), so arbitrary-size requests must be packed: same-operator
+//! requests are concatenated, the result is padded up to the smallest
+//! compiled size (or split across several launches when it exceeds the
+//! largest), and output planes are sliced back per request.
+//!
+//! Padding values are operator-aware: `div22` pads the divisor with ones
+//! so the padding lanes don't produce NaNs that could trap slow paths.
+
+/// (n_inputs, n_outputs) for every operator the coordinator serves.
+/// Mirrors `python/compile/kernels/ff.py::OPS`.
+pub fn op_arity(op: &str) -> Option<(usize, usize)> {
+    Some(match op {
+        "add12" | "mul12" => (2, 2),
+        "split" => (1, 2),
+        "add22" | "mul22" | "div22" => (4, 2),
+        "mad22" => (6, 2),
+        "add" | "mul" => (2, 1),
+        "mad" => (3, 1),
+        _ => return None,
+    })
+}
+
+/// Neutral pad value for plane `i` of operator `op` (1.0 for divisor
+/// high words, 0.0 elsewhere).
+pub fn pad_value(op: &str, plane: usize) -> f32 {
+    match (op, plane) {
+        ("div22", 2) => 1.0, // bh
+        _ => 0.0,
+    }
+}
+
+/// A launch plan: one compiled-size execution covering a slice of the
+/// concatenated batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Launch {
+    /// Artifact stream size to use.
+    pub size: usize,
+    /// Range of the concatenated batch this launch covers.
+    pub start: usize,
+    pub len: usize,
+}
+
+/// Plan launches for `total` elements over the available compiled
+/// `sizes` (ascending). Greedy: fill with the largest size while the
+/// remainder exceeds it, then one launch of the smallest size that fits
+/// the tail.
+///
+/// Returns `None` when `sizes` is empty.
+pub fn plan(total: usize, sizes: &[usize]) -> Option<Vec<Launch>> {
+    if sizes.is_empty() || total == 0 {
+        return None;
+    }
+    let largest = *sizes.last().unwrap();
+    let mut launches = Vec::new();
+    let mut start = 0usize;
+    let mut remaining = total;
+    while remaining > largest {
+        launches.push(Launch { size: largest, start, len: largest });
+        start += largest;
+        remaining -= largest;
+    }
+    let tail_size = *sizes.iter().find(|&&s| s >= remaining).unwrap_or(&largest);
+    launches.push(Launch { size: tail_size, start, len: remaining });
+    Some(launches)
+}
+
+/// Padding waste fraction of a plan (extra lanes / useful lanes).
+pub fn waste(plan: &[Launch]) -> f64 {
+    let useful: usize = plan.iter().map(|l| l.len).sum();
+    let launched: usize = plan.iter().map(|l| l.size).sum();
+    if useful == 0 {
+        return 0.0;
+    }
+    (launched - useful) as f64 / useful as f64
+}
+
+/// Concatenate the `plane`-th input of every request, padded to `size`.
+pub fn gather_plane(
+    requests: &[&crate::coordinator::OpRequest], plane: usize, size: usize,
+    start: usize, len: usize, op: &str,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(size);
+    // walk the concatenated space [start, start+len)
+    let mut skipped = 0usize;
+    for r in requests {
+        let rl = r.len();
+        if skipped + rl <= start {
+            skipped += rl;
+            continue;
+        }
+        let from = start.saturating_sub(skipped);
+        let need = (start + len).saturating_sub(skipped.max(start));
+        let take = need.min(rl - from);
+        out.extend_from_slice(&r.inputs[plane][from..from + take]);
+        skipped += rl;
+        if out.len() >= len {
+            break;
+        }
+    }
+    debug_assert_eq!(out.len(), len);
+    out.resize(size, pad_value(op, plane));
+    out
+}
+
+/// Scatter one launch's output planes back into per-request buffers.
+///
+/// `acc[r]` holds `n_out` planes per request, pre-sized.
+pub fn scatter_outputs(
+    requests: &[&crate::coordinator::OpRequest], outputs: &[Vec<f32>],
+    start: usize, len: usize, acc: &mut [Vec<Vec<f32>>],
+) {
+    let mut pos = 0usize; // position within this launch's useful region
+    let mut skipped = 0usize;
+    for (ri, r) in requests.iter().enumerate() {
+        let rl = r.len();
+        if skipped + rl <= start {
+            skipped += rl;
+            continue;
+        }
+        if pos >= len {
+            break;
+        }
+        let from = start.saturating_sub(skipped); // offset within request
+        let take = (rl - from).min(len - pos);
+        for (oi, out_plane) in outputs.iter().enumerate() {
+            acc[ri][oi][from..from + take]
+                .copy_from_slice(&out_plane[pos..pos + take]);
+        }
+        pos += take;
+        skipped += rl;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::OpRequest;
+    use std::sync::mpsc;
+
+    #[test]
+    fn plan_fits_smallest() {
+        let sizes = [4096, 16384, 65536];
+        let p = plan(1000, &sizes).unwrap();
+        assert_eq!(p, vec![Launch { size: 4096, start: 0, len: 1000 }]);
+        assert!(waste(&p) > 3.0);
+    }
+
+    #[test]
+    fn plan_exact_fit_has_no_waste() {
+        let p = plan(16384, &[4096, 16384]).unwrap();
+        assert_eq!(p, vec![Launch { size: 16384, start: 0, len: 16384 }]);
+        assert_eq!(waste(&p), 0.0);
+    }
+
+    #[test]
+    fn plan_splits_oversize() {
+        let sizes = [4096, 16384];
+        let p = plan(40000, &sizes).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[0], Launch { size: 16384, start: 0, len: 16384 });
+        assert_eq!(p[1], Launch { size: 16384, start: 16384, len: 16384 });
+        assert_eq!(p[2].start, 32768);
+        assert_eq!(p[2].len, 40000 - 32768);
+        assert_eq!(p[2].size, 16384); // 7232 > 4096, so next size up
+    }
+
+    #[test]
+    fn plan_empty_inputs() {
+        assert!(plan(0, &[4096]).is_none());
+        assert!(plan(100, &[]).is_none());
+    }
+
+    fn mk_req(op: &str, vals: &[f32]) -> (OpRequest, mpsc::Receiver<super::super::request::OpResult>) {
+        let (tx, rx) = mpsc::channel();
+        let (n_in, _) = op_arity(op).unwrap();
+        let planes: Vec<Vec<f32>> = (0..n_in)
+            .map(|p| vals.iter().map(|&v| v + p as f32 * 100.0).collect())
+            .collect();
+        (OpRequest { op: op.into(), inputs: planes, reply: tx }, rx)
+    }
+
+    #[test]
+    fn gather_concatenates_and_pads() {
+        let (r1, _g1) = mk_req("add", &[1.0, 2.0]);
+        let (r2, _g2) = mk_req("add", &[3.0, 4.0, 5.0]);
+        let reqs = [&r1, &r2];
+        let plane = gather_plane(&reqs, 0, 8, 0, 5, "add");
+        assert_eq!(plane, vec![1.0, 2.0, 3.0, 4.0, 5.0, 0.0, 0.0, 0.0]);
+        let plane1 = gather_plane(&reqs, 1, 8, 0, 5, "add");
+        assert_eq!(&plane1[..5], &[101.0, 102.0, 103.0, 104.0, 105.0]);
+    }
+
+    #[test]
+    fn gather_windows_across_requests() {
+        let (r1, _g1) = mk_req("add", &[1.0, 2.0, 3.0]);
+        let (r2, _g2) = mk_req("add", &[4.0, 5.0]);
+        let reqs = [&r1, &r2];
+        // window [2, 5): last of r1 + all of r2
+        let plane = gather_plane(&reqs, 0, 4, 2, 3, "add");
+        assert_eq!(plane, vec![3.0, 4.0, 5.0, 0.0]);
+    }
+
+    #[test]
+    fn div22_pads_divisor_with_ones() {
+        let (r, _g) = mk_req("div22", &[1.0]);
+        let reqs = [&r];
+        let bh = gather_plane(&reqs, 2, 4, 0, 1, "div22");
+        assert_eq!(bh, vec![201.0, 1.0, 1.0, 1.0]);
+        let bl = gather_plane(&reqs, 3, 4, 0, 1, "div22");
+        assert_eq!(bl, vec![301.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scatter_roundtrips_gather() {
+        let (r1, _g1) = mk_req("add", &[1.0, 2.0, 3.0]);
+        let (r2, _g2) = mk_req("add", &[4.0, 5.0]);
+        let reqs = [&r1, &r2];
+        let mut acc = vec![vec![vec![0.0f32; 3]; 1], vec![vec![0.0f32; 2]; 1]];
+        // one launch covering everything; output = input0 * 10
+        let launch_out = vec![vec![10.0, 20.0, 30.0, 40.0, 50.0, 0.0]];
+        scatter_outputs(&reqs, &launch_out, 0, 5, &mut acc);
+        assert_eq!(acc[0][0], vec![10.0, 20.0, 30.0]);
+        assert_eq!(acc[1][0], vec![40.0, 50.0]);
+    }
+
+    #[test]
+    fn scatter_with_split_launches() {
+        let (r1, _g1) = mk_req("add", &[1.0, 2.0, 3.0]);
+        let (r2, _g2) = mk_req("add", &[4.0, 5.0]);
+        let reqs = [&r1, &r2];
+        let mut acc = vec![vec![vec![0.0f32; 3]; 1], vec![vec![0.0f32; 2]; 1]];
+        // launch 1 covers [0,2), launch 2 covers [2,5)
+        scatter_outputs(&reqs, &[vec![10.0, 20.0]], 0, 2, &mut acc);
+        scatter_outputs(&reqs, &[vec![30.0, 40.0, 50.0]], 2, 3, &mut acc);
+        assert_eq!(acc[0][0], vec![10.0, 20.0, 30.0]);
+        assert_eq!(acc[1][0], vec![40.0, 50.0]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Coordinator observability: counters + latency summary.
+
+use crate::util::Summary;
+use std::sync::Mutex;
+
+/// Shared metrics, updated by the device thread, read by anyone.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    batches: u64,
+    launches: u64,
+    elements: u64,
+    padded_elements: u64,
+    errors: u64,
+    latency: Summary,
+}
+
+/// A point-in-time snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub launches: u64,
+    pub elements: u64,
+    pub padded_elements: u64,
+    pub errors: u64,
+    pub mean_latency_s: f64,
+    pub max_latency_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, requests: usize, launches: usize, useful: u64, padded: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += requests as u64;
+        g.batches += 1;
+        g.launches += launches as u64;
+        g.elements += useful;
+        g.padded_elements += padded;
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        self.inner.lock().unwrap().latency.add(seconds);
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        Snapshot {
+            requests: g.requests,
+            batches: g.batches,
+            launches: g.launches,
+            elements: g.elements,
+            padded_elements: g.padded_elements,
+            errors: g.errors,
+            mean_latency_s: if g.latency.count > 0 { g.latency.mean() } else { 0.0 },
+            max_latency_s: if g.latency.count > 0 { g.latency.max } else { 0.0 },
+        }
+    }
+}
+
+impl Snapshot {
+    /// Fraction of launched lanes that were padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let total = self.elements + self.padded_elements;
+        if total == 0 {
+            return 0.0;
+        }
+        self.padded_elements as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_accumulates() {
+        let m = Metrics::new();
+        m.record_batch(3, 1, 1000, 24);
+        m.record_batch(1, 2, 5000, 0);
+        m.record_latency(0.5);
+        m.record_latency(1.5);
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.launches, 3);
+        assert_eq!(s.elements, 6000);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.mean_latency_s, 1.0);
+        assert_eq!(s.max_latency_s, 1.5);
+        assert!(s.padding_fraction() > 0.0 && s.padding_fraction() < 0.01);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.mean_latency_s, 0.0);
+        assert_eq!(s.padding_fraction(), 0.0);
+    }
+}

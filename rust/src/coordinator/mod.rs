@@ -1,0 +1,31 @@
+//! L3 coordinator — the stream dispatcher in front of the PJRT engine.
+//!
+//! The paper's numbers (Table 3) come from Brook dispatching fragment
+//! programs over streams; this module is that runtime's moral
+//! equivalent, built the way a 2026 serving stack would:
+//!
+//! * clients submit [`request::OpRequest`]s (an operator name + SoA
+//!   input planes of any length);
+//! * the [`batcher`] coalesces same-operator requests and maps them onto
+//!   the *fixed* artifact sizes the AOT pipeline compiled (pad to the
+//!   next size up, split across launches when larger) — GPU kernels had
+//!   fixed-size streams for the same reason;
+//! * a dedicated **device thread** owns the (non-`Sync`) PJRT
+//!   [`crate::runtime::Runtime`] and drains the queue — the exact
+//!   analogue of a GPU command queue;
+//! * [`metrics`] tracks throughput, latency, batch shapes and padding
+//!   waste.
+//!
+//! The paper's contribution lives at L1/L2 (the numeric format), so this
+//! layer is deliberately thin but real: enough to serve the benchmarks,
+//! the examples and the end-to-end driver. A pure-CPU fallback path
+//! (`ff::vector::dispatch`) keeps the coordinator usable without
+//! artifacts (and provides the Table 4 "CPU path" through the same API).
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use request::OpRequest;
+pub use service::{Service, ServiceConfig};

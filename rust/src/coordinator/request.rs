@@ -1,0 +1,79 @@
+//! Request/response types of the coordinator.
+
+use std::sync::mpsc;
+
+/// Result planes (one `Vec<f32>` per output plane).
+pub type OpResult = Result<Vec<Vec<f32>>, String>;
+
+/// A stream-operator request: `op` applied elementwise to `inputs`
+/// (arity must match the operator; every plane the same length).
+#[derive(Debug)]
+pub struct OpRequest {
+    pub op: String,
+    pub inputs: Vec<Vec<f32>>,
+    /// One-shot reply channel.
+    pub reply: mpsc::Sender<OpResult>,
+}
+
+impl OpRequest {
+    /// Elements per plane.
+    pub fn len(&self) -> usize {
+        self.inputs.first().map_or(0, Vec::len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Validate arity/shape against the op table.
+    pub fn validate(&self) -> Result<(), String> {
+        let (n_in, _) = super::batcher::op_arity(&self.op)
+            .ok_or_else(|| format!("unknown op '{}'", self.op))?;
+        if self.inputs.len() != n_in {
+            return Err(format!(
+                "op '{}' wants {n_in} input planes, got {}", self.op, self.inputs.len()
+            ));
+        }
+        let n = self.len();
+        if self.inputs.iter().any(|p| p.len() != n) {
+            return Err("input planes have differing lengths".into());
+        }
+        if n == 0 {
+            return Err("empty request".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(op: &str, planes: usize, n: usize) -> (OpRequest, mpsc::Receiver<OpResult>) {
+        let (tx, rx) = mpsc::channel();
+        (OpRequest { op: op.into(), inputs: vec![vec![1.0; n]; planes], reply: tx }, rx)
+    }
+
+    #[test]
+    fn validates_arity() {
+        let (r, _rx) = req("add22", 4, 16);
+        assert!(r.validate().is_ok());
+        let (r, _rx) = req("add22", 3, 16);
+        assert!(r.validate().is_err());
+        let (r, _rx) = req("blorp", 2, 16);
+        assert!(r.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_ragged_and_empty() {
+        let (tx, _rx) = mpsc::channel();
+        let r = OpRequest {
+            op: "add".into(),
+            inputs: vec![vec![1.0; 4], vec![1.0; 5]],
+            reply: tx,
+        };
+        assert!(r.validate().is_err());
+        let (r, _rx) = req("add", 2, 0);
+        assert!(r.validate().is_err());
+    }
+}

@@ -1,0 +1,372 @@
+//! The coordinator service: a device thread draining a batched queue.
+//!
+//! PJRT wrapper types are not `Sync`, so the [`crate::runtime::Runtime`]
+//! lives on one dedicated thread (the "device thread" — the analogue of
+//! a GPU command queue). Clients hold a cheap cloneable [`Handle`] and
+//! submit [`OpRequest`]s; the device thread coalesces whatever is
+//! pending (up to `max_batch` requests per operator), plans launches
+//! over the compiled sizes, executes, and scatters replies.
+//!
+//! `Backend::Cpu` serves the same API from the native `ff::vector`
+//! kernels — the paper's Table 4 path, and a mock for artifact-free
+//! tests.
+
+use super::batcher::{self, op_arity};
+use super::metrics::Metrics;
+use super::request::{OpRequest, OpResult};
+use crate::ff::vector;
+use crate::runtime::Runtime;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Which engine executes batches.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// PJRT XLA artifacts from this directory (the "GPU path").
+    Xla(PathBuf),
+    /// Native rust kernels (the "CPU path" / mock).
+    Cpu,
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub backend: Backend,
+    /// Max requests coalesced into one batch per operator.
+    pub max_batch: usize,
+    /// Precompile all stream artifacts at startup (vs on first use).
+    pub precompile: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { backend: Backend::Cpu, max_batch: 64, precompile: false }
+    }
+}
+
+enum Msg {
+    Submit(OpRequest),
+    Shutdown,
+}
+
+/// Running coordinator; dropping it shuts the device thread down.
+pub struct Service {
+    tx: mpsc::Sender<Msg>,
+    metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Cheap cloneable submission handle.
+#[derive(Clone)]
+pub struct Handle {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Handle {
+    /// Submit and return the reply receiver (async pattern).
+    pub fn submit(&self, op: &str, inputs: Vec<Vec<f32>>) -> Result<mpsc::Receiver<OpResult>, String> {
+        let (reply, rx) = mpsc::channel();
+        let req = OpRequest { op: op.into(), inputs, reply };
+        req.validate()?;
+        self.tx.send(Msg::Submit(req)).map_err(|_| "service stopped".to_string())?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn call(&self, op: &str, inputs: Vec<Vec<f32>>) -> OpResult {
+        let rx = self.submit(op, inputs)?;
+        rx.recv().map_err(|_| "service dropped reply".to_string())?
+    }
+}
+
+impl Service {
+    /// Start the device thread.
+    pub fn start(config: ServiceConfig) -> Result<Service, String> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Metrics::new());
+        let running = Arc::new(AtomicBool::new(true));
+        let m2 = metrics.clone();
+        let r2 = running.clone();
+        // engine construction happens *on* the device thread (Runtime is
+        // not Send); report startup errors through a channel
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let cfg = config.clone();
+        let join = std::thread::Builder::new()
+            .name("ffgpu-device".into())
+            .spawn(move || device_thread(cfg, rx, ready_tx, m2, r2))
+            .map_err(|e| e.to_string())?;
+        ready_rx
+            .recv()
+            .map_err(|_| "device thread died during startup".to_string())??;
+        Ok(Service { tx, metrics, running, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> Handle {
+        Handle { tx: self.tx.clone() }
+    }
+
+    pub fn metrics(&self) -> super::metrics::Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn device_thread(
+    config: ServiceConfig, rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<(), String>>, metrics: Arc<Metrics>,
+    running: Arc<AtomicBool>,
+) {
+    // build the engine on this thread
+    let runtime = match &config.backend {
+        Backend::Xla(dir) => match Runtime::new(dir) {
+            Ok(rt) => {
+                if config.precompile {
+                    let names: Vec<String> = rt
+                        .manifest()
+                        .entries
+                        .iter()
+                        .filter(|e| e.kind == "stream")
+                        .map(|e| e.name.clone())
+                        .collect();
+                    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                    if let Err(e) = rt.precompile(&refs) {
+                        let _ = ready.send(Err(e));
+                        running.store(false, Ordering::Relaxed);
+                        return;
+                    }
+                }
+                Some(rt)
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                running.store(false, Ordering::Relaxed);
+                return;
+            }
+        },
+        Backend::Cpu => None,
+    };
+    let _ = ready.send(Ok(()));
+
+    loop {
+        // block for the first message, then greedily drain the queue
+        let first = match rx.recv() {
+            Ok(Msg::Submit(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => break,
+        };
+        let t0 = Instant::now();
+        let mut pending: Vec<OpRequest> = vec![first];
+        let mut shutdown = false;
+        while pending.len() < config.max_batch {
+            match rx.try_recv() {
+                Ok(Msg::Submit(r)) => pending.push(r),
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+
+        // group by operator, preserving order
+        let mut groups: HashMap<String, Vec<OpRequest>> = HashMap::new();
+        for r in pending {
+            groups.entry(r.op.clone()).or_default().push(r);
+        }
+        for (op, reqs) in groups {
+            serve_group(&config, runtime.as_ref(), &metrics, &op, reqs);
+        }
+        metrics.record_latency(t0.elapsed().as_secs_f64());
+        if shutdown {
+            break;
+        }
+    }
+    running.store(false, Ordering::Relaxed);
+}
+
+/// Execute one operator group as a single concatenated batch.
+fn serve_group(
+    config: &ServiceConfig, runtime: Option<&Runtime>, metrics: &Metrics,
+    op: &str, reqs: Vec<OpRequest>,
+) {
+    let Some((n_in, n_out)) = op_arity(op) else {
+        for r in reqs {
+            let _ = r.reply.send(Err(format!("unknown op '{op}'")));
+        }
+        metrics.record_error();
+        return;
+    };
+    let refs: Vec<&OpRequest> = reqs.iter().collect();
+    let total: usize = refs.iter().map(|r| r.len()).sum();
+
+    // per-request output accumulators
+    let mut acc: Vec<Vec<Vec<f32>>> =
+        refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
+
+    let result: Result<u64, String> = match (&config.backend, runtime) {
+        (Backend::Cpu, _) | (_, None) => {
+            // native path: one "launch", no padding
+            let inputs: Vec<Vec<f32>> = (0..n_in)
+                .map(|p| batcher::gather_plane(&refs, p, total, 0, total, op))
+                .collect();
+            let input_refs: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
+            let mut outs = vec![vec![0.0f32; total]; n_out];
+            match vector::dispatch(op, &input_refs, &mut outs) {
+                Ok(()) => {
+                    batcher::scatter_outputs(&refs, &outs, 0, total, &mut acc);
+                    metrics.record_batch(refs.len(), 1, total as u64, 0);
+                    Ok(0)
+                }
+                Err(e) => Err(e),
+            }
+        }
+        (Backend::Xla(_), Some(rt)) => {
+            let sizes: Vec<usize> = rt.manifest().by_op(op).iter().map(|e| e.n).collect();
+            match batcher::plan(total, &sizes) {
+                None => Err(format!("no compiled artifacts for op '{op}'")),
+                Some(launches) => {
+                    let mut padded = 0u64;
+                    let mut err = None;
+                    for l in &launches {
+                        let name = format!("{op}_n{}", l.size);
+                        let inputs: Vec<Vec<f32>> = (0..n_in)
+                            .map(|p| {
+                                batcher::gather_plane(&refs, p, l.size, l.start, l.len, op)
+                            })
+                            .collect();
+                        let input_refs: Vec<&[f32]> =
+                            inputs.iter().map(Vec::as_slice).collect();
+                        match rt.execute(&name, &input_refs) {
+                            Ok(outs) => {
+                                batcher::scatter_outputs(&refs, &outs, l.start, l.len, &mut acc);
+                                padded += (l.size - l.len) as u64;
+                            }
+                            Err(e) => {
+                                err = Some(e);
+                                break;
+                            }
+                        }
+                    }
+                    match err {
+                        None => {
+                            metrics.record_batch(
+                                refs.len(), launches.len(), total as u64, padded,
+                            );
+                            Ok(padded)
+                        }
+                        Some(e) => Err(e),
+                    }
+                }
+            }
+        }
+    };
+
+    match result {
+        Ok(_) => {
+            for (r, planes) in reqs.iter().zip(acc) {
+                let _ = r.reply.send(Ok(planes));
+            }
+        }
+        Err(e) => {
+            metrics.record_error();
+            for r in &reqs {
+                let _ = r.reply.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ff::FF32;
+    use crate::util::Rng;
+
+    fn cpu_service() -> Service {
+        Service::start(ServiceConfig { backend: Backend::Cpu, ..Default::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn cpu_backend_serves_add22() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        let mut rng = Rng::new(131);
+        let n = 1000;
+        let mut planes = vec![Vec::with_capacity(n); 4];
+        for _ in 0..n {
+            let (ah, al) = rng.ff_pair(-8, 8);
+            let (bh, bl) = rng.ff_pair(-8, 8);
+            planes[0].push(ah);
+            planes[1].push(al);
+            planes[2].push(bh);
+            planes[3].push(bl);
+        }
+        let out = h.call("add22", planes.clone()).unwrap();
+        assert_eq!(out.len(), 2);
+        for i in 0..n {
+            let want = FF32::from_parts(planes[0][i], planes[1][i])
+                + FF32::from_parts(planes[2][i], planes[3][i]);
+            assert_eq!((out[0][i], out[1][i]), (want.hi, want.lo), "i={i}");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.elements, n as u64);
+    }
+
+    #[test]
+    fn rejects_bad_requests_at_submit() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        assert!(h.call("frobnicate", vec![vec![1.0]]).is_err());
+        assert!(h.call("add22", vec![vec![1.0]; 3]).is_err());
+    }
+
+    #[test]
+    fn concurrent_clients_get_their_own_answers() {
+        let svc = cpu_service();
+        let mut joins = Vec::new();
+        for t in 0..8 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let n = 100 + t * 13;
+                let a: Vec<f32> = (0..n).map(|i| (t * 1000 + i) as f32).collect();
+                let b = vec![1.0f32; n];
+                let out = h.call("add", vec![a.clone(), b]).unwrap();
+                for i in 0..n {
+                    assert_eq!(out[0][i], a[i] + 1.0);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 8);
+    }
+
+    #[test]
+    fn shutdown_on_drop() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        drop(svc);
+        // handle now fails cleanly
+        assert!(h.call("add", vec![vec![1.0], vec![2.0]]).is_err());
+    }
+}

@@ -1,0 +1,272 @@
+//! Compensated algorithms (paper §7: "Using float-float representation
+//! number in compensated algorithms has been shown to be more efficient
+//! in term of performance for comparable accuracy").
+//!
+//! Three classics built on the EFTs, each in two precisions:
+//! * `sum2` — Ogita–Rump–Oishi compensated summation (Sum2);
+//! * `dot2` — compensated dot product (Dot2);
+//! * `horner2` — compensated Horner polynomial evaluation;
+//! plus float-float (FF32) reductions for apples-to-apples comparison
+//! with the format itself.
+
+use super::eft::{two_prod, two_sum};
+use super::ff32::FF32;
+
+/// Plain f32 summation (baseline).
+pub fn sum_f32(x: &[f32]) -> f32 {
+    x.iter().copied().sum()
+}
+
+/// Compensated summation (Sum2): f32 arithmetic, ~twice-working-precision
+/// result returned as (sum, error_estimate_folded_in).
+pub fn sum2(x: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for &v in x {
+        let (t, e) = two_sum(s, v);
+        s = t;
+        c += e;
+    }
+    s + c
+}
+
+/// Float-float summation: accumulate in FF32.
+pub fn sum_ff(x: &[f32]) -> FF32 {
+    let mut acc = FF32::ZERO;
+    for &v in x {
+        acc = acc + FF32::from_f32(v);
+    }
+    acc
+}
+
+/// Plain f32 dot product (baseline).
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Compensated dot product (Dot2): EFT on every product and every
+/// accumulation; result accurate as if computed in ~2x precision.
+pub fn dot2(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    let mut c = 0.0f32;
+    for i in 0..a.len() {
+        let (p, pe) = two_prod(a[i], b[i]);
+        let (t, se) = two_sum(s, p);
+        s = t;
+        c += pe + se;
+    }
+    s + c
+}
+
+/// Float-float dot product: Mul22 + Add22 all the way (what the dot2
+/// L2 graph computes, sequential order).
+pub fn dot_ff(a: &[f32], b: &[f32]) -> FF32 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = FF32::ZERO;
+    for i in 0..a.len() {
+        let p = FF32::from_f32(a[i]) * FF32::from_f32(b[i]);
+        acc = acc + p;
+    }
+    acc
+}
+
+/// Float-float dot product over ff inputs (SoA planes), pairwise
+/// reduction — bit-matches the `dot2_n*` XLA artifact.
+pub fn dot_ff_pairwise(ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32]) -> FF32 {
+    let n = ah.len();
+    assert!(al.len() == n && bh.len() == n && bl.len() == n);
+    assert!(n.is_power_of_two(), "pairwise reduction wants a power of two");
+    let mut h = vec![0.0f32; n];
+    let mut l = vec![0.0f32; n];
+    super::vector::mul22(ah, al, bh, bl, &mut h, &mut l);
+    let mut m = n;
+    while m > 1 {
+        m /= 2;
+        for i in 0..m {
+            let a = FF32::from_parts(h[i], l[i]);
+            let b = FF32::from_parts(h[i + m], l[i + m]);
+            let r = a + b;
+            h[i] = r.hi;
+            l[i] = r.lo;
+        }
+    }
+    FF32::from_parts(h[0], l[0])
+}
+
+/// Plain f32 Horner (baseline). Coefficients highest-degree first.
+pub fn horner_f32(coeffs: &[f32], x: f32) -> f32 {
+    let mut r = 0.0f32;
+    for &c in coeffs {
+        r = r * x + c;
+    }
+    r
+}
+
+/// Compensated Horner: EFT on the multiply and the add per step,
+/// correction polynomial accumulated in f32.
+pub fn horner2(coeffs: &[f32], x: f32) -> f32 {
+    let mut r = 0.0f32;
+    let mut c = 0.0f32;
+    for &co in coeffs {
+        let (p, pe) = two_prod(r, x);
+        let (s, se) = two_sum(p, co);
+        r = s;
+        c = c * x + (pe + se);
+    }
+    r + c
+}
+
+/// Float-float Horner — bit-matches the `horner2_d*` XLA artifact
+/// (coefficients as ff pairs, x as ff).
+pub fn horner_ff(ch: &[f32], cl: &[f32], x: FF32) -> FF32 {
+    assert_eq!(ch.len(), cl.len());
+    let mut r = FF32::ZERO;
+    for i in 0..ch.len() {
+        r = r * x + FF32::from_parts(ch[i], cl[i]);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// f64 reference sum of f32s (exact enough for these sizes).
+    fn sum_f64(x: &[f32]) -> f64 {
+        x.iter().map(|&v| v as f64).sum()
+    }
+
+    fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+        a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    }
+
+    /// Ill-conditioned summation data: large cancellations.
+    fn nasty_sum_data(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let mut v = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            let x = rng.spread_f32(0, 12);
+            v.push(x);
+            v.push(-x * (1.0 - 1e-3 * rng.f64() as f32));
+        }
+        v
+    }
+
+    #[test]
+    fn sum2_beats_naive_sum() {
+        let mut rng = Rng::new(51);
+        let data = nasty_sum_data(&mut rng, 5000);
+        let want = sum_f64(&data);
+        let e_naive = (sum_f32(&data) as f64 - want).abs();
+        let e_comp = (sum2(&data) as f64 - want).abs();
+        assert!(e_comp <= e_naive, "comp {e_comp:e} vs naive {e_naive:e}");
+        // compensated should be orders of magnitude better here
+        assert!(e_comp < e_naive / 16.0 + 1e-6, "comp {e_comp:e} naive {e_naive:e}");
+    }
+
+    #[test]
+    fn sum_ff_close_to_f64() {
+        let mut rng = Rng::new(52);
+        let data = nasty_sum_data(&mut rng, 5000);
+        let want = sum_f64(&data);
+        let got = sum_ff(&data).to_f64();
+        let scale: f64 = data.iter().map(|&v| (v as f64).abs()).sum();
+        assert!((got - want).abs() <= scale * 2f64.powi(-40));
+    }
+
+    #[test]
+    fn dot2_beats_naive_dot() {
+        let mut rng = Rng::new(53);
+        let n = 4096;
+        // correlated vectors -> cancellation in the dot product
+        let a: Vec<f32> = (0..n).map(|_| rng.spread_f32(0, 10)).collect();
+        let b: Vec<f32> = a.iter().map(|&x| {
+            let noise = 1.0 + 1e-3 * rng.normal() as f32;
+            if rng.next_u64() & 1 == 0 { noise / x } else { -noise / x }
+        }).collect();
+        let want = dot_f64(&a, &b);
+        let e_naive = (dot_f32(&a, &b) as f64 - want).abs();
+        let e_comp = (dot2(&a, &b) as f64 - want).abs();
+        assert!(e_comp <= e_naive.max(1e-5));
+    }
+
+    #[test]
+    fn dot_ff_matches_dot2_class() {
+        let mut rng = Rng::new(54);
+        let n = 2048;
+        let a: Vec<f32> = (0..n).map(|_| rng.spread_f32(-4, 4)).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.spread_f32(-4, 4)).collect();
+        let want = dot_f64(&a, &b);
+        let got = dot_ff(&a, &b).to_f64();
+        let scale: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+        assert!((got - want).abs() <= scale * 2f64.powi(-42));
+    }
+
+    #[test]
+    fn pairwise_dot_matches_sequential_class() {
+        let mut rng = Rng::new(55);
+        let n = 1024;
+        let mut ah = vec![0.0; n];
+        let mut al = vec![0.0; n];
+        let mut bh = vec![0.0; n];
+        let mut bl = vec![0.0; n];
+        for i in 0..n {
+            let (h, l) = rng.ff_pair(-4, 4);
+            ah[i] = h;
+            al[i] = l;
+            let (h, l) = rng.ff_pair(-4, 4);
+            bh[i] = h;
+            bl[i] = l;
+        }
+        let want: f64 = (0..n)
+            .map(|i| (ah[i] as f64 + al[i] as f64) * (bh[i] as f64 + bl[i] as f64))
+            .sum();
+        let got = dot_ff_pairwise(&ah, &al, &bh, &bl).to_f64();
+        assert!((got - want).abs() <= want.abs().max(1.0) * 2f64.powi(-40));
+    }
+
+    #[test]
+    fn horner2_beats_naive_near_root() {
+        // (x-1)^5 expanded: catastrophic cancellation near x=1
+        let coeffs = [1.0f32, -5.0, 10.0, -10.0, 5.0, -1.0];
+        let x = 1.0009765625f32; // 1 + 2^-10
+        let want = ((x as f64) - 1.0).powi(5);
+        let e_naive = (horner_f32(&coeffs, x) as f64 - want).abs();
+        let e_comp = (horner2(&coeffs, x) as f64 - want).abs();
+        assert!(e_comp < e_naive, "comp {e_comp:e} naive {e_naive:e}");
+        assert!(e_comp / want.abs() < 1e-4, "rel {e_comp:e}/{want:e}");
+    }
+
+    #[test]
+    fn horner_ff_high_accuracy() {
+        let mut rng = Rng::new(56);
+        let deg = 15;
+        let c64: Vec<f64> = (0..=deg).map(|_| rng.normal()).collect();
+        let ch: Vec<f32> = c64.iter().map(|&v| v as f32).collect();
+        let cl: Vec<f32> = c64.iter().zip(&ch).map(|(&v, &h)| (v - h as f64) as f32).collect();
+        let x = FF32::from_f64(1.337);
+        let got = horner_ff(&ch, &cl, x).to_f64();
+        let mut want = 0.0f64;
+        for &c in &c64 {
+            want = want * 1.337 + c;
+        }
+        assert!(((got - want) / want).abs() < 2f64.powi(-40));
+    }
+
+    #[test]
+    fn empty_and_single_element_edges() {
+        assert_eq!(sum_f32(&[]), 0.0);
+        assert_eq!(sum2(&[]), 0.0);
+        assert_eq!(sum_ff(&[]).to_f64(), 0.0);
+        assert_eq!(sum2(&[42.0]), 42.0);
+        assert_eq!(dot2(&[], &[]), 0.0);
+        assert_eq!(horner_f32(&[], 2.0), 0.0);
+        assert_eq!(horner2(&[3.0], 2.0), 3.0);
+    }
+}

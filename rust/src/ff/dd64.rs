@@ -1,0 +1,189 @@
+//! Double-double on `f64` — the Briggs/Bailey format the paper adapts
+//! (its [5]); ~106-bit significand. Used as a mid-tier comparator in the
+//! examples (f32 < float-float < f64 < double-double < mp) and by the
+//! accuracy harness when the `mp` oracle would be overkill.
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+/// Double-double number: unevaluated sum of two `f64`s.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DD64 {
+    pub hi: f64,
+    pub lo: f64,
+}
+
+#[inline(always)]
+fn two_sum64(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let bb = s - a;
+    let err = (a - (s - bb)) + (b - bb);
+    (s, err)
+}
+
+#[inline(always)]
+fn fast_two_sum64(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let err = b - (s - a);
+    (s, err)
+}
+
+#[inline(always)]
+fn two_prod64(a: f64, b: f64) -> (f64, f64) {
+    let x = a * b;
+    let y = f64::mul_add(a, b, -x); // hardware FMA: exact error
+    (x, y)
+}
+
+impl DD64 {
+    pub const ZERO: DD64 = DD64 { hi: 0.0, lo: 0.0 };
+    pub const ONE: DD64 = DD64 { hi: 1.0, lo: 0.0 };
+
+    #[inline]
+    pub const fn from_parts(hi: f64, lo: f64) -> Self {
+        DD64 { hi, lo }
+    }
+
+    #[inline]
+    pub fn from_f64(v: f64) -> Self {
+        DD64 { hi: v, lo: 0.0 }
+    }
+
+    /// Nearest double-double to the exact product of two f64s.
+    #[inline]
+    pub fn from_product(a: f64, b: f64) -> Self {
+        let (hi, lo) = two_prod64(a, b);
+        DD64 { hi, lo }
+    }
+
+    /// Nearest double-double to the exact sum of two f64s.
+    #[inline]
+    pub fn from_sum(a: f64, b: f64) -> Self {
+        let (hi, lo) = two_sum64(a, b);
+        DD64 { hi, lo }
+    }
+
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.hi + self.lo
+    }
+
+    #[inline]
+    pub fn abs(self) -> DD64 {
+        if self.hi < 0.0 || (self.hi == 0.0 && self.lo < 0.0) { -self } else { self }
+    }
+
+    #[inline]
+    pub fn add_dd(self, rhs: DD64) -> DD64 {
+        let (sh, se) = two_sum64(self.hi, rhs.hi);
+        let te = (self.lo + rhs.lo) + se;
+        let (h, l) = fast_two_sum64(sh, te);
+        DD64 { hi: h, lo: l }
+    }
+
+    #[inline]
+    pub fn mul_dd(self, rhs: DD64) -> DD64 {
+        let (ph, pl) = two_prod64(self.hi, rhs.hi);
+        let pl = pl + (self.hi * rhs.lo + self.lo * rhs.hi);
+        let (h, l) = fast_two_sum64(ph, pl);
+        DD64 { hi: h, lo: l }
+    }
+
+    #[inline]
+    pub fn div_dd(self, rhs: DD64) -> DD64 {
+        let q1 = self.hi / rhs.hi;
+        let (th, tl) = two_prod64(q1, rhs.hi);
+        let r = (((self.hi - th) - tl) + self.lo - q1 * rhs.lo) / rhs.hi;
+        let (h, l) = fast_two_sum64(q1, r);
+        DD64 { hi: h, lo: l }
+    }
+}
+
+impl Add for DD64 {
+    type Output = DD64;
+    fn add(self, rhs: DD64) -> DD64 {
+        self.add_dd(rhs)
+    }
+}
+impl Sub for DD64 {
+    type Output = DD64;
+    fn sub(self, rhs: DD64) -> DD64 {
+        self.add_dd(-rhs)
+    }
+}
+impl Mul for DD64 {
+    type Output = DD64;
+    fn mul(self, rhs: DD64) -> DD64 {
+        self.mul_dd(rhs)
+    }
+}
+impl Div for DD64 {
+    type Output = DD64;
+    fn div(self, rhs: DD64) -> DD64 {
+        self.div_dd(rhs)
+    }
+}
+impl Neg for DD64 {
+    type Output = DD64;
+    fn neg(self) -> DD64 {
+        DD64 { hi: -self.hi, lo: -self.lo }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn from_product_is_exact() {
+        let mut rng = Rng::new(41);
+        for _ in 0..100_000 {
+            let a = rng.normal();
+            let b = rng.normal();
+            let dd = DD64::from_product(a, b);
+            // hi+lo reproduces the f64-rounded product plus its error
+            assert_eq!(dd.hi, a * b);
+            // error term is below an ulp of the product
+            assert!(dd.lo.abs() <= (a * b).abs() * 2f64.powi(-52) + 1e-300);
+        }
+    }
+
+    #[test]
+    fn dd_addition_beats_f64_on_cancellation() {
+        // (1 + 2^-80) - 1 = 2^-80: f64 loses it, DD64 keeps it
+        let one = DD64::ONE;
+        let tiny = DD64::from_parts(0.0, 0.0).add_dd(DD64 { hi: 2f64.powi(-80), lo: 0.0 });
+        let sum = one.add_dd(tiny);
+        let diff = sum.sub(one);
+        assert_eq!(diff.to_f64(), 2f64.powi(-80));
+    }
+
+    #[test]
+    fn mul_relative_error_tiny() {
+        let mut rng = Rng::new(42);
+        for _ in 0..50_000 {
+            let a = DD64::from_sum(rng.normal(), rng.normal() * 1e-17);
+            let b = DD64::from_sum(rng.normal(), rng.normal() * 1e-17);
+            let p = a * b;
+            // compare against f64 arithmetic: must agree to ~2^-52 at least
+            let approx = a.to_f64() * b.to_f64();
+            if approx != 0.0 {
+                let rel = ((p.to_f64() - approx) / approx).abs();
+                assert!(rel < 2f64.powi(-50));
+            }
+        }
+    }
+
+    #[test]
+    fn div_roundtrip() {
+        let mut rng = Rng::new(43);
+        for _ in 0..50_000 {
+            let a = DD64::from_sum(rng.normal(), rng.normal() * 1e-17);
+            let b = DD64::from_sum(rng.normal() + 2.0, rng.normal() * 1e-17);
+            let q = a / b;
+            let back = q * b;
+            let err = (back.to_f64() - a.to_f64()).abs();
+            assert!(err <= a.to_f64().abs() * 2f64.powi(-95) + 1e-300);
+        }
+    }
+}

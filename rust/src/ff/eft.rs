@@ -1,0 +1,214 @@
+//! Error-free transformations (paper §4.1, Theorems 2–4).
+//!
+//! These are the exact building blocks everything rests on: each returns
+//! a result and the *exact* rounding error of that result, so a pair of
+//! `f32`s carries twice the hardware precision.
+//!
+//! All functions operate on plain `f32` with round-to-nearest (native
+//! CPU arithmetic). The same sequences under *simulated GPU arithmetic*
+//! (truncated add, faithful mul, optional guard bit) live in
+//! [`crate::gpusim::algorithms`], where the paper's GPU-conditions
+//! theorems are actually exercised.
+
+/// Knuth two-sum (paper Th. 2, "Add12"): returns `(s, r)` with
+/// `s = fl(a + b)` and `s + r == a + b` **exactly**.
+///
+/// This is the branch-free 6-flop variant the paper prefers for GPUs
+/// (no comparison of |a| vs |b|).
+#[inline(always)]
+pub fn two_sum(a: f32, b: f32) -> (f32, f32) {
+    let s = a + b;
+    let bb = s - a;
+    let err = (a - (s - bb)) + (b - bb);
+    (s, err)
+}
+
+/// Dekker fast-two-sum (3 flops): requires `|a| >= |b|` (or `a == 0`);
+/// returns `(s, r)` with `s + r == a + b` exactly under that precondition.
+#[inline(always)]
+pub fn fast_two_sum(a: f32, b: f32) -> (f32, f32) {
+    let s = a + b;
+    let err = b - (s - a);
+    (s, err)
+}
+
+/// Veltkamp/Dekker splitting, mask form: `a == hi + lo` with `hi` on 12
+/// significand bits and `lo` on 12 bits (11 explicit + sign).
+///
+/// The kernels shipped to XLA use this form (immune to FP rewrites —
+/// DESIGN.md §4b); it is EFT-equivalent to the paper's FP-only sequence
+/// for every Mul12 purpose. `split_dekker` below is the paper-verbatim
+/// variant.
+#[inline(always)]
+pub fn split(a: f32) -> (f32, f32) {
+    let hi = f32::from_bits(a.to_bits() & 0xFFFF_F000);
+    let lo = a - hi; // exact: low 12 bits of the significand
+    (hi, lo)
+}
+
+/// Dekker splitting exactly as printed in the paper (Th. 3), with
+/// splitting point s = 12: `c = a·(2^12 + 1); hi = c - (c - a); lo = a - hi`.
+///
+/// Valid on any IEEE round-to-nearest machine; may round `hi` *up* to a
+/// 12-bit value larger than `|a|`'s leading bits (then `lo < 0`), which
+/// is fine — the pair is still a non-overlapping exact decomposition.
+#[inline(always)]
+pub fn split_dekker(a: f32) -> (f32, f32) {
+    const SPLIT: f32 = 4097.0; // 2^12 + 1
+    let c = SPLIT * a;
+    let a_big = c - a;
+    let hi = c - a_big;
+    let lo = a - hi;
+    (hi, lo)
+}
+
+/// Dekker two-product (paper Th. 4, "Mul12"): returns `(x, y)` with
+/// `x = fl(a*b)` and `x + y == a * b` **exactly** (no FMA required —
+/// this is the 17-flop sequence the paper runs on GPUs).
+#[inline(always)]
+pub fn two_prod(a: f32, b: f32) -> (f32, f32) {
+    let x = a * b;
+    let (a_hi, a_lo) = split(a);
+    let (b_hi, b_lo) = split(b);
+    let err1 = x - a_hi * b_hi;
+    let err2 = err1 - a_lo * b_hi;
+    let err3 = err2 - a_hi * b_lo;
+    let y = a_lo * b_lo - err3;
+    (x, y)
+}
+
+/// Two-product via hardware FMA: `y = fma(a, b, -x)` is the exact error.
+/// Modern shortcut (not available on 2006 GPUs); used as the optimized
+/// hot path after the §Perf pass and cross-checked against `two_prod`.
+#[inline(always)]
+pub fn two_prod_fma(a: f32, b: f32) -> (f32, f32) {
+    let x = a * b;
+    let y = f32::mul_add(a, b, -x);
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn exact_f64(hi: f32, lo: f32) -> f64 {
+        hi as f64 + lo as f64
+    }
+
+    #[test]
+    fn two_sum_exact_on_random_pairs() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200_000 {
+            let a = rng.spread_f32(-40, 40);
+            let b = rng.spread_f32(-40, 40);
+            let (s, r) = two_sum(a, b);
+            if s.is_finite() {
+                assert_eq!(exact_f64(s, r), a as f64 + b as f64, "a={a} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn two_sum_handles_zero_and_sign() {
+        assert_eq!(two_sum(0.0, 0.0), (0.0, 0.0));
+        let (s, r) = two_sum(1.0, -1.0);
+        assert_eq!(s, 0.0);
+        assert_eq!(r, 0.0);
+    }
+
+    #[test]
+    fn fast_two_sum_exact_when_ordered() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100_000 {
+            let mut a = rng.spread_f32(-20, 20);
+            let mut b = rng.spread_f32(-20, 20);
+            if b.abs() > a.abs() {
+                std::mem::swap(&mut a, &mut b);
+            }
+            let (s, r) = fast_two_sum(a, b);
+            assert_eq!(exact_f64(s, r), a as f64 + b as f64, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn split_mask_is_exact_and_12bit() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100_000 {
+            let a = rng.spread_f32(-100, 100);
+            let (hi, lo) = split(a);
+            assert_eq!(exact_f64(hi, lo), a as f64, "a={a}");
+            if hi != 0.0 {
+                // hi representable on 12 significand bits
+                let m = hi.abs() as f64;
+                let (frac, _) = frexp(m);
+                let scaled = frac * 4096.0;
+                assert_eq!(scaled, scaled.round(), "hi={hi} not 12-bit");
+            }
+            // lo fits 12 bits and |lo| <= 2^-12 |a| scale
+            if a != 0.0 {
+                assert!(lo.abs() as f64 <= a.abs() as f64 * 2f64.powi(-11));
+            }
+        }
+    }
+
+    #[test]
+    fn split_dekker_is_exact_and_nonoverlapping() {
+        let mut rng = Rng::new(4);
+        for _ in 0..100_000 {
+            // keep away from overflow: c = 4097*a must be finite
+            let a = rng.spread_f32(-100, 100);
+            let (hi, lo) = split_dekker(a);
+            assert_eq!(exact_f64(hi, lo), a as f64, "a={a}");
+            // Dekker hi has at most 12 significand bits (possibly rounded up)
+            if hi != 0.0 {
+                let (frac, _) = frexp(hi.abs() as f64);
+                let scaled = frac * 4096.0;
+                assert_eq!(scaled, scaled.round(), "hi={hi} not 12-bit");
+            }
+        }
+    }
+
+    #[test]
+    fn two_prod_exact_on_random_pairs() {
+        let mut rng = Rng::new(5);
+        for _ in 0..200_000 {
+            // exponents chosen so product and its error stay normal
+            let a = rng.spread_f32(-30, 30);
+            let b = rng.spread_f32(-30, 30);
+            let (x, y) = two_prod(a, b);
+            // f64 holds the exact 48-bit product of two f32s
+            assert_eq!(exact_f64(x, y), a as f64 * b as f64, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn two_prod_matches_fma_variant() {
+        let mut rng = Rng::new(6);
+        for _ in 0..100_000 {
+            let a = rng.spread_f32(-30, 30);
+            let b = rng.spread_f32(-30, 30);
+            let (x1, y1) = two_prod(a, b);
+            let (x2, y2) = two_prod_fma(a, b);
+            assert_eq!(x1, x2);
+            assert_eq!(y1, y2, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn two_prod_known_values() {
+        // 1.5 * pi_f32: error known to be representable
+        let (x, y) = two_prod(1.5, std::f32::consts::PI);
+        assert_eq!(x as f64 + y as f64, 1.5f64 * std::f32::consts::PI as f64);
+        assert_ne!(y, 0.0);
+    }
+
+    /// libm-free frexp for tests.
+    fn frexp(x: f64) -> (f64, i32) {
+        if x == 0.0 {
+            return (0.0, 0);
+        }
+        let e = x.abs().log2().floor() as i32 + 1;
+        (x / 2f64.powi(e), e)
+    }
+}

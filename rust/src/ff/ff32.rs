@@ -1,0 +1,445 @@
+//! [`FF32`]: the scalar float-float type (paper §4, Theorems 5–6).
+//!
+//! `FF32 { hi, lo }` represents the real number `hi + lo` with
+//! `|lo| <= ulp(hi)/2`. Operators follow the paper's algorithms exactly:
+//! `+` is Add22 (the branch-free GPU variant), `*` is Mul22, with the §7
+//! extensions (`/`, sqrt, branchy CPU-style Add22) alongside.
+
+use super::eft::{fast_two_sum, two_prod, two_sum};
+use std::cmp::Ordering;
+use std::fmt;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A float-float number: the unevaluated sum of two `f32`s.
+#[derive(Clone, Copy, Default, PartialEq)]
+pub struct FF32 {
+    /// Leading component (carries the sign and magnitude).
+    pub hi: f32,
+    /// Trailing component, `|lo| <= ulp(hi)/2` when normalised.
+    pub lo: f32,
+}
+
+impl FF32 {
+    pub const ZERO: FF32 = FF32 { hi: 0.0, lo: 0.0 };
+    pub const ONE: FF32 = FF32 { hi: 1.0, lo: 0.0 };
+
+    /// Construct from components **without** renormalising.
+    /// Caller asserts `hi + lo` is already a valid float-float pair.
+    #[inline]
+    pub const fn from_parts(hi: f32, lo: f32) -> Self {
+        FF32 { hi, lo }
+    }
+
+    /// Construct from components, renormalising with fast-two-sum.
+    #[inline]
+    pub fn renorm(hi: f32, lo: f32) -> Self {
+        let (h, l) = fast_two_sum(hi, lo);
+        FF32 { hi: h, lo: l }
+    }
+
+    /// Exact widening of a single `f32`.
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        FF32 { hi: v, lo: 0.0 }
+    }
+
+    /// Best float-float approximation of an `f64` (exact when the f64
+    /// has <= 49 significand bits, e.g. any sum/product of two f32s).
+    #[inline]
+    pub fn from_f64(v: f64) -> Self {
+        let hi = v as f32;
+        let lo = (v - hi as f64) as f32;
+        FF32 { hi, lo }
+    }
+
+    /// Value as `f64` (exact: 24 + 24 bits fit in 53).
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.hi as f64 + self.lo as f64
+    }
+
+    /// Paper Th. 5 — Add22, branch-free GPU variant (11 flops):
+    /// two-sum on the high words, accumulate both low words, renormalise.
+    #[inline]
+    pub fn add22(self, rhs: FF32) -> FF32 {
+        let (sh, se) = two_sum(self.hi, rhs.hi);
+        let te = (self.lo + rhs.lo) + se;
+        let (rh, rl) = fast_two_sum(sh, te);
+        FF32 { hi: rh, lo: rl }
+    }
+
+    /// The *branchy* Add22 the paper benchmarks on CPUs (Table 4): picks
+    /// the larger operand with a test instead of the 3 extra flops.
+    /// Semantically equivalent accuracy class; slower on deep pipelines —
+    /// the effect the paper measures ("the test ... breaks the execution
+    /// pipeline").
+    #[inline]
+    pub fn add22_branchy(self, rhs: FF32) -> FF32 {
+        let r = self.hi + rhs.hi;
+        let s = if self.hi.abs() >= rhs.hi.abs() {
+            ((self.hi - r) + rhs.hi) + rhs.lo + self.lo
+        } else {
+            ((rhs.hi - r) + self.hi) + self.lo + rhs.lo
+        };
+        let (rh, rl) = fast_two_sum(r, s);
+        FF32 { hi: rh, lo: rl }
+    }
+
+    /// Higher-accuracy Add22 (two two-sums, 20 flops): the "accurate"
+    /// double-double variant; error O(2^-47 |a+b|) — used by harnesses
+    /// that need headroom over the paper's bound.
+    #[inline]
+    pub fn add22_accurate(self, rhs: FF32) -> FF32 {
+        let (sh, se) = two_sum(self.hi, rhs.hi);
+        let (tl, te) = two_sum(self.lo, rhs.lo);
+        let se = se + tl;
+        let (sh2, se2) = fast_two_sum(sh, se);
+        let se2 = se2 + te;
+        let (rh, rl) = fast_two_sum(sh2, se2);
+        FF32 { hi: rh, lo: rl }
+    }
+
+    /// Paper Th. 6 — Mul22: exact two-product of the high words plus the
+    /// cross terms, renormalised. Relative error <= 2^-44.
+    #[inline]
+    pub fn mul22(self, rhs: FF32) -> FF32 {
+        let (ph, pl) = two_prod(self.hi, rhs.hi);
+        let pl = pl + (self.hi * rhs.lo + self.lo * rhs.hi);
+        let (rh, rl) = fast_two_sum(ph, pl);
+        FF32 { hi: rh, lo: rl }
+    }
+
+    /// Float-float division (paper §7 future work): one reciprocal
+    /// estimate + one float-float residual correction. Relative error
+    /// ~2^-43.
+    #[inline]
+    pub fn div22(self, rhs: FF32) -> FF32 {
+        let q1 = self.hi / rhs.hi;
+        let (th, tl) = two_prod(q1, rhs.hi);
+        let r = (((self.hi - th) - tl) + self.lo - q1 * rhs.lo) / rhs.hi;
+        let (rh, rl) = fast_two_sum(q1, r);
+        FF32 { hi: rh, lo: rl }
+    }
+
+    /// Float-float square root: Karp–Markstein style single correction.
+    /// Relative error ~2^-44. Returns NaN pair for negative input.
+    #[inline]
+    pub fn sqrt22(self) -> FF32 {
+        if self.hi < 0.0 {
+            return FF32 { hi: f32::NAN, lo: f32::NAN };
+        }
+        if self.hi == 0.0 {
+            return FF32::ZERO;
+        }
+        let q = self.hi.sqrt();
+        let (th, tl) = two_prod(q, q);
+        // r = (a - q^2) / (2q)
+        let r = (((self.hi - th) - tl) + self.lo) / (2.0 * q);
+        let (rh, rl) = fast_two_sum(q, r);
+        FF32 { hi: rh, lo: rl }
+    }
+
+    /// Fused multiply-add in float-float: `self * b + c` (one Mul22 +
+    /// one Add22 — the composite the mad22 kernel fuses).
+    #[inline]
+    pub fn mad22(self, b: FF32, c: FF32) -> FF32 {
+        self.mul22(b).add22(c)
+    }
+
+    #[inline]
+    pub fn abs(self) -> FF32 {
+        if self.hi < 0.0 || (self.hi == 0.0 && self.lo < 0.0) { -self } else { self }
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.hi.is_finite() && self.lo.is_finite()
+    }
+
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        self.hi.is_nan() || self.lo.is_nan()
+    }
+
+    /// True when `|lo| <= ulp(hi)/2` (canonical form).
+    pub fn is_normalised(self) -> bool {
+        if self.lo == 0.0 {
+            return true;
+        }
+        (self.lo.abs() as f64) <= crate::util::ulp_f32(self.hi) * 0.5
+    }
+}
+
+impl Add for FF32 {
+    type Output = FF32;
+    #[inline]
+    fn add(self, rhs: FF32) -> FF32 {
+        self.add22(rhs)
+    }
+}
+
+impl Sub for FF32 {
+    type Output = FF32;
+    #[inline]
+    fn sub(self, rhs: FF32) -> FF32 {
+        self.add22(-rhs)
+    }
+}
+
+impl Mul for FF32 {
+    type Output = FF32;
+    #[inline]
+    fn mul(self, rhs: FF32) -> FF32 {
+        self.mul22(rhs)
+    }
+}
+
+impl Div for FF32 {
+    type Output = FF32;
+    #[inline]
+    fn div(self, rhs: FF32) -> FF32 {
+        self.div22(rhs)
+    }
+}
+
+impl Neg for FF32 {
+    type Output = FF32;
+    #[inline]
+    fn neg(self) -> FF32 {
+        FF32 { hi: -self.hi, lo: -self.lo }
+    }
+}
+
+impl AddAssign for FF32 {
+    fn add_assign(&mut self, rhs: FF32) {
+        *self = *self + rhs;
+    }
+}
+impl SubAssign for FF32 {
+    fn sub_assign(&mut self, rhs: FF32) {
+        *self = *self - rhs;
+    }
+}
+impl MulAssign for FF32 {
+    fn mul_assign(&mut self, rhs: FF32) {
+        *self = *self * rhs;
+    }
+}
+impl DivAssign for FF32 {
+    fn div_assign(&mut self, rhs: FF32) {
+        *self = *self / rhs;
+    }
+}
+
+impl PartialOrd for FF32 {
+    fn partial_cmp(&self, other: &FF32) -> Option<Ordering> {
+        match self.hi.partial_cmp(&other.hi) {
+            Some(Ordering::Equal) => self.lo.partial_cmp(&other.lo),
+            ord => ord,
+        }
+    }
+}
+
+impl From<f32> for FF32 {
+    fn from(v: f32) -> Self {
+        FF32::from_f32(v)
+    }
+}
+
+impl From<f64> for FF32 {
+    fn from(v: f64) -> Self {
+        FF32::from_f64(v)
+    }
+}
+
+impl fmt::Debug for FF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FF32({:e} + {:e})", self.hi, self.lo)
+    }
+}
+
+impl fmt::Display for FF32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.17e}", self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_ff(rng: &mut Rng) -> (FF32, f64) {
+        let (hi, lo) = rng.ff_pair(-12, 12);
+        (FF32::from_parts(hi, lo), hi as f64 + lo as f64)
+    }
+
+    #[test]
+    fn add22_respects_paper_bound() {
+        let mut rng = Rng::new(21);
+        for _ in 0..200_000 {
+            let (a, a64) = rand_ff(&mut rng);
+            let (b, b64) = rand_ff(&mut rng);
+            let r = a + b;
+            let want = a64 + b64;
+            let err = (r.to_f64() - want).abs();
+            let bound = (2f64.powi(-23) * (a.lo as f64 + b.lo as f64).abs())
+                .max(2f64.powi(-43) * want.abs());
+            assert!(err <= bound + 1e-300, "a={a:?} b={b:?} err={err:e}");
+        }
+    }
+
+    #[test]
+    fn add22_branchy_same_error_class() {
+        let mut rng = Rng::new(22);
+        for _ in 0..100_000 {
+            let (a, a64) = rand_ff(&mut rng);
+            let (b, b64) = rand_ff(&mut rng);
+            let r = a.add22_branchy(b);
+            let want = a64 + b64;
+            let err = (r.to_f64() - want).abs();
+            let bound = (2f64.powi(-23) * (a.lo as f64 + b.lo as f64).abs())
+                .max(2f64.powi(-43) * want.abs());
+            assert!(err <= bound + 1e-300, "a={a:?} b={b:?}");
+        }
+    }
+
+    #[test]
+    fn add22_accurate_tighter_than_plain() {
+        // Individual samples can go either way (different rounding paths);
+        // in aggregate the 20-flop variant must be at least as accurate.
+        let mut rng = Rng::new(23);
+        let (mut sum_plain, mut sum_acc) = (0.0f64, 0.0f64);
+        for _ in 0..50_000 {
+            let (a, a64) = rand_ff(&mut rng);
+            let (b, b64) = rand_ff(&mut rng);
+            let want = a64 + b64;
+            let scale = want.abs().max(1e-300);
+            sum_plain += (a.add22(b).to_f64() - want).abs() / scale;
+            sum_acc += (a.add22_accurate(b).to_f64() - want).abs() / scale;
+        }
+        assert!(sum_acc <= sum_plain * 1.01 + 1e-12,
+                "accurate {sum_acc:e} vs plain {sum_plain:e}");
+    }
+
+    #[test]
+    fn mul22_relative_error_within_2pow44() {
+        let mut rng = Rng::new(24);
+        for _ in 0..200_000 {
+            let (a, a64) = rand_ff(&mut rng);
+            let (b, b64) = rand_ff(&mut rng);
+            let r = a * b;
+            let want = a64 * b64;
+            if want == 0.0 || !r.is_finite() {
+                continue;
+            }
+            let rel = ((r.to_f64() - want) / want).abs();
+            assert!(rel <= 2f64.powi(-43), "a={a:?} b={b:?} rel=2^{}", rel.log2());
+        }
+    }
+
+    #[test]
+    fn div22_roundtrips_mul22() {
+        let mut rng = Rng::new(25);
+        for _ in 0..100_000 {
+            let (a, a64) = rand_ff(&mut rng);
+            let (b, b64) = rand_ff(&mut rng);
+            if b.hi.abs() < 1e-6 {
+                continue;
+            }
+            let q = a / b;
+            let want = a64 / b64;
+            let rel = ((q.to_f64() - want) / want).abs();
+            assert!(rel <= 2f64.powi(-42), "a={a:?} b={b:?} rel=2^{}", rel.log2());
+        }
+    }
+
+    #[test]
+    fn sqrt22_accuracy() {
+        let mut rng = Rng::new(26);
+        for _ in 0..100_000 {
+            let (a, a64) = rand_ff(&mut rng);
+            let a = a.abs();
+            let a64 = a64.abs();
+            if a64 == 0.0 {
+                continue;
+            }
+            let s = a.sqrt22();
+            let want = a64.sqrt();
+            let rel = ((s.to_f64() - want) / want).abs();
+            assert!(rel <= 2f64.powi(-43), "a={a:?} rel=2^{}", rel.log2());
+        }
+        assert!(FF32::from_f32(-1.0).sqrt22().is_nan());
+        assert_eq!(FF32::ZERO.sqrt22(), FF32::ZERO);
+    }
+
+    #[test]
+    fn operators_produce_normalised_results() {
+        let mut rng = Rng::new(27);
+        for _ in 0..50_000 {
+            let (a, _) = rand_ff(&mut rng);
+            let (b, _) = rand_ff(&mut rng);
+            assert!((a + b).is_normalised());
+            assert!((a * b).is_normalised());
+            if b.hi != 0.0 {
+                assert!((a / b).is_normalised());
+            }
+        }
+    }
+
+    #[test]
+    fn from_f64_roundtrip() {
+        let mut rng = Rng::new(28);
+        for _ in 0..100_000 {
+            let v = rng.normal() * rng.uniform(-8.0, 8.0).exp2();
+            let ff = FF32::from_f64(v);
+            // 49-bit relative fidelity
+            let rel = ((ff.to_f64() - v) / v).abs();
+            assert!(rel <= 2f64.powi(-46), "v={v} rel=2^{}", rel.log2());
+            assert!(ff.is_normalised());
+        }
+    }
+
+    #[test]
+    fn ordering_uses_both_words() {
+        let a = FF32::from_parts(1.0, 1e-9);
+        let b = FF32::from_parts(1.0, 2e-9);
+        assert!(a < b);
+        assert!(FF32::from_f32(2.0) > b);
+    }
+
+    #[test]
+    fn neg_and_abs() {
+        let a = FF32::from_f64(-1.25e-3);
+        assert_eq!((-a).to_f64(), -a.to_f64());
+        assert_eq!(a.abs().to_f64(), -a.to_f64());
+        assert!(a.abs().to_f64() > 0.0);
+        // negation is exact (sign flip on both words)
+        assert_eq!((-(-a)), a);
+    }
+
+    #[test]
+    fn mad22_equals_mul_then_add() {
+        let mut rng = Rng::new(29);
+        for _ in 0..50_000 {
+            let (a, _) = rand_ff(&mut rng);
+            let (b, _) = rand_ff(&mut rng);
+            let (c, _) = rand_ff(&mut rng);
+            let m = a.mad22(b, c);
+            let n = (a * b) + c;
+            assert_eq!(m, n);
+        }
+    }
+
+    #[test]
+    fn precision_demo_pi_plus_tiny() {
+        // the headline capability: f32 loses this, FF32 keeps it
+        let pi = FF32::from_f64(std::f64::consts::PI);
+        let tiny = FF32::from_f64(1e-10);
+        let sum = pi + tiny;
+        let f32_sum = std::f32::consts::PI + 1e-10f32;
+        assert_eq!(f32_sum, std::f32::consts::PI); // f32 swallowed it
+        let err = (sum.to_f64() - (std::f64::consts::PI + 1e-10)).abs();
+        assert!(err < 1e-13); // FF32 kept it
+    }
+}

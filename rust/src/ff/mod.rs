@@ -1,0 +1,29 @@
+//! The float-float ("single-single") numeric format — the paper's core
+//! contribution, on native IEEE-754 hardware.
+//!
+//! A float-float number is the unevaluated sum `hi + lo` of two `f32`s
+//! with `|lo| <= ulp(hi)/2`, giving ~49 bits of significand on IEEE
+//! hardware (the paper quotes 44 bits under GPU arithmetic, where the
+//! operators lose a few bits to faithful rounding). The module provides:
+//!
+//! * [`eft`] — the error-free transformations (Add12/two-sum, Split,
+//!   Mul12/two-product) of the paper's §4.1;
+//! * [`FF32`] — the scalar float-float type with full operator overloads
+//!   (`+ - * /`), comparisons, and conversions;
+//! * [`vector`] — SoA slice kernels mirroring the Pallas L1 kernels
+//!   bit-for-bit (the "CPU path" of the paper's Table 4);
+//! * [`dd64`] — double-double on `f64` (Briggs/Bailey comparator, used
+//!   by the examples to show the same algorithms at the next precision
+//!   level);
+//! * [`compensated`] — Sum2/Dot2/Horner compensated algorithms, the
+//!   paper's §7 "future work".
+
+pub mod compensated;
+pub mod dd64;
+pub mod eft;
+pub mod ff32;
+pub mod vector;
+
+pub use dd64::DD64;
+pub use eft::{fast_two_sum, split, split_dekker, two_prod, two_prod_fma, two_sum};
+pub use ff32::FF32;

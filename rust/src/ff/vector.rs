@@ -1,0 +1,292 @@
+//! SoA vector kernels — the "CPU path" of the paper's Table 4.
+//!
+//! Each function is the scalar algorithm applied elementwise over
+//! structure-of-arrays planes, mirroring the Pallas L1 kernels
+//! **bit-for-bit** (same operation order, same mask split). The
+//! integration test `runtime_matches_native` asserts that equivalence
+//! against the XLA-executed artifacts.
+//!
+//! Two Add22 flavours are exposed because the paper benchmarks them
+//! differently: the branch-free variant (GPU-style, Table 3 semantics)
+//! and the branchy variant (what double-double CPU libraries of the era
+//! used, the paper's Table 4 "Add22" with its pipeline-break cost).
+
+use super::eft::{fast_two_sum, split, two_prod, two_sum};
+use super::ff32::FF32;
+
+/// Elementwise `s, e = two_sum(a, b)` over slices. Panics on length mismatch.
+pub fn add12(a: &[f32], b: &[f32], s: &mut [f32], e: &mut [f32]) {
+    let n = a.len();
+    assert!(b.len() == n && s.len() == n && e.len() == n);
+    for i in 0..n {
+        let (si, ei) = two_sum(a[i], b[i]);
+        s[i] = si;
+        e[i] = ei;
+    }
+}
+
+/// Elementwise mask split.
+pub fn split_v(a: &[f32], hi: &mut [f32], lo: &mut [f32]) {
+    let n = a.len();
+    assert!(hi.len() == n && lo.len() == n);
+    for i in 0..n {
+        let (h, l) = split(a[i]);
+        hi[i] = h;
+        lo[i] = l;
+    }
+}
+
+/// Elementwise exact product.
+pub fn mul12(a: &[f32], b: &[f32], x: &mut [f32], y: &mut [f32]) {
+    let n = a.len();
+    assert!(b.len() == n && x.len() == n && y.len() == n);
+    for i in 0..n {
+        let (xi, yi) = two_prod(a[i], b[i]);
+        x[i] = xi;
+        y[i] = yi;
+    }
+}
+
+/// Elementwise float-float addition, branch-free (kernel semantics).
+pub fn add22(
+    ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+) {
+    let n = ah.len();
+    assert!(al.len() == n && bh.len() == n && bl.len() == n && rh.len() == n && rl.len() == n);
+    for i in 0..n {
+        let (sh, se) = two_sum(ah[i], bh[i]);
+        let te = (al[i] + bl[i]) + se;
+        let (h, l) = fast_two_sum(sh, te);
+        rh[i] = h;
+        rl[i] = l;
+    }
+}
+
+/// Elementwise float-float addition, branchy (the paper's CPU Table 4
+/// variant — kept for the Table 4 reproduction).
+pub fn add22_branchy(
+    ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+) {
+    let n = ah.len();
+    assert!(al.len() == n && bh.len() == n && bl.len() == n && rh.len() == n && rl.len() == n);
+    for i in 0..n {
+        let a = FF32::from_parts(ah[i], al[i]);
+        let b = FF32::from_parts(bh[i], bl[i]);
+        let r = a.add22_branchy(b);
+        rh[i] = r.hi;
+        rl[i] = r.lo;
+    }
+}
+
+/// Elementwise float-float multiplication.
+pub fn mul22(
+    ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+) {
+    let n = ah.len();
+    assert!(al.len() == n && bh.len() == n && bl.len() == n && rh.len() == n && rl.len() == n);
+    for i in 0..n {
+        let (ph, pl) = two_prod(ah[i], bh[i]);
+        let pl = pl + (ah[i] * bl[i] + al[i] * bh[i]);
+        let (h, l) = fast_two_sum(ph, pl);
+        rh[i] = h;
+        rl[i] = l;
+    }
+}
+
+/// Elementwise float-float division.
+pub fn div22(
+    ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+) {
+    let n = ah.len();
+    assert!(al.len() == n && bh.len() == n && bl.len() == n && rh.len() == n && rl.len() == n);
+    for i in 0..n {
+        let q1 = ah[i] / bh[i];
+        let (th, tl) = two_prod(q1, bh[i]);
+        let r = (((ah[i] - th) - tl) + al[i] - q1 * bl[i]) / bh[i];
+        let (h, l) = fast_two_sum(q1, r);
+        rh[i] = h;
+        rl[i] = l;
+    }
+}
+
+/// Elementwise float-float multiply-add `r = a*b + c`.
+#[allow(clippy::too_many_arguments)]
+pub fn mad22(
+    ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], ch: &[f32], cl: &[f32],
+    rh: &mut [f32], rl: &mut [f32],
+) {
+    let n = ah.len();
+    assert!(al.len() == n && bh.len() == n && bl.len() == n && ch.len() == n && cl.len() == n);
+    assert!(rh.len() == n && rl.len() == n);
+    for i in 0..n {
+        let a = FF32::from_parts(ah[i], al[i]);
+        let b = FF32::from_parts(bh[i], bl[i]);
+        let c = FF32::from_parts(ch[i], cl[i]);
+        let r = a.mul22(b).add22(c);
+        rh[i] = r.hi;
+        rl[i] = r.lo;
+    }
+}
+
+/// Single-precision baselines (Tables 3-4 comparators).
+pub fn base_add(a: &[f32], b: &[f32], r: &mut [f32]) {
+    for i in 0..a.len() {
+        r[i] = a[i] + b[i];
+    }
+}
+
+pub fn base_mul(a: &[f32], b: &[f32], r: &mut [f32]) {
+    for i in 0..a.len() {
+        r[i] = a[i] * b[i];
+    }
+}
+
+pub fn base_mad(a: &[f32], b: &[f32], c: &[f32], r: &mut [f32]) {
+    for i in 0..a.len() {
+        r[i] = a[i] * b[i] + c[i];
+    }
+}
+
+/// Dispatch an operator by catalogue name over SoA planes.
+///
+/// `inputs` and `outputs` follow the artifact manifest arities
+/// (e.g. `add22`: 4 inputs, 2 outputs). Used by the coordinator's CPU
+/// fallback path and by the integration tests.
+pub fn dispatch(
+    op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+) -> Result<(), String> {
+    match op {
+        "add12" => {
+            let (a, b) = (inputs[0], inputs[1]);
+            let (s, e) = split_two_mut(outputs);
+            add12(a, b, s, e);
+        }
+        "split" => {
+            let (h, l) = split_two_mut(outputs);
+            split_v(inputs[0], h, l);
+        }
+        "mul12" => {
+            let (x, y) = split_two_mut(outputs);
+            mul12(inputs[0], inputs[1], x, y);
+        }
+        "add22" => {
+            let (h, l) = split_two_mut(outputs);
+            add22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+        }
+        "mul22" => {
+            let (h, l) = split_two_mut(outputs);
+            mul22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+        }
+        "div22" => {
+            let (h, l) = split_two_mut(outputs);
+            div22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+        }
+        "mad22" => {
+            let (h, l) = split_two_mut(outputs);
+            mad22(inputs[0], inputs[1], inputs[2], inputs[3], inputs[4], inputs[5], h, l);
+        }
+        "add" => base_add(inputs[0], inputs[1], &mut outputs[0]),
+        "mul" => base_mul(inputs[0], inputs[1], &mut outputs[0]),
+        "mad" => base_mad(inputs[0], inputs[1], inputs[2], &mut outputs[0]),
+        other => return Err(format!("unknown op {other}")),
+    }
+    Ok(())
+}
+
+fn split_two_mut(outputs: &mut [Vec<f32>]) -> (&mut [f32], &mut [f32]) {
+    let (a, b) = outputs.split_at_mut(1);
+    (&mut a[0], &mut b[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn planes(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut hi = Vec::with_capacity(n);
+        let mut lo = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (h, l) = rng.ff_pair(-10, 10);
+            hi.push(h);
+            lo.push(l);
+        }
+        (hi, lo)
+    }
+
+    #[test]
+    fn vector_matches_scalar_add22() {
+        let mut rng = Rng::new(31);
+        let n = 4096;
+        let (ah, al) = planes(&mut rng, n);
+        let (bh, bl) = planes(&mut rng, n);
+        let mut rh = vec![0.0; n];
+        let mut rl = vec![0.0; n];
+        add22(&ah, &al, &bh, &bl, &mut rh, &mut rl);
+        for i in 0..n {
+            let want = FF32::from_parts(ah[i], al[i]) + FF32::from_parts(bh[i], bl[i]);
+            assert_eq!((rh[i], rl[i]), (want.hi, want.lo), "i={i}");
+        }
+    }
+
+    #[test]
+    fn vector_matches_scalar_mul22() {
+        let mut rng = Rng::new(32);
+        let n = 4096;
+        let (ah, al) = planes(&mut rng, n);
+        let (bh, bl) = planes(&mut rng, n);
+        let mut rh = vec![0.0; n];
+        let mut rl = vec![0.0; n];
+        mul22(&ah, &al, &bh, &bl, &mut rh, &mut rl);
+        for i in 0..n {
+            let want = FF32::from_parts(ah[i], al[i]) * FF32::from_parts(bh[i], bl[i]);
+            assert_eq!((rh[i], rl[i]), (want.hi, want.lo), "i={i}");
+        }
+    }
+
+    #[test]
+    fn mul12_exactness_vectorised() {
+        let mut rng = Rng::new(33);
+        let n = 8192;
+        let a = rng.fill_spread(n, -20, 20);
+        let b = rng.fill_spread(n, -20, 20);
+        let mut x = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        mul12(&a, &b, &mut x, &mut y);
+        for i in 0..n {
+            assert_eq!(x[i] as f64 + y[i] as f64, a[i] as f64 * b[i] as f64);
+        }
+    }
+
+    #[test]
+    fn dispatch_all_ops_run() {
+        let mut rng = Rng::new(34);
+        let n = 256;
+        let (ah, al) = planes(&mut rng, n);
+        let (bh, bl) = planes(&mut rng, n);
+        let (ch, cl) = planes(&mut rng, n);
+        for (op, n_in, n_out) in [
+            ("add12", 2, 2), ("split", 1, 2), ("mul12", 2, 2),
+            ("add22", 4, 2), ("mul22", 4, 2), ("div22", 4, 2), ("mad22", 6, 2),
+            ("add", 2, 1), ("mul", 2, 1), ("mad", 3, 1),
+        ] {
+            let ins: Vec<&[f32]> =
+                [&ah[..], &al[..], &bh[..], &bl[..], &ch[..], &cl[..]][..n_in].to_vec();
+            let mut outs = vec![vec![0.0f32; n]; n_out];
+            dispatch(op, &ins, &mut outs).unwrap();
+            // every op must write *something* non-trivially
+            assert!(outs[0].iter().any(|&v| v != 0.0), "op {op} wrote zeros");
+        }
+        assert!(dispatch("nope", &[], &mut []).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let a = vec![0.0f32; 4];
+        let b = vec![0.0f32; 5];
+        let mut s = vec![0.0f32; 4];
+        let mut e = vec![0.0f32; 4];
+        add12(&a, &b, &mut s, &mut e);
+    }
+}

@@ -1,0 +1,523 @@
+//! Parameterised soft floating-point arithmetic.
+//!
+//! Every operation takes an [`OpRounding`] describing the datapath the
+//! way 2006 GPU ALUs differed from IEEE:
+//!
+//! * `guard_bits` — how many extra low bits the datapath keeps while
+//!   aligning/accumulating. **0 guard bits** is the ATI R300 behaviour
+//!   that breaks Sterbenz subtraction (paper Table 2, §4.1); **1 guard
+//!   bit** is what the paper assumes for Nvidia.
+//! * `sticky` — whether bits shifted past the guards are OR-ed into a
+//!   sticky bit (IEEE needs it for correct rounding; GPUs of the era
+//!   dropped it).
+//! * `mode` — final rounding: truncate (chopped), round-to-nearest-even,
+//!   or round-to-nearest-away.
+//!
+//! Values are [`SoftFp`]: sign/exponent/normalised-mantissa triples in a
+//! given [`Format`]. All arithmetic is integer-exact inside the declared
+//! datapath — no hidden f64 shortcuts — so the simulated error intervals
+//! are *consequences of the datapath*, as on the real chips.
+
+use super::format::Format;
+
+/// Final rounding of the kept bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Chop: discard kept guard bits (round toward zero).
+    Truncate,
+    /// Round to nearest, ties to even.
+    NearestEven,
+    /// Round to nearest, ties away from zero.
+    NearestAway,
+}
+
+/// Datapath description for one operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpRounding {
+    pub guard_bits: u32,
+    pub sticky: bool,
+    pub mode: RoundMode,
+}
+
+impl OpRounding {
+    /// IEEE-correct rounding: effectively infinite guard via sticky + RNE.
+    pub const IEEE: OpRounding =
+        OpRounding { guard_bits: 2, sticky: true, mode: RoundMode::NearestEven };
+    /// Pure chopping with no guard (worst 2006 GPU behaviour).
+    pub const CHOP: OpRounding =
+        OpRounding { guard_bits: 0, sticky: false, mode: RoundMode::Truncate };
+    /// One guard bit then truncate — the paper's Nvidia addition model.
+    pub const GUARD_TRUNC: OpRounding =
+        OpRounding { guard_bits: 1, sticky: false, mode: RoundMode::Truncate };
+}
+
+/// A soft floating-point value in some [`Format`].
+///
+/// Invariants (enforced by constructors): either `mant == 0` (zero) or
+/// `2^(p-1) <= mant < 2^p` with `value = ±mant · 2^(exp - p + 1)`.
+/// Saturated overflow is represented by the max finite value when the
+/// format has no specials; `inf` is a flag otherwise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SoftFp {
+    pub negative: bool,
+    pub exp: i32,
+    pub mant: u64,
+    pub inf: bool,
+}
+
+impl SoftFp {
+    pub const fn zero() -> Self {
+        SoftFp { negative: false, exp: 0, mant: 0, inf: false }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mant == 0 && !self.inf
+    }
+
+    /// Quantize an `f64` into the format: round mantissa to p bits (RNE),
+    /// clamp exponent, flush subnormals. This is the "upload a texel"
+    /// conversion.
+    pub fn from_f64(v: f64, fmt: Format) -> Self {
+        if v == 0.0 || v.is_nan() {
+            return Self::zero();
+        }
+        if v.is_infinite() {
+            return Self::saturate(v < 0.0, fmt);
+        }
+        let negative = v < 0.0;
+        let a = v.abs();
+        let e = a.log2().floor() as i32;
+        let p = fmt.precision();
+        // mantissa as integer in [2^(p-1), 2^p)
+        let scaled = a / pow2(e) * pow2(p as i32 - 1);
+        let mut mant = scaled.round() as u64;
+        let mut exp = e;
+        if mant == 1 << p {
+            exp += 1;
+            // keep normalised: mant back to p bits
+            mant = 1 << (p - 1);
+        }
+        if exp > fmt.emax() {
+            return Self::saturate(negative, fmt);
+        }
+        if exp < fmt.emin() {
+            return Self::zero(); // flush (all GPU formats flush)
+        }
+        SoftFp { negative, exp, mant, inf: false }
+    }
+
+    pub fn from_f32(v: f32, fmt: Format) -> Self {
+        Self::from_f64(v as f64, fmt)
+    }
+
+    /// Exact value as f64 (p <= 24 and |exp| <= 128: always exact).
+    pub fn to_f64(&self, fmt: Format) -> f64 {
+        if self.inf {
+            return if self.negative { f64::NEG_INFINITY } else { f64::INFINITY };
+        }
+        if self.mant == 0 {
+            return 0.0;
+        }
+        let p = fmt.precision() as i32;
+        let v = self.mant as f64 * pow2(self.exp - p + 1);
+        if self.negative { -v } else { v }
+    }
+
+    fn saturate(negative: bool, fmt: Format) -> Self {
+        if fmt.has_specials {
+            SoftFp { negative, exp: 0, mant: 0, inf: true }
+        } else {
+            let p = fmt.precision();
+            SoftFp { negative, exp: fmt.emax(), mant: (1 << p) - 1, inf: false }
+        }
+    }
+
+    /// One ulp of this value, as f64 (for error measurement).
+    pub fn ulp(&self, fmt: Format) -> f64 {
+        let p = fmt.precision() as i32;
+        pow2(self.exp - p + 1)
+    }
+}
+
+fn pow2(e: i32) -> f64 {
+    (e as f64).exp2()
+}
+
+/// Addition/subtraction in the described datapath.
+///
+/// Alignment keeps `guard_bits` extra bits of the smaller operand
+/// (plus a sticky OR if configured); everything below is **discarded
+/// before the add**, exactly like a narrow ALU. The final result is
+/// rounded to p bits with `mode`.
+pub fn add(a: SoftFp, b: SoftFp, fmt: Format, r: OpRounding) -> SoftFp {
+    if a.inf || b.inf {
+        // saturating semantics are enough for our workloads
+        return if a.inf { a } else { b };
+    }
+    if a.is_zero() {
+        return b;
+    }
+    if b.is_zero() {
+        return a;
+    }
+    let p = fmt.precision();
+    // Effective extra resolution: the guard bits, plus one sticky
+    // position when the datapath keeps a sticky bit. Folding the sticky
+    // OR into the LSB is the classic G/R/S construction and makes
+    // effective subtraction borrow correctly.
+    let g = r.guard_bits + r.sticky as u32;
+    // order by magnitude (exp, then mant)
+    let (big, small) = if (a.exp, a.mant) >= (b.exp, b.mant) { (a, b) } else { (b, a) };
+    let shift = (big.exp - small.exp) as u32;
+
+    // Work at resolution 2^(big.exp - p + 1 - g): big scaled by 2^g.
+    let effective_sub = big.negative != small.negative;
+    let big_m = (big.mant as u128) << g;
+    let small_m = if shift <= g {
+        (small.mant as u128) << (g - shift)
+    } else {
+        let drop = shift - g; // bits discarded before the add
+        let (kept, lost_any) = if drop >= 64 {
+            (0u128, small.mant != 0)
+        } else {
+            ((small.mant as u128) >> drop, small.mant & ((1u64 << drop) - 1) != 0)
+        };
+        if r.sticky && lost_any {
+            match r.mode {
+                // RNE/RNA: classic sticky-OR into the lowest kept bit
+                RoundMode::NearestEven | RoundMode::NearestAway => kept | 1,
+                // ideal chop (round toward zero of the *exact* result):
+                // on effective subtraction the small operand must round
+                // *up* in magnitude so the difference floors correctly
+                RoundMode::Truncate => kept + effective_sub as u128,
+            }
+        } else {
+            kept
+        }
+    };
+
+    let (sum, negative) = if big.negative == small.negative {
+        (big_m + small_m, big.negative)
+    } else if big_m >= small_m {
+        (big_m - small_m, big.negative)
+    } else {
+        (small_m - big_m, small.negative)
+    };
+
+    if sum == 0 {
+        return SoftFp::zero();
+    }
+
+    // normalise: sum has some bit-length L; target p bits.
+    let l = 128 - sum.leading_zeros();
+    let exp = big.exp + l as i32 - (p + g) as i32;
+    round_to_format(negative, sum, l, exp, false, fmt, r.mode)
+}
+
+/// Subtraction.
+pub fn sub(a: SoftFp, b: SoftFp, fmt: Format, r: OpRounding) -> SoftFp {
+    let nb = SoftFp { negative: !b.negative, ..b };
+    add(a, nb, fmt, r)
+}
+
+/// Multiplication: exact 2p-bit product, then the datapath keeps
+/// `guard_bits` bits beyond p (sticky optional) and rounds.
+pub fn mul(a: SoftFp, b: SoftFp, fmt: Format, r: OpRounding) -> SoftFp {
+    if a.inf || b.inf {
+        return SoftFp { negative: a.negative != b.negative, exp: 0, mant: 0, inf: true };
+    }
+    if a.is_zero() || b.is_zero() {
+        return SoftFp::zero();
+    }
+    let p = fmt.precision();
+    let prod = (a.mant as u128) * (b.mant as u128); // 2p or 2p-1 bits
+    let l = 128 - prod.leading_zeros();
+    let exp = a.exp + b.exp + l as i32 - (2 * p) as i32 + 1;
+    // emulate a datapath that only *sees* p + guard (+ sticky) bits:
+    let keep = p + r.guard_bits + r.sticky as u32;
+    let (seen, seen_len) = if l > keep {
+        let drop = l - keep;
+        let mut kept = prod >> drop;
+        let lost = prod & ((1u128 << drop) - 1);
+        if r.sticky && lost != 0 {
+            kept |= 1;
+        }
+        (kept, keep)
+    } else {
+        (prod, l)
+    };
+    round_to_format(a.negative != b.negative, seen, seen_len, exp, false, fmt, r.mode)
+}
+
+/// Reciprocal: GPUs used table+Newton units producing a faithful (not
+/// correctly rounded) reciprocal. We model it as the exactly-computed
+/// reciprocal kept to `p + guard` bits, then rounded with `mode`.
+pub fn recip(b: SoftFp, fmt: Format, r: OpRounding) -> SoftFp {
+    if b.inf {
+        return SoftFp::zero();
+    }
+    if b.is_zero() {
+        return SoftFp::saturate(b.negative, fmt);
+    }
+    let p = fmt.precision();
+    let keep = p + r.guard_bits + r.sticky as u32;
+    // 1/b = 2^k / mant with k chosen so the quotient has `keep+1` bits
+    // quotient q = floor(2^s / mant), s = keep + bits(mant)
+    let s = keep + p; // mant has exactly p bits
+    let num: u128 = 1u128 << s;
+    let mut q = num / b.mant as u128;
+    let rem = num % b.mant as u128;
+    if r.sticky && rem != 0 {
+        q |= 1;
+    }
+    let l = 128 - q.leading_zeros();
+    // value = q · 2^(-s) · 2^(-(exp - p + 1))  =>  exponent algebra:
+    let exp = -(b.exp - p as i32 + 1) - s as i32 + l as i32 - 1;
+    round_to_format(b.negative, q, l, exp, false, fmt, r.mode)
+}
+
+/// Division as the paper observed GPUs do it: reciprocal **then**
+/// multiply — two roundings, hence Table 2's division intervals
+/// exceeding ±1 ulp.
+pub fn div(a: SoftFp, b: SoftFp, fmt: Format, r_recip: OpRounding, r_mul: OpRounding) -> SoftFp {
+    let rb = recip(b, fmt, r_recip);
+    mul(a, rb, fmt, r_mul)
+}
+
+/// Round a normalised intermediate (`mant_ext` with `len` significant
+/// bits, value `± mant_ext · 2^(exp - len + 1)` … conceptually) to the
+/// format's p bits with the given mode, then clamp/flush to the format.
+fn round_to_format(
+    negative: bool, mant_ext: u128, len: u32, exp: i32, sticky_below: bool,
+    fmt: Format, mode: RoundMode,
+) -> SoftFp {
+    debug_assert!(mant_ext != 0);
+    let p = fmt.precision();
+    let (mut mant, mut exp) = if len > p {
+        let drop = len - p;
+        let kept = (mant_ext >> drop) as u64;
+        let dropped = mant_ext & ((1u128 << drop) - 1);
+        let half = 1u128 << (drop - 1);
+        let increment = match mode {
+            RoundMode::Truncate => false,
+            RoundMode::NearestEven => {
+                dropped > half
+                    || (dropped == half && (sticky_below || kept & 1 == 1))
+            }
+            RoundMode::NearestAway => dropped > half || (dropped == half),
+        };
+        let m = kept + increment as u64;
+        (m, exp)
+    } else {
+        ((mant_ext as u64) << (p - len), exp)
+    };
+    // post-round carry
+    if mant == 1 << p {
+        exp += 1;
+        mant = 1 << (p - 1);
+    }
+    if mant == 0 {
+        return SoftFp::zero();
+    }
+    if exp > fmt.emax() {
+        return SoftFp::saturate(negative, fmt);
+    }
+    if exp < fmt.emin() {
+        return SoftFp::zero(); // flush
+    }
+    SoftFp { negative, exp, mant, inf: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const F: Format = Format::NV32;
+
+    fn sf(v: f64) -> SoftFp {
+        SoftFp::from_f64(v, F)
+    }
+
+    #[test]
+    fn roundtrip_f32_values() {
+        let mut rng = Rng::new(81);
+        for _ in 0..100_000 {
+            let v = rng.spread_f32(-100, 100);
+            assert_eq!(sf(v as f64).to_f64(F), v as f64, "v={v}");
+        }
+    }
+
+    #[test]
+    fn ieee_add_matches_hardware_f32() {
+        let mut rng = Rng::new(82);
+        for _ in 0..100_000 {
+            let a = rng.spread_f32(-30, 30);
+            let b = rng.spread_f32(-30, 30);
+            let got = add(sf(a as f64), sf(b as f64), F, OpRounding::IEEE).to_f64(F);
+            let want = (a + b) as f64;
+            assert_eq!(got, want, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn ieee_mul_matches_hardware_f32() {
+        let mut rng = Rng::new(83);
+        for _ in 0..100_000 {
+            let a = rng.spread_f32(-30, 30);
+            let b = rng.spread_f32(-30, 30);
+            let got = mul(sf(a as f64), sf(b as f64), F, OpRounding::IEEE).to_f64(F);
+            let want = (a * b) as f64;
+            assert_eq!(got, want, "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn ideal_chop_add_error_interval() {
+        // ideal chopping (wide datapath + truncate): error in (-1, 0] ulp
+        // and |result| <= |exact| (paper Table 2 "Chopped" column)
+        let chop = OpRounding { guard_bits: 8, sticky: true, mode: RoundMode::Truncate };
+        let mut rng = Rng::new(84);
+        for _ in 0..100_000 {
+            let a = rng.spread_f32(-8, 8) as f64;
+            let b = rng.spread_f32(-8, 8) as f64;
+            let r = add(sf(a), sf(b), F, chop);
+            // magnitude convention: chop error in (-1, 0]
+            let e = (r.to_f64(F).abs() - (a + b).abs()) / r.ulp(F);
+            assert!(e <= 0.0 && e > -1.0, "a={a} b={b} e={e}");
+            // truncation moves toward zero
+            assert!(r.to_f64(F).abs() <= (a + b).abs(), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn no_guard_chop_add_error_can_go_positive() {
+        // the *hardware* no-guard chop (OpRounding::CHOP) pre-truncates
+        // the aligned operand, so effective subtraction can overshoot:
+        // error spans (-1, 1) — this is the R300 subtraction row.
+        let mut rng = Rng::new(184);
+        let mut saw_positive = false;
+        for _ in 0..200_000 {
+            let a = rng.spread_f32(-8, 8) as f64;
+            let b = rng.spread_f32(-8, 8) as f64;
+            // same-binade results only: once the result drops a binade, a
+            // no-guard adder's error in result-ulps is unbounded
+            // (Goldberg) — the bounded (-1, 1) claim is for the rounding
+            // behaviour itself
+            let scale = a.abs().max(b.abs());
+            if (a + b).abs().log2().floor() != scale.log2().floor() {
+                continue;
+            }
+            let r = add(sf(a), sf(b), F, OpRounding::CHOP);
+            let e = (r.to_f64(F).abs() - (a + b).abs()) / r.ulp(F);
+            assert!(e.abs() < 1.0 + 1e-9, "a={a} b={b} e={e}");
+            if e > 0.25 {
+                saw_positive = true;
+            }
+        }
+        assert!(saw_positive, "expected positive errors from pre-truncation");
+    }
+
+    #[test]
+    fn guard_bit_preserves_sterbenz() {
+        // y/2 <= x <= 2y  =>  x - y exact with >= 1 guard bit
+        let mut rng = Rng::new(85);
+        for _ in 0..100_000 {
+            let y = rng.spread_f32(-8, 8).abs() as f64;
+            let x = y * rng.uniform(0.5, 2.0);
+            let xs = sf(x);
+            let ys = sf(y);
+            let r = sub(xs, ys, F, OpRounding::GUARD_TRUNC);
+            let want = xs.to_f64(F) - ys.to_f64(F);
+            assert_eq!(r.to_f64(F), want, "x={x} y={y}");
+        }
+    }
+
+    #[test]
+    fn no_guard_bit_breaks_sterbenz() {
+        // R300-style g=0: find a case where Sterbenz fails
+        let x = sf(1.0 + 2f64.powi(-23)); // 1 + ulp
+        let y = sf(2f64.powi(-23) * 1.5); // needs alignment shift of 23
+        let r = sub(x, y, F, OpRounding::CHOP);
+        let want = x.to_f64(F) - y.to_f64(F);
+        // with the half-ulp tail discarded pre-subtract, result is wrong
+        assert_ne!(r.to_f64(F), want);
+    }
+
+    #[test]
+    fn mul_guard_trunc_is_faithful() {
+        // |error| < 1 ulp and the two neighbours bracket the true product
+        let mut rng = Rng::new(86);
+        for _ in 0..100_000 {
+            let a = rng.spread_f32(-8, 8) as f64;
+            let b = rng.spread_f32(-8, 8) as f64;
+            let r = mul(sf(a), sf(b), F,
+                        OpRounding { guard_bits: 1, sticky: false, mode: RoundMode::NearestEven });
+            let err = (r.to_f64(F) - a * b) / r.ulp(F);
+            assert!(err.abs() < 1.0, "a={a} b={b} err={err}");
+        }
+    }
+
+    #[test]
+    fn recip_then_mul_div_is_worse_than_one_ulp_sometimes() {
+        let mut rng = Rng::new(87);
+        let r_op = OpRounding::GUARD_TRUNC;
+        let mut worst: f64 = 0.0;
+        for _ in 0..200_000 {
+            let a = rng.spread_f32(-8, 8) as f64;
+            let b = rng.spread_f32(-8, 8) as f64;
+            let q = div(sf(a), sf(b), F, r_op, r_op);
+            let err = (q.to_f64(F) - a / b) / q.ulp(F);
+            worst = worst.max(err.abs());
+        }
+        assert!(worst > 1.0, "double rounding should exceed 1 ulp, worst={worst}");
+        assert!(worst < 4.0, "but stay small, worst={worst}");
+    }
+
+    #[test]
+    fn ati24_quantizes_to_17_bits() {
+        let v = std::f32::consts::PI as f64;
+        let q = SoftFp::from_f64(v, Format::ATI24);
+        let back = q.to_f64(Format::ATI24);
+        // 17-bit precision: relative error <= 2^-17
+        assert!(((back - v) / v).abs() <= 2f64.powi(-17));
+        assert_ne!(back, v);
+    }
+
+    #[test]
+    fn saturation_without_specials() {
+        let big = SoftFp::from_f64(1e30, Format::ATI24);
+        assert!(!big.inf);
+        assert_eq!(big.exp, Format::ATI24.emax());
+        let nv = SoftFp::from_f64(1e300, Format::NV32);
+        assert!(nv.inf);
+    }
+
+    #[test]
+    fn subnormals_flush_to_zero() {
+        let tiny = SoftFp::from_f64(1e-40, Format::NV32); // subnormal in f32
+        assert!(tiny.is_zero());
+        // but IEEE32 format keeps... also flushes? IEEE32 has flush_subnormals=false,
+        // but our SoftFp doesn't model subnormals; from_f64 flushes below emin.
+        // Document: IEEE32 reference is used for normal-range tests only.
+    }
+
+    #[test]
+    fn add_commutes() {
+        let mut rng = Rng::new(88);
+        for r in [OpRounding::IEEE, OpRounding::CHOP, OpRounding::GUARD_TRUNC] {
+            for _ in 0..20_000 {
+                let a = sf(rng.spread_f32(-8, 8) as f64);
+                let b = sf(rng.spread_f32(-8, 8) as f64);
+                assert_eq!(add(a, b, F, r), add(b, a, F, r));
+            }
+        }
+    }
+
+    #[test]
+    fn exact_cancellation_gives_zero() {
+        let a = sf(3.25);
+        let r = sub(a, a, F, OpRounding::CHOP);
+        assert!(r.is_zero());
+    }
+}

@@ -1,0 +1,248 @@
+//! Mini-Brook assembler: parse textual fragment programs into
+//! [`super::shader::Program`]s.
+//!
+//! The paper wrote its operators in Brook and then *hand-corrected the
+//! generated fragment assembly* when the DirectX backend miscompiled the
+//! EFT patterns (§5). This module gives that workflow a concrete form:
+//! operators can be authored/inspected as assembly text, round-tripped,
+//! and executed on any [`super::models::GpuModel`].
+//!
+//! Grammar (one instruction per line, `;` comments):
+//!
+//! ```text
+//! ; add12 fragment program
+//! in    2                 ; number of input streams
+//! out   2                 ; number of output streams
+//! ldin  r0, s0            ; r0 = input_stream[0]
+//! ldc   r1, 4097.0        ; r1 = constant
+//! add   r2, r0, r1
+//! sub   r3, r2, r0
+//! mul   r4, r0, r1
+//! mad   r5, r0, r1, r2    ; r5 = round(round(r0*r1) + r2)
+//! rcp   r6, r0
+//! mov   r7, r6
+//! stout s0, r2            ; output_stream[0] = r2
+//! ```
+
+use super::shader::{Instr, Program};
+
+/// Assembly parse error: line number (1-based) + message.
+#[derive(Debug, PartialEq, Eq)]
+pub struct AsmError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "asm error on line {}: {}", self.line, self.message)
+    }
+}
+
+fn err(line: usize, m: impl Into<String>) -> AsmError {
+    AsmError { line, message: m.into() }
+}
+
+fn reg(tok: &str, line: usize) -> Result<u8, AsmError> {
+    tok.strip_prefix('r')
+        .and_then(|n| n.parse::<u8>().ok())
+        .filter(|&n| n < 32)
+        .ok_or_else(|| err(line, format!("bad register '{tok}' (r0..r31)")))
+}
+
+fn stream(tok: &str, line: usize) -> Result<u8, AsmError> {
+    tok.strip_prefix('s')
+        .and_then(|n| n.parse::<u8>().ok())
+        .ok_or_else(|| err(line, format!("bad stream '{tok}' (s0..)")))
+}
+
+/// Assemble a textual fragment program.
+pub fn assemble(name: &str, text: &str) -> Result<Program, AsmError> {
+    let mut n_in: Option<usize> = None;
+    let mut n_out: Option<usize> = None;
+    let mut code = Vec::new();
+
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = raw.split(';').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let cleaned = line.replace(',', " ");
+        let toks: Vec<&str> = cleaned.split_whitespace().collect();
+        let args = &toks[1..];
+        let want = |n: usize| -> Result<(), AsmError> {
+            if args.len() == n {
+                Ok(())
+            } else {
+                Err(err(line_no, format!("'{}' wants {n} operands, got {}", toks[0], args.len())))
+            }
+        };
+        match toks[0] {
+            "in" => {
+                want(1)?;
+                n_in = Some(args[0].parse().map_err(|_| err(line_no, "bad count"))?);
+            }
+            "out" => {
+                want(1)?;
+                n_out = Some(args[0].parse().map_err(|_| err(line_no, "bad count"))?);
+            }
+            "ldin" => {
+                want(2)?;
+                code.push(Instr::LoadIn { dst: reg(args[0], line_no)?, src: stream(args[1], line_no)? });
+            }
+            "ldc" => {
+                want(2)?;
+                let value = args[1].parse::<f64>().map_err(|_| err(line_no, "bad constant"))?;
+                code.push(Instr::LoadConst { dst: reg(args[0], line_no)?, value });
+            }
+            "stout" => {
+                want(2)?;
+                code.push(Instr::StoreOut { dst: stream(args[0], line_no)?, src: reg(args[1], line_no)? });
+            }
+            "mov" => {
+                want(2)?;
+                code.push(Instr::Mov { dst: reg(args[0], line_no)?, src: reg(args[1], line_no)? });
+            }
+            "add" | "sub" | "mul" => {
+                want(3)?;
+                let (dst, a, b) = (reg(args[0], line_no)?, reg(args[1], line_no)?, reg(args[2], line_no)?);
+                code.push(match toks[0] {
+                    "add" => Instr::Add { dst, a, b },
+                    "sub" => Instr::Sub { dst, a, b },
+                    _ => Instr::Mul { dst, a, b },
+                });
+            }
+            "mad" => {
+                want(4)?;
+                code.push(Instr::Mad {
+                    dst: reg(args[0], line_no)?,
+                    a: reg(args[1], line_no)?,
+                    b: reg(args[2], line_no)?,
+                    c: reg(args[3], line_no)?,
+                });
+            }
+            "rcp" => {
+                want(2)?;
+                code.push(Instr::Rcp { dst: reg(args[0], line_no)?, a: reg(args[1], line_no)? });
+            }
+            other => return Err(err(line_no, format!("unknown mnemonic '{other}'"))),
+        }
+    }
+
+    Ok(Program {
+        name: name.to_string(),
+        n_in: n_in.ok_or_else(|| err(0, "missing 'in' directive"))?,
+        n_out: n_out.ok_or_else(|| err(0, "missing 'out' directive"))?,
+        code,
+    })
+}
+
+/// Disassemble a program back to text (round-trip format).
+pub fn disassemble(p: &Program) -> String {
+    let mut s = format!("; {}\nin    {}\nout   {}\n", p.name, p.n_in, p.n_out);
+    for ins in &p.code {
+        let line = match *ins {
+            Instr::LoadIn { dst, src } => format!("ldin  r{dst}, s{src}"),
+            Instr::LoadConst { dst, value } => format!("ldc   r{dst}, {value}"),
+            Instr::StoreOut { dst, src } => format!("stout s{dst}, r{src}"),
+            Instr::Mov { dst, src } => format!("mov   r{dst}, r{src}"),
+            Instr::Add { dst, a, b } => format!("add   r{dst}, r{a}, r{b}"),
+            Instr::Sub { dst, a, b } => format!("sub   r{dst}, r{a}, r{b}"),
+            Instr::Mul { dst, a, b } => format!("mul   r{dst}, r{a}, r{b}"),
+            Instr::Mad { dst, a, b, c } => format!("mad   r{dst}, r{a}, r{b}, r{c}"),
+            Instr::Rcp { dst, a } => format!("rcp   r{dst}, r{a}"),
+        };
+        s.push_str(&line);
+        s.push('\n');
+    }
+    s
+}
+
+/// The paper's Add12 as assembly text (the form §5's hand-corrections
+/// were applied in).
+pub const ADD12_ASM: &str = "\
+; Add12 — Knuth two-sum, branch-free (paper Th. 2)
+in    2
+out   2
+ldin  r0, s0        ; a
+ldin  r1, s1        ; b
+add   r2, r0, r1    ; s = a + b
+sub   r3, r2, r0    ; bb = s - a
+sub   r4, r2, r3    ; s - bb
+sub   r4, r0, r4    ; a - (s - bb)   <- the sequence DirectX folded (§5)
+sub   r5, r1, r3    ; b - bb
+add   r6, r4, r5    ; err
+stout s0, r2
+stout s1, r6
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{algorithms, shader, GpuModel};
+    use crate::util::Rng;
+
+    #[test]
+    fn assembles_add12_and_matches_algorithm() {
+        let prog = assemble("add12", ADD12_ASM).unwrap();
+        assert_eq!(prog.n_in, 2);
+        assert_eq!(prog.n_out, 2);
+        assert_eq!(prog.flops(), 6);
+        let m = GpuModel::NV35;
+        let mut rng = Rng::new(141);
+        let a: Vec<f64> = (0..256).map(|_| rng.spread_f32(-8, 8) as f64).collect();
+        let b: Vec<f64> = (0..256).map(|_| rng.spread_f32(-8, 8) as f64).collect();
+        let out = shader::run(&m, &prog, &[&a, &b]).unwrap();
+        for i in 0..a.len() {
+            let (s, e) = algorithms::add12(&m, m.quantize(a[i]), m.quantize(b[i]));
+            assert_eq!(out[0][i], m.to_f64(s));
+            assert_eq!(out[1][i], m.to_f64(e));
+        }
+    }
+
+    #[test]
+    fn roundtrip_disassemble_assemble() {
+        let progs = [
+            shader::programs::add12(),
+            shader::programs::add22(),
+            shader::programs::mul12(24),
+            shader::programs::base_mad(),
+        ];
+        let m = GpuModel::NV35;
+        let mut rng = Rng::new(142);
+        for p in progs {
+            let text = disassemble(&p);
+            let p2 = assemble(&p.name, &text).unwrap();
+            assert_eq!(p2.flops(), p.flops(), "{}", p.name);
+            // behavioural equality on random streams
+            let inputs: Vec<Vec<f64>> = (0..p.n_in)
+                .map(|_| (0..64).map(|_| rng.spread_f32(-6, 6) as f64).collect())
+                .collect();
+            let refs: Vec<&[f64]> = inputs.iter().map(Vec::as_slice).collect();
+            let o1 = shader::run(&m, &p, &refs).unwrap();
+            let o2 = shader::run(&m, &p2, &refs).unwrap();
+            assert_eq!(o1, o2, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn parse_errors_are_located() {
+        let e = assemble("x", "in 2\nout 1\nfrobnicate r0\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        assert!(e.to_string().contains("frobnicate"));
+        let e = assemble("x", "in 2\nout 1\nadd r0, r1\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        let e = assemble("x", "in 2\nout 1\nadd r99, r0, r1\n").unwrap_err();
+        assert!(e.message.contains("register"));
+        let e = assemble("x", "add r0, r1, r2\n").unwrap_err();
+        assert!(e.message.contains("'in' directive"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let p = assemble("t", "; hi\n\nin 1\nout 1\nldin r0, s0 ; load\nstout s0, r0\n")
+            .unwrap();
+        assert_eq!(p.code.len(), 2);
+    }
+}

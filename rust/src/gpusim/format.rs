@@ -1,0 +1,129 @@
+//! Storage formats of the paper's Table 1.
+//!
+//! | Format name   | Sign | Exponent | Mantissa | Specials |
+//! |---------------|------|----------|----------|----------|
+//! | Nvidia 16-bit |  1   |    5     |    10    | yes      |
+//! | Nvidia 32-bit |  1   |    8     |    23    | yes      |
+//! | ATI 16-bit    |  1   |    5     |    10    | no       |
+//! | ATI 24-bit    |  1   |    7     |    16    | no       |
+//! | ATI 32-bit    |  1   |    8     |    23    | ?        |
+//!
+//! A format fixes *storage*; the per-operation rounding behaviour lives
+//! in [`super::models::GpuModel`]. Subnormals are flushed to zero on all
+//! GPU formats (paper §1.2: "denormal number which are typically flushed
+//! to zero").
+
+/// A binary floating-point storage format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Format {
+    /// Exponent field width in bits.
+    pub exp_bits: u32,
+    /// Explicit mantissa (fraction) bits — precision is `mant_bits + 1`.
+    pub mant_bits: u32,
+    /// Whether Inf/NaN are representable (Table 1 "support for special
+    /// values"). When false, overflow saturates to the max finite value.
+    pub has_specials: bool,
+    /// Flush subnormal results (and inputs) to zero.
+    pub flush_subnormals: bool,
+}
+
+impl Format {
+    /// Nvidia 32-bit (the paper's main target: NV3x/NV4x `float`).
+    pub const NV32: Format =
+        Format { exp_bits: 8, mant_bits: 23, has_specials: true, flush_subnormals: true };
+    /// Nvidia 16-bit `half`.
+    pub const NV16: Format =
+        Format { exp_bits: 5, mant_bits: 10, has_specials: true, flush_subnormals: true };
+    /// ATI 16-bit.
+    pub const ATI16: Format =
+        Format { exp_bits: 5, mant_bits: 10, has_specials: false, flush_subnormals: true };
+    /// ATI 24-bit (R300 internal compute format).
+    pub const ATI24: Format =
+        Format { exp_bits: 7, mant_bits: 16, has_specials: false, flush_subnormals: true };
+    /// ATI 32-bit (X1k storage format).
+    pub const ATI32: Format =
+        Format { exp_bits: 8, mant_bits: 23, has_specials: false, flush_subnormals: true };
+    /// IEEE binary32 with subnormals (CPU reference).
+    pub const IEEE32: Format =
+        Format { exp_bits: 8, mant_bits: 23, has_specials: true, flush_subnormals: false };
+
+    /// Precision p in bits (including the implicit leading 1).
+    pub const fn precision(&self) -> u32 {
+        self.mant_bits + 1
+    }
+
+    /// Exponent bias.
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Maximum unbiased exponent of a finite value.
+    pub const fn emax(&self) -> i32 {
+        if self.has_specials {
+            (1 << (self.exp_bits - 1)) - 1 // top code reserved for inf/nan
+        } else {
+            1 << (self.exp_bits - 1) // all codes are finite
+        }
+    }
+
+    /// Minimum unbiased exponent of a normal value.
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Table 1 row name.
+    pub fn name(&self) -> &'static str {
+        match (self.exp_bits, self.mant_bits, self.has_specials, self.flush_subnormals) {
+            (8, 23, true, true) => "Nvidia 32-bit",
+            (5, 10, true, true) => "Nvidia 16-bit",
+            (5, 10, false, true) => "ATI 16-bit",
+            (7, 16, false, true) => "ATI 24-bit",
+            (8, 23, false, true) => "ATI 32-bit",
+            (8, 23, true, false) => "IEEE binary32",
+            _ => "custom",
+        }
+    }
+
+    /// All Table 1 formats, for `ffgpu info --formats`.
+    pub fn table1() -> Vec<Format> {
+        vec![Self::NV16, Self::NV32, Self::ATI16, Self::ATI24, Self::ATI32]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nv32_matches_binary32_geometry() {
+        assert_eq!(Format::NV32.precision(), 24);
+        assert_eq!(Format::NV32.bias(), 127);
+        assert_eq!(Format::NV32.emax(), 127);
+        assert_eq!(Format::NV32.emin(), -126);
+    }
+
+    #[test]
+    fn ati24_geometry() {
+        assert_eq!(Format::ATI24.precision(), 17);
+        assert_eq!(Format::ATI24.bias(), 63);
+        // no specials: full exponent range is finite
+        assert_eq!(Format::ATI24.emax(), 64);
+    }
+
+    #[test]
+    fn half_precision_geometry() {
+        assert_eq!(Format::NV16.precision(), 11);
+        assert_eq!(Format::NV16.bias(), 15);
+        assert_eq!(Format::NV16.emin(), -14);
+    }
+
+    #[test]
+    fn table1_has_five_rows_with_names() {
+        let t = Format::table1();
+        assert_eq!(t.len(), 5);
+        let names: Vec<_> = t.iter().map(|f| f.name()).collect();
+        assert!(names.contains(&"Nvidia 32-bit"));
+        assert!(names.contains(&"ATI 24-bit"));
+        assert!(!names.contains(&"custom"));
+    }
+}

@@ -1,0 +1,36 @@
+//! GPU arithmetic simulator — the substrate replacing the paper's
+//! 2006-era graphics hardware (DESIGN.md substitution table).
+//!
+//! The paper's entire soundness story rests on *which* non-IEEE rounding
+//! a GPU performs: Table 2 characterises ATI R300 and Nvidia NV35 with a
+//! Paranoia-derived tool, and §4 proves Add12/Split/Mul12 correct under
+//! "faithful rounding + guard bit" (the Nvidia behaviour). Since that
+//! hardware no longer exists, we rebuild its arithmetic bit-level:
+//!
+//! * [`format`] — storage formats of the paper's Table 1 (sign/exponent/
+//!   mantissa widths, specials support, subnormal flushing);
+//! * [`arith`] — parameterised soft-float add/sub/mul/recip/div with
+//!   explicit guard-bit count, sticky-bit, and rounding mode — the knobs
+//!   that distinguish R300 from NV35 from IEEE;
+//! * [`models`] — named GPU profiles (R300, NV35, NV40, IEEE-RN,
+//!   truncation) matching Table 2's observed error intervals;
+//! * [`algorithms`] — the paper's §4 algorithms executed *on the
+//!   simulated arithmetic*: validates Theorems 1–6 under GPU conditions
+//!   (and shows Add12 failing on R300, which has no guard bit — the
+//!   negative result the paper's §6.1 anomaly hints at);
+//! * [`shader`] — a mini-Brook stream VM: branch-free register programs
+//!   applied to SoA streams, the form the paper's fragment programs take
+//!   (Figure 1's programmable units, §5's Brook implementation);
+//! * [`paranoia`] — the measurement harness regenerating Table 2.
+
+pub mod algorithms;
+pub mod asm;
+pub mod arith;
+pub mod format;
+pub mod models;
+pub mod paranoia;
+pub mod shader;
+
+pub use arith::SoftFp;
+pub use format::Format;
+pub use models::GpuModel;

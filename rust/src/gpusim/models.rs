@@ -1,0 +1,186 @@
+//! Named GPU arithmetic profiles (the rows and columns of Table 2).
+//!
+//! A [`GpuModel`] bundles a storage [`Format`] with one [`OpRounding`]
+//! per operator class. The presets reproduce the *behaviour classes* the
+//! paper measured; the exact interval endpoints of Table 2 are
+//! chip-specific analogue of e.g. the NV35's internal mul datapath, so
+//! EXPERIMENTS.md compares classes (exact / chopped / faithful / beyond
+//! 1 ulp for div), not fourth-decimal endpoints.
+
+use super::arith::{self, OpRounding, RoundMode, SoftFp};
+use super::format::Format;
+
+/// One GPU's arithmetic personality.
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    pub name: &'static str,
+    pub format: Format,
+    /// Addition/subtraction datapath.
+    pub add: OpRounding,
+    /// Multiplication datapath.
+    pub mul: OpRounding,
+    /// Reciprocal unit (division = recip + mul, as the paper observes).
+    pub recip: OpRounding,
+    /// True when the adder keeps a guard bit (the paper's key Nvidia
+    /// assumption, Th. 1–2).
+    pub has_guard_bit: bool,
+}
+
+impl GpuModel {
+    /// IEEE-754 round-to-nearest reference ("Exact rounding" column).
+    pub const IEEE: GpuModel = GpuModel {
+        name: "ieee-rn",
+        format: Format::NV32,
+        add: OpRounding::IEEE,
+        mul: OpRounding::IEEE,
+        recip: OpRounding::IEEE,
+        has_guard_bit: true,
+    };
+
+    /// Theoretical chopped arithmetic ("Chopped" column: (-1, 0]).
+    pub const CHOPPED: GpuModel = GpuModel {
+        name: "chopped",
+        format: Format::NV32,
+        add: OpRounding { guard_bits: 8, sticky: true, mode: RoundMode::Truncate },
+        mul: OpRounding { guard_bits: 8, sticky: true, mode: RoundMode::Truncate },
+        recip: OpRounding { guard_bits: 8, sticky: true, mode: RoundMode::Truncate },
+        has_guard_bit: true,
+    };
+
+    /// ATI R300: 24-bit internal format, **no guard bit** on the adder
+    /// (subtraction error spans (-1, 1)), faithful multiplier.
+    pub const R300: GpuModel = GpuModel {
+        name: "r300",
+        format: Format::ATI24,
+        add: OpRounding { guard_bits: 0, sticky: false, mode: RoundMode::Truncate },
+        mul: OpRounding { guard_bits: 2, sticky: false, mode: RoundMode::NearestEven },
+        recip: OpRounding { guard_bits: 1, sticky: false, mode: RoundMode::NearestEven },
+        has_guard_bit: false,
+    };
+
+    /// Nvidia NV35: 32-bit format, truncated addition **with a guard
+    /// bit** (subtraction error within (-0.75, 0.75) in the paper's
+    /// measurement), faithful multiplier.
+    pub const NV35: GpuModel = GpuModel {
+        name: "nv35",
+        format: Format::NV32,
+        add: OpRounding::GUARD_TRUNC,
+        mul: OpRounding { guard_bits: 1, sticky: false, mode: RoundMode::NearestEven },
+        recip: OpRounding { guard_bits: 1, sticky: false, mode: RoundMode::NearestEven },
+        has_guard_bit: true,
+    };
+
+    /// Nvidia NV40/G70 (7800GTX, the paper's benchmark GPU): same
+    /// arithmetic class as NV35 — the paper's §4.1 assumption "GPUs have
+    /// a guard bit for the addition/subtraction with a faithful
+    /// rounding … the case with latest Nvidia chips".
+    pub const NV40: GpuModel = GpuModel { name: "nv40", ..Self::NV35 };
+
+    /// All models the paranoia harness characterises.
+    pub fn all() -> Vec<GpuModel> {
+        vec![Self::IEEE, Self::CHOPPED, Self::R300, Self::NV35, Self::NV40]
+    }
+
+    pub fn by_name(name: &str) -> Option<GpuModel> {
+        Self::all().into_iter().find(|m| m.name == name)
+    }
+
+    // Operator wrappers ----------------------------------------------------
+
+    pub fn quantize(&self, v: f64) -> SoftFp {
+        SoftFp::from_f64(v, self.format)
+    }
+
+    pub fn to_f64(&self, v: SoftFp) -> f64 {
+        v.to_f64(self.format)
+    }
+
+    pub fn add(&self, a: SoftFp, b: SoftFp) -> SoftFp {
+        arith::add(a, b, self.format, self.add)
+    }
+
+    pub fn sub(&self, a: SoftFp, b: SoftFp) -> SoftFp {
+        arith::sub(a, b, self.format, self.add)
+    }
+
+    pub fn mul(&self, a: SoftFp, b: SoftFp) -> SoftFp {
+        arith::mul(a, b, self.format, self.mul)
+    }
+
+    pub fn div(&self, a: SoftFp, b: SoftFp) -> SoftFp {
+        arith::div(a, b, self.format, self.recip, self.mul)
+    }
+
+    /// Multiply-accumulate as two chained ops (the MAD unit of the 7800
+    /// pixel shader — §1.1 — rounds between the stages on this era of
+    /// hardware).
+    pub fn mad(&self, a: SoftFp, b: SoftFp, c: SoftFp) -> SoftFp {
+        self.add(self.mul(a, b), c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn ieee_model_matches_f32_ops() {
+        let m = GpuModel::IEEE;
+        let mut rng = Rng::new(91);
+        for _ in 0..50_000 {
+            let a = rng.spread_f32(-20, 20);
+            let b = rng.spread_f32(-20, 20);
+            assert_eq!(m.to_f64(m.add(m.quantize(a as f64), m.quantize(b as f64))),
+                       (a + b) as f64);
+            assert_eq!(m.to_f64(m.mul(m.quantize(a as f64), m.quantize(b as f64))),
+                       (a * b) as f64);
+        }
+    }
+
+    #[test]
+    fn r300_uses_24bit_storage() {
+        let m = GpuModel::R300;
+        let v = m.quantize(std::f32::consts::PI as f64);
+        // 17-bit significand
+        assert!(v.mant < 1 << 17);
+        assert!(v.mant >= 1 << 16);
+    }
+
+    #[test]
+    fn chopped_matches_paper_interval_class() {
+        let m = GpuModel::CHOPPED;
+        let mut rng = Rng::new(92);
+        for _ in 0..50_000 {
+            let a = rng.spread_f32(-8, 8) as f64;
+            let b = rng.spread_f32(-8, 8) as f64;
+            let scale = a.abs().max(b.abs());
+            if (a + b) == 0.0 || (a + b).abs().log2().floor() != scale.log2().floor() {
+                continue; // rounding probe, not a cancellation probe
+            }
+            let r = m.add(m.quantize(a), m.quantize(b));
+            // magnitude convention (paper "Chopped" column): (-1, 0]
+            let e = (m.to_f64(r).abs() - (a + b).abs()) / r.ulp(m.format);
+            assert!(e <= 1e-9 && e > -1.0, "a={a} b={b} e={e}");
+        }
+    }
+
+    #[test]
+    fn all_models_have_unique_names() {
+        let names: Vec<_> = GpuModel::all().iter().map(|m| m.name).collect();
+        let mut dedup = names.clone();
+        dedup.dedup();
+        assert_eq!(names.len(), 5);
+        assert!(GpuModel::by_name("nv35").is_some());
+        assert!(GpuModel::by_name("voodoo2").is_none());
+    }
+
+    #[test]
+    fn mad_is_mul_then_add() {
+        let m = GpuModel::NV35;
+        let a = m.quantize(1.5);
+        let b = m.quantize(2.25);
+        let c = m.quantize(-3.0);
+        assert_eq!(m.mad(a, b, c), m.add(m.mul(a, b), c));
+    }
+}

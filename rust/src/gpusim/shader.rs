@@ -1,0 +1,360 @@
+//! Mini-Brook: a branch-free stream VM over the simulated GPU arithmetic.
+//!
+//! The paper implements its operators as Brook kernels — fragment
+//! programs applied pointwise to streams (Figure 1's programmable pixel
+//! units). This module is that execution model: a register machine with
+//! **no control flow** (the instruction set simply has no branch — the
+//! property §4 insists on: "we should avoid tests even at the expense of
+//! extra computations"), running one program over SoA input streams.
+//!
+//! The float-float operators are provided as pre-assembled programs
+//! ([`programs`]); the integration tests check them against
+//! [`super::algorithms`] op-for-op.
+
+use super::arith::SoftFp;
+use super::models::GpuModel;
+
+/// Register index.
+pub type Reg = u8;
+
+/// Branch-free instruction set of the stream VM (a faithful subset of
+/// 2006 fragment-program arithmetic: MOV/ADD/SUB/MUL/MAD/RCP).
+#[derive(Clone, Copy, Debug)]
+pub enum Instr {
+    /// `r[dst] = input_stream[src][i]`
+    LoadIn { dst: Reg, src: u8 },
+    /// `r[dst] = constant`
+    LoadConst { dst: Reg, value: f64 },
+    /// `output_stream[dst][i] = r[src]`
+    StoreOut { dst: u8, src: Reg },
+    Mov { dst: Reg, src: Reg },
+    Add { dst: Reg, a: Reg, b: Reg },
+    Sub { dst: Reg, a: Reg, b: Reg },
+    Mul { dst: Reg, a: Reg, b: Reg },
+    /// Fused in sequence on this era of hardware: round(round(a*b) + c).
+    Mad { dst: Reg, a: Reg, b: Reg, c: Reg },
+    /// Reciprocal (the unit GPUs build division from).
+    Rcp { dst: Reg, a: Reg },
+}
+
+/// A fragment program: straight-line code, `n_in` input streams,
+/// `n_out` output streams.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub name: String,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub code: Vec<Instr>,
+}
+
+impl Program {
+    /// Number of arithmetic instructions (the paper's op-count economics:
+    /// Add12 = 6 ops, Mul12 = 17 ops with splits, etc.).
+    pub fn flops(&self) -> usize {
+        self.code
+            .iter()
+            .filter(|i| matches!(i,
+                Instr::Add { .. } | Instr::Sub { .. } | Instr::Mul { .. }
+                | Instr::Mad { .. } | Instr::Rcp { .. }))
+            .count()
+    }
+}
+
+/// Execution error.
+#[derive(Debug, PartialEq, Eq)]
+pub enum VmError {
+    BadStreamIndex,
+    LengthMismatch,
+}
+
+/// Run `prog` elementwise over `inputs` on the given GPU model.
+///
+/// Streams are `f64` views quantized into the model's format on load —
+/// exactly Brook's `streamRead` upload semantics.
+pub fn run(
+    model: &GpuModel, prog: &Program, inputs: &[&[f64]],
+) -> Result<Vec<Vec<f64>>, VmError> {
+    if inputs.len() != prog.n_in {
+        return Err(VmError::BadStreamIndex);
+    }
+    let n = inputs.first().map_or(0, |s| s.len());
+    if inputs.iter().any(|s| s.len() != n) {
+        return Err(VmError::LengthMismatch);
+    }
+    let mut outputs = vec![vec![0.0f64; n]; prog.n_out];
+    let mut regs = [SoftFp::zero(); 32];
+    for i in 0..n {
+        for ins in &prog.code {
+            match *ins {
+                Instr::LoadIn { dst, src } => {
+                    let s = inputs.get(src as usize).ok_or(VmError::BadStreamIndex)?;
+                    regs[dst as usize] = model.quantize(s[i]);
+                }
+                Instr::LoadConst { dst, value } => {
+                    regs[dst as usize] = model.quantize(value);
+                }
+                Instr::StoreOut { dst, src } => {
+                    let out =
+                        outputs.get_mut(dst as usize).ok_or(VmError::BadStreamIndex)?;
+                    out[i] = model.to_f64(regs[src as usize]);
+                }
+                Instr::Mov { dst, src } => regs[dst as usize] = regs[src as usize],
+                Instr::Add { dst, a, b } => {
+                    regs[dst as usize] = model.add(regs[a as usize], regs[b as usize])
+                }
+                Instr::Sub { dst, a, b } => {
+                    regs[dst as usize] = model.sub(regs[a as usize], regs[b as usize])
+                }
+                Instr::Mul { dst, a, b } => {
+                    regs[dst as usize] = model.mul(regs[a as usize], regs[b as usize])
+                }
+                Instr::Mad { dst, a, b, c } => {
+                    regs[dst as usize] =
+                        model.mad(regs[a as usize], regs[b as usize], regs[c as usize])
+                }
+                Instr::Rcp { dst, a } => {
+                    regs[dst as usize] =
+                        super::arith::recip(regs[a as usize], model.format, model.recip)
+                }
+            }
+        }
+    }
+    Ok(outputs)
+}
+
+/// Pre-assembled fragment programs for the paper's operators.
+pub mod programs {
+    use super::*;
+
+    /// Add12: streams (a, b) -> (s, err). 6 arithmetic ops, branch-free.
+    pub fn add12() -> Program {
+        use Instr::*;
+        Program {
+            name: "add12".into(),
+            n_in: 2,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },            // a
+                LoadIn { dst: 1, src: 1 },            // b
+                Add { dst: 2, a: 0, b: 1 },           // s = a + b
+                Sub { dst: 3, a: 2, b: 0 },           // bb = s - a
+                Sub { dst: 4, a: 2, b: 3 },           // s - bb
+                Sub { dst: 4, a: 0, b: 4 },           // a - (s - bb)
+                Sub { dst: 5, a: 1, b: 3 },           // b - bb
+                Add { dst: 6, a: 4, b: 5 },           // err
+                StoreOut { dst: 0, src: 2 },
+                StoreOut { dst: 1, src: 6 },
+            ],
+        }
+    }
+
+    /// SPLIT for precision p: stream (a) -> (hi, lo). FP-only Dekker.
+    pub fn split(p: u32) -> Program {
+        use Instr::*;
+        let s = p.div_ceil(2);
+        Program {
+            name: format!("split{s}"),
+            n_in: 1,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },                             // a
+                LoadConst { dst: 1, value: ((1u64 << s) + 1) as f64 }, // 2^s+1
+                Mul { dst: 2, a: 1, b: 0 },                            // c
+                Sub { dst: 3, a: 2, b: 0 },                            // a_big
+                Sub { dst: 4, a: 2, b: 3 },                            // hi
+                Sub { dst: 5, a: 0, b: 4 },                            // lo
+                StoreOut { dst: 0, src: 4 },
+                StoreOut { dst: 1, src: 5 },
+            ],
+        }
+    }
+
+    /// Mul12: streams (a, b) -> (x, y).
+    pub fn mul12(p: u32) -> Program {
+        use Instr::*;
+        let s = p.div_ceil(2);
+        let splitter = ((1u64 << s) + 1) as f64;
+        Program {
+            name: "mul12".into(),
+            n_in: 2,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },              // a
+                LoadIn { dst: 1, src: 1 },              // b
+                Mul { dst: 2, a: 0, b: 1 },             // x
+                LoadConst { dst: 3, value: splitter },
+                // split a -> r4 hi, r5 lo
+                Mul { dst: 4, a: 3, b: 0 },
+                Sub { dst: 5, a: 4, b: 0 },
+                Sub { dst: 4, a: 4, b: 5 },
+                Sub { dst: 5, a: 0, b: 4 },
+                // split b -> r6 hi, r7 lo
+                Mul { dst: 6, a: 3, b: 1 },
+                Sub { dst: 7, a: 6, b: 1 },
+                Sub { dst: 6, a: 6, b: 7 },
+                Sub { dst: 7, a: 1, b: 6 },
+                // error chain
+                Mul { dst: 8, a: 4, b: 6 },             // ahi*bhi
+                Sub { dst: 8, a: 2, b: 8 },             // err1
+                Mul { dst: 9, a: 5, b: 6 },             // alo*bhi
+                Sub { dst: 8, a: 8, b: 9 },             // err2
+                Mul { dst: 9, a: 4, b: 7 },             // ahi*blo
+                Sub { dst: 8, a: 8, b: 9 },             // err3
+                Mul { dst: 9, a: 5, b: 7 },             // alo*blo
+                Sub { dst: 9, a: 9, b: 8 },             // y
+                StoreOut { dst: 0, src: 2 },
+                StoreOut { dst: 1, src: 9 },
+            ],
+        }
+    }
+
+    /// Add22: streams (ah, al, bh, bl) -> (rh, rl).
+    pub fn add22() -> Program {
+        use Instr::*;
+        Program {
+            name: "add22".into(),
+            n_in: 4,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },   // ah
+                LoadIn { dst: 1, src: 1 },   // al
+                LoadIn { dst: 2, src: 2 },   // bh
+                LoadIn { dst: 3, src: 3 },   // bl
+                // add12(ah, bh) -> r4 s, r5 err
+                Add { dst: 4, a: 0, b: 2 },
+                Sub { dst: 5, a: 4, b: 0 },
+                Sub { dst: 6, a: 4, b: 5 },
+                Sub { dst: 6, a: 0, b: 6 },
+                Sub { dst: 7, a: 2, b: 5 },
+                Add { dst: 5, a: 6, b: 7 },
+                // te = (al + bl) + se
+                Add { dst: 8, a: 1, b: 3 },
+                Add { dst: 8, a: 8, b: 5 },
+                // fast_add12(s, te)
+                Add { dst: 9, a: 4, b: 8 },
+                Sub { dst: 10, a: 9, b: 4 },
+                Sub { dst: 10, a: 8, b: 10 },
+                StoreOut { dst: 0, src: 9 },
+                StoreOut { dst: 1, src: 10 },
+            ],
+        }
+    }
+
+    /// Baseline single add: (a, b) -> (r).
+    pub fn base_add() -> Program {
+        use Instr::*;
+        Program {
+            name: "add".into(),
+            n_in: 2,
+            n_out: 1,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },
+                LoadIn { dst: 1, src: 1 },
+                Add { dst: 2, a: 0, b: 1 },
+                StoreOut { dst: 0, src: 2 },
+            ],
+        }
+    }
+
+    /// Baseline MAD: (a, b, c) -> (a*b + c).
+    pub fn base_mad() -> Program {
+        use Instr::*;
+        Program {
+            name: "mad".into(),
+            n_in: 3,
+            n_out: 1,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },
+                LoadIn { dst: 1, src: 1 },
+                LoadIn { dst: 2, src: 2 },
+                Mad { dst: 3, a: 0, b: 1, c: 2 },
+                StoreOut { dst: 0, src: 3 },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::algorithms;
+    use crate::util::Rng;
+
+    #[test]
+    fn add12_program_matches_algorithm() {
+        let m = GpuModel::NV35;
+        let mut rng = Rng::new(121);
+        let a: Vec<f64> = (0..512).map(|_| rng.spread_f32(-10, 10) as f64).collect();
+        let b: Vec<f64> = (0..512).map(|_| rng.spread_f32(-10, 10) as f64).collect();
+        let out = run(&m, &programs::add12(), &[&a, &b]).unwrap();
+        for i in 0..a.len() {
+            let (s, e) = algorithms::add12(&m, m.quantize(a[i]), m.quantize(b[i]));
+            assert_eq!(out[0][i], m.to_f64(s), "i={i}");
+            assert_eq!(out[1][i], m.to_f64(e), "i={i}");
+        }
+    }
+
+    #[test]
+    fn mul12_program_matches_algorithm() {
+        let m = GpuModel::NV35;
+        let p = m.format.precision();
+        let mut rng = Rng::new(122);
+        let a: Vec<f64> = (0..512).map(|_| rng.spread_f32(-8, 8) as f64).collect();
+        let b: Vec<f64> = (0..512).map(|_| rng.spread_f32(-8, 8) as f64).collect();
+        let out = run(&m, &programs::mul12(p), &[&a, &b]).unwrap();
+        for i in 0..a.len() {
+            let (x, y) = algorithms::mul12(&m, m.quantize(a[i]), m.quantize(b[i]));
+            assert_eq!(out[0][i], m.to_f64(x), "i={i}");
+            assert_eq!(out[1][i], m.to_f64(y), "i={i}");
+        }
+    }
+
+    #[test]
+    fn add22_program_matches_algorithm() {
+        let m = GpuModel::NV35;
+        let mut rng = Rng::new(123);
+        let n = 256;
+        let mk = |rng: &mut Rng| -> (Vec<f64>, Vec<f64>) {
+            let hi: Vec<f64> = (0..n).map(|_| rng.spread_f32(-8, 8) as f64).collect();
+            let lo: Vec<f64> =
+                hi.iter().map(|&h| h * 2f64.powi(-25) * rng.uniform(-1.0, 1.0)).collect();
+            (hi, lo)
+        };
+        let (ah, al) = mk(&mut rng);
+        let (bh, bl) = mk(&mut rng);
+        let out = run(&m, &programs::add22(), &[&ah, &al, &bh, &bl]).unwrap();
+        for i in 0..n {
+            let r = algorithms::add22(
+                &m,
+                (m.quantize(ah[i]), m.quantize(al[i])),
+                (m.quantize(bh[i]), m.quantize(bl[i])),
+            );
+            assert_eq!(out[0][i], m.to_f64(r.0), "i={i}");
+            assert_eq!(out[1][i], m.to_f64(r.1), "i={i}");
+        }
+    }
+
+    #[test]
+    fn flop_counts_match_paper_economics() {
+        // paper: branch-free Add12 = 6 ops; Add22 = Add12 + 3 + fast(3) = 11
+        assert_eq!(programs::add12().flops(), 6);
+        assert_eq!(programs::add22().flops(), 11);
+        assert_eq!(programs::base_add().flops(), 1);
+        // Mul12 = 1 mul + 2 splits(3 ops + const mul each = 4) + 7 chain = 16..17
+        let p = Format::NV32.precision();
+        assert!(programs::mul12(p).flops() >= 16);
+    }
+
+    #[test]
+    fn errors_on_bad_wiring() {
+        let m = GpuModel::NV35;
+        let a = vec![1.0f64; 4];
+        assert_eq!(run(&m, &programs::add12(), &[&a]).unwrap_err(),
+                   VmError::BadStreamIndex);
+        let b = vec![1.0f64; 3];
+        assert_eq!(run(&m, &programs::add12(), &[&a, &b]).unwrap_err(),
+                   VmError::LengthMismatch);
+    }
+
+    use crate::gpusim::Format;
+}

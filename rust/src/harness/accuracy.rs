@@ -1,0 +1,197 @@
+//! Table 5: measured accuracy of the float-float operators.
+//!
+//! The paper runs 2^24 random vectors and reports, per operator, the
+//! maximum observed error as `log2(|err| / |exact|)` against MPFR (their
+//! "-48.0" notation; "(exact)" when no error was ever observed). Our
+//! oracle is the exact [`Dyadic`] type — zero oracle error.
+//!
+//! The executor is abstract so the same sweep measures:
+//! * the native rust kernels (IEEE RN hardware),
+//! * the XLA artifacts through the PJRT runtime,
+//! * the simulated NV35/R300 GPU arithmetic — the configuration that
+//!   actually reproduces the paper's anomaly rows (§6.1).
+
+use super::workload::planes_for;
+use crate::mp::Dyadic;
+
+/// One Table 5 row.
+#[derive(Clone, Debug)]
+pub struct AccuracyRow {
+    pub op: String,
+    /// max log2(|err|/|exact|); None = exact on every sample.
+    pub max_log2: Option<f64>,
+    pub samples: usize,
+}
+
+impl AccuracyRow {
+    /// Paper formatting: "-48.0" or "(exact)".
+    pub fn display(&self) -> String {
+        match self.max_log2 {
+            None => "(exact)".to_string(),
+            Some(v) => format!("{v:.1}"),
+        }
+    }
+}
+
+/// Exact expected value of `op` on sample `i` of the input planes.
+fn exact_result(op: &str, planes: &[Vec<f32>], i: usize) -> Option<Dyadic> {
+    let g = |p: usize| Dyadic::from_f32(planes[p][i]);
+    Some(match op {
+        "add12" => g(0).add(&g(1)),
+        "mul12" => g(0).mul(&g(1)),
+        "split" => g(0),
+        "add22" => Dyadic::from_ff(planes[0][i], planes[1][i])
+            .add(&Dyadic::from_ff(planes[2][i], planes[3][i])),
+        "mul22" => Dyadic::from_ff(planes[0][i], planes[1][i])
+            .mul(&Dyadic::from_ff(planes[2][i], planes[3][i])),
+        "div22" => Dyadic::from_ff(planes[0][i], planes[1][i])
+            .div(&Dyadic::from_ff(planes[2][i], planes[3][i]), 256),
+        "mad22" => Dyadic::from_ff(planes[0][i], planes[1][i])
+            .mul(&Dyadic::from_ff(planes[2][i], planes[3][i]))
+            .add(&Dyadic::from_ff(planes[4][i], planes[5][i])),
+        _ => return None,
+    })
+}
+
+/// Measure one operator with an arbitrary executor.
+///
+/// `exec(op, input_planes) -> output_planes`; output pairs are summed as
+/// float-float values. `total` samples are streamed in chunks so the
+/// sweep scales to the paper's 2^24 without holding 2^24 × planes.
+pub fn measure_op<F>(
+    op: &str, total: usize, chunk: usize, seed: u64, mut exec: F,
+) -> Result<AccuracyRow, String>
+where
+    F: FnMut(&str, &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String>,
+{
+    let mut max_log2: Option<f64> = None;
+    let mut done = 0usize;
+    let mut chunk_idx = 0u64;
+    while done < total {
+        let n = chunk.min(total - done);
+        let planes = planes_for(op, n, seed ^ (chunk_idx << 20));
+        let outs = exec(op, &planes)?;
+        for i in 0..n {
+            let exact = match exact_result(op, &planes, i) {
+                Some(e) => e,
+                None => return Err(format!("no oracle for op '{op}'")),
+            };
+            let got = if outs.len() == 2 {
+                Dyadic::from_ff(outs[0][i], outs[1][i])
+            } else {
+                Dyadic::from_f32(outs[0][i])
+            };
+            let err = got.sub(&exact);
+            if err.is_zero() {
+                continue;
+            }
+            if exact.is_zero() {
+                continue; // relative error undefined; paper skips these
+            }
+            let l = err.log2_abs() - exact.log2_abs();
+            max_log2 = Some(max_log2.map_or(l, |m: f64| m.max(l)));
+        }
+        done += n;
+        chunk_idx += 1;
+    }
+    Ok(AccuracyRow { op: op.to_string(), max_log2, samples: total })
+}
+
+/// The paper's Table 5 reference.
+pub fn paper_table5() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("add12", "-48.0"),
+        ("mul12", "(exact)"),
+        ("add22", "-33.7"),
+        ("mul22", "-45.0"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::op_arity;
+    use crate::ff::vector;
+
+    fn native_exec(op: &str, planes: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let (_, n_out) = op_arity(op).ok_or("bad op")?;
+        let n = planes[0].len();
+        let mut outs = vec![vec![0.0f32; n]; n_out];
+        vector::dispatch(op, &refs, &mut outs)?;
+        Ok(outs)
+    }
+
+    #[test]
+    fn native_add12_is_exact() {
+        let row = measure_op("add12", 1 << 14, 4096, 1, native_exec).unwrap();
+        assert_eq!(row.max_log2, None, "{row:?}");
+        assert_eq!(row.display(), "(exact)");
+    }
+
+    #[test]
+    fn native_mul12_is_exact() {
+        let row = measure_op("mul12", 1 << 14, 4096, 2, native_exec).unwrap();
+        assert_eq!(row.max_log2, None, "{row:?}");
+    }
+
+    #[test]
+    fn native_add22_bounded() {
+        let row = measure_op("add22", 1 << 14, 4096, 3, native_exec).unwrap();
+        let m = row.max_log2.expect("add22 is not exact");
+        // IEEE hardware: within the Th.5 class (paper GPU measured -33.7
+        // due to the truncation anomaly; RN hardware is better)
+        assert!(m <= -30.0, "max_log2={m}"); // paper itself measured -33.7 (cancellation term)
+    }
+
+    #[test]
+    fn native_mul22_bounded() {
+        let row = measure_op("mul22", 1 << 14, 4096, 4, native_exec).unwrap();
+        let m = row.max_log2.expect("mul22 is not exact");
+        assert!(m <= -43.0, "max_log2={m}");
+    }
+
+    #[test]
+    fn gpusim_nv35_reproduces_table5_shape() {
+        // run the sweep on simulated NV35 arithmetic: add12 no longer
+        // exact (paper: -48.0), add22 notably worse than mul22's class
+        use crate::gpusim::{algorithms as alg, GpuModel};
+        let m = GpuModel::NV35;
+        let exec = |op: &str, planes: &[Vec<f32>]| -> Result<Vec<Vec<f32>>, String> {
+            let n = planes[0].len();
+            let mut outs = vec![vec![0.0f32; n]; 2];
+            for i in 0..n {
+                let q = |p: usize| m.quantize(planes[p][i] as f64);
+                let (h, l) = match op {
+                    "add12" => alg::add12(&m, q(0), q(1)),
+                    "mul12" => alg::mul12(&m, q(0), q(1)),
+                    "add22" => alg::add22(&m, (q(0), q(1)), (q(2), q(3))),
+                    "mul22" => alg::mul22(&m, (q(0), q(1)), (q(2), q(3))),
+                    _ => return Err("unsupported".into()),
+                };
+                outs[0][i] = m.to_f64(h) as f32;
+                outs[1][i] = m.to_f64(l) as f32;
+            }
+            Ok(outs)
+        };
+        let add12 = measure_op("add12", 1 << 12, 1024, 5, exec).unwrap();
+        let add22 = measure_op("add22", 1 << 12, 1024, 6, exec).unwrap();
+        let mul22 = measure_op("mul22", 1 << 12, 1024, 7, exec).unwrap();
+        // add12 under truncated-guard addition: tiny residuals may appear
+        if let Some(m12) = add12.max_log2 {
+            assert!(m12 <= -40.0, "add12 {m12}");
+        }
+        // add22 must be worse than (or equal to) mul22 — the paper's
+        // anomaly ordering (-33.7 vs -45.0)
+        let a22 = add22.max_log2.unwrap_or(f64::NEG_INFINITY);
+        let m22 = mul22.max_log2.unwrap_or(f64::NEG_INFINITY);
+        assert!(a22 >= m22 - 1.0, "add22 {a22} vs mul22 {m22}");
+    }
+
+    #[test]
+    fn paper_reference_rows() {
+        let t = paper_table5();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[1], ("mul12", "(exact)"));
+    }
+}

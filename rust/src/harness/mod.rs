@@ -1,0 +1,19 @@
+//! Benchmark & accuracy harness: regenerates every table of the paper's
+//! evaluation section (the experiment index lives in DESIGN.md §3).
+//!
+//! * [`table`] — plain-text table rendering (fixed-width, same row/column
+//!   layout as the paper);
+//! * [`workload`] — deterministic input generators (random streams,
+//!   normalised float-float streams; denormals and specials excluded as
+//!   in the paper §6.1);
+//! * [`timing`] — Tables 3 & 4: operator timing grids over the paper's
+//!   sizes, normalised to "the single addition of 4096 data";
+//! * [`accuracy`] — Table 5: max observed log2 relative error against
+//!   the exact [`crate::mp::Dyadic`] oracle;
+//! * [`paranoia_table`] — Table 2 via [`crate::gpusim::paranoia`].
+
+pub mod accuracy;
+pub mod paranoia_table;
+pub mod table;
+pub mod timing;
+pub mod workload;

@@ -1,0 +1,90 @@
+//! Table 2 emitter: paranoia intervals, measured vs paper.
+
+use crate::gpusim::paranoia::{self, ParanoiaRow};
+use crate::gpusim::GpuModel;
+
+/// Measured Table 2 across the standard model columns.
+pub struct Table2 {
+    pub rows: Vec<(String, ParanoiaRow)>,
+}
+
+/// Run paranoia on the four Table 2 columns.
+pub fn measure(samples: usize, seed: u64) -> Table2 {
+    let models = [GpuModel::IEEE, GpuModel::CHOPPED, GpuModel::R300, GpuModel::NV35];
+    Table2 {
+        rows: models
+            .iter()
+            .map(|m| (m.name.to_string(), paranoia::run(m, samples, seed)))
+            .collect(),
+    }
+}
+
+impl Table2 {
+    /// Render measured intervals next to the paper's.
+    pub fn render(&self) -> String {
+        let mut t = super::table::Table::new(
+            "Table 2 — floating-point error intervals (ulp), measured on simulated models",
+            &["Operation", "ieee-rn", "chopped", "r300", "nv35"],
+        );
+        let fmt = |i: crate::gpusim::paranoia::Interval| {
+            format!("[{:.2}, {:.2}]", i.min, i.max)
+        };
+        let ops: [(&str, fn(&ParanoiaRow) -> crate::gpusim::paranoia::Interval); 4] = [
+            ("Addition", |r| r.add),
+            ("Subtraction", |r| r.sub),
+            ("Multiplication", |r| r.mul),
+            ("Division", |r| r.div),
+        ];
+        for (name, sel) in ops {
+            let mut cells = vec![name.to_string()];
+            for (_, row) in &self.rows {
+                cells.push(fmt(sel(row)));
+            }
+            t.row(cells);
+        }
+        let mut out = t.render();
+        out.push_str("\npaper reference:\n");
+        for (op, vals) in paranoia::paper_reference() {
+            out.push_str(&format!(
+                "  {op:<15} exact [{}, {}]  chopped ({}, {}]  r300 [{}, {}]  nv35 [{}, {}]\n",
+                vals[0], vals[1], vals[2], vals[3], vals[4], vals[5], vals[6], vals[7]
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_rows_and_columns() {
+        let t = measure(2_000, 9);
+        let s = t.render();
+        assert!(s.contains("Addition"));
+        assert!(s.contains("Division"));
+        assert!(s.contains("nv35"));
+        assert!(s.contains("paper reference"));
+    }
+
+    #[test]
+    fn measured_add_classes_match_paper() {
+        let t = measure(20_000, 10);
+        let get = |name: &str| {
+            &t.rows.iter().find(|(n, _)| n == name).unwrap().1
+        };
+        // ieee within [-0.5, 0.5]
+        let ieee = get("ieee-rn");
+        assert!(ieee.add.min >= -0.51 && ieee.add.max <= 0.51);
+        // chopped add within (-1, 0]
+        let ch = get("chopped");
+        assert!(ch.add.min > -1.01 && ch.add.max <= 1e-9);
+        // r300 sub wider than nv35 sub
+        let r300 = get("r300");
+        let nv35 = get("nv35");
+        assert!(r300.sub.max - r300.sub.min > nv35.sub.max - nv35.sub.min);
+        // division beyond 1 ulp on the GPU models
+        assert!(r300.div.min < -1.0 || r300.div.max > 1.0);
+    }
+}

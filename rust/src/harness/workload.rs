@@ -1,0 +1,106 @@
+//! Deterministic workload generators for the benchmark grids.
+//!
+//! Paper §6.1: "randomly generated test vectors … we excluded denormal
+//! input numbers and special cases numbers as there are not fully
+//! supported by the targeted hardware."
+
+use crate::coordinator::batcher::op_arity;
+use crate::util::Rng;
+
+/// Input planes for operator `op`, length `n`, deterministic in `seed`.
+///
+/// Float-float pair planes are properly normalised (|lo| <= ulp(hi)/2);
+/// plain planes are exponent-spread normal f32s. Divisor planes avoid
+/// zero neighbourhoods.
+pub fn planes_for(op: &str, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let (n_in, _) = op_arity(op).expect("known op");
+    let mut rng = Rng::new(seed ^ 0xFF60_1234);
+    match op {
+        // ff-pair inputs: (ah, al, bh, bl[, ch, cl])
+        "add22" | "mul22" | "div22" | "mad22" => {
+            let pairs = n_in / 2;
+            let mut planes = vec![Vec::with_capacity(n); n_in];
+            for _ in 0..n {
+                for p in 0..pairs {
+                    let (hi, lo) = rng.ff_pair(-8, 8);
+                    // divisors: keep well away from zero (paper excludes
+                    // specials; 0 divisor produces inf)
+                    let (hi, lo) = if op == "div22" && p == 1 && hi.abs() < 1e-3 {
+                        (hi + 1.0f32.copysign(hi), lo)
+                    } else {
+                        (hi, lo)
+                    };
+                    planes[2 * p].push(hi);
+                    planes[2 * p + 1].push(lo);
+                }
+            }
+            planes
+        }
+        _ => (0..n_in)
+            .map(|_| rng.fill_spread(n, -8, 8))
+            .collect(),
+    }
+}
+
+/// The paper's evaluation sizes (Tables 3-4).
+pub const PAPER_SIZES: [usize; 5] = [4096, 16384, 65536, 262144, 1048576];
+
+/// The paper's operator columns (Tables 3-4).
+pub const PAPER_OPS: [&str; 7] = ["add", "mul", "mad", "add12", "mul12", "add22", "mul22"];
+
+/// Extension operators (§7) benchmarked in the extended tables.
+pub const EXT_OPS: [&str; 3] = ["split", "div22", "mad22"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ulp_f32;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(planes_for("add22", 64, 7), planes_for("add22", 64, 7));
+        assert_ne!(planes_for("add22", 64, 7), planes_for("add22", 64, 8));
+    }
+
+    #[test]
+    fn arity_and_length() {
+        for op in PAPER_OPS.iter().chain(EXT_OPS.iter()) {
+            let planes = planes_for(op, 128, 1);
+            let (n_in, _) = op_arity(op).unwrap();
+            assert_eq!(planes.len(), n_in, "op {op}");
+            assert!(planes.iter().all(|p| p.len() == 128));
+        }
+    }
+
+    #[test]
+    fn ff_pairs_are_normalised() {
+        let planes = planes_for("mul22", 4096, 3);
+        for i in 0..4096 {
+            let (hi, lo) = (planes[0][i], planes[1][i]);
+            if lo != 0.0 {
+                assert!(lo.abs() as f64 <= ulp_f32(hi) * 0.5 + 1e-300);
+            }
+        }
+    }
+
+    #[test]
+    fn div22_divisors_away_from_zero() {
+        let planes = planes_for("div22", 4096, 5);
+        for &bh in &planes[2] {
+            assert!(bh.abs() >= 1e-3, "divisor too small: {bh}");
+        }
+    }
+
+    #[test]
+    fn no_specials_or_denormals() {
+        for op in ["add", "add22"] {
+            let planes = planes_for(op, 4096, 11);
+            for p in &planes {
+                for &v in p {
+                    assert!(v.is_finite());
+                    assert!(v == 0.0 || v.abs() >= f32::MIN_POSITIVE);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! # ffgpu — float-float operators on a stream processor
+//!
+//! Production reproduction of *"Implementation of float-float operators on
+//! graphics hardware"* (Guillaume Da Graça, David Defour, 2006): a 44-bit
+//! "single-single" floating-point format built from pairs of `f32`s, the
+//! error-free transformations it rests on (Add12 / Split / Mul12), the
+//! float-float operators (Add22 / Mul22 and the §7 extensions), plus every
+//! substrate the paper's evaluation needs:
+//!
+//! * [`ff`] — the numeric format itself on native IEEE-754 hardware
+//!   (scalar [`ff::FF32`], SoA vector ops, double-double comparator,
+//!   compensated algorithms);
+//! * [`gpusim`] — a software model of 2006-era GPU arithmetic
+//!   (configurable formats of the paper's Table 1, rounding behaviours of
+//!   Table 2, a mini-Brook stream VM) used to validate the paper's
+//!   theorems under *non-IEEE* arithmetic and to regenerate Table 2;
+//! * [`mp`] — an arbitrary-precision binary float (mini-MPFR), the
+//!   accuracy oracle for Table 5;
+//! * [`runtime`] — PJRT loader/executor for the AOT-compiled XLA
+//!   artifacts produced by `python/compile` (the "GPU path" of Table 3);
+//! * [`coordinator`] — the stream dispatcher: request batching, artifact
+//!   registry, worker loop, metrics (the moral equivalent of the Brook
+//!   runtime);
+//! * [`harness`] — workload generators and table emitters that regenerate
+//!   every table of the paper's evaluation section.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod ff;
+pub mod gpusim;
+pub mod harness;
+pub mod json;
+pub mod mp;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,296 @@
+//! `ffgpu` — CLI for the float-float-on-stream-processor reproduction.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §3):
+//!
+//! ```text
+//! ffgpu info                # platform, artifact inventory, Table 1 formats
+//! ffgpu paranoia            # Table 2 (simulated GPU arithmetic)
+//! ffgpu table3              # Table 3 (XLA/PJRT "GPU path" timings)
+//! ffgpu table4              # Table 4 (native CPU path timings)
+//! ffgpu accuracy            # Table 5 (vs exact dyadic oracle)
+//! ffgpu serve-demo          # coordinator smoke: batched requests + metrics
+//! ffgpu selftest            # end-to-end: artifacts vs native, bit-exact
+//! ```
+//!
+//! Hand-rolled argument parsing: the build image vendors no CLI crate
+//! (documented substitution, DESIGN.md).
+
+use ffgpu::coordinator::service::Backend;
+use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
+use ffgpu::runtime::Runtime;
+use ffgpu::util::{Rng, Timer};
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let get_flag = |name: &str, default: String| -> String {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+            .unwrap_or(default)
+    };
+    let artifacts = PathBuf::from(get_flag("--artifacts", "artifacts".into()));
+    let samples: usize = get_flag("--samples", String::new()).parse().unwrap_or(0);
+
+    let code = match cmd {
+        "info" => cmd_info(&artifacts),
+        "paranoia" => cmd_paranoia(if samples > 0 { samples } else { 200_000 }),
+        "table3" => cmd_table3(&artifacts),
+        "table4" => cmd_table4(),
+        "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
+        "serve-demo" => cmd_serve_demo(&artifacts),
+        "selftest" => cmd_selftest(&artifacts),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
+
+USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
+
+COMMANDS:
+  info        platform, artifact inventory, Table 1 formats
+  paranoia    Table 2: error intervals of simulated GPU arithmetic
+  table3      Table 3: operator timings on the XLA/PJRT path
+  table4      Table 4: operator timings on the native CPU path
+  accuracy    Table 5: measured accuracy vs the exact dyadic oracle
+  serve-demo  coordinator demo: batched requests, metrics report
+  selftest    artifacts vs native kernels, bit-exact check
+";
+
+fn cmd_info(artifacts: &PathBuf) -> i32 {
+    println!("ffgpu — float-float operators (reproduction of Da Graça & Defour 2006)\n");
+    println!("Table 1 formats:");
+    for f in ffgpu::gpusim::Format::table1() {
+        println!(
+            "  {:<14} sign 1  exp {:>2}  mant {:>2}  specials {}",
+            f.name(), f.exp_bits, f.mant_bits,
+            if f.has_specials { "yes" } else { "no" }
+        );
+    }
+    match Runtime::new(artifacts) {
+        Ok(rt) => {
+            println!("\nPJRT platform: {}", rt.platform());
+            println!("artifacts: {} entries in {}", rt.manifest().entries.len(),
+                     artifacts.display());
+            for op in workload::PAPER_OPS.iter().chain(workload::EXT_OPS.iter()) {
+                let sizes: Vec<String> = rt
+                    .manifest()
+                    .by_op(op)
+                    .iter()
+                    .map(|e| e.n.to_string())
+                    .collect();
+                println!("  {:<6} n = {}", op, sizes.join(", "));
+            }
+            0
+        }
+        Err(e) => {
+            println!("\n(no runtime: {e})");
+            0
+        }
+    }
+}
+
+fn cmd_paranoia(samples: usize) -> i32 {
+    let t = paranoia_table::measure(samples, 0xFACE);
+    print!("{}", t.render());
+    0
+}
+
+fn cmd_table3(artifacts: &PathBuf) -> i32 {
+    let rt = match Runtime::new(artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let timer = Timer::new(2, 7);
+    match timing::gpu_grid(&rt, &workload::PAPER_SIZES, &workload::PAPER_OPS, &timer, 3) {
+        Ok(grid) => {
+            print!("{}", grid.render(
+                "Table 3 — float-float operators on the XLA/PJRT path \
+                 (normalised to Add @ 4096)"));
+            print_paper_grid("paper Table 3", timing::paper_table3());
+            0
+        }
+        Err(e) => {
+            eprintln!("table3: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_table4() -> i32 {
+    let timer = Timer::new(2, 7);
+    let grid = timing::cpu_grid(&workload::PAPER_SIZES, &workload::PAPER_OPS, &timer, 4);
+    print!("{}", grid.render(
+        "Table 4 — float-float operators on the native CPU path \
+         (normalised to Add @ 4096)"));
+    print_paper_grid("paper Table 4", timing::paper_table4());
+    0
+}
+
+fn print_paper_grid(title: &str, (sizes, rows): (Vec<usize>, Vec<Vec<f64>>)) {
+    println!("\n{title}:");
+    let ops_header: String =
+        workload::PAPER_OPS.iter().map(|o| format!("{o:>8}")).collect();
+    println!("  {:>9} {}", "Size", ops_header);
+    for (s, r) in sizes.iter().zip(rows) {
+        let cells: String = r.iter().map(|v| format!("{v:>8.2}")).collect();
+        println!("  {s:>9} {cells}");
+    }
+}
+
+fn cmd_accuracy(artifacts: &PathBuf, samples: usize) -> i32 {
+    println!("Table 5 — measured accuracy, {samples} samples per op, exact dyadic oracle\n");
+    let ops = ["add12", "mul12", "add22", "mul22", "div22", "mad22"];
+
+    // native path
+    println!("native CPU kernels (IEEE RN):");
+    for op in ops {
+        let row = accuracy::measure_op(op, samples, 1 << 16, 0xACC0, |op, planes| {
+            let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+            let (_, n_out) = ffgpu::coordinator::batcher::op_arity(op).unwrap();
+            let mut outs = vec![vec![0.0f32; planes[0].len()]; n_out];
+            ffgpu::ff::vector::dispatch(op, &refs, &mut outs)?;
+            Ok(outs)
+        })
+        .unwrap();
+        println!("  {:<6} {}", row.op, row.display());
+    }
+
+    // XLA path (chunk = compiled size)
+    if let Ok(rt) = Runtime::new(artifacts) {
+        println!("\nXLA artifacts via PJRT:");
+        for op in ops {
+            let name = format!("{op}_n4096");
+            if rt.manifest().get(&name).is_none() {
+                continue;
+            }
+            let row = accuracy::measure_op(op, samples.min(1 << 20), 4096, 0xACC1,
+                |op, planes| {
+                    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+                    rt.execute(&format!("{op}_n4096"), &refs)
+                })
+                .unwrap();
+            println!("  {:<6} {}", row.op, row.display());
+        }
+    }
+
+    println!("\npaper Table 5 (measured on real 2006 GPU):");
+    for (op, v) in accuracy::paper_table5() {
+        println!("  {op:<6} {v}");
+    }
+    0
+}
+
+fn cmd_serve_demo(artifacts: &PathBuf) -> i32 {
+    let backend = if artifacts.join("manifest.json").exists() {
+        Backend::Xla(artifacts.clone())
+    } else {
+        println!("(no artifacts; using CPU backend)");
+        Backend::Cpu
+    };
+    let svc = match Service::start(ServiceConfig { backend, ..Default::default() }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("service: {e}");
+            return 1;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let mut joins = Vec::new();
+    for client in 0..4u64 {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(client);
+            for _ in 0..50 {
+                let n = 1000 + rng.below(9000);
+                let planes = workload::planes_for("add22", n, rng.next_u64());
+                let out = h.call("add22", planes).expect("add22");
+                assert_eq!(out[0].len(), n);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    println!("serve-demo: {} requests in {wall:.3}s ({:.0} req/s)",
+             m.requests, m.requests as f64 / wall);
+    println!("  batches={} launches={} elements={} padding={:.1}%",
+             m.batches, m.launches, m.elements, m.padding_fraction() * 100.0);
+    println!("  batch latency mean={:.2}ms max={:.2}ms errors={}",
+             m.mean_latency_s * 1e3, m.max_latency_s * 1e3, m.errors);
+    0
+}
+
+fn cmd_selftest(artifacts: &PathBuf) -> i32 {
+    let rt = match Runtime::new(artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime: {e}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!("selftest: XLA artifacts vs native kernels (bit-exact)\n");
+    let mut failures = 0;
+    for op in workload::PAPER_OPS.iter().chain(workload::EXT_OPS.iter()) {
+        let name = format!("{op}_n4096");
+        if rt.manifest().get(&name).is_none() {
+            println!("  {op:<6} SKIP (no artifact)");
+            continue;
+        }
+        let planes = workload::planes_for(op, 4096, 0x5E1F);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let xla = match rt.execute(&name, &refs) {
+            Ok(o) => o,
+            Err(e) => {
+                println!("  {op:<6} FAIL execute: {e}");
+                failures += 1;
+                continue;
+            }
+        };
+        let (_, n_out) = ffgpu::coordinator::batcher::op_arity(op).unwrap();
+        let mut native = vec![vec![0.0f32; 4096]; n_out];
+        ffgpu::ff::vector::dispatch(op, &refs, &mut native).unwrap();
+        let bitwise = xla
+            .iter()
+            .zip(&native)
+            .all(|(a, b)| a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+        if bitwise {
+            println!("  {op:<6} OK");
+        } else {
+            let bad: usize = xla
+                .iter()
+                .zip(&native)
+                .map(|(a, b)| {
+                    a.iter().zip(b).filter(|(x, y)| x.to_bits() != y.to_bits()).count()
+                })
+                .sum();
+            println!("  {op:<6} FAIL ({bad} lanes differ)");
+            failures += 1;
+        }
+    }
+    if failures == 0 {
+        println!("\nselftest OK");
+        0
+    } else {
+        println!("\nselftest FAILED ({failures} ops)");
+        1
+    }
+}

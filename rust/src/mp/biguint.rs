@@ -1,0 +1,333 @@
+//! Minimal arbitrary-precision unsigned integer.
+//!
+//! Little-endian `u64` limbs, schoolbook algorithms. Sized for the
+//! oracle's workload (operands of a few hundred bits); no Karatsuba
+//! needed — profile-confirmed off the hot path (§Perf).
+
+use std::cmp::Ordering;
+
+/// Arbitrary-precision unsigned integer, little-endian limbs, no leading
+/// zero limbs (canonical form; `0` is the empty limb vector).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BigUint {
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub const fn zero() -> Self {
+        BigUint { limbs: Vec::new() }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 { Self::zero() } else { BigUint { limbs: vec![v] } }
+    }
+
+    pub fn from_u128(v: u128) -> Self {
+        let lo = v as u64;
+        let hi = (v >> 64) as u64;
+        let mut r = BigUint { limbs: vec![lo, hi] };
+        r.normalize();
+        r
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn limbs(&self) -> &[u64] {
+        &self.limbs
+    }
+
+    fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    /// Number of significant bits (0 for zero).
+    pub fn bits(&self) -> u64 {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() as u64 - 1) * 64 + (64 - top.leading_zeros() as u64),
+        }
+    }
+
+    /// Number of trailing zero bits (0 for zero).
+    pub fn trailing_zeros(&self) -> u64 {
+        if self.is_zero() {
+            return 0;
+        }
+        let mut tz = 0u64;
+        for &l in &self.limbs {
+            if l == 0 {
+                tz += 64;
+            } else {
+                return tz + l.trailing_zeros() as u64;
+            }
+        }
+        tz
+    }
+
+    /// Bit at position `i` (0 = least significant).
+    pub fn bit(&self, i: u64) -> bool {
+        let limb = (i / 64) as usize;
+        if limb >= self.limbs.len() {
+            return false;
+        }
+        (self.limbs[limb] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn add(&self, other: &BigUint) -> BigUint {
+        let (long, short) = if self.limbs.len() >= other.limbs.len() {
+            (&self.limbs, &other.limbs)
+        } else {
+            (&other.limbs, &self.limbs)
+        };
+        let mut out = Vec::with_capacity(long.len() + 1);
+        let mut carry = 0u64;
+        for i in 0..long.len() {
+            let a = long[i];
+            let b = short.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a.overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        if carry > 0 {
+            out.push(carry);
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// `self - other`; panics if `other > self`.
+    pub fn sub(&self, other: &BigUint) -> BigUint {
+        assert!(self.cmp_mag(other) != Ordering::Less, "BigUint::sub underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let a = self.limbs[i];
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = a.overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        debug_assert_eq!(borrow, 0);
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    pub fn mul(&self, other: &BigUint) -> BigUint {
+        if self.is_zero() || other.is_zero() {
+            return BigUint::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let t = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = t as u64;
+                carry = t >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let t = out[k] as u128 + carry;
+                out[k] = t as u64;
+                carry = t >> 64;
+                k += 1;
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    pub fn shl(&self, n: u64) -> BigUint {
+        if self.is_zero() || n == 0 {
+            return self.clone();
+        }
+        let limb_shift = (n / 64) as usize;
+        let bit_shift = (n % 64) as u32;
+        let mut out = vec![0u64; limb_shift];
+        if bit_shift == 0 {
+            out.extend_from_slice(&self.limbs);
+        } else {
+            let mut carry = 0u64;
+            for &l in &self.limbs {
+                out.push((l << bit_shift) | carry);
+                carry = l >> (64 - bit_shift);
+            }
+            if carry > 0 {
+                out.push(carry);
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    pub fn shr(&self, n: u64) -> BigUint {
+        let limb_shift = (n / 64) as usize;
+        if limb_shift >= self.limbs.len() {
+            return BigUint::zero();
+        }
+        let bit_shift = (n % 64) as u32;
+        let src = &self.limbs[limb_shift..];
+        let mut out = Vec::with_capacity(src.len());
+        if bit_shift == 0 {
+            out.extend_from_slice(src);
+        } else {
+            for i in 0..src.len() {
+                let lo = src[i] >> bit_shift;
+                let hi = src.get(i + 1).map_or(0, |&x| x << (64 - bit_shift));
+                out.push(lo | hi);
+            }
+        }
+        let mut r = BigUint { limbs: out };
+        r.normalize();
+        r
+    }
+
+    pub fn cmp_mag(&self, other: &BigUint) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for i in (0..self.limbs.len()).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+
+    /// Top `n` bits as a u128 (n <= 128), plus a "sticky" flag for any
+    /// nonzero bits below. Used for rounding conversions.
+    pub fn top_bits(&self, n: u64) -> (u128, bool) {
+        let total = self.bits();
+        if total == 0 {
+            return (0, false);
+        }
+        if total <= n {
+            let mut v = 0u128;
+            for (i, &l) in self.limbs.iter().enumerate().take(2) {
+                v |= (l as u128) << (64 * i);
+            }
+            return (v << (n - total).min(127), false);
+        }
+        let shift = total - n;
+        let shifted = self.shr(shift);
+        let mut v = 0u128;
+        for (i, &l) in shifted.limbs.iter().enumerate().take(2) {
+            v |= (l as u128) << (64 * i);
+        }
+        // sticky: any bit below `shift`?
+        let sticky = self.trailing_zeros() < shift;
+        (v, sticky)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = BigUint::from_u128(0xFFFF_FFFF_FFFF_FFFF_FFFF);
+        let b = BigUint::from_u64(0xABCD);
+        let s = a.add(&b);
+        assert_eq!(s.sub(&b), a);
+        assert_eq!(s.sub(&a), b);
+    }
+
+    #[test]
+    fn add_carries_across_limbs() {
+        let a = BigUint::from_u64(u64::MAX);
+        let one = BigUint::from_u64(1);
+        let s = a.add(&one);
+        assert_eq!(s.limbs(), &[0, 1]);
+        assert_eq!(s.bits(), 65);
+    }
+
+    #[test]
+    fn mul_small_known() {
+        let a = BigUint::from_u64(1_000_000_007);
+        let b = BigUint::from_u64(998_244_353);
+        let p = a.mul(&b);
+        assert_eq!(p.limbs(), &[(1_000_000_007u128 * 998_244_353) as u64]);
+    }
+
+    #[test]
+    fn mul_big_cross_limb() {
+        let a = BigUint::from_u128(u128::MAX);
+        let p = a.mul(&a);
+        // (2^128 - 1)^2 = 2^256 - 2^129 + 1
+        assert_eq!(p.bits(), 256);
+        assert!(p.bit(0));
+        assert!(!p.bit(1));
+        assert!(!p.bit(128));
+    }
+
+    #[test]
+    fn shifts_invert() {
+        let a = BigUint::from_u128(0xDEAD_BEEF_0123_4567_89AB_CDEF);
+        for n in [0u64, 1, 13, 64, 65, 127, 200] {
+            assert_eq!(a.shl(n).shr(n), a, "n={n}");
+        }
+    }
+
+    #[test]
+    fn shr_discards() {
+        let a = BigUint::from_u64(0b1011);
+        assert_eq!(a.shr(1).limbs(), &[0b101]);
+        assert_eq!(a.shr(4).limbs(), &[] as &[u64]);
+    }
+
+    #[test]
+    fn bits_and_trailing_zeros() {
+        assert_eq!(BigUint::zero().bits(), 0);
+        assert_eq!(BigUint::from_u64(1).bits(), 1);
+        assert_eq!(BigUint::from_u64(0x8000_0000_0000_0000).bits(), 64);
+        let a = BigUint::from_u64(0b1100);
+        assert_eq!(a.trailing_zeros(), 2);
+        let b = BigUint::from_u64(1).shl(130);
+        assert_eq!(b.trailing_zeros(), 130);
+        assert_eq!(b.bits(), 131);
+    }
+
+    #[test]
+    fn cmp_mag_orders() {
+        let a = BigUint::from_u64(5);
+        let b = BigUint::from_u128(1u128 << 100);
+        assert_eq!(a.cmp_mag(&b), Ordering::Less);
+        assert_eq!(b.cmp_mag(&a), Ordering::Greater);
+        assert_eq!(a.cmp_mag(&BigUint::from_u64(5)), Ordering::Equal);
+    }
+
+    #[test]
+    fn top_bits_with_sticky() {
+        // 0b1011_0001: top 4 bits = 1011, sticky = true (0001 below)
+        let a = BigUint::from_u64(0b1011_0001);
+        let (top, sticky) = a.top_bits(4);
+        assert_eq!(top, 0b1011);
+        assert!(sticky);
+        let b = BigUint::from_u64(0b1011_0000);
+        let (top, sticky) = b.top_bits(4);
+        assert_eq!(top, 0b1011);
+        assert!(!sticky);
+    }
+
+    #[test]
+    fn mul_matches_u128_randomised() {
+        let mut rng = crate::util::Rng::new(61);
+        for _ in 0..10_000 {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            let p = BigUint::from_u64(a).mul(&BigUint::from_u64(b));
+            assert_eq!(p, BigUint::from_u128(a as u128 * b as u128));
+        }
+    }
+}

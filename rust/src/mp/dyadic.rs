@@ -1,0 +1,411 @@
+//! Exact signed dyadic numbers: `value = sign · mag · 2^exp`.
+//!
+//! Closed under `+ - ×` with **no rounding whatsoever** — every `f32` and
+//! `f64` is exactly representable, so this type is a perfect oracle for
+//! float-float accuracy measurement (the role MPFR plays in the paper's
+//! §6.1). Division and square root round to a caller-chosen precision.
+
+use super::biguint::BigUint;
+use std::cmp::Ordering;
+
+/// An exact dyadic rational `± mag · 2^exp` (canonical: mag odd or zero).
+#[derive(Clone, Debug)]
+pub struct Dyadic {
+    negative: bool,
+    mag: BigUint,
+    exp: i64,
+}
+
+impl Dyadic {
+    pub fn zero() -> Self {
+        Dyadic { negative: false, mag: BigUint::zero(), exp: 0 }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.mag.is_zero()
+    }
+
+    pub fn is_negative(&self) -> bool {
+        self.negative
+    }
+
+    fn canonical(mut self) -> Self {
+        if self.mag.is_zero() {
+            self.negative = false;
+            self.exp = 0;
+            return self;
+        }
+        let tz = self.mag.trailing_zeros();
+        if tz > 0 {
+            self.mag = self.mag.shr(tz);
+            self.exp += tz as i64;
+        }
+        self
+    }
+
+    pub fn from_parts(negative: bool, mag: BigUint, exp: i64) -> Self {
+        Dyadic { negative, mag, exp }.canonical()
+    }
+
+    /// Exact conversion from `f32` (panics on NaN/Inf: the paper excludes
+    /// specials from accuracy runs).
+    pub fn from_f32(v: f32) -> Self {
+        assert!(v.is_finite(), "Dyadic::from_f32 on non-finite {v}");
+        Self::from_f64(v as f64)
+    }
+
+    /// Exact conversion from `f64`.
+    pub fn from_f64(v: f64) -> Self {
+        assert!(v.is_finite(), "Dyadic::from_f64 on non-finite {v}");
+        if v == 0.0 {
+            return Self::zero();
+        }
+        let bits = v.to_bits();
+        let negative = bits >> 63 == 1;
+        let biased = ((bits >> 52) & 0x7FF) as i64;
+        let frac = bits & 0xF_FFFF_FFFF_FFFF;
+        let (mant, exp) = if biased == 0 {
+            (frac, -1074i64) // subnormal
+        } else {
+            (frac | (1 << 52), biased - 1075)
+        };
+        Self::from_parts(negative, BigUint::from_u64(mant), exp)
+    }
+
+    /// Exact value of a float-float pair `hi + lo`.
+    pub fn from_ff(hi: f32, lo: f32) -> Self {
+        Self::from_f32(hi).add(&Self::from_f32(lo))
+    }
+
+    pub fn neg(&self) -> Self {
+        if self.is_zero() {
+            return self.clone();
+        }
+        Dyadic { negative: !self.negative, mag: self.mag.clone(), exp: self.exp }
+    }
+
+    pub fn abs(&self) -> Self {
+        Dyadic { negative: false, mag: self.mag.clone(), exp: self.exp }
+    }
+
+    /// Exact addition.
+    pub fn add(&self, other: &Dyadic) -> Self {
+        if self.is_zero() {
+            return other.clone();
+        }
+        if other.is_zero() {
+            return self.clone();
+        }
+        // align to the smaller exponent
+        let exp = self.exp.min(other.exp);
+        let a = self.mag.shl((self.exp - exp) as u64);
+        let b = other.mag.shl((other.exp - exp) as u64);
+        if self.negative == other.negative {
+            return Dyadic { negative: self.negative, mag: a.add(&b), exp }.canonical();
+        }
+        match a.cmp_mag(&b) {
+            Ordering::Equal => Self::zero(),
+            Ordering::Greater => {
+                Dyadic { negative: self.negative, mag: a.sub(&b), exp }.canonical()
+            }
+            Ordering::Less => {
+                Dyadic { negative: other.negative, mag: b.sub(&a), exp }.canonical()
+            }
+        }
+    }
+
+    /// Exact subtraction.
+    pub fn sub(&self, other: &Dyadic) -> Self {
+        self.add(&other.neg())
+    }
+
+    /// Exact multiplication.
+    pub fn mul(&self, other: &Dyadic) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        Dyadic {
+            negative: self.negative != other.negative,
+            mag: self.mag.mul(&other.mag),
+            exp: self.exp + other.exp,
+        }
+        .canonical()
+    }
+
+    /// Division correctly rounded (to nearest, ties away) to `prec` bits
+    /// of significand.
+    pub fn div(&self, other: &Dyadic, prec: u64) -> Self {
+        assert!(!other.is_zero(), "Dyadic division by zero");
+        if self.is_zero() {
+            return Self::zero();
+        }
+        // scale numerator so the integer quotient has >= prec+1 bits
+        let shift = prec + 2 + other.mag.bits();
+        let num = self.mag.shl(shift);
+        let (q, r) = div_rem(&num, &other.mag);
+        // round to nearest on the remainder: q += (2r >= d)
+        let q = {
+            let twice = r.shl(1);
+            if twice.cmp_mag(&other.mag) != Ordering::Less {
+                q.add(&BigUint::from_u64(1))
+            } else {
+                q
+            }
+        };
+        Dyadic {
+            negative: self.negative != other.negative,
+            mag: q,
+            exp: self.exp - other.exp - shift as i64,
+        }
+        .canonical()
+    }
+
+    pub fn cmp(&self, other: &Dyadic) -> Ordering {
+        match (self.is_zero(), other.is_zero()) {
+            (true, true) => return Ordering::Equal,
+            (true, false) => {
+                return if other.negative { Ordering::Greater } else { Ordering::Less }
+            }
+            (false, true) => {
+                return if self.negative { Ordering::Less } else { Ordering::Greater }
+            }
+            _ => {}
+        }
+        if self.negative != other.negative {
+            return if self.negative { Ordering::Less } else { Ordering::Greater };
+        }
+        let mag_ord = self.cmp_mag_aligned(other);
+        if self.negative { mag_ord.reverse() } else { mag_ord }
+    }
+
+    fn cmp_mag_aligned(&self, other: &Dyadic) -> Ordering {
+        // compare |self| vs |other|: compare bit-lengths + exponents first
+        let hb_a = self.exp + self.mag.bits() as i64;
+        let hb_b = other.exp + other.mag.bits() as i64;
+        if hb_a != hb_b {
+            return hb_a.cmp(&hb_b);
+        }
+        let exp = self.exp.min(other.exp);
+        let a = self.mag.shl((self.exp - exp) as u64);
+        let b = other.mag.shl((other.exp - exp) as u64);
+        a.cmp_mag(&b)
+    }
+
+    /// Round to nearest `f64` (ties to even). Saturates to ±inf outside
+    /// range (not expected in our workloads).
+    pub fn to_f64(&self) -> f64 {
+        if self.is_zero() {
+            return 0.0;
+        }
+        let bits = self.mag.bits();
+        let (top54, sticky) = self.mag.top_bits(54);
+        // top54 holds the leading 54 bits; we want 53 with G/S rounding
+        let mant = (top54 >> 1) as u64;
+        let guard = top54 & 1 == 1;
+        let sticky = sticky || (bits > 54 && self.mag.trailing_zeros() < bits - 54);
+        let mut m = mant; // 53 bits (top bit set)
+        if guard && (sticky || m & 1 == 1) {
+            m += 1;
+        }
+        let e2 = self.exp + bits as i64 - 53; // exponent of bit 0 of m
+        // m may have carried to 54 bits; f64 multiply absorbs that.
+        // Split the scale in two so subnormal results stay representable
+        // (a single pow2() step would underflow to zero prematurely).
+        let mant_f = m as f64;
+        let h1 = e2 / 2;
+        let h2 = e2 - h1;
+        let val = (mant_f * pow2(h1)) * pow2(h2);
+        if self.negative { -val } else { val }
+    }
+
+    /// Round to nearest `f32`.
+    pub fn to_f32(&self) -> f32 {
+        self.to_f64() as f32 // double rounding safe: 53 - 24 > 2 guard bits
+    }
+
+    /// `log2(|self|)` approximately (for error reporting).
+    pub fn log2_abs(&self) -> f64 {
+        if self.is_zero() {
+            return f64::NEG_INFINITY;
+        }
+        let bits = self.mag.bits();
+        let (top, _) = self.mag.top_bits(53);
+        let frac = top as f64 / 2f64.powi(52); // in [1, 2)
+        (self.exp + bits as i64 - 1) as f64 + frac.log2()
+    }
+}
+
+/// `2^e` as f64, handling the full dyadic exponent range by stepping.
+fn pow2(e: i64) -> f64 {
+    if (-1022..=1023).contains(&e) {
+        return f64::from_bits(((e + 1023) as u64) << 52);
+    }
+    // subnormal / huge: build by squaring steps (rare path)
+    let mut r = 1.0f64;
+    let step = if e > 0 { 512 } else { -512 };
+    let mut left = e;
+    while left != 0 {
+        let s = if left.abs() >= 512 { step } else { left };
+        r *= f64::from_bits(((s + 1023) as u64) << 52);
+        left -= s;
+    }
+    r
+}
+
+/// Schoolbook long division: returns (quotient, remainder).
+fn div_rem(num: &BigUint, den: &BigUint) -> (BigUint, BigUint) {
+    assert!(!den.is_zero());
+    if num.cmp_mag(den) == Ordering::Less {
+        return (BigUint::zero(), num.clone());
+    }
+    let shift = num.bits() - den.bits();
+    let mut rem = num.clone();
+    let mut quo = BigUint::zero();
+    let mut d = den.shl(shift);
+    let one = BigUint::from_u64(1);
+    for i in (0..=shift).rev() {
+        if rem.cmp_mag(&d) != Ordering::Less {
+            rem = rem.sub(&d);
+            quo = quo.add(&one.shl(i));
+        }
+        d = d.shr(1);
+    }
+    (quo, rem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn f64_roundtrip_exact() {
+        let mut rng = Rng::new(71);
+        for _ in 0..50_000 {
+            let v = rng.normal() * rng.uniform(-300.0, 300.0).exp2();
+            if !v.is_finite() || v == 0.0 {
+                continue;
+            }
+            assert_eq!(Dyadic::from_f64(v).to_f64(), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let mut rng = Rng::new(72);
+        for _ in 0..50_000 {
+            let v = rng.spread_f32(-120, 120);
+            assert_eq!(Dyadic::from_f32(v).to_f32(), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn subnormal_f64_roundtrip() {
+        for v in [f64::MIN_POSITIVE / 2.0, 5e-324, -5e-324, f64::MIN_POSITIVE] {
+            assert_eq!(Dyadic::from_f64(v).to_f64(), v, "v={v:e}");
+        }
+    }
+
+    #[test]
+    fn add_is_exact_vs_f64_where_f64_is_exact() {
+        // sums of f32s fit f64 exactly
+        let mut rng = Rng::new(73);
+        for _ in 0..50_000 {
+            let a = rng.spread_f32(-20, 20);
+            let b = rng.spread_f32(-20, 20);
+            let d = Dyadic::from_f32(a).add(&Dyadic::from_f32(b));
+            assert_eq!(d.to_f64(), a as f64 + b as f64);
+        }
+    }
+
+    #[test]
+    fn mul_is_exact_vs_f64_where_f64_is_exact() {
+        let mut rng = Rng::new(74);
+        for _ in 0..50_000 {
+            let a = rng.spread_f32(-20, 20);
+            let b = rng.spread_f32(-20, 20);
+            let d = Dyadic::from_f32(a).mul(&Dyadic::from_f32(b));
+            assert_eq!(d.to_f64(), a as f64 * b as f64);
+        }
+    }
+
+    #[test]
+    fn add_exactness_beyond_f64() {
+        // 1 + 2^-200 - 1 == 2^-200 exactly
+        let one = Dyadic::from_f64(1.0);
+        let tiny = Dyadic::from_parts(false, BigUint::from_u64(1), -200);
+        let r = one.add(&tiny).sub(&one);
+        assert_eq!(r.cmp(&tiny), Ordering::Equal);
+    }
+
+    #[test]
+    fn sub_cancellation_to_zero() {
+        let a = Dyadic::from_f64(3.5);
+        assert!(a.sub(&a).is_zero());
+    }
+
+    #[test]
+    fn signs_and_cmp() {
+        let a = Dyadic::from_f64(-2.0);
+        let b = Dyadic::from_f64(1.0);
+        assert_eq!(a.cmp(&b), Ordering::Less);
+        assert_eq!(b.cmp(&a), Ordering::Greater);
+        assert_eq!(a.cmp(&a.clone()), Ordering::Equal);
+        assert_eq!(a.neg().cmp(&Dyadic::from_f64(2.0)), Ordering::Equal);
+        assert_eq!(a.abs().cmp(&Dyadic::from_f64(2.0)), Ordering::Equal);
+        assert!(Dyadic::zero().cmp(&b) == Ordering::Less);
+        assert!(Dyadic::zero().cmp(&a) == Ordering::Greater);
+    }
+
+    #[test]
+    fn div_matches_f64_to_53_bits() {
+        let mut rng = Rng::new(75);
+        for _ in 0..20_000 {
+            let a = rng.normal();
+            let b = rng.normal();
+            if b.abs() < 1e-3 {
+                continue;
+            }
+            let q = Dyadic::from_f64(a).div(&Dyadic::from_f64(b), 64);
+            let rel = ((q.to_f64() - a / b) / (a / b)).abs();
+            assert!(rel <= 2f64.powi(-52), "a={a} b={b} rel={rel:e}");
+        }
+    }
+
+    #[test]
+    fn div_high_precision_residual_small() {
+        let a = Dyadic::from_f64(1.0);
+        let b = Dyadic::from_f64(3.0);
+        let q = a.div(&b, 256);
+        // |1 - 3q| <= 3 * 2^-256-ish
+        let resid = a.sub(&q.mul(&b)).abs();
+        let bound = Dyadic::from_parts(false, BigUint::from_u64(1), -250);
+        assert_eq!(resid.cmp(&bound), Ordering::Less);
+    }
+
+    #[test]
+    fn from_ff_is_exact_sum() {
+        let hi = 1.5f32;
+        let lo = 2f32.powi(-30);
+        let d = Dyadic::from_ff(hi, lo);
+        assert_eq!(d.to_f64(), hi as f64 + lo as f64);
+    }
+
+    #[test]
+    fn log2_abs_sane() {
+        assert!((Dyadic::from_f64(8.0).log2_abs() - 3.0).abs() < 1e-12);
+        assert!((Dyadic::from_f64(0.25).log2_abs() + 2.0).abs() < 1e-12);
+        let v = Dyadic::from_parts(false, BigUint::from_u64(3), -100);
+        assert!((v.log2_abs() - (3f64.log2() - 100.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ties_to_even_rounding() {
+        // 2^53 + 1 is a tie between 2^53 and 2^53+2 -> rounds to even 2^53
+        let v = Dyadic::from_parts(false, BigUint::from_u64((1 << 53) + 1), 0);
+        assert_eq!(v.to_f64(), 9007199254740992.0);
+        // 2^53 + 3 -> rounds to 2^53 + 4
+        let v = Dyadic::from_parts(false, BigUint::from_u64((1 << 53) + 3), 0);
+        assert_eq!(v.to_f64(), 9007199254740996.0);
+    }
+}

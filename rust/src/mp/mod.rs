@@ -1,0 +1,22 @@
+//! Multiprecision substrate — the accuracy oracle (paper §6.1 used MPFR).
+//!
+//! The paper measures operator accuracy against MPFR. We have no MPFR in
+//! this image, so we build the needed subset from scratch:
+//!
+//! * [`biguint`] — minimal arbitrary-precision unsigned integer
+//!   (schoolbook, little-endian u64 limbs);
+//! * [`dyadic`] — **exact** signed dyadic numbers `± m · 2^e`. Every
+//!   `f32`/`f64` is a dyadic, and dyadics are closed under `+ - ×`, so
+//!   float-float results can be compared against *exact* references with
+//!   no oracle error at all (stronger than MPFR at any finite
+//!   precision). Division rounds to a requested precision (default 256
+//!   bits), which exceeds every bound the paper states by >200 bits.
+//!
+//! The Table 5 harness ([`crate::harness::accuracy`]) expresses errors in
+//! `log2(|err|/|exact|)`, matching the paper's "-48.0" notation.
+
+pub mod biguint;
+pub mod dyadic;
+
+pub use biguint::BigUint;
+pub use dyadic::Dyadic;

@@ -1,0 +1,171 @@
+//! The PJRT execution engine: compile-on-demand cache + typed execute.
+//!
+//! One `Runtime` owns one PJRT CPU client and a cache of compiled
+//! executables keyed by artifact name. PJRT wrapper types are not
+//! `Sync`, so a `Runtime` lives on one thread — the coordinator gives it
+//! a dedicated "device thread" and feeds it through channels, exactly
+//! like a GPU command queue (see [`crate::coordinator`]).
+
+use super::manifest::{Entry, Manifest};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Compilation/execution statistics (observability for `ffgpu info`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiled: usize,
+    pub compile_seconds: f64,
+    pub executions: u64,
+    pub execute_seconds: f64,
+}
+
+/// PJRT engine with a lazy executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+/// Ensure the EFT-preserving XLA flag is present in the environment.
+///
+/// Must run before the first PJRT client is created in the process; XLA
+/// parses `XLA_FLAGS` once. DESIGN.md §4b documents the miscompilation
+/// this disables (the paper hit the same hazard class in Brook, §5).
+pub fn ensure_xla_flags() {
+    const FLAG: &str = "--xla_disable_hlo_passes=fusion";
+    let current = std::env::var("XLA_FLAGS").unwrap_or_default();
+    if !current.contains(FLAG) {
+        std::env::set_var("XLA_FLAGS", format!("{current} {FLAG}").trim().to_string());
+    }
+}
+
+impl Runtime {
+    /// Create the engine over an artifacts directory (reads the
+    /// manifest; compiles nothing yet).
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime, String> {
+        ensure_xla_flags();
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.borrow()
+    }
+
+    pub fn platform(&self) -> String {
+        format!("{} ({})", self.client.platform_name(), self.client.platform_version())
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn compiled(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact '{name}'"))?;
+        let path = self.manifest.path(entry);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        let mut st = self.stats.borrow_mut();
+        st.compiled += 1;
+        st.compile_seconds += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (warmup for benchmarking).
+    pub fn precompile(&self, names: &[&str]) -> Result<(), String> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 input planes; returns output planes.
+    ///
+    /// Shapes must match the manifest entry (scalar inputs = length-1
+    /// slices). All artifacts are lowered with `return_tuple=True`, so
+    /// the single result literal is a tuple of `n_out` arrays.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>, String> {
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| format!("unknown artifact '{name}'"))?
+            .clone();
+        self.validate_inputs(&entry, inputs)?;
+        let exe = self.compiled(name)?;
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&entry.in_shapes)
+            .map(|(data, shape)| {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data)
+                }
+            })
+            .collect();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {name}: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| format!("untuple {name}: {e}"))?;
+        if parts.len() != entry.n_out {
+            return Err(format!(
+                "{name}: expected {} outputs, got {}", entry.n_out, parts.len()
+            ));
+        }
+        let out: Result<Vec<Vec<f32>>, String> = parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| format!("download {name}: {e}")))
+            .collect();
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_seconds += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn validate_inputs(&self, entry: &Entry, inputs: &[&[f32]]) -> Result<(), String> {
+        if inputs.len() != entry.n_in {
+            return Err(format!(
+                "{}: expected {} inputs, got {}", entry.name, entry.n_in, inputs.len()
+            ));
+        }
+        for (i, (data, shape)) in inputs.iter().zip(&entry.in_shapes).enumerate() {
+            let want = shape.iter().product::<usize>().max(1);
+            if data.len() != want {
+                return Err(format!(
+                    "{}: input {i} has {} elements, expected {want}",
+                    entry.name, data.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+}

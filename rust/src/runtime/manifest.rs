@@ -1,0 +1,181 @@
+//! Typed view of `artifacts/manifest.json` (emitted by `compile.aot`).
+
+use crate::json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled artifact.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    /// Catalogue name, e.g. `add22_n65536`.
+    pub name: String,
+    /// Operator family (`add22`, `mul12`, `dot2`, `multipass`, ...).
+    pub op: String,
+    /// Stream length (elements per plane).
+    pub n: usize,
+    /// Number of input planes.
+    pub n_in: usize,
+    /// Number of output planes.
+    pub n_out: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Input shapes as lowered (empty vec = scalar).
+    pub in_shapes: Vec<Vec<usize>>,
+    /// Kind: `stream`, `multipass`, `dot2`, `horner2`.
+    pub kind: String,
+    /// Pallas block size used at lowering (0 for non-blocked graphs).
+    pub block: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated for testability).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let doc = json::parse(text).map_err(|e| e.to_string())?;
+        let format = doc.get("format").and_then(|v| v.as_str()).unwrap_or("");
+        if format != "hlo-text-v1" {
+            return Err(format!("unsupported manifest format '{format}'"));
+        }
+        let raw = doc
+            .get("entries")
+            .and_then(|v| v.as_array())
+            .ok_or("manifest missing 'entries'")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for e in raw {
+            let get_str = |k: &str| -> Result<String, String> {
+                e.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or(format!("entry missing '{k}'"))
+            };
+            let get_num = |k: &str| -> Result<usize, String> {
+                e.get(k).and_then(|v| v.as_usize()).ok_or(format!("entry missing '{k}'"))
+            };
+            let in_shapes = e
+                .get("in_shapes")
+                .and_then(|v| v.as_array())
+                .map(|shapes| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            s.as_array()
+                                .map(|dims| {
+                                    dims.iter().filter_map(|d| d.as_usize()).collect()
+                                })
+                                .unwrap_or_default()
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            entries.push(Entry {
+                name: get_str("name")?,
+                op: get_str("op")?,
+                n: get_num("n")?,
+                n_in: get_num("n_in")?,
+                n_out: get_num("n_out")?,
+                file: get_str("file")?,
+                in_shapes,
+                kind: get_str("kind")?,
+                block: get_num("block").unwrap_or(0),
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Entries of one operator family, sorted by n.
+    pub fn by_op(&self, op: &str) -> Vec<&Entry> {
+        let mut v: Vec<&Entry> = self.entries.iter().filter(|e| e.op == op).collect();
+        v.sort_by_key(|e| e.n);
+        v
+    }
+
+    /// Artifact path for an entry.
+    pub fn path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format": "hlo-text-v1",
+      "entries": [
+        {"name": "add_n4096", "op": "add", "n": 4096, "n_in": 2, "n_out": 1,
+         "file": "add_n4096.hlo.txt", "kind": "stream", "block": 4096,
+         "in_shapes": [[4096],[4096]]},
+        {"name": "add_n16384", "op": "add", "n": 16384, "n_in": 2, "n_out": 1,
+         "file": "add_n16384.hlo.txt", "kind": "stream", "block": 4096,
+         "in_shapes": [[16384],[16384]]},
+        {"name": "horner2_d31", "op": "horner2", "n": 32, "n_in": 4, "n_out": 2,
+         "file": "horner2_d31.hlo.txt", "kind": "horner2", "block": 0,
+         "in_shapes": [[32],[32],[],[]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(Path::new("/tmp/a"), DOC).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.get("add_n4096").unwrap();
+        assert_eq!(e.n_in, 2);
+        assert_eq!(e.in_shapes[0], vec![4096]);
+        assert_eq!(m.path(e), Path::new("/tmp/a/add_n4096.hlo.txt"));
+    }
+
+    #[test]
+    fn scalar_shapes_are_empty() {
+        let m = Manifest::parse(Path::new("."), DOC).unwrap();
+        let h = m.get("horner2_d31").unwrap();
+        assert_eq!(h.in_shapes[2], Vec::<usize>::new());
+    }
+
+    #[test]
+    fn by_op_sorted() {
+        let m = Manifest::parse(Path::new("."), DOC).unwrap();
+        let adds = m.by_op("add");
+        assert_eq!(adds.len(), 2);
+        assert!(adds[0].n < adds[1].n);
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(Path::new("."), r#"{"format": "v2", "entries": []}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // when `make artifacts` has run, validate the real thing end-to-end
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.len() >= 50, "expected full catalogue");
+            for e in &m.entries {
+                assert!(m.path(e).exists(), "{} missing", e.file);
+            }
+            // the paper grid must be present
+            for op in ["add", "mul", "mad", "add12", "mul12", "add22", "mul22"] {
+                assert_eq!(m.by_op(op).len(), 9, "op {op}");
+            }
+        }
+    }
+}

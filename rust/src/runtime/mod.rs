@@ -1,0 +1,21 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts.
+//!
+//! This is the "GPU" of the reproduction: `python/compile/aot.py` lowers
+//! the Pallas/JAX graphs once to HLO text; this module compiles them on
+//! the PJRT CPU client and executes them from rust — Python is never on
+//! the request path (Brook's runtime played this role in the paper).
+//!
+//! * [`manifest`] — typed view of `artifacts/manifest.json`;
+//! * [`engine`] — the [`engine::Runtime`]: PJRT client, lazy compile
+//!   cache, literal marshalling, execute-by-name.
+//!
+//! **XLA flag requirement**: every client must run with
+//! `--xla_disable_hlo_passes=fusion` (set automatically by
+//! [`engine::Runtime::new`]) — see DESIGN.md §4b for the XLA fusion
+//! miscompilation of EFT chains this works around.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Runtime;
+pub use manifest::{Entry, Manifest};

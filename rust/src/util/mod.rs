@@ -1,0 +1,77 @@
+//! Small shared utilities: deterministic RNG, timing, ulp helpers.
+//!
+//! No external crates: the image vendors only the `xla` dependency tree,
+//! so randomness, timing and stats are implemented here (documented
+//! substitution in DESIGN.md — the paper's harness likewise rolled its
+//! own test-vector generation).
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::Summary;
+pub use timer::Timer;
+
+/// Units in the last place of an `f32`, as an `f64` distance.
+///
+/// `ulp_f32(x)` is the gap between `x` and the next representable `f32`
+/// of larger magnitude. Used by accuracy harnesses to express errors in
+/// ulps the way the paranoia tool of the paper's Table 2 does.
+pub fn ulp_f32(x: f32) -> f64 {
+    if x == 0.0 {
+        return f32::from_bits(1) as f64; // smallest subnormal
+    }
+    let bits = x.to_bits() & 0x7fff_ffff;
+    if bits >= 0x7f80_0000 {
+        return f64::INFINITY; // inf/nan
+    }
+    let next = f32::from_bits(bits + 1);
+    (next as f64) - (f32::from_bits(bits) as f64)
+}
+
+/// log2 of |err| relative to |reference|: the paper's Table 5 metric
+/// ("Error max −48.0" means max |err| = 2^-48 · |reference|).
+/// Returns `None` when the error is exactly zero.
+pub fn log2_rel_error(err: f64, reference: f64) -> Option<f64> {
+    if err == 0.0 {
+        return None;
+    }
+    if reference == 0.0 {
+        return Some(f64::INFINITY);
+    }
+    Some((err.abs() / reference.abs()).log2())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ulp_of_one_is_2pow_neg23() {
+        assert_eq!(ulp_f32(1.0), 2f64.powi(-23));
+    }
+
+    #[test]
+    fn ulp_of_two_is_2pow_neg22() {
+        assert_eq!(ulp_f32(2.0), 2f64.powi(-22));
+    }
+
+    #[test]
+    fn ulp_of_zero_is_smallest_subnormal() {
+        assert!(ulp_f32(0.0) > 0.0);
+        assert!(ulp_f32(0.0) < 1e-44);
+    }
+
+    #[test]
+    fn ulp_is_sign_symmetric() {
+        assert_eq!(ulp_f32(-1.5), ulp_f32(1.5));
+    }
+
+    #[test]
+    fn log2_rel_error_basics() {
+        assert_eq!(log2_rel_error(0.0, 1.0), None);
+        let e = log2_rel_error(2f64.powi(-44), 1.0).unwrap();
+        assert!((e + 44.0).abs() < 1e-12);
+    }
+}

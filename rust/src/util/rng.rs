@@ -1,0 +1,170 @@
+//! Deterministic PRNG for workloads and property tests.
+//!
+//! xoshiro256** (Blackman & Vigna) — small, fast, and good enough for
+//! test-vector generation; reproducible across platforms so EXPERIMENTS.md
+//! numbers are stable. Not for cryptography.
+
+/// xoshiro256** generator with convenience float/distribution helpers.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded construction. Uses splitmix64 to expand the seed so that
+    /// nearby seeds give unrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// A "well-spread" finite normal f32: random sign, random exponent in
+    /// [min_exp, max_exp], full random mantissa. This is the distribution
+    /// the paper's accuracy runs need (denormals and specials excluded,
+    /// §6.1).
+    pub fn spread_f32(&mut self, min_exp: i32, max_exp: i32) -> f32 {
+        let exp = self.uniform(min_exp as f64, max_exp as f64);
+        let mant = 1.0 + self.f64();
+        let sign = if self.next_u64() & 1 == 0 { 1.0 } else { -1.0 };
+        (sign * mant * exp.exp2()) as f32
+    }
+
+    /// A normalised float-float pair (hi, lo) with |lo| <= ulp(hi)/2,
+    /// drawn from a wide f64 value (the natural way to build valid ff
+    /// test vectors).
+    pub fn ff_pair(&mut self, min_exp: i32, max_exp: i32) -> (f32, f32) {
+        let exp = self.uniform(min_exp as f64, max_exp as f64);
+        let v = self.normal() * exp.exp2();
+        let hi = v as f32;
+        let lo = (v - hi as f64) as f32;
+        (hi, lo)
+    }
+
+    /// Fill a vector with spread f32s.
+    pub fn fill_spread(&mut self, n: usize, min_exp: i32, max_exp: i32) -> Vec<f32> {
+        (0..n).map(|_| self.spread_f32(min_exp, max_exp)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.normal();
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn ff_pair_is_normalised() {
+        let mut r = Rng::new(11);
+        for _ in 0..10_000 {
+            let (hi, lo) = r.ff_pair(-10, 10);
+            if hi != 0.0 && lo != 0.0 {
+                assert!(lo.abs() as f64 <= crate::util::ulp_f32(hi) * 0.5 + 1e-300,
+                        "hi={hi} lo={lo}");
+            }
+            // round-trip: hi + lo == original within f64
+            assert_eq!((hi as f64 + lo as f64) as f32, hi);
+        }
+    }
+
+    #[test]
+    fn spread_f32_respects_exponent_range() {
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            let v = r.spread_f32(-6, 6);
+            let a = v.abs();
+            assert!(a > 2f32.powi(-8) && a < 2f32.powi(8), "{v}");
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Streaming summary statistics for accuracy sweeps and benchmarks.
+
+/// Online min/max/mean/count accumulator (Welford for the variance).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub min: f64,
+    pub max: f64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { count: 0, min: f64::INFINITY, max: f64::NEG_INFINITY, mean: 0.0, m2: 0.0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        let d = x - self.mean;
+        self.mean += d / self.count as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.count < 2 { 0.0 } else { self.m2 / (self.count - 1) as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constants() {
+        let mut s = Summary::new();
+        for _ in 0..10 {
+            s.add(3.0);
+        }
+        assert_eq!(s.count, 10);
+        assert_eq!(s.min, 3.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn summary_basic_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.variance() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut whole = Summary::new();
+        for i in 0..100 {
+            let x = (i as f64).sin();
+            whole.add(x);
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+        }
+        a.merge(&b);
+        assert_eq!(a.count, whole.count);
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.variance() - whole.variance()).abs() < 1e-12);
+        assert_eq!(a.min, whole.min);
+        assert_eq!(a.max, whole.max);
+    }
+}

@@ -1,0 +1,87 @@
+//! Measurement helpers for the bench harness: warmup + repeated timing
+//! with median-of-runs, the protocol all paper tables use.
+
+use std::time::Instant;
+
+/// Repeated-measurement timer.
+pub struct Timer {
+    /// Warmup iterations before measurement (amortises PJRT first-run
+    /// compilation, cache warmup).
+    pub warmup: usize,
+    /// Measured iterations; the reported value is the median.
+    pub reps: usize,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer { warmup: 3, reps: 9 }
+    }
+}
+
+impl Timer {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Timer { warmup, reps }
+    }
+
+    /// Median wall-clock seconds of `f` over `reps` runs.
+    pub fn median_secs<F: FnMut()>(&self, mut f: F) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times: Vec<f64> = (0..self.reps.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times[times.len() / 2]
+    }
+
+    /// Minimum wall-clock seconds (tightest lower bound, less noisy for
+    /// very short kernels).
+    pub fn min_secs<F: FnMut()>(&self, mut f: F) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        (0..self.reps.max(1))
+            .map(|_| {
+                let t0 = Instant::now();
+                f();
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_positive_and_sane() {
+        let t = Timer::new(1, 5);
+        let s = t.median_secs(|| {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s >= 0.0 && s < 1.0);
+    }
+
+    #[test]
+    fn min_leq_median() {
+        let t = Timer::new(1, 7);
+        let mut v = vec![0u64; 2048];
+        let med = t.median_secs(|| {
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = std::hint::black_box(i as u64 * 3);
+            }
+        });
+        let min = t.min_secs(|| {
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = std::hint::black_box(i as u64 * 3);
+            }
+        });
+        assert!(min <= med * 1.5 + 1e-9);
+    }
+}

@@ -1,0 +1,166 @@
+//! Integration: the coordinator service end-to-end over the XLA backend.
+
+use ffgpu::coordinator::service::Backend;
+use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::ff::FF32;
+use ffgpu::harness::workload;
+use ffgpu::util::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn xla_service(dir: PathBuf) -> Service {
+    Service::start(ServiceConfig {
+        backend: Backend::Xla(dir),
+        max_batch: 32,
+        precompile: false,
+    })
+    .expect("service start")
+}
+
+/// Native reference for one request.
+fn expect_add22(planes: &[Vec<f32>]) -> Vec<(f32, f32)> {
+    (0..planes[0].len())
+        .map(|i| {
+            let r = FF32::from_parts(planes[0][i], planes[1][i])
+                + FF32::from_parts(planes[2][i], planes[3][i]);
+            (r.hi, r.lo)
+        })
+        .collect()
+}
+
+#[test]
+fn odd_sizes_are_padded_and_correct() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = xla_service(dir);
+    let h = svc.handle();
+    // sizes that don't match any artifact: padding and windowing paths
+    for n in [1usize, 7, 100, 4095, 4097, 10_000] {
+        let planes = workload::planes_for("add22", n, n as u64);
+        let out = h.call("add22", planes.clone()).unwrap();
+        assert_eq!(out[0].len(), n);
+        let want = expect_add22(&planes);
+        for i in 0..n {
+            assert_eq!(
+                (out[0][i].to_bits(), out[1][i].to_bits()),
+                (want[i].0.to_bits(), want[i].1.to_bits()),
+                "n={n} lane={i}"
+            );
+        }
+    }
+    let m = svc.metrics();
+    assert!(m.padded_elements > 0, "padding path untested");
+}
+
+#[test]
+fn oversize_requests_split_across_launches() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = xla_service(dir);
+    let h = svc.handle();
+    // bigger than the largest artifact (1048576): forces multi-launch
+    let n = 1_200_000;
+    let planes = workload::planes_for("add", n, 99);
+    let out = h.call("add", planes.clone()).unwrap();
+    for i in (0..n).step_by(10_007) {
+        assert_eq!(out[0][i], planes[0][i] + planes[1][i], "lane {i}");
+    }
+    let m = svc.metrics();
+    assert!(m.launches >= 2, "expected a split, got {} launches", m.launches);
+}
+
+#[test]
+fn mixed_ops_from_concurrent_clients() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = xla_service(dir);
+    let mut joins = Vec::new();
+    for t in 0..6u64 {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let ops = ["add", "mul12", "add22", "mul22"];
+            for round in 0..10 {
+                let op = ops[(t as usize + round) % ops.len()];
+                let n = 500 + rng.below(5000);
+                let planes = workload::planes_for(op, n, rng.next_u64());
+                let out = h.call(op, planes.clone()).unwrap();
+                // spot check against native
+                let (_, n_out) =
+                    ffgpu::coordinator::batcher::op_arity(op).unwrap();
+                let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+                let mut native = vec![vec![0.0f32; n]; n_out];
+                ffgpu::ff::vector::dispatch(op, &refs, &mut native).unwrap();
+                for i in (0..n).step_by(131) {
+                    assert_eq!(out[0][i].to_bits(), native[0][i].to_bits(),
+                               "op={op} n={n} lane={i}");
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests, 60);
+    assert_eq!(m.errors, 0);
+}
+
+#[test]
+fn batching_coalesces_same_op_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = Service::start(ServiceConfig {
+        backend: Backend::Xla(dir),
+        max_batch: 64,
+        precompile: false,
+    })
+    .unwrap();
+    // submit many small async requests before the device thread drains
+    let h = svc.handle();
+    let mut pending = Vec::new();
+    let mut wants = Vec::new();
+    for k in 0..40 {
+        let planes = workload::planes_for("add22", 50 + k, k as u64);
+        wants.push(expect_add22(&planes));
+        pending.push(h.submit("add22", planes).unwrap());
+    }
+    for (rx, want) in pending.into_iter().zip(wants) {
+        let out = rx.recv().unwrap().unwrap();
+        for (i, (h_, l_)) in want.iter().enumerate() {
+            assert_eq!((out[0][i], out[1][i]), (*h_, *l_), "lane {i}");
+        }
+    }
+    let m = svc.metrics();
+    assert!(
+        m.batches < m.requests,
+        "no coalescing happened: {} batches for {} requests",
+        m.batches, m.requests
+    );
+}
+
+#[test]
+fn cpu_and_xla_backends_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let xla = xla_service(dir);
+    let cpu = Service::start(ServiceConfig {
+        backend: Backend::Cpu,
+        ..Default::default()
+    })
+    .unwrap();
+    for op in ["add12", "mul12", "add22", "mul22", "div22"] {
+        let planes = workload::planes_for(op, 3000, 0xE44E);
+        let a = xla.handle().call(op, planes.clone()).unwrap();
+        let b = cpu.handle().call(op, planes).unwrap();
+        for (pa, pb) in a.iter().zip(&b) {
+            for i in 0..pa.len() {
+                assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "op={op} lane={i}");
+            }
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` (tests no-op with a notice when the
+//! directory is missing — CI always builds artifacts first).
+
+use ffgpu::coordinator::batcher::op_arity;
+use ffgpu::ff::{compensated, FF32};
+use ffgpu::harness::workload;
+use ffgpu::mp::Dyadic;
+use ffgpu::runtime::Runtime;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn all_stream_ops_bit_match_native_at_4096() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    for op in workload::PAPER_OPS.iter().chain(workload::EXT_OPS.iter()) {
+        let planes = workload::planes_for(op, 4096, 0xBEEF);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let xla = rt.execute(&format!("{op}_n4096"), &refs).unwrap();
+        let (_, n_out) = op_arity(op).unwrap();
+        let mut native = vec![vec![0.0f32; 4096]; n_out];
+        ffgpu::ff::vector::dispatch(op, &refs, &mut native).unwrap();
+        for (o, (a, b)) in xla.iter().zip(&native).enumerate() {
+            for i in 0..4096 {
+                assert_eq!(
+                    a[i].to_bits(), b[i].to_bits(),
+                    "{op} out{o} lane {i}: xla={} native={}", a[i], b[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn large_sizes_bit_match_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    for (op, n) in [("mul12", 65536usize), ("add22", 262144), ("mul22", 1048576)] {
+        let planes = workload::planes_for(op, n, 0xCAFE);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let xla = rt.execute(&format!("{op}_n{n}"), &refs).unwrap();
+        let (_, n_out) = op_arity(op).unwrap();
+        let mut native = vec![vec![0.0f32; n]; n_out];
+        ffgpu::ff::vector::dispatch(op, &refs, &mut native).unwrap();
+        for (a, b) in xla.iter().zip(&native) {
+            let bad = a.iter().zip(b).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+            assert_eq!(bad, 0, "{op}@{n}: {bad} lanes differ");
+        }
+    }
+}
+
+#[test]
+fn mul12_exactness_through_artifacts() {
+    // Th. 4 holds through the whole AOT+PJRT stack (DESIGN.md §4b is the
+    // regression this guards).
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let n = 65536;
+    let planes = workload::planes_for("mul12", n, 0xD00D);
+    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+    let out = rt.execute(&format!("mul12_n{n}"), &refs).unwrap();
+    for i in 0..n {
+        let exact = Dyadic::from_f32(planes[0][i]).mul(&Dyadic::from_f32(planes[1][i]));
+        let got = Dyadic::from_ff(out[0][i], out[1][i]);
+        assert!(got.sub(&exact).is_zero(), "lane {i} not exact");
+    }
+}
+
+#[test]
+fn add12_exactness_through_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let n = 16384;
+    let planes = workload::planes_for("add12", n, 0xD11D);
+    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+    let out = rt.execute(&format!("add12_n{n}"), &refs).unwrap();
+    for i in 0..n {
+        let exact = Dyadic::from_f32(planes[0][i]).add(&Dyadic::from_f32(planes[1][i]));
+        let got = Dyadic::from_ff(out[0][i], out[1][i]);
+        assert!(got.sub(&exact).is_zero(), "lane {i} not exact");
+    }
+}
+
+#[test]
+fn dot2_artifact_matches_native_pairwise() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let name = "dot2_n65536";
+    if rt.manifest().get(name).is_none() {
+        eprintln!("skipping: {name} not in manifest");
+        return;
+    }
+    let n = 65536;
+    let planes = workload::planes_for("mul22", n, 0xA11A); // 4 ff planes
+    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+    let out = rt.execute(name, &refs).unwrap();
+    assert_eq!(out[0].len(), 1);
+    let got = FF32::from_parts(out[0][0], out[1][0]);
+    let native =
+        compensated::dot_ff_pairwise(&planes[0], &planes[1], &planes[2], &planes[3]);
+    assert_eq!(got.hi.to_bits(), native.hi.to_bits(), "dot2 hi differs");
+    assert_eq!(got.lo.to_bits(), native.lo.to_bits(), "dot2 lo differs");
+}
+
+#[test]
+fn horner2_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let name = "horner2_d31";
+    let Some(entry) = rt.manifest().get(name).cloned() else {
+        eprintln!("skipping: {name} not in manifest");
+        return;
+    };
+    let deg1 = entry.n; // degree + 1 coefficients
+    let planes = workload::planes_for("mul22", deg1, 0xB22B);
+    let (ch, cl) = (&planes[0], &planes[1]);
+    let x = FF32::from_f64(0.73);
+    let (xh, xl) = ([x.hi], [x.lo]);
+    let inputs: Vec<&[f32]> = vec![ch, cl, &xh, &xl];
+    let out = rt.execute(name, &inputs).unwrap();
+    let got = FF32::from_parts(out[0][0], out[1][0]);
+    let native = compensated::horner_ff(ch, cl, x);
+    assert_eq!(got.hi.to_bits(), native.hi.to_bits());
+    assert_eq!(got.lo.to_bits(), native.lo.to_bits());
+}
+
+#[test]
+fn multipass_artifact_matches_native_iteration() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let entry = rt
+        .manifest()
+        .entries
+        .iter()
+        .find(|e| e.kind == "multipass")
+        .cloned();
+    let Some(entry) = entry else {
+        eprintln!("skipping: no multipass artifact");
+        return;
+    };
+    let n = entry.n;
+    // iters encoded in the name: multipass_n{n}_k{iters}
+    let iters: usize = entry
+        .name
+        .rsplit('_')
+        .next()
+        .and_then(|s| s.strip_prefix('k'))
+        .and_then(|s| s.parse().ok())
+        .expect("iters in name");
+    let mut planes = workload::planes_for("mul22", n, 0xC33C);
+    // keep |b| < 1 so the iteration stays bounded
+    for i in 0..n {
+        let b = FF32::from_f64(
+            (planes[2][i] as f64).rem_euclid(1.8) - 0.9,
+        );
+        planes[2][i] = b.hi;
+        planes[3][i] = b.lo;
+    }
+    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+    let out = rt.execute(&entry.name, &refs).unwrap();
+    for i in (0..n).step_by(97) {
+        let a = FF32::from_parts(planes[0][i], planes[1][i]);
+        let b = FF32::from_parts(planes[2][i], planes[3][i]);
+        let mut x = a;
+        for _ in 0..iters {
+            x = x * b + a;
+        }
+        assert_eq!(
+            (out[0][i].to_bits(), out[1][i].to_bits()),
+            (x.hi.to_bits(), x.lo.to_bits()),
+            "lane {i}"
+        );
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_shapes_and_names() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.execute("nope_n1", &[]).is_err());
+    let too_short = vec![0.0f32; 16];
+    assert!(rt.execute("add_n4096", &[&too_short, &too_short]).is_err());
+    let ok = vec![0.0f32; 4096];
+    assert!(rt.execute("add_n4096", &[&ok]).is_err()); // wrong arity
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let a = vec![1.0f32; 4096];
+    let b = vec![2.0f32; 4096];
+    for _ in 0..3 {
+        rt.execute("add_n4096", &[&a, &b]).unwrap();
+    }
+    let st = rt.stats();
+    assert_eq!(st.compiled, 1);
+    assert_eq!(st.executions, 3);
+    assert!(st.execute_seconds > 0.0);
+}

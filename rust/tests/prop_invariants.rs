@@ -1,0 +1,256 @@
+//! Property-based invariant tests.
+//!
+//! No proptest crate in the vendored set, so this is a seeded
+//! random-search harness (documented substitution, DESIGN.md): each
+//! property runs tens of thousands of cases drawn from adversarial
+//! distributions (wide exponent spreads, near-cancellation pairs,
+//! boundary mantissas) and reports the first counterexample verbatim.
+
+use ffgpu::coordinator::batcher;
+use ffgpu::ff::{self, FF32};
+use ffgpu::gpusim::{algorithms as sim, GpuModel};
+use ffgpu::mp::{BigUint, Dyadic};
+use ffgpu::util::Rng;
+
+const CASES: usize = 50_000;
+
+/// Adversarial f32 generator: spreads, exact powers, boundary mantissas,
+/// near-cancellation partners.
+fn adversarial_f32(rng: &mut Rng) -> f32 {
+    match rng.below(8) {
+        0 => rng.spread_f32(-80, 80),
+        1 => rng.spread_f32(-3, 3),
+        2 => (rng.uniform(-40.0, 40.0)).exp2() as f32, // exact powers of 2
+        3 => {
+            // all-ones mantissa
+            let e = rng.uniform(-20.0, 20.0).exp2() as f32;
+            e * (2.0 - f32::EPSILON)
+        }
+        4 => {
+            // mantissa with only the last bit set beyond 1.0
+            let e = rng.uniform(-20.0, 20.0).exp2() as f32;
+            e * (1.0 + f32::EPSILON)
+        }
+        5 => -rng.spread_f32(-10, 10),
+        6 => rng.spread_f32(-126, -100), // near the flush boundary
+        _ => rng.spread_f32(0, 30),
+    }
+}
+
+#[test]
+fn prop_two_sum_is_error_free() {
+    let mut rng = Rng::new(0x1001);
+    for case in 0..CASES {
+        let a = adversarial_f32(&mut rng);
+        let b = adversarial_f32(&mut rng);
+        let (s, r) = ff::two_sum(a, b);
+        if !s.is_finite() {
+            continue;
+        }
+        assert_eq!(
+            s as f64 + r as f64,
+            a as f64 + b as f64,
+            "case {case}: two_sum({a:e}, {b:e}) = ({s:e}, {r:e})"
+        );
+    }
+}
+
+#[test]
+fn prop_two_prod_is_error_free_in_range() {
+    let mut rng = Rng::new(0x1002);
+    for case in 0..CASES {
+        let a = rng.spread_f32(-40, 40);
+        let b = rng.spread_f32(-40, 40);
+        let (x, y) = ff::two_prod(a, b);
+        if !x.is_finite() || (y != 0.0 && y.abs() < f32::MIN_POSITIVE * 4.0) {
+            continue; // overflow / subnormal error term (excluded, §6.1)
+        }
+        assert_eq!(
+            x as f64 + y as f64,
+            a as f64 * b as f64,
+            "case {case}: two_prod({a:e}, {b:e})"
+        );
+    }
+}
+
+#[test]
+fn prop_split_parts_recombine_and_fit() {
+    let mut rng = Rng::new(0x1003);
+    for case in 0..CASES {
+        let a = adversarial_f32(&mut rng);
+        for (hi, lo) in [ff::split(a), ff::split_dekker(a)] {
+            if !hi.is_finite() {
+                continue; // dekker splitter can overflow at the extreme
+            }
+            assert_eq!(hi as f64 + lo as f64, a as f64, "case {case}: split({a:e})");
+            // non-overlap: hi's ulp granularity covers lo's magnitude
+            if hi != 0.0 && lo != 0.0 {
+                assert!(
+                    lo.abs() as f64 <= ffgpu::util::ulp_f32(hi) * 4096.0,
+                    "case {case}: overlap split({a:e}) -> ({hi:e}, {lo:e})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ff32_add_mul_error_bounds() {
+    let mut rng = Rng::new(0x1004);
+    for case in 0..CASES {
+        let (ah, al) = rng.ff_pair(-10, 10);
+        let (bh, bl) = rng.ff_pair(-10, 10);
+        let a = FF32::from_parts(ah, al);
+        let b = FF32::from_parts(bh, bl);
+        let (a64, b64) = (a.to_f64(), b.to_f64());
+
+        let sum = a + b;
+        let sum_err = (sum.to_f64() - (a64 + b64)).abs();
+        let sum_bound = (2f64.powi(-23) * (al as f64 + bl as f64).abs())
+            .max(2f64.powi(-43) * (a64 + b64).abs());
+        assert!(sum_err <= sum_bound + 1e-300, "case {case}: add22 {a:?} {b:?}");
+
+        let prod = a * b;
+        if prod.is_finite() && a64 * b64 != 0.0 {
+            let rel = ((prod.to_f64() - a64 * b64) / (a64 * b64)).abs();
+            assert!(rel <= 2f64.powi(-43), "case {case}: mul22 {a:?} {b:?} rel={rel:e}");
+        }
+    }
+}
+
+#[test]
+fn prop_ff32_results_stay_normalised() {
+    let mut rng = Rng::new(0x1005);
+    for case in 0..CASES {
+        let (ah, al) = rng.ff_pair(-12, 12);
+        let (bh, bl) = rng.ff_pair(-12, 12);
+        let a = FF32::from_parts(ah, al);
+        let b = FF32::from_parts(bh, bl);
+        for (tag, r) in [("add", a + b), ("sub", a - b), ("mul", a * b)] {
+            if r.is_finite() {
+                assert!(r.is_normalised(), "case {case} {tag}: {r:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dyadic_ring_axioms() {
+    let mut rng = Rng::new(0x1006);
+    for case in 0..20_000 {
+        let a = Dyadic::from_f32(adversarial_f32(&mut rng));
+        let b = Dyadic::from_f32(adversarial_f32(&mut rng));
+        let c = Dyadic::from_f32(adversarial_f32(&mut rng));
+        // commutativity
+        assert_eq!(a.add(&b).cmp(&b.add(&a)), std::cmp::Ordering::Equal, "case {case}");
+        assert_eq!(a.mul(&b).cmp(&b.mul(&a)), std::cmp::Ordering::Equal, "case {case}");
+        // associativity (exact arithmetic!)
+        let l = a.add(&b).add(&c);
+        let r = a.add(&b.add(&c));
+        assert_eq!(l.cmp(&r), std::cmp::Ordering::Equal, "case {case}");
+        // distributivity
+        let l = a.mul(&b.add(&c));
+        let r = a.mul(&b).add(&a.mul(&c));
+        assert_eq!(l.cmp(&r), std::cmp::Ordering::Equal, "case {case}");
+        // sub/neg coherence
+        assert!(a.sub(&a).is_zero(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_biguint_mul_matches_division_back() {
+    let mut rng = Rng::new(0x1007);
+    for case in 0..10_000 {
+        let a = BigUint::from_u128(((rng.next_u64() as u128) << 32) | rng.next_u64() as u128);
+        let b = BigUint::from_u64(rng.next_u64() | 1);
+        let p = a.mul(&b);
+        // p has bits(a)+bits(b) or one less
+        let bits = p.bits();
+        assert!(
+            bits == a.bits() + b.bits() || bits + 1 == a.bits() + b.bits(),
+            "case {case}: bits {bits} vs {} + {}", a.bits(), b.bits()
+        );
+        // (a*b) >> k << k == a*b when k <= trailing zeros
+        let tz = p.trailing_zeros();
+        assert_eq!(p.shr(tz).shl(tz), p, "case {case}");
+    }
+}
+
+#[test]
+fn prop_gpusim_ieee_matches_hardware() {
+    // the IEEE-configured simulator must agree with actual f32 hardware
+    // on every operation — the strongest check that the datapath
+    // emulation (alignment, guard, sticky, RNE) is exactly right.
+    let m = GpuModel::IEEE;
+    let mut rng = Rng::new(0x1008);
+    for case in 0..CASES {
+        let a = rng.spread_f32(-30, 30);
+        let b = rng.spread_f32(-30, 30);
+        let qa = m.quantize(a as f64);
+        let qb = m.quantize(b as f64);
+        assert_eq!(m.to_f64(m.add(qa, qb)), (a + b) as f64, "case {case}: {a:e}+{b:e}");
+        assert_eq!(m.to_f64(m.sub(qa, qb)), (a - b) as f64, "case {case}: {a:e}-{b:e}");
+        assert_eq!(m.to_f64(m.mul(qa, qb)), (a * b) as f64, "case {case}: {a:e}*{b:e}");
+    }
+}
+
+#[test]
+fn prop_gpusim_add12_exact_under_guard_bit() {
+    // Th. 2 under the paper's Nvidia assumption, random search
+    let m = GpuModel::NV35;
+    let mut rng = Rng::new(0x1009);
+    let mut inexact = 0u32;
+    for _ in 0..CASES {
+        let a = m.quantize(rng.spread_f32(-10, 10) as f64);
+        let b = m.quantize(rng.spread_f32(-10, 10) as f64);
+        let (s, r) = sim::add12(&m, a, b);
+        if m.to_f64(s) + m.to_f64(r) != m.to_f64(a) + m.to_f64(b) {
+            inexact += 1;
+        }
+    }
+    // truncated-with-guard addition: rare sub-ulp residuals only
+    assert!((inexact as f64) / (CASES as f64) < 0.02, "inexact={inexact}");
+}
+
+#[test]
+fn prop_batcher_plan_covers_exactly() {
+    let sizes = [4096usize, 16384, 65536, 262144, 1048576];
+    let mut rng = Rng::new(0x100A);
+    for case in 0..20_000 {
+        let total = 1 + rng.below(3_000_000);
+        let plan = batcher::plan(total, &sizes).unwrap();
+        // launches tile [0, total) contiguously
+        let mut pos = 0usize;
+        for l in &plan {
+            assert_eq!(l.start, pos, "case {case}: gap in plan {plan:?}");
+            assert!(l.len <= l.size, "case {case}");
+            assert!(sizes.contains(&l.size), "case {case}");
+            pos += l.len;
+        }
+        assert_eq!(pos, total, "case {case}: plan covers {pos} of {total}");
+        // waste is bounded: at most one launch is padded, and padding
+        // stays below the largest artifact size
+        let padding: usize = plan.iter().map(|l| l.size - l.len).sum();
+        assert!(padding < 1048576, "case {case}: padding {padding}");
+    }
+}
+
+#[test]
+fn prop_compensated_sum_within_bound() {
+    let mut rng = Rng::new(0x100B);
+    for case in 0..2_000 {
+        let n = 10 + rng.below(3000);
+        let data: Vec<f32> = (0..n).map(|_| adversarial_f32(&mut rng) * 1e-10).collect();
+        let want: f64 = data.iter().map(|&v| v as f64).sum();
+        let got = ff::compensated::sum2(&data) as f64;
+        let scale: f64 = data.iter().map(|&v| (v as f64).abs()).sum();
+        // Sum2 bound: |err| <= eps|sum| + O(n eps^2) * scale
+        let bound = 2f64.powi(-24) * want.abs()
+            + (n * n) as f64 * 2f64.powi(-48) * scale
+            + 1e-300;
+        assert!(
+            (got - want).abs() <= bound * 4.0,
+            "case {case}: n={n} err={:e} bound={bound:e}", (got - want).abs()
+        );
+    }
+}
