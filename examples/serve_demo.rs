@@ -1,12 +1,14 @@
 //! Coordinator serving demo: concurrent clients, dynamic batching,
-//! metrics — the L3 layer exercised as a service.
+//! sharded dispatch, metrics — the L3 layer exercised as a service.
 //!
 //! ```bash
-//! cargo run --release --example serve_demo            # XLA backend
-//! FFGPU_BACKEND=cpu cargo run --release --example serve_demo
+//! cargo run --release --example serve_demo                  # native backend
+//! FFGPU_BACKEND=native:2 FFGPU_SHARDS=4 cargo run --release --example serve_demo
+//! FFGPU_BACKEND=gpusim:nv35 cargo run --release --example serve_demo
+//! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! ```
 
-use ffgpu::coordinator::service::Backend;
+use ffgpu::backend::BackendSpec;
 use ffgpu::coordinator::{Service, ServiceConfig};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -17,17 +19,37 @@ fn main() {
     let artifacts = PathBuf::from(
         std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
-    let backend = match std::env::var("FFGPU_BACKEND").as_deref() {
-        Ok("cpu") => Backend::Cpu,
-        _ if artifacts.join("manifest.json").exists() => Backend::Xla(artifacts),
-        _ => {
-            println!("(no artifacts; falling back to CPU backend)");
-            Backend::Cpu
+    let explicit = std::env::var("FFGPU_BACKEND").ok();
+    let backend_name = explicit.clone().unwrap_or_else(|| {
+        if artifacts.join("manifest.json").exists() {
+            "xla".into()
+        } else {
+            println!("(no artifacts; using the native backend)");
+            "native".into()
         }
+    });
+    let shards: usize = std::env::var("FFGPU_SHARDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let spec = BackendSpec::from_cli(&backend_name, &artifacts).expect("backend spec");
+    println!("backend: {} x {shards} shard(s)", spec.label());
+    let svc = match Service::start(ServiceConfig { backend: spec, shards, max_batch: 64 }) {
+        Ok(svc) => svc,
+        // auto-detected xla but the engine is unavailable (e.g. built
+        // without the `xla` feature): fall back to native rather than
+        // panic; an explicit FFGPU_BACKEND request still fails loudly
+        Err(e) if explicit.is_none() => {
+            println!("(xla backend unavailable: {e}; falling back to native)");
+            Service::start(ServiceConfig {
+                backend: BackendSpec::native(),
+                shards,
+                max_batch: 64,
+            })
+            .expect("service")
+        }
+        Err(e) => panic!("service: {e}"),
     };
-    println!("backend: {backend:?}");
-    let svc = Service::start(ServiceConfig { backend, max_batch: 64, precompile: false })
-        .expect("service");
 
     // a mixed workload: 8 clients, varying ops and sizes
     let ops = ["add22", "mul22", "mul12", "add12", "div22"];
@@ -68,4 +90,8 @@ fn main() {
     println!("client latency: p50={:.2}ms  p95={:.2}ms  p99={:.2}ms",
              pct(0.50) * 1e3, pct(0.95) * 1e3, pct(0.99) * 1e3);
     println!("errors: {}", m.errors);
+    for (i, s) in svc.shard_metrics().iter().enumerate() {
+        println!("shard {i}: requests={} batches={} elements={} mean lat={:.2}ms",
+                 s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
+    }
 }

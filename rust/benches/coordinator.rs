@@ -1,71 +1,203 @@
-//! Bench: coordinator throughput/latency — the L3 hot path.
+//! Bench: coordinator throughput/latency across backends and shard
+//! counts — the L3 hot path.
 //!
-//! Not a paper table (the paper has no serving layer); this is the §Perf
-//! instrument for L3: requests/s and per-batch latency across request
-//! sizes and client counts, on both backends.
+//! Not a paper table (the paper has no serving layer); this is the
+//! §Perf instrument for the backend layer: requests/s and Melem/s for
+//! native single-shard (the seed's serving behaviour), native sharded,
+//! the gpusim stream VM, and XLA when artifacts exist. Results also
+//! land in `BENCH_coordinator.json` so the perf trajectory is
+//! machine-readable across PRs.
 
-use ffgpu::coordinator::service::Backend;
+use ffgpu::backend::BackendSpec;
 use ffgpu::coordinator::{Service, ServiceConfig};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
 use std::time::Instant;
 
-fn bench_backend(name: &str, backend: Backend) {
-    println!("== backend: {name}");
-    for (clients, req_n, rounds) in
-        [(1usize, 4096usize, 200usize), (4, 4096, 100), (8, 1000, 100), (4, 100_000, 20)]
-    {
-        let svc = Service::start(ServiceConfig {
-            backend: backend.clone(),
-            max_batch: 64,
-            precompile: false,
-        })
-        .expect("service");
-        // warmup (compiles artifacts on first touch)
-        let h = svc.handle();
-        let planes = workload::planes_for("add22", req_n, 1);
-        h.call("add22", planes).unwrap();
+struct Row {
+    backend: String,
+    shards: usize,
+    clients: usize,
+    req_n: usize,
+    rounds: usize,
+    req_per_s: f64,
+    melem_per_s: f64,
+    batches: u64,
+    padding_fraction: f64,
+    mean_latency_ms: f64,
+}
 
-        let t0 = Instant::now();
-        let mut joins = Vec::new();
-        for c in 0..clients {
-            let h = svc.handle();
-            joins.push(std::thread::spawn(move || {
-                let mut rng = Rng::new(c as u64);
-                for _ in 0..rounds {
-                    let planes = workload::planes_for("add22", req_n, rng.next_u64());
-                    h.call("add22", planes).unwrap();
-                }
-            }));
+fn run_case(
+    label: &str, spec: BackendSpec, shards: usize, clients: usize, req_n: usize,
+    rounds: usize,
+) -> Option<Row> {
+    let svc = match Service::start(ServiceConfig {
+        backend: spec,
+        shards,
+        max_batch: 64,
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("  (skipping {label} x{shards}: {e})");
+            return None;
         }
-        for j in joins {
-            j.join().unwrap();
-        }
-        let wall = t0.elapsed().as_secs_f64();
-        let m = svc.metrics();
-        let total_req = (clients * rounds) as f64;
-        let total_elems = total_req * req_n as f64;
-        println!(
-            "  {clients} clients x {req_n:>6} elems: {:>8.0} req/s  {:>7.1} Melem/s  \
-             batches={:<5} pad={:>4.1}%  lat mean={:.2}ms",
-            total_req / wall,
-            total_elems / wall / 1e6,
-            m.batches,
-            m.padding_fraction() * 100.0,
-            m.mean_latency_s * 1e3,
-        );
+    };
+    // warmup every shard (handle round-robins, so `shards` calls touch
+    // each one), then let the shard threads finish recording their
+    // latency samples before snapshotting: metrics for a batch land
+    // *after* its reply, so an immediate snapshot would race and
+    // charge warmup cost to the measured phase
+    let h = svc.handle();
+    for i in 0..shards.max(1) {
+        let planes = workload::planes_for("add22", req_n, 1 + i as u64);
+        h.call("add22", planes).unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let warm = svc.metrics();
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            for _ in 0..rounds {
+                let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                h.call("add22", planes).unwrap();
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // same settle as the warmup snapshot: the final batch's latency
+    // sample lands after its reply, so don't snapshot under the race
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    let m = svc.metrics();
+    let total_req = (clients * rounds) as f64;
+    let total_elems = total_req * req_n as f64;
+    // measured-phase deltas (warmup excluded)
+    let batches = m.batches - warm.batches;
+    let elements = m.elements - warm.elements;
+    let padded = m.padded_elements - warm.padded_elements;
+    let lat_count = m.latency_count - warm.latency_count;
+    let mean_latency_s = if lat_count > 0 {
+        (m.mean_latency_s * m.latency_count as f64
+            - warm.mean_latency_s * warm.latency_count as f64)
+            / lat_count as f64
+    } else {
+        0.0
+    };
+    let padding_fraction = if elements + padded > 0 {
+        padded as f64 / (elements + padded) as f64
+    } else {
+        0.0
+    };
+    let row = Row {
+        backend: label.to_string(),
+        shards,
+        clients,
+        req_n,
+        rounds,
+        req_per_s: total_req / wall,
+        melem_per_s: total_elems / wall / 1e6,
+        batches,
+        padding_fraction,
+        mean_latency_ms: mean_latency_s * 1e3,
+    };
+    println!(
+        "  {label:<16} shards={shards} {clients} clients x {req_n:>6} elems: \
+         {:>8.0} req/s  {:>7.1} Melem/s  batches={:<5} pad={:>4.1}%  lat mean={:.2}ms",
+        row.req_per_s,
+        row.melem_per_s,
+        row.batches,
+        row.padding_fraction * 100.0,
+        row.mean_latency_ms,
+    );
+    Some(row)
+}
+
+fn emit_json(rows: &[Row]) {
+    let mut out = String::from("{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \"melem_per_s\": \"1e6 elements/s\"},\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"backend\": \"{}\", \"shards\": {}, \"clients\": {}, \
+             \"req_n\": {}, \"rounds\": {}, \"req_per_s\": {:.1}, \
+             \"melem_per_s\": {:.3}, \"batches\": {}, \
+             \"padding_fraction\": {:.4}, \"mean_latency_ms\": {:.3}}}{}\n",
+            r.backend,
+            r.shards,
+            r.clients,
+            r.req_n,
+            r.rounds,
+            r.req_per_s,
+            r.melem_per_s,
+            r.batches,
+            r.padding_fraction,
+            r.mean_latency_ms,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = "BENCH_coordinator.json";
+    match std::fs::write(path, &out) {
+        Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
+        Err(e) => println!("\ncould not write {path}: {e}"),
     }
 }
 
 fn main() {
-    bench_backend("cpu (native kernels)", Backend::Cpu);
+    let mut rows: Vec<Row> = Vec::new();
+
+    // the seed path: single shard, single worker — the baseline every
+    // sharded/parallel configuration must beat
+    println!("== native (single shard, single worker — seed behaviour)");
+    for (clients, req_n, rounds) in
+        [(1usize, 4096usize, 200usize), (4, 4096, 100), (8, 1000, 100), (4, 100_000, 20)]
+    {
+        rows.extend(run_case(
+            "native-seed", BackendSpec::native_single(), 1, clients, req_n, rounds,
+        ));
+    }
+
+    // sharded native: N device threads, each a multicore worker pool
+    println!("== native, sharded");
+    for shards in [2usize, 4] {
+        for (clients, req_n, rounds) in [(4usize, 4096usize, 100usize), (8, 1000, 100), (4, 100_000, 20)] {
+            rows.extend(run_case(
+                "native", BackendSpec::native(), shards, clients, req_n, rounds,
+            ));
+        }
+    }
+
+    // the gpusim stream VM: a software model of 2006 GPU arithmetic —
+    // tiny workload, the point is trajectory not absolute speed
+    println!("== gpusim (IEEE model stream VM)");
+    rows.extend(run_case(
+        "gpusim-ieee", BackendSpec::gpusim_ieee(), 1, 2, 4096, 5,
+    ));
+
+    // xla artifacts when present
     let artifacts = PathBuf::from(
         std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
     if artifacts.join("manifest.json").exists() {
-        bench_backend("xla (PJRT artifacts)", Backend::Xla(artifacts));
+        println!("== xla (PJRT artifacts)");
+        for (clients, req_n, rounds) in [(4usize, 4096usize, 100usize), (4, 100_000, 20)] {
+            rows.extend(run_case(
+                "xla",
+                BackendSpec::Xla { artifacts: artifacts.clone(), precompile: true },
+                1,
+                clients,
+                req_n,
+                rounds,
+            ));
+        }
     } else {
         println!("(skipping xla backend: no artifacts)");
     }
+
+    emit_json(&rows);
 }

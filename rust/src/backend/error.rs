@@ -1,0 +1,84 @@
+//! [`ServiceError`]: the typed error surface of the serving stack.
+//!
+//! The seed coordinator reported everything as `String`, which meant
+//! callers could neither distinguish "you sent a bad request" from "the
+//! service is shutting down" nor use `?` against `std::error::Error`
+//! consumers. Every layer above the kernels — backends, batcher,
+//! coordinator, handles — now speaks this enum.
+
+use std::error::Error;
+use std::fmt;
+
+/// Typed error for the backend layer and the coordinator service.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The service (or one of its shards) has stopped; the submission
+    /// queue or the reply channel is closed.
+    QueueClosed,
+    /// Operator name not in the catalogue.
+    UnknownOp(String),
+    /// Wrong number of input planes for the operator.
+    Arity { op: String, want: usize, got: usize },
+    /// Ragged or empty input planes (every plane must have the same
+    /// non-zero length), or mismatched output buffers.
+    Shape(String),
+    /// The operator is in the catalogue but this backend cannot serve it
+    /// (e.g. no compiled artifact, no lowered program).
+    Unsupported { backend: &'static str, op: String },
+    /// Substrate failure: PJRT compile/execute error, stream-VM fault,
+    /// worker-pool failure, missing artifacts directory, ...
+    Backend(String),
+}
+
+impl fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServiceError::QueueClosed => write!(f, "service stopped (queue closed)"),
+            ServiceError::UnknownOp(op) => write!(f, "unknown op '{op}'"),
+            ServiceError::Arity { op, want, got } => {
+                write!(f, "op '{op}' wants {want} input planes, got {got}")
+            }
+            ServiceError::Shape(msg) => write!(f, "bad shape: {msg}"),
+            ServiceError::Unsupported { backend, op } => {
+                write!(f, "backend '{backend}' does not serve op '{op}'")
+            }
+            ServiceError::Backend(msg) => write!(f, "backend failure: {msg}"),
+        }
+    }
+}
+
+impl Error for ServiceError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_informative() {
+        let cases: Vec<(ServiceError, &str)> = vec![
+            (ServiceError::QueueClosed, "queue closed"),
+            (ServiceError::UnknownOp("frob".into()), "frob"),
+            (
+                ServiceError::Arity { op: "add22".into(), want: 4, got: 3 },
+                "wants 4 input planes, got 3",
+            ),
+            (ServiceError::Shape("ragged".into()), "ragged"),
+            (
+                ServiceError::Unsupported { backend: "xla", op: "mad22".into() },
+                "does not serve",
+            ),
+            (ServiceError::Backend("pjrt died".into()), "pjrt died"),
+        ];
+        for (e, needle) in cases {
+            assert!(e.to_string().contains(needle), "{e}");
+        }
+    }
+
+    #[test]
+    fn implements_std_error() {
+        fn takes_err(_: &dyn Error) {}
+        takes_err(&ServiceError::QueueClosed);
+        let boxed: Box<dyn Error> = Box::new(ServiceError::UnknownOp("x".into()));
+        assert!(boxed.to_string().contains("unknown op"));
+    }
+}

@@ -1,0 +1,318 @@
+//! The backend layer: one operator surface over every execution substrate.
+//!
+//! The paper's evaluation is one experiment run on three substrates —
+//! real GPU fragment programs (Table 3), native CPU double-double
+//! (Table 4), an exact oracle (Table 5). The seed repo hard-coded that
+//! choice as a two-variant enum inside the coordinator; this module
+//! makes it a first-class abstraction:
+//!
+//! * [`KernelBackend`] — the trait: an op catalogue plus
+//!   `execute(op, inputs, outputs)` over SoA `f32` planes, with
+//!   cumulative [`BackendStats`];
+//! * [`NativeBackend`] — the `ff::vector` kernels, executed in parallel
+//!   over fixed-size chunks by a scoped-thread worker pool (the
+//!   "CPU path", now multicore);
+//! * [`GpuSimBackend`] — the paper's operators lowered onto the
+//!   [`crate::gpusim::shader`] stream VM, so the simulated 2006 GPU
+//!   arithmetic models (NV35, R300, ...) are a servable substrate;
+//! * [`XlaBackend`] — the PJRT/XLA artifact engine, including the
+//!   pad-to-compiled-size launch planning that used to live in the
+//!   coordinator (the "GPU path");
+//! * [`BackendSpec`] — a `Send + Clone` construction recipe, because
+//!   PJRT wrapper types must live on the device thread that builds them;
+//! * [`BufferPool`] — reusable `Vec<f32>` planes so the dispatch hot
+//!   path performs no per-batch allocation.
+//!
+//! The coordinator ([`crate::coordinator::service`]) dispatches purely
+//! through `Box<dyn KernelBackend>`; N shard threads each own one
+//! instance.
+
+pub mod error;
+pub mod gpusim;
+pub mod native;
+pub mod pool;
+pub mod xla;
+
+pub use error::ServiceError;
+pub use gpusim::GpuSimBackend;
+pub use native::NativeBackend;
+pub use pool::BufferPool;
+pub use xla::XlaBackend;
+
+use std::path::PathBuf;
+
+/// Catalogue row: one servable elementwise operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpSpec {
+    pub name: &'static str,
+    /// Number of SoA input planes.
+    pub n_in: usize,
+    /// Number of SoA output planes.
+    pub n_out: usize,
+}
+
+/// Every operator the serving stack knows about, with its arity.
+/// Mirrors `python/compile/kernels/ff.py::OPS`.
+pub const CATALOG: [OpSpec; 10] = [
+    OpSpec { name: "add12", n_in: 2, n_out: 2 },
+    OpSpec { name: "split", n_in: 1, n_out: 2 },
+    OpSpec { name: "mul12", n_in: 2, n_out: 2 },
+    OpSpec { name: "add22", n_in: 4, n_out: 2 },
+    OpSpec { name: "mul22", n_in: 4, n_out: 2 },
+    OpSpec { name: "div22", n_in: 4, n_out: 2 },
+    OpSpec { name: "mad22", n_in: 6, n_out: 2 },
+    OpSpec { name: "add", n_in: 2, n_out: 1 },
+    OpSpec { name: "mul", n_in: 2, n_out: 1 },
+    OpSpec { name: "mad", n_in: 3, n_out: 1 },
+];
+
+/// Look an operator up in the catalogue.
+pub fn op_spec(op: &str) -> Option<&'static OpSpec> {
+    CATALOG.iter().find(|s| s.name == op)
+}
+
+/// What one `execute` call did (feeds the coordinator's batch metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecReport {
+    /// Substrate launches performed (chunks for native, VM sweeps for
+    /// gpusim, artifact executions for xla).
+    pub launches: usize,
+    /// Lanes launched beyond the useful batch (xla pad-to-artifact-size).
+    pub padded_elements: u64,
+}
+
+/// Cumulative per-backend counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackendStats {
+    pub executions: u64,
+    pub elements: u64,
+    /// Wall-clock seconds spent inside `execute`.
+    pub busy_seconds: f64,
+}
+
+/// One execution substrate for the operator catalogue.
+///
+/// Implementations are *not* required to be `Send`/`Sync` (PJRT wrapper
+/// types are neither); the coordinator builds one instance per shard
+/// thread from a [`BackendSpec`] and keeps it thread-local.
+pub trait KernelBackend {
+    /// Short substrate name ("native", "gpusim", "xla").
+    fn name(&self) -> &'static str;
+
+    /// The operators this backend can execute right now.
+    fn ops(&self) -> Vec<&'static str>;
+
+    /// Whether `op` is servable by this backend.
+    fn supports(&self, op: &str) -> bool {
+        self.ops().contains(&op)
+    }
+
+    /// Execute `op` elementwise over SoA input planes into pre-sized
+    /// output planes (`outputs.len() == n_out`, every plane the batch
+    /// length). Backends must fill every output lane on success.
+    fn execute(
+        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+    ) -> Result<ExecReport, ServiceError>;
+
+    /// Cumulative counters since construction.
+    fn stats(&self) -> BackendStats;
+}
+
+/// Validate an execute call against the catalogue; returns the op spec
+/// and the batch length.
+pub(crate) fn check_shapes(
+    backend: &'static str, op: &str, inputs: &[&[f32]], outputs: &[Vec<f32>],
+) -> Result<(&'static OpSpec, usize), ServiceError> {
+    let spec = op_spec(op).ok_or_else(|| ServiceError::UnknownOp(op.to_string()))?;
+    if inputs.len() != spec.n_in {
+        return Err(ServiceError::Arity {
+            op: op.to_string(),
+            want: spec.n_in,
+            got: inputs.len(),
+        });
+    }
+    let n = inputs.first().map_or(0, |p| p.len());
+    if n == 0 {
+        return Err(ServiceError::Shape(format!("{backend}: empty batch for '{op}'")));
+    }
+    if inputs.iter().any(|p| p.len() != n) {
+        return Err(ServiceError::Shape(format!(
+            "{backend}: input planes of '{op}' have differing lengths"
+        )));
+    }
+    if outputs.len() != spec.n_out {
+        return Err(ServiceError::Shape(format!(
+            "{backend}: '{op}' wants {} output planes, got {}",
+            spec.n_out,
+            outputs.len()
+        )));
+    }
+    if outputs.iter().any(|p| p.len() != n) {
+        return Err(ServiceError::Shape(format!(
+            "{backend}: output planes of '{op}' must have the batch length {n}"
+        )));
+    }
+    Ok((spec, n))
+}
+
+/// Construction recipe for a backend: cheap to clone, `Send`, turned
+/// into a live [`KernelBackend`] *on* the shard thread that owns it.
+#[derive(Clone, Debug)]
+pub enum BackendSpec {
+    /// Native `ff::vector` kernels, parallel over `chunk`-sized slices.
+    /// `workers == 0` means one worker per available core.
+    Native { chunk: usize, workers: usize },
+    /// The gpusim stream VM on the named GPU arithmetic model
+    /// ("ieee-rn", "nv35", "nv40", "r300", "chopped").
+    GpuSim { model: String },
+    /// PJRT/XLA artifacts from this directory.
+    Xla { artifacts: PathBuf, precompile: bool },
+}
+
+impl BackendSpec {
+    /// Default native spec (auto worker count, 16k-element chunks).
+    pub fn native() -> BackendSpec {
+        BackendSpec::Native { chunk: native::DEFAULT_CHUNK, workers: 0 }
+    }
+
+    /// Single-threaded native spec (the seed's serving behaviour).
+    pub fn native_single() -> BackendSpec {
+        BackendSpec::Native { chunk: native::DEFAULT_CHUNK, workers: 1 }
+    }
+
+    /// GpuSim spec on the IEEE round-to-nearest model (bit-identical to
+    /// native kernels on the parity ops).
+    pub fn gpusim_ieee() -> BackendSpec {
+        BackendSpec::GpuSim { model: "ieee-rn".to_string() }
+    }
+
+    /// Substrate label ("native", "gpusim", "xla").
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendSpec::Native { .. } => "native",
+            BackendSpec::GpuSim { .. } => "gpusim",
+            BackendSpec::Xla { .. } => "xla",
+        }
+    }
+
+    /// Parse a CLI-style backend name: `native`, `native:<workers>`,
+    /// `gpusim`, `gpusim:<model>`, `xla` (artifacts from `artifacts`).
+    pub fn from_cli(name: &str, artifacts: &std::path::Path) -> Result<BackendSpec, ServiceError> {
+        let (head, tail) = match name.split_once(':') {
+            Some((h, t)) => (h, Some(t)),
+            None => (name, None),
+        };
+        match head {
+            "native" | "cpu" => {
+                let workers = match tail {
+                    Some(t) => t.parse::<usize>().map_err(|_| {
+                        ServiceError::Backend(format!("bad worker count '{t}'"))
+                    })?,
+                    None => 0,
+                };
+                Ok(BackendSpec::Native { chunk: native::DEFAULT_CHUNK, workers })
+            }
+            "gpusim" => Ok(BackendSpec::GpuSim {
+                model: tail.unwrap_or("ieee-rn").to_string(),
+            }),
+            "xla" => Ok(BackendSpec::Xla {
+                artifacts: artifacts.to_path_buf(),
+                precompile: false,
+            }),
+            other => Err(ServiceError::Backend(format!("unknown backend '{other}'"))),
+        }
+    }
+
+    /// Materialise the backend. Must run on the thread that will own it.
+    pub fn build(&self) -> Result<Box<dyn KernelBackend>, ServiceError> {
+        match self {
+            BackendSpec::Native { chunk, workers } => {
+                Ok(Box::new(NativeBackend::new(*chunk, *workers)))
+            }
+            BackendSpec::GpuSim { model } => {
+                Ok(Box::new(GpuSimBackend::by_name(model)?))
+            }
+            BackendSpec::Xla { artifacts, precompile } => {
+                Ok(Box::new(XlaBackend::new(artifacts, *precompile)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_covers_paper_and_extension_ops() {
+        for op in ["add12", "split", "mul12", "add22", "mul22", "div22", "mad22",
+                   "add", "mul", "mad"] {
+            assert!(op_spec(op).is_some(), "op {op}");
+        }
+        assert!(op_spec("frobnicate").is_none());
+        let s = op_spec("mad22").unwrap();
+        assert_eq!((s.n_in, s.n_out), (6, 2));
+    }
+
+    #[test]
+    fn check_shapes_accepts_and_rejects() {
+        let a = vec![1.0f32; 8];
+        let b = vec![2.0f32; 8];
+        let ins: Vec<&[f32]> = vec![&a, &b];
+        let mut outs = vec![vec![0.0f32; 8]];
+        let (spec, n) = check_shapes("t", "add", &ins, &outs).unwrap();
+        assert_eq!((spec.n_in, spec.n_out, n), (2, 1, 8));
+
+        assert!(matches!(
+            check_shapes("t", "nope", &ins, &outs),
+            Err(ServiceError::UnknownOp(_))
+        ));
+        assert!(matches!(
+            check_shapes("t", "add", &ins[..1], &outs),
+            Err(ServiceError::Arity { .. })
+        ));
+        let short = vec![1.0f32; 4];
+        let ragged: Vec<&[f32]> = vec![&a, &short];
+        assert!(matches!(
+            check_shapes("t", "add", &ragged, &outs),
+            Err(ServiceError::Shape(_))
+        ));
+        outs[0].truncate(4);
+        assert!(matches!(
+            check_shapes("t", "add", &ins, &outs),
+            Err(ServiceError::Shape(_))
+        ));
+        let empty: Vec<&[f32]> = vec![&[], &[]];
+        assert!(matches!(
+            check_shapes("t", "add", &empty, &outs),
+            Err(ServiceError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn spec_from_cli_parses() {
+        let dir = std::path::Path::new("artifacts");
+        assert!(matches!(
+            BackendSpec::from_cli("native", dir),
+            Ok(BackendSpec::Native { workers: 0, .. })
+        ));
+        assert!(matches!(
+            BackendSpec::from_cli("native:4", dir),
+            Ok(BackendSpec::Native { workers: 4, .. })
+        ));
+        match BackendSpec::from_cli("gpusim:nv35", dir) {
+            Ok(BackendSpec::GpuSim { model }) => assert_eq!(model, "nv35"),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(BackendSpec::from_cli("xla", dir).unwrap().label(), "xla");
+        assert!(BackendSpec::from_cli("voodoo", dir).is_err());
+        assert!(BackendSpec::from_cli("native:lots", dir).is_err());
+    }
+
+    #[test]
+    fn native_and_gpusim_specs_build() {
+        assert_eq!(BackendSpec::native().build().unwrap().name(), "native");
+        assert_eq!(BackendSpec::gpusim_ieee().build().unwrap().name(), "gpusim");
+        assert!(BackendSpec::GpuSim { model: "voodoo2".into() }.build().is_err());
+    }
+}

@@ -1,0 +1,231 @@
+//! [`NativeBackend`]: the `ff::vector` SoA kernels, multicore.
+//!
+//! The seed served the native path single-threaded from the device
+//! loop. This backend keeps the kernels bit-identical but executes a
+//! batch in parallel over fixed-size chunks: output planes are split
+//! into disjoint `&mut` windows, chunk jobs go into a shared queue, and
+//! a scoped-thread worker pool drains it. Elementwise kernels make the
+//! chunking exact — lane `i` of every output depends only on lane `i`
+//! of every input, so chunked results are bit-identical to one sweep.
+//!
+//! Small batches (under two chunks) skip the pool entirely: thread
+//! wake-up costs more than the kernel at that size.
+//!
+//! The pool is scoped per `execute` call (spawn + join each batch).
+//! That costs tens of microseconds per large batch — acceptable next
+//! to the ≥ 2-chunk kernel work it gates, and it keeps the backend
+//! borrow-only (jobs hold `&mut` windows into the caller's planes, no
+//! channels or owned buffers). A persistent worker pool fed by a
+//! channel would shave that overhead; ROADMAP lists it under
+//! "Backends & sharding".
+
+use super::{check_shapes, BackendStats, ExecReport, KernelBackend, ServiceError};
+use crate::ff::vector;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default chunk: 16k lanes ≈ 64 KiB per plane, L2-friendly and small
+/// enough that a 4-chunk batch spreads over 4 cores.
+pub const DEFAULT_CHUNK: usize = 16 * 1024;
+
+/// Floor on the chunk size; below this the queue overhead dominates.
+const MIN_CHUNK: usize = 1024;
+
+/// Native CPU backend with a chunked scoped-thread worker pool.
+pub struct NativeBackend {
+    chunk: usize,
+    workers: usize,
+    stats: BackendStats,
+}
+
+/// One chunk of work: parallel input windows and disjoint output windows.
+struct Job<'a> {
+    ins: Vec<&'a [f32]>,
+    outs: Vec<&'a mut [f32]>,
+}
+
+impl NativeBackend {
+    /// `workers == 0` selects one worker per available core.
+    pub fn new(chunk: usize, workers: usize) -> NativeBackend {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        NativeBackend {
+            chunk: chunk.max(MIN_CHUNK),
+            workers,
+            stats: BackendStats::default(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+}
+
+impl KernelBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn ops(&self) -> Vec<&'static str> {
+        super::CATALOG.iter().map(|s| s.name).collect()
+    }
+
+    fn execute(
+        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+    ) -> Result<ExecReport, ServiceError> {
+        let (_spec, n) = check_shapes("native", op, inputs, outputs)?;
+        let t0 = Instant::now();
+        let launches = if self.workers <= 1 || n < self.chunk * 2 {
+            vector::dispatch(op, inputs, outputs).map_err(ServiceError::Backend)?;
+            1
+        } else {
+            // carve the batch into chunk jobs with disjoint output windows
+            let mut jobs: Vec<Job> = Vec::with_capacity(n.div_ceil(self.chunk));
+            let mut tails: Vec<&mut [f32]> =
+                outputs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            let mut start = 0usize;
+            while start < n {
+                let len = self.chunk.min(n - start);
+                let ins: Vec<&[f32]> =
+                    inputs.iter().map(|p| &p[start..start + len]).collect();
+                let mut outs = Vec::with_capacity(tails.len());
+                for t in tails.iter_mut() {
+                    let (head, rest) = std::mem::take(t).split_at_mut(len);
+                    outs.push(head);
+                    *t = rest;
+                }
+                jobs.push(Job { ins, outs });
+                start += len;
+            }
+            let launches = jobs.len();
+            let workers = self.workers.min(launches);
+            let queue = Mutex::new(jobs);
+            let failure: Mutex<Option<String>> = Mutex::new(None);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        let job = queue.lock().unwrap().pop();
+                        let Some(mut job) = job else { break };
+                        if let Err(e) =
+                            vector::dispatch_slices(op, &job.ins, &mut job.outs)
+                        {
+                            *failure.lock().unwrap() = Some(e);
+                            break;
+                        }
+                    });
+                }
+            });
+            if let Some(e) = failure.into_inner().unwrap_or(None) {
+                return Err(ServiceError::Backend(e));
+            }
+            launches
+        };
+        self.stats.executions += 1;
+        self.stats.elements += n as u64;
+        self.stats.busy_seconds += t0.elapsed().as_secs_f64();
+        Ok(ExecReport { launches, padded_elements: 0 })
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::workload;
+
+    fn run(backend: &mut NativeBackend, op: &str, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let planes = workload::planes_for(op, n, seed);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let n_out = super::super::op_spec(op).unwrap().n_out;
+        let mut outs = vec![vec![0.0f32; n]; n_out];
+        backend.execute(op, &refs, &mut outs).unwrap();
+        outs
+    }
+
+    #[test]
+    fn chunked_parallel_matches_single_sweep_bitwise() {
+        let mut serial = NativeBackend::new(DEFAULT_CHUNK, 1);
+        let mut parallel = NativeBackend::new(MIN_CHUNK, 4);
+        for op in ["add22", "mul22", "mul12", "div22", "mad22", "add"] {
+            // 9 full chunks + a ragged tail
+            let n = MIN_CHUNK * 9 + 137;
+            let a = run(&mut serial, op, n, 0xC0DE);
+            let b = run(&mut parallel, op, n, 0xC0DE);
+            for (pa, pb) in a.iter().zip(&b) {
+                for i in 0..n {
+                    assert_eq!(
+                        pa[i].to_bits(),
+                        pb[i].to_bits(),
+                        "op={op} lane={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_path_reports_chunk_launches() {
+        let mut b = NativeBackend::new(MIN_CHUNK, 4);
+        let n = MIN_CHUNK * 4;
+        let planes = workload::planes_for("add22", n, 3);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let mut outs = vec![vec![0.0f32; n]; 2];
+        let rep = b.execute("add22", &refs, &mut outs).unwrap();
+        assert_eq!(rep.launches, 4);
+        assert_eq!(rep.padded_elements, 0);
+        let st = b.stats();
+        assert_eq!(st.executions, 1);
+        assert_eq!(st.elements, n as u64);
+    }
+
+    #[test]
+    fn small_batches_take_the_serial_path() {
+        let mut b = NativeBackend::new(DEFAULT_CHUNK, 8);
+        let planes = workload::planes_for("add22", 100, 5);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let mut outs = vec![vec![0.0f32; 100]; 2];
+        let rep = b.execute("add22", &refs, &mut outs).unwrap();
+        assert_eq!(rep.launches, 1);
+    }
+
+    #[test]
+    fn rejects_bad_calls() {
+        let mut b = NativeBackend::new(DEFAULT_CHUNK, 2);
+        let a = vec![1.0f32; 8];
+        let ins: Vec<&[f32]> = vec![&a, &a];
+        let mut outs = vec![vec![0.0f32; 8]];
+        assert!(matches!(
+            b.execute("nope", &ins, &mut outs),
+            Err(ServiceError::UnknownOp(_))
+        ));
+        assert!(matches!(
+            b.execute("add22", &ins, &mut outs),
+            Err(ServiceError::Arity { .. })
+        ));
+        let mut wrong = vec![vec![0.0f32; 8]; 2];
+        assert!(matches!(
+            b.execute("add", &ins, &mut wrong),
+            Err(ServiceError::Shape(_))
+        ));
+    }
+
+    #[test]
+    fn auto_worker_count_is_positive() {
+        let b = NativeBackend::new(0, 0);
+        assert!(b.workers() >= 1);
+        assert!(b.chunk() >= MIN_CHUNK);
+        assert!(b.supports("add22"));
+        assert!(!b.supports("dot2"));
+        assert_eq!(b.ops().len(), super::super::CATALOG.len());
+    }
+}

@@ -1,0 +1,97 @@
+//! [`BufferPool`]: reusable `Vec<f32>` planes for the dispatch hot path.
+//!
+//! The seed coordinator allocated every gather plane and output plane
+//! per batch. Each shard thread now owns a pool; buffers cycle through
+//! gather → execute → scatter → back to the pool, so steady-state
+//! serving performs no plane allocation (capacity grows to the largest
+//! batch seen and stays).
+
+/// A trivial free-list of `f32` planes. Not thread-safe by design: one
+/// pool per shard thread.
+#[derive(Debug)]
+pub struct BufferPool {
+    free: Vec<Vec<f32>>,
+    /// Max buffers retained (bounds memory after a burst of huge batches).
+    max_retained: usize,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool { free: Vec::new(), max_retained: 32 }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// An empty buffer (len 0), ready for `extend`-style gathering.
+    pub fn take_empty(&mut self) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a buffer to the pool.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if self.free.len() < self.max_retained && v.capacity() > 0 {
+            self.free.push(v);
+        }
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reuses_capacity() {
+        let mut pool = BufferPool::new();
+        let mut v = pool.take(1000);
+        v[0] = 42.0;
+        let cap = v.capacity();
+        let ptr = v.as_ptr();
+        pool.put(v);
+        assert_eq!(pool.idle(), 1);
+        let v2 = pool.take(500);
+        assert_eq!(v2.len(), 500);
+        assert_eq!(v2.as_ptr(), ptr, "buffer not reused");
+        assert!(v2.capacity() >= 500 && v2.capacity() <= cap.max(1000));
+        assert!(v2.iter().all(|&x| x == 0.0), "stale data leaked");
+    }
+
+    #[test]
+    fn take_empty_is_empty_with_capacity() {
+        let mut pool = BufferPool::new();
+        pool.put(vec![1.0; 256]);
+        let v = pool.take_empty();
+        assert_eq!(v.len(), 0);
+        assert!(v.capacity() >= 256);
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let mut pool = BufferPool::new();
+        for _ in 0..100 {
+            pool.put(vec![0.0; 8]);
+        }
+        assert!(pool.idle() <= 32);
+        // zero-capacity buffers are not worth parking
+        pool.put(Vec::new());
+        assert!(pool.idle() <= 32);
+    }
+}

@@ -1,0 +1,139 @@
+//! [`XlaBackend`]: PJRT/XLA artifacts behind the [`KernelBackend`] trait.
+//!
+//! Wraps [`crate::runtime::Runtime`] and owns the pad-to-compiled-size
+//! launch planning that used to be inlined in the coordinator: AOT
+//! compilation fixes stream lengths, so a batch is split over the
+//! compiled sizes ([`crate::coordinator::batcher::plan`]), each launch
+//! staged into pooled padded planes, executed, and copied back into the
+//! caller's output planes.
+//!
+//! Construction goes through [`crate::runtime::Runtime::new`], which
+//! requires the `xla` cargo feature (and an artifacts directory from
+//! `make artifacts`); without either, `XlaBackend::new` returns a
+//! [`ServiceError::Backend`] and the coordinator reports a clean
+//! startup failure.
+
+use super::pool::BufferPool;
+use super::{check_shapes, BackendStats, ExecReport, KernelBackend, ServiceError};
+use crate::coordinator::batcher;
+use crate::runtime::Runtime;
+use std::path::Path;
+use std::time::Instant;
+
+/// PJRT artifact backend. Not `Send`: build it on the shard thread.
+pub struct XlaBackend {
+    rt: Runtime,
+    pool: BufferPool,
+    stats: BackendStats,
+}
+
+impl XlaBackend {
+    pub fn new(artifacts: &Path, precompile: bool) -> Result<XlaBackend, ServiceError> {
+        let rt = Runtime::new(artifacts).map_err(ServiceError::Backend)?;
+        if precompile {
+            let names: Vec<String> = rt
+                .manifest()
+                .entries
+                .iter()
+                .filter(|e| e.kind == "stream")
+                .map(|e| e.name.clone())
+                .collect();
+            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+            rt.precompile(&refs).map_err(ServiceError::Backend)?;
+        }
+        Ok(XlaBackend { rt, pool: BufferPool::new(), stats: BackendStats::default() })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Compiled stream sizes for `op`, ascending.
+    fn sizes_for(&self, op: &str) -> Vec<usize> {
+        self.rt
+            .manifest()
+            .by_op(op)
+            .iter()
+            .filter(|e| e.kind == "stream")
+            .map(|e| e.n)
+            .collect()
+    }
+}
+
+impl KernelBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn ops(&self) -> Vec<&'static str> {
+        super::CATALOG
+            .iter()
+            .filter(|s| !self.sizes_for(s.name).is_empty())
+            .map(|s| s.name)
+            .collect()
+    }
+
+    fn execute(
+        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+    ) -> Result<ExecReport, ServiceError> {
+        let (spec, n) = check_shapes("xla", op, inputs, outputs)?;
+        let sizes = self.sizes_for(op);
+        let Some(plan) = batcher::plan(n, &sizes) else {
+            return Err(ServiceError::Unsupported { backend: "xla", op: op.to_string() });
+        };
+        let t0 = Instant::now();
+        let mut padded = 0u64;
+        for l in &plan {
+            let name = format!("{op}_n{}", l.size);
+            // stage each input window into a pooled, padded plane
+            let mut staged: Vec<Vec<f32>> = Vec::with_capacity(spec.n_in);
+            for (p, plane) in inputs.iter().enumerate() {
+                let mut buf = self.pool.take_empty();
+                buf.extend_from_slice(&plane[l.start..l.start + l.len]);
+                buf.resize(l.size, batcher::pad_value(op, p));
+                staged.push(buf);
+            }
+            let staged_refs: Vec<&[f32]> = staged.iter().map(Vec::as_slice).collect();
+            let result = self.rt.execute(&name, &staged_refs);
+            drop(staged_refs);
+            // recycle the staging planes before any error can propagate,
+            // so launch failures don't drain the pool
+            for buf in staged {
+                self.pool.put(buf);
+            }
+            let outs = result.map_err(ServiceError::Backend)?;
+            if outs.len() != spec.n_out {
+                return Err(ServiceError::Backend(format!(
+                    "{name}: expected {} output planes, got {}",
+                    spec.n_out,
+                    outs.len()
+                )));
+            }
+            for (o, plane) in outs.iter().enumerate() {
+                outputs[o][l.start..l.start + l.len].copy_from_slice(&plane[..l.len]);
+            }
+            padded += (l.size - l.len) as u64;
+        }
+        self.stats.executions += 1;
+        self.stats.elements += n as u64;
+        self.stats.busy_seconds += t0.elapsed().as_secs_f64();
+        Ok(ExecReport { launches: plan.len(), padded_elements: padded })
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_without_artifacts_fails_cleanly() {
+        let err = XlaBackend::new(Path::new("/nonexistent/artifacts"), false)
+            .err()
+            .expect("must fail without artifacts");
+        assert!(matches!(err, ServiceError::Backend(_)));
+    }
+}

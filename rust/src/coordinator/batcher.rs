@@ -10,17 +10,12 @@
 //! so the padding lanes don't produce NaNs that could trap slow paths.
 
 /// (n_inputs, n_outputs) for every operator the coordinator serves.
-/// Mirrors `python/compile/kernels/ff.py::OPS`.
+///
+/// Thin view over the backend layer's catalogue
+/// ([`crate::backend::CATALOG`]), kept for the harnesses and tests that
+/// grew up on the tuple form.
 pub fn op_arity(op: &str) -> Option<(usize, usize)> {
-    Some(match op {
-        "add12" | "mul12" => (2, 2),
-        "split" => (1, 2),
-        "add22" | "mul22" | "div22" => (4, 2),
-        "mad22" => (6, 2),
-        "add" | "mul" => (2, 1),
-        "mad" => (3, 1),
-        _ => return None,
-    })
+    crate::backend::op_spec(op).map(|s| (s.n_in, s.n_out))
 }
 
 /// Neutral pad value for plane `i` of operator `op` (1.0 for divisor
@@ -83,6 +78,20 @@ pub fn gather_plane(
     start: usize, len: usize, op: &str,
 ) -> Vec<f32> {
     let mut out = Vec::with_capacity(size);
+    gather_plane_into(requests, plane, size, start, len, op, &mut out);
+    out
+}
+
+/// [`gather_plane`] into a caller-provided buffer (cleared first) — the
+/// allocation-free path the shard dispatch loop uses with its
+/// [`crate::backend::BufferPool`].
+#[allow(clippy::too_many_arguments)]
+pub fn gather_plane_into(
+    requests: &[&crate::coordinator::OpRequest], plane: usize, size: usize,
+    start: usize, len: usize, op: &str, out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(size);
     // walk the concatenated space [start, start+len)
     let mut skipped = 0usize;
     for r in requests {
@@ -102,7 +111,6 @@ pub fn gather_plane(
     }
     debug_assert_eq!(out.len(), len);
     out.resize(size, pad_value(op, plane));
-    out
 }
 
 /// Scatter one launch's output planes back into per-request buffers.

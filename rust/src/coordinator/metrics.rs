@@ -1,4 +1,8 @@
 //! Coordinator observability: counters + latency summary.
+//!
+//! With sharded dispatch each shard thread owns one `Metrics` (no
+//! cross-shard contention on the hot path); [`Snapshot::merged`] folds
+//! the per-shard snapshots into the service-wide view.
 
 use crate::util::Summary;
 use std::sync::Mutex;
@@ -21,7 +25,7 @@ struct Inner {
 }
 
 /// A point-in-time snapshot for reporting.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Snapshot {
     pub requests: u64,
     pub batches: u64,
@@ -31,6 +35,9 @@ pub struct Snapshot {
     pub errors: u64,
     pub mean_latency_s: f64,
     pub max_latency_s: f64,
+    /// Batches that contributed to the latency summary (weights the
+    /// mean when merging shard snapshots).
+    pub latency_count: u64,
 }
 
 impl Metrics {
@@ -66,6 +73,7 @@ impl Metrics {
             errors: g.errors,
             mean_latency_s: if g.latency.count > 0 { g.latency.mean() } else { 0.0 },
             max_latency_s: if g.latency.count > 0 { g.latency.max } else { 0.0 },
+            latency_count: g.latency.count,
         }
     }
 }
@@ -78,6 +86,28 @@ impl Snapshot {
             return 0.0;
         }
         self.padded_elements as f64 / total as f64
+    }
+
+    /// Fold per-shard snapshots into the service-wide view (counters
+    /// sum; the latency mean is weighted by each shard's batch count).
+    pub fn merged(parts: &[Snapshot]) -> Snapshot {
+        let mut total = Snapshot::default();
+        let mut weighted = 0.0f64;
+        for s in parts {
+            total.requests += s.requests;
+            total.batches += s.batches;
+            total.launches += s.launches;
+            total.elements += s.elements;
+            total.padded_elements += s.padded_elements;
+            total.errors += s.errors;
+            total.latency_count += s.latency_count;
+            total.max_latency_s = total.max_latency_s.max(s.max_latency_s);
+            weighted += s.mean_latency_s * s.latency_count as f64;
+        }
+        if total.latency_count > 0 {
+            total.mean_latency_s = weighted / total.latency_count as f64;
+        }
+        total
     }
 }
 
@@ -110,5 +140,29 @@ mod tests {
         assert_eq!(s.requests, 0);
         assert_eq!(s.mean_latency_s, 0.0);
         assert_eq!(s.padding_fraction(), 0.0);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_weights_latency() {
+        let a = Metrics::new();
+        a.record_batch(3, 1, 1000, 0);
+        a.record_latency(1.0);
+        let b = Metrics::new();
+        b.record_batch(1, 2, 500, 10);
+        b.record_latency(2.0);
+        b.record_latency(4.0);
+        b.record_error();
+        let m = Snapshot::merged(&[a.snapshot(), b.snapshot()]);
+        assert_eq!(m.requests, 4);
+        assert_eq!(m.batches, 2);
+        assert_eq!(m.launches, 3);
+        assert_eq!(m.elements, 1500);
+        assert_eq!(m.padded_elements, 10);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.latency_count, 3);
+        assert_eq!(m.max_latency_s, 4.0);
+        // (1.0*1 + 3.0*2) / 3
+        assert!((m.mean_latency_s - 7.0 / 3.0).abs() < 1e-12);
+        assert_eq!(Snapshot::merged(&[]).requests, 0);
     }
 }

@@ -1,26 +1,26 @@
-//! L3 coordinator — the stream dispatcher in front of the PJRT engine.
+//! L3 coordinator — the sharded stream dispatcher over the backend layer.
 //!
 //! The paper's numbers (Table 3) come from Brook dispatching fragment
 //! programs over streams; this module is that runtime's moral
 //! equivalent, built the way a 2026 serving stack would:
 //!
 //! * clients submit [`request::OpRequest`]s (an operator name + SoA
-//!   input planes of any length);
-//! * the [`batcher`] coalesces same-operator requests and maps them onto
-//!   the *fixed* artifact sizes the AOT pipeline compiled (pad to the
-//!   next size up, split across launches when larger) — GPU kernels had
-//!   fixed-size streams for the same reason;
-//! * a dedicated **device thread** owns the (non-`Sync`) PJRT
-//!   [`crate::runtime::Runtime`] and drains the queue — the exact
-//!   analogue of a GPU command queue;
+//!   input planes of any length) through a round-robin [`service::Handle`];
+//! * N **shard threads** each own one [`crate::backend::KernelBackend`]
+//!   instance (native multicore kernels, the gpusim stream VM, or the
+//!   PJRT/XLA engine — the non-`Sync` engines live on the thread that
+//!   built them, the exact analogue of a GPU command queue);
+//! * each shard coalesces same-operator requests ([`batcher`]), gathers
+//!   them into pooled planes ([`crate::backend::BufferPool`] — no
+//!   per-batch allocation), executes through the trait, and scatters
+//!   replies; pad-to-compiled-size launch planning lives inside the
+//!   XLA backend, where it belongs;
 //! * [`metrics`] tracks throughput, latency, batch shapes and padding
-//!   waste.
+//!   waste per shard, merged on read.
 //!
-//! The paper's contribution lives at L1/L2 (the numeric format), so this
-//! layer is deliberately thin but real: enough to serve the benchmarks,
-//! the examples and the end-to-end driver. A pure-CPU fallback path
-//! (`ff::vector::dispatch`) keeps the coordinator usable without
-//! artifacts (and provides the Table 4 "CPU path" through the same API).
+//! Errors are typed end-to-end ([`crate::backend::ServiceError`]):
+//! queue closed, unknown op, arity/shape mismatch, unsupported op,
+//! substrate failure.
 
 pub mod batcher;
 pub mod metrics;
@@ -28,4 +28,4 @@ pub mod request;
 pub mod service;
 
 pub use request::OpRequest;
-pub use service::{Service, ServiceConfig};
+pub use service::{Handle, Service, ServiceConfig};

@@ -1,9 +1,10 @@
 //! Request/response types of the coordinator.
 
+use crate::backend::ServiceError;
 use std::sync::mpsc;
 
-/// Result planes (one `Vec<f32>` per output plane).
-pub type OpResult = Result<Vec<Vec<f32>>, String>;
+/// Result planes (one `Vec<f32>` per output plane) or a typed failure.
+pub type OpResult = Result<Vec<Vec<f32>>, ServiceError>;
 
 /// A stream-operator request: `op` applied elementwise to `inputs`
 /// (arity must match the operator; every plane the same length).
@@ -25,21 +26,25 @@ impl OpRequest {
         self.len() == 0
     }
 
-    /// Validate arity/shape against the op table.
-    pub fn validate(&self) -> Result<(), String> {
-        let (n_in, _) = super::batcher::op_arity(&self.op)
-            .ok_or_else(|| format!("unknown op '{}'", self.op))?;
-        if self.inputs.len() != n_in {
-            return Err(format!(
-                "op '{}' wants {n_in} input planes, got {}", self.op, self.inputs.len()
-            ));
+    /// Validate arity/shape against the backend catalogue.
+    pub fn validate(&self) -> Result<(), ServiceError> {
+        let spec = crate::backend::op_spec(&self.op)
+            .ok_or_else(|| ServiceError::UnknownOp(self.op.clone()))?;
+        if self.inputs.len() != spec.n_in {
+            return Err(ServiceError::Arity {
+                op: self.op.clone(),
+                want: spec.n_in,
+                got: self.inputs.len(),
+            });
         }
         let n = self.len();
         if self.inputs.iter().any(|p| p.len() != n) {
-            return Err("input planes have differing lengths".into());
+            return Err(ServiceError::Shape(
+                "input planes have differing lengths".into(),
+            ));
         }
         if n == 0 {
-            return Err("empty request".into());
+            return Err(ServiceError::Shape("empty request".into()));
         }
         Ok(())
     }
@@ -59,9 +64,9 @@ mod tests {
         let (r, _rx) = req("add22", 4, 16);
         assert!(r.validate().is_ok());
         let (r, _rx) = req("add22", 3, 16);
-        assert!(r.validate().is_err());
+        assert!(matches!(r.validate(), Err(ServiceError::Arity { want: 4, got: 3, .. })));
         let (r, _rx) = req("blorp", 2, 16);
-        assert!(r.validate().is_err());
+        assert!(matches!(r.validate(), Err(ServiceError::UnknownOp(_))));
     }
 
     #[test]
@@ -72,8 +77,8 @@ mod tests {
             inputs: vec![vec![1.0; 4], vec![1.0; 5]],
             reply: tx,
         };
-        assert!(r.validate().is_err());
+        assert!(matches!(r.validate(), Err(ServiceError::Shape(_))));
         let (r, _rx) = req("add", 2, 0);
-        assert!(r.validate().is_err());
+        assert!(matches!(r.validate(), Err(ServiceError::Shape(_))));
     }
 }

@@ -1,29 +1,33 @@
-//! The coordinator service: a device thread draining a batched queue.
+//! The coordinator service: N shard threads draining batched queues
+//! through the backend layer.
 //!
-//! PJRT wrapper types are not `Sync`, so the [`crate::runtime::Runtime`]
-//! lives on one dedicated thread (the "device thread" — the analogue of
-//! a GPU command queue). Clients hold a cheap cloneable [`Handle`] and
-//! submit [`OpRequest`]s; the device thread coalesces whatever is
-//! pending (up to `max_batch` requests per operator), plans launches
-//! over the compiled sizes, executes, and scatters replies.
+//! Clients hold a cheap cloneable [`Handle`] and submit
+//! [`OpRequest`]s; requests round-robin over `shards` device threads.
+//! Each shard owns one [`crate::backend::KernelBackend`] instance
+//! (built *on* the shard thread — PJRT wrapper types are not `Send`),
+//! its own [`crate::backend::BufferPool`], and its own
+//! [`Metrics`] (no cross-shard contention on the hot path). A shard
+//! coalesces whatever is pending (up to `max_batch` requests per
+//! operator), gathers the group into pooled planes, executes through
+//! `Box<dyn KernelBackend>`, and scatters replies.
 //!
-//! `Backend::Cpu` serves the same API from the native `ff::vector`
-//! kernels — the paper's Table 4 path, and a mock for artifact-free
-//! tests.
+//! Which substrate runs is a [`crate::backend::BackendSpec`]: native
+//! multicore kernels, the gpusim stream VM (any GPU arithmetic model),
+//! or PJRT/XLA artifacts. The seed's two-variant [`Backend`] enum
+//! remains as a deprecated shim.
 
-use super::batcher::{self, op_arity};
-use super::metrics::Metrics;
+use crate::backend::{self, BackendSpec, BufferPool, KernelBackend, ServiceError};
+use super::batcher;
+use super::metrics::{Metrics, Snapshot};
 use super::request::{OpRequest, OpResult};
-use crate::ff::vector;
-use crate::runtime::Runtime;
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Which engine executes batches.
+/// The seed's engine selector, kept as a shim for old call sites.
+#[deprecated(note = "use crate::backend::BackendSpec")]
 #[derive(Clone, Debug)]
 pub enum Backend {
     /// PJRT XLA artifacts from this directory (the "GPU path").
@@ -32,19 +36,40 @@ pub enum Backend {
     Cpu,
 }
 
+#[allow(deprecated)]
+impl From<Backend> for BackendSpec {
+    fn from(b: Backend) -> BackendSpec {
+        match b {
+            Backend::Xla(dir) => BackendSpec::Xla { artifacts: dir, precompile: false },
+            // the seed's Cpu path was single-threaded; the shim keeps
+            // that behaviour so old measurements stay comparable
+            Backend::Cpu => BackendSpec::native_single(),
+        }
+    }
+}
+
 /// Service configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    pub backend: Backend,
+    /// Which substrate each shard builds.
+    pub backend: BackendSpec,
+    /// Device threads, each owning one backend instance (>= 1).
+    pub shards: usize,
     /// Max requests coalesced into one batch per operator.
     pub max_batch: usize,
-    /// Precompile all stream artifacts at startup (vs on first use).
-    pub precompile: bool,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { backend: Backend::Cpu, max_batch: 64, precompile: false }
+        ServiceConfig { backend: BackendSpec::native(), shards: 1, max_batch: 64 }
+    }
+}
+
+impl ServiceConfig {
+    /// Shim constructor for the deprecated [`Backend`] enum.
+    #[allow(deprecated)]
+    pub fn legacy(backend: Backend) -> ServiceConfig {
+        ServiceConfig { backend: backend.into(), ..Default::default() }
     }
 }
 
@@ -53,116 +78,140 @@ enum Msg {
     Shutdown,
 }
 
-/// Running coordinator; dropping it shuts the device thread down.
+/// Running coordinator; dropping it shuts every shard down.
 pub struct Service {
-    tx: mpsc::Sender<Msg>,
-    metrics: Arc<Metrics>,
-    running: Arc<AtomicBool>,
-    join: Option<JoinHandle<()>>,
+    txs: Vec<mpsc::Sender<Msg>>,
+    rr: Arc<AtomicUsize>,
+    metrics: Vec<Arc<Metrics>>,
+    live: Arc<AtomicUsize>,
+    joins: Vec<JoinHandle<()>>,
 }
 
-/// Cheap cloneable submission handle.
+/// Cheap cloneable submission handle (round-robins over shards).
 #[derive(Clone)]
 pub struct Handle {
-    tx: mpsc::Sender<Msg>,
+    txs: Vec<mpsc::Sender<Msg>>,
+    rr: Arc<AtomicUsize>,
 }
 
 impl Handle {
     /// Submit and return the reply receiver (async pattern).
-    pub fn submit(&self, op: &str, inputs: Vec<Vec<f32>>) -> Result<mpsc::Receiver<OpResult>, String> {
+    pub fn submit(
+        &self, op: &str, inputs: Vec<Vec<f32>>,
+    ) -> Result<mpsc::Receiver<OpResult>, ServiceError> {
         let (reply, rx) = mpsc::channel();
         let req = OpRequest { op: op.into(), inputs, reply };
         req.validate()?;
-        self.tx.send(Msg::Submit(req)).map_err(|_| "service stopped".to_string())?;
+        let shard = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+        self.txs[shard]
+            .send(Msg::Submit(req))
+            .map_err(|_| ServiceError::QueueClosed)?;
         Ok(rx)
     }
 
     /// Submit and block for the result.
     pub fn call(&self, op: &str, inputs: Vec<Vec<f32>>) -> OpResult {
         let rx = self.submit(op, inputs)?;
-        rx.recv().map_err(|_| "service dropped reply".to_string())?
+        rx.recv().map_err(|_| ServiceError::QueueClosed)?
+    }
+
+    /// Number of shards behind this handle.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
     }
 }
 
 impl Service {
-    /// Start the device thread.
-    pub fn start(config: ServiceConfig) -> Result<Service, String> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let metrics = Arc::new(Metrics::new());
-        let running = Arc::new(AtomicBool::new(true));
-        let m2 = metrics.clone();
-        let r2 = running.clone();
-        // engine construction happens *on* the device thread (Runtime is
-        // not Send); report startup errors through a channel
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
-        let cfg = config.clone();
-        let join = std::thread::Builder::new()
-            .name("ffgpu-device".into())
-            .spawn(move || device_thread(cfg, rx, ready_tx, m2, r2))
-            .map_err(|e| e.to_string())?;
-        ready_rx
-            .recv()
-            .map_err(|_| "device thread died during startup".to_string())??;
-        Ok(Service { tx, metrics, running, join: Some(join) })
+    /// Start `config.shards` device threads; fails if any backend
+    /// refuses to build.
+    pub fn start(config: ServiceConfig) -> Result<Service, ServiceError> {
+        let shards = config.shards.max(1);
+        let max_batch = config.max_batch.max(1);
+        let live = Arc::new(AtomicUsize::new(0));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), ServiceError>>();
+        let mut txs = Vec::with_capacity(shards);
+        let mut metrics = Vec::with_capacity(shards);
+        let mut joins = Vec::with_capacity(shards);
+        for shard in 0..shards {
+            let (tx, rx) = mpsc::channel::<Msg>();
+            let m = Arc::new(Metrics::new());
+            let spec = config.backend.clone();
+            let (m2, l2, r2) = (m.clone(), live.clone(), ready_tx.clone());
+            let join = std::thread::Builder::new()
+                .name(format!("ffgpu-shard-{shard}"))
+                .spawn(move || device_thread(spec, max_batch, rx, r2, m2, l2))
+                .map_err(|e| {
+                    ServiceError::Backend(format!("spawn shard {shard}: {e}"))
+                })?;
+            txs.push(tx);
+            metrics.push(m);
+            joins.push(join);
+        }
+        drop(ready_tx);
+        for _ in 0..shards {
+            ready_rx
+                .recv()
+                .map_err(|_| {
+                    ServiceError::Backend("device thread died during startup".into())
+                })??;
+        }
+        Ok(Service { txs, rr: Arc::new(AtomicUsize::new(0)), metrics, live, joins })
     }
 
     pub fn handle(&self) -> Handle {
-        Handle { tx: self.tx.clone() }
+        Handle { txs: self.txs.clone(), rr: self.rr.clone() }
     }
 
-    pub fn metrics(&self) -> super::metrics::Snapshot {
-        self.metrics.snapshot()
+    /// Service-wide metrics (all shards merged).
+    pub fn metrics(&self) -> Snapshot {
+        let parts: Vec<Snapshot> = self.metrics.iter().map(|m| m.snapshot()).collect();
+        Snapshot::merged(&parts)
+    }
+
+    /// Per-shard snapshots (index = shard id).
+    pub fn shard_metrics(&self) -> Vec<Snapshot> {
+        self.metrics.iter().map(|m| m.snapshot()).collect()
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
     }
 
     pub fn is_running(&self) -> bool {
-        self.running.load(Ordering::Relaxed)
+        self.live.load(Ordering::Relaxed) > 0
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        self.txs.clear();
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 }
 
 fn device_thread(
-    config: ServiceConfig, rx: mpsc::Receiver<Msg>,
-    ready: mpsc::Sender<Result<(), String>>, metrics: Arc<Metrics>,
-    running: Arc<AtomicBool>,
+    spec: BackendSpec, max_batch: usize, rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<(), ServiceError>>, metrics: Arc<Metrics>,
+    live: Arc<AtomicUsize>,
 ) {
-    // build the engine on this thread
-    let runtime = match &config.backend {
-        Backend::Xla(dir) => match Runtime::new(dir) {
-            Ok(rt) => {
-                if config.precompile {
-                    let names: Vec<String> = rt
-                        .manifest()
-                        .entries
-                        .iter()
-                        .filter(|e| e.kind == "stream")
-                        .map(|e| e.name.clone())
-                        .collect();
-                    let refs: Vec<&str> = names.iter().map(String::as_str).collect();
-                    if let Err(e) = rt.precompile(&refs) {
-                        let _ = ready.send(Err(e));
-                        running.store(false, Ordering::Relaxed);
-                        return;
-                    }
-                }
-                Some(rt)
-            }
-            Err(e) => {
-                let _ = ready.send(Err(e));
-                running.store(false, Ordering::Relaxed);
-                return;
-            }
-        },
-        Backend::Cpu => None,
+    // build the substrate on this thread (backends need not be Send)
+    let mut backend = match spec.build() {
+        Ok(b) => b,
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
     };
+    // count as live *before* acking, so `is_running()` is already true
+    // the moment `Service::start` returns
+    live.fetch_add(1, Ordering::Relaxed);
     let _ = ready.send(Ok(()));
+    let mut pool = BufferPool::new();
 
     loop {
         // block for the first message, then greedily drain the queue
@@ -173,7 +222,7 @@ fn device_thread(
         let t0 = Instant::now();
         let mut pending: Vec<OpRequest> = vec![first];
         let mut shutdown = false;
-        while pending.len() < config.max_batch {
+        while pending.len() < max_batch {
             match rx.try_recv() {
                 Ok(Msg::Submit(r)) => pending.push(r),
                 Ok(Msg::Shutdown) => {
@@ -184,111 +233,105 @@ fn device_thread(
             }
         }
 
-        // group by operator, preserving order
-        let mut groups: HashMap<String, Vec<OpRequest>> = HashMap::new();
+        // group by operator, preserving arrival order
+        let mut groups: Vec<(String, Vec<OpRequest>)> = Vec::new();
         for r in pending {
-            groups.entry(r.op.clone()).or_default().push(r);
+            match groups.iter().position(|(op, _)| *op == r.op) {
+                Some(i) => groups[i].1.push(r),
+                None => groups.push((r.op.clone(), vec![r])),
+            }
         }
         for (op, reqs) in groups {
-            serve_group(&config, runtime.as_ref(), &metrics, &op, reqs);
+            serve_group(backend.as_mut(), &mut pool, &metrics, &op, reqs);
         }
         metrics.record_latency(t0.elapsed().as_secs_f64());
         if shutdown {
             break;
         }
     }
-    running.store(false, Ordering::Relaxed);
+    live.fetch_sub(1, Ordering::Relaxed);
 }
 
-/// Execute one operator group as a single concatenated batch.
+/// Execute one operator group as a single concatenated batch through
+/// the backend trait.
 fn serve_group(
-    config: &ServiceConfig, runtime: Option<&Runtime>, metrics: &Metrics,
+    backend: &mut dyn KernelBackend, pool: &mut BufferPool, metrics: &Metrics,
     op: &str, reqs: Vec<OpRequest>,
 ) {
-    let Some((n_in, n_out)) = op_arity(op) else {
-        for r in reqs {
-            let _ = r.reply.send(Err(format!("unknown op '{op}'")));
-        }
-        metrics.record_error();
+    let Some(spec) = backend::op_spec(op) else {
+        fail_group(metrics, &reqs, ServiceError::UnknownOp(op.to_string()));
         return;
     };
+    // no per-batch `supports` pre-check: backends return
+    // `ServiceError::Unsupported` themselves, and the default
+    // `supports` impl allocates a catalogue Vec — not hot-path material
+    let (n_in, n_out) = (spec.n_in, spec.n_out);
+
+    // fast path: a lone request executes straight out of its own planes
+    // and its output planes become the reply (no gather/scatter copies)
+    if reqs.len() == 1 {
+        let req = &reqs[0];
+        let n = req.len();
+        let input_refs: Vec<&[f32]> = req.inputs.iter().map(Vec::as_slice).collect();
+        let mut outs = vec![vec![0.0f32; n]; n_out];
+        match backend.execute(op, &input_refs, &mut outs) {
+            Ok(rep) => {
+                metrics.record_batch(1, rep.launches, n as u64, rep.padded_elements);
+                let _ = req.reply.send(Ok(outs));
+            }
+            Err(e) => {
+                metrics.record_error();
+                let _ = req.reply.send(Err(e));
+            }
+        }
+        return;
+    }
+
     let refs: Vec<&OpRequest> = reqs.iter().collect();
     let total: usize = refs.iter().map(|r| r.len()).sum();
 
-    // per-request output accumulators
-    let mut acc: Vec<Vec<Vec<f32>>> =
-        refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
+    // gather the concatenated batch into pooled planes
+    let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(n_in);
+    for p in 0..n_in {
+        let mut buf = pool.take_empty();
+        batcher::gather_plane_into(&refs, p, total, 0, total, op, &mut buf);
+        inputs.push(buf);
+    }
+    let input_refs: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
+    let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(total)).collect();
 
-    let result: Result<u64, String> = match (&config.backend, runtime) {
-        (Backend::Cpu, _) | (_, None) => {
-            // native path: one "launch", no padding
-            let inputs: Vec<Vec<f32>> = (0..n_in)
-                .map(|p| batcher::gather_plane(&refs, p, total, 0, total, op))
-                .collect();
-            let input_refs: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
-            let mut outs = vec![vec![0.0f32; total]; n_out];
-            match vector::dispatch(op, &input_refs, &mut outs) {
-                Ok(()) => {
-                    batcher::scatter_outputs(&refs, &outs, 0, total, &mut acc);
-                    metrics.record_batch(refs.len(), 1, total as u64, 0);
-                    Ok(0)
-                }
-                Err(e) => Err(e),
-            }
-        }
-        (Backend::Xla(_), Some(rt)) => {
-            let sizes: Vec<usize> = rt.manifest().by_op(op).iter().map(|e| e.n).collect();
-            match batcher::plan(total, &sizes) {
-                None => Err(format!("no compiled artifacts for op '{op}'")),
-                Some(launches) => {
-                    let mut padded = 0u64;
-                    let mut err = None;
-                    for l in &launches {
-                        let name = format!("{op}_n{}", l.size);
-                        let inputs: Vec<Vec<f32>> = (0..n_in)
-                            .map(|p| {
-                                batcher::gather_plane(&refs, p, l.size, l.start, l.len, op)
-                            })
-                            .collect();
-                        let input_refs: Vec<&[f32]> =
-                            inputs.iter().map(Vec::as_slice).collect();
-                        match rt.execute(&name, &input_refs) {
-                            Ok(outs) => {
-                                batcher::scatter_outputs(&refs, &outs, l.start, l.len, &mut acc);
-                                padded += (l.size - l.len) as u64;
-                            }
-                            Err(e) => {
-                                err = Some(e);
-                                break;
-                            }
-                        }
-                    }
-                    match err {
-                        None => {
-                            metrics.record_batch(
-                                refs.len(), launches.len(), total as u64, padded,
-                            );
-                            Ok(padded)
-                        }
-                        Some(e) => Err(e),
-                    }
-                }
-            }
-        }
-    };
+    let result = backend.execute(op, &input_refs, &mut outs);
+    drop(input_refs);
 
     match result {
-        Ok(_) => {
+        Ok(rep) => {
+            // per-request output accumulators (owned by the replies)
+            let mut acc: Vec<Vec<Vec<f32>>> =
+                refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
+            batcher::scatter_outputs(&refs, &outs, 0, total, &mut acc);
+            metrics.record_batch(
+                refs.len(), rep.launches, total as u64, rep.padded_elements,
+            );
             for (r, planes) in reqs.iter().zip(acc) {
                 let _ = r.reply.send(Ok(planes));
             }
         }
         Err(e) => {
-            metrics.record_error();
-            for r in &reqs {
-                let _ = r.reply.send(Err(e.clone()));
-            }
+            fail_group(metrics, &reqs, e);
         }
+    }
+    for b in inputs {
+        pool.put(b);
+    }
+    for b in outs {
+        pool.put(b);
+    }
+}
+
+fn fail_group(metrics: &Metrics, reqs: &[OpRequest], err: ServiceError) {
+    metrics.record_error();
+    for r in reqs {
+        let _ = r.reply.send(Err(err.clone()));
     }
 }
 
@@ -299,16 +342,11 @@ mod tests {
     use crate::util::Rng;
 
     fn cpu_service() -> Service {
-        Service::start(ServiceConfig { backend: Backend::Cpu, ..Default::default() })
-            .unwrap()
+        Service::start(ServiceConfig::default()).unwrap()
     }
 
-    #[test]
-    fn cpu_backend_serves_add22() {
-        let svc = cpu_service();
-        let h = svc.handle();
-        let mut rng = Rng::new(131);
-        let n = 1000;
+    fn add22_planes(n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
         let mut planes = vec![Vec::with_capacity(n); 4];
         for _ in 0..n {
             let (ah, al) = rng.ff_pair(-8, 8);
@@ -318,6 +356,15 @@ mod tests {
             planes[2].push(bh);
             planes[3].push(bl);
         }
+        planes
+    }
+
+    #[test]
+    fn cpu_backend_serves_add22() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        let n = 1000;
+        let planes = add22_planes(n, 131);
         let out = h.call("add22", planes.clone()).unwrap();
         assert_eq!(out.len(), 2);
         for i in 0..n {
@@ -334,8 +381,14 @@ mod tests {
     fn rejects_bad_requests_at_submit() {
         let svc = cpu_service();
         let h = svc.handle();
-        assert!(h.call("frobnicate", vec![vec![1.0]]).is_err());
-        assert!(h.call("add22", vec![vec![1.0]; 3]).is_err());
+        assert!(matches!(
+            h.call("frobnicate", vec![vec![1.0]]),
+            Err(ServiceError::UnknownOp(_))
+        ));
+        assert!(matches!(
+            h.call("add22", vec![vec![1.0]; 3]),
+            Err(ServiceError::Arity { .. })
+        ));
     }
 
     #[test]
@@ -367,6 +420,98 @@ mod tests {
         let h = svc.handle();
         drop(svc);
         // handle now fails cleanly
-        assert!(h.call("add", vec![vec![1.0], vec![2.0]]).is_err());
+        assert_eq!(
+            h.call("add", vec![vec![1.0], vec![2.0]]).unwrap_err(),
+            ServiceError::QueueClosed
+        );
+    }
+
+    #[test]
+    fn sharded_service_spreads_requests() {
+        let svc = Service::start(ServiceConfig {
+            backend: BackendSpec::native_single(),
+            shards: 4,
+            max_batch: 16,
+        })
+        .unwrap();
+        assert_eq!(svc.shards(), 4);
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                for round in 0..10usize {
+                    let n = 50 + round;
+                    let planes = add22_planes(n, t * 100 + round as u64);
+                    let out = h.call("add22", planes.clone()).unwrap();
+                    for i in 0..n {
+                        let want = FF32::from_parts(planes[0][i], planes[1][i])
+                            + FF32::from_parts(planes[2][i], planes[3][i]);
+                        assert_eq!(
+                            (out[0][i], out[1][i]),
+                            (want.hi, want.lo),
+                            "t={t} round={round} i={i}"
+                        );
+                    }
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let per_shard = svc.shard_metrics();
+        assert_eq!(per_shard.len(), 4);
+        let total: u64 = per_shard.iter().map(|s| s.requests).sum();
+        assert_eq!(total, 80);
+        // round-robin: every shard saw work
+        assert!(
+            per_shard.iter().all(|s| s.requests > 0),
+            "idle shard: {per_shard:?}"
+        );
+        assert_eq!(svc.metrics().requests, 80);
+        assert_eq!(svc.metrics().errors, 0);
+    }
+
+    #[test]
+    fn gpusim_backend_is_servable() {
+        let svc = Service::start(ServiceConfig {
+            backend: BackendSpec::gpusim_ieee(),
+            shards: 1,
+            max_batch: 8,
+        })
+        .unwrap();
+        let h = svc.handle();
+        let n = 200;
+        let planes = add22_planes(n, 99);
+        let out = h.call("add22", planes.clone()).unwrap();
+        for i in 0..n {
+            let want = FF32::from_parts(planes[0][i], planes[1][i])
+                + FF32::from_parts(planes[2][i], planes[3][i]);
+            assert_eq!(
+                (out[0][i].to_bits(), out[1][i].to_bits()),
+                (want.hi.to_bits(), want.lo.to_bits()),
+                "i={i}"
+            );
+        }
+    }
+
+    #[test]
+    fn bad_backend_spec_fails_startup() {
+        let err = Service::start(ServiceConfig {
+            backend: BackendSpec::GpuSim { model: "voodoo2".into() },
+            shards: 2,
+            max_batch: 8,
+        })
+        .err()
+        .expect("startup must fail");
+        assert!(matches!(err, ServiceError::Backend(_)));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_backend_shim_still_works() {
+        let svc = Service::start(ServiceConfig::legacy(Backend::Cpu)).unwrap();
+        let h = svc.handle();
+        let out = h.call("add", vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(out[0], vec![4.0, 6.0]);
     }
 }

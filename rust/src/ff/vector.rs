@@ -150,10 +150,21 @@ pub fn base_mad(a: &[f32], b: &[f32], c: &[f32], r: &mut [f32]) {
 /// Dispatch an operator by catalogue name over SoA planes.
 ///
 /// `inputs` and `outputs` follow the artifact manifest arities
-/// (e.g. `add22`: 4 inputs, 2 outputs). Used by the coordinator's CPU
-/// fallback path and by the integration tests.
+/// (e.g. `add22`: 4 inputs, 2 outputs). Used by the coordinator's
+/// native backend and by the integration tests.
 pub fn dispatch(
     op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+) -> Result<(), String> {
+    let mut slices: Vec<&mut [f32]> =
+        outputs.iter_mut().map(|v| v.as_mut_slice()).collect();
+    dispatch_slices(op, inputs, &mut slices)
+}
+
+/// [`dispatch`] over borrowed output windows — the form the chunked
+/// worker pool of [`crate::backend::NativeBackend`] needs, where each
+/// job owns a disjoint `&mut` window of every output plane.
+pub fn dispatch_slices(
+    op: &str, inputs: &[&[f32]], outputs: &mut [&mut [f32]],
 ) -> Result<(), String> {
     match op {
         "add12" => {
@@ -185,17 +196,17 @@ pub fn dispatch(
             let (h, l) = split_two_mut(outputs);
             mad22(inputs[0], inputs[1], inputs[2], inputs[3], inputs[4], inputs[5], h, l);
         }
-        "add" => base_add(inputs[0], inputs[1], &mut outputs[0]),
-        "mul" => base_mul(inputs[0], inputs[1], &mut outputs[0]),
-        "mad" => base_mad(inputs[0], inputs[1], inputs[2], &mut outputs[0]),
+        "add" => base_add(inputs[0], inputs[1], &mut *outputs[0]),
+        "mul" => base_mul(inputs[0], inputs[1], &mut *outputs[0]),
+        "mad" => base_mad(inputs[0], inputs[1], inputs[2], &mut *outputs[0]),
         other => return Err(format!("unknown op {other}")),
     }
     Ok(())
 }
 
-fn split_two_mut(outputs: &mut [Vec<f32>]) -> (&mut [f32], &mut [f32]) {
+fn split_two_mut<'a>(outputs: &'a mut [&mut [f32]]) -> (&'a mut [f32], &'a mut [f32]) {
     let (a, b) = outputs.split_at_mut(1);
-    (&mut a[0], &mut b[0])
+    (&mut *a[0], &mut *b[0])
 }
 
 #[cfg(test)]

@@ -74,6 +74,18 @@ pub enum VmError {
 pub fn run(
     model: &GpuModel, prog: &Program, inputs: &[&[f64]],
 ) -> Result<Vec<Vec<f64>>, VmError> {
+    let n = inputs.first().map_or(0, |s| s.len());
+    let mut outputs = vec![vec![0.0f64; n]; prog.n_out];
+    run_into(model, prog, inputs, &mut outputs)?;
+    Ok(outputs)
+}
+
+/// Allocation-free variant of [`run`]: writes into caller-provided
+/// output streams (each pre-sized to the input length). The backend
+/// layer uses this to keep staging buffers warm across batches.
+pub fn run_into(
+    model: &GpuModel, prog: &Program, inputs: &[&[f64]], outputs: &mut [Vec<f64>],
+) -> Result<(), VmError> {
     if inputs.len() != prog.n_in {
         return Err(VmError::BadStreamIndex);
     }
@@ -81,7 +93,9 @@ pub fn run(
     if inputs.iter().any(|s| s.len() != n) {
         return Err(VmError::LengthMismatch);
     }
-    let mut outputs = vec![vec![0.0f64; n]; prog.n_out];
+    if outputs.len() != prog.n_out || outputs.iter().any(|s| s.len() != n) {
+        return Err(VmError::LengthMismatch);
+    }
     let mut regs = [SoftFp::zero(); 32];
     for i in 0..n {
         for ins in &prog.code {
@@ -119,7 +133,7 @@ pub fn run(
             }
         }
     }
-    Ok(outputs)
+    Ok(())
 }
 
 /// Pre-assembled fragment programs for the paper's operators.
@@ -240,6 +254,185 @@ pub mod programs {
         }
     }
 
+    /// Mul22: streams (ah, al, bh, bl) -> (rh, rl).
+    ///
+    /// Mirrors the native `ff::vector::mul22` op-for-op: Dekker
+    /// two-product of the high words (FP-only split, splitting point
+    /// `ceil(p/2)`), cross terms accumulated in one add each, renormalise
+    /// with fast-two-sum. Under the IEEE model this is bit-identical to
+    /// the native kernel (the two-product is an EFT either way).
+    pub fn mul22(p: u32) -> Program {
+        use Instr::*;
+        let s = p.div_ceil(2);
+        let splitter = ((1u64 << s) + 1) as f64;
+        Program {
+            name: "mul22".into(),
+            n_in: 4,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },              // ah
+                LoadIn { dst: 1, src: 1 },              // al
+                LoadIn { dst: 2, src: 2 },              // bh
+                LoadIn { dst: 3, src: 3 },              // bl
+                // two_prod(ah, bh) -> r4 = x, r11 = y
+                Mul { dst: 4, a: 0, b: 2 },             // x = ah*bh
+                LoadConst { dst: 5, value: splitter },
+                // split ah -> r6 hi, r7 lo
+                Mul { dst: 6, a: 5, b: 0 },
+                Sub { dst: 7, a: 6, b: 0 },
+                Sub { dst: 6, a: 6, b: 7 },
+                Sub { dst: 7, a: 0, b: 6 },
+                // split bh -> r8 hi, r9 lo
+                Mul { dst: 8, a: 5, b: 2 },
+                Sub { dst: 9, a: 8, b: 2 },
+                Sub { dst: 8, a: 8, b: 9 },
+                Sub { dst: 9, a: 2, b: 8 },
+                // error chain
+                Mul { dst: 10, a: 6, b: 8 },            // ahi*bhi
+                Sub { dst: 10, a: 4, b: 10 },           // err1
+                Mul { dst: 11, a: 7, b: 8 },            // alo*bhi
+                Sub { dst: 10, a: 10, b: 11 },          // err2
+                Mul { dst: 11, a: 6, b: 9 },            // ahi*blo
+                Sub { dst: 10, a: 10, b: 11 },          // err3
+                Mul { dst: 11, a: 7, b: 9 },            // alo*blo
+                Sub { dst: 11, a: 11, b: 10 },          // y
+                // cross terms: pl = y + (ah*bl + al*bh)
+                Mul { dst: 12, a: 0, b: 3 },            // ah*bl
+                Mul { dst: 13, a: 1, b: 2 },            // al*bh
+                Add { dst: 12, a: 12, b: 13 },
+                Add { dst: 11, a: 11, b: 12 },          // pl
+                // fast_two_sum(x, pl)
+                Add { dst: 14, a: 4, b: 11 },
+                Sub { dst: 15, a: 14, b: 4 },
+                Sub { dst: 15, a: 11, b: 15 },
+                StoreOut { dst: 0, src: 14 },
+                StoreOut { dst: 1, src: 15 },
+            ],
+        }
+    }
+
+    /// Div22: streams (ah, al, bh, bl) -> (rh, rl).
+    ///
+    /// GPUs of this era have no divider; division is reciprocal +
+    /// multiply (the paper's §1.2 observation), so `q1 = ah · rcp(bh)`
+    /// and the residual correction also multiplies by the reciprocal.
+    /// Numerically equivalent to the native `div22` but **not**
+    /// bit-identical even under IEEE arithmetic (two roundings where the
+    /// CPU has one exact division).
+    pub fn div22(p: u32) -> Program {
+        use Instr::*;
+        let s = p.div_ceil(2);
+        let splitter = ((1u64 << s) + 1) as f64;
+        Program {
+            name: "div22".into(),
+            n_in: 4,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },              // ah
+                LoadIn { dst: 1, src: 1 },              // al
+                LoadIn { dst: 2, src: 2 },              // bh
+                LoadIn { dst: 3, src: 3 },              // bl
+                Rcp { dst: 4, a: 2 },                   // rb = rcp(bh)
+                Mul { dst: 5, a: 0, b: 4 },             // q1 = ah * rb
+                // two_prod(q1, bh) -> r6 = th, r13 = tl
+                Mul { dst: 6, a: 5, b: 2 },
+                LoadConst { dst: 7, value: splitter },
+                Mul { dst: 8, a: 7, b: 5 },             // split q1
+                Sub { dst: 9, a: 8, b: 5 },
+                Sub { dst: 8, a: 8, b: 9 },
+                Sub { dst: 9, a: 5, b: 8 },
+                Mul { dst: 10, a: 7, b: 2 },            // split bh
+                Sub { dst: 11, a: 10, b: 2 },
+                Sub { dst: 10, a: 10, b: 11 },
+                Sub { dst: 11, a: 2, b: 10 },
+                Mul { dst: 12, a: 8, b: 10 },
+                Sub { dst: 12, a: 6, b: 12 },           // err1
+                Mul { dst: 13, a: 9, b: 10 },
+                Sub { dst: 12, a: 12, b: 13 },          // err2
+                Mul { dst: 13, a: 8, b: 11 },
+                Sub { dst: 12, a: 12, b: 13 },          // err3
+                Mul { dst: 13, a: 9, b: 11 },
+                Sub { dst: 13, a: 13, b: 12 },          // tl
+                // r = (((ah - th) - tl) + al - q1*bl) * rb
+                Sub { dst: 14, a: 0, b: 6 },
+                Sub { dst: 14, a: 14, b: 13 },
+                Add { dst: 14, a: 14, b: 1 },
+                Mul { dst: 15, a: 5, b: 3 },
+                Sub { dst: 14, a: 14, b: 15 },
+                Mul { dst: 14, a: 14, b: 4 },
+                // fast_two_sum(q1, r)
+                Add { dst: 16, a: 5, b: 14 },
+                Sub { dst: 17, a: 16, b: 5 },
+                Sub { dst: 17, a: 14, b: 17 },
+                StoreOut { dst: 0, src: 16 },
+                StoreOut { dst: 1, src: 17 },
+            ],
+        }
+    }
+
+    /// Mad22: streams (ah, al, bh, bl, ch, cl) -> (rh, rl), computed as
+    /// `add22(mul22(a, b), c)` exactly like the native kernel.
+    pub fn mad22(p: u32) -> Program {
+        use Instr::*;
+        let s = p.div_ceil(2);
+        let splitter = ((1u64 << s) + 1) as f64;
+        Program {
+            name: "mad22".into(),
+            n_in: 6,
+            n_out: 2,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },              // ah
+                LoadIn { dst: 1, src: 1 },              // al
+                LoadIn { dst: 2, src: 2 },              // bh
+                LoadIn { dst: 3, src: 3 },              // bl
+                LoadIn { dst: 4, src: 4 },              // ch
+                LoadIn { dst: 5, src: 5 },              // cl
+                // ---- mul22(a, b) -> r16 = ph, r17 = pl
+                Mul { dst: 6, a: 0, b: 2 },             // x = ah*bh
+                LoadConst { dst: 7, value: splitter },
+                Mul { dst: 8, a: 7, b: 0 },             // split ah
+                Sub { dst: 9, a: 8, b: 0 },
+                Sub { dst: 8, a: 8, b: 9 },
+                Sub { dst: 9, a: 0, b: 8 },
+                Mul { dst: 10, a: 7, b: 2 },            // split bh
+                Sub { dst: 11, a: 10, b: 2 },
+                Sub { dst: 10, a: 10, b: 11 },
+                Sub { dst: 11, a: 2, b: 10 },
+                Mul { dst: 12, a: 8, b: 10 },
+                Sub { dst: 12, a: 6, b: 12 },           // err1
+                Mul { dst: 13, a: 9, b: 10 },
+                Sub { dst: 12, a: 12, b: 13 },          // err2
+                Mul { dst: 13, a: 8, b: 11 },
+                Sub { dst: 12, a: 12, b: 13 },          // err3
+                Mul { dst: 13, a: 9, b: 11 },
+                Sub { dst: 13, a: 13, b: 12 },          // y
+                Mul { dst: 14, a: 0, b: 3 },            // ah*bl
+                Mul { dst: 15, a: 1, b: 2 },            // al*bh
+                Add { dst: 14, a: 14, b: 15 },
+                Add { dst: 13, a: 13, b: 14 },          // pl
+                Add { dst: 16, a: 6, b: 13 },           // fast_two_sum
+                Sub { dst: 17, a: 16, b: 6 },
+                Sub { dst: 17, a: 13, b: 17 },
+                // ---- add22(p, c): two_sum(ph, ch) -> r18 s, r19 se
+                Add { dst: 18, a: 16, b: 4 },
+                Sub { dst: 19, a: 18, b: 16 },          // bb
+                Sub { dst: 20, a: 18, b: 19 },          // s - bb
+                Sub { dst: 20, a: 16, b: 20 },          // ph - (s - bb)
+                Sub { dst: 21, a: 4, b: 19 },           // ch - bb
+                Add { dst: 19, a: 20, b: 21 },          // se
+                // te = (pl + cl) + se
+                Add { dst: 22, a: 17, b: 5 },
+                Add { dst: 22, a: 22, b: 19 },
+                // fast_two_sum(s, te)
+                Add { dst: 23, a: 18, b: 22 },
+                Sub { dst: 24, a: 23, b: 18 },
+                Sub { dst: 24, a: 22, b: 24 },
+                StoreOut { dst: 0, src: 23 },
+                StoreOut { dst: 1, src: 24 },
+            ],
+        }
+    }
+
     /// Baseline single add: (a, b) -> (r).
     pub fn base_add() -> Program {
         use Instr::*;
@@ -251,6 +444,22 @@ pub mod programs {
                 LoadIn { dst: 0, src: 0 },
                 LoadIn { dst: 1, src: 1 },
                 Add { dst: 2, a: 0, b: 1 },
+                StoreOut { dst: 0, src: 2 },
+            ],
+        }
+    }
+
+    /// Baseline single mul: (a, b) -> (r).
+    pub fn base_mul() -> Program {
+        use Instr::*;
+        Program {
+            name: "mul".into(),
+            n_in: 2,
+            n_out: 1,
+            code: vec![
+                LoadIn { dst: 0, src: 0 },
+                LoadIn { dst: 1, src: 1 },
+                Mul { dst: 2, a: 0, b: 1 },
                 StoreOut { dst: 0, src: 2 },
             ],
         }
@@ -332,6 +541,101 @@ mod tests {
             assert_eq!(out[0][i], m.to_f64(r.0), "i={i}");
             assert_eq!(out[1][i], m.to_f64(r.1), "i={i}");
         }
+    }
+
+    /// The IEEE-configured VM must reproduce the native f32 kernels
+    /// bit-for-bit for the EFT-based operators (the property the
+    /// cross-backend parity test in `rust/tests/` depends on).
+    #[test]
+    fn ieee_mul22_and_mad22_programs_match_native_kernels() {
+        use crate::ff::FF32;
+        let m = GpuModel::IEEE;
+        let p = m.format.precision();
+        let mut rng = Rng::new(124);
+        let n = 512;
+        let mut planes: Vec<Vec<f64>> = vec![Vec::with_capacity(n); 6];
+        for _ in 0..n {
+            for pair in 0..3 {
+                let (hi, lo) = rng.ff_pair(-8, 8);
+                planes[2 * pair].push(hi as f64);
+                planes[2 * pair + 1].push(lo as f64);
+            }
+        }
+        let refs: Vec<&[f64]> = planes.iter().map(Vec::as_slice).collect();
+
+        let out = run(&m, &programs::mul22(p), &refs[..4]).unwrap();
+        for i in 0..n {
+            let a = FF32::from_parts(planes[0][i] as f32, planes[1][i] as f32);
+            let b = FF32::from_parts(planes[2][i] as f32, planes[3][i] as f32);
+            let want = a * b;
+            assert_eq!(out[0][i], want.hi as f64, "mul22 hi i={i}");
+            assert_eq!(out[1][i], want.lo as f64, "mul22 lo i={i}");
+        }
+
+        let out = run(&m, &programs::mad22(p), &refs).unwrap();
+        for i in 0..n {
+            let a = FF32::from_parts(planes[0][i] as f32, planes[1][i] as f32);
+            let b = FF32::from_parts(planes[2][i] as f32, planes[3][i] as f32);
+            let c = FF32::from_parts(planes[4][i] as f32, planes[5][i] as f32);
+            let want = a.mul22(b).add22(c);
+            assert_eq!(out[0][i], want.hi as f64, "mad22 hi i={i}");
+            assert_eq!(out[1][i], want.lo as f64, "mad22 lo i={i}");
+        }
+    }
+
+    #[test]
+    fn div22_program_is_accurate_not_bitexact() {
+        use crate::ff::FF32;
+        let m = GpuModel::IEEE;
+        let p = m.format.precision();
+        let mut rng = Rng::new(125);
+        let n = 256;
+        let mut planes: Vec<Vec<f64>> = vec![Vec::with_capacity(n); 4];
+        for _ in 0..n {
+            for pair in 0..2 {
+                let (mut hi, lo) = rng.ff_pair(-6, 6);
+                if pair == 1 && hi.abs() < 1e-3 {
+                    hi += 1.0f32.copysign(hi);
+                }
+                planes[2 * pair].push(hi as f64);
+                planes[2 * pair + 1].push(lo as f64);
+            }
+        }
+        let refs: Vec<&[f64]> = planes.iter().map(Vec::as_slice).collect();
+        let out = run(&m, &programs::div22(p), &refs).unwrap();
+        for i in 0..n {
+            let a = FF32::from_parts(planes[0][i] as f32, planes[1][i] as f32);
+            let b = FF32::from_parts(planes[2][i] as f32, planes[3][i] as f32);
+            let want = (a / b).to_f64();
+            let got = out[0][i] + out[1][i];
+            let rel = if want == 0.0 { got.abs() } else { ((got - want) / want).abs() };
+            // recip-based division: a few ulps beyond the CPU result
+            assert!(rel < 2f64.powi(-38), "i={i} rel={rel:e}");
+        }
+    }
+
+    #[test]
+    fn run_into_matches_run_and_checks_shapes() {
+        let m = GpuModel::NV35;
+        let mut rng = Rng::new(126);
+        let a: Vec<f64> = (0..64).map(|_| rng.spread_f32(-6, 6) as f64).collect();
+        let b: Vec<f64> = (0..64).map(|_| rng.spread_f32(-6, 6) as f64).collect();
+        let prog = programs::add12();
+        let want = run(&m, &prog, &[&a, &b]).unwrap();
+        let mut out = vec![vec![0.0f64; 64]; 2];
+        run_into(&m, &prog, &[&a, &b], &mut out).unwrap();
+        assert_eq!(out, want);
+        // wrong output arity / length are rejected
+        let mut bad = vec![vec![0.0f64; 64]; 1];
+        assert_eq!(
+            run_into(&m, &prog, &[&a, &b], &mut bad),
+            Err(VmError::LengthMismatch)
+        );
+        let mut short = vec![vec![0.0f64; 32]; 2];
+        assert_eq!(
+            run_into(&m, &prog, &[&a, &b], &mut short),
+            Err(VmError::LengthMismatch)
+        );
     }
 
     #[test]

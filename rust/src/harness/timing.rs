@@ -126,6 +126,46 @@ pub fn gpu_grid(
     })
 }
 
+/// Generic timing grid over any [`crate::backend::KernelBackend`] —
+/// the substrate-neutral emitter the backend layer unlocks: the same
+/// table for native (any worker count), gpusim (any GPU model), or XLA.
+pub fn backend_grid(
+    backend: &mut dyn crate::backend::KernelBackend, sizes: &[usize], ops: &[&str],
+    timer: &Timer, seed: u64,
+) -> Result<TimingGrid, crate::backend::ServiceError> {
+    let mut seconds = Vec::with_capacity(sizes.len());
+    for (si, &n) in sizes.iter().enumerate() {
+        let mut row = Vec::with_capacity(ops.len());
+        for op in ops {
+            let planes = planes_for(op, n, seed + si as u64);
+            let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+            let n_out = crate::backend::op_spec(op)
+                .map(|s| s.n_out)
+                .ok_or_else(|| {
+                    crate::backend::ServiceError::UnknownOp(op.to_string())
+                })?;
+            let mut outs = vec![vec![0.0f32; n]; n_out];
+            let mut err = None;
+            let secs = timer.median_secs(|| {
+                if let Err(e) = backend.execute(op, &refs, &mut outs) {
+                    err = Some(e);
+                }
+                std::hint::black_box(&outs);
+            });
+            if let Some(e) = err {
+                return Err(e);
+            }
+            row.push(secs);
+        }
+        seconds.push(row);
+    }
+    Ok(TimingGrid {
+        ops: ops.iter().map(|s| s.to_string()).collect(),
+        sizes: sizes.to_vec(),
+        seconds,
+    })
+}
+
 /// The paper's Table 3 values, for side-by-side printing.
 pub fn paper_table3() -> (Vec<usize>, Vec<Vec<f64>>) {
     (
@@ -184,6 +224,27 @@ mod tests {
         assert!(s.contains("Add12"));
         assert!(s.contains("Mul22"));
         assert!(s.contains("256"));
+    }
+
+    #[test]
+    fn backend_grid_runs_on_native_and_gpusim() {
+        use crate::backend::{BackendSpec, ServiceError};
+        let timer = Timer::new(0, 1);
+        let mut native = BackendSpec::native_single().build().unwrap();
+        let grid =
+            backend_grid(native.as_mut(), &[256], &["add", "add22"], &timer, 1).unwrap();
+        assert_eq!(grid.seconds.len(), 1);
+        assert!(grid.seconds[0].iter().all(|&s| s > 0.0));
+
+        let mut sim = BackendSpec::gpusim_ieee().build().unwrap();
+        let grid =
+            backend_grid(sim.as_mut(), &[64], &["add12", "mul22"], &timer, 2).unwrap();
+        assert!(grid.seconds[0].iter().all(|&s| s > 0.0));
+
+        assert!(matches!(
+            backend_grid(native.as_mut(), &[64], &["nope"], &timer, 3),
+            Err(ServiceError::UnknownOp(_))
+        ));
     }
 
     #[test]

@@ -17,16 +17,27 @@
 //! * [`mp`] — an arbitrary-precision binary float (mini-MPFR), the
 //!   accuracy oracle for Table 5;
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled XLA
-//!   artifacts produced by `python/compile` (the "GPU path" of Table 3);
-//! * [`coordinator`] — the stream dispatcher: request batching, artifact
-//!   registry, worker loop, metrics (the moral equivalent of the Brook
+//!   artifacts produced by `python/compile` (the "GPU path" of Table 3;
+//!   needs the `xla` cargo feature, stubbed otherwise);
+//! * [`backend`] — the **execution-substrate layer**: one
+//!   [`backend::KernelBackend`] trait over the operator catalogue, with
+//!   native multicore ([`backend::NativeBackend`]), simulated-GPU
+//!   ([`backend::GpuSimBackend`]) and PJRT/XLA
+//!   ([`backend::XlaBackend`]) implementations, typed
+//!   [`backend::ServiceError`]s, and the [`backend::BufferPool`] that
+//!   keeps the hot path allocation-free;
+//! * [`coordinator`] — the sharded stream dispatcher: request batching,
+//!   N device threads each owning a backend instance, round-robin
+//!   submission, per-shard metrics (the moral equivalent of the Brook
 //!   runtime);
 //! * [`harness`] — workload generators and table emitters that regenerate
-//!   every table of the paper's evaluation section.
+//!   every table of the paper's evaluation section, plus the
+//!   substrate-neutral [`harness::timing::backend_grid`].
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod backend;
 pub mod coordinator;
 pub mod ff;
 pub mod gpusim;

@@ -3,24 +3,29 @@
 //! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §3):
 //!
 //! ```text
-//! ffgpu info                # platform, artifact inventory, Table 1 formats
+//! ffgpu info                # platform, backends, artifact inventory, Table 1
 //! ffgpu paranoia            # Table 2 (simulated GPU arithmetic)
 //! ffgpu table3              # Table 3 (XLA/PJRT "GPU path" timings)
 //! ffgpu table4              # Table 4 (native CPU path timings)
+//! ffgpu tablex              # timing grid on any backend (--backend ...)
 //! ffgpu accuracy            # Table 5 (vs exact dyadic oracle)
 //! ffgpu serve-demo          # coordinator smoke: batched requests + metrics
 //! ffgpu selftest            # end-to-end: artifacts vs native, bit-exact
 //! ```
 //!
+//! Backend selection (serve-demo, tablex): `--backend native`,
+//! `--backend native:<workers>`, `--backend gpusim:<model>`,
+//! `--backend xla`; `--shards N` runs N device threads.
+//!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
 
-use ffgpu::coordinator::service::Backend;
+use ffgpu::backend::BackendSpec;
 use ffgpu::coordinator::{Service, ServiceConfig};
 use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
 use ffgpu::runtime::Runtime;
 use ffgpu::util::{Rng, Timer};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -34,14 +39,17 @@ fn main() {
     };
     let artifacts = PathBuf::from(get_flag("--artifacts", "artifacts".into()));
     let samples: usize = get_flag("--samples", String::new()).parse().unwrap_or(0);
+    let backend_flag = get_flag("--backend", "native".into());
+    let shards: usize = get_flag("--shards", String::new()).parse().unwrap_or(1);
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
         "paranoia" => cmd_paranoia(if samples > 0 { samples } else { 200_000 }),
         "table3" => cmd_table3(&artifacts),
         "table4" => cmd_table4(),
+        "tablex" => cmd_tablex(&artifacts, &backend_flag),
         "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
-        "serve-demo" => cmd_serve_demo(&artifacts),
+        "serve-demo" => cmd_serve_demo(&artifacts, &backend_flag, shards),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -59,18 +67,27 @@ const HELP: &str = "\
 ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
 
 USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
+                       [--backend B] [--shards N]
 
 COMMANDS:
-  info        platform, artifact inventory, Table 1 formats
+  info        platform, backend catalogues, artifact inventory, Table 1
   paranoia    Table 2: error intervals of simulated GPU arithmetic
   table3      Table 3: operator timings on the XLA/PJRT path
   table4      Table 4: operator timings on the native CPU path
+  tablex      operator timing grid on any backend (see --backend)
   accuracy    Table 5: measured accuracy vs the exact dyadic oracle
   serve-demo  coordinator demo: batched requests, metrics report
   selftest    artifacts vs native kernels, bit-exact check
+
+BACKENDS (--backend):
+  native          multicore ff::vector kernels (one worker per core)
+  native:<N>      same, with N workers per shard
+  gpusim          stream VM on IEEE round-to-nearest arithmetic
+  gpusim:<model>  stream VM on a GPU model: nv35, nv40, r300, chopped
+  xla             PJRT/XLA artifacts (needs the `xla` feature + artifacts)
 ";
 
-fn cmd_info(artifacts: &PathBuf) -> i32 {
+fn cmd_info(artifacts: &Path) -> i32 {
     println!("ffgpu — float-float operators (reproduction of Da Graça & Defour 2006)\n");
     println!("Table 1 formats:");
     for f in ffgpu::gpusim::Format::table1() {
@@ -79,6 +96,13 @@ fn cmd_info(artifacts: &PathBuf) -> i32 {
             f.name(), f.exp_bits, f.mant_bits,
             if f.has_specials { "yes" } else { "no" }
         );
+    }
+    println!("\nbackends:");
+    for spec in [BackendSpec::native(), BackendSpec::gpusim_ieee()] {
+        match spec.build() {
+            Ok(b) => println!("  {:<7} ops: {}", b.name(), b.ops().join(", ")),
+            Err(e) => println!("  {:<7} unavailable: {e}", spec.label()),
+        }
     }
     match Runtime::new(artifacts) {
         Ok(rt) => {
@@ -97,7 +121,7 @@ fn cmd_info(artifacts: &PathBuf) -> i32 {
             0
         }
         Err(e) => {
-            println!("\n(no runtime: {e})");
+            println!("\n(no xla runtime: {e})");
             0
         }
     }
@@ -109,7 +133,7 @@ fn cmd_paranoia(samples: usize) -> i32 {
     0
 }
 
-fn cmd_table3(artifacts: &PathBuf) -> i32 {
+fn cmd_table3(artifacts: &Path) -> i32 {
     let rt = match Runtime::new(artifacts) {
         Ok(rt) => rt,
         Err(e) => {
@@ -143,6 +167,50 @@ fn cmd_table4() -> i32 {
     0
 }
 
+/// Substrate-neutral timing table through the backend layer.
+fn cmd_tablex(artifacts: &Path, backend_flag: &str) -> i32 {
+    let spec = match BackendSpec::from_cli(backend_flag, artifacts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let mut backend = match spec.build() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("backend: {e}");
+            return 1;
+        }
+    };
+    // the soft-float VM is orders of magnitude slower than hardware:
+    // shrink the grid so gpusim tables come back in seconds
+    let (sizes, timer): (Vec<usize>, Timer) = if spec.label() == "gpusim" {
+        (vec![1024, 4096, 16384], Timer::new(0, 3))
+    } else {
+        (workload::PAPER_SIZES.to_vec(), Timer::new(2, 7))
+    };
+    match timing::backend_grid(backend.as_mut(), &sizes, &workload::PAPER_OPS, &timer, 5)
+    {
+        Ok(grid) => {
+            print!("{}", grid.render(&format!(
+                "Operator timings on backend '{}' (normalised to Add @ {})",
+                backend.name(), sizes[0]
+            )));
+            let st = backend.stats();
+            println!(
+                "\nbackend stats: {} executions, {} elements, {:.3}s busy",
+                st.executions, st.elements, st.busy_seconds
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("tablex: {e}");
+            1
+        }
+    }
+}
+
 fn print_paper_grid(title: &str, (sizes, rows): (Vec<usize>, Vec<Vec<f64>>)) {
     println!("\n{title}:");
     let ops_header: String =
@@ -154,7 +222,7 @@ fn print_paper_grid(title: &str, (sizes, rows): (Vec<usize>, Vec<Vec<f64>>)) {
     }
 }
 
-fn cmd_accuracy(artifacts: &PathBuf, samples: usize) -> i32 {
+fn cmd_accuracy(artifacts: &Path, samples: usize) -> i32 {
     println!("Table 5 — measured accuracy, {samples} samples per op, exact dyadic oracle\n");
     let ops = ["add12", "mul12", "add22", "mul22", "div22", "mad22"];
 
@@ -197,14 +265,20 @@ fn cmd_accuracy(artifacts: &PathBuf, samples: usize) -> i32 {
     0
 }
 
-fn cmd_serve_demo(artifacts: &PathBuf) -> i32 {
-    let backend = if artifacts.join("manifest.json").exists() {
-        Backend::Xla(artifacts.clone())
-    } else {
-        println!("(no artifacts; using CPU backend)");
-        Backend::Cpu
+fn cmd_serve_demo(artifacts: &Path, backend_flag: &str, shards: usize) -> i32 {
+    let spec = match BackendSpec::from_cli(backend_flag, artifacts) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
     };
-    let svc = match Service::start(ServiceConfig { backend, ..Default::default() }) {
+    println!("backend: {} x {shards} shard(s)", spec.label());
+    let svc = match Service::start(ServiceConfig {
+        backend: spec,
+        shards,
+        max_batch: 64,
+    }) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("service: {e}");
@@ -236,10 +310,14 @@ fn cmd_serve_demo(artifacts: &PathBuf) -> i32 {
              m.batches, m.launches, m.elements, m.padding_fraction() * 100.0);
     println!("  batch latency mean={:.2}ms max={:.2}ms errors={}",
              m.mean_latency_s * 1e3, m.max_latency_s * 1e3, m.errors);
+    for (i, s) in svc.shard_metrics().iter().enumerate() {
+        println!("  shard {i}: requests={} batches={} elements={}",
+                 s.requests, s.batches, s.elements);
+    }
     0
 }
 
-fn cmd_selftest(artifacts: &PathBuf) -> i32 {
+fn cmd_selftest(artifacts: &Path) -> i32 {
     let rt = match Runtime::new(artifacts) {
         Ok(rt) => rt,
         Err(e) => {

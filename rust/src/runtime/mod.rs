@@ -9,12 +9,23 @@
 //! * [`engine`] — the [`engine::Runtime`]: PJRT client, lazy compile
 //!   cache, literal marshalling, execute-by-name.
 //!
+//! **Feature gate**: the real engine needs the vendored `xla` crate and
+//! builds only with `--features xla`. Default builds swap in
+//! `engine_stub.rs` — the same public surface with `Runtime::new`
+//! returning `Err`, so the coordinator's [`crate::backend::XlaBackend`]
+//! degrades to a clean startup failure instead of a link error.
+//!
 //! **XLA flag requirement**: every client must run with
 //! `--xla_disable_hlo_passes=fusion` (set automatically by
 //! [`engine::Runtime::new`]) — see DESIGN.md §4b for the XLA fusion
 //! miscompilation of EFT chains this works around.
 
+#[cfg(feature = "xla")]
 pub mod engine;
+#[cfg(not(feature = "xla"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+
 pub mod manifest;
 
 pub use engine::Runtime;

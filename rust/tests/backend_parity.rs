@@ -1,0 +1,199 @@
+//! Cross-backend parity: Native, GpuSim-in-IEEE-mode and (when
+//! artifacts exist) XLA must produce **bit-identical** planes for the
+//! EFT operators on random batches.
+//!
+//! No proptest crate in the vendored set, so this is the repo's seeded
+//! random-search harness (same substitution as `prop_invariants.rs`):
+//! each case draws an operator, a batch size and a seed, runs every
+//! available backend through the *same* `KernelBackend` interface, and
+//! compares against the native reference lane by lane.
+
+use ffgpu::backend::{
+    op_spec, BackendSpec, KernelBackend, NativeBackend, ServiceError,
+};
+use ffgpu::harness::workload;
+use ffgpu::util::Rng;
+use std::path::PathBuf;
+
+/// Ops whose outputs are bit-identical across substrates (EFT chains:
+/// every operation individually rounded, identical operation order).
+/// `split` (mask vs Dekker) and `div22` (hardware divide vs reciprocal)
+/// are numerically equivalent but not bit-equal by design.
+const PARITY_OPS: [&str; 5] = ["add22", "mul22", "mul12", "add12", "mad22"];
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        None
+    }
+}
+
+/// Every backend that can be built in this environment, with a label.
+fn backends() -> Vec<(String, Box<dyn KernelBackend>)> {
+    let mut v: Vec<(String, Box<dyn KernelBackend>)> = vec![
+        (
+            "native-parallel".to_string(),
+            Box::new(NativeBackend::new(2048, 4)),
+        ),
+        (
+            "gpusim-ieee".to_string(),
+            BackendSpec::gpusim_ieee().build().unwrap(),
+        ),
+    ];
+    if let Some(dir) = artifacts_dir() {
+        match (BackendSpec::Xla { artifacts: dir, precompile: false }).build() {
+            Ok(b) => v.push(("xla".to_string(), b)),
+            Err(e) => eprintln!("skipping xla backend: {e}"),
+        }
+    } else {
+        eprintln!("skipping xla backend: no artifacts (run `make artifacts`)");
+    }
+    v
+}
+
+fn execute(
+    b: &mut dyn KernelBackend, op: &str, planes: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>, ServiceError> {
+    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+    let n = planes[0].len();
+    let n_out = op_spec(op).unwrap().n_out;
+    let mut outs = vec![vec![0.0f32; n]; n_out];
+    b.execute(op, &refs, &mut outs)?;
+    Ok(outs)
+}
+
+#[test]
+fn prop_backends_bit_match_native_on_random_batches() {
+    // reference: the seed's serving semantics (single-threaded native)
+    let mut reference = NativeBackend::new(1 << 20, 1);
+    let mut others = backends();
+    let mut rng = Rng::new(0xBAC7);
+    let cases = 60;
+    for case in 0..cases {
+        let op = PARITY_OPS[rng.below(PARITY_OPS.len())];
+        // sizes straddle the native chunking threshold and stay odd
+        let n = 1 + rng.below(9000);
+        let planes = workload::planes_for(op, n, 0x9000 + case as u64);
+        let want = execute(&mut reference, op, &planes).unwrap();
+        for (label, b) in others.iter_mut() {
+            let got = execute(b.as_mut(), op, &planes).unwrap();
+            assert_eq!(got.len(), want.len(), "case {case}: {label} {op}");
+            for (o, (pg, pw)) in got.iter().zip(&want).enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        pg[i].to_bits(),
+                        pw[i].to_bits(),
+                        "case {case}: backend={label} op={op} n={n} out{o} lane {i}: \
+                         got {} want {}",
+                        pg[i],
+                        pw[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_div22_agrees_within_tolerance_across_backends() {
+    // div22 is recip-based on the stream VM — equivalent accuracy
+    // class, not bit-equal; pin the tolerance so regressions surface.
+    let mut reference = NativeBackend::new(1 << 20, 1);
+    let mut sim = BackendSpec::gpusim_ieee().build().unwrap();
+    let mut rng = Rng::new(0xD1F2);
+    for case in 0..20 {
+        let n = 1 + rng.below(2000);
+        let planes = workload::planes_for("div22", n, 0x7000 + case as u64);
+        let want = execute(&mut reference, "div22", &planes).unwrap();
+        let got = execute(sim.as_mut(), "div22", &planes).unwrap();
+        for i in 0..n {
+            let w = want[0][i] as f64 + want[1][i] as f64;
+            let g = got[0][i] as f64 + got[1][i] as f64;
+            let rel = if w == 0.0 { g.abs() } else { ((g - w) / w).abs() };
+            assert!(rel < 2f64.powi(-38), "case {case} lane {i}: rel={rel:e}");
+        }
+    }
+}
+
+#[test]
+fn backends_expose_consistent_catalogs() {
+    for (label, b) in backends().iter() {
+        for op in PARITY_OPS {
+            assert!(b.supports(op), "{label} missing {op}");
+        }
+        for op in b.ops() {
+            assert!(op_spec(op).is_some(), "{label} serves unknown op {op}");
+        }
+    }
+}
+
+#[test]
+fn backend_errors_are_typed_uniformly() {
+    let mut backends = backends();
+    for (label, b) in backends.iter_mut() {
+        let a = vec![1.0f32; 8];
+        let ins: Vec<&[f32]> = vec![&a, &a];
+        let mut outs = vec![vec![0.0f32; 8]];
+        assert!(
+            matches!(
+                b.execute("frobnicate", &ins, &mut outs),
+                Err(ServiceError::UnknownOp(_))
+            ),
+            "{label}"
+        );
+        assert!(
+            matches!(
+                b.execute("add22", &ins, &mut outs),
+                Err(ServiceError::Arity { .. })
+            ),
+            "{label}"
+        );
+        let empty: Vec<&[f32]> = vec![&[], &[]];
+        assert!(
+            matches!(
+                b.execute("add", &empty, &mut outs),
+                Err(ServiceError::Shape(_))
+            ),
+            "{label}"
+        );
+    }
+}
+
+/// The acceptance property behind the sharded tentpole: the same batch
+/// served through a sharded native service matches the single-shard
+/// answer bit-for-bit (sharding only changes *where* kernels run).
+#[test]
+fn sharded_service_matches_single_shard_bitwise() {
+    use ffgpu::coordinator::{Service, ServiceConfig};
+    let single = Service::start(ServiceConfig {
+        backend: BackendSpec::native_single(),
+        shards: 1,
+        max_batch: 32,
+    })
+    .unwrap();
+    let sharded = Service::start(ServiceConfig {
+        backend: BackendSpec::native(),
+        shards: 4,
+        max_batch: 32,
+    })
+    .unwrap();
+    let mut rng = Rng::new(0x54A2);
+    for round in 0..12 {
+        let op = PARITY_OPS[rng.below(PARITY_OPS.len())];
+        let n = 100 + rng.below(20_000);
+        let planes = workload::planes_for(op, n, round);
+        let a = single.handle().call(op, planes.clone()).unwrap();
+        let b = sharded.handle().call(op, planes).unwrap();
+        for (pa, pb) in a.iter().zip(&b) {
+            for i in 0..n {
+                assert_eq!(
+                    pa[i].to_bits(),
+                    pb[i].to_bits(),
+                    "round {round} op={op} lane {i}"
+                );
+            }
+        }
+    }
+}

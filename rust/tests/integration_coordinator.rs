@@ -1,6 +1,6 @@
 //! Integration: the coordinator service end-to-end over the XLA backend.
 
-use ffgpu::coordinator::service::Backend;
+use ffgpu::backend::BackendSpec;
 use ffgpu::coordinator::{Service, ServiceConfig};
 use ffgpu::ff::FF32;
 use ffgpu::harness::workload;
@@ -17,11 +17,15 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+fn xla_spec(dir: PathBuf) -> BackendSpec {
+    BackendSpec::Xla { artifacts: dir, precompile: false }
+}
+
 fn xla_service(dir: PathBuf) -> Service {
     Service::start(ServiceConfig {
-        backend: Backend::Xla(dir),
+        backend: xla_spec(dir),
+        shards: 1,
         max_batch: 32,
-        precompile: false,
     })
     .expect("service start")
 }
@@ -116,9 +120,9 @@ fn mixed_ops_from_concurrent_clients() {
 fn batching_coalesces_same_op_requests() {
     let Some(dir) = artifacts_dir() else { return };
     let svc = Service::start(ServiceConfig {
-        backend: Backend::Xla(dir),
+        backend: xla_spec(dir),
+        shards: 1,
         max_batch: 64,
-        precompile: false,
     })
     .unwrap();
     // submit many small async requests before the device thread drains
@@ -148,11 +152,7 @@ fn batching_coalesces_same_op_requests() {
 fn cpu_and_xla_backends_agree() {
     let Some(dir) = artifacts_dir() else { return };
     let xla = xla_service(dir);
-    let cpu = Service::start(ServiceConfig {
-        backend: Backend::Cpu,
-        ..Default::default()
-    })
-    .unwrap();
+    let cpu = Service::start(ServiceConfig::default()).unwrap();
     for op in ["add12", "mul12", "add22", "mul22", "div22"] {
         let planes = workload::planes_for(op, 3000, 0xE44E);
         let a = xla.handle().call(op, planes.clone()).unwrap();
