@@ -1,15 +1,18 @@
-//! Coordinator serving demo: concurrent clients, dynamic batching,
-//! sharded dispatch, metrics — the L3 layer exercised as a service.
+//! Coordinator serving demo: concurrent clients, typed Plan/Ticket
+//! dispatch, heterogeneous shard sets, routing policies, metrics — the
+//! L3 layer exercised as a service.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo                  # native backend
 //! FFGPU_BACKEND=native:2 FFGPU_SHARDS=4 cargo run --release --example serve_demo
-//! FFGPU_BACKEND=gpusim:nv35 cargo run --release --example serve_demo
+//! FFGPU_SHARD_SPEC=native*2,gpusim:nv35 FFGPU_ROUTING=op-affinity \
+//!     cargo run --release --example serve_demo
+//! FFGPU_ROUTING=queue-depth cargo run --release --example serve_demo
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! ```
 
-use ffgpu::backend::BackendSpec;
-use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::backend::{BackendSpec, Op};
+use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
@@ -19,40 +22,59 @@ fn main() {
     let artifacts = PathBuf::from(
         std::env::var("FFGPU_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
     );
-    let explicit = std::env::var("FFGPU_BACKEND").ok();
-    let backend_name = explicit.clone().unwrap_or_else(|| {
-        if artifacts.join("manifest.json").exists() {
-            "xla".into()
-        } else {
-            println!("(no artifacts; using the native backend)");
-            "native".into()
-        }
-    });
+    let routing = Routing::from_cli(
+        &std::env::var("FFGPU_ROUTING").unwrap_or_else(|_| "round-robin".into()),
+    )
+    .expect("routing policy");
+    // FFGPU_SHARD_SPEC gives every shard its own backend; otherwise a
+    // uniform set from FFGPU_BACKEND/FFGPU_SHARDS (xla auto-detected)
+    let explicit_backend = std::env::var("FFGPU_BACKEND").ok();
+    let shard_spec = std::env::var("FFGPU_SHARD_SPEC").ok();
     let shards: usize = std::env::var("FFGPU_SHARDS")
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
-    let spec = BackendSpec::from_cli(&backend_name, &artifacts).expect("backend spec");
-    println!("backend: {} x {shards} shard(s)", spec.label());
-    let svc = match Service::start(ServiceConfig { backend: spec, shards, max_batch: 64 }) {
+    let spec = match &shard_spec {
+        Some(list) => ServiceSpec::from_cli(list, &artifacts).expect("shard spec"),
+        None => {
+            let backend_name = explicit_backend.clone().unwrap_or_else(|| {
+                if artifacts.join("manifest.json").exists() {
+                    "xla".into()
+                } else {
+                    println!("(no artifacts; using the native backend)");
+                    "native".into()
+                }
+            });
+            let b = BackendSpec::from_cli(&backend_name, &artifacts).expect("backend spec");
+            ServiceSpec::uniform(b, shards)
+        }
+    };
+    let spec = spec.with_routing(routing);
+    let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
+    println!("shards: [{}]  routing: {}", labels.join(", "), routing.name());
+    let svc = match Service::start(spec) {
         Ok(svc) => svc,
         // auto-detected xla but the engine is unavailable (e.g. built
         // without the `xla` feature): fall back to native rather than
-        // panic; an explicit FFGPU_BACKEND request still fails loudly
-        Err(e) if explicit.is_none() => {
+        // panic; an explicit FFGPU_BACKEND/FFGPU_SHARD_SPEC request
+        // still fails loudly
+        Err(e) if explicit_backend.is_none() && shard_spec.is_none() => {
             println!("(xla backend unavailable: {e}; falling back to native)");
-            Service::start(ServiceConfig {
-                backend: BackendSpec::native(),
-                shards,
-                max_batch: 64,
-            })
+            Service::start(
+                ServiceSpec::uniform(BackendSpec::native(), shards).with_routing(routing),
+            )
             .expect("service")
         }
         Err(e) => panic!("service: {e}"),
     };
 
-    // a mixed workload: 8 clients, varying ops and sizes
-    let ops = ["add22", "mul22", "mul12", "add12", "div22"];
+    // a mixed workload: 8 concurrent clients, varying ops and sizes,
+    // dispatched through the typed Plan/Ticket API
+    let ops = [Op::Add22, Op::Mul22, Op::Mul12, Op::Add12, Op::Div22];
+    // the gpusim soft-float VM is ~1000x slower than native kernels:
+    // keep it responsive by shrinking the batches it may be routed
+    let slow = svc.shard_labels().iter().any(|&l| l == "gpusim");
+    let top = if slow { 4_000 } else { 32_000 };
     let t0 = Instant::now();
     let mut joins = Vec::new();
     for c in 0..8u64 {
@@ -62,10 +84,14 @@ fn main() {
             let mut lat = Vec::new();
             for round in 0..40 {
                 let op = ops[(c as usize + round) % ops.len()];
-                let n = 256 + rng.below(32_000);
-                let planes = workload::planes_for(op, n, rng.next_u64());
+                let n = 256 + rng.below(top);
+                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                let plan = Plan::new(op, planes).expect("plan");
+                // timer spans dispatch -> reply only, so the printed
+                // percentiles are honest client latency
                 let t = Instant::now();
-                let out = h.call(op, planes).expect("call");
+                let ticket = h.dispatch(plan).expect("dispatch");
+                let out = ticket.wait().expect("reply");
                 lat.push(t.elapsed().as_secs_f64());
                 assert_eq!(out[0].len(), n);
             }
@@ -90,8 +116,13 @@ fn main() {
     println!("client latency: p50={:.2}ms  p95={:.2}ms  p99={:.2}ms",
              pct(0.50) * 1e3, pct(0.95) * 1e3, pct(0.99) * 1e3);
     println!("errors: {}", m.errors);
-    for (i, s) in svc.shard_metrics().iter().enumerate() {
-        println!("shard {i}: requests={} batches={} elements={} mean lat={:.2}ms",
+    for (i, (s, label)) in svc
+        .shard_metrics()
+        .iter()
+        .zip(svc.shard_labels())
+        .enumerate()
+    {
+        println!("shard {i} [{label}]: requests={} batches={} elements={} mean lat={:.2}ms",
                  s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
     }
 }

@@ -1,15 +1,17 @@
-//! Bench: coordinator throughput/latency across backends and shard
-//! counts — the L3 hot path.
+//! Bench: coordinator throughput/latency across backends, shard
+//! counts and routing policies — the L3 hot path.
 //!
 //! Not a paper table (the paper has no serving layer); this is the
 //! §Perf instrument for the backend layer: requests/s and Melem/s for
 //! native single-shard (the seed's serving behaviour), native sharded,
-//! the gpusim stream VM, and XLA when artifacts exist. Results also
-//! land in `BENCH_coordinator.json` so the perf trajectory is
-//! machine-readable across PRs.
+//! the gpusim stream VM, XLA when artifacts exist, and — since the
+//! Op/Plan redesign — a routing-policy comparison (round-robin vs
+//! queue-depth vs op-affinity) over a heterogeneous native+gpusim
+//! shard set. Results also land in `BENCH_coordinator.json` so the
+//! perf trajectory is machine-readable across PRs.
 
-use ffgpu::backend::BackendSpec;
-use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::backend::{BackendSpec, Op};
+use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
@@ -18,6 +20,7 @@ use std::time::Instant;
 struct Row {
     backend: String,
     shards: usize,
+    routing: String,
     clients: usize,
     req_n: usize,
     rounds: usize,
@@ -28,30 +31,33 @@ struct Row {
     mean_latency_ms: f64,
 }
 
+/// Ops the routing comparison cycles through (parity subset: answers
+/// are bit-identical whichever substrate serves them).
+const MIX_OPS: [Op; 4] = [Op::Add22, Op::Mul22, Op::Mul12, Op::Add12];
+
 fn run_case(
-    label: &str, spec: BackendSpec, shards: usize, clients: usize, req_n: usize,
-    rounds: usize,
+    label: &str, spec: ServiceSpec, clients: usize, req_n: usize, rounds: usize,
+    mixed_ops: bool,
 ) -> Option<Row> {
-    let svc = match Service::start(ServiceConfig {
-        backend: spec,
-        shards,
-        max_batch: 64,
-    }) {
+    let shards = spec.shards.len();
+    let routing = spec.routing;
+    let svc = match Service::start(spec) {
         Ok(s) => s,
         Err(e) => {
             println!("  (skipping {label} x{shards}: {e})");
             return None;
         }
     };
-    // warmup every shard (handle round-robins, so `shards` calls touch
-    // each one), then let the shard threads finish recording their
-    // latency samples before snapshotting: metrics for a batch land
-    // *after* its reply, so an immediate snapshot would race and
-    // charge warmup cost to the measured phase
+    // warmup every shard (touch each one explicitly via its own op mix),
+    // then let the shard threads finish recording their latency samples
+    // before snapshotting: metrics for a batch land *after* its reply,
+    // so an immediate snapshot would race and charge warmup cost to the
+    // measured phase
     let h = svc.handle();
-    for i in 0..shards.max(1) {
-        let planes = workload::planes_for("add22", req_n, 1 + i as u64);
-        h.call("add22", planes).unwrap();
+    for i in 0..shards.max(1) * 2 {
+        let op = if mixed_ops { MIX_OPS[i % MIX_OPS.len()] } else { Op::Add22 };
+        let planes = workload::planes_for(op.name(), req_n, 1 + i as u64);
+        h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
     }
     std::thread::sleep(std::time::Duration::from_millis(50));
     let warm = svc.metrics();
@@ -62,9 +68,17 @@ fn run_case(
         let h = svc.handle();
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(c as u64);
-            for _ in 0..rounds {
-                let planes = workload::planes_for("add22", req_n, rng.next_u64());
-                h.call("add22", planes).unwrap();
+            for round in 0..rounds {
+                let op = if mixed_ops {
+                    MIX_OPS[(c + round) % MIX_OPS.len()]
+                } else {
+                    Op::Add22
+                };
+                let planes = workload::planes_for(op.name(), req_n, rng.next_u64());
+                h.dispatch(Plan::new(op, planes).unwrap())
+                    .unwrap()
+                    .wait()
+                    .unwrap();
             }
         }));
     }
@@ -98,6 +112,7 @@ fn run_case(
     let row = Row {
         backend: label.to_string(),
         shards,
+        routing: routing.name().to_string(),
         clients,
         req_n,
         rounds,
@@ -108,8 +123,9 @@ fn run_case(
         mean_latency_ms: mean_latency_s * 1e3,
     };
     println!(
-        "  {label:<16} shards={shards} {clients} clients x {req_n:>6} elems: \
+        "  {label:<16} shards={shards} routing={:<11} {clients} clients x {req_n:>6} elems: \
          {:>8.0} req/s  {:>7.1} Melem/s  batches={:<5} pad={:>4.1}%  lat mean={:.2}ms",
+        row.routing,
         row.req_per_s,
         row.melem_per_s,
         row.batches,
@@ -123,12 +139,13 @@ fn emit_json(rows: &[Row]) {
     let mut out = String::from("{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \"melem_per_s\": \"1e6 elements/s\"},\n  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         out.push_str(&format!(
-            "    {{\"backend\": \"{}\", \"shards\": {}, \"clients\": {}, \
-             \"req_n\": {}, \"rounds\": {}, \"req_per_s\": {:.1}, \
+            "    {{\"backend\": \"{}\", \"shards\": {}, \"routing\": \"{}\", \
+             \"clients\": {}, \"req_n\": {}, \"rounds\": {}, \"req_per_s\": {:.1}, \
              \"melem_per_s\": {:.3}, \"batches\": {}, \
              \"padding_fraction\": {:.4}, \"mean_latency_ms\": {:.3}}}{}\n",
             r.backend,
             r.shards,
+            r.routing,
             r.clients,
             r.req_n,
             r.rounds,
@@ -158,7 +175,9 @@ fn main() {
         [(1usize, 4096usize, 200usize), (4, 4096, 100), (8, 1000, 100), (4, 100_000, 20)]
     {
         rows.extend(run_case(
-            "native-seed", BackendSpec::native_single(), 1, clients, req_n, rounds,
+            "native-seed",
+            ServiceSpec::uniform(BackendSpec::native_single(), 1),
+            clients, req_n, rounds, false,
         ));
     }
 
@@ -167,16 +186,37 @@ fn main() {
     for shards in [2usize, 4] {
         for (clients, req_n, rounds) in [(4usize, 4096usize, 100usize), (8, 1000, 100), (4, 100_000, 20)] {
             rows.extend(run_case(
-                "native", BackendSpec::native(), shards, clients, req_n, rounds,
+                "native",
+                ServiceSpec::uniform(BackendSpec::native(), shards),
+                clients, req_n, rounds, false,
             ));
         }
+    }
+
+    // routing-policy comparison over a heterogeneous shard set:
+    // 3 native workhorses + 1 gpusim-ieee canary (the soft-float VM is
+    // orders of magnitude slower, so placement policy dominates —
+    // queue-depth should starve the canary, round-robin stalls on it,
+    // op-affinity pins one op of the mix to it)
+    println!("== routing policies (heterogeneous: native*3 + gpusim-ieee canary)");
+    for routing in Routing::ALL {
+        let spec = ServiceSpec::heterogeneous(vec![
+            BackendSpec::native(),
+            BackendSpec::native(),
+            BackendSpec::native(),
+            BackendSpec::gpusim_ieee(),
+        ])
+        .with_routing(routing);
+        rows.extend(run_case("hetero-canary", spec, 4, 2048, 10, true));
     }
 
     // the gpusim stream VM: a software model of 2006 GPU arithmetic —
     // tiny workload, the point is trajectory not absolute speed
     println!("== gpusim (IEEE model stream VM)");
     rows.extend(run_case(
-        "gpusim-ieee", BackendSpec::gpusim_ieee(), 1, 2, 4096, 5,
+        "gpusim-ieee",
+        ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1),
+        2, 4096, 5, false,
     ));
 
     // xla artifacts when present
@@ -188,11 +228,11 @@ fn main() {
         for (clients, req_n, rounds) in [(4usize, 4096usize, 100usize), (4, 100_000, 20)] {
             rows.extend(run_case(
                 "xla",
-                BackendSpec::Xla { artifacts: artifacts.clone(), precompile: true },
-                1,
-                clients,
-                req_n,
-                rounds,
+                ServiceSpec::uniform(
+                    BackendSpec::Xla { artifacts: artifacts.clone(), precompile: true },
+                    1,
+                ),
+                clients, req_n, rounds, false,
             ));
         }
     } else {

@@ -2,7 +2,7 @@
 //! path, normalised to the single-precision Add at 4096 elements.
 //!
 //! `cargo bench --bench table3_gpu` prints the measured grid next to the
-//! paper's, plus the derived shape checks EXPERIMENTS.md tracks
+//! paper's, plus the derived shape checks the harness tracks
 //! (Add12 ≈ Add; Add22/Mul22 within a small multiple of Add; cost growth
 //! with size far flatter than the CPU path's).
 //!

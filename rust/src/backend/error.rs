@@ -6,6 +6,7 @@
 //! consumers. Every layer above the kernels — backends, batcher,
 //! coordinator, handles — now speaks this enum.
 
+use super::op::Op;
 use std::error::Error;
 use std::fmt;
 
@@ -15,16 +16,23 @@ pub enum ServiceError {
     /// The service (or one of its shards) has stopped; the submission
     /// queue or the reply channel is closed.
     QueueClosed,
-    /// Operator name not in the catalogue.
+    /// Operator name not in the catalogue (only [`Op::parse`] and the
+    /// deprecated string entry points can produce this).
     UnknownOp(String),
     /// Wrong number of input planes for the operator.
-    Arity { op: String, want: usize, got: usize },
-    /// Ragged or empty input planes (every plane must have the same
-    /// non-zero length), or mismatched output buffers.
+    Arity { op: Op, want: usize, got: usize },
+    /// Input plane `plane` has a different length than plane 0 — every
+    /// plane of a request must have the same length.
+    RaggedPlanes { op: Op, plane: usize, want: usize, got: usize },
+    /// Zero-length batch: there is nothing to execute, and letting it
+    /// through used to panic deep inside backends.
+    EmptyBatch { op: Op },
+    /// Mismatched output buffers or other shape violations not covered
+    /// by the specific variants above.
     Shape(String),
     /// The operator is in the catalogue but this backend cannot serve it
     /// (e.g. no compiled artifact, no lowered program).
-    Unsupported { backend: &'static str, op: String },
+    Unsupported { backend: &'static str, op: Op },
     /// Substrate failure: PJRT compile/execute error, stream-VM fault,
     /// worker-pool failure, missing artifacts directory, ...
     Backend(String),
@@ -37,6 +45,16 @@ impl fmt::Display for ServiceError {
             ServiceError::UnknownOp(op) => write!(f, "unknown op '{op}'"),
             ServiceError::Arity { op, want, got } => {
                 write!(f, "op '{op}' wants {want} input planes, got {got}")
+            }
+            ServiceError::RaggedPlanes { op, plane, want, got } => {
+                write!(
+                    f,
+                    "op '{op}': input plane {plane} has length {got}, \
+                     expected {want} (ragged planes)"
+                )
+            }
+            ServiceError::EmptyBatch { op } => {
+                write!(f, "op '{op}': zero-length batch")
             }
             ServiceError::Shape(msg) => write!(f, "bad shape: {msg}"),
             ServiceError::Unsupported { backend, op } => {
@@ -59,12 +77,17 @@ mod tests {
             (ServiceError::QueueClosed, "queue closed"),
             (ServiceError::UnknownOp("frob".into()), "frob"),
             (
-                ServiceError::Arity { op: "add22".into(), want: 4, got: 3 },
+                ServiceError::Arity { op: Op::Add22, want: 4, got: 3 },
                 "wants 4 input planes, got 3",
             ),
+            (
+                ServiceError::RaggedPlanes { op: Op::Mul22, plane: 2, want: 16, got: 7 },
+                "plane 2 has length 7",
+            ),
+            (ServiceError::EmptyBatch { op: Op::Add }, "zero-length batch"),
             (ServiceError::Shape("ragged".into()), "ragged"),
             (
-                ServiceError::Unsupported { backend: "xla", op: "mad22".into() },
+                ServiceError::Unsupported { backend: "xla", op: Op::Mad22 },
                 "does not serve",
             ),
             (ServiceError::Backend("pjrt died".into()), "pjrt died"),

@@ -14,7 +14,7 @@
 //! (reciprocal-based, as real GPUs did it) are numerically equivalent
 //! but not bit-equal, which is itself faithful to the paper.
 
-use super::{check_shapes, BackendStats, ExecReport, KernelBackend, ServiceError};
+use super::{check_shapes, BackendStats, ExecReport, KernelBackend, Op, ServiceError};
 use crate::gpusim::shader::{self, programs, Program};
 use crate::gpusim::GpuModel;
 use std::time::Instant;
@@ -22,7 +22,7 @@ use std::time::Instant;
 /// Stream-VM backend over one GPU arithmetic model.
 pub struct GpuSimBackend {
     model: GpuModel,
-    programs: Vec<(&'static str, Program)>,
+    programs: Vec<(Op, Program)>,
     /// Reusable f64 staging for input streams (upload side).
     fin: Vec<Vec<f64>>,
     /// Reusable f64 staging for output streams (readback side).
@@ -33,17 +33,17 @@ pub struct GpuSimBackend {
 impl GpuSimBackend {
     pub fn new(model: GpuModel) -> GpuSimBackend {
         let p = model.format.precision();
-        let programs: Vec<(&'static str, Program)> = vec![
-            ("add12", programs::add12()),
-            ("split", programs::split(p)),
-            ("mul12", programs::mul12(p)),
-            ("add22", programs::add22()),
-            ("mul22", programs::mul22(p)),
-            ("div22", programs::div22(p)),
-            ("mad22", programs::mad22(p)),
-            ("add", programs::base_add()),
-            ("mul", programs::base_mul()),
-            ("mad", programs::base_mad()),
+        let programs: Vec<(Op, Program)> = vec![
+            (Op::Add12, programs::add12()),
+            (Op::Split, programs::split(p)),
+            (Op::Mul12, programs::mul12(p)),
+            (Op::Add22, programs::add22()),
+            (Op::Mul22, programs::mul22(p)),
+            (Op::Div22, programs::div22(p)),
+            (Op::Mad22, programs::mad22(p)),
+            (Op::Add, programs::base_add()),
+            (Op::Mul, programs::base_mul()),
+            (Op::Mad, programs::base_mad()),
         ];
         GpuSimBackend {
             model,
@@ -72,24 +72,22 @@ impl KernelBackend for GpuSimBackend {
         "gpusim"
     }
 
-    fn ops(&self) -> Vec<&'static str> {
-        self.programs.iter().map(|(name, _)| *name).collect()
+    fn ops(&self) -> Vec<Op> {
+        self.programs.iter().map(|(op, _)| *op).collect()
     }
 
     fn execute(
-        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError> {
-        let (spec, n) = check_shapes("gpusim", op, inputs, outputs)?;
-        let Some(prog) = self.programs.iter().find(|(name, _)| *name == op) else {
-            return Err(ServiceError::Unsupported {
-                backend: "gpusim",
-                op: op.to_string(),
-            });
+        let n = check_shapes("gpusim", op, inputs, outputs)?;
+        let (n_in, n_out) = op.arity();
+        let Some(prog) = self.programs.iter().find(|(p, _)| *p == op) else {
+            return Err(ServiceError::Unsupported { backend: "gpusim", op });
         };
         let prog = &prog.1;
         let t0 = Instant::now();
         // upload: widen f32 planes into reusable f64 streams
-        while self.fin.len() < spec.n_in {
+        while self.fin.len() < n_in {
             self.fin.push(Vec::new());
         }
         for (i, plane) in inputs.iter().enumerate() {
@@ -97,15 +95,15 @@ impl KernelBackend for GpuSimBackend {
             buf.clear();
             buf.extend(plane.iter().map(|&v| v as f64));
         }
-        let in_refs: Vec<&[f64]> = self.fin[..spec.n_in].iter().map(Vec::as_slice).collect();
-        while self.fout.len() < spec.n_out {
+        let in_refs: Vec<&[f64]> = self.fin[..n_in].iter().map(Vec::as_slice).collect();
+        while self.fout.len() < n_out {
             self.fout.push(Vec::new());
         }
-        for buf in self.fout[..spec.n_out].iter_mut() {
+        for buf in self.fout[..n_out].iter_mut() {
             buf.clear();
             buf.resize(n, 0.0);
         }
-        shader::run_into(&self.model, prog, &in_refs, &mut self.fout[..spec.n_out])
+        shader::run_into(&self.model, prog, &in_refs, &mut self.fout[..n_out])
             .map_err(|e| ServiceError::Backend(format!("gpusim vm: {e:?}")))?;
         // readback: narrow to f32 output planes
         for (o, plane) in outputs.iter_mut().enumerate() {
@@ -130,11 +128,10 @@ mod tests {
     use crate::ff::FF32;
     use crate::harness::workload;
 
-    fn exec(b: &mut GpuSimBackend, op: &str, n: usize, seed: u64) -> Vec<Vec<f32>> {
-        let planes = workload::planes_for(op, n, seed);
+    fn exec(b: &mut GpuSimBackend, op: Op, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let planes = workload::planes_for(op.name(), n, seed);
         let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
-        let n_out = super::super::op_spec(op).unwrap().n_out;
-        let mut outs = vec![vec![0.0f32; n]; n_out];
+        let mut outs = vec![vec![0.0f32; n]; op.n_out()];
         b.execute(op, &refs, &mut outs).unwrap();
         outs
     }
@@ -146,7 +143,7 @@ mod tests {
         let planes = workload::planes_for("add22", n, 0x6511);
         let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
         let mut outs = vec![vec![0.0f32; n]; 2];
-        b.execute("add22", &refs, &mut outs).unwrap();
+        b.execute(Op::Add22, &refs, &mut outs).unwrap();
         for i in 0..n {
             let want = FF32::from_parts(planes[0][i], planes[1][i])
                 + FF32::from_parts(planes[2][i], planes[3][i]);
@@ -162,8 +159,8 @@ mod tests {
     fn nv35_model_differs_from_ieee_somewhere() {
         let mut ieee = GpuSimBackend::by_name("ieee-rn").unwrap();
         let mut nv35 = GpuSimBackend::by_name("nv35").unwrap();
-        let a = exec(&mut ieee, "add22", 4096, 7);
-        let b = exec(&mut nv35, "add22", 4096, 7);
+        let a = exec(&mut ieee, Op::Add22, 4096, 7);
+        let b = exec(&mut nv35, Op::Add22, 4096, 7);
         let diff = a[0]
             .iter()
             .zip(&b[0])
@@ -176,26 +173,22 @@ mod tests {
     #[test]
     fn every_catalog_op_is_served() {
         let mut b = GpuSimBackend::by_name("ieee-rn").unwrap();
-        for spec in super::super::CATALOG {
-            let outs = exec(&mut b, spec.name, 64, 11);
-            assert_eq!(outs.len(), spec.n_out, "op {}", spec.name);
-            assert!(
-                outs[0].iter().any(|&v| v != 0.0),
-                "op {} wrote zeros",
-                spec.name
-            );
+        for op in Op::ALL {
+            let outs = exec(&mut b, op, 64, 11);
+            assert_eq!(outs.len(), op.n_out(), "op {op}");
+            assert!(outs[0].iter().any(|&v| v != 0.0), "op {op} wrote zeros");
         }
         let st = b.stats();
-        assert_eq!(st.executions, super::super::CATALOG.len() as u64);
+        assert_eq!(st.executions, Op::COUNT as u64);
     }
 
     #[test]
     fn staging_buffers_are_reused() {
         let mut b = GpuSimBackend::by_name("ieee-rn").unwrap();
-        exec(&mut b, "add22", 1000, 1);
+        exec(&mut b, Op::Add22, 1000, 1);
         let cap0 = b.fin[0].capacity();
         let ptr0 = b.fin[0].as_ptr();
-        exec(&mut b, "add22", 900, 2);
+        exec(&mut b, Op::Add22, 900, 2);
         assert_eq!(b.fin[0].capacity(), cap0);
         assert_eq!(b.fin[0].as_ptr(), ptr0, "staging reallocated");
     }

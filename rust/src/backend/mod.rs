@@ -23,19 +23,29 @@
 //! * [`BufferPool`] — reusable `Vec<f32>` planes so the dispatch hot
 //!   path performs no per-batch allocation.
 //!
+//! The operator surface itself is typed: [`Op`] encodes name, arity and
+//! plane counts as a closed enum, so `execute` takes an `Op`, not a
+//! string — unknown-operator errors can only originate at the parse
+//! boundary ([`Op::parse`], the CLI, the deprecated string shims).
+//!
 //! The coordinator ([`crate::coordinator::service`]) dispatches purely
 //! through `Box<dyn KernelBackend>`; N shard threads each own one
-//! instance.
+//! instance, and since PR 2 the shard set may be **heterogeneous**
+//! (per-shard [`BackendSpec`]s, e.g. native shards plus a
+//! `gpusim:nv35` canary) with a pluggable
+//! [`crate::coordinator::routing::RoutingPolicy`] deciding placement.
 
 pub mod error;
 pub mod gpusim;
 pub mod native;
+pub mod op;
 pub mod pool;
 pub mod xla;
 
 pub use error::ServiceError;
 pub use gpusim::GpuSimBackend;
 pub use native::NativeBackend;
+pub use op::Op;
 pub use pool::BufferPool;
 pub use xla::XlaBackend;
 
@@ -52,19 +62,22 @@ pub struct OpSpec {
 }
 
 /// Every operator the serving stack knows about, with its arity.
-/// Mirrors `python/compile/kernels/ff.py::OPS`.
-pub const CATALOG: [OpSpec; 10] = [
-    OpSpec { name: "add12", n_in: 2, n_out: 2 },
-    OpSpec { name: "split", n_in: 1, n_out: 2 },
-    OpSpec { name: "mul12", n_in: 2, n_out: 2 },
-    OpSpec { name: "add22", n_in: 4, n_out: 2 },
-    OpSpec { name: "mul22", n_in: 4, n_out: 2 },
-    OpSpec { name: "div22", n_in: 4, n_out: 2 },
-    OpSpec { name: "mad22", n_in: 6, n_out: 2 },
-    OpSpec { name: "add", n_in: 2, n_out: 1 },
-    OpSpec { name: "mul", n_in: 2, n_out: 1 },
-    OpSpec { name: "mad", n_in: 3, n_out: 1 },
-];
+/// Mirrors `python/compile/kernels/ff.py::OPS`. Derived row-by-row
+/// from [`Op::ALL`] (so `CATALOG[op.index()]` is `op`'s row by
+/// construction); a `static` (not `const`) so [`Op::spec`] can hand
+/// out `&'static` rows indexed at runtime.
+pub static CATALOG: [OpSpec; Op::COUNT] = build_catalog();
+
+const fn build_catalog() -> [OpSpec; Op::COUNT] {
+    let mut rows = [OpSpec { name: "", n_in: 0, n_out: 0 }; Op::COUNT];
+    let mut i = 0;
+    while i < Op::COUNT {
+        let op = Op::ALL[i];
+        rows[i] = OpSpec { name: op.name(), n_in: op.n_in(), n_out: op.n_out() };
+        i += 1;
+    }
+    rows
+}
 
 /// Look an operator up in the catalogue.
 pub fn op_spec(op: &str) -> Option<&'static OpSpec> {
@@ -100,50 +113,35 @@ pub trait KernelBackend {
     fn name(&self) -> &'static str;
 
     /// The operators this backend can execute right now.
-    fn ops(&self) -> Vec<&'static str>;
+    fn ops(&self) -> Vec<Op>;
 
     /// Whether `op` is servable by this backend.
-    fn supports(&self, op: &str) -> bool {
+    fn supports(&self, op: Op) -> bool {
         self.ops().contains(&op)
     }
 
     /// Execute `op` elementwise over SoA input planes into pre-sized
-    /// output planes (`outputs.len() == n_out`, every plane the batch
-    /// length). Backends must fill every output lane on success.
+    /// output planes (`outputs.len() == op.n_out()`, every plane the
+    /// batch length). Backends must fill every output lane on success.
     fn execute(
-        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError>;
 
     /// Cumulative counters since construction.
     fn stats(&self) -> BackendStats;
 }
 
-/// Validate an execute call against the catalogue; returns the op spec
-/// and the batch length.
+/// Validate an execute call against the operator's arity; returns the
+/// batch length. Input rules are [`Op::validate_planes`] (the single
+/// source); only the output-buffer checks are backend-side specifics.
 pub(crate) fn check_shapes(
-    backend: &'static str, op: &str, inputs: &[&[f32]], outputs: &[Vec<f32>],
-) -> Result<(&'static OpSpec, usize), ServiceError> {
-    let spec = op_spec(op).ok_or_else(|| ServiceError::UnknownOp(op.to_string()))?;
-    if inputs.len() != spec.n_in {
-        return Err(ServiceError::Arity {
-            op: op.to_string(),
-            want: spec.n_in,
-            got: inputs.len(),
-        });
-    }
-    let n = inputs.first().map_or(0, |p| p.len());
-    if n == 0 {
-        return Err(ServiceError::Shape(format!("{backend}: empty batch for '{op}'")));
-    }
-    if inputs.iter().any(|p| p.len() != n) {
-        return Err(ServiceError::Shape(format!(
-            "{backend}: input planes of '{op}' have differing lengths"
-        )));
-    }
-    if outputs.len() != spec.n_out {
+    backend: &'static str, op: Op, inputs: &[&[f32]], outputs: &[Vec<f32>],
+) -> Result<usize, ServiceError> {
+    let n = op.validate_planes(inputs)?;
+    if outputs.len() != op.n_out() {
         return Err(ServiceError::Shape(format!(
             "{backend}: '{op}' wants {} output planes, got {}",
-            spec.n_out,
+            op.n_out(),
             outputs.len()
         )));
     }
@@ -152,7 +150,7 @@ pub(crate) fn check_shapes(
             "{backend}: output planes of '{op}' must have the batch length {n}"
         )));
     }
-    Ok((spec, n))
+    Ok(n)
 }
 
 /// Construction recipe for a backend: cheap to clone, `Send`, turned
@@ -255,37 +253,42 @@ mod tests {
     }
 
     #[test]
+    fn catalog_rows_mirror_the_typed_enum() {
+        for (row, op) in CATALOG.iter().zip(Op::ALL) {
+            assert_eq!(row.name, op.name());
+            assert_eq!((row.n_in, row.n_out), op.arity(), "{op}");
+            assert_eq!(op.spec(), row);
+        }
+    }
+
+    #[test]
     fn check_shapes_accepts_and_rejects() {
         let a = vec![1.0f32; 8];
         let b = vec![2.0f32; 8];
         let ins: Vec<&[f32]> = vec![&a, &b];
         let mut outs = vec![vec![0.0f32; 8]];
-        let (spec, n) = check_shapes("t", "add", &ins, &outs).unwrap();
-        assert_eq!((spec.n_in, spec.n_out, n), (2, 1, 8));
+        let n = check_shapes("t", Op::Add, &ins, &outs).unwrap();
+        assert_eq!(n, 8);
 
         assert!(matches!(
-            check_shapes("t", "nope", &ins, &outs),
-            Err(ServiceError::UnknownOp(_))
-        ));
-        assert!(matches!(
-            check_shapes("t", "add", &ins[..1], &outs),
+            check_shapes("t", Op::Add, &ins[..1], &outs),
             Err(ServiceError::Arity { .. })
         ));
         let short = vec![1.0f32; 4];
         let ragged: Vec<&[f32]> = vec![&a, &short];
         assert!(matches!(
-            check_shapes("t", "add", &ragged, &outs),
-            Err(ServiceError::Shape(_))
+            check_shapes("t", Op::Add, &ragged, &outs),
+            Err(ServiceError::RaggedPlanes { plane: 1, want: 8, got: 4, .. })
         ));
         outs[0].truncate(4);
         assert!(matches!(
-            check_shapes("t", "add", &ins, &outs),
+            check_shapes("t", Op::Add, &ins, &outs),
             Err(ServiceError::Shape(_))
         ));
         let empty: Vec<&[f32]> = vec![&[], &[]];
         assert!(matches!(
-            check_shapes("t", "add", &empty, &outs),
-            Err(ServiceError::Shape(_))
+            check_shapes("t", Op::Add, &empty, &outs),
+            Err(ServiceError::EmptyBatch { op: Op::Add })
         ));
     }
 

@@ -19,7 +19,7 @@
 //! channel would shave that overhead; ROADMAP lists it under
 //! "Backends & sharding".
 
-use super::{check_shapes, BackendStats, ExecReport, KernelBackend, ServiceError};
+use super::{check_shapes, BackendStats, ExecReport, KernelBackend, Op, ServiceError};
 use crate::ff::vector;
 use std::sync::Mutex;
 use std::time::Instant;
@@ -73,17 +73,17 @@ impl KernelBackend for NativeBackend {
         "native"
     }
 
-    fn ops(&self) -> Vec<&'static str> {
-        super::CATALOG.iter().map(|s| s.name).collect()
+    fn ops(&self) -> Vec<Op> {
+        Op::ALL.to_vec()
     }
 
     fn execute(
-        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError> {
-        let (_spec, n) = check_shapes("native", op, inputs, outputs)?;
+        let n = check_shapes("native", op, inputs, outputs)?;
         let t0 = Instant::now();
         let launches = if self.workers <= 1 || n < self.chunk * 2 {
-            vector::dispatch(op, inputs, outputs).map_err(ServiceError::Backend)?;
+            vector::dispatch(op.name(), inputs, outputs).map_err(ServiceError::Backend)?;
             1
         } else {
             // carve the batch into chunk jobs with disjoint output windows
@@ -114,7 +114,7 @@ impl KernelBackend for NativeBackend {
                         let job = queue.lock().unwrap().pop();
                         let Some(mut job) = job else { break };
                         if let Err(e) =
-                            vector::dispatch_slices(op, &job.ins, &mut job.outs)
+                            vector::dispatch_slices(op.name(), &job.ins, &mut job.outs)
                         {
                             *failure.lock().unwrap() = Some(e);
                             break;
@@ -143,11 +143,10 @@ mod tests {
     use super::*;
     use crate::harness::workload;
 
-    fn run(backend: &mut NativeBackend, op: &str, n: usize, seed: u64) -> Vec<Vec<f32>> {
-        let planes = workload::planes_for(op, n, seed);
+    fn run(backend: &mut NativeBackend, op: Op, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let planes = workload::planes_for(op.name(), n, seed);
         let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
-        let n_out = super::super::op_spec(op).unwrap().n_out;
-        let mut outs = vec![vec![0.0f32; n]; n_out];
+        let mut outs = vec![vec![0.0f32; n]; op.n_out()];
         backend.execute(op, &refs, &mut outs).unwrap();
         outs
     }
@@ -156,7 +155,7 @@ mod tests {
     fn chunked_parallel_matches_single_sweep_bitwise() {
         let mut serial = NativeBackend::new(DEFAULT_CHUNK, 1);
         let mut parallel = NativeBackend::new(MIN_CHUNK, 4);
-        for op in ["add22", "mul22", "mul12", "div22", "mad22", "add"] {
+        for op in [Op::Add22, Op::Mul22, Op::Mul12, Op::Div22, Op::Mad22, Op::Add] {
             // 9 full chunks + a ragged tail
             let n = MIN_CHUNK * 9 + 137;
             let a = run(&mut serial, op, n, 0xC0DE);
@@ -180,7 +179,7 @@ mod tests {
         let planes = workload::planes_for("add22", n, 3);
         let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
         let mut outs = vec![vec![0.0f32; n]; 2];
-        let rep = b.execute("add22", &refs, &mut outs).unwrap();
+        let rep = b.execute(Op::Add22, &refs, &mut outs).unwrap();
         assert_eq!(rep.launches, 4);
         assert_eq!(rep.padded_elements, 0);
         let st = b.stats();
@@ -194,7 +193,7 @@ mod tests {
         let planes = workload::planes_for("add22", 100, 5);
         let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
         let mut outs = vec![vec![0.0f32; 100]; 2];
-        let rep = b.execute("add22", &refs, &mut outs).unwrap();
+        let rep = b.execute(Op::Add22, &refs, &mut outs).unwrap();
         assert_eq!(rep.launches, 1);
     }
 
@@ -205,16 +204,12 @@ mod tests {
         let ins: Vec<&[f32]> = vec![&a, &a];
         let mut outs = vec![vec![0.0f32; 8]];
         assert!(matches!(
-            b.execute("nope", &ins, &mut outs),
-            Err(ServiceError::UnknownOp(_))
-        ));
-        assert!(matches!(
-            b.execute("add22", &ins, &mut outs),
+            b.execute(Op::Add22, &ins, &mut outs),
             Err(ServiceError::Arity { .. })
         ));
         let mut wrong = vec![vec![0.0f32; 8]; 2];
         assert!(matches!(
-            b.execute("add", &ins, &mut wrong),
+            b.execute(Op::Add, &ins, &mut wrong),
             Err(ServiceError::Shape(_))
         ));
     }
@@ -224,8 +219,7 @@ mod tests {
         let b = NativeBackend::new(0, 0);
         assert!(b.workers() >= 1);
         assert!(b.chunk() >= MIN_CHUNK);
-        assert!(b.supports("add22"));
-        assert!(!b.supports("dot2"));
-        assert_eq!(b.ops().len(), super::super::CATALOG.len());
+        assert!(b.supports(Op::Add22));
+        assert_eq!(b.ops().len(), Op::COUNT);
     }
 }

@@ -1,0 +1,231 @@
+//! [`Op`]: the operator catalogue as a type.
+//!
+//! The seed service was stringly typed end to end — `submit("add22",
+//! ...)` → `HashMap`-style name lookup in the coordinator → another
+//! lookup in every backend. This enum makes the catalogue a closed set:
+//! arity and plane count are encoded per variant, an unknown operator
+//! is unrepresentable past [`Op::parse`], and backends dispatch on a
+//! `Copy` value instead of comparing strings on the hot path.
+//!
+//! The variant order is load-bearing: `Op::ALL[op.index()] == op`, and
+//! [`crate::backend::CATALOG`] mirrors the same order (pinned by a
+//! test), so `op.index()` doubles as a catalogue row index — the
+//! op-affinity routing policy hashes on it.
+
+use super::error::ServiceError;
+use std::fmt;
+use std::str::FromStr;
+
+/// One float-float operator of the paper's catalogue (plus the `f32`
+/// baseline ops), with arity and plane counts encoded in the type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(usize)]
+pub enum Op {
+    /// Error-free addition of two `f32` (Knuth): 2 planes in, (hi, lo) out.
+    Add12 = 0,
+    /// Dekker split of one `f32` into high/low parts.
+    Split,
+    /// Error-free product of two `f32`.
+    Mul12,
+    /// Float-float addition: (ah, al, bh, bl) -> (hi, lo).
+    Add22,
+    /// Float-float multiplication.
+    Mul22,
+    /// Float-float division.
+    Div22,
+    /// Float-float multiply-add (§7 extension): 6 planes in.
+    Mad22,
+    /// Plain `f32` addition (the paper's timing baseline).
+    Add,
+    /// Plain `f32` multiplication.
+    Mul,
+    /// Plain `f32` multiply-add.
+    Mad,
+}
+
+impl Op {
+    /// Every operator, in catalogue order (`ALL[op.index()] == op`).
+    pub const ALL: [Op; 10] = [
+        Op::Add12,
+        Op::Split,
+        Op::Mul12,
+        Op::Add22,
+        Op::Mul22,
+        Op::Div22,
+        Op::Mad22,
+        Op::Add,
+        Op::Mul,
+        Op::Mad,
+    ];
+
+    /// Number of operators in the catalogue.
+    pub const COUNT: usize = Self::ALL.len();
+
+    /// Wire/CLI name, identical to the seed's string keys.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Op::Add12 => "add12",
+            Op::Split => "split",
+            Op::Mul12 => "mul12",
+            Op::Add22 => "add22",
+            Op::Mul22 => "mul22",
+            Op::Div22 => "div22",
+            Op::Mad22 => "mad22",
+            Op::Add => "add",
+            Op::Mul => "mul",
+            Op::Mad => "mad",
+        }
+    }
+
+    /// Number of SoA input planes.
+    pub const fn n_in(self) -> usize {
+        match self {
+            Op::Split => 1,
+            Op::Add12 | Op::Mul12 | Op::Add | Op::Mul => 2,
+            Op::Mad => 3,
+            Op::Add22 | Op::Mul22 | Op::Div22 => 4,
+            Op::Mad22 => 6,
+        }
+    }
+
+    /// Number of SoA output planes.
+    pub const fn n_out(self) -> usize {
+        match self {
+            Op::Add | Op::Mul | Op::Mad => 1,
+            _ => 2,
+        }
+    }
+
+    /// `(n_in, n_out)` — the tuple form the harnesses grew up on.
+    pub const fn arity(self) -> (usize, usize) {
+        (self.n_in(), self.n_out())
+    }
+
+    /// Catalogue row index (`Op::ALL[op.index()] == op`).
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Neutral pad value for input `plane`: 1.0 for the divisor high
+    /// word of `div22` (so padding lanes never divide by zero), 0.0
+    /// elsewhere.
+    pub const fn pad_value(self, plane: usize) -> f32 {
+        match (self, plane) {
+            (Op::Div22, 2) => 1.0, // bh
+            _ => 0.0,
+        }
+    }
+
+    /// Parse a wire/CLI name; unknown names become
+    /// [`ServiceError::UnknownOp`] — the only place that error can
+    /// originate now.
+    pub fn parse(name: &str) -> Result<Op, ServiceError> {
+        Op::ALL
+            .iter()
+            .copied()
+            .find(|o| o.name() == name)
+            .ok_or_else(|| ServiceError::UnknownOp(name.to_string()))
+    }
+
+    /// Validate SoA input planes against this operator's arity and
+    /// shape rules; returns the batch length. **The** single source of
+    /// those rules — build-time `Plan` validation and backend-side
+    /// `execute` checks both call this, over owned planes
+    /// (`&[Vec<f32>]`) or borrowed ones (`&[&[f32]]`):
+    ///
+    /// * wrong plane count → [`ServiceError::Arity`];
+    /// * differing plane lengths → [`ServiceError::RaggedPlanes`]
+    ///   naming the offending plane;
+    /// * zero-length batch → [`ServiceError::EmptyBatch`].
+    pub fn validate_planes<P: AsRef<[f32]>>(
+        self, inputs: &[P],
+    ) -> Result<usize, ServiceError> {
+        if inputs.len() != self.n_in() {
+            return Err(ServiceError::Arity {
+                op: self,
+                want: self.n_in(),
+                got: inputs.len(),
+            });
+        }
+        let n = inputs.first().map_or(0, |p| p.as_ref().len());
+        for (i, p) in inputs.iter().enumerate() {
+            if p.as_ref().len() != n {
+                return Err(ServiceError::RaggedPlanes {
+                    op: self,
+                    plane: i,
+                    want: n,
+                    got: p.as_ref().len(),
+                });
+            }
+        }
+        if n == 0 {
+            return Err(ServiceError::EmptyBatch { op: self });
+        }
+        Ok(n)
+    }
+
+    /// Catalogue row ([`crate::backend::OpSpec`]) for this operator.
+    pub fn spec(self) -> &'static super::OpSpec {
+        &super::CATALOG[self.index()]
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Op {
+    type Err = ServiceError;
+
+    fn from_str(s: &str) -> Result<Op, ServiceError> {
+        Op::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_is_in_index_order_and_roundtrips_names() {
+        for (i, op) in Op::ALL.into_iter().enumerate() {
+            assert_eq!(op.index(), i, "{op}");
+            assert_eq!(Op::parse(op.name()).unwrap(), op);
+            assert_eq!(op.name().parse::<Op>().unwrap(), op);
+            assert_eq!(format!("{op}"), op.name());
+        }
+        assert_eq!(Op::COUNT, 10);
+    }
+
+    #[test]
+    fn arities_match_the_paper_catalogue() {
+        assert_eq!(Op::Add12.arity(), (2, 2));
+        assert_eq!(Op::Split.arity(), (1, 2));
+        assert_eq!(Op::Mul12.arity(), (2, 2));
+        assert_eq!(Op::Add22.arity(), (4, 2));
+        assert_eq!(Op::Mul22.arity(), (4, 2));
+        assert_eq!(Op::Div22.arity(), (4, 2));
+        assert_eq!(Op::Mad22.arity(), (6, 2));
+        assert_eq!(Op::Add.arity(), (2, 1));
+        assert_eq!(Op::Mul.arity(), (2, 1));
+        assert_eq!(Op::Mad.arity(), (3, 1));
+    }
+
+    #[test]
+    fn unknown_names_are_typed_errors() {
+        assert!(matches!(
+            Op::parse("frobnicate"),
+            Err(ServiceError::UnknownOp(s)) if s == "frobnicate"
+        ));
+        assert!("".parse::<Op>().is_err());
+    }
+
+    #[test]
+    fn div22_pads_divisor_high_word_with_one() {
+        assert_eq!(Op::Div22.pad_value(2), 1.0);
+        assert_eq!(Op::Div22.pad_value(3), 0.0);
+        assert_eq!(Op::Add22.pad_value(2), 0.0);
+    }
+}

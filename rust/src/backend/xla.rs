@@ -14,7 +14,7 @@
 //! startup failure.
 
 use super::pool::BufferPool;
-use super::{check_shapes, BackendStats, ExecReport, KernelBackend, ServiceError};
+use super::{check_shapes, BackendStats, ExecReport, KernelBackend, Op, ServiceError};
 use crate::coordinator::batcher;
 use crate::runtime::Runtime;
 use std::path::Path;
@@ -49,10 +49,10 @@ impl XlaBackend {
     }
 
     /// Compiled stream sizes for `op`, ascending.
-    fn sizes_for(&self, op: &str) -> Vec<usize> {
+    fn sizes_for(&self, op: Op) -> Vec<usize> {
         self.rt
             .manifest()
-            .by_op(op)
+            .by_op(op.name())
             .iter()
             .filter(|e| e.kind == "stream")
             .map(|e| e.n)
@@ -65,32 +65,31 @@ impl KernelBackend for XlaBackend {
         "xla"
     }
 
-    fn ops(&self) -> Vec<&'static str> {
-        super::CATALOG
-            .iter()
-            .filter(|s| !self.sizes_for(s.name).is_empty())
-            .map(|s| s.name)
+    fn ops(&self) -> Vec<Op> {
+        Op::ALL
+            .into_iter()
+            .filter(|&op| !self.sizes_for(op).is_empty())
             .collect()
     }
 
     fn execute(
-        &mut self, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError> {
-        let (spec, n) = check_shapes("xla", op, inputs, outputs)?;
+        let n = check_shapes("xla", op, inputs, outputs)?;
         let sizes = self.sizes_for(op);
         let Some(plan) = batcher::plan(n, &sizes) else {
-            return Err(ServiceError::Unsupported { backend: "xla", op: op.to_string() });
+            return Err(ServiceError::Unsupported { backend: "xla", op });
         };
         let t0 = Instant::now();
         let mut padded = 0u64;
         for l in &plan {
             let name = format!("{op}_n{}", l.size);
             // stage each input window into a pooled, padded plane
-            let mut staged: Vec<Vec<f32>> = Vec::with_capacity(spec.n_in);
+            let mut staged: Vec<Vec<f32>> = Vec::with_capacity(op.n_in());
             for (p, plane) in inputs.iter().enumerate() {
                 let mut buf = self.pool.take_empty();
                 buf.extend_from_slice(&plane[l.start..l.start + l.len]);
-                buf.resize(l.size, batcher::pad_value(op, p));
+                buf.resize(l.size, op.pad_value(p));
                 staged.push(buf);
             }
             let staged_refs: Vec<&[f32]> = staged.iter().map(Vec::as_slice).collect();
@@ -102,10 +101,10 @@ impl KernelBackend for XlaBackend {
                 self.pool.put(buf);
             }
             let outs = result.map_err(ServiceError::Backend)?;
-            if outs.len() != spec.n_out {
+            if outs.len() != op.n_out() {
                 return Err(ServiceError::Backend(format!(
                     "{name}: expected {} output planes, got {}",
-                    spec.n_out,
+                    op.n_out(),
                     outs.len()
                 )));
             }

@@ -6,25 +6,18 @@
 //! compiled size (or split across several launches when it exceeds the
 //! largest), and output planes are sliced back per request.
 //!
-//! Padding values are operator-aware: `div22` pads the divisor with ones
-//! so the padding lanes don't produce NaNs that could trap slow paths.
+//! Padding values are operator-aware ([`Op::pad_value`]): `div22` pads
+//! the divisor with ones so the padding lanes don't produce NaNs that
+//! could trap slow paths.
+
+use crate::backend::Op;
 
 /// (n_inputs, n_outputs) for every operator the coordinator serves.
 ///
-/// Thin view over the backend layer's catalogue
-/// ([`crate::backend::CATALOG`]), kept for the harnesses and tests that
-/// grew up on the tuple form.
+/// Thin string-keyed view over the typed catalogue ([`Op::arity`]),
+/// kept for the harnesses and tests that grew up on the tuple form.
 pub fn op_arity(op: &str) -> Option<(usize, usize)> {
-    crate::backend::op_spec(op).map(|s| (s.n_in, s.n_out))
-}
-
-/// Neutral pad value for plane `i` of operator `op` (1.0 for divisor
-/// high words, 0.0 elsewhere).
-pub fn pad_value(op: &str, plane: usize) -> f32 {
-    match (op, plane) {
-        ("div22", 2) => 1.0, // bh
-        _ => 0.0,
-    }
+    Op::parse(op).ok().map(Op::arity)
 }
 
 /// A launch plan: one compiled-size execution covering a slice of the
@@ -75,7 +68,7 @@ pub fn waste(plan: &[Launch]) -> f64 {
 /// Concatenate the `plane`-th input of every request, padded to `size`.
 pub fn gather_plane(
     requests: &[&crate::coordinator::OpRequest], plane: usize, size: usize,
-    start: usize, len: usize, op: &str,
+    start: usize, len: usize, op: Op,
 ) -> Vec<f32> {
     let mut out = Vec::with_capacity(size);
     gather_plane_into(requests, plane, size, start, len, op, &mut out);
@@ -88,7 +81,7 @@ pub fn gather_plane(
 #[allow(clippy::too_many_arguments)]
 pub fn gather_plane_into(
     requests: &[&crate::coordinator::OpRequest], plane: usize, size: usize,
-    start: usize, len: usize, op: &str, out: &mut Vec<f32>,
+    start: usize, len: usize, op: Op, out: &mut Vec<f32>,
 ) {
     out.clear();
     out.reserve(size);
@@ -110,7 +103,7 @@ pub fn gather_plane_into(
         }
     }
     debug_assert_eq!(out.len(), len);
-    out.resize(size, pad_value(op, plane));
+    out.resize(size, op.pad_value(plane));
 }
 
 /// Scatter one launch's output planes back into per-request buffers.
@@ -181,50 +174,49 @@ mod tests {
         assert!(plan(100, &[]).is_none());
     }
 
-    fn mk_req(op: &str, vals: &[f32]) -> (OpRequest, mpsc::Receiver<super::super::request::OpResult>) {
+    fn mk_req(op: Op, vals: &[f32]) -> (OpRequest, mpsc::Receiver<super::super::request::OpResult>) {
         let (tx, rx) = mpsc::channel();
-        let (n_in, _) = op_arity(op).unwrap();
-        let planes: Vec<Vec<f32>> = (0..n_in)
+        let planes: Vec<Vec<f32>> = (0..op.n_in())
             .map(|p| vals.iter().map(|&v| v + p as f32 * 100.0).collect())
             .collect();
-        (OpRequest { op: op.into(), inputs: planes, reply: tx }, rx)
+        (OpRequest { op, inputs: planes, reply: tx }, rx)
     }
 
     #[test]
     fn gather_concatenates_and_pads() {
-        let (r1, _g1) = mk_req("add", &[1.0, 2.0]);
-        let (r2, _g2) = mk_req("add", &[3.0, 4.0, 5.0]);
+        let (r1, _g1) = mk_req(Op::Add, &[1.0, 2.0]);
+        let (r2, _g2) = mk_req(Op::Add, &[3.0, 4.0, 5.0]);
         let reqs = [&r1, &r2];
-        let plane = gather_plane(&reqs, 0, 8, 0, 5, "add");
+        let plane = gather_plane(&reqs, 0, 8, 0, 5, Op::Add);
         assert_eq!(plane, vec![1.0, 2.0, 3.0, 4.0, 5.0, 0.0, 0.0, 0.0]);
-        let plane1 = gather_plane(&reqs, 1, 8, 0, 5, "add");
+        let plane1 = gather_plane(&reqs, 1, 8, 0, 5, Op::Add);
         assert_eq!(&plane1[..5], &[101.0, 102.0, 103.0, 104.0, 105.0]);
     }
 
     #[test]
     fn gather_windows_across_requests() {
-        let (r1, _g1) = mk_req("add", &[1.0, 2.0, 3.0]);
-        let (r2, _g2) = mk_req("add", &[4.0, 5.0]);
+        let (r1, _g1) = mk_req(Op::Add, &[1.0, 2.0, 3.0]);
+        let (r2, _g2) = mk_req(Op::Add, &[4.0, 5.0]);
         let reqs = [&r1, &r2];
         // window [2, 5): last of r1 + all of r2
-        let plane = gather_plane(&reqs, 0, 4, 2, 3, "add");
+        let plane = gather_plane(&reqs, 0, 4, 2, 3, Op::Add);
         assert_eq!(plane, vec![3.0, 4.0, 5.0, 0.0]);
     }
 
     #[test]
     fn div22_pads_divisor_with_ones() {
-        let (r, _g) = mk_req("div22", &[1.0]);
+        let (r, _g) = mk_req(Op::Div22, &[1.0]);
         let reqs = [&r];
-        let bh = gather_plane(&reqs, 2, 4, 0, 1, "div22");
+        let bh = gather_plane(&reqs, 2, 4, 0, 1, Op::Div22);
         assert_eq!(bh, vec![201.0, 1.0, 1.0, 1.0]);
-        let bl = gather_plane(&reqs, 3, 4, 0, 1, "div22");
+        let bl = gather_plane(&reqs, 3, 4, 0, 1, Op::Div22);
         assert_eq!(bl, vec![301.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
     fn scatter_roundtrips_gather() {
-        let (r1, _g1) = mk_req("add", &[1.0, 2.0, 3.0]);
-        let (r2, _g2) = mk_req("add", &[4.0, 5.0]);
+        let (r1, _g1) = mk_req(Op::Add, &[1.0, 2.0, 3.0]);
+        let (r2, _g2) = mk_req(Op::Add, &[4.0, 5.0]);
         let reqs = [&r1, &r2];
         let mut acc = vec![vec![vec![0.0f32; 3]; 1], vec![vec![0.0f32; 2]; 1]];
         // one launch covering everything; output = input0 * 10
@@ -236,8 +228,8 @@ mod tests {
 
     #[test]
     fn scatter_with_split_launches() {
-        let (r1, _g1) = mk_req("add", &[1.0, 2.0, 3.0]);
-        let (r2, _g2) = mk_req("add", &[4.0, 5.0]);
+        let (r1, _g1) = mk_req(Op::Add, &[1.0, 2.0, 3.0]);
+        let (r2, _g2) = mk_req(Op::Add, &[4.0, 5.0]);
         let reqs = [&r1, &r2];
         let mut acc = vec![vec![vec![0.0f32; 3]; 1], vec![vec![0.0f32; 2]; 1]];
         // launch 1 covers [0,2), launch 2 covers [2,5)

@@ -1,31 +1,57 @@
-//! L3 coordinator — the sharded stream dispatcher over the backend layer.
+//! L3 coordinator — the typed, routed, sharded dispatcher over the
+//! backend layer.
 //!
 //! The paper's numbers (Table 3) come from Brook dispatching fragment
 //! programs over streams; this module is that runtime's moral
-//! equivalent, built the way a 2026 serving stack would:
+//! equivalent, built the way a 2026 serving stack would. The public
+//! surface is typed end to end:
 //!
-//! * clients submit [`request::OpRequest`]s (an operator name + SoA
-//!   input planes of any length) through a round-robin [`service::Handle`];
-//! * N **shard threads** each own one [`crate::backend::KernelBackend`]
-//!   instance (native multicore kernels, the gpusim stream VM, or the
-//!   PJRT/XLA engine — the non-`Sync` engines live on the thread that
-//!   built them, the exact analogue of a GPU command queue);
-//! * each shard coalesces same-operator requests ([`batcher`]), gathers
-//!   them into pooled planes ([`crate::backend::BufferPool`] — no
-//!   per-batch allocation), executes through the trait, and scatters
-//!   replies; pad-to-compiled-size launch planning lives inside the
-//!   XLA backend, where it belongs;
+//! * clients name operators with the [`Op`] enum (arity and plane
+//!   counts in the type — no string lookup past the parse boundary),
+//!   build a [`Plan`] through [`Plan::new`] or the incremental
+//!   [`RequestBuilder`] (shapes validated **at build time**, each
+//!   failure a specific [`crate::backend::ServiceError`] variant), and
+//!   [`Handle::dispatch`] it for a future-like [`Ticket`]
+//!   (block, poll, or bounded wait);
+//! * a [`ServiceSpec`] describes the shard set **per shard** — e.g.
+//!   `[native, native, gpusim:nv35]`, two workhorses plus an
+//!   arithmetic-model canary — and a pluggable
+//!   [`routing::RoutingPolicy`] ([`routing::RoundRobin`],
+//!   [`routing::QueueDepth`], [`routing::OpAffinity`], or a custom
+//!   policy via [`Service::start_with_policy`]) places each request;
+//! * N **shard threads** each own one
+//!   [`crate::backend::KernelBackend`] instance (native multicore
+//!   kernels, the gpusim stream VM, or the PJRT/XLA engine — the
+//!   non-`Sync` engines live on the thread that built them, the exact
+//!   analogue of a GPU command queue);
+//! * each shard coalesces same-operator requests ([`batcher`]),
+//!   gathers them into pooled planes ([`crate::backend::BufferPool`] —
+//!   no per-batch allocation), executes through the trait, and
+//!   scatters replies; pad-to-compiled-size launch planning lives
+//!   inside the XLA backend, where it belongs;
 //! * [`metrics`] tracks throughput, latency, batch shapes and padding
-//!   waste per shard, merged on read.
+//!   waste per shard (so heterogeneous sets are observable shard by
+//!   shard), merged on read.
+//!
+//! The seed's stringly-typed surface — `Handle::submit("add22", ...)`,
+//! `Handle::call`, the single-spec `ServiceConfig` — survives as thin
+//! deprecated shims that parse, build a [`Plan`], and delegate.
 //!
 //! Errors are typed end-to-end ([`crate::backend::ServiceError`]):
-//! queue closed, unknown op, arity/shape mismatch, unsupported op,
-//! substrate failure.
+//! queue closed, unknown op (parse boundary only), arity mismatch,
+//! ragged planes, empty batch, unsupported op, substrate failure.
 
 pub mod batcher;
 pub mod metrics;
+pub mod plan;
 pub mod request;
+pub mod routing;
 pub mod service;
 
+pub use crate::backend::Op;
+pub use plan::{Plan, RequestBuilder, Ticket};
 pub use request::OpRequest;
-pub use service::{Handle, Service, ServiceConfig};
+pub use routing::{Routing, RoutingPolicy};
+pub use service::{Handle, Service, ServiceSpec};
+#[allow(deprecated)]
+pub use service::ServiceConfig;

@@ -1,0 +1,223 @@
+//! The typed client surface: build a [`Plan`], dispatch it, hold a
+//! [`Ticket`].
+//!
+//! A [`Plan`] is a request that has **already been validated** — arity
+//! and plane shapes are checked when the plan is built
+//! ([`Plan::new`] / [`RequestBuilder::build`]), so a plan that exists
+//! can always be dispatched, and the shard threads never see malformed
+//! input. Dispatching ([`crate::coordinator::Handle::dispatch`])
+//! returns a [`Ticket`], a future-like handle on the reply: callers
+//! can block ([`Ticket::wait`]), poll ([`Ticket::try_wait`]), or bound
+//! the wait ([`Ticket::wait_timeout`]) — the seed's blocking
+//! `call(op, planes)` survives only as a deprecated shim over this
+//! path.
+
+use super::request::OpResult;
+use crate::backend::{Op, ServiceError};
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// A validated, ready-to-dispatch request: one operator plus its SoA
+/// input planes.
+#[derive(Debug)]
+pub struct Plan {
+    op: Op,
+    inputs: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl Plan {
+    /// Validate `inputs` against `op` and wrap them. This is the only
+    /// constructor — a `Plan` is proof the shapes are right.
+    pub fn new(op: Op, inputs: Vec<Vec<f32>>) -> Result<Plan, ServiceError> {
+        let len = op.validate_planes(&inputs)?;
+        Ok(Plan { op, inputs, len })
+    }
+
+    /// Start an incremental [`RequestBuilder`] for `op`.
+    pub fn builder(op: Op) -> RequestBuilder {
+        RequestBuilder { op, inputs: Vec::with_capacity(op.n_in()) }
+    }
+
+    pub fn op(&self) -> Op {
+        self.op
+    }
+
+    /// Elements per plane.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Always false — zero-length plans fail validation.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn inputs(&self) -> &[Vec<f32>] {
+        &self.inputs
+    }
+
+    pub(crate) fn into_parts(self) -> (Op, Vec<Vec<f32>>, usize) {
+        (self.op, self.inputs, self.len)
+    }
+}
+
+/// Incremental [`Plan`] construction: push planes one at a time, then
+/// [`build`](RequestBuilder::build) to validate the whole request.
+#[derive(Debug)]
+pub struct RequestBuilder {
+    op: Op,
+    inputs: Vec<Vec<f32>>,
+}
+
+impl RequestBuilder {
+    /// Append one input plane.
+    pub fn plane(mut self, plane: Vec<f32>) -> RequestBuilder {
+        self.inputs.push(plane);
+        self
+    }
+
+    /// Append several input planes.
+    pub fn planes(mut self, planes: impl IntoIterator<Item = Vec<f32>>) -> RequestBuilder {
+        self.inputs.extend(planes);
+        self
+    }
+
+    /// Validate and produce the [`Plan`].
+    pub fn build(self) -> Result<Plan, ServiceError> {
+        Plan::new(self.op, self.inputs)
+    }
+}
+
+/// A future-like handle on one dispatched request's reply.
+///
+/// Produced by [`crate::coordinator::Handle::dispatch`]; resolves to an
+/// [`OpResult`]. Also records *where* the request went
+/// ([`Ticket::shard`]) — the routing policies make that placement
+/// observable, and tests/benches assert against it.
+#[derive(Debug)]
+pub struct Ticket {
+    pub(crate) rx: mpsc::Receiver<OpResult>,
+    pub(crate) op: Op,
+    pub(crate) shard: usize,
+    pub(crate) len: usize,
+}
+
+impl Ticket {
+    /// The operator this ticket answers for.
+    pub fn op(&self) -> Op {
+        self.op
+    }
+
+    /// Shard index the routing policy placed the request on.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    /// Elements per plane of the dispatched request.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Always false — the underlying plan was validated non-empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Block until the reply arrives. A shard that died before
+    /// answering surfaces as [`ServiceError::QueueClosed`].
+    pub fn wait(self) -> OpResult {
+        self.rx.recv().map_err(|_| ServiceError::QueueClosed)?
+    }
+
+    /// Non-blocking poll: `None` while the reply is still pending.
+    pub fn try_wait(&self) -> Option<OpResult> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServiceError::QueueClosed)),
+        }
+    }
+
+    /// Block for at most `timeout`; `None` on timeout (the ticket stays
+    /// usable — wait again or poll).
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<OpResult> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => Some(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Some(Err(ServiceError::QueueClosed))
+            }
+        }
+    }
+
+    /// Unwrap into the raw reply receiver (the deprecated
+    /// `Handle::submit` shim returns this).
+    pub fn into_receiver(self) -> mpsc::Receiver<OpResult> {
+        self.rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_new_validates_at_build_time() {
+        let p = Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(p.op(), Op::Add);
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_empty());
+        assert_eq!(p.inputs().len(), 2);
+
+        assert!(matches!(
+            Plan::new(Op::Add22, vec![vec![1.0]; 3]),
+            Err(ServiceError::Arity { want: 4, got: 3, .. })
+        ));
+        assert!(matches!(
+            Plan::new(Op::Add, vec![vec![1.0; 2], vec![1.0; 3]]),
+            Err(ServiceError::RaggedPlanes { plane: 1, .. })
+        ));
+        assert!(matches!(
+            Plan::new(Op::Add, vec![vec![], vec![]]),
+            Err(ServiceError::EmptyBatch { op: Op::Add })
+        ));
+    }
+
+    #[test]
+    fn builder_accumulates_planes() {
+        let p = Plan::builder(Op::Mad)
+            .plane(vec![1.0, 2.0])
+            .planes([vec![3.0, 4.0], vec![5.0, 6.0]])
+            .build()
+            .unwrap();
+        assert_eq!(p.op(), Op::Mad);
+        assert_eq!(p.len(), 2);
+
+        let short = Plan::builder(Op::Mad).plane(vec![1.0]).build();
+        assert!(matches!(short, Err(ServiceError::Arity { want: 3, got: 1, .. })));
+    }
+
+    #[test]
+    fn ticket_resolves_and_polls() {
+        let (tx, rx) = mpsc::channel();
+        let t = Ticket { rx, op: Op::Add, shard: 3, len: 2 };
+        assert_eq!(t.op(), Op::Add);
+        assert_eq!(t.shard(), 3);
+        assert_eq!(t.len(), 2);
+        assert!(t.try_wait().is_none());
+        assert!(t.wait_timeout(Duration::from_millis(1)).is_none());
+        tx.send(Ok(vec![vec![42.0, 43.0]])).unwrap();
+        let out = t.wait().unwrap();
+        assert_eq!(out[0], vec![42.0, 43.0]);
+    }
+
+    #[test]
+    fn dropped_reply_channel_is_queue_closed() {
+        let (tx, rx) = mpsc::channel::<OpResult>();
+        drop(tx);
+        let t = Ticket { rx, op: Op::Add, shard: 0, len: 1 };
+        assert_eq!(t.try_wait(), Some(Err(ServiceError::QueueClosed)));
+        assert_eq!(t.wait(), Err(ServiceError::QueueClosed));
+    }
+}

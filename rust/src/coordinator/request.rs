@@ -1,6 +1,13 @@
 //! Request/response types of the coordinator.
+//!
+//! Since the Op/Plan redesign the wire unit is typed: an [`OpRequest`]
+//! carries an [`Op`] (not a string), and the shape rules live in
+//! [`Op::validate_planes`] — the single source shared by
+//! [`OpRequest::validate`], the build-time check in
+//! [`crate::coordinator::plan::Plan`], and the backends' own
+//! `execute` validation.
 
-use crate::backend::ServiceError;
+use crate::backend::{Op, ServiceError};
 use std::sync::mpsc;
 
 /// Result planes (one `Vec<f32>` per output plane) or a typed failure.
@@ -10,7 +17,7 @@ pub type OpResult = Result<Vec<Vec<f32>>, ServiceError>;
 /// (arity must match the operator; every plane the same length).
 #[derive(Debug)]
 pub struct OpRequest {
-    pub op: String,
+    pub op: Op,
     pub inputs: Vec<Vec<f32>>,
     /// One-shot reply channel.
     pub reply: mpsc::Sender<OpResult>,
@@ -26,27 +33,13 @@ impl OpRequest {
         self.len() == 0
     }
 
-    /// Validate arity/shape against the backend catalogue.
+    /// Validate arity/shape against the operator
+    /// ([`Op::validate_planes`]). Each failure is a *specific*
+    /// [`ServiceError`] variant — the seed folded ragged and empty
+    /// batches into an opaque `Shape(String)` (and older still, let
+    /// them panic inside backends).
     pub fn validate(&self) -> Result<(), ServiceError> {
-        let spec = crate::backend::op_spec(&self.op)
-            .ok_or_else(|| ServiceError::UnknownOp(self.op.clone()))?;
-        if self.inputs.len() != spec.n_in {
-            return Err(ServiceError::Arity {
-                op: self.op.clone(),
-                want: spec.n_in,
-                got: self.inputs.len(),
-            });
-        }
-        let n = self.len();
-        if self.inputs.iter().any(|p| p.len() != n) {
-            return Err(ServiceError::Shape(
-                "input planes have differing lengths".into(),
-            ));
-        }
-        if n == 0 {
-            return Err(ServiceError::Shape("empty request".into()));
-        }
-        Ok(())
+        self.op.validate_planes(&self.inputs).map(|_| ())
     }
 }
 
@@ -54,31 +47,61 @@ impl OpRequest {
 mod tests {
     use super::*;
 
-    fn req(op: &str, planes: usize, n: usize) -> (OpRequest, mpsc::Receiver<OpResult>) {
+    fn req(op: Op, planes: usize, n: usize) -> (OpRequest, mpsc::Receiver<OpResult>) {
         let (tx, rx) = mpsc::channel();
-        (OpRequest { op: op.into(), inputs: vec![vec![1.0; n]; planes], reply: tx }, rx)
+        (OpRequest { op, inputs: vec![vec![1.0; n]; planes], reply: tx }, rx)
     }
 
     #[test]
     fn validates_arity() {
-        let (r, _rx) = req("add22", 4, 16);
+        let (r, _rx) = req(Op::Add22, 4, 16);
         assert!(r.validate().is_ok());
-        let (r, _rx) = req("add22", 3, 16);
+        let (r, _rx) = req(Op::Add22, 3, 16);
         assert!(matches!(r.validate(), Err(ServiceError::Arity { want: 4, got: 3, .. })));
-        let (r, _rx) = req("blorp", 2, 16);
-        assert!(matches!(r.validate(), Err(ServiceError::UnknownOp(_))));
     }
 
     #[test]
-    fn rejects_ragged_and_empty() {
+    fn rejects_ragged_planes_with_the_specific_variant() {
         let (tx, _rx) = mpsc::channel();
         let r = OpRequest {
-            op: "add".into(),
+            op: Op::Add,
             inputs: vec![vec![1.0; 4], vec![1.0; 5]],
             reply: tx,
         };
-        assert!(matches!(r.validate(), Err(ServiceError::Shape(_))));
-        let (r, _rx) = req("add", 2, 0);
-        assert!(matches!(r.validate(), Err(ServiceError::Shape(_))));
+        assert_eq!(
+            r.validate().unwrap_err(),
+            ServiceError::RaggedPlanes { op: Op::Add, plane: 1, want: 4, got: 5 }
+        );
+        // the report names the first offending plane, not just "ragged"
+        let (tx, _rx) = mpsc::channel();
+        let r = OpRequest {
+            op: Op::Add22,
+            inputs: vec![vec![1.0; 3], vec![1.0; 3], vec![1.0; 2], vec![1.0; 3]],
+            reply: tx,
+        };
+        assert!(matches!(
+            r.validate(),
+            Err(ServiceError::RaggedPlanes { plane: 2, want: 3, got: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_zero_length_batches_with_the_specific_variant() {
+        let (r, _rx) = req(Op::Add, 2, 0);
+        assert_eq!(r.validate().unwrap_err(), ServiceError::EmptyBatch { op: Op::Add });
+        let (r, _rx) = req(Op::Split, 1, 0);
+        assert!(matches!(r.validate(), Err(ServiceError::EmptyBatch { op: Op::Split })));
+    }
+
+    #[test]
+    fn arity_is_checked_before_raggedness() {
+        // 3 planes for a 4-plane op, one of them ragged: arity wins
+        let (tx, _rx) = mpsc::channel();
+        let r = OpRequest {
+            op: Op::Add22,
+            inputs: vec![vec![1.0; 4], vec![1.0; 9], vec![1.0; 4]],
+            reply: tx,
+        };
+        assert!(matches!(r.validate(), Err(ServiceError::Arity { .. })));
     }
 }

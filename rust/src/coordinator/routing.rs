@@ -1,0 +1,282 @@
+//! Pluggable request routing over a (possibly heterogeneous) shard set.
+//!
+//! The seed hard-coded round-robin submission inside `Handle`. With
+//! per-shard [`crate::backend::BackendSpec`]s (e.g. 6 native shards +
+//! one `gpusim:nv35` canary) placement becomes a real decision, so it
+//! is now a trait: a [`RoutingPolicy`] maps `(op, batch length)` plus
+//! the live per-shard state ([`ShardMeta`]: substrate label, queue
+//! depth) to a shard index. Three implementations ship, selectable via
+//! [`Routing`] from config or `--routing` on the CLI:
+//!
+//! * [`RoundRobin`] — the seed's behaviour: even spray, no state read;
+//! * [`QueueDepth`] — least-loaded: picks the shard with the fewest
+//!   in-flight requests (rotating tie-break), so a slow substrate —
+//!   the soft-float stream VM, say — naturally receives less work;
+//! * [`OpAffinity`] — pins each operator to one home shard
+//!   (`op.index() % shards`), keeping per-op state (compiled-artifact
+//!   caches, staging buffers sized for that op's arity) hot.
+//!
+//! Custom policies plug in through
+//! [`crate::coordinator::Service::start_with_policy`].
+
+use crate::backend::{Op, ServiceError};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Live, routing-visible state of one shard: which substrate it runs
+/// and how many requests it currently has in flight.
+#[derive(Debug)]
+pub struct ShardMeta {
+    label: &'static str,
+    depth: AtomicUsize,
+}
+
+impl ShardMeta {
+    pub(crate) fn new(label: &'static str) -> ShardMeta {
+        ShardMeta { label, depth: AtomicUsize::new(0) }
+    }
+
+    /// Substrate label of the backend this shard owns ("native",
+    /// "gpusim", "xla").
+    pub fn label(&self) -> &'static str {
+        self.label
+    }
+
+    /// Requests submitted to this shard and not yet replied to.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn enter(&self) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn leave(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// A shard-placement strategy. Implementations must be cheap — this
+/// runs on every submission — and thread-safe (handles are cloned
+/// across client threads).
+pub trait RoutingPolicy: Send + Sync {
+    /// Short policy name for logs/metrics ("round-robin", ...).
+    fn name(&self) -> &'static str;
+
+    /// Pick a shard index in `0..shards.len()` for a `len`-element
+    /// batch of `op`. `shards` is never empty.
+    fn route(&self, op: Op, len: usize, shards: &[ShardMeta]) -> usize;
+}
+
+/// Even spray in submission order — the seed's behaviour.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: AtomicUsize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin::default()
+    }
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&self, _op: Op, _len: usize, shards: &[ShardMeta]) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % shards.len()
+    }
+}
+
+/// Least-loaded: the shard with the smallest in-flight count wins;
+/// ties rotate so equal shards still share work evenly.
+#[derive(Debug, Default)]
+pub struct QueueDepth {
+    tie: AtomicUsize,
+}
+
+impl QueueDepth {
+    pub fn new() -> QueueDepth {
+        QueueDepth::default()
+    }
+}
+
+impl RoutingPolicy for QueueDepth {
+    fn name(&self) -> &'static str {
+        "queue-depth"
+    }
+
+    fn route(&self, _op: Op, _len: usize, shards: &[ShardMeta]) -> usize {
+        let n = shards.len();
+        let start = self.tie.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_depth = shards[start].queue_depth();
+        for off in 1..n {
+            let i = (start + off) % n;
+            let d = shards[i].queue_depth();
+            if d < best_depth {
+                best = i;
+                best_depth = d;
+            }
+        }
+        best
+    }
+}
+
+/// Deterministic per-operator home shard: `op.index() % shards`.
+///
+/// Every request for a given operator lands on the same shard, so
+/// whatever per-op state that shard's backend holds — XLA
+/// compiled-artifact caches, gpusim staging buffers sized for the op's
+/// arity — stays hot, at the cost of per-op (rather than per-request)
+/// load spreading.
+#[derive(Debug, Default)]
+pub struct OpAffinity;
+
+impl OpAffinity {
+    pub fn new() -> OpAffinity {
+        OpAffinity
+    }
+
+    /// The home shard this policy sends `op` to on a `shards`-wide set.
+    pub fn home(op: Op, shards: usize) -> usize {
+        op.index() % shards.max(1)
+    }
+}
+
+impl RoutingPolicy for OpAffinity {
+    fn name(&self) -> &'static str {
+        "op-affinity"
+    }
+
+    fn route(&self, op: Op, _len: usize, shards: &[ShardMeta]) -> usize {
+        OpAffinity::home(op, shards.len())
+    }
+}
+
+/// Config/CLI-level policy selector (the `Clone`-able recipe;
+/// [`Routing::build`] materialises the shared policy object).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Routing {
+    #[default]
+    RoundRobin,
+    QueueDepth,
+    OpAffinity,
+}
+
+impl Routing {
+    /// Every built-in policy, in CLI order.
+    pub const ALL: [Routing; 3] =
+        [Routing::RoundRobin, Routing::QueueDepth, Routing::OpAffinity];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Routing::RoundRobin => "round-robin",
+            Routing::QueueDepth => "queue-depth",
+            Routing::OpAffinity => "op-affinity",
+        }
+    }
+
+    /// Parse a `--routing` value: `round-robin`/`rr`,
+    /// `queue-depth`/`least-loaded`, `op-affinity`/`affinity`.
+    pub fn from_cli(name: &str) -> Result<Routing, ServiceError> {
+        match name {
+            "round-robin" | "rr" => Ok(Routing::RoundRobin),
+            "queue-depth" | "least-loaded" => Ok(Routing::QueueDepth),
+            "op-affinity" | "affinity" => Ok(Routing::OpAffinity),
+            other => Err(ServiceError::Backend(format!(
+                "unknown routing policy '{other}' \
+                 (try round-robin, queue-depth, op-affinity)"
+            ))),
+        }
+    }
+
+    /// Materialise the policy object handles will share.
+    pub fn build(self) -> Arc<dyn RoutingPolicy> {
+        match self {
+            Routing::RoundRobin => Arc::new(RoundRobin::new()),
+            Routing::QueueDepth => Arc::new(QueueDepth::new()),
+            Routing::OpAffinity => Arc::new(OpAffinity::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metas(n: usize) -> Vec<ShardMeta> {
+        (0..n).map(|_| ShardMeta::new("native")).collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let m = metas(3);
+        let p = RoundRobin::new();
+        let picks: Vec<usize> = (0..6).map(|_| p.route(Op::Add, 10, &m)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(p.name(), "round-robin");
+    }
+
+    #[test]
+    fn queue_depth_picks_least_loaded() {
+        let m = metas(3);
+        m[0].enter();
+        m[0].enter();
+        m[1].enter();
+        // shard 2 is empty: every pick lands there until depths change
+        let p = QueueDepth::new();
+        for _ in 0..4 {
+            assert_eq!(p.route(Op::Add, 10, &m), 2);
+        }
+        m[2].enter();
+        m[2].enter();
+        m[2].enter();
+        // now shard 1 (depth 1) is the minimum
+        assert_eq!(p.route(Op::Add, 10, &m), 1);
+        m[1].leave(1);
+        assert_eq!(m[1].queue_depth(), 0);
+    }
+
+    #[test]
+    fn queue_depth_ties_rotate() {
+        let m = metas(4);
+        let p = QueueDepth::new();
+        let picks: Vec<usize> = (0..4).map(|_| p.route(Op::Add, 10, &m)).collect();
+        // all depths equal: the rotating start spreads the picks
+        assert_eq!(picks, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn op_affinity_is_deterministic_and_total() {
+        let m = metas(3);
+        let p = OpAffinity::new();
+        for op in Op::ALL {
+            let s = p.route(op, 10, &m);
+            assert_eq!(s, op.index() % 3);
+            // repeat picks never move
+            assert_eq!(p.route(op, 99, &m), s);
+        }
+        // a 2-shard set still covers both shards across the catalogue
+        let m2 = metas(2);
+        let picked: std::collections::HashSet<usize> =
+            Op::ALL.iter().map(|&op| p.route(op, 1, &m2)).collect();
+        assert_eq!(picked.len(), 2);
+    }
+
+    #[test]
+    fn routing_selector_parses_and_builds() {
+        assert_eq!(Routing::from_cli("round-robin").unwrap(), Routing::RoundRobin);
+        assert_eq!(Routing::from_cli("rr").unwrap(), Routing::RoundRobin);
+        assert_eq!(Routing::from_cli("queue-depth").unwrap(), Routing::QueueDepth);
+        assert_eq!(Routing::from_cli("least-loaded").unwrap(), Routing::QueueDepth);
+        assert_eq!(Routing::from_cli("op-affinity").unwrap(), Routing::OpAffinity);
+        assert!(Routing::from_cli("random").is_err());
+        for r in Routing::ALL {
+            assert_eq!(r.build().name(), r.name());
+        }
+        assert_eq!(Routing::default(), Routing::RoundRobin);
+    }
+}

@@ -1,25 +1,32 @@
 //! The coordinator service: N shard threads draining batched queues
 //! through the backend layer.
 //!
-//! Clients hold a cheap cloneable [`Handle`] and submit
-//! [`OpRequest`]s; requests round-robin over `shards` device threads.
-//! Each shard owns one [`crate::backend::KernelBackend`] instance
-//! (built *on* the shard thread — PJRT wrapper types are not `Send`),
-//! its own [`crate::backend::BufferPool`], and its own
-//! [`Metrics`] (no cross-shard contention on the hot path). A shard
-//! coalesces whatever is pending (up to `max_batch` requests per
-//! operator), gathers the group into pooled planes, executes through
+//! Clients hold a cheap cloneable [`Handle`], build typed
+//! [`Plan`]s (shape-checked at build time), and
+//! [`dispatch`](Handle::dispatch) them; a
+//! [`RoutingPolicy`](crate::coordinator::routing::RoutingPolicy)
+//! places each request on a shard and the caller gets a future-like
+//! [`Ticket`]. Each shard owns one
+//! [`crate::backend::KernelBackend`] instance (built *on* the shard
+//! thread — PJRT wrapper types are not `Send`), its own
+//! [`crate::backend::BufferPool`], and its own [`Metrics`] (no
+//! cross-shard contention on the hot path). A shard coalesces whatever
+//! is pending (up to `max_batch` requests per operator), gathers the
+//! group into pooled planes, executes through
 //! `Box<dyn KernelBackend>`, and scatters replies.
 //!
-//! Which substrate runs is a [`crate::backend::BackendSpec`]: native
-//! multicore kernels, the gpusim stream VM (any GPU arithmetic model),
-//! or PJRT/XLA artifacts. The seed's two-variant [`Backend`] enum
-//! remains as a deprecated shim.
+//! The shard set is described by a [`ServiceSpec`] and may be
+//! **heterogeneous**: one [`crate::backend::BackendSpec`] per shard
+//! (e.g. `[native, native, gpusim:nv35]` — two workhorses and an
+//! arithmetic-model canary). The seed's single-spec [`ServiceConfig`]
+//! and two-variant [`Backend`] enum remain as deprecated shims.
 
-use crate::backend::{self, BackendSpec, BufferPool, KernelBackend, ServiceError};
 use super::batcher;
 use super::metrics::{Metrics, Snapshot};
+use super::plan::{Plan, Ticket};
 use super::request::{OpRequest, OpResult};
+use super::routing::{Routing, RoutingPolicy, ShardMeta};
+use crate::backend::{BackendSpec, BufferPool, KernelBackend, Op, ServiceError};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -48,7 +55,9 @@ impl From<Backend> for BackendSpec {
     }
 }
 
-/// Service configuration.
+/// The seed's uniform-shard configuration, kept as a shim: every shard
+/// builds the same `backend` and submission is round-robin.
+#[deprecated(note = "use ServiceSpec: per-shard BackendSpecs plus a Routing policy")]
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Which substrate each shard builds.
@@ -59,17 +68,113 @@ pub struct ServiceConfig {
     pub max_batch: usize,
 }
 
+#[allow(deprecated)]
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig { backend: BackendSpec::native(), shards: 1, max_batch: 64 }
     }
 }
 
+#[allow(deprecated)]
 impl ServiceConfig {
     /// Shim constructor for the deprecated [`Backend`] enum.
-    #[allow(deprecated)]
     pub fn legacy(backend: Backend) -> ServiceConfig {
         ServiceConfig { backend: backend.into(), ..Default::default() }
+    }
+}
+
+#[allow(deprecated)]
+impl From<ServiceConfig> for ServiceSpec {
+    fn from(c: ServiceConfig) -> ServiceSpec {
+        ServiceSpec::uniform(c.backend, c.shards).with_max_batch(c.max_batch)
+    }
+}
+
+/// Service configuration: one [`BackendSpec`] **per shard** plus the
+/// routing policy that places requests across them.
+#[derive(Clone, Debug)]
+pub struct ServiceSpec {
+    /// One backend recipe per shard; heterogeneous sets are first-class
+    /// (`[native, native, gpusim:nv35]`). Must be non-empty.
+    pub shards: Vec<BackendSpec>,
+    /// Max requests coalesced into one batch per operator.
+    pub max_batch: usize,
+    /// Which built-in [`RoutingPolicy`] places requests
+    /// ([`Service::start_with_policy`] accepts custom ones).
+    pub routing: Routing,
+}
+
+impl Default for ServiceSpec {
+    fn default() -> Self {
+        ServiceSpec::uniform(BackendSpec::native(), 1)
+    }
+}
+
+impl ServiceSpec {
+    /// `shards` identical shards of `backend` (the seed's shape).
+    pub fn uniform(backend: BackendSpec, shards: usize) -> ServiceSpec {
+        ServiceSpec {
+            shards: vec![backend; shards.max(1)],
+            max_batch: 64,
+            routing: Routing::default(),
+        }
+    }
+
+    /// One shard per entry of `shards`, in order.
+    pub fn heterogeneous(shards: Vec<BackendSpec>) -> ServiceSpec {
+        ServiceSpec { shards, max_batch: 64, routing: Routing::default() }
+    }
+
+    pub fn with_routing(mut self, routing: Routing) -> ServiceSpec {
+        self.routing = routing;
+        self
+    }
+
+    pub fn with_max_batch(mut self, max_batch: usize) -> ServiceSpec {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Parse a CLI-style shard list: comma-separated
+    /// [`BackendSpec::from_cli`] entries, each optionally repeated with
+    /// `*N` — `"native*6,gpusim:nv35"` is six native shards plus one
+    /// NV35 canary.
+    pub fn from_cli(
+        shard_spec: &str, artifacts: &std::path::Path,
+    ) -> Result<ServiceSpec, ServiceError> {
+        let mut shards = Vec::new();
+        for part in shard_spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, count) = match part.split_once('*') {
+                Some((n, c)) => {
+                    let count = c.parse::<usize>().map_err(|_| {
+                        ServiceError::Backend(format!("bad shard count '{c}' in '{part}'"))
+                    })?;
+                    if count == 0 {
+                        // a typo like `native*0` would silently drop the
+                        // entry and reroute all traffic to the others
+                        return Err(ServiceError::Backend(format!(
+                            "zero shard count in '{part}'"
+                        )));
+                    }
+                    (n, count)
+                }
+                None => (part, 1),
+            };
+            let spec = BackendSpec::from_cli(name, artifacts)?;
+            for _ in 0..count {
+                shards.push(spec.clone());
+            }
+        }
+        if shards.is_empty() {
+            return Err(ServiceError::Backend(format!(
+                "empty shard spec '{shard_spec}'"
+            )));
+        }
+        Ok(ServiceSpec::heterogeneous(shards))
     }
 }
 
@@ -81,65 +186,104 @@ enum Msg {
 /// Running coordinator; dropping it shuts every shard down.
 pub struct Service {
     txs: Vec<mpsc::Sender<Msg>>,
-    rr: Arc<AtomicUsize>,
+    meta: Arc<Vec<ShardMeta>>,
+    policy: Arc<dyn RoutingPolicy>,
     metrics: Vec<Arc<Metrics>>,
     live: Arc<AtomicUsize>,
     joins: Vec<JoinHandle<()>>,
 }
 
-/// Cheap cloneable submission handle (round-robins over shards).
+/// Cheap cloneable submission handle; placement is delegated to the
+/// service's routing policy.
 #[derive(Clone)]
 pub struct Handle {
     txs: Vec<mpsc::Sender<Msg>>,
-    rr: Arc<AtomicUsize>,
+    meta: Arc<Vec<ShardMeta>>,
+    policy: Arc<dyn RoutingPolicy>,
 }
 
 impl Handle {
-    /// Submit and return the reply receiver (async pattern).
+    /// Dispatch a validated [`Plan`]: the routing policy picks a shard,
+    /// the request is enqueued, and the reply arrives on the returned
+    /// [`Ticket`].
+    pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
+        let (op, inputs, len) = plan.into_parts();
+        let shard = self.policy.route(op, len, &self.meta) % self.txs.len();
+        let (reply, rx) = mpsc::channel();
+        let req = OpRequest { op, inputs, reply };
+        self.meta[shard].enter();
+        if self.txs[shard].send(Msg::Submit(req)).is_err() {
+            self.meta[shard].leave(1);
+            return Err(ServiceError::QueueClosed);
+        }
+        Ok(Ticket { rx, op, shard, len })
+    }
+
+    /// Submit by operator name and return the raw reply receiver.
+    #[deprecated(note = "build a typed Plan and use Handle::dispatch")]
     pub fn submit(
         &self, op: &str, inputs: Vec<Vec<f32>>,
     ) -> Result<mpsc::Receiver<OpResult>, ServiceError> {
-        let (reply, rx) = mpsc::channel();
-        let req = OpRequest { op: op.into(), inputs, reply };
-        req.validate()?;
-        let shard = self.rr.fetch_add(1, Ordering::Relaxed) % self.txs.len();
-        self.txs[shard]
-            .send(Msg::Submit(req))
-            .map_err(|_| ServiceError::QueueClosed)?;
-        Ok(rx)
+        let plan = Plan::new(Op::parse(op)?, inputs)?;
+        Ok(self.dispatch(plan)?.into_receiver())
     }
 
-    /// Submit and block for the result.
+    /// Submit by operator name and block for the result.
+    #[deprecated(note = "build a typed Plan and use Handle::dispatch(...)?.wait()")]
     pub fn call(&self, op: &str, inputs: Vec<Vec<f32>>) -> OpResult {
-        let rx = self.submit(op, inputs)?;
-        rx.recv().map_err(|_| ServiceError::QueueClosed)?
+        let plan = Plan::new(Op::parse(op)?, inputs)?;
+        self.dispatch(plan)?.wait()
     }
 
     /// Number of shards behind this handle.
     pub fn shards(&self) -> usize {
         self.txs.len()
     }
+
+    /// In-flight request count per shard (what queue-depth routing
+    /// reads).
+    pub fn queue_depths(&self) -> Vec<usize> {
+        self.meta.iter().map(ShardMeta::queue_depth).collect()
+    }
 }
 
 impl Service {
-    /// Start `config.shards` device threads; fails if any backend
-    /// refuses to build.
-    pub fn start(config: ServiceConfig) -> Result<Service, ServiceError> {
-        let shards = config.shards.max(1);
-        let max_batch = config.max_batch.max(1);
+    /// Start one device thread per shard of the spec; fails if any
+    /// backend refuses to build. Accepts a [`ServiceSpec`] or (via the
+    /// deprecated shim) an old `ServiceConfig`.
+    pub fn start(config: impl Into<ServiceSpec>) -> Result<Service, ServiceError> {
+        let spec = config.into();
+        let policy = spec.routing.build();
+        Service::start_with_policy(spec, policy)
+    }
+
+    /// [`Service::start`] with a caller-supplied routing policy — the
+    /// plug-in point for policies beyond the built-in [`Routing`] set.
+    pub fn start_with_policy(
+        spec: ServiceSpec, policy: Arc<dyn RoutingPolicy>,
+    ) -> Result<Service, ServiceError> {
+        if spec.shards.is_empty() {
+            return Err(ServiceError::Backend("empty shard set".into()));
+        }
+        let max_batch = spec.max_batch.max(1);
+        let shards = spec.shards.len();
+        let meta: Arc<Vec<ShardMeta>> =
+            Arc::new(spec.shards.iter().map(|s| ShardMeta::new(s.label())).collect());
         let live = Arc::new(AtomicUsize::new(0));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), ServiceError>>();
         let mut txs = Vec::with_capacity(shards);
         let mut metrics = Vec::with_capacity(shards);
         let mut joins = Vec::with_capacity(shards);
-        for shard in 0..shards {
+        for (shard, backend_spec) in spec.shards.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Msg>();
             let m = Arc::new(Metrics::new());
-            let spec = config.backend.clone();
-            let (m2, l2, r2) = (m.clone(), live.clone(), ready_tx.clone());
+            let (m2, l2, r2, meta2) =
+                (m.clone(), live.clone(), ready_tx.clone(), meta.clone());
             let join = std::thread::Builder::new()
                 .name(format!("ffgpu-shard-{shard}"))
-                .spawn(move || device_thread(spec, max_batch, rx, r2, m2, l2))
+                .spawn(move || {
+                    device_thread(backend_spec, max_batch, rx, r2, m2, l2, meta2, shard)
+                })
                 .map_err(|e| {
                     ServiceError::Backend(format!("spawn shard {shard}: {e}"))
                 })?;
@@ -155,11 +299,15 @@ impl Service {
                     ServiceError::Backend("device thread died during startup".into())
                 })??;
         }
-        Ok(Service { txs, rr: Arc::new(AtomicUsize::new(0)), metrics, live, joins })
+        Ok(Service { txs, meta, policy, metrics, live, joins })
     }
 
     pub fn handle(&self) -> Handle {
-        Handle { txs: self.txs.clone(), rr: self.rr.clone() }
+        Handle {
+            txs: self.txs.clone(),
+            meta: self.meta.clone(),
+            policy: self.policy.clone(),
+        }
     }
 
     /// Service-wide metrics (all shards merged).
@@ -171,6 +319,16 @@ impl Service {
     /// Per-shard snapshots (index = shard id).
     pub fn shard_metrics(&self) -> Vec<Snapshot> {
         self.metrics.iter().map(|m| m.snapshot()).collect()
+    }
+
+    /// Substrate label per shard, in shard order.
+    pub fn shard_labels(&self) -> Vec<&'static str> {
+        self.meta.iter().map(ShardMeta::label).collect()
+    }
+
+    /// Name of the active routing policy.
+    pub fn routing(&self) -> &'static str {
+        self.policy.name()
     }
 
     pub fn shards(&self) -> usize {
@@ -194,10 +352,11 @@ impl Drop for Service {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn device_thread(
     spec: BackendSpec, max_batch: usize, rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<(), ServiceError>>, metrics: Arc<Metrics>,
-    live: Arc<AtomicUsize>,
+    live: Arc<AtomicUsize>, meta: Arc<Vec<ShardMeta>>, shard: usize,
 ) {
     // build the substrate on this thread (backends need not be Send)
     let mut backend = match spec.build() {
@@ -234,15 +393,15 @@ fn device_thread(
         }
 
         // group by operator, preserving arrival order
-        let mut groups: Vec<(String, Vec<OpRequest>)> = Vec::new();
+        let mut groups: Vec<(Op, Vec<OpRequest>)> = Vec::new();
         for r in pending {
             match groups.iter().position(|(op, _)| *op == r.op) {
                 Some(i) => groups[i].1.push(r),
-                None => groups.push((r.op.clone(), vec![r])),
+                None => groups.push((r.op, vec![r])),
             }
         }
         for (op, reqs) in groups {
-            serve_group(backend.as_mut(), &mut pool, &metrics, &op, reqs);
+            serve_group(backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs);
         }
         metrics.record_latency(t0.elapsed().as_secs_f64());
         if shutdown {
@@ -254,18 +413,18 @@ fn device_thread(
 
 /// Execute one operator group as a single concatenated batch through
 /// the backend trait.
+///
+/// The shard's queue depth ([`ShardMeta`]) is decremented *before* the
+/// replies go out, so once a client holds its reply the routing
+/// policies already see the drained depth.
 fn serve_group(
     backend: &mut dyn KernelBackend, pool: &mut BufferPool, metrics: &Metrics,
-    op: &str, reqs: Vec<OpRequest>,
+    depth: &ShardMeta, op: Op, reqs: Vec<OpRequest>,
 ) {
-    let Some(spec) = backend::op_spec(op) else {
-        fail_group(metrics, &reqs, ServiceError::UnknownOp(op.to_string()));
-        return;
-    };
     // no per-batch `supports` pre-check: backends return
     // `ServiceError::Unsupported` themselves, and the default
     // `supports` impl allocates a catalogue Vec — not hot-path material
-    let (n_in, n_out) = (spec.n_in, spec.n_out);
+    let (n_in, n_out) = op.arity();
 
     // fast path: a lone request executes straight out of its own planes
     // and its output planes become the reply (no gather/scatter copies)
@@ -274,7 +433,9 @@ fn serve_group(
         let n = req.len();
         let input_refs: Vec<&[f32]> = req.inputs.iter().map(Vec::as_slice).collect();
         let mut outs = vec![vec![0.0f32; n]; n_out];
-        match backend.execute(op, &input_refs, &mut outs) {
+        let result = backend.execute(op, &input_refs, &mut outs);
+        depth.leave(1);
+        match result {
             Ok(rep) => {
                 metrics.record_batch(1, rep.launches, n as u64, rep.padded_elements);
                 let _ = req.reply.send(Ok(outs));
@@ -302,6 +463,7 @@ fn serve_group(
 
     let result = backend.execute(op, &input_refs, &mut outs);
     drop(input_refs);
+    depth.leave(reqs.len());
 
     match result {
         Ok(rep) => {
@@ -342,7 +504,7 @@ mod tests {
     use crate::util::Rng;
 
     fn cpu_service() -> Service {
-        Service::start(ServiceConfig::default()).unwrap()
+        Service::start(ServiceSpec::default()).unwrap()
     }
 
     fn add22_planes(n: usize, seed: u64) -> Vec<Vec<f32>> {
@@ -359,13 +521,17 @@ mod tests {
         planes
     }
 
+    fn run(h: &Handle, op: Op, planes: Vec<Vec<f32>>) -> OpResult {
+        h.dispatch(Plan::new(op, planes)?)?.wait()
+    }
+
     #[test]
     fn cpu_backend_serves_add22() {
         let svc = cpu_service();
         let h = svc.handle();
         let n = 1000;
         let planes = add22_planes(n, 131);
-        let out = h.call("add22", planes.clone()).unwrap();
+        let out = run(&h, Op::Add22, planes.clone()).unwrap();
         assert_eq!(out.len(), 2);
         for i in 0..n {
             let want = FF32::from_parts(planes[0][i], planes[1][i])
@@ -378,17 +544,41 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_requests_at_submit() {
-        let svc = cpu_service();
-        let h = svc.handle();
+    fn plan_validation_rejects_before_dispatch() {
         assert!(matches!(
-            h.call("frobnicate", vec![vec![1.0]]),
-            Err(ServiceError::UnknownOp(_))
-        ));
-        assert!(matches!(
-            h.call("add22", vec![vec![1.0]; 3]),
+            Plan::new(Op::Add22, vec![vec![1.0]; 3]),
             Err(ServiceError::Arity { .. })
         ));
+        assert!(matches!(
+            Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0]]),
+            Err(ServiceError::RaggedPlanes { .. })
+        ));
+        assert!(matches!(
+            Plan::new(Op::Add, vec![vec![], vec![]]),
+            Err(ServiceError::EmptyBatch { .. })
+        ));
+    }
+
+    #[test]
+    fn tickets_resolve_out_of_order() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        let mut tickets = Vec::new();
+        let mut wants = Vec::new();
+        for k in 1..=12u32 {
+            let n = 10 * k as usize;
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b = vec![k as f32; n];
+            wants.push(a.iter().zip(&b).map(|(x, y)| x + y).collect::<Vec<f32>>());
+            let plan = Plan::builder(Op::Add).plane(a).plane(b).build().unwrap();
+            tickets.push(h.dispatch(plan).unwrap());
+        }
+        // resolve newest-first: replies are independent of wait order
+        for (ticket, want) in tickets.into_iter().zip(wants).rev() {
+            assert_eq!(ticket.op(), Op::Add);
+            let out = ticket.wait().unwrap();
+            assert_eq!(out[0], want);
+        }
     }
 
     #[test]
@@ -401,7 +591,7 @@ mod tests {
                 let n = 100 + t * 13;
                 let a: Vec<f32> = (0..n).map(|i| (t * 1000 + i) as f32).collect();
                 let b = vec![1.0f32; n];
-                let out = h.call("add", vec![a.clone(), b]).unwrap();
+                let out = run(&h, Op::Add, vec![a.clone(), b]).unwrap();
                 for i in 0..n {
                     assert_eq!(out[0][i], a[i] + 1.0);
                 }
@@ -421,20 +611,19 @@ mod tests {
         drop(svc);
         // handle now fails cleanly
         assert_eq!(
-            h.call("add", vec![vec![1.0], vec![2.0]]).unwrap_err(),
+            run(&h, Op::Add, vec![vec![1.0], vec![2.0]]).unwrap_err(),
             ServiceError::QueueClosed
         );
     }
 
     #[test]
     fn sharded_service_spreads_requests() {
-        let svc = Service::start(ServiceConfig {
-            backend: BackendSpec::native_single(),
-            shards: 4,
-            max_batch: 16,
-        })
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 4).with_max_batch(16),
+        )
         .unwrap();
         assert_eq!(svc.shards(), 4);
+        assert_eq!(svc.routing(), "round-robin");
         let mut joins = Vec::new();
         for t in 0..8u64 {
             let h = svc.handle();
@@ -442,7 +631,7 @@ mod tests {
                 for round in 0..10usize {
                     let n = 50 + round;
                     let planes = add22_planes(n, t * 100 + round as u64);
-                    let out = h.call("add22", planes.clone()).unwrap();
+                    let out = run(&h, Op::Add22, planes.clone()).unwrap();
                     for i in 0..n {
                         let want = FF32::from_parts(planes[0][i], planes[1][i])
                             + FF32::from_parts(planes[2][i], planes[3][i]);
@@ -472,17 +661,97 @@ mod tests {
     }
 
     #[test]
+    fn op_affinity_pins_ops_to_home_shards() {
+        use super::super::routing::OpAffinity;
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 3)
+                .with_routing(Routing::OpAffinity),
+        )
+        .unwrap();
+        assert_eq!(svc.routing(), "op-affinity");
+        let h = svc.handle();
+        for op in [Op::Add22, Op::Mul22, Op::Add, Op::Mul12] {
+            let planes = crate::harness::workload::planes_for(op.name(), 64, 9);
+            for _ in 0..3 {
+                let t = h.dispatch(Plan::new(op, planes.clone()).unwrap()).unwrap();
+                assert_eq!(t.shard(), OpAffinity::home(op, 3), "{op}");
+                t.wait().unwrap();
+            }
+        }
+        // all of add22's requests landed on its home shard
+        let per_shard = svc.shard_metrics();
+        assert!(per_shard[OpAffinity::home(Op::Add22, 3)].requests >= 3);
+    }
+
+    #[test]
+    fn queue_depths_drain_to_zero() {
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 2)
+                .with_routing(Routing::QueueDepth),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let mut tickets = Vec::new();
+        for k in 0..6 {
+            let planes = add22_planes(200, k);
+            tickets.push(h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap());
+        }
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // every reply received => every shard has replied => depths at 0
+        assert_eq!(h.queue_depths(), vec![0, 0]);
+        assert_eq!(svc.metrics().requests, 6);
+    }
+
+    #[test]
+    fn heterogeneous_spec_builds_labelled_shards() {
+        let svc = Service::start(ServiceSpec::heterogeneous(vec![
+            BackendSpec::native_single(),
+            BackendSpec::gpusim_ieee(),
+        ]))
+        .unwrap();
+        assert_eq!(svc.shard_labels(), vec!["native", "gpusim"]);
+        let out = run(&svc.handle(), Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]])
+            .unwrap();
+        assert_eq!(out[0], vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn empty_shard_set_is_rejected() {
+        let err = Service::start(ServiceSpec::heterogeneous(vec![]))
+            .err()
+            .expect("must fail");
+        assert!(matches!(err, ServiceError::Backend(_)));
+    }
+
+    #[test]
+    fn spec_from_cli_parses_heterogeneous_sets() {
+        let dir = std::path::Path::new("artifacts");
+        let spec = ServiceSpec::from_cli("native*2,gpusim:nv35", dir).unwrap();
+        assert_eq!(spec.shards.len(), 3);
+        assert_eq!(spec.shards[0].label(), "native");
+        assert_eq!(spec.shards[1].label(), "native");
+        match &spec.shards[2] {
+            BackendSpec::GpuSim { model } => assert_eq!(model, "nv35"),
+            other => panic!("{other:?}"),
+        }
+        assert!(ServiceSpec::from_cli("", dir).is_err());
+        assert!(ServiceSpec::from_cli("native*lots", dir).is_err());
+        assert!(ServiceSpec::from_cli("native*0,gpusim", dir).is_err());
+        assert!(ServiceSpec::from_cli("voodoo", dir).is_err());
+    }
+
+    #[test]
     fn gpusim_backend_is_servable() {
-        let svc = Service::start(ServiceConfig {
-            backend: BackendSpec::gpusim_ieee(),
-            shards: 1,
-            max_batch: 8,
-        })
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1).with_max_batch(8),
+        )
         .unwrap();
         let h = svc.handle();
         let n = 200;
         let planes = add22_planes(n, 99);
-        let out = h.call("add22", planes.clone()).unwrap();
+        let out = run(&h, Op::Add22, planes.clone()).unwrap();
         for i in 0..n {
             let want = FF32::from_parts(planes[0][i], planes[1][i])
                 + FF32::from_parts(planes[2][i], planes[3][i]);
@@ -496,11 +765,9 @@ mod tests {
 
     #[test]
     fn bad_backend_spec_fails_startup() {
-        let err = Service::start(ServiceConfig {
-            backend: BackendSpec::GpuSim { model: "voodoo2".into() },
-            shards: 2,
-            max_batch: 8,
-        })
+        let err = Service::start(
+            ServiceSpec::uniform(BackendSpec::GpuSim { model: "voodoo2".into() }, 2),
+        )
         .err()
         .expect("startup must fail");
         assert!(matches!(err, ServiceError::Backend(_)));
@@ -513,5 +780,39 @@ mod tests {
         let h = svc.handle();
         let out = h.call("add", vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
         assert_eq!(out[0], vec![4.0, 6.0]);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_string_shims_delegate_to_typed_path() {
+        let svc = Service::start(ServiceConfig {
+            backend: BackendSpec::native_single(),
+            shards: 2,
+            max_batch: 16,
+        })
+        .unwrap();
+        let h = svc.handle();
+        // call: happy path + every parse/validation error class
+        let out = h.call("add22", add22_planes(50, 7)).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(matches!(
+            h.call("frobnicate", vec![vec![1.0]]),
+            Err(ServiceError::UnknownOp(_))
+        ));
+        assert!(matches!(
+            h.call("add22", vec![vec![1.0]; 3]),
+            Err(ServiceError::Arity { .. })
+        ));
+        assert!(matches!(
+            h.call("add", vec![vec![1.0, 2.0], vec![3.0]]),
+            Err(ServiceError::RaggedPlanes { .. })
+        ));
+        assert!(matches!(
+            h.call("add", vec![vec![], vec![]]),
+            Err(ServiceError::EmptyBatch { .. })
+        ));
+        // submit: async receiver shape preserved
+        let rx = h.submit("add", vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap()[0], vec![4.0, 6.0]);
     }
 }

@@ -4,7 +4,7 @@
 //! per operator class. The presets reproduce the *behaviour classes* the
 //! paper measured; the exact interval endpoints of Table 2 are
 //! chip-specific analogue of e.g. the NV35's internal mul datapath, so
-//! EXPERIMENTS.md compares classes (exact / chopped / faithful / beyond
+//! comparisons are by class (exact / chopped / faithful / beyond
 //! 1 ulp for div), not fourth-decimal endpoints.
 
 use super::arith::{self, OpRounding, RoundMode, SoftFp};

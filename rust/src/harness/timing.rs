@@ -91,7 +91,7 @@ pub fn cpu_grid(sizes: &[usize], ops: &[&str], timer: &Timer, seed: u64) -> Timi
 /// Timing includes upload/execute/download per launch, matching the
 /// paper's protocol (stream upload + kernel + readback; their ×100 bus
 /// overhead discussion applies to the CPU↔GPU hop, which PJRT-CPU
-/// doesn't have — EXPERIMENTS.md discusses the consequences).
+/// doesn't have, so absolute ratios shift while shapes hold).
 pub fn gpu_grid(
     rt: &Runtime, sizes: &[usize], ops: &[&str], timer: &Timer, seed: u64,
 ) -> Result<TimingGrid, String> {
@@ -137,14 +137,10 @@ pub fn backend_grid(
     for (si, &n) in sizes.iter().enumerate() {
         let mut row = Vec::with_capacity(ops.len());
         for op in ops {
-            let planes = planes_for(op, n, seed + si as u64);
+            let op = crate::backend::Op::parse(op)?;
+            let planes = planes_for(op.name(), n, seed + si as u64);
             let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
-            let n_out = crate::backend::op_spec(op)
-                .map(|s| s.n_out)
-                .ok_or_else(|| {
-                    crate::backend::ServiceError::UnknownOp(op.to_string())
-                })?;
-            let mut outs = vec![vec![0.0f32; n]; n_out];
+            let mut outs = vec![vec![0.0f32; n]; op.n_out()];
             let mut err = None;
             let secs = timer.median_secs(|| {
                 if let Err(e) = backend.execute(op, &refs, &mut outs) {

@@ -19,23 +19,29 @@
 //! * [`runtime`] — PJRT loader/executor for the AOT-compiled XLA
 //!   artifacts produced by `python/compile` (the "GPU path" of Table 3;
 //!   needs the `xla` cargo feature, stubbed otherwise);
-//! * [`backend`] — the **execution-substrate layer**: one
-//!   [`backend::KernelBackend`] trait over the operator catalogue, with
-//!   native multicore ([`backend::NativeBackend`]), simulated-GPU
+//! * [`backend`] — the **execution-substrate layer**: the typed
+//!   operator catalogue ([`backend::Op`]), one
+//!   [`backend::KernelBackend`] trait over it, with native multicore
+//!   ([`backend::NativeBackend`]), simulated-GPU
 //!   ([`backend::GpuSimBackend`]) and PJRT/XLA
 //!   ([`backend::XlaBackend`]) implementations, typed
 //!   [`backend::ServiceError`]s, and the [`backend::BufferPool`] that
 //!   keeps the hot path allocation-free;
-//! * [`coordinator`] — the sharded stream dispatcher: request batching,
-//!   N device threads each owning a backend instance, round-robin
-//!   submission, per-shard metrics (the moral equivalent of the Brook
-//!   runtime);
+//! * [`coordinator`] — the typed, routed, sharded dispatcher (the
+//!   moral equivalent of the Brook runtime): build a
+//!   [`coordinator::Plan`] (shape-checked at build time), dispatch it
+//!   for a future-like [`coordinator::Ticket`]; a
+//!   [`coordinator::ServiceSpec`] gives every shard its own
+//!   [`backend::BackendSpec`] (heterogeneous sets are first-class) and
+//!   a pluggable [`coordinator::routing::RoutingPolicy`] — round-robin,
+//!   queue-depth-aware, or op-affinity — places each request;
 //! * [`harness`] — workload generators and table emitters that regenerate
 //!   every table of the paper's evaluation section, plus the
 //!   substrate-neutral [`harness::timing::backend_grid`].
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the module map and the experiment index
+//! (which table each command regenerates, and the documented
+//! substitutions this environment forces).
 
 pub mod backend;
 pub mod coordinator;

@@ -15,13 +15,17 @@
 //!
 //! Backend selection (serve-demo, tablex): `--backend native`,
 //! `--backend native:<workers>`, `--backend gpusim:<model>`,
-//! `--backend xla`; `--shards N` runs N device threads.
+//! `--backend xla`; `--shards N` runs N identical device threads.
+//! Heterogeneous shard sets (serve-demo): `--shard-spec
+//! native*6,gpusim:nv35` gives every shard its own backend, and
+//! `--routing round-robin|queue-depth|op-affinity` picks the placement
+//! policy.
 //!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
 
-use ffgpu::backend::BackendSpec;
-use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::backend::{BackendSpec, Op};
+use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
 use ffgpu::runtime::Runtime;
 use ffgpu::util::{Rng, Timer};
@@ -41,6 +45,8 @@ fn main() {
     let samples: usize = get_flag("--samples", String::new()).parse().unwrap_or(0);
     let backend_flag = get_flag("--backend", "native".into());
     let shards: usize = get_flag("--shards", String::new()).parse().unwrap_or(1);
+    let shard_spec_flag = get_flag("--shard-spec", String::new());
+    let routing_flag = get_flag("--routing", "round-robin".into());
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -49,7 +55,9 @@ fn main() {
         "table4" => cmd_table4(),
         "tablex" => cmd_tablex(&artifacts, &backend_flag),
         "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
-        "serve-demo" => cmd_serve_demo(&artifacts, &backend_flag, shards),
+        "serve-demo" => cmd_serve_demo(
+            &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
+        ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -68,6 +76,7 @@ ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
 
 USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
                        [--backend B] [--shards N]
+                       [--shard-spec LIST] [--routing P]
 
 COMMANDS:
   info        platform, backend catalogues, artifact inventory, Table 1
@@ -76,7 +85,7 @@ COMMANDS:
   table4      Table 4: operator timings on the native CPU path
   tablex      operator timing grid on any backend (see --backend)
   accuracy    Table 5: measured accuracy vs the exact dyadic oracle
-  serve-demo  coordinator demo: batched requests, metrics report
+  serve-demo  coordinator demo: typed Plan API, routing, metrics report
   selftest    artifacts vs native kernels, bit-exact check
 
 BACKENDS (--backend):
@@ -85,6 +94,12 @@ BACKENDS (--backend):
   gpusim          stream VM on IEEE round-to-nearest arithmetic
   gpusim:<model>  stream VM on a GPU model: nv35, nv40, r300, chopped
   xla             PJRT/XLA artifacts (needs the `xla` feature + artifacts)
+
+SHARD SETS (serve-demo):
+  --shard-spec native*2,gpusim:nv35   one backend per shard (overrides
+                                      --backend/--shards); *N repeats
+  --routing round-robin|queue-depth|op-affinity
+                                      placement policy across shards
 ";
 
 fn cmd_info(artifacts: &Path) -> i32 {
@@ -100,7 +115,10 @@ fn cmd_info(artifacts: &Path) -> i32 {
     println!("\nbackends:");
     for spec in [BackendSpec::native(), BackendSpec::gpusim_ieee()] {
         match spec.build() {
-            Ok(b) => println!("  {:<7} ops: {}", b.name(), b.ops().join(", ")),
+            Ok(b) => {
+                let ops: Vec<&str> = b.ops().iter().map(|o| o.name()).collect();
+                println!("  {:<7} ops: {}", b.name(), ops.join(", "));
+            }
             Err(e) => println!("  {:<7} unavailable: {e}", spec.label()),
         }
     }
@@ -265,36 +283,64 @@ fn cmd_accuracy(artifacts: &Path, samples: usize) -> i32 {
     0
 }
 
-fn cmd_serve_demo(artifacts: &Path, backend_flag: &str, shards: usize) -> i32 {
-    let spec = match BackendSpec::from_cli(backend_flag, artifacts) {
-        Ok(s) => s,
+fn cmd_serve_demo(
+    artifacts: &Path, backend_flag: &str, shards: usize, shard_spec: &str,
+    routing_flag: &str,
+) -> i32 {
+    // --shard-spec describes the set shard by shard; otherwise fall
+    // back to the uniform --backend/--shards pair
+    let spec = if shard_spec.is_empty() {
+        match BackendSpec::from_cli(backend_flag, artifacts) {
+            Ok(s) => ServiceSpec::uniform(s, shards),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    } else {
+        match ServiceSpec::from_cli(shard_spec, artifacts) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    };
+    let routing = match Routing::from_cli(routing_flag) {
+        Ok(r) => r,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
-    println!("backend: {} x {shards} shard(s)", spec.label());
-    let svc = match Service::start(ServiceConfig {
-        backend: spec,
-        shards,
-        max_batch: 64,
-    }) {
+    let spec = spec.with_routing(routing);
+    let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
+    println!("shards: [{}]  routing: {}", labels.join(", "), routing.name());
+    let svc = match Service::start(spec) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("service: {e}");
             return 1;
         }
     };
+    // mixed-op workload over the whole catalogue, dispatched through
+    // the typed Plan API; the gpusim soft-float VM is orders of
+    // magnitude slower than native, so shrink batches when it serves
+    let slow = svc.shard_labels().iter().any(|&l| l == "gpusim");
+    let (top, rounds) = if slow { (2000, 20) } else { (9000, 50) };
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
     for client in 0..4u64 {
         let h = svc.handle();
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(client);
-            for _ in 0..50 {
-                let n = 1000 + rng.below(9000);
-                let planes = workload::planes_for("add22", n, rng.next_u64());
-                let out = h.call("add22", planes).expect("add22");
+            for round in 0..rounds {
+                let op = Op::ALL[(client as usize + round) % Op::COUNT];
+                let n = 1000 + rng.below(top);
+                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                let plan = Plan::new(op, planes).expect("plan");
+                let ticket = h.dispatch(plan).expect("dispatch");
+                let out = ticket.wait().expect("reply");
                 assert_eq!(out[0].len(), n);
             }
         }));
@@ -310,8 +356,13 @@ fn cmd_serve_demo(artifacts: &Path, backend_flag: &str, shards: usize) -> i32 {
              m.batches, m.launches, m.elements, m.padding_fraction() * 100.0);
     println!("  batch latency mean={:.2}ms max={:.2}ms errors={}",
              m.mean_latency_s * 1e3, m.max_latency_s * 1e3, m.errors);
-    for (i, s) in svc.shard_metrics().iter().enumerate() {
-        println!("  shard {i}: requests={} batches={} elements={}",
+    for (i, (s, label)) in svc
+        .shard_metrics()
+        .iter()
+        .zip(svc.shard_labels())
+        .enumerate()
+    {
+        println!("  shard {i} [{label}]: requests={} batches={} elements={}",
                  s.requests, s.batches, s.elements);
     }
     0

@@ -1,8 +1,8 @@
 //! Deterministic PRNG for workloads and property tests.
 //!
 //! xoshiro256** (Blackman & Vigna) — small, fast, and good enough for
-//! test-vector generation; reproducible across platforms so EXPERIMENTS.md
-//! numbers are stable. Not for cryptography.
+//! test-vector generation; reproducible across platforms so recorded
+//! experiment numbers stay stable. Not for cryptography.
 
 /// xoshiro256** generator with convenience float/distribution helpers.
 #[derive(Clone, Debug)]

@@ -9,7 +9,7 @@
 //! compares against the native reference lane by lane.
 
 use ffgpu::backend::{
-    op_spec, BackendSpec, KernelBackend, NativeBackend, ServiceError,
+    BackendSpec, KernelBackend, NativeBackend, Op, ServiceError,
 };
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -19,7 +19,7 @@ use std::path::PathBuf;
 /// every operation individually rounded, identical operation order).
 /// `split` (mask vs Dekker) and `div22` (hardware divide vs reciprocal)
 /// are numerically equivalent but not bit-equal by design.
-const PARITY_OPS: [&str; 5] = ["add22", "mul22", "mul12", "add12", "mad22"];
+const PARITY_OPS: [Op; 5] = [Op::Add22, Op::Mul22, Op::Mul12, Op::Add12, Op::Mad22];
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -54,12 +54,11 @@ fn backends() -> Vec<(String, Box<dyn KernelBackend>)> {
 }
 
 fn execute(
-    b: &mut dyn KernelBackend, op: &str, planes: &[Vec<f32>],
+    b: &mut dyn KernelBackend, op: Op, planes: &[Vec<f32>],
 ) -> Result<Vec<Vec<f32>>, ServiceError> {
     let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
     let n = planes[0].len();
-    let n_out = op_spec(op).unwrap().n_out;
-    let mut outs = vec![vec![0.0f32; n]; n_out];
+    let mut outs = vec![vec![0.0f32; n]; op.n_out()];
     b.execute(op, &refs, &mut outs)?;
     Ok(outs)
 }
@@ -75,7 +74,7 @@ fn prop_backends_bit_match_native_on_random_batches() {
         let op = PARITY_OPS[rng.below(PARITY_OPS.len())];
         // sizes straddle the native chunking threshold and stay odd
         let n = 1 + rng.below(9000);
-        let planes = workload::planes_for(op, n, 0x9000 + case as u64);
+        let planes = workload::planes_for(op.name(), n, 0x9000 + case as u64);
         let want = execute(&mut reference, op, &planes).unwrap();
         for (label, b) in others.iter_mut() {
             let got = execute(b.as_mut(), op, &planes).unwrap();
@@ -106,8 +105,8 @@ fn prop_div22_agrees_within_tolerance_across_backends() {
     for case in 0..20 {
         let n = 1 + rng.below(2000);
         let planes = workload::planes_for("div22", n, 0x7000 + case as u64);
-        let want = execute(&mut reference, "div22", &planes).unwrap();
-        let got = execute(sim.as_mut(), "div22", &planes).unwrap();
+        let want = execute(&mut reference, Op::Div22, &planes).unwrap();
+        let got = execute(sim.as_mut(), Op::Div22, &planes).unwrap();
         for i in 0..n {
             let w = want[0][i] as f64 + want[1][i] as f64;
             let g = got[0][i] as f64 + got[1][i] as f64;
@@ -123,14 +122,24 @@ fn backends_expose_consistent_catalogs() {
         for op in PARITY_OPS {
             assert!(b.supports(op), "{label} missing {op}");
         }
-        for op in b.ops() {
-            assert!(op_spec(op).is_some(), "{label} serves unknown op {op}");
+        // typed catalogues cannot contain unknown ops by construction;
+        // pin that they stay within the canonical set and unduplicated
+        let ops = b.ops();
+        for op in &ops {
+            assert!(Op::ALL.contains(op), "{label} serves {op}");
         }
+        let dedup: std::collections::HashSet<Op> = ops.iter().copied().collect();
+        assert_eq!(dedup.len(), ops.len(), "{label} lists duplicates");
     }
 }
 
 #[test]
 fn backend_errors_are_typed_uniformly() {
+    // unknown names die at the parse boundary, before any backend runs
+    assert!(matches!(
+        Op::parse("frobnicate"),
+        Err(ServiceError::UnknownOp(_))
+    ));
     let mut backends = backends();
     for (label, b) in backends.iter_mut() {
         let a = vec![1.0f32; 8];
@@ -138,23 +147,25 @@ fn backend_errors_are_typed_uniformly() {
         let mut outs = vec![vec![0.0f32; 8]];
         assert!(
             matches!(
-                b.execute("frobnicate", &ins, &mut outs),
-                Err(ServiceError::UnknownOp(_))
+                b.execute(Op::Add22, &ins, &mut outs),
+                Err(ServiceError::Arity { .. })
             ),
             "{label}"
         );
+        let short = vec![1.0f32; 4];
+        let ragged: Vec<&[f32]> = vec![&a, &short];
         assert!(
             matches!(
-                b.execute("add22", &ins, &mut outs),
-                Err(ServiceError::Arity { .. })
+                b.execute(Op::Add, &ragged, &mut outs),
+                Err(ServiceError::RaggedPlanes { plane: 1, .. })
             ),
             "{label}"
         );
         let empty: Vec<&[f32]> = vec![&[], &[]];
         assert!(
             matches!(
-                b.execute("add", &empty, &mut outs),
-                Err(ServiceError::Shape(_))
+                b.execute(Op::Add, &empty, &mut outs),
+                Err(ServiceError::EmptyBatch { op: Op::Add })
             ),
             "{label}"
         );
@@ -166,26 +177,32 @@ fn backend_errors_are_typed_uniformly() {
 /// answer bit-for-bit (sharding only changes *where* kernels run).
 #[test]
 fn sharded_service_matches_single_shard_bitwise() {
-    use ffgpu::coordinator::{Service, ServiceConfig};
-    let single = Service::start(ServiceConfig {
-        backend: BackendSpec::native_single(),
-        shards: 1,
-        max_batch: 32,
-    })
+    use ffgpu::coordinator::{Plan, Service, ServiceSpec};
+    let single = Service::start(
+        ServiceSpec::uniform(BackendSpec::native_single(), 1).with_max_batch(32),
+    )
     .unwrap();
-    let sharded = Service::start(ServiceConfig {
-        backend: BackendSpec::native(),
-        shards: 4,
-        max_batch: 32,
-    })
+    let sharded = Service::start(
+        ServiceSpec::uniform(BackendSpec::native(), 4).with_max_batch(32),
+    )
     .unwrap();
     let mut rng = Rng::new(0x54A2);
     for round in 0..12 {
         let op = PARITY_OPS[rng.below(PARITY_OPS.len())];
         let n = 100 + rng.below(20_000);
-        let planes = workload::planes_for(op, n, round);
-        let a = single.handle().call(op, planes.clone()).unwrap();
-        let b = sharded.handle().call(op, planes).unwrap();
+        let planes = workload::planes_for(op.name(), n, round);
+        let a = single
+            .handle()
+            .dispatch(Plan::new(op, planes.clone()).unwrap())
+            .unwrap()
+            .wait()
+            .unwrap();
+        let b = sharded
+            .handle()
+            .dispatch(Plan::new(op, planes).unwrap())
+            .unwrap()
+            .wait()
+            .unwrap();
         for (pa, pb) in a.iter().zip(&b) {
             for i in 0..n {
                 assert_eq!(

@@ -1,7 +1,10 @@
-//! Integration: the coordinator service end-to-end over the XLA backend.
+//! Integration: the coordinator service end-to-end — heterogeneous
+//! native+gpusim shard sets with routing policies (always runnable),
+//! plus the XLA backend paths when artifacts exist.
 
-use ffgpu::backend::BackendSpec;
-use ffgpu::coordinator::{Service, ServiceConfig};
+use ffgpu::backend::{BackendSpec, Op};
+use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::routing::OpAffinity;
 use ffgpu::ff::FF32;
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -22,12 +25,16 @@ fn xla_spec(dir: PathBuf) -> BackendSpec {
 }
 
 fn xla_service(dir: PathBuf) -> Service {
-    Service::start(ServiceConfig {
-        backend: xla_spec(dir),
-        shards: 1,
-        max_batch: 32,
-    })
-    .expect("service start")
+    Service::start(ServiceSpec::uniform(xla_spec(dir), 1).with_max_batch(32))
+        .expect("service start")
+}
+
+fn call(svc: &Service, op: Op, planes: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    svc.handle()
+        .dispatch(Plan::new(op, planes).expect("plan"))
+        .expect("dispatch")
+        .wait()
+        .expect("reply")
 }
 
 /// Native reference for one request.
@@ -41,15 +48,128 @@ fn expect_add22(planes: &[Vec<f32>]) -> Vec<(f32, f32)> {
         .collect()
 }
 
+/// Satellite: a mixed native+gpusim shard set must agree bit-for-bit
+/// on the EFT parity ops, and per-shard metrics must attribute every
+/// request to the shard the routing policy picked.
+#[test]
+fn heterogeneous_shard_set_bit_parity_and_attribution() {
+    let svc = Service::start(
+        ServiceSpec::heterogeneous(vec![
+            BackendSpec::native_single(),
+            BackendSpec::native_single(),
+            BackendSpec::gpusim_ieee(),
+        ])
+        .with_routing(Routing::OpAffinity),
+    )
+    .unwrap();
+    assert_eq!(svc.shard_labels(), vec!["native", "native", "gpusim"]);
+    assert_eq!(svc.routing(), "op-affinity");
+
+    let parity_ops = [Op::Add12, Op::Mul12, Op::Add22, Op::Mul22, Op::Mad22];
+    let per_op = 4usize;
+    let h = svc.handle();
+    let mut reference = ffgpu::backend::NativeBackend::new(1 << 20, 1);
+    for op in parity_ops {
+        for round in 0..per_op {
+            let n = 100 + 37 * round;
+            let planes = workload::planes_for(op.name(), n, (op.index() * 10 + round) as u64);
+            // typed dispatch, and the ticket reports the policy's pick
+            let ticket = h.dispatch(Plan::new(op, planes.clone()).unwrap()).unwrap();
+            assert_eq!(ticket.shard(), OpAffinity::home(op, 3), "{op}");
+            let got = ticket.wait().unwrap();
+            // bit-parity with the single-threaded native reference,
+            // whichever substrate served it
+            let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+            let mut want = vec![vec![0.0f32; n]; op.n_out()];
+            use ffgpu::backend::KernelBackend;
+            reference.execute(op, &refs, &mut want).unwrap();
+            for (pg, pw) in got.iter().zip(&want) {
+                for i in 0..n {
+                    assert_eq!(
+                        pg[i].to_bits(),
+                        pw[i].to_bits(),
+                        "op={op} round={round} lane={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    // attribution: each op's requests landed exactly on its home shard
+    let per_shard = svc.shard_metrics();
+    let mut expected = vec![0u64; 3];
+    for op in parity_ops {
+        expected[OpAffinity::home(op, 3)] += per_op as u64;
+    }
+    let got: Vec<u64> = per_shard.iter().map(|s| s.requests).collect();
+    assert_eq!(got, expected, "per-shard request attribution");
+    // the gpusim canary (shard 2) really served work
+    assert!(per_shard[2].requests > 0, "canary shard idle");
+    assert!(per_shard[2].elements > 0);
+    assert_eq!(svc.metrics().errors, 0);
+}
+
+#[test]
+fn queue_depth_routing_serves_heterogeneous_set() {
+    // least-loaded routing over a native + gpusim pair: everything
+    // must still answer correctly regardless of placement
+    let svc = Service::start(
+        ServiceSpec::heterogeneous(vec![
+            BackendSpec::native_single(),
+            BackendSpec::gpusim_ieee(),
+        ])
+        .with_routing(Routing::QueueDepth),
+    )
+    .unwrap();
+    let h = svc.handle();
+    let mut tickets = Vec::new();
+    let mut wants = Vec::new();
+    for k in 0..12u64 {
+        let planes = workload::planes_for("add22", 300, k);
+        wants.push(expect_add22(&planes));
+        tickets.push(h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap());
+    }
+    for (t, want) in tickets.into_iter().zip(wants) {
+        assert!(t.shard() < 2);
+        let out = t.wait().unwrap();
+        for (i, (hi, lo)) in want.iter().enumerate() {
+            assert_eq!(
+                (out[0][i].to_bits(), out[1][i].to_bits()),
+                (hi.to_bits(), lo.to_bits()),
+                "lane {i}"
+            );
+        }
+    }
+    assert_eq!(h.queue_depths(), vec![0, 0]);
+    let total: u64 = svc.shard_metrics().iter().map(|s| s.requests).sum();
+    assert_eq!(total, 12);
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_call_shim_still_serves() {
+    // the seed's stringly-typed surface, now a shim over Op/Plan/Ticket
+    use ffgpu::coordinator::ServiceConfig;
+    let svc = Service::start(ServiceConfig::default()).unwrap();
+    let h = svc.handle();
+    let planes = workload::planes_for("add22", 500, 0xCA11);
+    let want = expect_add22(&planes);
+    let out = h.call("add22", planes).unwrap();
+    for (i, (hi, lo)) in want.iter().enumerate() {
+        assert_eq!((out[0][i], out[1][i]), (*hi, *lo), "lane {i}");
+    }
+    let rx = h.submit("add", vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+    assert_eq!(rx.recv().unwrap().unwrap()[0], vec![4.0, 6.0]);
+}
+
 #[test]
 fn odd_sizes_are_padded_and_correct() {
     let Some(dir) = artifacts_dir() else { return };
     let svc = xla_service(dir);
-    let h = svc.handle();
     // sizes that don't match any artifact: padding and windowing paths
     for n in [1usize, 7, 100, 4095, 4097, 10_000] {
         let planes = workload::planes_for("add22", n, n as u64);
-        let out = h.call("add22", planes.clone()).unwrap();
+        let out = call(&svc, Op::Add22, planes.clone());
         assert_eq!(out[0].len(), n);
         let want = expect_add22(&planes);
         for i in 0..n {
@@ -68,11 +188,10 @@ fn odd_sizes_are_padded_and_correct() {
 fn oversize_requests_split_across_launches() {
     let Some(dir) = artifacts_dir() else { return };
     let svc = xla_service(dir);
-    let h = svc.handle();
     // bigger than the largest artifact (1048576): forces multi-launch
     let n = 1_200_000;
     let planes = workload::planes_for("add", n, 99);
-    let out = h.call("add", planes.clone()).unwrap();
+    let out = call(&svc, Op::Add, planes.clone());
     for i in (0..n).step_by(10_007) {
         assert_eq!(out[0][i], planes[0][i] + planes[1][i], "lane {i}");
     }
@@ -89,18 +208,20 @@ fn mixed_ops_from_concurrent_clients() {
         let h = svc.handle();
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(t);
-            let ops = ["add", "mul12", "add22", "mul22"];
+            let ops = [Op::Add, Op::Mul12, Op::Add22, Op::Mul22];
             for round in 0..10 {
                 let op = ops[(t as usize + round) % ops.len()];
                 let n = 500 + rng.below(5000);
-                let planes = workload::planes_for(op, n, rng.next_u64());
-                let out = h.call(op, planes.clone()).unwrap();
+                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                let out = h
+                    .dispatch(Plan::new(op, planes.clone()).unwrap())
+                    .unwrap()
+                    .wait()
+                    .unwrap();
                 // spot check against native
-                let (_, n_out) =
-                    ffgpu::coordinator::batcher::op_arity(op).unwrap();
                 let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
-                let mut native = vec![vec![0.0f32; n]; n_out];
-                ffgpu::ff::vector::dispatch(op, &refs, &mut native).unwrap();
+                let mut native = vec![vec![0.0f32; n]; op.n_out()];
+                ffgpu::ff::vector::dispatch(op.name(), &refs, &mut native).unwrap();
                 for i in (0..n).step_by(131) {
                     assert_eq!(out[0][i].to_bits(), native[0][i].to_bits(),
                                "op={op} n={n} lane={i}");
@@ -119,12 +240,8 @@ fn mixed_ops_from_concurrent_clients() {
 #[test]
 fn batching_coalesces_same_op_requests() {
     let Some(dir) = artifacts_dir() else { return };
-    let svc = Service::start(ServiceConfig {
-        backend: xla_spec(dir),
-        shards: 1,
-        max_batch: 64,
-    })
-    .unwrap();
+    let svc = Service::start(ServiceSpec::uniform(xla_spec(dir), 1).with_max_batch(64))
+        .unwrap();
     // submit many small async requests before the device thread drains
     let h = svc.handle();
     let mut pending = Vec::new();
@@ -132,10 +249,10 @@ fn batching_coalesces_same_op_requests() {
     for k in 0..40 {
         let planes = workload::planes_for("add22", 50 + k, k as u64);
         wants.push(expect_add22(&planes));
-        pending.push(h.submit("add22", planes).unwrap());
+        pending.push(h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap());
     }
-    for (rx, want) in pending.into_iter().zip(wants) {
-        let out = rx.recv().unwrap().unwrap();
+    for (ticket, want) in pending.into_iter().zip(wants) {
+        let out = ticket.wait().unwrap();
         for (i, (h_, l_)) in want.iter().enumerate() {
             assert_eq!((out[0][i], out[1][i]), (*h_, *l_), "lane {i}");
         }
@@ -152,11 +269,11 @@ fn batching_coalesces_same_op_requests() {
 fn cpu_and_xla_backends_agree() {
     let Some(dir) = artifacts_dir() else { return };
     let xla = xla_service(dir);
-    let cpu = Service::start(ServiceConfig::default()).unwrap();
-    for op in ["add12", "mul12", "add22", "mul22", "div22"] {
-        let planes = workload::planes_for(op, 3000, 0xE44E);
-        let a = xla.handle().call(op, planes.clone()).unwrap();
-        let b = cpu.handle().call(op, planes).unwrap();
+    let cpu = Service::start(ServiceSpec::default()).unwrap();
+    for op in [Op::Add12, Op::Mul12, Op::Add22, Op::Mul22, Op::Div22] {
+        let planes = workload::planes_for(op.name(), 3000, 0xE44E);
+        let a = call(&xla, op, planes.clone());
+        let b = call(&cpu, op, planes);
         for (pa, pb) in a.iter().zip(&b) {
             for i in 0..pa.len() {
                 assert_eq!(pa[i].to_bits(), pb[i].to_bits(), "op={op} lane={i}");
