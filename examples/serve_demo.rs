@@ -8,15 +8,18 @@
 //! FFGPU_SHARD_SPEC=native*2,gpusim:nv35 FFGPU_ROUTING=op-affinity \
 //!     cargo run --release --example serve_demo
 //! FFGPU_ROUTING=queue-depth cargo run --release --example serve_demo
+//! FFGPU_SHARD_SPEC=native*2,gpusim FFGPU_ROUTING=measured \
+//!     cargo run --release --example serve_demo              # telemetry-driven
+//! FFGPU_DEADLINE_MS=5 cargo run --release --example serve_demo
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! ```
 
-use ffgpu::backend::{BackendSpec, Op};
+use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn main() {
     let artifacts = PathBuf::from(
@@ -26,6 +29,11 @@ fn main() {
         &std::env::var("FFGPU_ROUTING").unwrap_or_else(|_| "round-robin".into()),
     )
     .expect("routing policy");
+    // FFGPU_DEADLINE_MS arms every ticket; misses are counted, not fatal
+    let deadline_ms: u64 = std::env::var("FFGPU_DEADLINE_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
     // FFGPU_SHARD_SPEC gives every shard its own backend; otherwise a
     // uniform set from FFGPU_BACKEND/FFGPU_SHARDS (xla auto-detected)
     let explicit_backend = std::env::var("FFGPU_BACKEND").ok();
@@ -82,6 +90,7 @@ fn main() {
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(c);
             let mut lat = Vec::new();
+            let mut missed = 0u64;
             for round in 0..40 {
                 let op = ops[(c as usize + round) % ops.len()];
                 let n = 256 + rng.below(top);
@@ -90,17 +99,33 @@ fn main() {
                 // timer spans dispatch -> reply only, so the printed
                 // percentiles are honest client latency
                 let t = Instant::now();
-                let ticket = h.dispatch(plan).expect("dispatch");
-                let out = ticket.wait().expect("reply");
-                lat.push(t.elapsed().as_secs_f64());
-                assert_eq!(out[0].len(), n);
+                let mut ticket = h.dispatch(plan).expect("dispatch");
+                if deadline_ms > 0 {
+                    ticket = ticket.deadline(Duration::from_millis(deadline_ms));
+                }
+                match ticket.wait() {
+                    Ok(out) => {
+                        lat.push(t.elapsed().as_secs_f64());
+                        assert_eq!(out[0].len(), n);
+                    }
+                    Err(ServiceError::DeadlineExceeded) => missed += 1,
+                    Err(e) => panic!("reply: {e}"),
+                }
             }
-            lat
+            (lat, missed)
         }));
     }
     let mut all_lat: Vec<f64> = Vec::new();
+    let mut missed = 0u64;
     for j in joins {
-        all_lat.extend(j.join().unwrap());
+        let (lat, m) = j.join().unwrap();
+        all_lat.extend(lat);
+        missed += m;
+    }
+    if all_lat.is_empty() {
+        // every ticket missed its deadline (tiny FFGPU_DEADLINE_MS):
+        // still report cleanly instead of indexing into an empty vec
+        all_lat.push(0.0);
     }
     let wall = t0.elapsed().as_secs_f64();
     all_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -115,14 +140,23 @@ fn main() {
              m.padding_fraction() * 100.0);
     println!("client latency: p50={:.2}ms  p95={:.2}ms  p99={:.2}ms",
              pct(0.50) * 1e3, pct(0.95) * 1e3, pct(0.99) * 1e3);
-    println!("errors: {}", m.errors);
+    println!("errors: {}  deadline misses: {missed} (shard-side skipped={} cancelled={})",
+             m.errors, m.expired, m.cancelled);
     for (i, (s, label)) in svc
         .shard_metrics()
         .iter()
         .zip(svc.shard_labels())
         .enumerate()
     {
+        let rates: Vec<String> = ops
+            .iter()
+            .map(|&op| match svc.measured_rate(i, op) {
+                Some(r) => format!("{op}={r:.1}"),
+                None => format!("{op}=cold"),
+            })
+            .collect();
         println!("shard {i} [{label}]: requests={} batches={} elements={} mean lat={:.2}ms",
                  s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
+        println!("  measured Melem/s: {}", rates.join("  "));
     }
 }

@@ -33,6 +33,13 @@ pub enum ServiceError {
     /// The operator is in the catalogue but this backend cannot serve it
     /// (e.g. no compiled artifact, no lowered program).
     Unsupported { backend: &'static str, op: Op },
+    /// The request was cancelled ([`crate::coordinator::Ticket::cancel`])
+    /// before a shard executed it.
+    Cancelled,
+    /// The request's deadline ([`crate::coordinator::Ticket::deadline`])
+    /// passed before a reply arrived; the shard skips expired requests
+    /// instead of burning backend time on them.
+    DeadlineExceeded,
     /// Substrate failure: PJRT compile/execute error, stream-VM fault,
     /// worker-pool failure, missing artifacts directory, ...
     Backend(String),
@@ -60,6 +67,8 @@ impl fmt::Display for ServiceError {
             ServiceError::Unsupported { backend, op } => {
                 write!(f, "backend '{backend}' does not serve op '{op}'")
             }
+            ServiceError::Cancelled => write!(f, "request cancelled"),
+            ServiceError::DeadlineExceeded => write!(f, "deadline exceeded"),
             ServiceError::Backend(msg) => write!(f, "backend failure: {msg}"),
         }
     }
@@ -90,6 +99,8 @@ mod tests {
                 ServiceError::Unsupported { backend: "xla", op: Op::Mad22 },
                 "does not serve",
             ),
+            (ServiceError::Cancelled, "cancelled"),
+            (ServiceError::DeadlineExceeded, "deadline"),
             (ServiceError::Backend("pjrt died".into()), "pjrt died"),
         ];
         for (e, needle) in cases {

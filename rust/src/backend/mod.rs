@@ -112,7 +112,11 @@ pub trait KernelBackend {
     /// Short substrate name ("native", "gpusim", "xla").
     fn name(&self) -> &'static str;
 
-    /// The operators this backend can execute right now.
+    /// The operators this backend can execute right now. The
+    /// coordinator publishes this catalogue into the routing-visible
+    /// shard state ([`crate::coordinator::routing::ShardMeta`]) when
+    /// the shard thread builds its backend, so capability-aware
+    /// policies never park an op on a shard that cannot serve it.
     fn ops(&self) -> Vec<Op>;
 
     /// Whether `op` is servable by this backend.

@@ -179,7 +179,7 @@ mod tests {
         let planes: Vec<Vec<f32>> = (0..op.n_in())
             .map(|p| vals.iter().map(|&v| v + p as f32 * 100.0).collect())
             .collect();
-        (OpRequest { op, inputs: planes, reply: tx }, rx)
+        (OpRequest::new(op, planes, tx), rx)
     }
 
     #[test]

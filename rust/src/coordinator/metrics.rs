@@ -1,10 +1,24 @@
-//! Coordinator observability: counters + latency summary.
+//! Coordinator observability: counters + latency summary + the
+//! telemetry plane.
 //!
 //! With sharded dispatch each shard thread owns one `Metrics` (no
 //! cross-shard contention on the hot path); [`Snapshot::merged`] folds
 //! the per-shard snapshots into the service-wide view.
+//!
+//! Besides the write-only counter bag, this module owns the **measured
+//! telemetry** the routing layer reads live: [`Telemetry`] keeps one
+//! [`OpEwma`] cell per operator — an exponentially-weighted moving
+//! average of throughput (Melem/s) and group latency, written by the
+//! owning shard thread after each executed group and read lock-free
+//! (f64 bits in atomics, release-published via the sample count) by every
+//! [`crate::coordinator::routing::RoutingPolicy`] on every dispatch.
+//! The cells live inside [`crate::coordinator::routing::ShardMeta`], so
+//! a policy sees label, queue depth, capability and measured rate in
+//! one place.
 
+use crate::backend::Op;
 use crate::util::Summary;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Shared metrics, updated by the device thread, read by anyone.
@@ -21,6 +35,8 @@ struct Inner {
     elements: u64,
     padded_elements: u64,
     errors: u64,
+    cancelled: u64,
+    expired: u64,
     latency: Summary,
 }
 
@@ -33,6 +49,11 @@ pub struct Snapshot {
     pub elements: u64,
     pub padded_elements: u64,
     pub errors: u64,
+    /// Requests skipped because the client cancelled the ticket.
+    pub cancelled: u64,
+    /// Requests skipped because their deadline had already passed when
+    /// the shard reached them.
+    pub expired: u64,
     pub mean_latency_s: f64,
     pub max_latency_s: f64,
     /// Batches that contributed to the latency summary (weights the
@@ -62,6 +83,21 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// Record `n` failed requests at once — a failed group must count
+    /// one error **per request** so `errors` reconciles against
+    /// `requests`.
+    pub fn record_errors(&self, n: usize) {
+        self.inner.lock().unwrap().errors += n as u64;
+    }
+
+    pub fn record_cancelled(&self, n: usize) {
+        self.inner.lock().unwrap().cancelled += n as u64;
+    }
+
+    pub fn record_expired(&self, n: usize) {
+        self.inner.lock().unwrap().expired += n as u64;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         Snapshot {
@@ -71,6 +107,8 @@ impl Metrics {
             elements: g.elements,
             padded_elements: g.padded_elements,
             errors: g.errors,
+            cancelled: g.cancelled,
+            expired: g.expired,
             mean_latency_s: if g.latency.count > 0 { g.latency.mean() } else { 0.0 },
             max_latency_s: if g.latency.count > 0 { g.latency.max } else { 0.0 },
             latency_count: g.latency.count,
@@ -100,6 +138,8 @@ impl Snapshot {
             total.elements += s.elements;
             total.padded_elements += s.padded_elements;
             total.errors += s.errors;
+            total.cancelled += s.cancelled;
+            total.expired += s.expired;
             total.latency_count += s.latency_count;
             total.max_latency_s = total.max_latency_s.max(s.max_latency_s);
             weighted += s.mean_latency_s * s.latency_count as f64;
@@ -108,6 +148,144 @@ impl Snapshot {
             total.mean_latency_s = weighted / total.latency_count as f64;
         }
         total
+    }
+}
+
+/// EWMA smoothing factor: ~the last four groups dominate, so a shard
+/// that speeds up or bogs down is re-weighted within a handful of
+/// batches.
+const EWMA_ALPHA: f64 = 0.25;
+
+/// One lock-free EWMA cell: measured throughput (Melem/s) and group
+/// latency (seconds) for one operator on one shard.
+///
+/// Written by exactly one shard thread (after each executed group),
+/// read by every dispatching client thread; the f64s are stored as
+/// bits in atomics and release-published through the sample count —
+/// readers may see a value one sample stale, never a torn or
+/// un-initialised one.
+#[derive(Debug, Default)]
+pub struct OpEwma {
+    rate_bits: AtomicU64,
+    latency_bits: AtomicU64,
+    samples: AtomicU64,
+    /// Groups *routed into execution*, recorded before the backend
+    /// runs. Distinct from `samples` so a shard whose backend keeps
+    /// failing — or whose slow first group is still in flight — stops
+    /// looking "cold" to measured routing and cannot black-hole an
+    /// op's traffic.
+    attempts: AtomicU64,
+}
+
+impl OpEwma {
+    fn record(&self, rate: f64, latency: f64) {
+        let n = self.samples.load(Ordering::Relaxed);
+        let (r, l) = if n == 0 {
+            (rate, latency)
+        } else {
+            let prev_r = f64::from_bits(self.rate_bits.load(Ordering::Relaxed));
+            let prev_l = f64::from_bits(self.latency_bits.load(Ordering::Relaxed));
+            (
+                EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * prev_r,
+                EWMA_ALPHA * latency + (1.0 - EWMA_ALPHA) * prev_l,
+            )
+        };
+        self.rate_bits.store(r.to_bits(), Ordering::Relaxed);
+        // Release-publish via `samples`: a reader that Acquire-loads a
+        // nonzero count is guaranteed to see the bit stores above, so
+        // `Some(0.0)` can never be observed on a freshly warmed cell
+        self.latency_bits.store(l.to_bits(), Ordering::Relaxed);
+        self.samples.store(n + 1, Ordering::Release);
+    }
+
+    fn rate(&self) -> Option<f64> {
+        if self.samples.load(Ordering::Acquire) == 0 {
+            None
+        } else {
+            Some(f64::from_bits(self.rate_bits.load(Ordering::Relaxed)))
+        }
+    }
+
+    fn latency(&self) -> Option<f64> {
+        if self.samples.load(Ordering::Acquire) == 0 {
+            None
+        } else {
+            Some(f64::from_bits(self.latency_bits.load(Ordering::Relaxed)))
+        }
+    }
+
+    fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Acquire)
+    }
+
+    fn record_attempt(&self) {
+        self.attempts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn attempts(&self) -> u64 {
+        self.attempts.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-shard measured telemetry: one [`OpEwma`] per catalogue operator.
+///
+/// Lives inside [`crate::coordinator::routing::ShardMeta`]; the shard
+/// thread is the only writer, routing policies the readers.
+#[derive(Debug)]
+pub struct Telemetry {
+    cells: [OpEwma; Op::COUNT],
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Telemetry::new()
+    }
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { cells: std::array::from_fn(|_| OpEwma::default()) }
+    }
+
+    /// Record one executed group: `elements` lanes served in `seconds`.
+    /// Degenerate timings (`seconds <= 0`, e.g. a coarse clock) are
+    /// dropped rather than poisoning the EWMA with infinities.
+    pub fn record(&self, op: Op, elements: u64, seconds: f64) {
+        if seconds <= 0.0 {
+            return;
+        }
+        let rate = elements as f64 / seconds / 1e6;
+        self.cells[op.index()].record(rate, seconds);
+    }
+
+    /// Measured throughput for `op` in Melem/s; `None` while cold (no
+    /// group of `op` has executed on this shard yet).
+    pub fn rate(&self, op: Op) -> Option<f64> {
+        self.cells[op.index()].rate()
+    }
+
+    /// Measured group latency for `op` in seconds; `None` while cold.
+    pub fn latency(&self, op: Op) -> Option<f64> {
+        self.cells[op.index()].latency()
+    }
+
+    /// Groups of `op` that have fed this cell.
+    pub fn samples(&self, op: Op) -> u64 {
+        self.cells[op.index()].samples()
+    }
+
+    /// Mark a group of `op` as routed into execution (called by the
+    /// shard before the backend runs). A cell with attempts but no
+    /// samples is a shard that was tried and never succeeded (or is
+    /// mid-first-group) — measured routing skips it instead of
+    /// treating it as unexplored.
+    pub fn record_attempt(&self, op: Op) {
+        self.cells[op.index()].record_attempt();
+    }
+
+    /// Groups of `op` routed into execution on this shard (>= samples).
+    pub fn attempts(&self, op: Op) -> u64 {
+        self.cells[op.index()].attempts()
     }
 }
 
@@ -164,5 +342,79 @@ mod tests {
         // (1.0*1 + 3.0*2) / 3
         assert!((m.mean_latency_s - 7.0 / 3.0).abs() < 1e-12);
         assert_eq!(Snapshot::merged(&[]).requests, 0);
+    }
+
+    #[test]
+    fn per_request_error_and_lifecycle_counters() {
+        let m = Metrics::new();
+        // a failed 8-request group records 8 errors, not 1
+        m.record_errors(8);
+        m.record_error();
+        m.record_cancelled(2);
+        m.record_expired(3);
+        let s = m.snapshot();
+        assert_eq!(s.errors, 9);
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.expired, 3);
+        let merged = Snapshot::merged(&[s.clone(), s]);
+        assert_eq!(merged.errors, 18);
+        assert_eq!(merged.cancelled, 4);
+        assert_eq!(merged.expired, 6);
+    }
+
+    #[test]
+    fn telemetry_is_cold_until_first_sample() {
+        let t = Telemetry::new();
+        for op in Op::ALL {
+            assert_eq!(t.rate(op), None);
+            assert_eq!(t.latency(op), None);
+            assert_eq!(t.samples(op), 0);
+        }
+        t.record(Op::Mul22, 1_000_000, 0.5); // 2 Melem/s
+        assert_eq!(t.samples(Op::Mul22), 1);
+        assert!((t.rate(Op::Mul22).unwrap() - 2.0).abs() < 1e-12);
+        assert!((t.latency(Op::Mul22).unwrap() - 0.5).abs() < 1e-12);
+        // other ops stay cold
+        assert_eq!(t.rate(Op::Add22), None);
+    }
+
+    #[test]
+    fn telemetry_ewma_tracks_recent_samples() {
+        let t = Telemetry::new();
+        t.record(Op::Add22, 1_000_000, 1.0); // 1 Melem/s
+        for _ in 0..40 {
+            t.record(Op::Add22, 9_000_000, 1.0); // 9 Melem/s
+        }
+        let r = t.rate(Op::Add22).unwrap();
+        // converged towards the recent rate, clear of the first sample
+        assert!(r > 8.5 && r <= 9.0, "rate={r}");
+        assert_eq!(t.samples(Op::Add22), 41);
+    }
+
+    #[test]
+    fn attempts_track_tries_independently_of_success() {
+        let t = Telemetry::new();
+        assert_eq!(t.attempts(Op::Mul22), 0);
+        // a failing shard records the attempt but never a sample: it
+        // is no longer "cold" yet has no measured rate
+        t.record_attempt(Op::Mul22);
+        assert_eq!(t.attempts(Op::Mul22), 1);
+        assert_eq!(t.samples(Op::Mul22), 0);
+        assert_eq!(t.rate(Op::Mul22), None);
+        // the shard records every attempt pre-execute, so a success
+        // (attempt + sample) keeps attempts == executions, not 2x
+        t.record_attempt(Op::Mul22);
+        t.record(Op::Mul22, 1_000_000, 1.0);
+        assert_eq!(t.attempts(Op::Mul22), 2);
+        assert_eq!(t.samples(Op::Mul22), 1);
+    }
+
+    #[test]
+    fn telemetry_drops_degenerate_timings() {
+        let t = Telemetry::new();
+        t.record(Op::Add, 1000, 0.0);
+        t.record(Op::Add, 1000, -1.0);
+        assert_eq!(t.samples(Op::Add), 0);
+        assert_eq!(t.rate(Op::Add), None);
     }
 }

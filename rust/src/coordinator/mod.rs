@@ -12,13 +12,19 @@
 //!   [`RequestBuilder`] (shapes validated **at build time**, each
 //!   failure a specific [`crate::backend::ServiceError`] variant), and
 //!   [`Handle::dispatch`] it for a future-like [`Ticket`]
-//!   (block, poll, or bounded wait);
+//!   (block, poll, or bounded wait) with real lifecycle control —
+//!   [`Ticket::deadline`] and [`Ticket::cancel`] share an atomic
+//!   [`TicketState`] with the shard, which skips dead requests
+//!   *before* executing them;
 //! * a [`ServiceSpec`] describes the shard set **per shard** — e.g.
 //!   `[native, native, gpusim:nv35]`, two workhorses plus an
 //!   arithmetic-model canary — and a pluggable
-//!   [`routing::RoutingPolicy`] ([`routing::RoundRobin`],
-//!   [`routing::QueueDepth`], [`routing::OpAffinity`], or a custom
-//!   policy via [`Service::start_with_policy`]) places each request;
+//!   [`routing::RoutingPolicy`] routes each request over a live
+//!   [`routing::TelemetryView`] of the set (label, queue depth, per-op
+//!   capability and measured Melem/s): [`routing::RoundRobin`],
+//!   [`routing::QueueDepth`], capability-aware [`routing::OpAffinity`],
+//!   telemetry-driven [`routing::Measured`], or a custom policy via
+//!   [`Service::start_with_policy`];
 //! * N **shard threads** each own one
 //!   [`crate::backend::KernelBackend`] instance (native multicore
 //!   kernels, the gpusim stream VM, or the PJRT/XLA engine — the
@@ -31,7 +37,9 @@
 //!   inside the XLA backend, where it belongs;
 //! * [`metrics`] tracks throughput, latency, batch shapes and padding
 //!   waste per shard (so heterogeneous sets are observable shard by
-//!   shard), merged on read.
+//!   shard), merged on read — plus the **telemetry plane**: per-(shard,
+//!   op) EWMA throughput/latency cells ([`metrics::Telemetry`]) written
+//!   lock-free by the shard threads and read by measured routing.
 //!
 //! The seed's stringly-typed surface — `Handle::submit("add22", ...)`,
 //! `Handle::call`, the single-spec `ServiceConfig` — survives as thin
@@ -39,7 +47,8 @@
 //!
 //! Errors are typed end-to-end ([`crate::backend::ServiceError`]):
 //! queue closed, unknown op (parse boundary only), arity mismatch,
-//! ragged planes, empty batch, unsupported op, substrate failure.
+//! ragged planes, empty batch, unsupported op, cancelled, deadline
+//! exceeded, substrate failure.
 
 pub mod batcher;
 pub mod metrics;
@@ -49,9 +58,9 @@ pub mod routing;
 pub mod service;
 
 pub use crate::backend::Op;
-pub use plan::{Plan, RequestBuilder, Ticket};
+pub use plan::{Plan, RequestBuilder, Ticket, TicketState};
 pub use request::OpRequest;
-pub use routing::{Routing, RoutingPolicy};
+pub use routing::{Routing, RoutingPolicy, TelemetryView};
 pub use service::{Handle, Service, ServiceSpec};
 #[allow(deprecated)]
 pub use service::ServiceConfig;

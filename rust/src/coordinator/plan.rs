@@ -11,11 +11,22 @@
 //! the wait ([`Ticket::wait_timeout`]) — the seed's blocking
 //! `call(op, planes)` survives only as a deprecated shim over this
 //! path.
+//!
+//! Tickets also carry **lifecycle control**: [`Ticket::deadline`] arms
+//! an expiry and [`Ticket::cancel`] abandons the request, both backed
+//! by a [`TicketState`] shared atomically with the shard that holds the
+//! request. The shard serve loop checks that state *before* executing
+//! a group (replying [`ServiceError::Cancelled`] /
+//! [`ServiceError::DeadlineExceeded`] instead of burning backend
+//! time), and the client-side waits honour the same state — a ticket
+//! whose deadline passes resolves promptly even if its shard is
+//! saturated, and marks itself cancelled so the shard skips it later.
 
 use super::request::OpResult;
 use crate::backend::{Op, ServiceError};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A validated, ready-to-dispatch request: one operator plus its SoA
 /// input planes.
@@ -89,18 +100,87 @@ impl RequestBuilder {
     }
 }
 
+/// Shared lifecycle state of one dispatched request: a cancellation
+/// flag plus an optional deadline, visible to both the client-side
+/// [`Ticket`] and the shard thread holding the
+/// [`crate::coordinator::OpRequest`].
+///
+/// Lock-free: the deadline is stored as nanoseconds after the
+/// dispatch instant (`u64::MAX` = none), so both sides evaluate expiry
+/// against their own `Instant::now()` without coordination.
+#[derive(Debug)]
+pub struct TicketState {
+    created: Instant,
+    cancelled: AtomicBool,
+    deadline_ns: AtomicU64,
+}
+
+impl Default for TicketState {
+    fn default() -> Self {
+        TicketState::new()
+    }
+}
+
+impl TicketState {
+    const NO_DEADLINE: u64 = u64::MAX;
+
+    pub fn new() -> TicketState {
+        TicketState {
+            created: Instant::now(),
+            cancelled: AtomicBool::new(false),
+            deadline_ns: AtomicU64::new(Self::NO_DEADLINE),
+        }
+    }
+
+    /// Abandon the request: a shard that has not executed it yet will
+    /// skip it and reply [`ServiceError::Cancelled`].
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::Acquire)
+    }
+
+    /// Arm (or tighten/extend) the deadline: `d` from the dispatch
+    /// instant.
+    pub fn set_deadline(&self, d: Duration) {
+        let ns = u64::try_from(d.as_nanos()).unwrap_or(Self::NO_DEADLINE - 1);
+        self.deadline_ns.store(ns.min(Self::NO_DEADLINE - 1), Ordering::Release);
+    }
+
+    /// Whether the deadline (if armed) has passed as of `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        let dl = self.deadline_ns.load(Ordering::Acquire);
+        dl != Self::NO_DEADLINE
+            && now.saturating_duration_since(self.created).as_nanos() as u64 >= dl
+    }
+
+    /// Time left until the deadline (`None` when no deadline is armed;
+    /// zero when already expired).
+    pub fn remaining(&self) -> Option<Duration> {
+        let dl = self.deadline_ns.load(Ordering::Acquire);
+        if dl == Self::NO_DEADLINE {
+            return None;
+        }
+        Some(Duration::from_nanos(dl).saturating_sub(self.created.elapsed()))
+    }
+}
+
 /// A future-like handle on one dispatched request's reply.
 ///
 /// Produced by [`crate::coordinator::Handle::dispatch`]; resolves to an
 /// [`OpResult`]. Also records *where* the request went
 /// ([`Ticket::shard`]) — the routing policies make that placement
-/// observable, and tests/benches assert against it.
+/// observable, and tests/benches assert against it — and shares a
+/// [`TicketState`] with the shard for deadlines and cancellation.
 #[derive(Debug)]
 pub struct Ticket {
     pub(crate) rx: mpsc::Receiver<OpResult>,
     pub(crate) op: Op,
     pub(crate) shard: usize,
     pub(crate) len: usize,
+    pub(crate) state: std::sync::Arc<TicketState>,
 }
 
 impl Ticket {
@@ -124,27 +204,120 @@ impl Ticket {
         self.len == 0
     }
 
-    /// Block until the reply arrives. A shard that died before
-    /// answering surfaces as [`ServiceError::QueueClosed`].
+    /// Arm a deadline `d` from the dispatch instant (chainable:
+    /// `h.dispatch(plan)?.deadline(Duration::from_millis(1))`). Both
+    /// sides honour it: the shard skips the request once expired
+    /// (replying [`ServiceError::DeadlineExceeded`] without executing),
+    /// and the client-side waits return the same error promptly even
+    /// when the shard is saturated and never gets to reply in time.
+    pub fn deadline(self, d: Duration) -> Ticket {
+        self.state.set_deadline(d);
+        self
+    }
+
+    /// Abandon the request. A shard that has not executed it yet skips
+    /// it; subsequent waits on this ticket resolve to
+    /// [`ServiceError::Cancelled`].
+    pub fn cancel(&self) {
+        self.state.cancel();
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.state.is_cancelled()
+    }
+
+    /// The verdict for a ticket whose shared state is already marked
+    /// cancelled — either by an explicit [`Ticket::cancel`]
+    /// (`Cancelled`) or by a previously issued deadline miss
+    /// (`DeadlineExceeded`, recognisable because the deadline has
+    /// passed). `None` while the request is still live. The verdict is
+    /// **sticky**: once a miss was reported, a reply the shard sent
+    /// late must not double-resolve the ticket as `Ok` on a later
+    /// poll, so callers return this without draining the channel.
+    fn sticky_verdict(&self) -> Option<ServiceError> {
+        if !self.state.is_cancelled() {
+            return None;
+        }
+        Some(if self.state.expired(Instant::now()) {
+            ServiceError::DeadlineExceeded
+        } else {
+            ServiceError::Cancelled
+        })
+    }
+
+    /// Block until the reply arrives, the deadline (if armed) passes,
+    /// or the ticket was cancelled. A shard that died before answering
+    /// surfaces as [`ServiceError::QueueClosed`]. Explicit cancellation
+    /// resolves `Cancelled` deterministically; with a deadline, a reply
+    /// that arrived *in time* still wins over a late wait (the channel
+    /// is drained before the expiry verdict), and an expired wait marks
+    /// the request cancelled so the shard never executes it late.
     pub fn wait(self) -> OpResult {
-        self.rx.recv().map_err(|_| ServiceError::QueueClosed)?
+        if let Some(e) = self.sticky_verdict() {
+            return Err(e);
+        }
+        match self.state.remaining() {
+            None => self.rx.recv().map_err(|_| ServiceError::QueueClosed)?,
+            // an already-expired deadline gives a zero timeout, which
+            // still drains an in-time reply waiting in the channel
+            Some(rem) => match self.rx.recv_timeout(rem) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.state.cancel();
+                    Err(ServiceError::DeadlineExceeded)
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(ServiceError::QueueClosed)
+                }
+            },
+        }
     }
 
     /// Non-blocking poll: `None` while the reply is still pending.
+    /// Explicit cancellation resolves `Cancelled`; otherwise an
+    /// arrived reply wins, then deadline expiry.
     pub fn try_wait(&self) -> Option<OpResult> {
+        if let Some(e) = self.sticky_verdict() {
+            return Some(Err(e));
+        }
         match self.rx.try_recv() {
             Ok(r) => Some(r),
-            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Empty) => {
+                if self.state.expired(Instant::now()) {
+                    self.state.cancel();
+                    Some(Err(ServiceError::DeadlineExceeded))
+                } else {
+                    None
+                }
+            }
             Err(mpsc::TryRecvError::Disconnected) => Some(Err(ServiceError::QueueClosed)),
         }
     }
 
-    /// Block for at most `timeout`; `None` on timeout (the ticket stays
-    /// usable — wait again or poll).
+    /// Block for at most `timeout` (clamped to the armed deadline);
+    /// `None` on caller timeout (the ticket stays usable — wait again
+    /// or poll), `Some(Err(DeadlineExceeded))` once the deadline
+    /// passes with no reply in the channel.
     pub fn wait_timeout(&self, timeout: Duration) -> Option<OpResult> {
-        match self.rx.recv_timeout(timeout) {
+        if let Some(e) = self.sticky_verdict() {
+            return Some(Err(e));
+        }
+        let effective = match self.state.remaining() {
+            Some(rem) => timeout.min(rem),
+            None => timeout,
+        };
+        // a zero effective timeout (expired deadline) still drains an
+        // in-time reply before the expiry verdict below
+        match self.rx.recv_timeout(effective) {
             Ok(r) => Some(r),
-            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if self.state.expired(Instant::now()) {
+                    self.state.cancel();
+                    Some(Err(ServiceError::DeadlineExceeded))
+                } else {
+                    None
+                }
+            }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 Some(Err(ServiceError::QueueClosed))
             }
@@ -198,10 +371,20 @@ mod tests {
         assert!(matches!(short, Err(ServiceError::Arity { want: 3, got: 1, .. })));
     }
 
+    fn ticket(rx: mpsc::Receiver<OpResult>, shard: usize, len: usize) -> Ticket {
+        Ticket {
+            rx,
+            op: Op::Add,
+            shard,
+            len,
+            state: std::sync::Arc::new(TicketState::new()),
+        }
+    }
+
     #[test]
     fn ticket_resolves_and_polls() {
         let (tx, rx) = mpsc::channel();
-        let t = Ticket { rx, op: Op::Add, shard: 3, len: 2 };
+        let t = ticket(rx, 3, 2);
         assert_eq!(t.op(), Op::Add);
         assert_eq!(t.shard(), 3);
         assert_eq!(t.len(), 2);
@@ -216,8 +399,125 @@ mod tests {
     fn dropped_reply_channel_is_queue_closed() {
         let (tx, rx) = mpsc::channel::<OpResult>();
         drop(tx);
-        let t = Ticket { rx, op: Op::Add, shard: 0, len: 1 };
+        let t = ticket(rx, 0, 1);
         assert_eq!(t.try_wait(), Some(Err(ServiceError::QueueClosed)));
         assert_eq!(t.wait(), Err(ServiceError::QueueClosed));
+    }
+
+    #[test]
+    fn cancelled_ticket_resolves_cancelled() {
+        let (_tx, rx) = mpsc::channel::<OpResult>();
+        let t = ticket(rx, 0, 1);
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled());
+        assert_eq!(t.try_wait(), Some(Err(ServiceError::Cancelled)));
+        assert_eq!(t.wait_timeout(Duration::from_millis(1)),
+                   Some(Err(ServiceError::Cancelled)));
+        assert_eq!(t.wait(), Err(ServiceError::Cancelled));
+    }
+
+    #[test]
+    fn expired_deadline_resolves_deadline_exceeded() {
+        let (_tx, rx) = mpsc::channel::<OpResult>();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(2));
+        let t0 = std::time::Instant::now();
+        assert_eq!(t.wait(), Err(ServiceError::DeadlineExceeded));
+        // resolved by the deadline, not a hung recv
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    #[test]
+    fn reply_before_deadline_wins() {
+        let (tx, rx) = mpsc::channel();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_secs(30));
+        tx.send(Ok(vec![vec![7.0]])).unwrap();
+        assert_eq!(t.wait().unwrap()[0], vec![7.0]);
+    }
+
+    #[test]
+    fn in_time_reply_wins_over_late_wait() {
+        // the reply arrived within the deadline; a client that only
+        // gets around to waiting after the deadline passed must still
+        // receive it, not a spurious DeadlineExceeded
+        let (tx, rx) = mpsc::channel();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(5));
+        tx.send(Ok(vec![vec![1.5]])).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(t.wait().unwrap()[0], vec![1.5]);
+        // same through the polling APIs
+        let (tx, rx) = mpsc::channel();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(5));
+        tx.send(Ok(vec![vec![2.5]])).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(t.try_wait().unwrap().unwrap()[0], vec![2.5]);
+        let (tx, rx) = mpsc::channel();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(5));
+        tx.send(Ok(vec![vec![3.5]])).unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(
+            t.wait_timeout(Duration::from_secs(1)).unwrap().unwrap()[0],
+            vec![3.5]
+        );
+    }
+
+    #[test]
+    fn wait_timeout_reports_expiry_and_marks_cancelled() {
+        let (_tx, rx) = mpsc::channel::<OpResult>();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(t.wait_timeout(Duration::from_secs(10)),
+                   Some(Err(ServiceError::DeadlineExceeded)));
+        // the expiry marked the shared state cancelled so the shard
+        // will skip the request
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn expired_verdict_is_stable_across_polls() {
+        let (_tx, rx) = mpsc::channel::<OpResult>();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        assert_eq!(t.try_wait(), Some(Err(ServiceError::DeadlineExceeded)));
+        // expiry marks the shared state cancelled (so the shard skips
+        // the request), but the client-facing verdict must not flip to
+        // Cancelled on later polls
+        assert!(t.is_cancelled());
+        assert_eq!(t.try_wait(), Some(Err(ServiceError::DeadlineExceeded)));
+        assert_eq!(
+            t.wait_timeout(Duration::from_millis(1)),
+            Some(Err(ServiceError::DeadlineExceeded))
+        );
+        assert_eq!(t.wait(), Err(ServiceError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn deadline_verdict_is_sticky_against_late_replies() {
+        let (tx, rx) = mpsc::channel();
+        let t = ticket(rx, 0, 1).deadline(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(3));
+        // the miss is reported once...
+        assert_eq!(t.try_wait(), Some(Err(ServiceError::DeadlineExceeded)));
+        // ...then a late reply lands; the ticket must not double-resolve
+        tx.send(Ok(vec![vec![9.0]])).unwrap();
+        assert_eq!(t.try_wait(), Some(Err(ServiceError::DeadlineExceeded)));
+        assert_eq!(
+            t.wait_timeout(Duration::from_millis(1)),
+            Some(Err(ServiceError::DeadlineExceeded))
+        );
+        assert_eq!(t.wait(), Err(ServiceError::DeadlineExceeded));
+    }
+
+    #[test]
+    fn ticket_state_expiry_is_shared_view() {
+        let s = TicketState::new();
+        assert!(!s.expired(std::time::Instant::now()));
+        assert_eq!(s.remaining(), None);
+        s.set_deadline(Duration::from_secs(1000));
+        assert!(!s.expired(std::time::Instant::now()));
+        assert!(s.remaining().unwrap() > Duration::from_secs(900));
+        s.set_deadline(Duration::ZERO);
+        assert!(s.expired(std::time::Instant::now()));
+        assert_eq!(s.remaining().unwrap(), Duration::ZERO);
     }
 }

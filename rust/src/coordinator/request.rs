@@ -7,8 +7,9 @@
 //! [`crate::coordinator::plan::Plan`], and the backends' own
 //! `execute` validation.
 
+use super::plan::TicketState;
 use crate::backend::{Op, ServiceError};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 
 /// Result planes (one `Vec<f32>` per output plane) or a typed failure.
 pub type OpResult = Result<Vec<Vec<f32>>, ServiceError>;
@@ -21,9 +22,19 @@ pub struct OpRequest {
     pub inputs: Vec<Vec<f32>>,
     /// One-shot reply channel.
     pub reply: mpsc::Sender<OpResult>,
+    /// Lifecycle state shared with the client's
+    /// [`crate::coordinator::Ticket`]: the shard serve loop checks it
+    /// before executing and skips cancelled/expired requests.
+    pub ctrl: Arc<TicketState>,
 }
 
 impl OpRequest {
+    /// Build a request with a fresh (un-cancelled, deadline-free)
+    /// lifecycle state.
+    pub fn new(op: Op, inputs: Vec<Vec<f32>>, reply: mpsc::Sender<OpResult>) -> OpRequest {
+        OpRequest { op, inputs, reply, ctrl: Arc::new(TicketState::new()) }
+    }
+
     /// Elements per plane.
     pub fn len(&self) -> usize {
         self.inputs.first().map_or(0, Vec::len)
@@ -49,7 +60,7 @@ mod tests {
 
     fn req(op: Op, planes: usize, n: usize) -> (OpRequest, mpsc::Receiver<OpResult>) {
         let (tx, rx) = mpsc::channel();
-        (OpRequest { op, inputs: vec![vec![1.0; n]; planes], reply: tx }, rx)
+        (OpRequest::new(op, vec![vec![1.0; n]; planes], tx), rx)
     }
 
     #[test]
@@ -63,22 +74,18 @@ mod tests {
     #[test]
     fn rejects_ragged_planes_with_the_specific_variant() {
         let (tx, _rx) = mpsc::channel();
-        let r = OpRequest {
-            op: Op::Add,
-            inputs: vec![vec![1.0; 4], vec![1.0; 5]],
-            reply: tx,
-        };
+        let r = OpRequest::new(Op::Add, vec![vec![1.0; 4], vec![1.0; 5]], tx);
         assert_eq!(
             r.validate().unwrap_err(),
             ServiceError::RaggedPlanes { op: Op::Add, plane: 1, want: 4, got: 5 }
         );
         // the report names the first offending plane, not just "ragged"
         let (tx, _rx) = mpsc::channel();
-        let r = OpRequest {
-            op: Op::Add22,
-            inputs: vec![vec![1.0; 3], vec![1.0; 3], vec![1.0; 2], vec![1.0; 3]],
-            reply: tx,
-        };
+        let r = OpRequest::new(
+            Op::Add22,
+            vec![vec![1.0; 3], vec![1.0; 3], vec![1.0; 2], vec![1.0; 3]],
+            tx,
+        );
         assert!(matches!(
             r.validate(),
             Err(ServiceError::RaggedPlanes { plane: 2, want: 3, got: 2, .. })
@@ -97,11 +104,11 @@ mod tests {
     fn arity_is_checked_before_raggedness() {
         // 3 planes for a 4-plane op, one of them ragged: arity wins
         let (tx, _rx) = mpsc::channel();
-        let r = OpRequest {
-            op: Op::Add22,
-            inputs: vec![vec![1.0; 4], vec![1.0; 9], vec![1.0; 4]],
-            reply: tx,
-        };
+        let r = OpRequest::new(
+            Op::Add22,
+            vec![vec![1.0; 4], vec![1.0; 9], vec![1.0; 4]],
+            tx,
+        );
         assert!(matches!(r.validate(), Err(ServiceError::Arity { .. })));
     }
 }

@@ -3,37 +3,61 @@
 //! The seed hard-coded round-robin submission inside `Handle`. With
 //! per-shard [`crate::backend::BackendSpec`]s (e.g. 6 native shards +
 //! one `gpusim:nv35` canary) placement becomes a real decision, so it
-//! is now a trait: a [`RoutingPolicy`] maps `(op, batch length)` plus
-//! the live per-shard state ([`ShardMeta`]: substrate label, queue
-//! depth) to a shard index. Three implementations ship, selectable via
-//! [`Routing`] from config or `--routing` on the CLI:
+//! is a trait: a [`RoutingPolicy`] maps `(op, batch length)` plus a
+//! [`TelemetryView`] of the live shard set — substrate label, queue
+//! depth, per-op capability and *measured* throughput/latency EWMAs
+//! ([`Telemetry`]) — to a shard index. Four implementations ship,
+//! selectable via [`Routing`] from config or `--routing` on the CLI:
 //!
 //! * [`RoundRobin`] — the seed's behaviour: even spray, no state read;
 //! * [`QueueDepth`] — least-loaded: picks the shard with the fewest
 //!   in-flight requests (rotating tie-break), so a slow substrate —
 //!   the soft-float stream VM, say — naturally receives less work;
 //! * [`OpAffinity`] — pins each operator to one home shard
-//!   (`op.index() % shards`), keeping per-op state (compiled-artifact
-//!   caches, staging buffers sized for that op's arity) hot.
+//!   (`op.index() % shards`), walking forward past shards whose backend
+//!   does not serve the op, keeping per-op state (compiled-artifact
+//!   caches, staging buffers sized for that op's arity) hot;
+//! * [`Measured`] — telemetry-driven: only shards that serve the op
+//!   natively are candidates, cold candidates are explored least-loaded
+//!   first, and once every candidate has a measured rate the pick
+//!   minimises estimated completion time `(depth+1) · len / Melem/s` —
+//!   a slow canary keeps a trickle of probes at most.
 //!
 //! Custom policies plug in through
 //! [`crate::coordinator::Service::start_with_policy`].
 
+use super::metrics::Telemetry;
 use crate::backend::{Op, ServiceError};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
 use std::sync::Arc;
 
-/// Live, routing-visible state of one shard: which substrate it runs
-/// and how many requests it currently has in flight.
+/// Every-op capability mask (`Op::COUNT <= 32`).
+const ALL_OPS_MASK: u32 = (1 << Op::COUNT) - 1;
+
+/// Live, routing-visible state of one shard: which substrate it runs,
+/// how many requests it currently has in flight, which operators its
+/// backend serves, and the measured per-op telemetry.
 #[derive(Debug)]
 pub struct ShardMeta {
     label: &'static str,
     depth: AtomicUsize,
+    /// Capability bitmask over `Op::index()`; seeded all-ones and
+    /// replaced with the backend's real catalogue
+    /// ([`crate::backend::KernelBackend::ops`]) when the shard thread
+    /// builds its backend — before `Service::start` returns, so no
+    /// routable request ever sees the placeholder.
+    supports: AtomicU32,
+    telemetry: Telemetry,
 }
 
 impl ShardMeta {
     pub(crate) fn new(label: &'static str) -> ShardMeta {
-        ShardMeta { label, depth: AtomicUsize::new(0) }
+        ShardMeta {
+            label,
+            depth: AtomicUsize::new(0),
+            supports: AtomicU32::new(ALL_OPS_MASK),
+            telemetry: Telemetry::new(),
+        }
     }
 
     /// Substrate label of the backend this shard owns ("native",
@@ -47,12 +71,91 @@ impl ShardMeta {
         self.depth.load(Ordering::Relaxed)
     }
 
+    /// Whether this shard's backend serves `op`.
+    pub fn supports(&self, op: Op) -> bool {
+        self.supports.load(Ordering::Relaxed) & (1 << op.index()) != 0
+    }
+
+    /// The operators this shard's backend serves, in catalogue order.
+    pub fn supported_ops(&self) -> Vec<Op> {
+        Op::ALL.into_iter().filter(|&op| self.supports(op)).collect()
+    }
+
+    /// Measured per-op telemetry of this shard (EWMA throughput and
+    /// group latency, written by the shard thread after each group).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    pub(crate) fn set_supports(&self, ops: &[Op]) {
+        let mask = ops.iter().fold(0u32, |m, op| m | (1 << op.index()));
+        self.supports.store(mask, Ordering::Relaxed);
+    }
+
     pub(crate) fn enter(&self) {
         self.depth.fetch_add(1, Ordering::Relaxed);
     }
 
     pub(crate) fn leave(&self, n: usize) {
         self.depth.fetch_sub(n, Ordering::Relaxed);
+    }
+}
+
+/// What a routing policy routes over: a read-only, lock-free view of
+/// the whole shard set — label, queue depth, per-op capability and
+/// measured rate/latency per shard.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryView<'a> {
+    shards: &'a [ShardMeta],
+}
+
+impl<'a> TelemetryView<'a> {
+    pub fn new(shards: &'a [ShardMeta]) -> TelemetryView<'a> {
+        TelemetryView { shards }
+    }
+
+    /// Number of shards in the set (never 0 for a running service).
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    pub fn label(&self, shard: usize) -> &'static str {
+        self.shards[shard].label()
+    }
+
+    pub fn queue_depth(&self, shard: usize) -> usize {
+        self.shards[shard].queue_depth()
+    }
+
+    pub fn supports(&self, shard: usize, op: Op) -> bool {
+        self.shards[shard].supports(op)
+    }
+
+    /// Measured throughput of `op` on `shard` (Melem/s), `None` while
+    /// that (shard, op) cell is cold.
+    pub fn measured_rate(&self, shard: usize, op: Op) -> Option<f64> {
+        self.shards[shard].telemetry().rate(op)
+    }
+
+    /// Measured group latency of `op` on `shard` (seconds), `None`
+    /// while cold.
+    pub fn measured_latency(&self, shard: usize, op: Op) -> Option<f64> {
+        self.shards[shard].telemetry().latency(op)
+    }
+
+    /// Executed groups of `op` on `shard` so far.
+    pub fn samples(&self, shard: usize, op: Op) -> u64 {
+        self.shards[shard].telemetry().samples(op)
+    }
+
+    /// Groups of `op` routed into execution on `shard` (>= samples;
+    /// what measured routing's cold-exploration checks).
+    pub fn attempts(&self, shard: usize, op: Op) -> u64 {
+        self.shards[shard].telemetry().attempts(op)
     }
 }
 
@@ -63,9 +166,9 @@ pub trait RoutingPolicy: Send + Sync {
     /// Short policy name for logs/metrics ("round-robin", ...).
     fn name(&self) -> &'static str;
 
-    /// Pick a shard index in `0..shards.len()` for a `len`-element
-    /// batch of `op`. `shards` is never empty.
-    fn route(&self, op: Op, len: usize, shards: &[ShardMeta]) -> usize;
+    /// Pick a shard index in `0..view.len()` for a `len`-element batch
+    /// of `op`. The view is never empty.
+    fn route(&self, op: Op, len: usize, view: &TelemetryView) -> usize;
 }
 
 /// Even spray in submission order — the seed's behaviour.
@@ -85,8 +188,8 @@ impl RoutingPolicy for RoundRobin {
         "round-robin"
     }
 
-    fn route(&self, _op: Op, _len: usize, shards: &[ShardMeta]) -> usize {
-        self.next.fetch_add(1, Ordering::Relaxed) % shards.len()
+    fn route(&self, _op: Op, _len: usize, view: &TelemetryView) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % view.len()
     }
 }
 
@@ -108,14 +211,14 @@ impl RoutingPolicy for QueueDepth {
         "queue-depth"
     }
 
-    fn route(&self, _op: Op, _len: usize, shards: &[ShardMeta]) -> usize {
-        let n = shards.len();
+    fn route(&self, _op: Op, _len: usize, view: &TelemetryView) -> usize {
+        let n = view.len();
         let start = self.tie.fetch_add(1, Ordering::Relaxed) % n;
         let mut best = start;
-        let mut best_depth = shards[start].queue_depth();
+        let mut best_depth = view.queue_depth(start);
         for off in 1..n {
             let i = (start + off) % n;
-            let d = shards[i].queue_depth();
+            let d = view.queue_depth(i);
             if d < best_depth {
                 best = i;
                 best_depth = d;
@@ -125,13 +228,16 @@ impl RoutingPolicy for QueueDepth {
     }
 }
 
-/// Deterministic per-operator home shard: `op.index() % shards`.
+/// Capability-aware per-operator home shard.
 ///
-/// Every request for a given operator lands on the same shard, so
-/// whatever per-op state that shard's backend holds — XLA
-/// compiled-artifact caches, gpusim staging buffers sized for the op's
-/// arity — stays hot, at the cost of per-op (rather than per-request)
-/// load spreading.
+/// The home is `op.index() % shards`; if the home shard's backend does
+/// not serve the op, the pin walks forward to the next shard that does
+/// (wrapping), so an op is never parked on a shard that would only
+/// answer [`ServiceError::Unsupported`]. Every request for a given
+/// operator lands on the same shard, keeping whatever per-op state that
+/// shard's backend holds — XLA compiled-artifact caches, gpusim staging
+/// buffers sized for the op's arity — hot, at the cost of per-op
+/// (rather than per-request) load spreading.
 #[derive(Debug, Default)]
 pub struct OpAffinity;
 
@@ -140,7 +246,8 @@ impl OpAffinity {
         OpAffinity
     }
 
-    /// The home shard this policy sends `op` to on a `shards`-wide set.
+    /// The home shard this policy starts from for `op` on a
+    /// `shards`-wide set (the pick when the home supports the op).
     pub fn home(op: Op, shards: usize) -> usize {
         op.index() % shards.max(1)
     }
@@ -151,9 +258,129 @@ impl RoutingPolicy for OpAffinity {
         "op-affinity"
     }
 
-    fn route(&self, op: Op, _len: usize, shards: &[ShardMeta]) -> usize {
-        OpAffinity::home(op, shards.len())
+    fn route(&self, op: Op, _len: usize, view: &TelemetryView) -> usize {
+        let n = view.len();
+        let home = OpAffinity::home(op, n);
+        for off in 0..n {
+            let i = (home + off) % n;
+            if view.supports(i, op) {
+                return i;
+            }
+        }
+        // nobody claims the op: keep the deterministic pin and let the
+        // home backend report Unsupported
+        home
     }
+}
+
+/// Telemetry-driven placement: route by *measured* capability, not a
+/// static pin (the point of serving float-float on heterogeneous
+/// substrates — the same op is 2–10× apart across them, paper
+/// Tables 3/4).
+///
+/// * Candidates are the shards whose backend serves the op
+///   ([`ShardMeta::supports`]); if none claims it, every shard is a
+///   candidate and the backend's own `Unsupported` reply surfaces.
+/// * While any candidate is **cold** (never *attempted* for this op)
+///   *and idle*, one is picked (rotating tie-break) — cheap
+///   exploration that seeds every cell. Coldness is by attempts, not
+///   successes, and busy cold candidates are skipped, so a shard that
+///   keeps failing, or whose slow first group is queued or in flight,
+///   cannot black-hole an op's traffic: at most one probe rides on a
+///   cold shard at a time while the rest of the burst routes by
+///   measurement.
+/// * Among measured candidates the pick minimises estimated
+///   completion time `(queue_depth + 1) · len / rate` — a slow shard
+///   (the gpusim canary, say) only wins when the fast shards are
+///   backlogged in proportion to how much slower it is. Candidates
+///   attempted but never measured (failing, or mid-first-group) are
+///   skipped; if *no* candidate is measured yet, least-loaded keeps
+///   traffic moving.
+#[derive(Debug, Default)]
+pub struct Measured {
+    tie: AtomicUsize,
+}
+
+impl Measured {
+    pub fn new() -> Measured {
+        Measured::default()
+    }
+}
+
+impl RoutingPolicy for Measured {
+    fn name(&self) -> &'static str {
+        "measured"
+    }
+
+    fn route(&self, op: Op, len: usize, view: &TelemetryView) -> usize {
+        let n = view.len();
+        let any_support = (0..n).any(|i| view.supports(i, op));
+        let candidate = |i: usize| !any_support || view.supports(i, op);
+        let start = self.tie.fetch_add(1, Ordering::Relaxed) % n;
+
+        // cold exploration: an *idle*, never-attempted candidate first.
+        // Requiring depth 0 caps exploration at one in-flight probe per
+        // cold shard — a burst arriving while the probe grinds routes
+        // onward to measured shards instead of piling on.
+        if let Some(i) = least_loaded(view, start, |i| {
+            candidate(i) && view.attempts(i, op) == 0 && view.queue_depth(i) == 0
+        }) {
+            return i;
+        }
+
+        // warm: minimise estimated completion time among measured
+        // candidates (attempted-but-unmeasured shards — failing, or
+        // mid-first-group — are skipped)
+        let mut best: Option<(f64, usize)> = None;
+        for off in 0..n {
+            let i = (start + off) % n;
+            if !candidate(i) {
+                continue;
+            }
+            let Some(rate) = view.measured_rate(i, op) else { continue };
+            let backlog = view.queue_depth(i) as f64 + 1.0;
+            let score = backlog * (len as f64 / 1e6) / rate.max(1e-9);
+            let better = match best {
+                Some((best_s, _)) => score < best_s,
+                None => true,
+            };
+            if better {
+                best = Some((score, i));
+            }
+        }
+        if let Some((_, i)) = best {
+            return i;
+        }
+
+        // nothing measured yet (every candidate failing or still on its
+        // first group): least-loaded candidate keeps traffic moving
+        least_loaded(view, start, candidate).unwrap_or(start)
+    }
+}
+
+/// Least-loaded shard among those `keep` accepts, scanning from
+/// `start` so equal depths rotate (the first minimum in rotated order
+/// wins). `None` when `keep` rejects every shard.
+fn least_loaded<F: Fn(usize) -> bool>(
+    view: &TelemetryView, start: usize, keep: F,
+) -> Option<usize> {
+    let n = view.len();
+    let mut best: Option<(usize, usize)> = None; // (depth, shard)
+    for off in 0..n {
+        let i = (start + off) % n;
+        if !keep(i) {
+            continue;
+        }
+        let d = view.queue_depth(i);
+        let better = match best {
+            Some((best_d, _)) => d < best_d,
+            None => true,
+        };
+        if better {
+            best = Some((d, i));
+        }
+    }
+    best.map(|(_, i)| i)
 }
 
 /// Config/CLI-level policy selector (the `Clone`-able recipe;
@@ -164,31 +391,39 @@ pub enum Routing {
     RoundRobin,
     QueueDepth,
     OpAffinity,
+    Measured,
 }
 
 impl Routing {
     /// Every built-in policy, in CLI order.
-    pub const ALL: [Routing; 3] =
-        [Routing::RoundRobin, Routing::QueueDepth, Routing::OpAffinity];
+    pub const ALL: [Routing; 4] = [
+        Routing::RoundRobin,
+        Routing::QueueDepth,
+        Routing::OpAffinity,
+        Routing::Measured,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             Routing::RoundRobin => "round-robin",
             Routing::QueueDepth => "queue-depth",
             Routing::OpAffinity => "op-affinity",
+            Routing::Measured => "measured",
         }
     }
 
     /// Parse a `--routing` value: `round-robin`/`rr`,
-    /// `queue-depth`/`least-loaded`, `op-affinity`/`affinity`.
+    /// `queue-depth`/`least-loaded`, `op-affinity`/`affinity`,
+    /// `measured`.
     pub fn from_cli(name: &str) -> Result<Routing, ServiceError> {
         match name {
             "round-robin" | "rr" => Ok(Routing::RoundRobin),
             "queue-depth" | "least-loaded" => Ok(Routing::QueueDepth),
             "op-affinity" | "affinity" => Ok(Routing::OpAffinity),
+            "measured" => Ok(Routing::Measured),
             other => Err(ServiceError::Backend(format!(
                 "unknown routing policy '{other}' \
-                 (try round-robin, queue-depth, op-affinity)"
+                 (try round-robin, queue-depth, op-affinity, measured)"
             ))),
         }
     }
@@ -199,6 +434,7 @@ impl Routing {
             Routing::RoundRobin => Arc::new(RoundRobin::new()),
             Routing::QueueDepth => Arc::new(QueueDepth::new()),
             Routing::OpAffinity => Arc::new(OpAffinity::new()),
+            Routing::Measured => Arc::new(Measured::new()),
         }
     }
 }
@@ -211,11 +447,19 @@ mod tests {
         (0..n).map(|_| ShardMeta::new("native")).collect()
     }
 
+    /// Warm one (shard, op) cell the way the serve loop does: an
+    /// attempt recorded pre-execute, a sample on success.
+    fn warm(m: &ShardMeta, op: Op, elements: u64, seconds: f64) {
+        m.telemetry().record_attempt(op);
+        m.telemetry().record(op, elements, seconds);
+    }
+
     #[test]
     fn round_robin_cycles() {
         let m = metas(3);
+        let v = TelemetryView::new(&m);
         let p = RoundRobin::new();
-        let picks: Vec<usize> = (0..6).map(|_| p.route(Op::Add, 10, &m)).collect();
+        let picks: Vec<usize> = (0..6).map(|_| p.route(Op::Add, 10, &v)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         assert_eq!(p.name(), "round-robin");
     }
@@ -226,16 +470,17 @@ mod tests {
         m[0].enter();
         m[0].enter();
         m[1].enter();
+        let v = TelemetryView::new(&m);
         // shard 2 is empty: every pick lands there until depths change
         let p = QueueDepth::new();
         for _ in 0..4 {
-            assert_eq!(p.route(Op::Add, 10, &m), 2);
+            assert_eq!(p.route(Op::Add, 10, &v), 2);
         }
         m[2].enter();
         m[2].enter();
         m[2].enter();
         // now shard 1 (depth 1) is the minimum
-        assert_eq!(p.route(Op::Add, 10, &m), 1);
+        assert_eq!(p.route(Op::Add, 10, &v), 1);
         m[1].leave(1);
         assert_eq!(m[1].queue_depth(), 0);
     }
@@ -243,8 +488,9 @@ mod tests {
     #[test]
     fn queue_depth_ties_rotate() {
         let m = metas(4);
+        let v = TelemetryView::new(&m);
         let p = QueueDepth::new();
-        let picks: Vec<usize> = (0..4).map(|_| p.route(Op::Add, 10, &m)).collect();
+        let picks: Vec<usize> = (0..4).map(|_| p.route(Op::Add, 10, &v)).collect();
         // all depths equal: the rotating start spreads the picks
         assert_eq!(picks, vec![0, 1, 2, 3]);
     }
@@ -252,18 +498,183 @@ mod tests {
     #[test]
     fn op_affinity_is_deterministic_and_total() {
         let m = metas(3);
+        let v = TelemetryView::new(&m);
         let p = OpAffinity::new();
         for op in Op::ALL {
-            let s = p.route(op, 10, &m);
+            let s = p.route(op, 10, &v);
             assert_eq!(s, op.index() % 3);
             // repeat picks never move
-            assert_eq!(p.route(op, 99, &m), s);
+            assert_eq!(p.route(op, 99, &v), s);
         }
         // a 2-shard set still covers both shards across the catalogue
         let m2 = metas(2);
+        let v2 = TelemetryView::new(&m2);
         let picked: std::collections::HashSet<usize> =
-            Op::ALL.iter().map(|&op| p.route(op, 1, &m2)).collect();
+            Op::ALL.iter().map(|&op| p.route(op, 1, &v2)).collect();
         assert_eq!(picked.len(), 2);
+    }
+
+    #[test]
+    fn op_affinity_never_routes_to_non_supporting_shard() {
+        let m = metas(3);
+        // shard layout: 0 serves everything, 1 serves only Add, 2 serves
+        // everything except Mul22/Div22
+        m[1].set_supports(&[Op::Add]);
+        let all_but: Vec<Op> =
+            Op::ALL.into_iter().filter(|&o| o != Op::Mul22 && o != Op::Div22).collect();
+        m[2].set_supports(&all_but);
+        let v = TelemetryView::new(&m);
+        let p = OpAffinity::new();
+        for op in Op::ALL {
+            let s = p.route(op, 10, &v);
+            assert!(v.supports(s, op), "{op} pinned to non-supporting shard {s}");
+            // still deterministic
+            assert_eq!(p.route(op, 10, &v), s);
+        }
+        // Mul22's home is shard 1 (index 4 % 3): neither 1 (Add only)
+        // nor 2 (no Mul22) serves it, so the walk wraps to shard 0
+        assert_eq!(p.route(Op::Mul22, 10, &v), 0);
+    }
+
+    #[test]
+    fn op_affinity_falls_back_to_home_when_unclaimed() {
+        let m = metas(2);
+        m[0].set_supports(&[]);
+        m[1].set_supports(&[]);
+        let v = TelemetryView::new(&m);
+        let p = OpAffinity::new();
+        // nobody serves it: keep the deterministic home pin
+        assert_eq!(p.route(Op::Mul22, 10, &v), OpAffinity::home(Op::Mul22, 2));
+    }
+
+    #[test]
+    fn measured_explores_cold_candidates_first() {
+        let m = metas(3);
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        // everything cold: three picks spread over all three shards
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            let s = p.route(Op::Add22, 1000, &v);
+            warm(&m[s], Op::Add22, 1000, 1e-3);
+            seen.insert(s);
+        }
+        assert_eq!(seen.len(), 3, "cold exploration must seed every shard");
+    }
+
+    #[test]
+    fn measured_synthetic_slow_shard_loses_traffic() {
+        let m = metas(2);
+        // warm both cells: shard 0 measures 100 Melem/s, shard 1 is a
+        // thousand times slower (the gpusim canary shape)
+        warm(&m[0], Op::Mul22, 100_000_000, 1.0);
+        warm(&m[1], Op::Mul22, 100_000, 1.0);
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        for _ in 0..20 {
+            assert_eq!(p.route(Op::Mul22, 4096, &v), 0);
+        }
+        // even a moderately backlogged fast shard still beats the slow
+        // one: (depth+1) ratio must exceed the 1000x rate gap to flip
+        for _ in 0..10 {
+            m[0].enter();
+        }
+        assert_eq!(p.route(Op::Mul22, 4096, &v), 0);
+        // but an extreme backlog does flip the pick — the slow shard is
+        // starved, not banned
+        for _ in 0..2000 {
+            m[0].enter();
+        }
+        assert_eq!(p.route(Op::Mul22, 4096, &v), 1);
+    }
+
+    #[test]
+    fn measured_only_considers_supporting_shards() {
+        let m = metas(3);
+        m[0].set_supports(&[Op::Add]);
+        // shards 1 and 2 serve Mul22; 1 is measured fast, 2 cold
+        m[1].set_supports(&[Op::Mul22]);
+        m[2].set_supports(&[Op::Mul22]);
+        warm(&m[1], Op::Mul22, 10_000_000, 1.0);
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        // cold candidate 2 is explored first, never shard 0
+        assert_eq!(p.route(Op::Mul22, 100, &v), 2);
+        warm(&m[2], Op::Mul22, 10_000_000, 1.0);
+        for _ in 0..10 {
+            let s = p.route(Op::Mul22, 100, &v);
+            assert!(s == 1 || s == 2, "routed {s} which does not serve mul22");
+        }
+    }
+
+    #[test]
+    fn measured_cold_exploration_skips_busy_cold_shards() {
+        // the canary is cold for this op but already has work queued
+        // (e.g. its first probe, or another op's slow group): a burst
+        // must route to the measured shard, not pile onto the canary
+        let m = metas(2);
+        warm(&m[0], Op::Div22, 10_000_000, 1.0);
+        m[1].enter();
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        for _ in 0..10 {
+            assert_eq!(p.route(Op::Div22, 100, &v), 0);
+        }
+        // once idle again, the cold shard gets its probe
+        m[1].leave(1);
+        assert_eq!(p.route(Op::Div22, 100, &v), 1);
+    }
+
+    #[test]
+    fn measured_skips_attempted_but_unmeasured_shards() {
+        // shard 1 was tried (attempts > 0) but never succeeded — a
+        // failing backend or a slow first group still in flight. It
+        // must not look "cold" and attract the op's traffic.
+        let m = metas(2);
+        warm(&m[0], Op::Mul22, 10_000_000, 1.0);
+        m[1].telemetry().record_attempt(Op::Mul22);
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        for _ in 0..10 {
+            assert_eq!(p.route(Op::Mul22, 100, &v), 0);
+        }
+    }
+
+    #[test]
+    fn measured_unmeasured_everywhere_falls_back_to_least_loaded() {
+        // every candidate attempted, none measured (startup burst or
+        // all failing): traffic keeps moving, least-loaded first
+        let m = metas(2);
+        m[0].telemetry().record_attempt(Op::Add22);
+        m[1].telemetry().record_attempt(Op::Add22);
+        m[0].enter();
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        for _ in 0..4 {
+            assert_eq!(p.route(Op::Add22, 100, &v), 1);
+        }
+    }
+
+    #[test]
+    fn measured_falls_back_to_all_shards_when_unclaimed() {
+        let m = metas(2);
+        m[0].set_supports(&[]);
+        m[1].set_supports(&[]);
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        let s = p.route(Op::Add, 10, &v);
+        assert!(s < 2);
+    }
+
+    #[test]
+    fn shard_meta_capability_surface() {
+        let m = ShardMeta::new("native");
+        // placeholder: everything supported until the backend publishes
+        assert!(Op::ALL.into_iter().all(|op| m.supports(op)));
+        m.set_supports(&[Op::Add22, Op::Mul22]);
+        assert!(m.supports(Op::Add22));
+        assert!(!m.supports(Op::Div22));
+        assert_eq!(m.supported_ops(), vec![Op::Add22, Op::Mul22]);
     }
 
     #[test]
@@ -273,6 +684,7 @@ mod tests {
         assert_eq!(Routing::from_cli("queue-depth").unwrap(), Routing::QueueDepth);
         assert_eq!(Routing::from_cli("least-loaded").unwrap(), Routing::QueueDepth);
         assert_eq!(Routing::from_cli("op-affinity").unwrap(), Routing::OpAffinity);
+        assert_eq!(Routing::from_cli("measured").unwrap(), Routing::Measured);
         assert!(Routing::from_cli("random").is_err());
         for r in Routing::ALL {
             assert_eq!(r.build().name(), r.name());

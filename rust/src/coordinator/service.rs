@@ -23,9 +23,9 @@
 
 use super::batcher;
 use super::metrics::{Metrics, Snapshot};
-use super::plan::{Plan, Ticket};
+use super::plan::{Plan, Ticket, TicketState};
 use super::request::{OpRequest, OpResult};
-use super::routing::{Routing, RoutingPolicy, ShardMeta};
+use super::routing::{Routing, RoutingPolicy, ShardMeta, TelemetryView};
 use crate::backend::{BackendSpec, BufferPool, KernelBackend, Op, ServiceError};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -208,15 +208,17 @@ impl Handle {
     /// [`Ticket`].
     pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
         let (op, inputs, len) = plan.into_parts();
-        let shard = self.policy.route(op, len, &self.meta) % self.txs.len();
+        let view = TelemetryView::new(&self.meta);
+        let shard = self.policy.route(op, len, &view) % self.txs.len();
         let (reply, rx) = mpsc::channel();
-        let req = OpRequest { op, inputs, reply };
+        let state = Arc::new(TicketState::new());
+        let req = OpRequest { op, inputs, reply, ctrl: state.clone() };
         self.meta[shard].enter();
         if self.txs[shard].send(Msg::Submit(req)).is_err() {
             self.meta[shard].leave(1);
             return Err(ServiceError::QueueClosed);
         }
-        Ok(Ticket { rx, op, shard, len })
+        Ok(Ticket { rx, op, shard, len, state })
     }
 
     /// Submit by operator name and return the raw reply receiver.
@@ -244,6 +246,12 @@ impl Handle {
     /// reads).
     pub fn queue_depths(&self) -> Vec<usize> {
         self.meta.iter().map(ShardMeta::queue_depth).collect()
+    }
+
+    /// The live telemetry view routing policies route over — label,
+    /// queue depth, per-op capability and measured rates per shard.
+    pub fn telemetry(&self) -> TelemetryView<'_> {
+        TelemetryView::new(&self.meta)
     }
 }
 
@@ -326,6 +334,24 @@ impl Service {
         self.meta.iter().map(ShardMeta::label).collect()
     }
 
+    /// The live telemetry view (label, queue depth, capability,
+    /// measured rates) over the whole shard set.
+    pub fn telemetry(&self) -> TelemetryView<'_> {
+        TelemetryView::new(&self.meta)
+    }
+
+    /// Measured EWMA throughput of `op` on `shard` in Melem/s (`None`
+    /// while that cell is cold).
+    pub fn measured_rate(&self, shard: usize, op: Op) -> Option<f64> {
+        self.meta[shard].telemetry().rate(op)
+    }
+
+    /// Operators `shard`'s backend declared at spawn
+    /// ([`crate::backend::KernelBackend::ops`]).
+    pub fn shard_supported_ops(&self, shard: usize) -> Vec<Op> {
+        self.meta[shard].supported_ops()
+    }
+
     /// Name of the active routing policy.
     pub fn routing(&self) -> &'static str {
         self.policy.name()
@@ -366,6 +392,10 @@ fn device_thread(
             return;
         }
     };
+    // publish the real op catalogue into the routing-visible meta
+    // *before* acking: no dispatch can race the placeholder mask
+    // because `Service::start` only returns after every shard acks
+    meta[shard].set_supports(&backend.ops());
     // count as live *before* acking, so `is_running()` is already true
     // the moment `Service::start` returns
     live.fetch_add(1, Ordering::Relaxed);
@@ -400,10 +430,17 @@ fn device_thread(
                 None => groups.push((r.op, vec![r])),
             }
         }
+        let mut executed_any = false;
         for (op, reqs) in groups {
-            serve_group(backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs);
+            executed_any |=
+                serve_group(backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs);
         }
-        metrics.record_latency(t0.elapsed().as_secs_f64());
+        // triage-only drains (every request cancelled/expired) ran no
+        // backend work — logging their ~0 latency would drag the batch
+        // mean below any batch that actually executed
+        if executed_any {
+            metrics.record_latency(t0.elapsed().as_secs_f64());
+        }
         if shutdown {
             break;
         }
@@ -414,13 +451,52 @@ fn device_thread(
 /// Execute one operator group as a single concatenated batch through
 /// the backend trait.
 ///
+/// Cancelled and deadline-expired requests are triaged out *before*
+/// the backend runs — a client that gave up never costs substrate
+/// time; it gets [`ServiceError::Cancelled`] /
+/// [`ServiceError::DeadlineExceeded`] instead.
+///
 /// The shard's queue depth ([`ShardMeta`]) is decremented *before* the
 /// replies go out, so once a client holds its reply the routing
-/// policies already see the drained depth.
+/// policies already see the drained depth. Successful groups feed the
+/// shard's per-op telemetry EWMA ([`ShardMeta::telemetry`]) that
+/// measured routing reads.
+///
+/// Returns whether the backend actually executed (false when triage
+/// emptied the group) so the caller can keep no-work drains out of the
+/// batch-latency summary.
 fn serve_group(
     backend: &mut dyn KernelBackend, pool: &mut BufferPool, metrics: &Metrics,
-    depth: &ShardMeta, op: Op, reqs: Vec<OpRequest>,
-) {
+    meta: &ShardMeta, op: Op, reqs: Vec<OpRequest>,
+) -> bool {
+    // lifecycle triage: drop dead requests before burning backend time.
+    // Expiry is checked first so a deadline miss is attributed to
+    // `expired` even when the client's timed-out wait already marked
+    // the shared state cancelled — `cancelled` counts explicit
+    // abandonment only.
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(reqs.len());
+    for r in reqs {
+        if r.ctrl.expired(now) {
+            // mark it so a racing client-side wait agrees the request
+            // is dead
+            r.ctrl.cancel();
+            meta.leave(1);
+            metrics.record_expired(1);
+            let _ = r.reply.send(Err(ServiceError::DeadlineExceeded));
+        } else if r.ctrl.is_cancelled() {
+            meta.leave(1);
+            metrics.record_cancelled(1);
+            let _ = r.reply.send(Err(ServiceError::Cancelled));
+        } else {
+            live.push(r);
+        }
+    }
+    let reqs = live;
+    if reqs.is_empty() {
+        return false;
+    }
+
     // no per-batch `supports` pre-check: backends return
     // `ServiceError::Unsupported` themselves, and the default
     // `supports` impl allocates a catalogue Vec — not hot-path material
@@ -433,10 +509,16 @@ fn serve_group(
         let n = req.len();
         let input_refs: Vec<&[f32]> = req.inputs.iter().map(Vec::as_slice).collect();
         let mut outs = vec![vec![0.0f32; n]; n_out];
+        // attempt recorded pre-execute: a failing or slow shard stops
+        // looking cold to measured routing
+        meta.telemetry().record_attempt(op);
+        let t_exec = Instant::now();
         let result = backend.execute(op, &input_refs, &mut outs);
-        depth.leave(1);
+        let exec_s = t_exec.elapsed().as_secs_f64();
+        meta.leave(1);
         match result {
             Ok(rep) => {
+                meta.telemetry().record(op, n as u64, exec_s);
                 metrics.record_batch(1, rep.launches, n as u64, rep.padded_elements);
                 let _ = req.reply.send(Ok(outs));
             }
@@ -445,7 +527,7 @@ fn serve_group(
                 let _ = req.reply.send(Err(e));
             }
         }
-        return;
+        return true;
     }
 
     let refs: Vec<&OpRequest> = reqs.iter().collect();
@@ -461,12 +543,16 @@ fn serve_group(
     let input_refs: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
     let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(total)).collect();
 
+    meta.telemetry().record_attempt(op);
+    let t_exec = Instant::now();
     let result = backend.execute(op, &input_refs, &mut outs);
+    let exec_s = t_exec.elapsed().as_secs_f64();
     drop(input_refs);
-    depth.leave(reqs.len());
+    meta.leave(reqs.len());
 
     match result {
         Ok(rep) => {
+            meta.telemetry().record(op, total as u64, exec_s);
             // per-request output accumulators (owned by the replies)
             let mut acc: Vec<Vec<Vec<f32>>> =
                 refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
@@ -488,10 +574,13 @@ fn serve_group(
     for b in outs {
         pool.put(b);
     }
+    true
 }
 
 fn fail_group(metrics: &Metrics, reqs: &[OpRequest], err: ServiceError) {
-    metrics.record_error();
+    // one error per request, not per group — `errors` must reconcile
+    // against `requests`
+    metrics.record_errors(reqs.len());
     for r in reqs {
         let _ = r.reply.send(Err(err.clone()));
     }
@@ -702,6 +791,68 @@ mod tests {
         // every reply received => every shard has replied => depths at 0
         assert_eq!(h.queue_depths(), vec![0, 0]);
         assert_eq!(svc.metrics().requests, 6);
+    }
+
+    #[test]
+    fn spawn_publishes_capabilities_and_groups_feed_telemetry() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        // the placeholder mask was replaced by the backend's catalogue
+        assert_eq!(svc.shard_supported_ops(0), Op::ALL.to_vec());
+        assert_eq!(svc.measured_rate(0, Op::Add22), None, "cold before any group");
+        run(&h, Op::Add22, add22_planes(2000, 17)).unwrap();
+        // the reply channel synchronises the shard's telemetry store
+        let rate = svc.measured_rate(0, Op::Add22).expect("warm after a group");
+        assert!(rate > 0.0);
+        assert_eq!(svc.telemetry().samples(0, Op::Add22), 1);
+        assert_eq!(svc.measured_rate(0, Op::Mul22), None, "other ops stay cold");
+        assert!(svc.telemetry().supports(0, Op::Mul22));
+    }
+
+    #[test]
+    fn measured_routing_serves_end_to_end() {
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 3)
+                .with_routing(Routing::Measured),
+        )
+        .unwrap();
+        assert_eq!(svc.routing(), "measured");
+        let h = svc.handle();
+        for k in 0..9 {
+            let planes = add22_planes(400, k);
+            let out = run(&h, Op::Add22, planes).unwrap();
+            assert_eq!(out.len(), 2);
+        }
+        assert_eq!(svc.metrics().requests, 9);
+        assert_eq!(svc.metrics().errors, 0);
+        // cold exploration touched every shard at least once
+        let touched = (0..3).filter(|&s| svc.measured_rate(s, Op::Add22).is_some()).count();
+        assert_eq!(touched, 3, "exploration must seed every shard");
+    }
+
+    #[test]
+    fn cancelled_ticket_resolves_client_side() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        let t = h
+            .dispatch(Plan::new(Op::Add, vec![vec![1.0], vec![2.0]]).unwrap())
+            .unwrap();
+        t.cancel();
+        // whether or not the shard already replied, the verdict is
+        // Cancelled — the client abandoned the request
+        assert_eq!(t.wait(), Err(ServiceError::Cancelled));
+    }
+
+    #[test]
+    fn generous_deadline_does_not_interfere() {
+        let svc = cpu_service();
+        let h = svc.handle();
+        let t = h
+            .dispatch(Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap())
+            .unwrap()
+            .deadline(std::time::Duration::from_secs(60));
+        assert_eq!(t.wait().unwrap()[0], vec![4.0, 6.0]);
+        assert_eq!(svc.metrics().expired, 0);
     }
 
     #[test]

@@ -30,11 +30,14 @@
 //! * [`coordinator`] — the typed, routed, sharded dispatcher (the
 //!   moral equivalent of the Brook runtime): build a
 //!   [`coordinator::Plan`] (shape-checked at build time), dispatch it
-//!   for a future-like [`coordinator::Ticket`]; a
-//!   [`coordinator::ServiceSpec`] gives every shard its own
-//!   [`backend::BackendSpec`] (heterogeneous sets are first-class) and
-//!   a pluggable [`coordinator::routing::RoutingPolicy`] — round-robin,
-//!   queue-depth-aware, or op-affinity — places each request;
+//!   for a future-like [`coordinator::Ticket`] with deadline/cancel
+//!   lifecycle control; a [`coordinator::ServiceSpec`] gives every
+//!   shard its own [`backend::BackendSpec`] (heterogeneous sets are
+//!   first-class) and a pluggable
+//!   [`coordinator::routing::RoutingPolicy`] — round-robin,
+//!   queue-depth-aware, capability-aware op-affinity, or
+//!   telemetry-driven measured routing — places each request over the
+//!   live per-shard [`coordinator::routing::TelemetryView`];
 //! * [`harness`] — workload generators and table emitters that regenerate
 //!   every table of the paper's evaluation section, plus the
 //!   substrate-neutral [`harness::timing::backend_grid`].

@@ -17,9 +17,10 @@
 //! `--backend native:<workers>`, `--backend gpusim:<model>`,
 //! `--backend xla`; `--shards N` runs N identical device threads.
 //! Heterogeneous shard sets (serve-demo): `--shard-spec
-//! native*6,gpusim:nv35` gives every shard its own backend, and
-//! `--routing round-robin|queue-depth|op-affinity` picks the placement
-//! policy.
+//! native*6,gpusim:nv35` gives every shard its own backend,
+//! `--routing round-robin|queue-depth|op-affinity|measured` picks the
+//! placement policy, and `--deadline-ms N` arms every demo ticket with
+//! a deadline (missed ones count as `deadline misses`, not failures).
 //!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
@@ -47,6 +48,7 @@ fn main() {
     let shards: usize = get_flag("--shards", String::new()).parse().unwrap_or(1);
     let shard_spec_flag = get_flag("--shard-spec", String::new());
     let routing_flag = get_flag("--routing", "round-robin".into());
+    let deadline_ms: u64 = get_flag("--deadline-ms", String::new()).parse().unwrap_or(0);
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -57,6 +59,7 @@ fn main() {
         "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
         "serve-demo" => cmd_serve_demo(
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
+            deadline_ms,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -76,7 +79,7 @@ ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
 
 USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
                        [--backend B] [--shards N]
-                       [--shard-spec LIST] [--routing P]
+                       [--shard-spec LIST] [--routing P] [--deadline-ms N]
 
 COMMANDS:
   info        platform, backend catalogues, artifact inventory, Table 1
@@ -98,8 +101,14 @@ BACKENDS (--backend):
 SHARD SETS (serve-demo):
   --shard-spec native*2,gpusim:nv35   one backend per shard (overrides
                                       --backend/--shards); *N repeats
-  --routing round-robin|queue-depth|op-affinity
+  --routing round-robin|queue-depth|op-affinity|measured
                                       placement policy across shards
+                                      (measured = telemetry-driven: prefer
+                                      shards that serve the op, weight by
+                                      live Melem/s)
+  --deadline-ms N                     arm every demo ticket with an N ms
+                                      deadline; misses are counted, the
+                                      shards stay live
 ";
 
 fn cmd_info(artifacts: &Path) -> i32 {
@@ -285,7 +294,7 @@ fn cmd_accuracy(artifacts: &Path, samples: usize) -> i32 {
 
 fn cmd_serve_demo(
     artifacts: &Path, backend_flag: &str, shards: usize, shard_spec: &str,
-    routing_flag: &str,
+    routing_flag: &str, deadline_ms: u64,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -334,36 +343,64 @@ fn cmd_serve_demo(
         let h = svc.handle();
         joins.push(std::thread::spawn(move || {
             let mut rng = Rng::new(client);
+            let mut served = 0u64;
+            let mut missed = 0u64;
             for round in 0..rounds {
                 let op = Op::ALL[(client as usize + round) % Op::COUNT];
                 let n = 1000 + rng.below(top);
                 let planes = workload::planes_for(op.name(), n, rng.next_u64());
                 let plan = Plan::new(op, planes).expect("plan");
-                let ticket = h.dispatch(plan).expect("dispatch");
-                let out = ticket.wait().expect("reply");
-                assert_eq!(out[0].len(), n);
+                let mut ticket = h.dispatch(plan).expect("dispatch");
+                if deadline_ms > 0 {
+                    ticket = ticket
+                        .deadline(std::time::Duration::from_millis(deadline_ms));
+                }
+                match ticket.wait() {
+                    Ok(out) => {
+                        assert_eq!(out[0].len(), n);
+                        served += 1;
+                    }
+                    Err(ffgpu::backend::ServiceError::DeadlineExceeded) => missed += 1,
+                    Err(e) => panic!("reply: {e}"),
+                }
             }
+            (served, missed)
         }));
     }
+    let mut served = 0u64;
+    let mut missed = 0u64;
     for j in joins {
-        j.join().unwrap();
+        let (s, x) = j.join().unwrap();
+        served += s;
+        missed += x;
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = svc.metrics();
     println!("serve-demo: {} requests in {wall:.3}s ({:.0} req/s)",
              m.requests, m.requests as f64 / wall);
+    println!("  served={served} deadline misses={missed} (shard-side skipped={} cancelled={})",
+             m.expired, m.cancelled);
     println!("  batches={} launches={} elements={} padding={:.1}%",
              m.batches, m.launches, m.elements, m.padding_fraction() * 100.0);
     println!("  batch latency mean={:.2}ms max={:.2}ms errors={}",
              m.mean_latency_s * 1e3, m.max_latency_s * 1e3, m.errors);
+    let telemetry_ops = [Op::Add22, Op::Mul22, Op::Div22];
     for (i, (s, label)) in svc
         .shard_metrics()
         .iter()
         .zip(svc.shard_labels())
         .enumerate()
     {
-        println!("  shard {i} [{label}]: requests={} batches={} elements={}",
-                 s.requests, s.batches, s.elements);
+        let rates: Vec<String> = telemetry_ops
+            .iter()
+            .map(|&op| match svc.measured_rate(i, op) {
+                Some(r) => format!("{op}={r:.1}"),
+                None => format!("{op}=cold"),
+            })
+            .collect();
+        println!("  shard {i} [{label}]: requests={} batches={} elements={} \
+                  measured Melem/s: {}",
+                 s.requests, s.batches, s.elements, rates.join(" "));
     }
     0
 }

@@ -196,6 +196,42 @@ fn runtime_rejects_bad_shapes_and_names() {
 }
 
 #[test]
+fn coordinator_lifecycle_over_the_xla_service() {
+    // deadline/cancel tickets work end-to-end through the artifact
+    // path, not just the always-available substrates
+    let Some(dir) = artifacts_dir() else { return };
+    use ffgpu::backend::{BackendSpec, Op, ServiceError};
+    use ffgpu::coordinator::{Plan, Service, ServiceSpec};
+    let svc = Service::start(ServiceSpec::uniform(
+        BackendSpec::Xla { artifacts: dir, precompile: false },
+        1,
+    ))
+    .unwrap();
+    let h = svc.handle();
+    // a generous deadline resolves normally through PJRT
+    let planes = workload::planes_for("add22", 4096, 0xDEAD);
+    let out = h
+        .dispatch(Plan::new(Op::Add22, planes).unwrap())
+        .unwrap()
+        .deadline(std::time::Duration::from_secs(30))
+        .wait()
+        .unwrap();
+    assert_eq!(out[0].len(), 4096);
+    // a pre-cancelled ticket resolves Cancelled and the service stays up
+    let t = h
+        .dispatch(Plan::new(Op::Add22, workload::planes_for("add22", 512, 1)).unwrap())
+        .unwrap();
+    t.cancel();
+    assert_eq!(t.wait(), Err(ServiceError::Cancelled));
+    let out = h
+        .dispatch(Plan::new(Op::Add22, workload::planes_for("add22", 512, 2)).unwrap())
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(out[0].len(), 512);
+}
+
+#[test]
 fn runtime_stats_accumulate() {
     let Some(dir) = artifacts_dir() else { return };
     let rt = Runtime::new(&dir).unwrap();
