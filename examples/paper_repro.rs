@@ -1,6 +1,6 @@
 //! **End-to-end driver**: regenerates every table of the paper through
 //! the full three-layer stack and prints paper-vs-measured side by side.
-//! (The experiment index lives in DESIGN.md §3.)
+//! (The experiment index lives in DESIGN.md §4.)
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example paper_repro

@@ -11,6 +11,8 @@
 //! FFGPU_SHARD_SPEC=native*2,gpusim FFGPU_ROUTING=measured \
 //!     cargo run --release --example serve_demo              # telemetry-driven
 //! FFGPU_DEADLINE_MS=5 cargo run --release --example serve_demo
+//! FFGPU_FUSE_WINDOW_MS=2 cargo run --release --example serve_demo  # fusion stage
+//! FFGPU_WORKERS=4 cargo run --release --example serve_demo
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! ```
 
@@ -34,6 +36,15 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0);
+    // FFGPU_FUSE_WINDOW_MS arms the fusion stage (window + the paper's
+    // stream-size ladder); FFGPU_WORKERS retunes every native shard's
+    // persistent worker crew
+    let fuse_window_ms: u64 = std::env::var("FFGPU_FUSE_WINDOW_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let workers_env: Option<usize> =
+        std::env::var("FFGPU_WORKERS").ok().and_then(|s| s.parse().ok());
     // FFGPU_SHARD_SPEC gives every shard its own backend; otherwise a
     // uniform set from FFGPU_BACKEND/FFGPU_SHARDS (xla auto-detected)
     let explicit_backend = std::env::var("FFGPU_BACKEND").ok();
@@ -57,9 +68,27 @@ fn main() {
             ServiceSpec::uniform(b, shards)
         }
     };
-    let spec = spec.with_routing(routing);
+    let mut spec = spec.with_routing(routing);
+    if let Some(w) = workers_env {
+        for s in &mut spec.shards {
+            if let BackendSpec::Native { workers, .. } = s {
+                *workers = w;
+            }
+        }
+    }
+    if fuse_window_ms > 0 {
+        spec = spec
+            .with_fuse_window(Duration::from_millis(fuse_window_ms))
+            .with_fuse_sizes(ffgpu::coordinator::PAPER_FUSE_SIZES.to_vec());
+    }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
-    println!("shards: [{}]  routing: {}", labels.join(", "), routing.name());
+    println!(
+        "shards: [{}]  routing: {}  fusion: {}",
+        labels.join(", "),
+        routing.name(),
+        if fuse_window_ms > 0 { format!("{fuse_window_ms}ms window") } else { "off".into() }
+    );
+    let fallback = spec.clone();
     let svc = match Service::start(spec) {
         Ok(svc) => svc,
         // auto-detected xla but the engine is unavailable (e.g. built
@@ -68,10 +97,16 @@ fn main() {
         // still fails loudly
         Err(e) if explicit_backend.is_none() && shard_spec.is_none() => {
             println!("(xla backend unavailable: {e}; falling back to native)");
-            Service::start(
-                ServiceSpec::uniform(BackendSpec::native(), shards).with_routing(routing),
-            )
-            .expect("service")
+            let mut native = fallback;
+            // keep routing/fusion AND the FFGPU_WORKERS override
+            native.shards = vec![
+                BackendSpec::Native {
+                    chunk: ffgpu::backend::native::DEFAULT_CHUNK,
+                    workers: workers_env.unwrap_or(0),
+                };
+                shards.max(1)
+            ];
+            Service::start(native).expect("service")
         }
         Err(e) => panic!("service: {e}"),
     };

@@ -16,12 +16,23 @@
 //! sends strictly less slow-op traffic to the canary than round-robin,
 //! and that a 1 ms-deadline ticket against a saturated shard resolves
 //! `DeadlineExceeded` promptly while the shard survives.
+//!
+//! Pipeline instrumentation (the persistent-worker + fusion refactor):
+//! small-batch (≤ 16k element) native execute throughput is recorded
+//! for the **pre-refactor spawn-per-batch scoped pool** (kept here,
+//! and only here, as a baseline) against the **persistent worker
+//! crew**; serving rows compare **fused vs unfused** coalescing on
+//! tiny concurrent requests; and the routing-policy sweep runs again
+//! with the fusion ladder armed so `BENCH_coordinator.json` carries a
+//! padding-waste fraction per policy.
 
-use ffgpu::backend::{BackendSpec, Op, ServiceError};
+use ffgpu::backend::{BackendSpec, ExecJob, KernelBackend, NativeBackend, Op, ServiceError};
 use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
+use ffgpu::ff::vector;
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 struct Row {
@@ -43,6 +54,8 @@ struct Row {
     /// Fraction of mul22/div22 requests the gpusim canary served
     /// (heterogeneous cases only).
     canary_share: Option<f64>,
+    /// Fusion window armed on the service (0 = fusion off).
+    fuse_window_ms: u64,
 }
 
 /// Ops the routing comparison cycles through. Includes `div22` — the
@@ -67,6 +80,7 @@ fn run_case(
 ) -> Option<Row> {
     let shards = spec.shards.len();
     let routing = spec.routing;
+    let fuse_window_ms = spec.fuse_window.as_millis() as u64;
     let svc = match Service::start(spec) {
         Ok(s) => s,
         Err(e) => {
@@ -184,6 +198,7 @@ fn run_case(
         p95_ms: percentile(&lats, 0.95) * 1e3,
         shard_melem_per_s,
         canary_share,
+        fuse_window_ms,
     };
     println!(
         "  {label:<16} shards={shards} routing={:<11} {clients} clients x {req_n:>6} elems: \
@@ -225,7 +240,8 @@ fn emit_json(rows: &[Row]) {
              \"melem_per_s\": {:.3}, \"batches\": {}, \
              \"padding_fraction\": {:.4}, \"mean_latency_ms\": {:.3}, \
              \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
-             \"shard_melem_per_s\": [{}], \"canary_share\": {}}}{}\n",
+             \"shard_melem_per_s\": [{}], \"canary_share\": {}, \
+             \"fuse_window_ms\": {}}}{}\n",
             r.backend,
             r.shards,
             r.routing,
@@ -241,6 +257,7 @@ fn emit_json(rows: &[Row]) {
             r.p95_ms,
             shard_rates.join(", "),
             canary,
+            r.fuse_window_ms,
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
@@ -250,6 +267,114 @@ fn emit_json(rows: &[Row]) {
         Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
+}
+
+/// The pre-refactor executor, kept **only as a bench baseline**: a
+/// scoped worker pool spawned and joined inside every call — the
+/// spawn/join overhead the persistent crew removed from the serving
+/// hot path. Chunking logic mirrors the old `NativeBackend::execute`.
+fn scoped_pool_execute(
+    op: Op, chunk: usize, workers: usize, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+) {
+    struct Job<'a> {
+        ins: Vec<&'a [f32]>,
+        outs: Vec<&'a mut [f32]>,
+    }
+    let n = inputs[0].len();
+    let mut jobs: Vec<Job> = Vec::with_capacity(n.div_ceil(chunk));
+    let mut tails: Vec<&mut [f32]> =
+        outputs.iter_mut().map(|v| v.as_mut_slice()).collect();
+    let mut start = 0usize;
+    while start < n {
+        let len = chunk.min(n - start);
+        let ins: Vec<&[f32]> = inputs.iter().map(|p| &p[start..start + len]).collect();
+        let mut outs = Vec::with_capacity(tails.len());
+        for t in tails.iter_mut() {
+            let (head, rest) = std::mem::take(t).split_at_mut(len);
+            outs.push(head);
+            *t = rest;
+        }
+        jobs.push(Job { ins, outs });
+        start += len;
+    }
+    let workers = workers.min(jobs.len());
+    let queue = Mutex::new(jobs);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let job = queue.lock().unwrap().pop();
+                let Some(mut job) = job else { break };
+                vector::dispatch_slices(op.name(), &job.ins, &mut job.outs).unwrap();
+            });
+        }
+    });
+}
+
+/// Acceptance instrument: small-batch (≤ 16k element) native execute
+/// throughput, spawn-per-batch scoped pool vs the persistent crew.
+/// The smaller the batch, the larger the share of its wall time the
+/// old spawn/join burned — exactly what the persistent workers buy
+/// back.
+fn exec_rows() -> Vec<Row> {
+    println!("== native execute ≤16k: scoped spawn-per-batch baseline vs persistent crew");
+    let (op, chunk, workers, reps) = (Op::Add22, 2048usize, 4usize, 400usize);
+    let mut rows = Vec::new();
+    for req_n in [4096usize, 8192, 16384] {
+        let planes = workload::planes_for(op.name(), req_n, 0xE8EC);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = ExecJob::new(op, planes.clone()).unwrap();
+        let mut outs = vec![vec![0.0f32; req_n]; op.n_out()];
+
+        let mut crew = NativeBackend::new(chunk, workers);
+        for _ in 0..10 {
+            crew.execute(&job, &mut outs).unwrap();
+        }
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            crew.execute(&job, &mut outs).unwrap();
+        }
+        let persistent_s = t0.elapsed().as_secs_f64();
+
+        for _ in 0..10 {
+            scoped_pool_execute(op, chunk, workers, &refs, &mut outs);
+        }
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            scoped_pool_execute(op, chunk, workers, &refs, &mut outs);
+        }
+        let scoped_s = t0.elapsed().as_secs_f64();
+
+        let total_elems = (reps * req_n) as f64;
+        for (label, secs) in
+            [("native-exec-persistent", persistent_s), ("native-exec-scoped", scoped_s)]
+        {
+            let melem = total_elems / secs / 1e6;
+            println!(
+                "  {label:<22} n={req_n:>6} x{reps}: {melem:>8.1} Melem/s \
+                 ({:.1} µs/batch)",
+                secs / reps as f64 * 1e6
+            );
+            rows.push(Row {
+                backend: label.to_string(),
+                shards: 1,
+                routing: "-".to_string(),
+                clients: 1,
+                req_n,
+                rounds: reps,
+                req_per_s: reps as f64 / secs,
+                melem_per_s: melem,
+                batches: reps as u64,
+                padding_fraction: 0.0,
+                mean_latency_ms: secs / reps as f64 * 1e3,
+                p50_ms: 0.0,
+                p95_ms: 0.0,
+                shard_melem_per_s: vec![melem],
+                canary_share: None,
+                fuse_window_ms: 0,
+            });
+        }
+    }
+    rows
 }
 
 /// A 1 ms-deadline ticket against a saturated shard must resolve
@@ -308,6 +433,24 @@ fn deadline_demo() {
 
 fn main() {
     let mut rows: Vec<Row> = Vec::new();
+
+    // pooled-vs-persistent: raw execute throughput at small batches
+    rows.extend(exec_rows());
+
+    // fused vs unfused serving: many tiny concurrent requests — the
+    // shape cross-request fusion exists for. Same workload, same
+    // shards; only the window/ladder differ.
+    println!("== serving tiny requests: fusion off vs 1 ms window + ladder");
+    for (fuse, label) in [(false, "native-unfused"), (true, "native-fused")] {
+        let mut spec =
+            ServiceSpec::uniform(BackendSpec::native(), 2).with_max_batch(128);
+        if fuse {
+            spec = spec
+                .with_fuse_window(Duration::from_millis(1))
+                .with_fuse_sizes(vec![1024, 4096, 16384, 65536]);
+        }
+        rows.extend(run_case(label, spec, 8, 1024, 100, false));
+    }
 
     // the seed path: single shard, single worker — the baseline every
     // sharded/parallel configuration must beat
@@ -372,6 +515,24 @@ fn main() {
             "measured routing must starve the slow canary: measured={me:.3} vs \
              round-robin={rr:.3}"
         );
+    }
+
+    // the same policy sweep with the fusion ladder armed: every policy
+    // row now carries a real padding-waste fraction (and the per-op
+    // waste EWMA feeds the shard telemetry), so fusion quality is
+    // machine-comparable across policies and PRs
+    println!("== routing policies, fused (1 ms window + ladder): padding waste per policy");
+    for routing in Routing::ALL {
+        let spec = ServiceSpec::heterogeneous(vec![
+            BackendSpec::native(),
+            BackendSpec::native(),
+            BackendSpec::native(),
+            BackendSpec::gpusim_ieee(),
+        ])
+        .with_routing(routing)
+        .with_fuse_window(Duration::from_millis(1))
+        .with_fuse_sizes(vec![1024, 4096, 16384, 65536]);
+        rows.extend(run_case("hetero-fused", spec, 4, 2048, 20, true));
     }
 
     deadline_demo();

@@ -14,7 +14,9 @@
 //! (reciprocal-based, as real GPUs did it) are numerically equivalent
 //! but not bit-equal, which is itself faithful to the paper.
 
-use super::{check_shapes, BackendStats, ExecReport, KernelBackend, Op, ServiceError};
+use super::{
+    check_outputs, BackendStats, ExecJob, ExecReport, KernelBackend, Op, ServiceError,
+};
 use crate::gpusim::shader::{self, programs, Program};
 use crate::gpusim::GpuModel;
 use std::time::Instant;
@@ -77,9 +79,10 @@ impl KernelBackend for GpuSimBackend {
     }
 
     fn execute(
-        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, job: &ExecJob, outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError> {
-        let n = check_shapes("gpusim", op, inputs, outputs)?;
+        let n = check_outputs("gpusim", job, outputs)?;
+        let op = job.op();
         let (n_in, n_out) = op.arity();
         let Some(prog) = self.programs.iter().find(|(p, _)| *p == op) else {
             return Err(ServiceError::Unsupported { backend: "gpusim", op });
@@ -90,7 +93,7 @@ impl KernelBackend for GpuSimBackend {
         while self.fin.len() < n_in {
             self.fin.push(Vec::new());
         }
-        for (i, plane) in inputs.iter().enumerate() {
+        for (i, plane) in job.inputs().iter().enumerate() {
             let buf = &mut self.fin[i];
             buf.clear();
             buf.extend(plane.iter().map(|&v| v as f64));
@@ -130,9 +133,9 @@ mod tests {
 
     fn exec(b: &mut GpuSimBackend, op: Op, n: usize, seed: u64) -> Vec<Vec<f32>> {
         let planes = workload::planes_for(op.name(), n, seed);
-        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = super::ExecJob::new(op, planes).unwrap();
         let mut outs = vec![vec![0.0f32; n]; op.n_out()];
-        b.execute(op, &refs, &mut outs).unwrap();
+        b.execute(&job, &mut outs).unwrap();
         outs
     }
 
@@ -141,9 +144,9 @@ mod tests {
         let mut b = GpuSimBackend::by_name("ieee-rn").unwrap();
         let n = 500;
         let planes = workload::planes_for("add22", n, 0x6511);
-        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = super::ExecJob::new(Op::Add22, planes.clone()).unwrap();
         let mut outs = vec![vec![0.0f32; n]; 2];
-        b.execute(Op::Add22, &refs, &mut outs).unwrap();
+        b.execute(&job, &mut outs).unwrap();
         for i in 0..n {
             let want = FF32::from_parts(planes[0][i], planes[1][i])
                 + FF32::from_parts(planes[2][i], planes[3][i]);

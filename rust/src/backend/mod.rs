@@ -7,11 +7,17 @@
 //! makes it a first-class abstraction:
 //!
 //! * [`KernelBackend`] — the trait: an op catalogue plus
-//!   `execute(op, inputs, outputs)` over SoA `f32` planes, with
+//!   `execute(job, outputs)` over an owned [`ExecJob`] (operator +
+//!   `Arc`-shared SoA input planes) into pre-sized output planes, with
 //!   cumulative [`BackendStats`];
+//! * [`ExecJob`] — the owned-buffer job model: input planes live in
+//!   `Arc`s so they can cross into **persistent** worker threads
+//!   (scoped borrows cannot outlive one batch, owned jobs can), and a
+//!   job is validated once at construction — a job that exists has the
+//!   right arity and unragged, non-empty planes;
 //! * [`NativeBackend`] — the `ff::vector` kernels, executed in parallel
-//!   over fixed-size chunks by a scoped-thread worker pool (the
-//!   "CPU path", now multicore);
+//!   over fixed-size chunks by a standing crew of channel-fed worker
+//!   threads (the "CPU path", multicore with no spawn/join per batch);
 //! * [`GpuSimBackend`] — the paper's operators lowered onto the
 //!   [`crate::gpusim::shader`] stream VM, so the simulated 2006 GPU
 //!   arithmetic models (NV35, R300, ...) are a servable substrate;
@@ -21,12 +27,14 @@
 //! * [`BackendSpec`] — a `Send + Clone` construction recipe, because
 //!   PJRT wrapper types must live on the device thread that builds them;
 //! * [`BufferPool`] — reusable `Vec<f32>` planes so the dispatch hot
-//!   path performs no per-batch allocation.
+//!   path performs no per-batch allocation, and [`WorkerArenas`] — one
+//!   pool per persistent worker, so the crew never contends on a
+//!   single free-list.
 //!
 //! The operator surface itself is typed: [`Op`] encodes name, arity and
-//! plane counts as a closed enum, so `execute` takes an `Op`, not a
+//! plane counts as a closed enum, so jobs carry an `Op`, not a
 //! string — unknown-operator errors can only originate at the parse
-//! boundary ([`Op::parse`], the CLI, the deprecated string shims).
+//! boundary ([`Op::parse`] and the CLI).
 //!
 //! The coordinator ([`crate::coordinator::service`]) dispatches purely
 //! through `Box<dyn KernelBackend>`; N shard threads each own one
@@ -46,10 +54,11 @@ pub use error::ServiceError;
 pub use gpusim::GpuSimBackend;
 pub use native::NativeBackend;
 pub use op::Op;
-pub use pool::BufferPool;
+pub use pool::{BufferPool, WorkerArenas};
 pub use xla::XlaBackend;
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Catalogue row: one servable elementwise operator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -103,6 +112,77 @@ pub struct BackendStats {
     pub busy_seconds: f64,
 }
 
+/// An owned, validated execution job: one operator plus its SoA input
+/// planes behind `Arc`s.
+///
+/// This is the unit the whole execution pipeline moves around.
+/// `Arc`-shared planes are the property that makes **persistent**
+/// worker threads possible: a scoped borrow can serve one batch and
+/// must join before `execute` returns, but an `Arc` clone can ride a
+/// channel into a long-lived worker, outlive nothing it shouldn't, and
+/// cost one refcount bump per chunk. Validation happens once, at
+/// construction — a job that exists has the operator's arity, unragged
+/// planes, and a non-zero batch length — so backends never re-check
+/// inputs on the hot path.
+///
+/// Cloning a job is cheap (`n_in` refcount bumps); the coordinator
+/// builds jobs straight from request planes without copying lanes.
+#[derive(Clone, Debug)]
+pub struct ExecJob {
+    op: Op,
+    inputs: Vec<Arc<Vec<f32>>>,
+    len: usize,
+}
+
+impl ExecJob {
+    /// Validate `inputs` against `op` and wrap them (each plane moves
+    /// into its own `Arc`; no lane is copied).
+    pub fn new(op: Op, inputs: Vec<Vec<f32>>) -> Result<ExecJob, ServiceError> {
+        let len = op.validate_planes(&inputs)?;
+        Ok(ExecJob { op, inputs: inputs.into_iter().map(Arc::new).collect(), len })
+    }
+
+    /// Build a job from planes that are already shared (the
+    /// coordinator's path: request planes are `Arc`ed at dispatch).
+    pub fn from_shared(
+        op: Op, inputs: Vec<Arc<Vec<f32>>>,
+    ) -> Result<ExecJob, ServiceError> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|p| p.as_slice()).collect();
+        let len = op.validate_planes(&refs)?;
+        Ok(ExecJob { op, inputs, len })
+    }
+
+    pub fn op(&self) -> Op {
+        self.op
+    }
+
+    /// Elements per plane (the batch length).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Always false — zero-length jobs fail validation.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The shared input planes (what chunk jobs clone).
+    pub fn inputs(&self) -> &[Arc<Vec<f32>>] {
+        &self.inputs
+    }
+
+    /// Borrowed plane views for serial execution paths.
+    pub fn input_refs(&self) -> Vec<&[f32]> {
+        self.inputs.iter().map(|p| p.as_slice()).collect()
+    }
+
+    /// Unwrap into the shared planes (the coordinator reclaims pooled
+    /// gather buffers through `Arc::try_unwrap` after execution).
+    pub fn into_inputs(self) -> Vec<Arc<Vec<f32>>> {
+        self.inputs
+    }
+}
+
 /// One execution substrate for the operator catalogue.
 ///
 /// Implementations are *not* required to be `Send`/`Sync` (PJRT wrapper
@@ -124,24 +204,38 @@ pub trait KernelBackend {
         self.ops().contains(&op)
     }
 
-    /// Execute `op` elementwise over SoA input planes into pre-sized
-    /// output planes (`outputs.len() == op.n_out()`, every plane the
-    /// batch length). Backends must fill every output lane on success.
+    /// Execute a validated [`ExecJob`] elementwise into pre-sized
+    /// output planes (`outputs.len() == job.op().n_out()`, every plane
+    /// the batch length). Backends must fill every output lane on
+    /// success. Input-shape errors are unrepresentable here — they die
+    /// at [`ExecJob`] construction.
     fn execute(
-        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, job: &ExecJob, outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError>;
+
+    /// Validate-and-run convenience over borrowed planes: builds a
+    /// one-shot [`ExecJob`] (copying the planes) and executes it. The
+    /// harness/test path — the serving path builds jobs once and
+    /// reuses them.
+    fn execute_planes(
+        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+    ) -> Result<ExecReport, ServiceError> {
+        let job = ExecJob::new(op, inputs.iter().map(|p| p.to_vec()).collect())?;
+        self.execute(&job, outputs)
+    }
 
     /// Cumulative counters since construction.
     fn stats(&self) -> BackendStats;
 }
 
-/// Validate an execute call against the operator's arity; returns the
-/// batch length. Input rules are [`Op::validate_planes`] (the single
-/// source); only the output-buffer checks are backend-side specifics.
-pub(crate) fn check_shapes(
-    backend: &'static str, op: Op, inputs: &[&[f32]], outputs: &[Vec<f32>],
+/// Validate the output buffers of an execute call against the job;
+/// returns the batch length. Input rules were enforced when the
+/// [`ExecJob`] was built — only the output-buffer checks remain
+/// backend-side.
+pub(crate) fn check_outputs(
+    backend: &'static str, job: &ExecJob, outputs: &[Vec<f32>],
 ) -> Result<usize, ServiceError> {
-    let n = op.validate_planes(inputs)?;
+    let (op, n) = (job.op(), job.len());
     if outputs.len() != op.n_out() {
         return Err(ServiceError::Shape(format!(
             "{backend}: '{op}' wants {} output planes, got {}",
@@ -266,33 +360,61 @@ mod tests {
     }
 
     #[test]
-    fn check_shapes_accepts_and_rejects() {
-        let a = vec![1.0f32; 8];
-        let b = vec![2.0f32; 8];
-        let ins: Vec<&[f32]> = vec![&a, &b];
-        let mut outs = vec![vec![0.0f32; 8]];
-        let n = check_shapes("t", Op::Add, &ins, &outs).unwrap();
-        assert_eq!(n, 8);
+    fn exec_job_validates_at_construction() {
+        let job = ExecJob::new(Op::Add, vec![vec![1.0f32; 8], vec![2.0f32; 8]]).unwrap();
+        assert_eq!(job.op(), Op::Add);
+        assert_eq!(job.len(), 8);
+        assert!(!job.is_empty());
+        assert_eq!(job.inputs().len(), 2);
+        assert_eq!(job.input_refs()[1], &[2.0f32; 8]);
 
         assert!(matches!(
-            check_shapes("t", Op::Add, &ins[..1], &outs),
-            Err(ServiceError::Arity { .. })
+            ExecJob::new(Op::Add, vec![vec![1.0f32; 8]]),
+            Err(ServiceError::Arity { want: 2, got: 1, .. })
         ));
-        let short = vec![1.0f32; 4];
-        let ragged: Vec<&[f32]> = vec![&a, &short];
         assert!(matches!(
-            check_shapes("t", Op::Add, &ragged, &outs),
+            ExecJob::new(Op::Add, vec![vec![1.0f32; 8], vec![1.0f32; 4]]),
             Err(ServiceError::RaggedPlanes { plane: 1, want: 8, got: 4, .. })
         ));
-        outs[0].truncate(4);
         assert!(matches!(
-            check_shapes("t", Op::Add, &ins, &outs),
+            ExecJob::new(Op::Add, vec![vec![], vec![]]),
+            Err(ServiceError::EmptyBatch { op: Op::Add })
+        ));
+    }
+
+    #[test]
+    fn exec_job_shares_planes_without_copying() {
+        let plane = vec![1.0f32; 64];
+        let ptr = plane.as_ptr();
+        let job = ExecJob::new(Op::Split, vec![plane]).unwrap();
+        assert_eq!(job.inputs()[0].as_ptr(), ptr, "plane was copied");
+        // a clone is refcount bumps, not lane copies
+        let clone = job.clone();
+        assert_eq!(clone.inputs()[0].as_ptr(), ptr);
+        // shared construction validates too
+        let shared = job.into_inputs();
+        assert!(ExecJob::from_shared(Op::Split, shared.clone()).is_ok());
+        assert!(matches!(
+            ExecJob::from_shared(Op::Add, shared),
+            Err(ServiceError::Arity { .. })
+        ));
+    }
+
+    #[test]
+    fn check_outputs_accepts_and_rejects() {
+        let job = ExecJob::new(Op::Add, vec![vec![1.0f32; 8], vec![2.0f32; 8]]).unwrap();
+        let mut outs = vec![vec![0.0f32; 8]];
+        assert_eq!(check_outputs("t", &job, &outs).unwrap(), 8);
+        outs.push(vec![0.0f32; 8]);
+        assert!(matches!(
+            check_outputs("t", &job, &outs),
             Err(ServiceError::Shape(_))
         ));
-        let empty: Vec<&[f32]> = vec![&[], &[]];
+        outs.pop();
+        outs[0].truncate(4);
         assert!(matches!(
-            check_shapes("t", Op::Add, &empty, &outs),
-            Err(ServiceError::EmptyBatch { op: Op::Add })
+            check_outputs("t", &job, &outs),
+            Err(ServiceError::Shape(_))
         ));
     }
 

@@ -1,27 +1,37 @@
-//! [`NativeBackend`]: the `ff::vector` SoA kernels, multicore.
+//! [`NativeBackend`]: the `ff::vector` SoA kernels, multicore with a
+//! **persistent** worker crew.
 //!
 //! The seed served the native path single-threaded from the device
-//! loop. This backend keeps the kernels bit-identical but executes a
-//! batch in parallel over fixed-size chunks: output planes are split
-//! into disjoint `&mut` windows, chunk jobs go into a shared queue, and
-//! a scoped-thread worker pool drains it. Elementwise kernels make the
-//! chunking exact — lane `i` of every output depends only on lane `i`
-//! of every input, so chunked results are bit-identical to one sweep.
+//! loop; PR 1 parallelised it with a scoped-thread pool spawned and
+//! joined inside every `execute` (tens of µs of spawn/join per batch —
+//! exactly the launch overhead the paper's long packed streams exist to
+//! amortise). This revision removes that per-batch cost: workers are
+//! spawned **once**, at backend construction, and fed chunk jobs over a
+//! channel. No `thread::scope` remains on the execute hot path.
 //!
-//! Small batches (under two chunks) skip the pool entirely: thread
-//! wake-up costs more than the kernel at that size.
+//! What makes that possible is the owned-buffer job model
+//! ([`crate::backend::ExecJob`]): input planes live behind `Arc`s, so a
+//! chunk job can ride the channel into a long-lived worker (a scoped
+//! borrow could never leave the `execute` call). Each worker computes
+//! its chunk into buffers taken from *its own* arena
+//! ([`crate::backend::WorkerArenas`] — no contention on a shared pool)
+//! and reports `(output range, chunk planes)` back; the execute call
+//! assembles the ranges into the caller's output planes and returns the
+//! chunk buffers to the arena they came from. Elementwise kernels make
+//! the chunking exact — lane `i` of every output depends only on lane
+//! `i` of every input, so chunked results are bit-identical to one
+//! sweep, and the assembly is a straight `copy_from_slice` per range.
 //!
-//! The pool is scoped per `execute` call (spawn + join each batch).
-//! That costs tens of microseconds per large batch — acceptable next
-//! to the ≥ 2-chunk kernel work it gates, and it keeps the backend
-//! borrow-only (jobs hold `&mut` windows into the caller's planes, no
-//! channels or owned buffers). A persistent worker pool fed by a
-//! channel would shave that overhead; ROADMAP lists it under
-//! "Backends & sharding".
+//! Small batches (under two chunks) skip the crew entirely: a channel
+//! round-trip costs more than the kernel at that size.
 
-use super::{check_shapes, BackendStats, ExecReport, KernelBackend, Op, ServiceError};
+use super::pool::WorkerArenas;
+use super::{
+    check_outputs, BackendStats, ExecJob, ExecReport, KernelBackend, Op, ServiceError,
+};
 use crate::ff::vector;
-use std::sync::Mutex;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 /// Default chunk: 16k lanes ≈ 64 KiB per plane, L2-friendly and small
@@ -31,21 +41,125 @@ pub const DEFAULT_CHUNK: usize = 16 * 1024;
 /// Floor on the chunk size; below this the queue overhead dominates.
 const MIN_CHUNK: usize = 1024;
 
-/// Native CPU backend with a chunked scoped-thread worker pool.
+/// One chunk of a batch, dispatched to a persistent worker: shared
+/// input planes plus the per-chunk output range `[start, start + len)`
+/// this job covers.
+struct ChunkJob {
+    op: Op,
+    inputs: Vec<Arc<Vec<f32>>>,
+    start: usize,
+    len: usize,
+    /// Completion channel of the batch this chunk belongs to.
+    done: mpsc::Sender<ChunkResult>,
+}
+
+/// A computed chunk on its way back to the batch assembler.
+struct ChunkResult {
+    start: usize,
+    /// Which arena the output buffers must return to.
+    worker: usize,
+    outs: Vec<Vec<f32>>,
+    err: Option<String>,
+}
+
+/// The standing crew: one shared job queue, N long-lived threads,
+/// per-worker buffer arenas. Dropping it disconnects the queue and
+/// joins every worker.
+struct WorkerPool {
+    /// `Some` for the pool's whole life; taken in `drop` so the queue
+    /// disconnects before the joins.
+    job_tx: Option<mpsc::Sender<ChunkJob>>,
+    arenas: Arc<WorkerArenas>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads; `None` when one worker (or fewer) is
+    /// requested — the serial path needs no crew. Spawn failures
+    /// degrade to however many threads came up.
+    fn spawn(workers: usize) -> Option<WorkerPool> {
+        if workers <= 1 {
+            return None;
+        }
+        let (job_tx, job_rx) = mpsc::channel::<ChunkJob>();
+        let queue = Arc::new(Mutex::new(job_rx));
+        let arenas = Arc::new(WorkerArenas::new(workers));
+        let mut handles = Vec::with_capacity(workers);
+        for me in 0..workers {
+            let (q, a) = (queue.clone(), arenas.clone());
+            match std::thread::Builder::new()
+                .name(format!("ffgpu-native-worker-{me}"))
+                .spawn(move || worker_main(me, q, a))
+            {
+                Ok(h) => handles.push(h),
+                Err(_) => break,
+            }
+        }
+        if handles.is_empty() {
+            return None;
+        }
+        Some(WorkerPool { job_tx: Some(job_tx), arenas, handles })
+    }
+
+    fn size(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // dropping the sender disconnects the queue; each worker's recv
+        // errors out and its loop exits
+        self.job_tx.take();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A worker's whole life: pull a chunk job, compute it into buffers
+/// from this worker's arena, report the range back, repeat until the
+/// queue disconnects.
+fn worker_main(
+    me: usize, queue: Arc<Mutex<mpsc::Receiver<ChunkJob>>>, arenas: Arc<WorkerArenas>,
+) {
+    loop {
+        // the lock is held across the blocking recv: idle workers queue
+        // on the mutex and each arriving job wakes exactly one of them
+        let job = match queue.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break,
+        };
+        let Ok(ChunkJob { op, inputs, start, len, done }) = job else { break };
+        let ins: Vec<&[f32]> = inputs.iter().map(|p| &p[start..start + len]).collect();
+        let mut outs: Vec<Vec<f32>> =
+            (0..op.n_out()).map(|_| arenas.take(me, len)).collect();
+        let err = {
+            let mut windows: Vec<&mut [f32]> =
+                outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+            vector::dispatch_slices(op.name(), &ins, &mut windows).err()
+        };
+        drop(ins);
+        // release the Arc clones *before* signalling completion, so a
+        // caller that drains all chunk results can reclaim its gather
+        // buffers through `Arc::try_unwrap` immediately
+        drop(inputs);
+        let _ = done.send(ChunkResult { start, worker: me, outs, err });
+    }
+}
+
+/// Native CPU backend: chunked execution over a persistent channel-fed
+/// worker crew.
 pub struct NativeBackend {
     chunk: usize,
-    workers: usize,
+    /// `None` in single-worker (serial) mode.
+    pool: Option<WorkerPool>,
     stats: BackendStats,
 }
 
-/// One chunk of work: parallel input windows and disjoint output windows.
-struct Job<'a> {
-    ins: Vec<&'a [f32]>,
-    outs: Vec<&'a mut [f32]>,
-}
-
 impl NativeBackend {
-    /// `workers == 0` selects one worker per available core.
+    /// `workers == 0` selects one worker per available core; `1` is the
+    /// serial (seed-comparable) mode with no crew at all.
     pub fn new(chunk: usize, workers: usize) -> NativeBackend {
         let workers = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
@@ -54,17 +168,24 @@ impl NativeBackend {
         };
         NativeBackend {
             chunk: chunk.max(MIN_CHUNK),
-            workers,
+            pool: WorkerPool::spawn(workers),
             stats: BackendStats::default(),
         }
     }
 
+    /// Live worker threads (1 in serial mode).
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.as_ref().map_or(1, WorkerPool::size)
     }
 
     pub fn chunk(&self) -> usize {
         self.chunk
+    }
+
+    /// Chunk buffers currently parked across the worker arenas (0 in
+    /// serial mode) — observability for the arena recycling path.
+    pub fn idle_buffers(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.arenas.idle())
     }
 }
 
@@ -78,54 +199,70 @@ impl KernelBackend for NativeBackend {
     }
 
     fn execute(
-        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, job: &ExecJob, outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError> {
-        let n = check_shapes("native", op, inputs, outputs)?;
+        let n = check_outputs("native", job, outputs)?;
         let t0 = Instant::now();
-        let launches = if self.workers <= 1 || n < self.chunk * 2 {
-            vector::dispatch(op.name(), inputs, outputs).map_err(ServiceError::Backend)?;
-            1
-        } else {
-            // carve the batch into chunk jobs with disjoint output windows
-            let mut jobs: Vec<Job> = Vec::with_capacity(n.div_ceil(self.chunk));
-            let mut tails: Vec<&mut [f32]> =
-                outputs.iter_mut().map(|v| v.as_mut_slice()).collect();
-            let mut start = 0usize;
-            while start < n {
-                let len = self.chunk.min(n - start);
-                let ins: Vec<&[f32]> =
-                    inputs.iter().map(|p| &p[start..start + len]).collect();
-                let mut outs = Vec::with_capacity(tails.len());
-                for t in tails.iter_mut() {
-                    let (head, rest) = std::mem::take(t).split_at_mut(len);
-                    outs.push(head);
-                    *t = rest;
+        let chunks = n.div_ceil(self.chunk);
+        // parallel only from two *full* chunks up (a batch barely past
+        // one chunk would ship a degenerate tail job through the crew)
+        let launches = match &self.pool {
+            Some(pool) if n >= self.chunk * 2 => {
+                let tx = pool.job_tx.as_ref().expect("queue lives as long as the pool");
+                let (done_tx, done_rx) = mpsc::channel::<ChunkResult>();
+                let mut start = 0usize;
+                while start < n {
+                    let len = self.chunk.min(n - start);
+                    tx.send(ChunkJob {
+                        op: job.op(),
+                        inputs: job.inputs().to_vec(),
+                        start,
+                        len,
+                        done: done_tx.clone(),
+                    })
+                    .map_err(|_| {
+                        ServiceError::Backend("native worker crew is gone".into())
+                    })?;
+                    start += len;
                 }
-                jobs.push(Job { ins, outs });
-                start += len;
-            }
-            let launches = jobs.len();
-            let workers = self.workers.min(launches);
-            let queue = Mutex::new(jobs);
-            let failure: Mutex<Option<String>> = Mutex::new(None);
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    scope.spawn(|| loop {
-                        let job = queue.lock().unwrap().pop();
-                        let Some(mut job) = job else { break };
-                        if let Err(e) =
-                            vector::dispatch_slices(op.name(), &job.ins, &mut job.outs)
-                        {
-                            *failure.lock().unwrap() = Some(e);
-                            break;
+                drop(done_tx);
+                // assemble the per-chunk output ranges; keep draining
+                // even after a failure so every buffer returns home
+                let mut failure: Option<String> = None;
+                for _ in 0..chunks {
+                    let Ok(res) = done_rx.recv() else {
+                        failure
+                            .get_or_insert_with(|| "native worker died mid-batch".into());
+                        break;
+                    };
+                    match res.err {
+                        Some(e) => {
+                            failure.get_or_insert(e);
                         }
-                    });
+                        None => {
+                            for (o, plane) in outputs.iter_mut().enumerate() {
+                                plane[res.start..res.start + res.outs[o].len()]
+                                    .copy_from_slice(&res.outs[o]);
+                            }
+                        }
+                    }
+                    for b in res.outs {
+                        pool.arenas.put(res.worker, b);
+                    }
                 }
-            });
-            if let Some(e) = failure.into_inner().unwrap_or(None) {
-                return Err(ServiceError::Backend(e));
+                if let Some(e) = failure {
+                    return Err(ServiceError::Backend(e));
+                }
+                chunks
             }
-            launches
+            // small batches (or serial mode) run inline: a channel
+            // round-trip costs more than the kernel at this size
+            _ => {
+                let ins = job.input_refs();
+                vector::dispatch(job.op().name(), &ins, outputs)
+                    .map_err(ServiceError::Backend)?;
+                1
+            }
         };
         self.stats.executions += 1;
         self.stats.elements += n as u64;
@@ -145,9 +282,9 @@ mod tests {
 
     fn run(backend: &mut NativeBackend, op: Op, n: usize, seed: u64) -> Vec<Vec<f32>> {
         let planes = workload::planes_for(op.name(), n, seed);
-        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = ExecJob::new(op, planes).unwrap();
         let mut outs = vec![vec![0.0f32; n]; op.n_out()];
-        backend.execute(op, &refs, &mut outs).unwrap();
+        backend.execute(&job, &mut outs).unwrap();
         outs
     }
 
@@ -173,13 +310,39 @@ mod tests {
     }
 
     #[test]
+    fn persistent_workers_survive_consecutive_batches() {
+        // the tentpole property: ONE crew serves many batches — no
+        // spawn/join between them, answers stay bit-identical
+        let mut serial = NativeBackend::new(DEFAULT_CHUNK, 1);
+        let mut crew = NativeBackend::new(MIN_CHUNK, 4);
+        let workers_before = crew.workers();
+        for round in 0..4u64 {
+            let n = MIN_CHUNK * (3 + round as usize) + 41 * round as usize;
+            let a = run(&mut serial, Op::Mul22, n, 0xBEE5 + round);
+            let b = run(&mut crew, Op::Mul22, n, 0xBEE5 + round);
+            for i in 0..n {
+                assert_eq!(
+                    (a[0][i].to_bits(), a[1][i].to_bits()),
+                    (b[0][i].to_bits(), b[1][i].to_bits()),
+                    "round={round} lane={i}"
+                );
+            }
+        }
+        assert_eq!(crew.workers(), workers_before, "crew changed size");
+        let st = crew.stats();
+        assert_eq!(st.executions, 4, "every batch went through the same backend");
+        // chunk buffers were recycled into the worker arenas, not leaked
+        assert!(crew.idle_buffers() > 0, "arenas never saw a buffer back");
+    }
+
+    #[test]
     fn parallel_path_reports_chunk_launches() {
         let mut b = NativeBackend::new(MIN_CHUNK, 4);
         let n = MIN_CHUNK * 4;
         let planes = workload::planes_for("add22", n, 3);
-        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = ExecJob::new(Op::Add22, planes).unwrap();
         let mut outs = vec![vec![0.0f32; n]; 2];
-        let rep = b.execute(Op::Add22, &refs, &mut outs).unwrap();
+        let rep = b.execute(&job, &mut outs).unwrap();
         assert_eq!(rep.launches, 4);
         assert_eq!(rep.padded_elements, 0);
         let st = b.stats();
@@ -191,25 +354,31 @@ mod tests {
     fn small_batches_take_the_serial_path() {
         let mut b = NativeBackend::new(DEFAULT_CHUNK, 8);
         let planes = workload::planes_for("add22", 100, 5);
-        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = ExecJob::new(Op::Add22, planes).unwrap();
         let mut outs = vec![vec![0.0f32; 100]; 2];
-        let rep = b.execute(Op::Add22, &refs, &mut outs).unwrap();
+        let rep = b.execute(&job, &mut outs).unwrap();
         assert_eq!(rep.launches, 1);
+        assert_eq!(b.idle_buffers(), 0, "serial path must not touch the arenas");
     }
 
     #[test]
-    fn rejects_bad_calls() {
+    fn rejects_bad_output_buffers() {
+        // input-shape errors die at ExecJob construction now; the
+        // backend still rejects mismatched output buffers
         let mut b = NativeBackend::new(DEFAULT_CHUNK, 2);
-        let a = vec![1.0f32; 8];
-        let ins: Vec<&[f32]> = vec![&a, &a];
-        let mut outs = vec![vec![0.0f32; 8]];
         assert!(matches!(
-            b.execute(Op::Add22, &ins, &mut outs),
+            ExecJob::new(Op::Add22, vec![vec![1.0f32; 8]; 2]),
             Err(ServiceError::Arity { .. })
         ));
-        let mut wrong = vec![vec![0.0f32; 8]; 2];
+        let job = ExecJob::new(Op::Add, vec![vec![1.0f32; 8]; 2]).unwrap();
+        let mut wrong_count = vec![vec![0.0f32; 8]; 2];
         assert!(matches!(
-            b.execute(Op::Add, &ins, &mut wrong),
+            b.execute(&job, &mut wrong_count),
+            Err(ServiceError::Shape(_))
+        ));
+        let mut wrong_len = vec![vec![0.0f32; 4]];
+        assert!(matches!(
+            b.execute(&job, &mut wrong_len),
             Err(ServiceError::Shape(_))
         ));
     }
@@ -221,5 +390,16 @@ mod tests {
         assert!(b.chunk() >= MIN_CHUNK);
         assert!(b.supports(Op::Add22));
         assert_eq!(b.ops().len(), Op::COUNT);
+    }
+
+    #[test]
+    fn execute_planes_convenience_matches_job_path() {
+        let mut b = NativeBackend::new(DEFAULT_CHUNK, 1);
+        let planes = workload::planes_for("add", 64, 9);
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let mut via_planes = vec![vec![0.0f32; 64]];
+        b.execute_planes(Op::Add, &refs, &mut via_planes).unwrap();
+        let via_job = run(&mut b, Op::Add, 64, 9);
+        assert_eq!(via_planes[0], via_job[0]);
     }
 }

@@ -1,10 +1,20 @@
-//! [`BufferPool`]: reusable `Vec<f32>` planes for the dispatch hot path.
+//! [`BufferPool`]: reusable `Vec<f32>` planes for the dispatch hot path,
+//! and [`WorkerArenas`]: one pool **per persistent worker**.
 //!
 //! The seed coordinator allocated every gather plane and output plane
 //! per batch. Each shard thread now owns a pool; buffers cycle through
 //! gather → execute → scatter → back to the pool, so steady-state
 //! serving performs no plane allocation (capacity grows to the largest
 //! batch seen and stays).
+//!
+//! The persistent native worker crew gets [`WorkerArenas`] instead of
+//! one shared pool: each worker takes chunk buffers from *its own*
+//! mutex-guarded free-list and the batch assembler returns them there,
+//! so workers never contend with each other on a single free-list (a
+//! worker's arena mutex is only ever touched by that worker and,
+//! briefly, by the assembler handing buffers back).
+
+use std::sync::Mutex;
 
 /// A trivial free-list of `f32` planes. Not thread-safe by design: one
 /// pool per shard thread.
@@ -54,6 +64,53 @@ impl BufferPool {
     }
 }
 
+/// Per-worker buffer arenas for a persistent worker crew: worker `i`
+/// takes from arena `i`, and whoever assembles the batch returns each
+/// chunk buffer to the arena it came from. No free-list is shared
+/// between workers, so the crew never contends on one pool.
+#[derive(Debug)]
+pub struct WorkerArenas {
+    arenas: Vec<Mutex<BufferPool>>,
+}
+
+impl WorkerArenas {
+    /// One arena per worker (at least one).
+    pub fn new(workers: usize) -> WorkerArenas {
+        WorkerArenas {
+            arenas: (0..workers.max(1)).map(|_| Mutex::new(BufferPool::new())).collect(),
+        }
+    }
+
+    /// Number of arenas (== workers).
+    pub fn workers(&self) -> usize {
+        self.arenas.len()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements from `worker`'s
+    /// arena.
+    pub fn take(&self, worker: usize, len: usize) -> Vec<f32> {
+        match self.arenas[worker].lock() {
+            Ok(mut pool) => pool.take(len),
+            Err(_) => vec![0.0; len], // poisoned arena: degrade to alloc
+        }
+    }
+
+    /// Return a buffer to the arena it was taken from.
+    pub fn put(&self, worker: usize, v: Vec<f32>) {
+        if let Ok(mut pool) = self.arenas[worker].lock() {
+            pool.put(v);
+        }
+    }
+
+    /// Buffers parked across all arenas.
+    pub fn idle(&self) -> usize {
+        self.arenas
+            .iter()
+            .map(|a| a.lock().map(|p| p.idle()).unwrap_or(0))
+            .sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +150,29 @@ mod tests {
         // zero-capacity buffers are not worth parking
         pool.put(Vec::new());
         assert!(pool.idle() <= 32);
+    }
+
+    #[test]
+    fn worker_arenas_are_isolated_per_worker() {
+        let arenas = WorkerArenas::new(3);
+        assert_eq!(arenas.workers(), 3);
+        let a = arenas.take(0, 100);
+        let ptr = a.as_ptr();
+        arenas.put(0, a);
+        assert_eq!(arenas.idle(), 1);
+        // worker 1 never sees worker 0's buffer
+        let b = arenas.take(1, 100);
+        assert_ne!(b.as_ptr(), ptr, "arena leaked across workers");
+        // worker 0 reuses its own
+        let c = arenas.take(0, 50);
+        assert_eq!(c.as_ptr(), ptr, "own arena not reused");
+        assert!(c.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn worker_arenas_never_empty() {
+        let arenas = WorkerArenas::new(0);
+        assert_eq!(arenas.workers(), 1);
+        assert_eq!(arenas.take(0, 8).len(), 8);
     }
 }

@@ -14,7 +14,9 @@
 //! startup failure.
 
 use super::pool::BufferPool;
-use super::{check_shapes, BackendStats, ExecReport, KernelBackend, Op, ServiceError};
+use super::{
+    check_outputs, BackendStats, ExecJob, ExecReport, KernelBackend, Op, ServiceError,
+};
 use crate::coordinator::batcher;
 use crate::runtime::Runtime;
 use std::path::Path;
@@ -73,9 +75,10 @@ impl KernelBackend for XlaBackend {
     }
 
     fn execute(
-        &mut self, op: Op, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+        &mut self, job: &ExecJob, outputs: &mut [Vec<f32>],
     ) -> Result<ExecReport, ServiceError> {
-        let n = check_shapes("xla", op, inputs, outputs)?;
+        let n = check_outputs("xla", job, outputs)?;
+        let op = job.op();
         let sizes = self.sizes_for(op);
         let Some(plan) = batcher::plan(n, &sizes) else {
             return Err(ServiceError::Unsupported { backend: "xla", op });
@@ -86,7 +89,7 @@ impl KernelBackend for XlaBackend {
             let name = format!("{op}_n{}", l.size);
             // stage each input window into a pooled, padded plane
             let mut staged: Vec<Vec<f32>> = Vec::with_capacity(op.n_in());
-            for (p, plane) in inputs.iter().enumerate() {
+            for (p, plane) in job.inputs().iter().enumerate() {
                 let mut buf = self.pool.take_empty();
                 buf.extend_from_slice(&plane[l.start..l.start + l.len]);
                 buf.resize(l.size, op.pad_value(p));

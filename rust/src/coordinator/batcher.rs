@@ -1,10 +1,13 @@
-//! Dynamic batching onto fixed artifact sizes.
+//! Dynamic batching onto fixed launch sizes.
 //!
 //! AOT compilation fixes stream lengths (the paper's grid: 4096 …
 //! 1048576), so arbitrary-size requests must be packed: same-operator
-//! requests are concatenated, the result is padded up to the smallest
-//! compiled size (or split across several launches when it exceeds the
-//! largest), and output planes are sliced back per request.
+//! requests are concatenated, the result is padded up to a quantised
+//! launch size (or split across several launches when it exceeds the
+//! largest), and output planes are sliced back per request. Two
+//! consumers share this planner: the XLA backend (compiled artifact
+//! sizes) and the coordinator's fusion stage
+//! ([`crate::coordinator::ServiceSpec::fuse_sizes`]).
 //!
 //! Padding values are operator-aware ([`Op::pad_value`]): `div22` pads
 //! the divisor with ones so the padding lanes don't produce NaNs that
@@ -32,9 +35,16 @@ pub struct Launch {
 }
 
 /// Plan launches for `total` elements over the available compiled
-/// `sizes` (ascending). Greedy: fill with the largest size while the
-/// remainder exceeds it, then one launch of the smallest size that fits
-/// the tail.
+/// `sizes` (ascending). Fill with the largest size while the remainder
+/// exceeds it; for the tail, compare the single smallest-fitting launch
+/// against splitting the tail across **two** smaller sizes and pick
+/// whichever pads less (ties go to the single launch — fewer launches).
+///
+/// The old greedy tail took the single fit unconditionally, which the
+/// measured padding fractions in `BENCH_coordinator.json` showed to be
+/// the dominant waste: 20000 elements over `[4096, 16384, 65536]` used
+/// to launch one 65536 (45536 padded lanes); the split tail launches
+/// 16384 + 4096 (480 padded lanes).
 ///
 /// Returns `None` when `sizes` is empty.
 pub fn plan(total: usize, sizes: &[usize]) -> Option<Vec<Launch>> {
@@ -42,6 +52,11 @@ pub fn plan(total: usize, sizes: &[usize]) -> Option<Vec<Launch>> {
         return None;
     }
     let largest = *sizes.last().unwrap();
+    if largest == 0 {
+        // a zero-only ladder cannot cover anything (and would spin the
+        // head loop below); treat it like no ladder at all
+        return None;
+    }
     let mut launches = Vec::new();
     let mut start = 0usize;
     let mut remaining = total;
@@ -50,8 +65,29 @@ pub fn plan(total: usize, sizes: &[usize]) -> Option<Vec<Launch>> {
         start += largest;
         remaining -= largest;
     }
-    let tail_size = *sizes.iter().find(|&&s| s >= remaining).unwrap_or(&largest);
-    launches.push(Launch { size: tail_size, start, len: remaining });
+    let single = *sizes.iter().find(|&&s| s >= remaining).unwrap_or(&largest);
+    // best two-launch split: a full launch of some smaller size plus
+    // the smallest size that fits what's left
+    let mut best_pair: Option<(usize, usize)> = None;
+    for &s1 in sizes.iter().filter(|&&s| s < remaining) {
+        let rest = remaining - s1;
+        if let Some(&s2) = sizes.iter().find(|&&s| s >= rest) {
+            let better = match best_pair {
+                Some((a, b)) => s1 + s2 < a + b,
+                None => true,
+            };
+            if better {
+                best_pair = Some((s1, s2));
+            }
+        }
+    }
+    match best_pair {
+        Some((s1, s2)) if s1 + s2 < single => {
+            launches.push(Launch { size: s1, start, len: s1 });
+            launches.push(Launch { size: s2, start: start + s1, len: remaining - s1 });
+        }
+        _ => launches.push(Launch { size: single, start, len: remaining }),
+    }
     Some(launches)
 }
 
@@ -160,18 +196,46 @@ mod tests {
     fn plan_splits_oversize() {
         let sizes = [4096, 16384];
         let p = plan(40000, &sizes).unwrap();
-        assert_eq!(p.len(), 3);
+        // head: two full largest launches; tail 7232 split across two
+        // 4096 launches (960 padded lanes) instead of one 16384 (9152)
+        assert_eq!(p.len(), 4);
         assert_eq!(p[0], Launch { size: 16384, start: 0, len: 16384 });
         assert_eq!(p[1], Launch { size: 16384, start: 16384, len: 16384 });
-        assert_eq!(p[2].start, 32768);
-        assert_eq!(p[2].len, 40000 - 32768);
-        assert_eq!(p[2].size, 16384); // 7232 > 4096, so next size up
+        assert_eq!(p[2], Launch { size: 4096, start: 32768, len: 4096 });
+        assert_eq!(p[3], Launch { size: 4096, start: 36864, len: 40000 - 36864 });
+        assert!(waste(&p) < 9152.0 / 40000.0);
+    }
+
+    #[test]
+    fn plan_tail_splits_only_when_it_pads_less() {
+        let sizes = [4096, 16384, 65536];
+        // 20000: single tail = 65536 (45536 pad); split = 4096 + 16384
+        // (480 pad) wins
+        let p = plan(20000, &sizes).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0], Launch { size: 4096, start: 0, len: 4096 });
+        assert_eq!(p[1], Launch { size: 16384, start: 4096, len: 20000 - 4096 });
+        let padded: usize = p.iter().map(|l| l.size - l.len).sum();
+        assert_eq!(padded, 480);
+        // 5000: single tail 16384 (11384 pad) vs 4096 + 4096 (3192 pad)
+        let p = plan(5000, &sizes).unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0].size, 4096);
+        assert_eq!(p[1], Launch { size: 4096, start: 4096, len: 904 });
+        // 3000: nothing smaller fits a split — the single 4096 stays
+        let p = plan(3000, &sizes).unwrap();
+        assert_eq!(p, vec![Launch { size: 4096, start: 0, len: 3000 }]);
+        // exact fit: ties go to the single launch
+        let p = plan(16384, &sizes).unwrap();
+        assert_eq!(p, vec![Launch { size: 16384, start: 0, len: 16384 }]);
     }
 
     #[test]
     fn plan_empty_inputs() {
         assert!(plan(0, &[4096]).is_none());
         assert!(plan(100, &[]).is_none());
+        // a zero-only ladder can cover nothing and must not spin
+        assert!(plan(100, &[0]).is_none());
     }
 
     fn mk_req(op: Op, vals: &[f32]) -> (OpRequest, mpsc::Receiver<super::super::request::OpResult>) {

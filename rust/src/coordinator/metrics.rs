@@ -168,6 +168,9 @@ const EWMA_ALPHA: f64 = 0.25;
 pub struct OpEwma {
     rate_bits: AtomicU64,
     latency_bits: AtomicU64,
+    /// Padding-waste fraction of the op's fused groups (padded lanes /
+    /// launched lanes) — how well the fusion stage is packing this op.
+    waste_bits: AtomicU64,
     samples: AtomicU64,
     /// Groups *routed into execution*, recorded before the backend
     /// runs. Distinct from `samples` so a shard whose backend keeps
@@ -178,16 +181,18 @@ pub struct OpEwma {
 }
 
 impl OpEwma {
-    fn record(&self, rate: f64, latency: f64) {
+    fn record(&self, rate: f64, latency: f64, waste: f64) {
         let n = self.samples.load(Ordering::Relaxed);
-        let (r, l) = if n == 0 {
-            (rate, latency)
+        let (r, l, w) = if n == 0 {
+            (rate, latency, waste)
         } else {
             let prev_r = f64::from_bits(self.rate_bits.load(Ordering::Relaxed));
             let prev_l = f64::from_bits(self.latency_bits.load(Ordering::Relaxed));
+            let prev_w = f64::from_bits(self.waste_bits.load(Ordering::Relaxed));
             (
                 EWMA_ALPHA * rate + (1.0 - EWMA_ALPHA) * prev_r,
                 EWMA_ALPHA * latency + (1.0 - EWMA_ALPHA) * prev_l,
+                EWMA_ALPHA * waste + (1.0 - EWMA_ALPHA) * prev_w,
             )
         };
         self.rate_bits.store(r.to_bits(), Ordering::Relaxed);
@@ -195,6 +200,7 @@ impl OpEwma {
         // nonzero count is guaranteed to see the bit stores above, so
         // `Some(0.0)` can never be observed on a freshly warmed cell
         self.latency_bits.store(l.to_bits(), Ordering::Relaxed);
+        self.waste_bits.store(w.to_bits(), Ordering::Relaxed);
         self.samples.store(n + 1, Ordering::Release);
     }
 
@@ -211,6 +217,14 @@ impl OpEwma {
             None
         } else {
             Some(f64::from_bits(self.latency_bits.load(Ordering::Relaxed)))
+        }
+    }
+
+    fn waste(&self) -> Option<f64> {
+        if self.samples.load(Ordering::Acquire) == 0 {
+            None
+        } else {
+            Some(f64::from_bits(self.waste_bits.load(Ordering::Relaxed)))
         }
     }
 
@@ -247,15 +261,21 @@ impl Telemetry {
         Telemetry { cells: std::array::from_fn(|_| OpEwma::default()) }
     }
 
-    /// Record one executed group: `elements` lanes served in `seconds`.
-    /// Degenerate timings (`seconds <= 0`, e.g. a coarse clock) are
-    /// dropped rather than poisoning the EWMA with infinities.
-    pub fn record(&self, op: Op, elements: u64, seconds: f64) {
+    /// Record one executed group: `elements` useful lanes served in
+    /// `seconds` with `padded` extra lanes launched beyond them (the
+    /// fusion stage's pad-to-ladder waste). The rate EWMA counts useful
+    /// lanes only — padding shows up in [`Telemetry::waste`], not as
+    /// phantom throughput. Degenerate timings (`seconds <= 0`, e.g. a
+    /// coarse clock) are dropped rather than poisoning the EWMA with
+    /// infinities.
+    pub fn record(&self, op: Op, elements: u64, seconds: f64, padded: u64) {
         if seconds <= 0.0 {
             return;
         }
         let rate = elements as f64 / seconds / 1e6;
-        self.cells[op.index()].record(rate, seconds);
+        let launched = elements + padded;
+        let waste = if launched == 0 { 0.0 } else { padded as f64 / launched as f64 };
+        self.cells[op.index()].record(rate, seconds, waste);
     }
 
     /// Measured throughput for `op` in Melem/s; `None` while cold (no
@@ -267,6 +287,13 @@ impl Telemetry {
     /// Measured group latency for `op` in seconds; `None` while cold.
     pub fn latency(&self, op: Op) -> Option<f64> {
         self.cells[op.index()].latency()
+    }
+
+    /// Measured padding-waste fraction of `op`'s groups (padded lanes /
+    /// launched lanes, EWMA); `None` while cold. 0.0 means every launch
+    /// was exactly full — the fusion quality signal planning reads.
+    pub fn waste(&self, op: Op) -> Option<f64> {
+        self.cells[op.index()].waste()
     }
 
     /// Groups of `op` that have fed this cell.
@@ -368,12 +395,14 @@ mod tests {
         for op in Op::ALL {
             assert_eq!(t.rate(op), None);
             assert_eq!(t.latency(op), None);
+            assert_eq!(t.waste(op), None);
             assert_eq!(t.samples(op), 0);
         }
-        t.record(Op::Mul22, 1_000_000, 0.5); // 2 Melem/s
+        t.record(Op::Mul22, 1_000_000, 0.5, 0); // 2 Melem/s
         assert_eq!(t.samples(Op::Mul22), 1);
         assert!((t.rate(Op::Mul22).unwrap() - 2.0).abs() < 1e-12);
         assert!((t.latency(Op::Mul22).unwrap() - 0.5).abs() < 1e-12);
+        assert_eq!(t.waste(Op::Mul22), Some(0.0));
         // other ops stay cold
         assert_eq!(t.rate(Op::Add22), None);
     }
@@ -381,14 +410,30 @@ mod tests {
     #[test]
     fn telemetry_ewma_tracks_recent_samples() {
         let t = Telemetry::new();
-        t.record(Op::Add22, 1_000_000, 1.0); // 1 Melem/s
+        t.record(Op::Add22, 1_000_000, 1.0, 0); // 1 Melem/s
         for _ in 0..40 {
-            t.record(Op::Add22, 9_000_000, 1.0); // 9 Melem/s
+            t.record(Op::Add22, 9_000_000, 1.0, 0); // 9 Melem/s
         }
         let r = t.rate(Op::Add22).unwrap();
         // converged towards the recent rate, clear of the first sample
         assert!(r > 8.5 && r <= 9.0, "rate={r}");
         assert_eq!(t.samples(Op::Add22), 41);
+    }
+
+    #[test]
+    fn telemetry_waste_tracks_padding_not_throughput() {
+        let t = Telemetry::new();
+        // 3000 useful lanes, 1096 padded: waste 1096/4096, and the
+        // rate counts the 3000 useful lanes only
+        t.record(Op::Div22, 3000, 1e-3, 1096);
+        let w = t.waste(Op::Div22).unwrap();
+        assert!((w - 1096.0 / 4096.0).abs() < 1e-12, "waste={w}");
+        assert!((t.rate(Op::Div22).unwrap() - 3.0).abs() < 1e-12);
+        // exactly-full launches pull the EWMA towards zero
+        for _ in 0..40 {
+            t.record(Op::Div22, 4096, 1e-3, 0);
+        }
+        assert!(t.waste(Op::Div22).unwrap() < 0.01);
     }
 
     #[test]
@@ -404,7 +449,7 @@ mod tests {
         // the shard records every attempt pre-execute, so a success
         // (attempt + sample) keeps attempts == executions, not 2x
         t.record_attempt(Op::Mul22);
-        t.record(Op::Mul22, 1_000_000, 1.0);
+        t.record(Op::Mul22, 1_000_000, 1.0, 0);
         assert_eq!(t.attempts(Op::Mul22), 2);
         assert_eq!(t.samples(Op::Mul22), 1);
     }
@@ -412,8 +457,8 @@ mod tests {
     #[test]
     fn telemetry_drops_degenerate_timings() {
         let t = Telemetry::new();
-        t.record(Op::Add, 1000, 0.0);
-        t.record(Op::Add, 1000, -1.0);
+        t.record(Op::Add, 1000, 0.0, 0);
+        t.record(Op::Add, 1000, -1.0, 0);
         assert_eq!(t.samples(Op::Add), 0);
         assert_eq!(t.rate(Op::Add), None);
     }

@@ -26,24 +26,32 @@
 //!   telemetry-driven [`routing::Measured`], or a custom policy via
 //!   [`Service::start_with_policy`];
 //! * N **shard threads** each own one
-//!   [`crate::backend::KernelBackend`] instance (native multicore
-//!   kernels, the gpusim stream VM, or the PJRT/XLA engine — the
-//!   non-`Sync` engines live on the thread that built them, the exact
-//!   analogue of a GPU command queue);
-//! * each shard coalesces same-operator requests ([`batcher`]),
-//!   gathers them into pooled planes ([`crate::backend::BufferPool`] —
-//!   no per-batch allocation), executes through the trait, and
-//!   scatters replies; pad-to-compiled-size launch planning lives
-//!   inside the XLA backend, where it belongs;
+//!   [`crate::backend::KernelBackend`] instance (native kernels on a
+//!   persistent multicore worker crew, the gpusim stream VM, or the
+//!   PJRT/XLA engine — the non-`Sync` engines live on the thread that
+//!   built them, the exact analogue of a GPU command queue);
+//! * each shard runs the **fusion stage**: it coalesces same-operator
+//!   requests — holding the batch open for a configurable
+//!   [`ServiceSpec::fuse_window`] so cross-client requests land in the
+//!   same launch — gathers them into pooled planes
+//!   ([`crate::backend::BufferPool`] — no per-batch allocation), packs
+//!   them into padded launches over the
+//!   [`ServiceSpec::fuse_sizes`] ladder ([`batcher::plan`], with the
+//!   tail split across two smaller sizes when that pads less), builds
+//!   owned [`crate::backend::ExecJob`]s, executes through the trait,
+//!   and slices outputs back per request;
 //! * [`metrics`] tracks throughput, latency, batch shapes and padding
 //!   waste per shard (so heterogeneous sets are observable shard by
 //!   shard), merged on read — plus the **telemetry plane**: per-(shard,
-//!   op) EWMA throughput/latency cells ([`metrics::Telemetry`]) written
-//!   lock-free by the shard threads and read by measured routing.
+//!   op) EWMA throughput/latency/padding-waste cells
+//!   ([`metrics::Telemetry`]) written lock-free by the shard threads
+//!   and read by measured routing (and future batch-aware planning).
 //!
 //! The seed's stringly-typed surface — `Handle::submit("add22", ...)`,
-//! `Handle::call`, the single-spec `ServiceConfig` — survives as thin
-//! deprecated shims that parse, build a [`Plan`], and delegate.
+//! `Handle::call`, the single-spec `ServiceConfig` — is gone: the last
+//! first-party caller migrated in PR 3 and the shims were removed with
+//! the pipeline refactor. Parse wire names with
+//! [`crate::backend::Op::parse`] and dispatch a [`Plan`].
 //!
 //! Errors are typed end-to-end ([`crate::backend::ServiceError`]):
 //! queue closed, unknown op (parse boundary only), arity mismatch,
@@ -61,6 +69,4 @@ pub use crate::backend::Op;
 pub use plan::{Plan, RequestBuilder, Ticket, TicketState};
 pub use request::OpRequest;
 pub use routing::{Routing, RoutingPolicy, TelemetryView};
-pub use service::{Handle, Service, ServiceSpec};
-#[allow(deprecated)]
-pub use service::ServiceConfig;
+pub use service::{Handle, Service, ServiceSpec, PAPER_FUSE_SIZES};

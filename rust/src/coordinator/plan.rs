@@ -8,9 +8,8 @@
 //! input. Dispatching ([`crate::coordinator::Handle::dispatch`])
 //! returns a [`Ticket`], a future-like handle on the reply: callers
 //! can block ([`Ticket::wait`]), poll ([`Ticket::try_wait`]), or bound
-//! the wait ([`Ticket::wait_timeout`]) — the seed's blocking
-//! `call(op, planes)` survives only as a deprecated shim over this
-//! path.
+//! the wait ([`Ticket::wait_timeout`]) — the seed's stringly-typed
+//! blocking `call(op, planes)` is gone; this is the only path.
 //!
 //! Tickets also carry **lifecycle control**: [`Ticket::deadline`] arms
 //! an expiry and [`Ticket::cancel`] abandons the request, both backed
@@ -324,8 +323,8 @@ impl Ticket {
         }
     }
 
-    /// Unwrap into the raw reply receiver (the deprecated
-    /// `Handle::submit` shim returns this).
+    /// Unwrap into the raw reply receiver, for callers that want to
+    /// select/park on the channel directly.
     pub fn into_receiver(self) -> mpsc::Receiver<OpResult> {
         self.rx
     }

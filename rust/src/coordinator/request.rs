@@ -16,10 +16,14 @@ pub type OpResult = Result<Vec<Vec<f32>>, ServiceError>;
 
 /// A stream-operator request: `op` applied elementwise to `inputs`
 /// (arity must match the operator; every plane the same length).
+///
+/// Input planes are `Arc`-shared: the fusion stage turns them into
+/// [`crate::backend::ExecJob`]s without copying a lane, and persistent
+/// backend workers hold clones across the batch.
 #[derive(Debug)]
 pub struct OpRequest {
     pub op: Op,
-    pub inputs: Vec<Vec<f32>>,
+    pub inputs: Vec<Arc<Vec<f32>>>,
     /// One-shot reply channel.
     pub reply: mpsc::Sender<OpResult>,
     /// Lifecycle state shared with the client's
@@ -30,14 +34,20 @@ pub struct OpRequest {
 
 impl OpRequest {
     /// Build a request with a fresh (un-cancelled, deadline-free)
-    /// lifecycle state.
+    /// lifecycle state. Each plane moves into its own `Arc` (no lane
+    /// is copied).
     pub fn new(op: Op, inputs: Vec<Vec<f32>>, reply: mpsc::Sender<OpResult>) -> OpRequest {
-        OpRequest { op, inputs, reply, ctrl: Arc::new(TicketState::new()) }
+        OpRequest {
+            op,
+            inputs: inputs.into_iter().map(Arc::new).collect(),
+            reply,
+            ctrl: Arc::new(TicketState::new()),
+        }
     }
 
     /// Elements per plane.
     pub fn len(&self) -> usize {
-        self.inputs.first().map_or(0, Vec::len)
+        self.inputs.first().map_or(0, |p| p.len())
     }
 
     pub fn is_empty(&self) -> bool {
@@ -50,7 +60,8 @@ impl OpRequest {
     /// batches into an opaque `Shape(String)` (and older still, let
     /// them panic inside backends).
     pub fn validate(&self) -> Result<(), ServiceError> {
-        self.op.validate_planes(&self.inputs).map(|_| ())
+        let refs: Vec<&[f32]> = self.inputs.iter().map(|p| p.as_slice()).collect();
+        self.op.validate_planes(&refs).map(|_| ())
     }
 }
 

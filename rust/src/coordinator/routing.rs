@@ -147,6 +147,13 @@ impl<'a> TelemetryView<'a> {
         self.shards[shard].telemetry().latency(op)
     }
 
+    /// Measured padding-waste fraction of `op`'s fused groups on
+    /// `shard` (padded lanes / launched lanes, EWMA), `None` while
+    /// cold — the fusion-quality signal planning-aware policies read.
+    pub fn measured_waste(&self, shard: usize, op: Op) -> Option<f64> {
+        self.shards[shard].telemetry().waste(op)
+    }
+
     /// Executed groups of `op` on `shard` so far.
     pub fn samples(&self, shard: usize, op: Op) -> u64 {
         self.shards[shard].telemetry().samples(op)
@@ -451,7 +458,7 @@ mod tests {
     /// attempt recorded pre-execute, a sample on success.
     fn warm(m: &ShardMeta, op: Op, elements: u64, seconds: f64) {
         m.telemetry().record_attempt(op);
-        m.telemetry().record(op, elements, seconds);
+        m.telemetry().record(op, elements, seconds, 0);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! The coordinator service: N shard threads draining batched queues
-//! through the backend layer.
+//! The coordinator service: N shard threads running the two-stage
+//! execution pipeline over the backend layer.
 //!
 //! Clients hold a cheap cloneable [`Handle`], build typed
 //! [`Plan`]s (shape-checked at build time), and
@@ -10,88 +10,53 @@
 //! [`crate::backend::KernelBackend`] instance (built *on* the shard
 //! thread — PJRT wrapper types are not `Send`), its own
 //! [`crate::backend::BufferPool`], and its own [`Metrics`] (no
-//! cross-shard contention on the hot path). A shard coalesces whatever
-//! is pending (up to `max_batch` requests per operator), gathers the
-//! group into pooled planes, executes through
-//! `Box<dyn KernelBackend>`, and scatters replies.
+//! cross-shard contention on the hot path).
+//!
+//! **The fusion stage.** A shard drains whatever is pending; with a
+//! [`ServiceSpec::fuse_window`] armed it then holds the batch open —
+//! up to the window past the first arrival — so requests from
+//! different clients land in the *same* launch instead of whichever
+//! drain happened to catch them. Same-operator requests of any sizes
+//! are concatenated and, when a [`ServiceSpec::fuse_sizes`] ladder is
+//! configured, packed into padded launches by
+//! [`batcher::plan`] (operator-aware pad values:
+//! `div22` pads its divisor with ones); outputs are sliced back per
+//! request, and each group's padding-waste fraction feeds the shard's
+//! per-op telemetry ([`crate::coordinator::metrics::Telemetry::waste`])
+//! where measured routing — and `BENCH_coordinator.json` — can see
+//! fusion quality.
 //!
 //! The shard set is described by a [`ServiceSpec`] and may be
 //! **heterogeneous**: one [`crate::backend::BackendSpec`] per shard
 //! (e.g. `[native, native, gpusim:nv35]` — two workhorses and an
-//! arithmetic-model canary). The seed's single-spec [`ServiceConfig`]
-//! and two-variant [`Backend`] enum remain as deprecated shims.
+//! arithmetic-model canary).
 
 use super::batcher;
 use super::metrics::{Metrics, Snapshot};
 use super::plan::{Plan, Ticket, TicketState};
-use super::request::{OpRequest, OpResult};
+use super::request::OpRequest;
 use super::routing::{Routing, RoutingPolicy, ShardMeta, TelemetryView};
-use crate::backend::{BackendSpec, BufferPool, KernelBackend, Op, ServiceError};
-use std::path::PathBuf;
+use crate::backend::{
+    BackendSpec, BufferPool, ExecJob, KernelBackend, Op, ServiceError,
+};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-/// The seed's engine selector, kept as a shim for old call sites.
-#[deprecated(note = "use crate::backend::BackendSpec")]
-#[derive(Clone, Debug)]
-pub enum Backend {
-    /// PJRT XLA artifacts from this directory (the "GPU path").
-    Xla(PathBuf),
-    /// Native rust kernels (the "CPU path" / mock).
-    Cpu,
-}
+/// The paper's stream-size grid (Tables 3/4), doubling as the default
+/// fusion ladder: `--fuse-window` packs fused batches up to these
+/// launch sizes unless the spec configures its own.
+pub const PAPER_FUSE_SIZES: [usize; 5] = [4096, 16384, 65536, 262144, 1048576];
 
-#[allow(deprecated)]
-impl From<Backend> for BackendSpec {
-    fn from(b: Backend) -> BackendSpec {
-        match b {
-            Backend::Xla(dir) => BackendSpec::Xla { artifacts: dir, precompile: false },
-            // the seed's Cpu path was single-threaded; the shim keeps
-            // that behaviour so old measurements stay comparable
-            Backend::Cpu => BackendSpec::native_single(),
-        }
-    }
-}
+/// Slice length for the fuse-window wait: deadlines arm on tickets
+/// *after* dispatch, so the window drain re-checks them at least this
+/// often instead of sleeping the whole window blind.
+const DEADLINE_POLL_SLICE: Duration = Duration::from_millis(1);
 
-/// The seed's uniform-shard configuration, kept as a shim: every shard
-/// builds the same `backend` and submission is round-robin.
-#[deprecated(note = "use ServiceSpec: per-shard BackendSpecs plus a Routing policy")]
-#[derive(Clone, Debug)]
-pub struct ServiceConfig {
-    /// Which substrate each shard builds.
-    pub backend: BackendSpec,
-    /// Device threads, each owning one backend instance (>= 1).
-    pub shards: usize,
-    /// Max requests coalesced into one batch per operator.
-    pub max_batch: usize,
-}
-
-#[allow(deprecated)]
-impl Default for ServiceConfig {
-    fn default() -> Self {
-        ServiceConfig { backend: BackendSpec::native(), shards: 1, max_batch: 64 }
-    }
-}
-
-#[allow(deprecated)]
-impl ServiceConfig {
-    /// Shim constructor for the deprecated [`Backend`] enum.
-    pub fn legacy(backend: Backend) -> ServiceConfig {
-        ServiceConfig { backend: backend.into(), ..Default::default() }
-    }
-}
-
-#[allow(deprecated)]
-impl From<ServiceConfig> for ServiceSpec {
-    fn from(c: ServiceConfig) -> ServiceSpec {
-        ServiceSpec::uniform(c.backend, c.shards).with_max_batch(c.max_batch)
-    }
-}
-
-/// Service configuration: one [`BackendSpec`] **per shard** plus the
-/// routing policy that places requests across them.
+/// Service configuration: one [`BackendSpec`] **per shard**, the
+/// routing policy that places requests across them, and the fusion
+/// stage's window/ladder.
 #[derive(Clone, Debug)]
 pub struct ServiceSpec {
     /// One backend recipe per shard; heterogeneous sets are first-class
@@ -102,6 +67,23 @@ pub struct ServiceSpec {
     /// Which built-in [`RoutingPolicy`] places requests
     /// ([`Service::start_with_policy`] accepts custom ones).
     pub routing: Routing,
+    /// How long a shard holds a batch open past the first arrival so
+    /// more same-op requests can fuse into the same launch. Zero (the
+    /// default) launches as soon as the queue is drained — the
+    /// pre-fusion behaviour. The cost is up to one window of extra
+    /// latency on an idle service; the payoff is long packed batches,
+    /// the regime the paper's throughput curves reward. The window
+    /// never holds a request to (or past) its deadline: once the
+    /// tightest pending deadline falls inside the remaining window,
+    /// the batch launches immediately with whatever has arrived.
+    pub fuse_window: Duration,
+    /// Quantised launch sizes for the fusion stage. Fused groups are
+    /// packed into padded launches over this ladder by
+    /// [`batcher::plan`]; empty (the default) launches each group at
+    /// its exact concatenated size with no padding. Sanitised at
+    /// [`Service::start`]: zero rungs are dropped and the ladder is
+    /// sorted and deduplicated (a zero rung would spin the planner).
+    pub fuse_sizes: Vec<usize>,
 }
 
 impl Default for ServiceSpec {
@@ -117,12 +99,14 @@ impl ServiceSpec {
             shards: vec![backend; shards.max(1)],
             max_batch: 64,
             routing: Routing::default(),
+            fuse_window: Duration::ZERO,
+            fuse_sizes: Vec::new(),
         }
     }
 
     /// One shard per entry of `shards`, in order.
     pub fn heterogeneous(shards: Vec<BackendSpec>) -> ServiceSpec {
-        ServiceSpec { shards, max_batch: 64, routing: Routing::default() }
+        ServiceSpec { shards, ..ServiceSpec::default() }
     }
 
     pub fn with_routing(mut self, routing: Routing) -> ServiceSpec {
@@ -132,6 +116,19 @@ impl ServiceSpec {
 
     pub fn with_max_batch(mut self, max_batch: usize) -> ServiceSpec {
         self.max_batch = max_batch;
+        self
+    }
+
+    /// Arm the fusion window (see [`ServiceSpec::fuse_window`]).
+    pub fn with_fuse_window(mut self, window: Duration) -> ServiceSpec {
+        self.fuse_window = window;
+        self
+    }
+
+    /// Configure the fusion launch-size ladder (ascending; see
+    /// [`ServiceSpec::fuse_sizes`]).
+    pub fn with_fuse_sizes(mut self, sizes: Vec<usize>) -> ServiceSpec {
+        self.fuse_sizes = sizes;
         self
     }
 
@@ -178,6 +175,14 @@ impl ServiceSpec {
     }
 }
 
+/// Per-shard slice of the spec the device thread needs.
+#[derive(Clone)]
+struct ShardConfig {
+    max_batch: usize,
+    fuse_window: Duration,
+    fuse_sizes: Vec<usize>,
+}
+
 enum Msg {
     Submit(OpRequest),
     Shutdown,
@@ -204,7 +209,9 @@ pub struct Handle {
 
 impl Handle {
     /// Dispatch a validated [`Plan`]: the routing policy picks a shard,
-    /// the request is enqueued, and the reply arrives on the returned
+    /// the request is enqueued (its planes move into `Arc`s so the
+    /// fusion stage and persistent backend workers can share them
+    /// without copying), and the reply arrives on the returned
     /// [`Ticket`].
     pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
         let (op, inputs, len) = plan.into_parts();
@@ -212,29 +219,18 @@ impl Handle {
         let shard = self.policy.route(op, len, &view) % self.txs.len();
         let (reply, rx) = mpsc::channel();
         let state = Arc::new(TicketState::new());
-        let req = OpRequest { op, inputs, reply, ctrl: state.clone() };
+        let req = OpRequest {
+            op,
+            inputs: inputs.into_iter().map(Arc::new).collect(),
+            reply,
+            ctrl: state.clone(),
+        };
         self.meta[shard].enter();
         if self.txs[shard].send(Msg::Submit(req)).is_err() {
             self.meta[shard].leave(1);
             return Err(ServiceError::QueueClosed);
         }
         Ok(Ticket { rx, op, shard, len, state })
-    }
-
-    /// Submit by operator name and return the raw reply receiver.
-    #[deprecated(note = "build a typed Plan and use Handle::dispatch")]
-    pub fn submit(
-        &self, op: &str, inputs: Vec<Vec<f32>>,
-    ) -> Result<mpsc::Receiver<OpResult>, ServiceError> {
-        let plan = Plan::new(Op::parse(op)?, inputs)?;
-        Ok(self.dispatch(plan)?.into_receiver())
-    }
-
-    /// Submit by operator name and block for the result.
-    #[deprecated(note = "build a typed Plan and use Handle::dispatch(...)?.wait()")]
-    pub fn call(&self, op: &str, inputs: Vec<Vec<f32>>) -> OpResult {
-        let plan = Plan::new(Op::parse(op)?, inputs)?;
-        self.dispatch(plan)?.wait()
     }
 
     /// Number of shards behind this handle.
@@ -257,10 +253,8 @@ impl Handle {
 
 impl Service {
     /// Start one device thread per shard of the spec; fails if any
-    /// backend refuses to build. Accepts a [`ServiceSpec`] or (via the
-    /// deprecated shim) an old `ServiceConfig`.
-    pub fn start(config: impl Into<ServiceSpec>) -> Result<Service, ServiceError> {
-        let spec = config.into();
+    /// backend refuses to build.
+    pub fn start(spec: ServiceSpec) -> Result<Service, ServiceError> {
         let policy = spec.routing.build();
         Service::start_with_policy(spec, policy)
     }
@@ -273,7 +267,19 @@ impl Service {
         if spec.shards.is_empty() {
             return Err(ServiceError::Backend("empty shard set".into()));
         }
-        let max_batch = spec.max_batch.max(1);
+        // sanitise the fusion ladder: a zero rung would make
+        // `batcher::plan`'s head loop spin forever on the shard
+        // thread, and the planner's contract wants ascending unique
+        // sizes. An all-zero ladder degrades to exact-size launches.
+        let mut fuse_sizes = spec.fuse_sizes.clone();
+        fuse_sizes.retain(|&s| s > 0);
+        fuse_sizes.sort_unstable();
+        fuse_sizes.dedup();
+        let cfg = ShardConfig {
+            max_batch: spec.max_batch.max(1),
+            fuse_window: spec.fuse_window,
+            fuse_sizes,
+        };
         let shards = spec.shards.len();
         let meta: Arc<Vec<ShardMeta>> =
             Arc::new(spec.shards.iter().map(|s| ShardMeta::new(s.label())).collect());
@@ -285,12 +291,12 @@ impl Service {
         for (shard, backend_spec) in spec.shards.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Msg>();
             let m = Arc::new(Metrics::new());
-            let (m2, l2, r2, meta2) =
-                (m.clone(), live.clone(), ready_tx.clone(), meta.clone());
+            let (c2, m2, l2, r2, meta2) =
+                (cfg.clone(), m.clone(), live.clone(), ready_tx.clone(), meta.clone());
             let join = std::thread::Builder::new()
                 .name(format!("ffgpu-shard-{shard}"))
                 .spawn(move || {
-                    device_thread(backend_spec, max_batch, rx, r2, m2, l2, meta2, shard)
+                    device_thread(backend_spec, c2, rx, r2, m2, l2, meta2, shard)
                 })
                 .map_err(|e| {
                     ServiceError::Backend(format!("spawn shard {shard}: {e}"))
@@ -346,6 +352,12 @@ impl Service {
         self.meta[shard].telemetry().rate(op)
     }
 
+    /// Measured EWMA padding-waste fraction of `op`'s fused groups on
+    /// `shard` (`None` while cold).
+    pub fn measured_waste(&self, shard: usize, op: Op) -> Option<f64> {
+        self.meta[shard].telemetry().waste(op)
+    }
+
     /// Operators `shard`'s backend declared at spawn
     /// ([`crate::backend::KernelBackend::ops`]).
     pub fn shard_supported_ops(&self, shard: usize) -> Vec<Op> {
@@ -380,7 +392,7 @@ impl Drop for Service {
 
 #[allow(clippy::too_many_arguments)]
 fn device_thread(
-    spec: BackendSpec, max_batch: usize, rx: mpsc::Receiver<Msg>,
+    spec: BackendSpec, cfg: ShardConfig, rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<(), ServiceError>>, metrics: Arc<Metrics>,
     live: Arc<AtomicUsize>, meta: Arc<Vec<ShardMeta>>, shard: usize,
 ) {
@@ -403,7 +415,10 @@ fn device_thread(
     let mut pool = BufferPool::new();
 
     loop {
-        // block for the first message, then greedily drain the queue
+        // block for the first message, then drain the queue; with a
+        // fuse window armed, keep the batch open for stragglers until
+        // the window (measured from the first arrival) closes or the
+        // batch fills
         let first = match rx.recv() {
             Ok(Msg::Submit(r)) => r,
             Ok(Msg::Shutdown) | Err(_) => break,
@@ -411,14 +426,51 @@ fn device_thread(
         let t0 = Instant::now();
         let mut pending: Vec<OpRequest> = vec![first];
         let mut shutdown = false;
-        while pending.len() < max_batch {
-            match rx.try_recv() {
+        loop {
+            while pending.len() < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(Msg::Submit(r)) => pending.push(r),
+                    Ok(Msg::Shutdown) => {
+                        shutdown = true;
+                        break;
+                    }
+                    Err(_) => break,
+                }
+            }
+            if shutdown || pending.len() >= cfg.max_batch || cfg.fuse_window.is_zero() {
+                break;
+            }
+            let elapsed = t0.elapsed();
+            if elapsed >= cfg.fuse_window {
+                break;
+            }
+            let wait = cfg.fuse_window - elapsed;
+            // never hold a request to (or past) its deadline: if the
+            // tightest pending deadline lands inside the remaining
+            // window, launch now so the request still has its whole
+            // budget for execution
+            if let Some(tightest) =
+                pending.iter().filter_map(|r| r.ctrl.remaining()).min()
+            {
+                if tightest <= wait {
+                    break;
+                }
+            }
+            // wait in short slices: deadlines are armed on the ticket
+            // *after* dispatch, so a long sleep could miss one — the
+            // slice bounds how stale the check above can get
+            match rx.recv_timeout(wait.min(DEADLINE_POLL_SLICE)) {
                 Ok(Msg::Submit(r)) => pending.push(r),
                 Ok(Msg::Shutdown) => {
                     shutdown = true;
                     break;
                 }
-                Err(_) => break,
+                // re-check the window and the deadlines, keep waiting
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
             }
         }
 
@@ -432,8 +484,10 @@ fn device_thread(
         }
         let mut executed_any = false;
         for (op, reqs) in groups {
-            executed_any |=
-                serve_group(backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs);
+            executed_any |= serve_group(
+                backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs,
+                &cfg.fuse_sizes,
+            );
         }
         // triage-only drains (every request cancelled/expired) ran no
         // backend work — logging their ~0 latency would drag the batch
@@ -448,26 +502,34 @@ fn device_thread(
     live.fetch_sub(1, Ordering::Relaxed);
 }
 
-/// Execute one operator group as a single concatenated batch through
-/// the backend trait.
+/// The fusion stage: execute one operator group as fused launches
+/// through the backend trait.
 ///
 /// Cancelled and deadline-expired requests are triaged out *before*
 /// the backend runs — a client that gave up never costs substrate
 /// time; it gets [`ServiceError::Cancelled`] /
 /// [`ServiceError::DeadlineExceeded`] instead.
 ///
+/// Requests of any sizes are concatenated; with a `fuse_sizes` ladder
+/// the concatenation is packed into padded launches by
+/// [`batcher::plan`] (gathers pad with [`Op::pad_value`], so e.g.
+/// `div22` padding lanes divide by one, never by zero), and each
+/// launch's outputs are sliced back per request — padding lanes never
+/// reach a reply.
+///
 /// The shard's queue depth ([`ShardMeta`]) is decremented *before* the
 /// replies go out, so once a client holds its reply the routing
 /// policies already see the drained depth. Successful groups feed the
-/// shard's per-op telemetry EWMA ([`ShardMeta::telemetry`]) that
-/// measured routing reads.
+/// shard's per-op telemetry ([`ShardMeta::telemetry`]): throughput
+/// counts useful lanes only, and the group's padding-waste fraction
+/// lands in the waste EWMA measured routing and planning read.
 ///
 /// Returns whether the backend actually executed (false when triage
 /// emptied the group) so the caller can keep no-work drains out of the
 /// batch-latency summary.
 fn serve_group(
     backend: &mut dyn KernelBackend, pool: &mut BufferPool, metrics: &Metrics,
-    meta: &ShardMeta, op: Op, reqs: Vec<OpRequest>,
+    meta: &ShardMeta, op: Op, reqs: Vec<OpRequest>, fuse_sizes: &[usize],
 ) -> bool {
     // lifecycle triage: drop dead requests before burning backend time.
     // Expiry is checked first so a deadline miss is attributed to
@@ -502,23 +564,31 @@ fn serve_group(
     // `supports` impl allocates a catalogue Vec — not hot-path material
     let (n_in, n_out) = op.arity();
 
-    // fast path: a lone request executes straight out of its own planes
-    // and its output planes become the reply (no gather/scatter copies)
-    if reqs.len() == 1 {
+    // fast path: a lone request with no ladder executes straight off
+    // its own shared planes (no gather/scatter copies) and its output
+    // planes become the reply
+    if reqs.len() == 1 && fuse_sizes.is_empty() {
         let req = &reqs[0];
         let n = req.len();
-        let input_refs: Vec<&[f32]> = req.inputs.iter().map(Vec::as_slice).collect();
+        let job = match ExecJob::from_shared(op, req.inputs.clone()) {
+            Ok(j) => j,
+            Err(e) => {
+                meta.leave(1);
+                fail_group(metrics, &reqs, e);
+                return true;
+            }
+        };
         let mut outs = vec![vec![0.0f32; n]; n_out];
         // attempt recorded pre-execute: a failing or slow shard stops
         // looking cold to measured routing
         meta.telemetry().record_attempt(op);
         let t_exec = Instant::now();
-        let result = backend.execute(op, &input_refs, &mut outs);
+        let result = backend.execute(&job, &mut outs);
         let exec_s = t_exec.elapsed().as_secs_f64();
         meta.leave(1);
         match result {
             Ok(rep) => {
-                meta.telemetry().record(op, n as u64, exec_s);
+                meta.telemetry().record(op, n as u64, exec_s, rep.padded_elements);
                 metrics.record_batch(1, rep.launches, n as u64, rep.padded_elements);
                 let _ = req.reply.send(Ok(outs));
             }
@@ -533,46 +603,77 @@ fn serve_group(
     let refs: Vec<&OpRequest> = reqs.iter().collect();
     let total: usize = refs.iter().map(|r| r.len()).sum();
 
-    // gather the concatenated batch into pooled planes
-    let mut inputs: Vec<Vec<f32>> = Vec::with_capacity(n_in);
-    for p in 0..n_in {
-        let mut buf = pool.take_empty();
-        batcher::gather_plane_into(&refs, p, total, 0, total, op, &mut buf);
-        inputs.push(buf);
-    }
-    let input_refs: Vec<&[f32]> = inputs.iter().map(Vec::as_slice).collect();
-    let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(total)).collect();
+    // pack the concatenation into launches: exact-size when no ladder
+    // is configured, padded ladder launches otherwise
+    let launches = if fuse_sizes.is_empty() {
+        vec![batcher::Launch { size: total, start: 0, len: total }]
+    } else {
+        batcher::plan(total, fuse_sizes).expect("non-empty batch over non-empty ladder")
+    };
 
+    // per-request output accumulators (owned by the replies)
+    let mut acc: Vec<Vec<Vec<f32>>> =
+        refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
     meta.telemetry().record_attempt(op);
     let t_exec = Instant::now();
-    let result = backend.execute(op, &input_refs, &mut outs);
+    let mut failure: Option<ServiceError> = None;
+    let mut launches_done = 0usize;
+    let mut padded = 0u64;
+    for l in &launches {
+        // gather this launch's window into pooled, padded planes
+        let mut planes: Vec<Arc<Vec<f32>>> = Vec::with_capacity(n_in);
+        for p in 0..n_in {
+            let mut buf = pool.take_empty();
+            batcher::gather_plane_into(&refs, p, l.size, l.start, l.len, op, &mut buf);
+            planes.push(Arc::new(buf));
+        }
+        let job = match ExecJob::from_shared(op, planes) {
+            Ok(j) => j,
+            Err(e) => {
+                failure = Some(e);
+                break;
+            }
+        };
+        let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(l.size)).collect();
+        let result = backend.execute(&job, &mut outs);
+        // reclaim the gather planes: persistent workers dropped their
+        // Arc clones before reporting their last chunk, so the unwrap
+        // succeeds and the buffers go back to the pool
+        for plane in job.into_inputs() {
+            if let Ok(buf) = Arc::try_unwrap(plane) {
+                pool.put(buf);
+            }
+        }
+        match result {
+            Ok(rep) => {
+                batcher::scatter_outputs(&refs, &outs, l.start, l.len, &mut acc);
+                launches_done += rep.launches;
+                padded += rep.padded_elements + (l.size - l.len) as u64;
+            }
+            Err(e) => failure = Some(e),
+        }
+        for b in outs {
+            pool.put(b);
+        }
+        if failure.is_some() {
+            break;
+        }
+    }
     let exec_s = t_exec.elapsed().as_secs_f64();
-    drop(input_refs);
+    drop(refs);
     meta.leave(reqs.len());
 
-    match result {
-        Ok(rep) => {
-            meta.telemetry().record(op, total as u64, exec_s);
-            // per-request output accumulators (owned by the replies)
-            let mut acc: Vec<Vec<Vec<f32>>> =
-                refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
-            batcher::scatter_outputs(&refs, &outs, 0, total, &mut acc);
-            metrics.record_batch(
-                refs.len(), rep.launches, total as u64, rep.padded_elements,
-            );
+    match failure {
+        None => {
+            meta.telemetry().record(op, total as u64, exec_s, padded);
+            metrics.record_batch(reqs.len(), launches_done, total as u64, padded);
             for (r, planes) in reqs.iter().zip(acc) {
                 let _ = r.reply.send(Ok(planes));
             }
         }
-        Err(e) => {
+        Some(e) => {
             fail_group(metrics, &reqs, e);
         }
-    }
-    for b in inputs {
-        pool.put(b);
-    }
-    for b in outs {
-        pool.put(b);
     }
     true
 }
@@ -610,7 +711,7 @@ mod tests {
         planes
     }
 
-    fn run(h: &Handle, op: Op, planes: Vec<Vec<f32>>) -> OpResult {
+    fn run(h: &Handle, op: Op, planes: Vec<Vec<f32>>) -> super::super::request::OpResult {
         h.dispatch(Plan::new(op, planes)?)?.wait()
     }
 
@@ -805,6 +906,8 @@ mod tests {
         let rate = svc.measured_rate(0, Op::Add22).expect("warm after a group");
         assert!(rate > 0.0);
         assert_eq!(svc.telemetry().samples(0, Op::Add22), 1);
+        // no ladder configured: the group launched at its exact size
+        assert_eq!(svc.measured_waste(0, Op::Add22), Some(0.0));
         assert_eq!(svc.measured_rate(0, Op::Mul22), None, "other ops stay cold");
         assert!(svc.telemetry().supports(0, Op::Mul22));
     }
@@ -887,6 +990,9 @@ mod tests {
             BackendSpec::GpuSim { model } => assert_eq!(model, "nv35"),
             other => panic!("{other:?}"),
         }
+        // fusion defaults: off until armed
+        assert!(spec.fuse_window.is_zero());
+        assert!(spec.fuse_sizes.is_empty());
         assert!(ServiceSpec::from_cli("", dir).is_err());
         assert!(ServiceSpec::from_cli("native*lots", dir).is_err());
         assert!(ServiceSpec::from_cli("native*0,gpusim", dir).is_err());
@@ -925,45 +1031,175 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn legacy_backend_shim_still_works() {
-        let svc = Service::start(ServiceConfig::legacy(Backend::Cpu)).unwrap();
+    fn fuse_window_coalesces_concurrent_requests() {
+        // dispatch a burst while the shard's window holds the first
+        // batch open: everything fuses into far fewer launches
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_max_batch(64)
+                .with_fuse_window(Duration::from_millis(40)),
+        )
+        .unwrap();
         let h = svc.handle();
-        let out = h.call("add", vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
-        assert_eq!(out[0], vec![4.0, 6.0]);
+        let mut tickets = Vec::new();
+        let mut wants = Vec::new();
+        for k in 0..8u64 {
+            let n = 40 + 13 * k as usize;
+            let planes = add22_planes(n, 0x3A + k);
+            wants.push(planes.clone());
+            tickets.push(h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap());
+        }
+        for (t, planes) in tickets.into_iter().zip(wants) {
+            let out = t.wait().unwrap();
+            for i in 0..planes[0].len() {
+                let want = FF32::from_parts(planes[0][i], planes[1][i])
+                    + FF32::from_parts(planes[2][i], planes[3][i]);
+                assert_eq!((out[0][i], out[1][i]), (want.hi, want.lo), "i={i}");
+            }
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 8);
+        assert!(
+            m.batches < 8,
+            "window never fused: {} batches for {} requests",
+            m.batches,
+            m.requests
+        );
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_string_shims_delegate_to_typed_path() {
-        let svc = Service::start(ServiceConfig {
-            backend: BackendSpec::native_single(),
-            shards: 2,
-            max_batch: 16,
-        })
+    fn fuse_ladder_pads_launches_and_records_waste() {
+        // three mixed-size div22 requests fuse and pad up the ladder;
+        // answers stay bit-identical to unfused serving and the pad
+        // lanes (divisor padded with ones) never reach a reply
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_max_batch(64)
+                .with_fuse_window(Duration::from_millis(40))
+                .with_fuse_sizes(vec![256, 1024, 4096]),
+        )
+        .unwrap();
+        let plain = Service::start(ServiceSpec::default()).unwrap();
+        let h = svc.handle();
+        let sizes = [100usize, 200, 300];
+        let all: Vec<Vec<Vec<f32>>> = sizes
+            .iter()
+            .enumerate()
+            .map(|(k, &n)| crate::harness::workload::planes_for("div22", n, k as u64))
+            .collect();
+        let tickets: Vec<Ticket> = all
+            .iter()
+            .map(|p| h.dispatch(Plan::new(Op::Div22, p.clone()).unwrap()).unwrap())
+            .collect();
+        for (t, planes) in tickets.into_iter().zip(&all) {
+            let got = t.wait().unwrap();
+            let want = plain
+                .handle()
+                .dispatch(Plan::new(Op::Div22, planes.clone()).unwrap())
+                .unwrap()
+                .wait()
+                .unwrap();
+            for (pg, pw) in got.iter().zip(&want) {
+                for i in 0..pg.len() {
+                    assert_eq!(pg[i].to_bits(), pw[i].to_bits(), "lane {i}");
+                }
+            }
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests, 3);
+        // whatever the grouping, every launch was padded up the ladder
+        assert!(m.padded_elements > 0, "ladder never padded: {m:?}");
+        assert!(m.padding_fraction() > 0.0);
+        let waste = svc.measured_waste(0, Op::Div22).expect("warm after groups");
+        assert!(waste > 0.0, "telemetry missed the padding waste");
+    }
+
+    #[test]
+    fn fuse_window_never_holds_a_deadline_armed_request() {
+        // a window far longer than the deadline: the shard must launch
+        // as soon as it notices the deadline instead of fusing the
+        // request straight into an expiry
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_fuse_window(Duration::from_millis(400)),
+        )
         .unwrap();
         let h = svc.handle();
-        // call: happy path + every parse/validation error class
-        let out = h.call("add22", add22_planes(50, 7)).unwrap();
-        assert_eq!(out.len(), 2);
+        let t0 = Instant::now();
+        let t = h
+            .dispatch(Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap())
+            .unwrap()
+            .deadline(Duration::from_millis(150));
+        assert_eq!(t.wait().unwrap()[0], vec![4.0, 6.0]);
+        assert!(
+            t0.elapsed() < Duration::from_millis(400),
+            "the window held a deadline-armed request for its full length"
+        );
+        assert_eq!(svc.metrics().expired, 0);
+        assert_eq!(svc.metrics().errors, 0);
+    }
+
+    #[test]
+    fn degenerate_fuse_ladders_are_sanitised() {
+        // a zero rung would spin batcher::plan forever and an unsorted
+        // ladder violates its ascending contract; Service::start
+        // cleans both, so serving just works
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_fuse_window(Duration::from_millis(5))
+                .with_fuse_sizes(vec![0, 4096, 256, 256]),
+        )
+        .unwrap();
+        let out = run(&svc.handle(), Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]])
+            .unwrap();
+        assert_eq!(out[0], vec![4.0, 6.0]);
+        // 2 useful lanes padded up to the 256 rung
+        assert_eq!(svc.metrics().padded_elements, 254);
+        // an all-zero ladder degrades to exact-size launches
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_fuse_window(Duration::from_millis(5))
+                .with_fuse_sizes(vec![0, 0]),
+        )
+        .unwrap();
+        let out = run(&svc.handle(), Op::Add, vec![vec![1.0], vec![2.0]]).unwrap();
+        assert_eq!(out[0], vec![3.0]);
+        assert_eq!(svc.metrics().padded_elements, 0);
+    }
+
+    #[test]
+    fn typed_dispatch_covers_the_old_shim_scenarios() {
+        // the scenarios the deprecated Handle::submit/call shims used
+        // to cover, now first-party: parse boundary, every build-time
+        // rejection class, blocking and receiver-style resolution
         assert!(matches!(
-            h.call("frobnicate", vec![vec![1.0]]),
+            Op::parse("frobnicate"),
             Err(ServiceError::UnknownOp(_))
         ));
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 2).with_max_batch(16),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let out = run(&h, Op::Add22, add22_planes(50, 7)).unwrap();
+        assert_eq!(out.len(), 2);
         assert!(matches!(
-            h.call("add22", vec![vec![1.0]; 3]),
+            Plan::new(Op::Add22, vec![vec![1.0]; 3]),
             Err(ServiceError::Arity { .. })
         ));
         assert!(matches!(
-            h.call("add", vec![vec![1.0, 2.0], vec![3.0]]),
+            Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0]]),
             Err(ServiceError::RaggedPlanes { .. })
         ));
         assert!(matches!(
-            h.call("add", vec![vec![], vec![]]),
+            Plan::new(Op::Add, vec![vec![], vec![]]),
             Err(ServiceError::EmptyBatch { .. })
         ));
-        // submit: async receiver shape preserved
-        let rx = h.submit("add", vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        // receiver-style resolution (what `submit` used to return)
+        let rx = h
+            .dispatch(Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap())
+            .unwrap()
+            .into_receiver();
         assert_eq!(rx.recv().unwrap().unwrap()[0], vec![4.0, 6.0]);
     }
 }

@@ -1,5 +1,5 @@
 //! Benchmark & accuracy harness: regenerates every table of the paper's
-//! evaluation section (the experiment index lives in DESIGN.md §3).
+//! evaluation section (the experiment index lives in DESIGN.md §4).
 //!
 //! * [`table`] — plain-text table rendering (fixed-width, same row/column
 //!   layout as the paper);

@@ -139,11 +139,13 @@ pub fn backend_grid(
         for op in ops {
             let op = crate::backend::Op::parse(op)?;
             let planes = planes_for(op.name(), n, seed + si as u64);
-            let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+            // one job per (op, size), reused across reps — the owned
+            // job model makes the measured loop copy-free
+            let job = crate::backend::ExecJob::new(op, planes)?;
             let mut outs = vec![vec![0.0f32; n]; op.n_out()];
             let mut err = None;
             let secs = timer.median_secs(|| {
-                if let Err(e) = backend.execute(op, &refs, &mut outs) {
+                if let Err(e) = backend.execute(&job, &mut outs) {
                     err = Some(e);
                 }
                 std::hint::black_box(&outs);

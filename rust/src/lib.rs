@@ -20,10 +20,13 @@
 //!   artifacts produced by `python/compile` (the "GPU path" of Table 3;
 //!   needs the `xla` cargo feature, stubbed otherwise);
 //! * [`backend`] — the **execution-substrate layer**: the typed
-//!   operator catalogue ([`backend::Op`]), one
-//!   [`backend::KernelBackend`] trait over it, with native multicore
-//!   ([`backend::NativeBackend`]), simulated-GPU
-//!   ([`backend::GpuSimBackend`]) and PJRT/XLA
+//!   operator catalogue ([`backend::Op`]), the owned-buffer job model
+//!   ([`backend::ExecJob`]: `Arc`-shared input planes, validated at
+//!   construction), one [`backend::KernelBackend`] trait over both,
+//!   with native multicore ([`backend::NativeBackend`] — a persistent
+//!   channel-fed worker crew with per-worker
+//!   [`backend::WorkerArenas`], no spawn/join per batch),
+//!   simulated-GPU ([`backend::GpuSimBackend`]) and PJRT/XLA
 //!   ([`backend::XlaBackend`]) implementations, typed
 //!   [`backend::ServiceError`]s, and the [`backend::BufferPool`] that
 //!   keeps the hot path allocation-free;
@@ -33,7 +36,11 @@
 //!   for a future-like [`coordinator::Ticket`] with deadline/cancel
 //!   lifecycle control; a [`coordinator::ServiceSpec`] gives every
 //!   shard its own [`backend::BackendSpec`] (heterogeneous sets are
-//!   first-class) and a pluggable
+//!   first-class) plus a **fusion stage**
+//!   ([`coordinator::ServiceSpec::fuse_window`] /
+//!   [`coordinator::ServiceSpec::fuse_sizes`]) that packs cross-client
+//!   same-op requests into padded fused launches and reports
+//!   padding-waste telemetry; a pluggable
 //!   [`coordinator::routing::RoutingPolicy`] — round-robin,
 //!   queue-depth-aware, capability-aware op-affinity, or
 //!   telemetry-driven measured routing — places each request over the

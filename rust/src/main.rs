@@ -1,6 +1,6 @@
 //! `ffgpu` — CLI for the float-float-on-stream-processor reproduction.
 //!
-//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §3):
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md §4):
 //!
 //! ```text
 //! ffgpu info                # platform, backends, artifact inventory, Table 1
@@ -21,6 +21,9 @@
 //! `--routing round-robin|queue-depth|op-affinity|measured` picks the
 //! placement policy, and `--deadline-ms N` arms every demo ticket with
 //! a deadline (missed ones count as `deadline misses`, not failures).
+//! `--fuse-window N` holds each shard's batch open N ms so cross-client
+//! requests fuse into padded ladder launches, and `--workers N`
+//! overrides the persistent worker-crew size of every native shard.
 //!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
@@ -49,6 +52,8 @@ fn main() {
     let shard_spec_flag = get_flag("--shard-spec", String::new());
     let routing_flag = get_flag("--routing", "round-robin".into());
     let deadline_ms: u64 = get_flag("--deadline-ms", String::new()).parse().unwrap_or(0);
+    let fuse_window_ms: u64 = get_flag("--fuse-window", String::new()).parse().unwrap_or(0);
+    let workers_flag: Option<usize> = get_flag("--workers", String::new()).parse().ok();
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -59,7 +64,7 @@ fn main() {
         "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
         "serve-demo" => cmd_serve_demo(
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
-            deadline_ms,
+            deadline_ms, fuse_window_ms, workers_flag,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -78,8 +83,9 @@ const HELP: &str = "\
 ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
 
 USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
-                       [--backend B] [--shards N]
+                       [--backend B] [--shards N] [--workers N]
                        [--shard-spec LIST] [--routing P] [--deadline-ms N]
+                       [--fuse-window N]
 
 COMMANDS:
   info        platform, backend catalogues, artifact inventory, Table 1
@@ -109,6 +115,12 @@ SHARD SETS (serve-demo):
   --deadline-ms N                     arm every demo ticket with an N ms
                                       deadline; misses are counted, the
                                       shards stay live
+  --fuse-window N                     hold each shard's batch open N ms so
+                                      cross-client same-op requests fuse
+                                      into padded launches over the paper's
+                                      stream-size ladder (4096..1048576)
+  --workers N                         persistent worker-crew size of every
+                                      native shard (0 = one per core)
 ";
 
 fn cmd_info(artifacts: &Path) -> i32 {
@@ -292,9 +304,11 @@ fn cmd_accuracy(artifacts: &Path, samples: usize) -> i32 {
     0
 }
 
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve_demo(
     artifacts: &Path, backend_flag: &str, shards: usize, shard_spec: &str,
-    routing_flag: &str, deadline_ms: u64,
+    routing_flag: &str, deadline_ms: u64, fuse_window_ms: u64,
+    workers_flag: Option<usize>,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -322,9 +336,33 @@ fn cmd_serve_demo(
             return 2;
         }
     };
-    let spec = spec.with_routing(routing);
+    let mut spec = spec.with_routing(routing);
+    // --workers retunes every native shard's persistent crew
+    if let Some(w) = workers_flag {
+        for s in &mut spec.shards {
+            if let BackendSpec::Native { workers, .. } = s {
+                *workers = w;
+            }
+        }
+    }
+    // --fuse-window arms cross-request fusion; the paper's stream-size
+    // grid is the default launch ladder
+    if fuse_window_ms > 0 {
+        spec = spec
+            .with_fuse_window(std::time::Duration::from_millis(fuse_window_ms))
+            .with_fuse_sizes(ffgpu::coordinator::PAPER_FUSE_SIZES.to_vec());
+    }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
-    println!("shards: [{}]  routing: {}", labels.join(", "), routing.name());
+    println!(
+        "shards: [{}]  routing: {}  fusion: {}",
+        labels.join(", "),
+        routing.name(),
+        if fuse_window_ms > 0 {
+            format!("{fuse_window_ms}ms window, ladder {:?}", spec.fuse_sizes)
+        } else {
+            "off".to_string()
+        }
+    );
     let svc = match Service::start(spec) {
         Ok(s) => s,
         Err(e) => {

@@ -9,7 +9,7 @@
 //! compares against the native reference lane by lane.
 
 use ffgpu::backend::{
-    BackendSpec, KernelBackend, NativeBackend, Op, ServiceError,
+    BackendSpec, ExecJob, KernelBackend, NativeBackend, Op, ServiceError,
 };
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -56,10 +56,10 @@ fn backends() -> Vec<(String, Box<dyn KernelBackend>)> {
 fn execute(
     b: &mut dyn KernelBackend, op: Op, planes: &[Vec<f32>],
 ) -> Result<Vec<Vec<f32>>, ServiceError> {
-    let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
     let n = planes[0].len();
+    let job = ExecJob::new(op, planes.to_vec())?;
     let mut outs = vec![vec![0.0f32; n]; op.n_out()];
-    b.execute(op, &refs, &mut outs)?;
+    b.execute(&job, &mut outs)?;
     Ok(outs)
 }
 
@@ -140,33 +140,36 @@ fn backend_errors_are_typed_uniformly() {
         Op::parse("frobnicate"),
         Err(ServiceError::UnknownOp(_))
     ));
+    // input-shape errors die at ExecJob construction — a malformed job
+    // is unrepresentable, so no backend can even see one
+    let a = vec![1.0f32; 8];
+    assert!(matches!(
+        ExecJob::new(Op::Add22, vec![a.clone(), a.clone()]),
+        Err(ServiceError::Arity { .. })
+    ));
+    assert!(matches!(
+        ExecJob::new(Op::Add, vec![a.clone(), vec![1.0f32; 4]]),
+        Err(ServiceError::RaggedPlanes { plane: 1, .. })
+    ));
+    assert!(matches!(
+        ExecJob::new(Op::Add, vec![vec![], vec![]]),
+        Err(ServiceError::EmptyBatch { op: Op::Add })
+    ));
+    // output-buffer mismatches are still every backend's own check
     let mut backends = backends();
     for (label, b) in backends.iter_mut() {
-        let a = vec![1.0f32; 8];
-        let ins: Vec<&[f32]> = vec![&a, &a];
-        let mut outs = vec![vec![0.0f32; 8]];
+        let job = ExecJob::new(Op::Add, vec![a.clone(), a.clone()]).unwrap();
+        let mut wrong_count = vec![vec![0.0f32; 8]; 2];
         assert!(
             matches!(
-                b.execute(Op::Add22, &ins, &mut outs),
-                Err(ServiceError::Arity { .. })
+                b.execute(&job, &mut wrong_count),
+                Err(ServiceError::Shape(_))
             ),
             "{label}"
         );
-        let short = vec![1.0f32; 4];
-        let ragged: Vec<&[f32]> = vec![&a, &short];
+        let mut wrong_len = vec![vec![0.0f32; 3]];
         assert!(
-            matches!(
-                b.execute(Op::Add, &ragged, &mut outs),
-                Err(ServiceError::RaggedPlanes { plane: 1, .. })
-            ),
-            "{label}"
-        );
-        let empty: Vec<&[f32]> = vec![&[], &[]];
-        assert!(
-            matches!(
-                b.execute(Op::Add, &empty, &mut outs),
-                Err(ServiceError::EmptyBatch { op: Op::Add })
-            ),
+            matches!(b.execute(&job, &mut wrong_len), Err(ServiceError::Shape(_))),
             "{label}"
         );
     }

@@ -1,7 +1,8 @@
 //! Integration: the coordinator service end-to-end — heterogeneous
 //! native+gpusim shard sets with routing policies, telemetry-driven
-//! measured placement and ticket deadlines/cancellation (always
-//! runnable), plus the XLA backend paths when artifacts exist.
+//! measured placement, ticket deadlines/cancellation, and the fusion
+//! stage's cross-request batch packing (always runnable), plus the XLA
+//! backend paths when artifacts exist.
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
@@ -84,7 +85,7 @@ fn heterogeneous_shard_set_bit_parity_and_attribution() {
             let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
             let mut want = vec![vec![0.0f32; n]; op.n_out()];
             use ffgpu::backend::KernelBackend;
-            reference.execute(op, &refs, &mut want).unwrap();
+            reference.execute_planes(op, &refs, &mut want).unwrap();
             for (pg, pw) in got.iter().zip(&want) {
                 for i in 0..n {
                     assert_eq!(
@@ -289,6 +290,104 @@ fn cancelled_request_is_skipped_by_the_shard() {
     let m = svc.metrics();
     assert!(m.cancelled >= 1, "victim was executed, not skipped");
     assert_eq!(h.queue_depths(), vec![0]);
+}
+
+/// Satellite property (seeded random search): serving a burst of
+/// mixed-size same-op requests through a **fusing** shard — window
+/// armed, padded size ladder — is bit-identical to serving each
+/// request alone. Padding lanes (including `div22`'s ones-padded
+/// divisor) never leak into a reply, on native and gpusim alike.
+#[test]
+fn fused_batches_slice_back_bit_identically_to_solo_serving() {
+    let ladder = vec![256usize, 1024, 4096, 16384];
+    for backend in [BackendSpec::native_single(), BackendSpec::gpusim_ieee()] {
+        let fused = Service::start(
+            ServiceSpec::uniform(backend.clone(), 1)
+                .with_max_batch(64)
+                .with_fuse_window(Duration::from_millis(60))
+                .with_fuse_sizes(ladder.clone()),
+        )
+        .unwrap();
+        let solo = Service::start(ServiceSpec::uniform(backend, 1)).unwrap();
+        let mut rng = Rng::new(0xF05E);
+        for op in [Op::Add22, Op::Mul22, Op::Div22, Op::Mad22] {
+            // six requests, sizes drawn to straddle the ladder's
+            // smallest rungs (so plans pad, split tails, or both)
+            let sizes: Vec<usize> = (0..6).map(|_| 1 + rng.below(700)).collect();
+            let all: Vec<Vec<Vec<f32>>> = sizes
+                .iter()
+                .enumerate()
+                .map(|(k, &n)| {
+                    workload::planes_for(op.name(), n, (op.index() * 100 + k) as u64)
+                })
+                .collect();
+            // burst-dispatch so the window fuses them
+            let h = fused.handle();
+            let tickets: Vec<_> = all
+                .iter()
+                .map(|p| h.dispatch(Plan::new(op, p.clone()).unwrap()).unwrap())
+                .collect();
+            for ((ticket, planes), n) in tickets.into_iter().zip(&all).zip(&sizes) {
+                let got = ticket.wait().unwrap();
+                let want = call(&solo, op, planes.clone());
+                assert_eq!(got.len(), want.len(), "{op}");
+                for (o, (pg, pw)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(pg.len(), *n, "{op}: reply resized by fusion");
+                    for i in 0..*n {
+                        assert_eq!(
+                            pg[i].to_bits(),
+                            pw[i].to_bits(),
+                            "op={op} n={n} out{o} lane {i}"
+                        );
+                    }
+                }
+            }
+        }
+        let m = fused.metrics();
+        assert_eq!(m.requests, 24);
+        assert!(
+            m.batches < m.requests,
+            "fusion never happened: {} batches for {} requests",
+            m.batches,
+            m.requests
+        );
+        assert!(m.padded_elements > 0, "the ladder never padded a launch");
+        assert_eq!(m.errors, 0);
+    }
+}
+
+/// The persistent crew behind a serving shard survives many batches:
+/// requests keep resolving correctly across rounds with no respawn
+/// (the seed's scoped pool would have spawned/joined per batch).
+#[test]
+fn persistent_native_workers_serve_many_service_batches() {
+    // chunk floor is 1024, so 5000-lane requests engage the crew
+    let svc = Service::start(ServiceSpec::uniform(
+        BackendSpec::Native { chunk: 1024, workers: 4 },
+        1,
+    ))
+    .unwrap();
+    let h = svc.handle();
+    for round in 0..6u64 {
+        let n = 5000 + 617 * round as usize;
+        let planes = workload::planes_for("add22", n, round);
+        let want = expect_add22(&planes);
+        let out = h
+            .dispatch(Plan::new(Op::Add22, planes).unwrap())
+            .unwrap()
+            .wait()
+            .unwrap();
+        for (i, (hi, lo)) in want.iter().enumerate() {
+            assert_eq!(
+                (out[0][i].to_bits(), out[1][i].to_bits()),
+                (hi.to_bits(), lo.to_bits()),
+                "round {round} lane {i}"
+            );
+        }
+    }
+    assert_eq!(svc.metrics().requests, 6);
+    assert_eq!(svc.metrics().errors, 0);
+    assert!(svc.is_running());
 }
 
 #[test]

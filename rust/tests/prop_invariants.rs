@@ -228,10 +228,26 @@ fn prop_batcher_plan_covers_exactly() {
             pos += l.len;
         }
         assert_eq!(pos, total, "case {case}: plan covers {pos} of {total}");
-        // waste is bounded: at most one launch is padded, and padding
-        // stays below the largest artifact size
+        // waste is bounded: only the tail pads (one launch, or two when
+        // the split tail wins), and padding stays below the largest size
         let padding: usize = plan.iter().map(|l| l.size - l.len).sum();
         assert!(padding < 1048576, "case {case}: padding {padding}");
+        assert!(
+            plan.iter().filter(|l| l.len < l.size).count() <= 2,
+            "case {case}: more than a split tail padded: {plan:?}"
+        );
+        // the split tail never pads more than the old greedy single
+        // tail (the smallest size fitting the remainder) would have
+        let head: usize = (total / 1048576) * 1048576;
+        let remaining = total - head;
+        if remaining > 0 {
+            let single = *sizes.iter().find(|&&s| s >= remaining).unwrap();
+            let single_waste = single - remaining;
+            assert!(
+                padding <= single_waste,
+                "case {case}: split tail pads {padding}, single tail {single_waste}"
+            );
+        }
     }
 }
 
