@@ -13,11 +13,13 @@
 //! FFGPU_DEADLINE_MS=5 cargo run --release --example serve_demo
 //! FFGPU_FUSE_WINDOW_MS=2 cargo run --release --example serve_demo  # fusion stage
 //! FFGPU_WORKERS=4 cargo run --release --example serve_demo
+//! FFGPU_OBSERVE=0.25 FFGPU_OBSERVE_MODELS=nv35,r300 \
+//!     cargo run --release --example serve_demo          # accuracy observatory
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! ```
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
-use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
@@ -45,6 +47,13 @@ fn main() {
         .unwrap_or(0);
     let workers_env: Option<usize> =
         std::env::var("FFGPU_WORKERS").ok().and_then(|s| s.parse().ok());
+    // FFGPU_OBSERVE + FFGPU_OBSERVE_MODELS arm the accuracy
+    // observatory: that fraction of the demo traffic is mirrored onto
+    // a native reference + the listed GPU models, and the live
+    // Table-2/Table-5 accuracy report prints at the end
+    let observe_env = std::env::var("FFGPU_OBSERVE").ok();
+    let observe_models = std::env::var("FFGPU_OBSERVE_MODELS")
+        .unwrap_or_else(|_| "nv35,r300,chopped".into());
     // FFGPU_SHARD_SPEC gives every shard its own backend; otherwise a
     // uniform set from FFGPU_BACKEND/FFGPU_SHARDS (xla auto-detected)
     let explicit_backend = std::env::var("FFGPU_BACKEND").ok();
@@ -81,12 +90,20 @@ fn main() {
             .with_fuse_window(Duration::from_millis(fuse_window_ms))
             .with_fuse_sizes(ffgpu::coordinator::PAPER_FUSE_SIZES.to_vec());
     }
+    if let Some(f) = &observe_env {
+        let obs = ObservatorySpec::from_cli(f, &observe_models).expect("observe spec");
+        spec = spec.with_observatory(obs);
+    }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
     println!(
-        "shards: [{}]  routing: {}  fusion: {}",
+        "shards: [{}]  routing: {}  fusion: {}  observatory: {}",
         labels.join(", "),
         routing.name(),
-        if fuse_window_ms > 0 { format!("{fuse_window_ms}ms window") } else { "off".into() }
+        if fuse_window_ms > 0 { format!("{fuse_window_ms}ms window") } else { "off".into() },
+        match &spec.observe {
+            Some(o) => format!("{:.0}% -> [{}]", o.fraction * 100.0, o.models.join(", ")),
+            None => "off".into(),
+        }
     );
     let fallback = spec.clone();
     let svc = match Service::start(spec) {
@@ -115,8 +132,10 @@ fn main() {
     // dispatched through the typed Plan/Ticket API
     let ops = [Op::Add22, Op::Mul22, Op::Mul12, Op::Add12, Op::Div22];
     // the gpusim soft-float VM is ~1000x slower than native kernels:
-    // keep it responsive by shrinking the batches it may be routed
-    let slow = svc.shard_labels().iter().any(|&l| l == "gpusim");
+    // keep it responsive by shrinking the batches it may be routed —
+    // the observatory mirrors onto the same soft-float models, so an
+    // observed run shrinks too
+    let slow = svc.shard_labels().iter().any(|&l| l == "gpusim") || svc.has_observatory();
     let top = if slow { 4_000 } else { 32_000 };
     let t0 = Instant::now();
     let mut joins = Vec::new();
@@ -193,5 +212,10 @@ fn main() {
         println!("shard {i} [{label}]: requests={} batches={} elements={} mean lat={:.2}ms",
                  s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
         println!("  measured Melem/s: {}", rates.join("  "));
+    }
+    // the live accuracy surface the observatory measured beside the run
+    if let Some(rep) = svc.accuracy_report() {
+        print!("\n{}", rep.render_table2_live());
+        print!("\n{}", rep.render_table5_live());
     }
 }

@@ -25,9 +25,15 @@
 //! tiny concurrent requests; and the routing-policy sweep runs again
 //! with the fusion ladder armed so `BENCH_coordinator.json` carries a
 //! padding-waste fraction per policy.
+//!
+//! Accuracy instrumentation (the observatory): a mirrored canary
+//! stream over `nv35`/`r300`/`chopped` produces the live Table-2/5
+//! report (written to `TABLE2_LIVE.txt`, uploaded as a CI artifact)
+//! and an `accuracy` section of per-(model, op) min/max/mean ulp error
+//! and max log2 relative error in `BENCH_coordinator.json`.
 
 use ffgpu::backend::{BackendSpec, ExecJob, KernelBackend, NativeBackend, Op, ServiceError};
-use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::ff::vector;
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -56,6 +62,19 @@ struct Row {
     canary_share: Option<f64>,
     /// Fusion window armed on the service (0 = fusion off).
     fuse_window_ms: u64,
+}
+
+/// One `accuracy` row of `BENCH_coordinator.json`: the live
+/// observatory's per-(model, op) error surface over the bench's
+/// mirrored canary stream.
+struct AccRow {
+    model: String,
+    op: String,
+    lanes: u64,
+    min_ulp: f64,
+    max_ulp: f64,
+    mean_abs_ulp: f64,
+    max_rel_log2: Option<f64>,
 }
 
 /// Ops the routing comparison cycles through. Includes `div22` — the
@@ -220,7 +239,55 @@ fn run_case(
     Some(row)
 }
 
-fn emit_json(rows: &[Row]) {
+/// The accuracy observatory as a bench instrument: mirror a canary
+/// stream over the paper's three non-IEEE models, render the live
+/// Table-2/Table-5 report (uploaded as a CI artifact next to the
+/// JSON), and return the per-(model, op) rows for the `accuracy`
+/// section of `BENCH_coordinator.json`.
+fn observatory_rows() -> Vec<AccRow> {
+    println!("== accuracy observatory: live Table-2/5 sweep (nv35 / r300 / chopped)");
+    let svc = Service::start(
+        ServiceSpec::uniform(BackendSpec::native_single(), 1)
+            .with_observatory(ObservatorySpec::new(1.0, ["nv35", "r300", "chopped"])),
+    )
+    .unwrap();
+    let h = svc.handle();
+    let ops = [Op::Add12, Op::Mul12, Op::Add22, Op::Mul22];
+    for op in ops {
+        for round in 0..4u64 {
+            let planes = workload::planes_for(op.name(), 2048, 0xACC + round);
+            h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
+        }
+    }
+    let rep = svc.accuracy_report().expect("observatory armed");
+    // observation rode beside serving: the shards saw exactly the
+    // client's requests, nothing mirrored leaked in
+    assert_eq!(svc.metrics().requests, (ops.len() * 4) as u64);
+    assert_eq!(rep.mirrored_requests, (ops.len() * 4) as u64);
+    let t2 = rep.render_table2_live();
+    let t5 = rep.render_table5_live();
+    print!("{t2}");
+    match std::fs::write("TABLE2_LIVE.txt", format!("{t2}\n{t5}")) {
+        Ok(()) => println!("wrote TABLE2_LIVE.txt"),
+        Err(e) => println!("could not write TABLE2_LIVE.txt: {e}"),
+    }
+    rep.models
+        .iter()
+        .flat_map(|m| {
+            m.rows.iter().map(move |r| AccRow {
+                model: m.model.clone(),
+                op: r.op.name().to_string(),
+                lanes: r.lanes,
+                min_ulp: r.min_ulp,
+                max_ulp: r.max_ulp,
+                mean_abs_ulp: r.mean_abs_ulp,
+                max_rel_log2: r.max_rel_log2(),
+            })
+        })
+        .collect()
+}
+
+fn emit_json(rows: &[Row], accuracy: &[AccRow]) {
     let mut out = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \
          \"melem_per_s\": \"1e6 elements/s\", \"canary_share\": \
@@ -261,10 +328,34 @@ fn emit_json(rows: &[Row]) {
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
+    out.push_str("  ],\n  \"accuracy\": [\n");
+    for (i, a) in accuracy.iter().enumerate() {
+        let rel = match a.max_rel_log2 {
+            Some(v) => format!("{v:.2}"),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "    {{\"model\": \"{}\", \"op\": \"{}\", \"lanes\": {}, \
+             \"min_ulp\": {:.4}, \"max_ulp\": {:.4}, \"mean_abs_ulp\": {:.6}, \
+             \"max_rel_log2\": {}}}{}\n",
+            a.model,
+            a.op,
+            a.lanes,
+            a.min_ulp,
+            a.max_ulp,
+            a.mean_abs_ulp,
+            rel,
+            if i + 1 < accuracy.len() { "," } else { "" },
+        ));
+    }
     out.push_str("  ]\n}\n");
     let path = "BENCH_coordinator.json";
     match std::fs::write(path, &out) {
-        Ok(()) => println!("\nwrote {path} ({} rows)", rows.len()),
+        Ok(()) => println!(
+            "\nwrote {path} ({} rows, {} accuracy cells)",
+            rows.len(),
+            accuracy.len()
+        ),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
 }
@@ -566,5 +657,8 @@ fn main() {
         println!("(skipping xla backend: no artifacts)");
     }
 
-    emit_json(&rows);
+    // the live accuracy surface: Table 2/5 as a continuous experiment
+    let accuracy = observatory_rows();
+
+    emit_json(&rows, &accuracy);
 }

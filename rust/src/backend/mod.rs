@@ -29,7 +29,11 @@
 //! * [`BufferPool`] — reusable `Vec<f32>` planes so the dispatch hot
 //!   path performs no per-batch allocation, and [`WorkerArenas`] — one
 //!   pool per persistent worker, so the crew never contends on a
-//!   single free-list.
+//!   single free-list;
+//! * [`ulp`] — the lane-by-lane ulp-diff kernel the accuracy
+//!   observatory ([`crate::coordinator::observatory`]) scores one
+//!   substrate's replies against a reference with, pad lanes of fused
+//!   launches excluded.
 //!
 //! The operator surface itself is typed: [`Op`] encodes name, arity and
 //! plane counts as a closed enum, so jobs carry an `Op`, not a
@@ -48,6 +52,7 @@ pub mod gpusim;
 pub mod native;
 pub mod op;
 pub mod pool;
+pub mod ulp;
 pub mod xla;
 
 pub use error::ServiceError;
@@ -55,6 +60,7 @@ pub use gpusim::GpuSimBackend;
 pub use native::NativeBackend;
 pub use op::Op;
 pub use pool::{BufferPool, WorkerArenas};
+pub use ulp::UlpDiff;
 pub use xla::XlaBackend;
 
 use std::path::PathBuf;

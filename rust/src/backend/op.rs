@@ -11,6 +11,22 @@
 //! [`crate::backend::CATALOG`] mirrors the same order (pinned by a
 //! test), so `op.index()` doubles as a catalogue row index — the
 //! op-affinity routing policy hashes on it.
+//!
+//! # Examples
+//!
+//! ```
+//! use ffgpu::backend::Op;
+//!
+//! // the parse boundary: wire names in, typed operators out
+//! let op = Op::parse("mul22")?;
+//! assert_eq!(op, Op::Mul22);
+//! assert_eq!(op.arity(), (4, 2));
+//! assert_eq!(Op::ALL[op.index()], op);
+//! // shape rules live on the type: four equal-length planes or bust
+//! assert!(op.validate_planes(&vec![vec![1.0f32; 8]; 4]).is_ok());
+//! assert!(op.validate_planes(&vec![vec![1.0f32; 8]; 3]).is_err());
+//! # Ok::<(), ffgpu::backend::ServiceError>(())
+//! ```
 
 use super::error::ServiceError;
 use std::fmt;

@@ -1,0 +1,285 @@
+//! The ulp-diff kernel: lane-by-lane comparison of one backend's
+//! output planes against a reference, in units in the last place.
+//!
+//! This is the measurement core of the accuracy observatory
+//! ([`crate::coordinator::observatory`]): the observatory mirrors live
+//! traffic onto a native (correctly rounded) reference backend and one
+//! backend per simulated GPU model, then calls [`diff_outputs`] on each
+//! aligned output slice. The paper reports exactly this quantity —
+//! Table 2 is ulp-error intervals per arithmetic model, Table 5 is max
+//! relative error per operator — so the kernel produces both at once.
+//!
+//! **The ulp error of a lane.** Output planes are combined into one
+//! value per lane the way the float-float format defines it
+//! (`hi + lo` in `f64` for two-plane operators, the single plane
+//! otherwise); the error is `(got − reference) / ulp`, where the ulp
+//! unit is [`crate::util::ulp_f32`] of whichever *high word* has the
+//! larger magnitude. Taking the larger-magnitude side keeps the unit
+//! stable under flush-to-zero models: a subnormal reference flushed to
+//! zero by the model is measured in the reference's (subnormal-range)
+//! ulp, not in the degenerate ulp of zero.
+//!
+//! **Conventions.**
+//! * Signed zero: `-0.0` and `+0.0` are numerically equal, so a model
+//!   that flips the sign of a zero scores 0 ulp (the paper's harness
+//!   compares values, not bit patterns).
+//! * Non-finite lanes (either side NaN/inf) are excluded from the
+//!   error statistics and counted separately in
+//!   [`UlpDiff::non_finite`] — one anomalous lane must not turn the
+//!   whole interval into NaN.
+//! * Relative error is skipped where the reference is exactly zero
+//!   (undefined; the Table 5 harness skips those samples too).
+//! * **Pad-lane exclusion**: only `valid` lanes starting at `offset`
+//!   are compared. The observatory packs mirrored requests into padded
+//!   fused launches, and padding lanes compute on neutral fill values
+//!   ([`crate::backend::Op::pad_value`]) — their "errors" are
+//!   artefacts of the packing, never of the arithmetic under test, so
+//!   they must not reach the statistics.
+//!
+//! # Examples
+//!
+//! ```
+//! use ffgpu::backend::{ulp, Op};
+//!
+//! // reference lane 1 is 2.0; the model came back one f32 step high
+//! let reference = vec![vec![1.0f32, 2.0], vec![0.0, 0.0]];
+//! let got = vec![vec![1.0f32, f32::from_bits(2.0f32.to_bits() + 1)], vec![0.0, 0.0]];
+//! let d = ulp::diff_outputs(Op::Add22, &reference, &got, 0, 2);
+//! assert_eq!(d.lanes, 2);
+//! assert!((d.max_ulp - 1.0).abs() < 1e-12);
+//! assert_eq!(d.worst_lane, Some(1));
+//! ```
+
+use super::op::Op;
+use crate::util::ulp_f32;
+
+/// Lane-by-lane error statistics of one diffed output slice.
+///
+/// The zero value (via `Default`) is the empty diff: no lanes, all
+/// statistics zero, no worst lane.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct UlpDiff {
+    /// Finite lanes compared (pad lanes and non-finite lanes excluded).
+    pub lanes: u64,
+    /// Lanes where either side was NaN/inf — counted, not scored.
+    pub non_finite: u64,
+    /// Most negative signed ulp error observed (0.0 when no lanes).
+    pub min_ulp: f64,
+    /// Most positive signed ulp error observed (0.0 when no lanes).
+    pub max_ulp: f64,
+    /// Sum of |ulp error| over the compared lanes (for the mean).
+    pub sum_abs_ulp: f64,
+    /// Largest relative error |err / reference| (reference ≠ 0 lanes).
+    pub max_rel: f64,
+    /// Index (relative to the diffed slice) of the worst-|ulp| lane.
+    pub worst_lane: Option<usize>,
+    /// Signed ulp error at [`UlpDiff::worst_lane`].
+    pub worst_ulp: f64,
+    /// Relative error at [`UlpDiff::worst_lane`] (0.0 when undefined).
+    pub worst_rel: f64,
+}
+
+impl UlpDiff {
+    /// Mean |ulp error| over the compared lanes (0.0 when no lanes).
+    pub fn mean_abs_ulp(&self) -> f64 {
+        if self.lanes == 0 {
+            0.0
+        } else {
+            self.sum_abs_ulp / self.lanes as f64
+        }
+    }
+
+    /// Largest |ulp error| observed (max of |min|, |max|).
+    pub fn worst_abs_ulp(&self) -> f64 {
+        self.min_ulp.abs().max(self.max_ulp.abs())
+    }
+
+    /// Whether every compared lane matched the reference exactly.
+    pub fn is_exact(&self) -> bool {
+        self.lanes > 0 && self.min_ulp == 0.0 && self.max_ulp == 0.0
+    }
+}
+
+/// Combine one lane of SoA output planes into its value plus the high
+/// word the ulp unit derives from: `hi + lo` for the two-plane
+/// (float-float) operators, the plane itself for the `f32` baselines.
+#[inline]
+fn lane_value(planes: &[Vec<f32>], i: usize) -> (f64, f32) {
+    let hi = planes[0][i];
+    if planes.len() >= 2 {
+        (hi as f64 + planes[1][i] as f64, hi)
+    } else {
+        (hi as f64, hi)
+    }
+}
+
+/// Diff `valid` lanes of `got` against `reference`, starting at
+/// `offset` into both plane sets. Lanes outside `[offset,
+/// offset + valid)` — the padding of a fused launch, or neighbouring
+/// requests in the same launch — are never read into the statistics.
+///
+/// Both plane sets must have `op.n_out()` planes of at least
+/// `offset + valid` lanes.
+pub fn diff_outputs(
+    op: Op, reference: &[Vec<f32>], got: &[Vec<f32>], offset: usize, valid: usize,
+) -> UlpDiff {
+    debug_assert_eq!(reference.len(), op.n_out());
+    debug_assert_eq!(got.len(), op.n_out());
+    debug_assert!(reference.iter().chain(got).all(|p| p.len() >= offset + valid));
+    let mut d = UlpDiff::default();
+    let mut worst_abs = 0.0f64;
+    for lane in 0..valid {
+        let i = offset + lane;
+        let (rv, rh) = lane_value(reference, i);
+        let (gv, gh) = lane_value(got, i);
+        if !rv.is_finite() || !gv.is_finite() {
+            d.non_finite += 1;
+            continue;
+        }
+        let err = gv - rv;
+        // unit from the larger-magnitude high word: stable when a
+        // flush-to-zero model zeroed one side
+        let unit = ulp_f32(if gh.abs() >= rh.abs() { gh } else { rh });
+        let ulps = err / unit;
+        let rel = if rv != 0.0 { (err / rv).abs() } else { 0.0 };
+        if d.lanes == 0 {
+            d.min_ulp = ulps;
+            d.max_ulp = ulps;
+        } else {
+            d.min_ulp = d.min_ulp.min(ulps);
+            d.max_ulp = d.max_ulp.max(ulps);
+        }
+        d.lanes += 1;
+        d.sum_abs_ulp += ulps.abs();
+        if rv != 0.0 {
+            d.max_rel = d.max_rel.max(rel);
+        }
+        if d.worst_lane.is_none() || ulps.abs() > worst_abs {
+            worst_abs = ulps.abs();
+            d.worst_lane = Some(lane);
+            d.worst_ulp = ulps;
+            d.worst_rel = rel;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_plane(vals: &[f32]) -> Vec<Vec<f32>> {
+        vec![vals.to_vec()]
+    }
+
+    #[test]
+    fn identical_outputs_are_exact() {
+        let r = vec![vec![1.0f32, -2.5, 3.25], vec![1e-9, 0.0, -1e-10]];
+        let d = diff_outputs(Op::Add22, &r, &r.clone(), 0, 3);
+        assert_eq!(d.lanes, 3);
+        assert!(d.is_exact());
+        assert_eq!(d.mean_abs_ulp(), 0.0);
+        assert_eq!(d.max_rel, 0.0);
+        assert_eq!(d.non_finite, 0);
+    }
+
+    #[test]
+    fn one_step_error_is_one_ulp() {
+        let r = one_plane(&[4.0]);
+        let g = one_plane(&[f32::from_bits(4.0f32.to_bits() + 1)]);
+        let d = diff_outputs(Op::Add, &r, &g, 0, 1);
+        assert!((d.max_ulp - 1.0).abs() < 1e-12, "{d:?}");
+        assert_eq!(d.min_ulp, d.max_ulp);
+        assert_eq!(d.worst_lane, Some(0));
+        assert!((d.worst_ulp - 1.0).abs() < 1e-12);
+        // relative error of 1 ulp at 4.0 = 2^-21 / 4 = 2^-23
+        assert!((d.max_rel.log2() + 23.0).abs() < 1e-9, "{}", d.max_rel);
+    }
+
+    #[test]
+    fn signed_zero_is_not_an_error() {
+        // a model that returns -0.0 where the reference has +0.0 (and
+        // vice versa) is numerically exact
+        let r = vec![vec![0.0f32, -0.0], vec![0.0, 0.0]];
+        let g = vec![vec![-0.0f32, 0.0], vec![-0.0, -0.0]];
+        let d = diff_outputs(Op::Add22, &r, &g, 0, 2);
+        assert_eq!(d.lanes, 2);
+        assert!(d.is_exact(), "{d:?}");
+        assert_eq!(d.max_rel, 0.0);
+    }
+
+    #[test]
+    fn subnormal_flush_is_measured_in_subnormal_ulps() {
+        // the reference keeps a 5-step subnormal; a flush-to-zero model
+        // returns 0.0. The unit comes from the larger-magnitude side
+        // (the reference), so the error is exactly -5 subnormal steps,
+        // not an infinity from ulp(0).
+        let sub = f32::from_bits(5);
+        let r = one_plane(&[sub]);
+        let g = one_plane(&[0.0]);
+        let d = diff_outputs(Op::Add, &r, &g, 0, 1);
+        assert!((d.min_ulp + 5.0).abs() < 1e-9, "{d:?}");
+        assert_eq!(d.worst_lane, Some(0));
+        // the flush is 100% relative error
+        assert!((d.max_rel - 1.0).abs() < 1e-12);
+        // and in the other direction (model manufactures a subnormal)
+        // the unit still comes from the non-zero side
+        let d = diff_outputs(Op::Add, &g, &r, 0, 1);
+        assert!((d.max_ulp - 5.0).abs() < 1e-9, "{d:?}");
+        // reference is zero there: relative error undefined, skipped
+        assert_eq!(d.max_rel, 0.0);
+    }
+
+    #[test]
+    fn pad_lanes_are_excluded() {
+        // lanes 2.. are fused-launch padding filled with garbage on the
+        // "got" side; only the 2 valid lanes may reach the statistics
+        let r = vec![vec![1.0f32, 2.0, 0.0, 0.0], vec![0.0; 4]];
+        let g = vec![vec![1.0f32, 2.0, 7777.0, -1e30], vec![0.0; 4]];
+        let d = diff_outputs(Op::Add22, &r, &g, 0, 2);
+        assert_eq!(d.lanes, 2);
+        assert!(d.is_exact(), "pad lanes leaked into the diff: {d:?}");
+    }
+
+    #[test]
+    fn offset_slices_align_per_request() {
+        // two requests fused into one launch: request B occupies lanes
+        // [2, 4) and only its own lanes are diffed
+        let r = one_plane(&[1.0, 1.0, 8.0, 16.0]);
+        let mut gv = r[0].clone();
+        gv[0] = 999.0; // request A's error must not show up
+        gv[2] = f32::from_bits(8.0f32.to_bits() + 2);
+        let g = one_plane(&gv);
+        let d = diff_outputs(Op::Add, &r, &g, 2, 2);
+        assert_eq!(d.lanes, 2);
+        assert!((d.max_ulp - 2.0).abs() < 1e-12, "{d:?}");
+        // worst lane is reported relative to the request slice
+        assert_eq!(d.worst_lane, Some(0));
+    }
+
+    #[test]
+    fn non_finite_lanes_are_counted_not_scored() {
+        let r = one_plane(&[1.0, f32::NAN, f32::INFINITY, 2.0]);
+        let g = one_plane(&[1.0, 1.0, f32::INFINITY, 2.0]);
+        let d = diff_outputs(Op::Add, &r, &g, 0, 4);
+        assert_eq!(d.lanes, 2, "{d:?}");
+        assert_eq!(d.non_finite, 2);
+        assert!(d.is_exact());
+        assert!(d.max_ulp.is_finite() && d.min_ulp.is_finite());
+    }
+
+    #[test]
+    fn worst_lane_tracks_the_largest_magnitude() {
+        let r = one_plane(&[1.0, 1.0, 1.0]);
+        let g = one_plane(&[
+            f32::from_bits(1.0f32.to_bits() + 1),
+            f32::from_bits(1.0f32.to_bits() - 3), // 3 steps low (below 1.0 the step halves)
+            1.0,
+        ]);
+        let d = diff_outputs(Op::Add, &r, &g, 0, 3);
+        assert_eq!(d.worst_lane, Some(1));
+        assert!(d.worst_ulp < 0.0);
+        assert!(d.worst_abs_ulp() >= 1.0);
+        assert!(d.mean_abs_ulp() > 0.0);
+    }
+}

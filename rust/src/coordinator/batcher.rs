@@ -12,6 +12,20 @@
 //! Padding values are operator-aware ([`Op::pad_value`]): `div22` pads
 //! the divisor with ones so the padding lanes don't produce NaNs that
 //! could trap slow paths.
+//!
+//! # Examples
+//!
+//! ```
+//! use ffgpu::coordinator::batcher;
+//!
+//! // 20000 lanes over the paper's ladder: the tail splits across
+//! // 4096 + 16384 (480 pad lanes) instead of one 65536 launch
+//! let launches = batcher::plan(20000, &[4096, 16384, 65536]).unwrap();
+//! assert_eq!(launches.len(), 2);
+//! let padded: usize = launches.iter().map(|l| l.size - l.len).sum();
+//! assert_eq!(padded, 480);
+//! assert!(batcher::waste(&launches) < 0.03);
+//! ```
 
 use crate::backend::Op;
 

@@ -15,8 +15,16 @@
 //! The cells live inside [`crate::coordinator::routing::ShardMeta`], so
 //! a policy sees label, queue depth, capability and measured rate in
 //! one place.
+//!
+//! The same single-writer/lock-free-reader pattern carries the
+//! **accuracy plane**: [`OpAccuracy`] cells aggregate the observatory's
+//! per-(model, op) ulp-diff statistics ([`crate::backend::UlpDiff`]) —
+//! min/max/mean ulp error, a relative-error EWMA, and the
+//! worst-offender lane capture ([`WorstLane`]) — written only by the
+//! observatory thread and read by
+//! [`crate::coordinator::Service::accuracy_report`].
 
-use crate::backend::Op;
+use crate::backend::{Op, UlpDiff};
 use crate::util::Summary;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -316,6 +324,151 @@ impl Telemetry {
     }
 }
 
+/// The inputs and outputs of the worst lane one accuracy cell has
+/// seen: what the observatory captures so the largest error is
+/// reproducible, not just a number.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorstLane {
+    /// Signed ulp error of the lane.
+    pub ulp: f64,
+    /// Relative error of the lane (0.0 where the reference was zero).
+    pub rel: f64,
+    /// The request's input planes at the lane (`n_in` values).
+    pub inputs: Vec<f32>,
+    /// The observed output words at the lane (`n_out` values).
+    pub got: Vec<f32>,
+    /// The reference output words at the lane.
+    pub reference: Vec<f32>,
+}
+
+/// One accuracy cell: cumulative ulp-diff statistics of one operator
+/// under one arithmetic model, mirrored from live traffic.
+///
+/// Same discipline as [`OpEwma`]: exactly one writer (the observatory
+/// thread), lock-free readers (f64 bits in atomics, release-published
+/// through the lane count). The worst-offender capture sits behind a
+/// `Mutex` — it is replaced only when a new maximum appears and read
+/// only by reports, never on a hot path.
+#[derive(Debug, Default)]
+pub struct OpAccuracy {
+    lanes: AtomicU64,
+    groups: AtomicU64,
+    non_finite: AtomicU64,
+    min_ulp_bits: AtomicU64,
+    max_ulp_bits: AtomicU64,
+    sum_abs_ulp_bits: AtomicU64,
+    max_rel_bits: AtomicU64,
+    rel_ewma_bits: AtomicU64,
+    worst: Mutex<Option<WorstLane>>,
+}
+
+impl OpAccuracy {
+    /// Fold one diffed slice into the cell. `worst` carries the lane
+    /// capture for `d.worst_lane` when the caller resolved it; it
+    /// replaces the stored offender only if its |ulp| is larger.
+    pub fn record(&self, d: &UlpDiff, worst: Option<WorstLane>) {
+        self.non_finite.fetch_add(d.non_finite, Ordering::Relaxed);
+        if d.lanes == 0 {
+            return;
+        }
+        let n = self.lanes.load(Ordering::Relaxed);
+        let (min, max, sum, rel_max, rel_ewma) = if n == 0 {
+            (d.min_ulp, d.max_ulp, d.sum_abs_ulp, d.max_rel, d.max_rel)
+        } else {
+            let prev_min = f64::from_bits(self.min_ulp_bits.load(Ordering::Relaxed));
+            let prev_max = f64::from_bits(self.max_ulp_bits.load(Ordering::Relaxed));
+            let prev_sum =
+                f64::from_bits(self.sum_abs_ulp_bits.load(Ordering::Relaxed));
+            let prev_rel = f64::from_bits(self.max_rel_bits.load(Ordering::Relaxed));
+            let prev_ewma =
+                f64::from_bits(self.rel_ewma_bits.load(Ordering::Relaxed));
+            (
+                prev_min.min(d.min_ulp),
+                prev_max.max(d.max_ulp),
+                prev_sum + d.sum_abs_ulp,
+                prev_rel.max(d.max_rel),
+                EWMA_ALPHA * d.max_rel + (1.0 - EWMA_ALPHA) * prev_ewma,
+            )
+        };
+        self.min_ulp_bits.store(min.to_bits(), Ordering::Relaxed);
+        self.max_ulp_bits.store(max.to_bits(), Ordering::Relaxed);
+        self.sum_abs_ulp_bits.store(sum.to_bits(), Ordering::Relaxed);
+        self.max_rel_bits.store(rel_max.to_bits(), Ordering::Relaxed);
+        self.rel_ewma_bits.store(rel_ewma.to_bits(), Ordering::Relaxed);
+        self.groups.fetch_add(1, Ordering::Relaxed);
+        if let Some(w) = worst {
+            let mut g = self.worst.lock().unwrap();
+            let replace = match g.as_ref() {
+                Some(cur) => w.ulp.abs() > cur.ulp.abs(),
+                None => true,
+            };
+            if replace {
+                *g = Some(w);
+            }
+        }
+        // release-publish: a reader that sees the new lane count also
+        // sees every bit store above
+        self.lanes.store(n + d.lanes, Ordering::Release);
+    }
+
+    /// Lanes compared so far (0 = cold cell).
+    pub fn lanes(&self) -> u64 {
+        self.lanes.load(Ordering::Acquire)
+    }
+
+    /// Diff groups folded in (what the relative-error EWMA samples).
+    pub fn groups(&self) -> u64 {
+        self.groups.load(Ordering::Relaxed)
+    }
+
+    /// Non-finite lanes excluded from the statistics.
+    pub fn non_finite(&self) -> u64 {
+        self.non_finite.load(Ordering::Relaxed)
+    }
+
+    fn loaded(&self, bits: &AtomicU64) -> Option<f64> {
+        if self.lanes.load(Ordering::Acquire) == 0 {
+            None
+        } else {
+            Some(f64::from_bits(bits.load(Ordering::Relaxed)))
+        }
+    }
+
+    /// Most negative signed ulp error; `None` while cold.
+    pub fn min_ulp(&self) -> Option<f64> {
+        self.loaded(&self.min_ulp_bits)
+    }
+
+    /// Most positive signed ulp error; `None` while cold.
+    pub fn max_ulp(&self) -> Option<f64> {
+        self.loaded(&self.max_ulp_bits)
+    }
+
+    /// Mean |ulp error| over every compared lane; `None` while cold.
+    pub fn mean_abs_ulp(&self) -> Option<f64> {
+        let lanes = self.lanes();
+        if lanes == 0 {
+            return None;
+        }
+        Some(f64::from_bits(self.sum_abs_ulp_bits.load(Ordering::Relaxed)) / lanes as f64)
+    }
+
+    /// Largest relative error observed; `None` while cold.
+    pub fn max_rel(&self) -> Option<f64> {
+        self.loaded(&self.max_rel_bits)
+    }
+
+    /// EWMA of per-group max relative error; `None` while cold.
+    pub fn rel_ewma(&self) -> Option<f64> {
+        self.loaded(&self.rel_ewma_bits)
+    }
+
+    /// The captured worst-offender lane, if any group produced one.
+    pub fn worst(&self) -> Option<WorstLane> {
+        self.worst.lock().unwrap().clone()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,5 +614,68 @@ mod tests {
         t.record(Op::Add, 1000, -1.0, 0);
         assert_eq!(t.samples(Op::Add), 0);
         assert_eq!(t.rate(Op::Add), None);
+    }
+
+    fn diff(lanes: u64, min: f64, max: f64, sum_abs: f64, rel: f64) -> UlpDiff {
+        UlpDiff {
+            lanes,
+            min_ulp: min,
+            max_ulp: max,
+            sum_abs_ulp: sum_abs,
+            max_rel: rel,
+            ..UlpDiff::default()
+        }
+    }
+
+    #[test]
+    fn accuracy_cell_is_cold_until_first_group() {
+        let c = OpAccuracy::default();
+        assert_eq!(c.lanes(), 0);
+        assert_eq!(c.max_ulp(), None);
+        assert_eq!(c.min_ulp(), None);
+        assert_eq!(c.mean_abs_ulp(), None);
+        assert_eq!(c.max_rel(), None);
+        assert_eq!(c.rel_ewma(), None);
+        assert!(c.worst().is_none());
+        // a diff with no compared lanes keeps the cell cold
+        c.record(&diff(0, 0.0, 0.0, 0.0, 0.0), None);
+        assert_eq!(c.lanes(), 0);
+        assert_eq!(c.max_ulp(), None);
+    }
+
+    #[test]
+    fn accuracy_cell_merges_intervals_and_means() {
+        let c = OpAccuracy::default();
+        c.record(&diff(100, -0.5, 0.25, 10.0, 1e-8), None);
+        c.record(&diff(300, -0.1, 0.75, 30.0, 4e-9), None);
+        assert_eq!(c.lanes(), 400);
+        assert_eq!(c.groups(), 2);
+        assert_eq!(c.min_ulp(), Some(-0.5));
+        assert_eq!(c.max_ulp(), Some(0.75));
+        assert_eq!(c.mean_abs_ulp(), Some(0.1));
+        assert_eq!(c.max_rel(), Some(1e-8));
+        // EWMA seeded on the first group, pulled towards the second
+        let e = c.rel_ewma().unwrap();
+        assert!(e < 1e-8 && e > 4e-9, "e={e}");
+    }
+
+    #[test]
+    fn accuracy_worst_offender_only_grows() {
+        let c = OpAccuracy::default();
+        let big = WorstLane {
+            ulp: -2.5,
+            rel: 1e-7,
+            inputs: vec![1.0, 2.0],
+            got: vec![3.0],
+            reference: vec![3.5],
+        };
+        c.record(&diff(1, -2.5, 0.0, 2.5, 1e-7), Some(big.clone()));
+        let small = WorstLane { ulp: 0.5, ..big.clone() };
+        c.record(&diff(1, 0.0, 0.5, 0.5, 1e-9), Some(small));
+        // the smaller-|ulp| capture must not displace the offender
+        assert_eq!(c.worst(), Some(big));
+        assert_eq!(c.non_finite(), 0);
+        c.record(&diff(0, 0.0, 0.0, 0.0, 0.0), None);
+        assert_eq!(c.worst().unwrap().ulp, -2.5);
     }
 }

@@ -45,7 +45,16 @@
 //!   shard), merged on read — plus the **telemetry plane**: per-(shard,
 //!   op) EWMA throughput/latency/padding-waste cells
 //!   ([`metrics::Telemetry`]) written lock-free by the shard threads
-//!   and read by measured routing (and future batch-aware planning).
+//!   and read by measured routing (and future batch-aware planning);
+//! * the **accuracy observatory** ([`observatory`]) mirrors a
+//!   configurable fraction of live traffic onto a native reference
+//!   plus one simulated GPU model per [`ObservatorySpec::models`]
+//!   entry, diffs replies lane by lane in ulps, and aggregates
+//!   per-(model, op) error statistics the paper only had as static
+//!   tables — read them via [`Service::accuracy_report`] or force a
+//!   per-request verdict with [`Handle::dispatch_mirrored`]. Mirrored
+//!   work runs on the observatory's own backends, so observation never
+//!   perturbs routing telemetry or queue depths.
 //!
 //! The seed's stringly-typed surface — `Handle::submit("add22", ...)`,
 //! `Handle::call`, the single-spec `ServiceConfig` — is gone: the last
@@ -60,12 +69,17 @@
 
 pub mod batcher;
 pub mod metrics;
+pub mod observatory;
 pub mod plan;
 pub mod request;
 pub mod routing;
 pub mod service;
 
 pub use crate::backend::Op;
+pub use observatory::{
+    AccuracyReport, MirrorReport, ModelDiff, ModelReport, ObservatorySpec,
+    OpAccuracyRow, TicketSet,
+};
 pub use plan::{Plan, RequestBuilder, Ticket, TicketState};
 pub use request::OpRequest;
 pub use routing::{Routing, RoutingPolicy, TelemetryView};

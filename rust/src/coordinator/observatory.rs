@@ -1,0 +1,963 @@
+//! The accuracy observatory: GPU-model sweeps as a service.
+//!
+//! The paper's headline results are its accuracy tables — Table 2
+//! (ulp-error intervals per arithmetic model) and Table 5 (max relative
+//! error per operator) — measured once, offline, on a fixed grid. This
+//! module turns that static evaluation into a **continuous
+//! experiment**: a configurable fraction of live traffic is *mirrored*
+//! onto a reference backend (native, correctly rounded float-float)
+//! and one [`crate::backend::GpuSimBackend`] per observed GPU model
+//! (`nv35`, `r300`, `chopped`, ...), replies are diffed lane by lane
+//! with the ulp kernel ([`crate::backend::ulp`]), and per-(model, op)
+//! statistics — min/max/mean ulp error, relative-error EWMAs, and a
+//! worst-offender input capture — aggregate into lock-free
+//! [`OpAccuracy`](crate::coordinator::metrics::OpAccuracy) cells that
+//! [`crate::coordinator::Service::accuracy_report`] snapshots at any
+//! moment.
+//!
+//! **Isolation.** Observation must never skew what it observes. The
+//! mirrored copy of a request is an `Arc`-clone of its input planes
+//! (no lanes copied), sent to a dedicated observatory thread *after*
+//! the routing policy has placed the original on a shard. The
+//! observatory owns its own backends — mirrored work never enters a
+//! shard queue, never touches the per-shard
+//! [`Telemetry`](crate::coordinator::metrics::Telemetry) that
+//! `measured` routing reads, and never moves a queue-depth counter.
+//! Backpressure is drop-not-block: when the observatory falls behind
+//! its [`ObservatorySpec::max_pending_lanes`] budget, sampled mirrors
+//! are dropped (and counted), and serving latency is unaffected.
+//!
+//! **Fusion-aware slicing.** Like the serving fusion stage, the
+//! observatory packs same-op mirror jobs into padded launches over a
+//! small ladder; outputs are sliced back per request before diffing,
+//! so pad lanes — which compute on neutral fill values — are excluded
+//! from every statistic (see [`crate::backend::ulp::diff_outputs`]).
+//!
+//! # Examples
+//!
+//! ```
+//! use ffgpu::backend::{BackendSpec, Op};
+//! use ffgpu::coordinator::{ObservatorySpec, Plan, Service, ServiceSpec};
+//!
+//! let spec = ServiceSpec::uniform(BackendSpec::native_single(), 1)
+//!     .with_observatory(ObservatorySpec::new(1.0, ["nv35"]));
+//! let svc = Service::start(spec)?;
+//! let set = svc.handle().dispatch_mirrored(
+//!     Plan::new(Op::Mul12, vec![vec![1.5; 64], vec![std::f32::consts::PI; 64]])?,
+//! )?;
+//! let (outputs, mirror) = set.wait()?;
+//! assert_eq!(outputs.len(), 2);
+//! assert_eq!(mirror.models[0].model, "nv35");
+//! let report = svc.accuracy_report().expect("observatory armed");
+//! assert!(report.row("nv35", Op::Mul12).is_some());
+//! # Ok::<(), ffgpu::backend::ServiceError>(())
+//! ```
+
+use super::metrics::{OpAccuracy, WorstLane};
+use super::plan::Ticket;
+use crate::backend::native::DEFAULT_CHUNK;
+use crate::backend::{
+    ulp, ExecJob, GpuSimBackend, KernelBackend, NativeBackend, Op, ServiceError,
+    UlpDiff,
+};
+use crate::gpusim::GpuModel;
+use crate::harness::table::Table;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// Max mirror jobs drained into one observatory batch.
+const MAX_DRAIN: usize = 64;
+
+/// Configuration of the accuracy observatory, armed on a service via
+/// [`crate::coordinator::ServiceSpec::with_observatory`] (CLI:
+/// `--observe <fraction> --observe-models nv35,r300`).
+#[derive(Clone, Debug)]
+pub struct ObservatorySpec {
+    /// Fraction of dispatched requests to mirror, in `[0, 1]`.
+    /// Sampling is deterministic (a Bresenham accumulator over
+    /// dispatches), so `0.25` mirrors exactly every 4th request.
+    /// `0.0` disables sampling; forced mirrors
+    /// ([`crate::coordinator::Handle::dispatch_mirrored`]) still run.
+    pub fraction: f64,
+    /// GPU arithmetic models to observe ([`GpuModel::by_name`] names:
+    /// `ieee-rn`, `chopped`, `r300`, `nv35`, `nv40`). Must be
+    /// non-empty; validated at service start.
+    pub models: Vec<String>,
+    /// Launch-size ladder for fused mirror launches (ascending after
+    /// sanitisation; empty = exact-size launches, no padding).
+    pub ladder: Vec<usize>,
+    /// Backpressure budget: mirror lanes allowed in flight before
+    /// sampled mirrors are dropped (and counted) instead of queued.
+    /// Forced mirrors bypass the cap — their caller waits on the
+    /// report.
+    pub max_pending_lanes: usize,
+}
+
+impl ObservatorySpec {
+    /// Default fused-mirror launch ladder (small: observation batches
+    /// stay far below the serving ladder's 1M-lane launches).
+    pub const DEFAULT_LADDER: [usize; 3] = [1024, 4096, 16384];
+
+    /// Default [`ObservatorySpec::max_pending_lanes`] budget.
+    pub const DEFAULT_MAX_PENDING_LANES: usize = 1 << 18;
+
+    /// Observe `models` on `fraction` of live traffic, with the
+    /// default ladder and backpressure budget.
+    pub fn new<I, S>(fraction: f64, models: I) -> ObservatorySpec
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        ObservatorySpec {
+            fraction,
+            models: models.into_iter().map(Into::into).collect(),
+            ladder: Self::DEFAULT_LADDER.to_vec(),
+            max_pending_lanes: Self::DEFAULT_MAX_PENDING_LANES,
+        }
+    }
+
+    /// Replace the fused-mirror launch ladder (empty = exact sizes).
+    pub fn with_ladder(mut self, ladder: Vec<usize>) -> ObservatorySpec {
+        self.ladder = ladder;
+        self
+    }
+
+    /// Replace the backpressure budget.
+    pub fn with_max_pending_lanes(mut self, lanes: usize) -> ObservatorySpec {
+        self.max_pending_lanes = lanes;
+        self
+    }
+
+    /// Parse the CLI pair `--observe <fraction>` /
+    /// `--observe-models <comma-list>`.
+    pub fn from_cli(fraction: &str, models: &str) -> Result<ObservatorySpec, ServiceError> {
+        let f: f64 = fraction.parse().map_err(|_| {
+            ServiceError::Backend(format!("bad --observe fraction '{fraction}'"))
+        })?;
+        let names: Vec<String> = models
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(String::from)
+            .collect();
+        let spec = ObservatorySpec::new(f, names);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Validate fraction range and model names (what
+    /// [`crate::coordinator::Service::start`] enforces before spawning
+    /// anything).
+    pub fn validate(&self) -> Result<(), ServiceError> {
+        if !self.fraction.is_finite() || !(0.0..=1.0).contains(&self.fraction) {
+            return Err(ServiceError::Backend(format!(
+                "observe fraction {} must be within [0, 1]",
+                self.fraction
+            )));
+        }
+        if self.models.is_empty() {
+            return Err(ServiceError::Backend(
+                "observatory needs at least one GPU model (--observe-models)".into(),
+            ));
+        }
+        for m in &self.models {
+            if GpuModel::by_name(m).is_none() {
+                return Err(ServiceError::Backend(format!(
+                    "unknown GPU model '{m}' in observatory spec"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One request's mirrored copy, riding the observatory channel.
+pub(crate) struct MirrorJob {
+    pub(crate) op: Op,
+    pub(crate) inputs: Vec<Arc<Vec<f32>>>,
+    pub(crate) len: usize,
+    /// Armed by forced mirrors: the per-request diff goes back here.
+    pub(crate) report: Option<mpsc::Sender<MirrorReport>>,
+}
+
+pub(crate) enum ObsMsg {
+    Mirror(MirrorJob),
+    /// Ack once every message queued before this one has been folded
+    /// into the cells — what makes `accuracy_report()` deterministic.
+    Flush(mpsc::Sender<()>),
+    Shutdown,
+}
+
+/// The per-request diff a forced mirror reports back: one
+/// [`UlpDiff`] per observed model, over this request's lanes only.
+///
+/// `models` is **empty** when the mirror could not run — the
+/// observatory was gone or its reference execute failed — so a
+/// serving reply is never held hostage by an observation failure.
+#[derive(Clone, Debug)]
+pub struct MirrorReport {
+    pub op: Op,
+    pub len: usize,
+    pub models: Vec<ModelDiff>,
+}
+
+/// One model's lane-by-lane verdict on one mirrored request.
+#[derive(Clone, Debug)]
+pub struct ModelDiff {
+    pub model: String,
+    pub diff: UlpDiff,
+}
+
+/// A [`Ticket`] plus the receiver for its mirror's accuracy verdict —
+/// what [`crate::coordinator::Handle::dispatch_mirrored`] returns.
+#[derive(Debug)]
+pub struct TicketSet {
+    ticket: Ticket,
+    report: mpsc::Receiver<MirrorReport>,
+}
+
+impl TicketSet {
+    pub(crate) fn new(ticket: Ticket, report: mpsc::Receiver<MirrorReport>) -> TicketSet {
+        TicketSet { ticket, report }
+    }
+
+    /// The serving-side ticket (shard attribution, deadline/cancel).
+    pub fn ticket(&self) -> &Ticket {
+        &self.ticket
+    }
+
+    /// Split into the ticket and the raw report receiver.
+    pub fn into_parts(self) -> (Ticket, mpsc::Receiver<MirrorReport>) {
+        (self.ticket, self.report)
+    }
+
+    /// Block for both the serving reply and the mirror's verdict. A
+    /// serving reply that arrived is never discarded over a mirror
+    /// failure: if the observatory died before reporting, the reply
+    /// comes back with an empty [`MirrorReport::models`].
+    pub fn wait(self) -> Result<(Vec<Vec<f32>>, MirrorReport), ServiceError> {
+        let (op, len) = (self.ticket.op(), self.ticket.len());
+        let out = self.ticket.wait()?;
+        let rep = self
+            .report
+            .recv()
+            .unwrap_or_else(|_| MirrorReport { op, len, models: Vec::new() });
+        Ok((out, rep))
+    }
+}
+
+/// Per-model accuracy cells (one [`OpAccuracy`] per catalogue op).
+pub(crate) struct ModelCells {
+    name: String,
+    cells: [OpAccuracy; Op::COUNT],
+}
+
+/// Shared observatory control: the dispatch-side sampler/backpressure
+/// plus the accuracy cells the observatory thread writes.
+pub(crate) struct ObsCtl {
+    /// Bresenham sampling step: `fraction * 2^32` per dispatch; a
+    /// mirror fires whenever the 32-bit accumulator wraps.
+    step: u64,
+    acc: AtomicU64,
+    pending_lanes: AtomicUsize,
+    max_pending_lanes: usize,
+    mirrored_requests: AtomicU64,
+    mirrored_lanes: AtomicU64,
+    dropped_requests: AtomicU64,
+    errors: AtomicU64,
+    models: Vec<ModelCells>,
+}
+
+impl ObsCtl {
+    pub(crate) fn new(spec: &ObservatorySpec) -> ObsCtl {
+        ObsCtl {
+            step: (spec.fraction.clamp(0.0, 1.0) * 4294967296.0) as u64,
+            acc: AtomicU64::new(0),
+            pending_lanes: AtomicUsize::new(0),
+            max_pending_lanes: spec.max_pending_lanes,
+            mirrored_requests: AtomicU64::new(0),
+            mirrored_lanes: AtomicU64::new(0),
+            dropped_requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            models: spec
+                .models
+                .iter()
+                .map(|name| ModelCells {
+                    name: name.clone(),
+                    cells: std::array::from_fn(|_| OpAccuracy::default()),
+                })
+                .collect(),
+        }
+    }
+
+    /// Tick the sampler for one dispatch; true = mirror this one.
+    pub(crate) fn sample(&self) -> bool {
+        let prev = self.acc.fetch_add(self.step, Ordering::Relaxed);
+        (prev & 0xFFFF_FFFF) + self.step >= 1 << 32
+    }
+
+    fn try_reserve(&self, lanes: usize, forced: bool) -> bool {
+        // reserve first, undo if over budget: a load-then-add pair
+        // would let concurrent dispatchers all observe the same low
+        // value and collectively blow past the cap
+        let prev = self.pending_lanes.fetch_add(lanes, Ordering::Relaxed);
+        if !forced && prev + lanes > self.max_pending_lanes {
+            self.pending_lanes.fetch_sub(lanes, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    fn release(&self, lanes: usize) {
+        self.pending_lanes.fetch_sub(lanes, Ordering::Relaxed);
+    }
+
+    fn note_errors(&self, n: u64) {
+        self.errors.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// The handle-side link to a running observatory: the job channel plus
+/// the shared control block. Cloned into every
+/// [`crate::coordinator::Handle`].
+#[derive(Clone)]
+pub(crate) struct ObsLink {
+    pub(crate) tx: mpsc::Sender<ObsMsg>,
+    pub(crate) ctl: Arc<ObsCtl>,
+}
+
+impl ObsLink {
+    /// Enqueue one mirror (already sampled, or forced when `report` is
+    /// armed). Returns false when backpressure dropped it or the
+    /// observatory is gone.
+    pub(crate) fn send_mirror(
+        &self, op: Op, inputs: Vec<Arc<Vec<f32>>>, len: usize,
+        report: Option<mpsc::Sender<MirrorReport>>,
+    ) -> bool {
+        let forced = report.is_some();
+        if !self.ctl.try_reserve(len, forced) {
+            self.ctl.dropped_requests.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        // count before the send: a Flush queued behind this mirror
+        // folds its lanes into the cells, so a report taken then must
+        // already include them in the mirrored_* totals
+        self.ctl.mirrored_requests.fetch_add(1, Ordering::Relaxed);
+        self.ctl.mirrored_lanes.fetch_add(len as u64, Ordering::Relaxed);
+        if self.tx.send(ObsMsg::Mirror(MirrorJob { op, inputs, len, report })).is_err() {
+            self.ctl.mirrored_requests.fetch_sub(1, Ordering::Relaxed);
+            self.ctl.mirrored_lanes.fetch_sub(len as u64, Ordering::Relaxed);
+            self.ctl.release(len);
+            return false;
+        }
+        true
+    }
+}
+
+/// Spawn the observatory thread (reference + per-model backends are
+/// built on the thread, like shard backends).
+pub(crate) fn spawn(
+    spec: ObservatorySpec, ctl: Arc<ObsCtl>, rx: mpsc::Receiver<ObsMsg>,
+) -> Result<JoinHandle<()>, ServiceError> {
+    std::thread::Builder::new()
+        .name("ffgpu-observatory".into())
+        .spawn(move || observatory_thread(spec, ctl, rx))
+        .map_err(|e| ServiceError::Backend(format!("spawn observatory: {e}")))
+}
+
+fn observatory_thread(spec: ObservatorySpec, ctl: Arc<ObsCtl>, rx: mpsc::Receiver<ObsMsg>) {
+    // single-worker native reference: correctly rounded float-float,
+    // deterministic, and never competing with the serving shards' crews
+    let mut reference: Box<dyn KernelBackend> =
+        Box::new(NativeBackend::new(DEFAULT_CHUNK, 1));
+    let mut models: Vec<Box<dyn KernelBackend>> = Vec::with_capacity(spec.models.len());
+    for name in &spec.models {
+        match GpuSimBackend::by_name(name) {
+            Ok(b) => models.push(Box::new(b)),
+            // names were validated at Service::start; a failure here
+            // means the model set changed under us — bail out cleanly
+            Err(_) => return,
+        }
+    }
+    let mut ladder = spec.ladder.clone();
+    ladder.retain(|&s| s > 0);
+    ladder.sort_unstable();
+    ladder.dedup();
+
+    loop {
+        let mut jobs: Vec<MirrorJob> = Vec::new();
+        let mut flushes: Vec<mpsc::Sender<()>> = Vec::new();
+        let mut shutdown = false;
+        match rx.recv() {
+            Ok(ObsMsg::Mirror(j)) => jobs.push(j),
+            Ok(ObsMsg::Flush(tx)) => flushes.push(tx),
+            Ok(ObsMsg::Shutdown) | Err(_) => break,
+        }
+        while jobs.len() < MAX_DRAIN {
+            match rx.try_recv() {
+                Ok(ObsMsg::Mirror(j)) => jobs.push(j),
+                Ok(ObsMsg::Flush(tx)) => flushes.push(tx),
+                Ok(ObsMsg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(_) => break,
+            }
+        }
+        // group by operator, preserving arrival order (same shape as
+        // the shard serve loop's fusion stage)
+        let mut groups: Vec<(Op, Vec<MirrorJob>)> = Vec::new();
+        for j in jobs {
+            match groups.iter().position(|(op, _)| *op == j.op) {
+                Some(i) => groups[i].1.push(j),
+                None => groups.push((j.op, vec![j])),
+            }
+        }
+        for (op, group) in groups {
+            run_group(op, &group, reference.as_mut(), &mut models, &ladder, &ctl);
+        }
+        for f in flushes {
+            let _ = f.send(());
+        }
+        if shutdown {
+            break;
+        }
+    }
+}
+
+/// Execute one fused mirror group on the reference and every model,
+/// slice the launch back per request, and fold the diffs into the
+/// accuracy cells.
+fn run_group(
+    op: Op, jobs: &[MirrorJob], reference: &mut dyn KernelBackend,
+    models: &mut [Box<dyn KernelBackend>], ladder: &[usize], ctl: &ObsCtl,
+) {
+    let (n_in, n_out) = op.arity();
+    let total: usize = jobs.iter().map(|j| j.len).sum();
+    // pad the concatenation up to the smallest ladder rung that fits;
+    // exact size when no rung does (or no ladder is configured)
+    let size = ladder.iter().copied().find(|&s| s >= total).unwrap_or(total);
+    let mut planes: Vec<Arc<Vec<f32>>> = Vec::with_capacity(n_in);
+    for p in 0..n_in {
+        let mut buf = Vec::with_capacity(size);
+        for j in jobs {
+            buf.extend_from_slice(&j.inputs[p]);
+        }
+        buf.resize(size, op.pad_value(p));
+        planes.push(Arc::new(buf));
+    }
+    let job = match ExecJob::from_shared(op, planes) {
+        Ok(j) => j,
+        Err(_) => {
+            // unreachable for planes the coordinator validated, but an
+            // observatory bug must not kill the thread — and forced
+            // mirrors still get their (empty) report
+            ctl.note_errors(1);
+            for j in jobs {
+                if let Some(tx) = &j.report {
+                    let _ = tx.send(MirrorReport { op, len: j.len, models: Vec::new() });
+                }
+            }
+            ctl.release(total);
+            return;
+        }
+    };
+    let mut ref_outs = vec![vec![0.0f32; size]; n_out];
+    if reference.execute(&job, &mut ref_outs).is_err() {
+        ctl.note_errors(1);
+        for j in jobs {
+            if let Some(tx) = &j.report {
+                let _ = tx.send(MirrorReport { op, len: j.len, models: Vec::new() });
+            }
+        }
+        ctl.release(total);
+        return;
+    }
+    // run every model over the same fused launch
+    let mut model_outs: Vec<Option<Vec<Vec<f32>>>> = Vec::with_capacity(models.len());
+    for b in models.iter_mut() {
+        let mut outs = vec![vec![0.0f32; size]; n_out];
+        match b.execute(&job, &mut outs) {
+            Ok(_) => model_outs.push(Some(outs)),
+            Err(_) => {
+                ctl.note_errors(1);
+                model_outs.push(None);
+            }
+        }
+    }
+    // slice the launch back per request: pad lanes (beyond `total`)
+    // and neighbouring requests never reach a diff
+    let mut offset = 0usize;
+    for j in jobs {
+        let in_refs: Vec<&[f32]> = j.inputs.iter().map(|p| p.as_slice()).collect();
+        let mut diffs: Vec<ModelDiff> = Vec::with_capacity(models.len());
+        for (mi, outs) in model_outs.iter().enumerate() {
+            let Some(outs) = outs else { continue };
+            let d = ulp::diff_outputs(op, &ref_outs, outs, offset, j.len);
+            let worst = capture_worst(&d, &in_refs, outs, &ref_outs, offset);
+            ctl.models[mi].cells[op.index()].record(&d, worst);
+            diffs.push(ModelDiff { model: ctl.models[mi].name.clone(), diff: d });
+        }
+        if let Some(tx) = &j.report {
+            let _ = tx.send(MirrorReport { op, len: j.len, models: diffs });
+        }
+        offset += j.len;
+    }
+    ctl.release(total);
+}
+
+/// Materialise the worst lane of a diff as a [`WorstLane`] capture
+/// (`None` when the slice was exact). `base` offsets into the output
+/// planes, which belong to the fused launch; the input planes are the
+/// request's own, so they index at the bare lane.
+fn capture_worst(
+    d: &UlpDiff, inputs: &[&[f32]], got: &[Vec<f32>], reference: &[Vec<f32>],
+    base: usize,
+) -> Option<WorstLane> {
+    let lane = d.worst_lane?;
+    if d.worst_abs_ulp() == 0.0 {
+        return None;
+    }
+    Some(WorstLane {
+        ulp: d.worst_ulp,
+        rel: d.worst_rel,
+        inputs: inputs.iter().map(|p| p[lane]).collect(),
+        got: got.iter().map(|p| p[base + lane]).collect(),
+        reference: reference.iter().map(|p| p[base + lane]).collect(),
+    })
+}
+
+/// One (model, op) row of an [`AccuracyReport`].
+#[derive(Clone, Debug)]
+pub struct OpAccuracyRow {
+    pub op: Op,
+    /// Lanes compared so far. 0 with [`OpAccuracyRow::non_finite`]
+    /// nonzero means every observed lane was NaN/inf — the statistics
+    /// are all zero and the renderers flag the cell as "non-finite".
+    pub lanes: u64,
+    /// Diff groups folded in (the EWMA's sample count).
+    pub groups: u64,
+    /// Non-finite lanes excluded from the statistics.
+    pub non_finite: u64,
+    pub min_ulp: f64,
+    pub max_ulp: f64,
+    pub mean_abs_ulp: f64,
+    /// Largest relative error observed.
+    pub max_rel: f64,
+    /// EWMA of per-group max relative error.
+    pub rel_ewma: f64,
+    /// The captured worst-offender lane, when any error was observed.
+    pub worst: Option<WorstLane>,
+}
+
+impl OpAccuracyRow {
+    /// `log2(max_rel)` — the paper's Table 5 notation. `None` when no
+    /// error was ever observed ("(exact)").
+    pub fn max_rel_log2(&self) -> Option<f64> {
+        if self.max_rel > 0.0 {
+            Some(self.max_rel.log2())
+        } else {
+            None
+        }
+    }
+
+    /// Table 5 cell formatting: "-45.0" or "(exact)".
+    pub fn display_rel(&self) -> String {
+        match self.max_rel_log2() {
+            Some(v) => format!("{v:.1}"),
+            None => "(exact)".to_string(),
+        }
+    }
+}
+
+fn row_from_cell(op: Op, c: &OpAccuracy) -> Option<OpAccuracyRow> {
+    let lanes = c.lanes();
+    // a cell whose every lane was non-finite still observed traffic —
+    // a model that overflows 100% of the time must surface as a red
+    // flag ("non-finite" in the tables), not as "never observed"
+    if lanes == 0 && c.non_finite() == 0 {
+        return None;
+    }
+    Some(OpAccuracyRow {
+        op,
+        lanes,
+        groups: c.groups(),
+        non_finite: c.non_finite(),
+        min_ulp: c.min_ulp().unwrap_or(0.0),
+        max_ulp: c.max_ulp().unwrap_or(0.0),
+        mean_abs_ulp: c.mean_abs_ulp().unwrap_or(0.0),
+        max_rel: c.max_rel().unwrap_or(0.0),
+        rel_ewma: c.rel_ewma().unwrap_or(0.0),
+        worst: c.worst(),
+    })
+}
+
+/// One observed model's rows, in catalogue order (cold ops omitted).
+#[derive(Clone, Debug)]
+pub struct ModelReport {
+    pub model: String,
+    pub rows: Vec<OpAccuracyRow>,
+}
+
+/// A point-in-time snapshot of the observatory's accuracy surface,
+/// from [`crate::coordinator::Service::accuracy_report`].
+#[derive(Clone, Debug)]
+pub struct AccuracyReport {
+    /// One report per observed model, in spec order.
+    pub models: Vec<ModelReport>,
+    pub mirrored_requests: u64,
+    pub mirrored_lanes: u64,
+    /// Sampled mirrors dropped by backpressure.
+    pub dropped_requests: u64,
+    /// Observatory-side execute failures.
+    pub observatory_errors: u64,
+}
+
+impl AccuracyReport {
+    pub(crate) fn collect(ctl: &ObsCtl) -> AccuracyReport {
+        AccuracyReport {
+            models: ctl
+                .models
+                .iter()
+                .map(|mc| ModelReport {
+                    model: mc.name.clone(),
+                    rows: Op::ALL
+                        .iter()
+                        .filter_map(|&op| row_from_cell(op, &mc.cells[op.index()]))
+                        .collect(),
+                })
+                .collect(),
+            mirrored_requests: ctl.mirrored_requests.load(Ordering::Relaxed),
+            mirrored_lanes: ctl.mirrored_lanes.load(Ordering::Relaxed),
+            dropped_requests: ctl.dropped_requests.load(Ordering::Relaxed),
+            observatory_errors: ctl.errors.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The row for `(model, op)`, if that cell has seen lanes.
+    pub fn row(&self, model: &str, op: Op) -> Option<&OpAccuracyRow> {
+        self.models
+            .iter()
+            .find(|m| m.model == model)?
+            .rows
+            .iter()
+            .find(|r| r.op == op)
+    }
+
+    /// Union of observed operators, in catalogue order.
+    pub fn observed_ops(&self) -> Vec<Op> {
+        Op::ALL
+            .into_iter()
+            .filter(|&op| self.models.iter().any(|m| m.rows.iter().any(|r| r.op == op)))
+            .collect()
+    }
+
+    fn footer(&self) -> String {
+        format!(
+            "mirrored: {} requests / {} lanes  dropped: {}  observatory errors: {}\n",
+            self.mirrored_requests,
+            self.mirrored_lanes,
+            self.dropped_requests,
+            self.observatory_errors
+        )
+    }
+
+    /// Render the live Table-2 analogue: per-(model, op) ulp-error
+    /// intervals observed under mirrored traffic.
+    pub fn render_table2_live(&self) -> String {
+        let mut header: Vec<String> = vec!["Operator".to_string()];
+        header.extend(self.models.iter().map(|m| m.model.clone()));
+        header.push("lanes".to_string());
+        let refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(
+            "Table 2 (live) — observed ulp-error intervals vs the native \
+             float-float reference",
+            &refs,
+        );
+        for op in self.observed_ops() {
+            let mut cells = vec![op.name().to_string()];
+            let mut lanes = 0u64;
+            for m in &self.models {
+                match m.rows.iter().find(|r| r.op == op) {
+                    Some(r) if r.lanes == 0 => {
+                        // every compared lane was NaN/inf: no interval
+                        // exists, but the breakage must be visible
+                        lanes = lanes.max(r.non_finite);
+                        cells.push(format!("non-finite x{}", r.non_finite));
+                    }
+                    Some(r) => {
+                        lanes = lanes.max(r.lanes);
+                        let mut cell =
+                            format!("[{:+.2}, {:+.2}]", r.min_ulp, r.max_ulp);
+                        if r.non_finite > 0 {
+                            cell.push_str(&format!(" (+{} non-finite)", r.non_finite));
+                        }
+                        cells.push(cell);
+                    }
+                    None => cells.push("-".to_string()),
+                }
+            }
+            cells.push(lanes.to_string());
+            t.row(cells);
+        }
+        let mut out = t.render();
+        out.push_str(&self.footer());
+        out
+    }
+
+    /// Render the live Table-5 analogue: per-(model, op) max observed
+    /// `log2` relative error ("(exact)" when no error was seen).
+    pub fn render_table5_live(&self) -> String {
+        let mut header: Vec<String> = vec!["Operator".to_string()];
+        header.extend(self.models.iter().map(|m| m.model.clone()));
+        let refs: Vec<&str> = header.iter().map(String::as_str).collect();
+        let mut t = Table::new(
+            "Table 5 (live) — max observed log2 relative error under \
+             mirrored traffic",
+            &refs,
+        );
+        for op in self.observed_ops() {
+            let mut cells = vec![op.name().to_string()];
+            for m in &self.models {
+                match m.rows.iter().find(|r| r.op == op) {
+                    Some(r) if r.lanes == 0 => cells.push("non-finite".to_string()),
+                    Some(r) => cells.push(r.display_rel()),
+                    None => cells.push("-".to_string()),
+                }
+            }
+            t.row(cells);
+        }
+        let mut out = t.render();
+        out.push_str(&self.footer());
+        out
+    }
+}
+
+/// The one-shot counterpart of the live observatory: sweep `total`
+/// lanes of the standard workload ([`crate::harness::workload`]) for
+/// `op` under `model`, chunked like the Table 5 harness, and return
+/// the same row the live report would. The integration suite pins
+/// live == one-shot over identical streams.
+pub fn one_shot_sweep(
+    model: &str, op: Op, total: usize, chunk: usize, seed: u64,
+) -> Result<OpAccuracyRow, ServiceError> {
+    let mut reference = NativeBackend::new(DEFAULT_CHUNK, 1);
+    let mut target = GpuSimBackend::by_name(model)?;
+    let cell = OpAccuracy::default();
+    let chunk = chunk.max(1);
+    let mut done = 0usize;
+    let mut idx = 0u64;
+    while done < total {
+        let n = chunk.min(total - done);
+        let planes = crate::harness::workload::planes_for(op.name(), n, seed ^ (idx << 20));
+        let in_refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let job = ExecJob::new(op, planes.clone())?;
+        let mut ref_outs = vec![vec![0.0f32; n]; op.n_out()];
+        reference.execute(&job, &mut ref_outs)?;
+        let mut got = vec![vec![0.0f32; n]; op.n_out()];
+        target.execute(&job, &mut got)?;
+        let d = ulp::diff_outputs(op, &ref_outs, &got, 0, n);
+        let worst = capture_worst(&d, &in_refs, &got, &ref_outs, 0);
+        cell.record(&d, worst);
+        done += n;
+        idx += 1;
+    }
+    row_from_cell(op, &cell)
+        .ok_or_else(|| ServiceError::Backend("one-shot sweep compared no lanes".into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendSpec;
+    use crate::coordinator::{Plan, Service, ServiceSpec};
+    use crate::harness::workload;
+
+    fn observed_service(fraction: f64, models: &[&str]) -> Service {
+        Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_observatory(ObservatorySpec::new(fraction, models.iter().copied())),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spec_validates_models_and_fraction() {
+        assert!(ObservatorySpec::new(0.5, ["nv35"]).validate().is_ok());
+        assert!(ObservatorySpec::new(1.5, ["nv35"]).validate().is_err());
+        assert!(ObservatorySpec::new(-0.1, ["nv35"]).validate().is_err());
+        assert!(ObservatorySpec::new(f64::NAN, ["nv35"]).validate().is_err());
+        assert!(ObservatorySpec::new(0.5, Vec::<String>::new()).validate().is_err());
+        assert!(ObservatorySpec::new(0.5, ["voodoo2"]).validate().is_err());
+        let cli = ObservatorySpec::from_cli("0.25", "nv35, r300").unwrap();
+        assert_eq!(cli.fraction, 0.25);
+        assert_eq!(cli.models, vec!["nv35", "r300"]);
+        assert!(ObservatorySpec::from_cli("lots", "nv35").is_err());
+        assert!(ObservatorySpec::from_cli("0.5", "").is_err());
+    }
+
+    #[test]
+    fn unknown_model_fails_service_startup() {
+        let err = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_observatory(ObservatorySpec::new(1.0, ["voodoo2"])),
+        )
+        .err()
+        .expect("startup must fail");
+        assert!(matches!(err, ServiceError::Backend(_)));
+    }
+
+    #[test]
+    fn mirrored_dispatch_reports_per_model_diffs() {
+        // fraction 0: only the forced mirror runs, so the counters are
+        // exactly the one request below
+        let svc = observed_service(0.0, &["ieee-rn", "nv35"]);
+        let h = svc.handle();
+        let n = 2048;
+        let planes = workload::planes_for("add22", n, 0xB0B);
+        let set = h.dispatch_mirrored(Plan::new(Op::Add22, planes).unwrap()).unwrap();
+        let (out, rep) = set.wait().unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(rep.op, Op::Add22);
+        assert_eq!(rep.len, n);
+        assert_eq!(rep.models.len(), 2);
+        // gpusim's IEEE model is bit-identical to native on add22
+        let ieee = rep.models.iter().find(|m| m.model == "ieee-rn").unwrap();
+        assert!(ieee.diff.is_exact(), "{:?}", ieee.diff);
+        // nv35 truncated adds must deviate somewhere in 2048 lanes
+        let nv35 = rep.models.iter().find(|m| m.model == "nv35").unwrap();
+        assert!(nv35.diff.worst_abs_ulp() > 0.0, "{:?}", nv35.diff);
+        let report = svc.accuracy_report().expect("observatory armed");
+        assert_eq!(report.mirrored_requests, 1);
+        assert_eq!(report.mirrored_lanes, n as u64);
+        assert_eq!(report.dropped_requests, 0);
+        assert_eq!(report.observatory_errors, 0);
+        let row = report.row("nv35", Op::Add22).unwrap();
+        assert_eq!(row.lanes, n as u64);
+        assert!(row.worst.is_some(), "worst-offender capture missing");
+        let w = row.worst.as_ref().unwrap();
+        assert_eq!(w.inputs.len(), 4);
+        assert_eq!(w.got.len(), 2);
+        assert_eq!(report.row("ieee-rn", Op::Add22).unwrap().max_ulp, 0.0);
+        // ops never mirrored stay out of the report
+        assert!(report.row("nv35", Op::Div22).is_none());
+    }
+
+    #[test]
+    fn sampling_follows_the_fraction() {
+        let svc = observed_service(0.25, &["ieee-rn"]);
+        let h = svc.handle();
+        for _ in 0..8 {
+            h.dispatch(Plan::new(Op::Add, vec![vec![1.0; 64], vec![2.0; 64]]).unwrap())
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+        let rep = svc.accuracy_report().unwrap();
+        assert_eq!(rep.mirrored_requests, 2, "8 dispatches at fraction 1/4");
+        assert_eq!(rep.mirrored_lanes, 2 * 64);
+        // fraction 0 never samples
+        let svc = observed_service(0.0, &["ieee-rn"]);
+        let h = svc.handle();
+        for _ in 0..8 {
+            h.dispatch(Plan::new(Op::Add, vec![vec![1.0; 8], vec![2.0; 8]]).unwrap())
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+        assert_eq!(svc.accuracy_report().unwrap().mirrored_requests, 0);
+    }
+
+    #[test]
+    fn fused_mirror_launches_exclude_pad_lanes() {
+        // a 64-lane ladder pads both tiny mirrors; the ieee model is
+        // bit-identical to native on add22, so any pad lane leaking
+        // into the diff would surface as phantom error or extra lanes
+        let spec = ServiceSpec::uniform(BackendSpec::native_single(), 1)
+            .with_observatory(
+                ObservatorySpec::new(0.0, ["ieee-rn"]).with_ladder(vec![64]),
+            );
+        let svc = Service::start(spec).unwrap();
+        let h = svc.handle();
+        for n in [3usize, 5] {
+            let planes = workload::planes_for("add22", n, n as u64);
+            let (_, rep) = h
+                .dispatch_mirrored(Plan::new(Op::Add22, planes).unwrap())
+                .unwrap()
+                .wait()
+                .unwrap();
+            assert_eq!(rep.models[0].diff.lanes, n as u64);
+            assert!(rep.models[0].diff.is_exact(), "{:?}", rep.models[0].diff);
+        }
+        let report = svc.accuracy_report().unwrap();
+        let row = report.row("ieee-rn", Op::Add22).unwrap();
+        assert_eq!(row.lanes, 8);
+        assert_eq!(row.max_ulp, 0.0);
+        assert_eq!(row.min_ulp, 0.0);
+    }
+
+    #[test]
+    fn report_renders_live_tables() {
+        let svc = observed_service(0.0, &["nv35", "r300"]);
+        let h = svc.handle();
+        for op in [Op::Add22, Op::Mul12] {
+            let planes = workload::planes_for(op.name(), 256, 7);
+            h.dispatch_mirrored(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
+        }
+        let rep = svc.accuracy_report().unwrap();
+        let t2 = rep.render_table2_live();
+        assert!(t2.contains("add22") && t2.contains("mul12"), "{t2}");
+        assert!(t2.contains("nv35") && t2.contains("r300"), "{t2}");
+        assert!(t2.contains("mirrored: 2 requests"), "{t2}");
+        let t5 = rep.render_table5_live();
+        assert!(t5.contains("add22") && t5.contains("mul12"), "{t5}");
+        assert_eq!(rep.observed_ops(), vec![Op::Mul12, Op::Add22]);
+    }
+
+    #[test]
+    fn all_non_finite_cells_stay_visible() {
+        // a model that overflowed every observed lane must render as a
+        // red flag, not vanish from the report as "never observed"
+        let cell = OpAccuracy::default();
+        cell.record(
+            &UlpDiff { non_finite: 16, ..UlpDiff::default() },
+            None,
+        );
+        let row = row_from_cell(Op::Mul22, &cell).expect("row must surface");
+        assert_eq!(row.lanes, 0);
+        assert_eq!(row.non_finite, 16);
+        let rep = AccuracyReport {
+            models: vec![ModelReport { model: "chopped".into(), rows: vec![row] }],
+            mirrored_requests: 1,
+            mirrored_lanes: 16,
+            dropped_requests: 0,
+            observatory_errors: 0,
+        };
+        assert_eq!(rep.observed_ops(), vec![Op::Mul22]);
+        let t2 = rep.render_table2_live();
+        assert!(t2.contains("non-finite x16"), "{t2}");
+        let t5 = rep.render_table5_live();
+        assert!(t5.contains("non-finite"), "{t5}");
+        // a wholly cold cell still yields no row
+        assert!(row_from_cell(Op::Add, &OpAccuracy::default()).is_none());
+    }
+
+    #[test]
+    fn one_shot_sweep_matches_expectations() {
+        let ieee = one_shot_sweep("ieee-rn", Op::Add22, 1024, 256, 3).unwrap();
+        assert_eq!(ieee.lanes, 1024);
+        assert_eq!(ieee.max_ulp, 0.0);
+        assert_eq!(ieee.min_ulp, 0.0);
+        assert!(ieee.max_rel_log2().is_none());
+        assert_eq!(ieee.display_rel(), "(exact)");
+        let nv35 = one_shot_sweep("nv35", Op::Add22, 1024, 256, 3).unwrap();
+        assert_eq!(nv35.lanes, 1024);
+        assert!(
+            nv35.max_ulp > 0.0 || nv35.min_ulp < 0.0,
+            "nv35 truncated adds should deviate: {nv35:?}"
+        );
+        assert!(nv35.max_rel_log2().is_some());
+        assert!(one_shot_sweep("voodoo2", Op::Add22, 64, 64, 1).is_err());
+    }
+}

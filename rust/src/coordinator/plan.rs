@@ -20,6 +20,31 @@
 //! time), and the client-side waits honour the same state — a ticket
 //! whose deadline passes resolves promptly even if its shard is
 //! saturated, and marks itself cancelled so the shard skips it later.
+//!
+//! # Examples
+//!
+//! ```
+//! use ffgpu::backend::{Op, ServiceError};
+//! use ffgpu::coordinator::Plan;
+//!
+//! // one-shot validation: a Plan that exists has the right shapes
+//! let plan = Plan::new(Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]])?;
+//! assert_eq!((plan.op(), plan.len()), (Op::Add, 2));
+//!
+//! // or incrementally, plane by plane
+//! let plan = Plan::builder(Op::Mad)
+//!     .plane(vec![1.0, 2.0])
+//!     .planes([vec![3.0, 4.0], vec![5.0, 6.0]])
+//!     .build()?;
+//! assert_eq!(plan.len(), 2);
+//!
+//! // failures are specific, typed, and happen before dispatch
+//! assert!(matches!(
+//!     Plan::new(Op::Add22, vec![vec![1.0]; 3]),
+//!     Err(ServiceError::Arity { want: 4, got: 3, .. })
+//! ));
+//! # Ok::<(), ffgpu::backend::ServiceError>(())
+//! ```
 
 use super::request::OpResult;
 use crate::backend::{Op, ServiceError};

@@ -25,6 +25,23 @@
 //!
 //! Custom policies plug in through
 //! [`crate::coordinator::Service::start_with_policy`].
+//!
+//! # Examples
+//!
+//! ```
+//! use ffgpu::backend::BackendSpec;
+//! use ffgpu::coordinator::{Routing, Service, ServiceSpec};
+//!
+//! // two native shards routed least-loaded, selected CLI-style
+//! let spec = ServiceSpec::uniform(BackendSpec::native_single(), 2)
+//!     .with_routing(Routing::from_cli("queue-depth")?);
+//! let svc = Service::start(spec)?;
+//! assert_eq!(svc.routing(), "queue-depth");
+//! // the telemetry view policies route over is readable by callers too
+//! assert_eq!(svc.telemetry().len(), 2);
+//! assert_eq!(svc.telemetry().queue_depth(0), 0);
+//! # Ok::<(), ffgpu::backend::ServiceError>(())
+//! ```
 
 use super::metrics::Telemetry;
 use crate::backend::{Op, ServiceError};

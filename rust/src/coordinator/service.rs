@@ -33,6 +33,9 @@
 
 use super::batcher;
 use super::metrics::{Metrics, Snapshot};
+use super::observatory::{
+    self, AccuracyReport, ObsLink, ObsMsg, ObservatorySpec, TicketSet,
+};
 use super::plan::{Plan, Ticket, TicketState};
 use super::request::OpRequest;
 use super::routing::{Routing, RoutingPolicy, ShardMeta, TelemetryView};
@@ -55,8 +58,10 @@ pub const PAPER_FUSE_SIZES: [usize; 5] = [4096, 16384, 65536, 262144, 1048576];
 const DEADLINE_POLL_SLICE: Duration = Duration::from_millis(1);
 
 /// Service configuration: one [`BackendSpec`] **per shard**, the
-/// routing policy that places requests across them, and the fusion
-/// stage's window/ladder.
+/// routing policy that places requests across them, the fusion
+/// stage's window/ladder, and (optionally) the accuracy observatory
+/// that mirrors a fraction of traffic for continuous Table-2/Table-5
+/// style measurement.
 #[derive(Clone, Debug)]
 pub struct ServiceSpec {
     /// One backend recipe per shard; heterogeneous sets are first-class
@@ -84,6 +89,12 @@ pub struct ServiceSpec {
     /// [`Service::start`]: zero rungs are dropped and the ladder is
     /// sorted and deduplicated (a zero rung would spin the planner).
     pub fuse_sizes: Vec<usize>,
+    /// Arm the accuracy observatory: mirror a fraction of live traffic
+    /// onto a native reference plus simulated GPU models and aggregate
+    /// per-(model, op) ulp-error statistics
+    /// ([`Service::accuracy_report`]). `None` (the default) serves
+    /// without observation.
+    pub observe: Option<ObservatorySpec>,
 }
 
 impl Default for ServiceSpec {
@@ -101,6 +112,7 @@ impl ServiceSpec {
             routing: Routing::default(),
             fuse_window: Duration::ZERO,
             fuse_sizes: Vec::new(),
+            observe: None,
         }
     }
 
@@ -129,6 +141,15 @@ impl ServiceSpec {
     /// [`ServiceSpec::fuse_sizes`]).
     pub fn with_fuse_sizes(mut self, sizes: Vec<usize>) -> ServiceSpec {
         self.fuse_sizes = sizes;
+        self
+    }
+
+    /// Arm the accuracy observatory (see [`ServiceSpec::observe`] and
+    /// [`crate::coordinator::observatory`]). Validated at
+    /// [`Service::start`]: unknown model names or an out-of-range
+    /// fraction fail startup.
+    pub fn with_observatory(mut self, observe: ObservatorySpec) -> ServiceSpec {
+        self.observe = Some(observe);
         self
     }
 
@@ -196,6 +217,8 @@ pub struct Service {
     metrics: Vec<Arc<Metrics>>,
     live: Arc<AtomicUsize>,
     joins: Vec<JoinHandle<()>>,
+    obs: Option<ObsLink>,
+    obs_join: Option<JoinHandle<()>>,
 }
 
 /// Cheap cloneable submission handle; placement is delegated to the
@@ -205,32 +228,83 @@ pub struct Handle {
     txs: Vec<mpsc::Sender<Msg>>,
     meta: Arc<Vec<ShardMeta>>,
     policy: Arc<dyn RoutingPolicy>,
+    obs: Option<ObsLink>,
 }
 
 impl Handle {
-    /// Dispatch a validated [`Plan`]: the routing policy picks a shard,
-    /// the request is enqueued (its planes move into `Arc`s so the
-    /// fusion stage and persistent backend workers can share them
-    /// without copying), and the reply arrives on the returned
-    /// [`Ticket`].
-    pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
-        let (op, inputs, len) = plan.into_parts();
+    /// Route and enqueue one request on a shard; the planes are
+    /// already `Arc`-shared so fusion, persistent workers — and the
+    /// observatory's mirror, which clones the same `Arc`s — never copy
+    /// a lane.
+    fn submit_to_shard(
+        &self, op: Op, inputs: Vec<Arc<Vec<f32>>>, len: usize,
+    ) -> Result<Ticket, ServiceError> {
         let view = TelemetryView::new(&self.meta);
         let shard = self.policy.route(op, len, &view) % self.txs.len();
         let (reply, rx) = mpsc::channel();
         let state = Arc::new(TicketState::new());
-        let req = OpRequest {
-            op,
-            inputs: inputs.into_iter().map(Arc::new).collect(),
-            reply,
-            ctrl: state.clone(),
-        };
+        let req = OpRequest { op, inputs, reply, ctrl: state.clone() };
         self.meta[shard].enter();
         if self.txs[shard].send(Msg::Submit(req)).is_err() {
             self.meta[shard].leave(1);
             return Err(ServiceError::QueueClosed);
         }
         Ok(Ticket { rx, op, shard, len, state })
+    }
+
+    /// Dispatch a validated [`Plan`]: the routing policy picks a shard,
+    /// the request is enqueued (its planes move into `Arc`s so the
+    /// fusion stage and persistent backend workers can share them
+    /// without copying), and the reply arrives on the returned
+    /// [`Ticket`].
+    ///
+    /// With an observatory armed ([`ServiceSpec::observe`]), a sampled
+    /// fraction of dispatches is mirrored onto the observatory's own
+    /// backends **after** routing — the mirror is an `Arc`-clone of the
+    /// input planes and never touches a shard queue or its telemetry.
+    pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
+        let (op, raw, len) = plan.into_parts();
+        let inputs: Vec<Arc<Vec<f32>>> = raw.into_iter().map(Arc::new).collect();
+        // sampling ticks per dispatch; the clone is refcount bumps only
+        let mirror = match &self.obs {
+            Some(o) if o.ctl.sample() => Some(inputs.clone()),
+            _ => None,
+        };
+        let ticket = self.submit_to_shard(op, inputs, len)?;
+        if let (Some(o), Some(planes)) = (&self.obs, mirror) {
+            o.send_mirror(op, planes, len, None);
+        }
+        Ok(ticket)
+    }
+
+    /// [`Handle::dispatch`], with the mirror **forced** (regardless of
+    /// the sampling fraction) and a per-request verdict: the returned
+    /// [`TicketSet`] resolves to both the serving reply and a
+    /// [`super::observatory::MirrorReport`] holding one ulp-diff per
+    /// observed model over exactly this request's lanes. Fails with
+    /// [`ServiceError::Backend`] when no observatory is armed.
+    pub fn dispatch_mirrored(&self, plan: Plan) -> Result<TicketSet, ServiceError> {
+        let Some(obs) = self.obs.clone() else {
+            return Err(ServiceError::Backend(
+                "observatory not armed (ServiceSpec::with_observatory / --observe)"
+                    .into(),
+            ));
+        };
+        let (op, raw, len) = plan.into_parts();
+        let inputs: Vec<Arc<Vec<f32>>> = raw.into_iter().map(Arc::new).collect();
+        let mirror_planes = inputs.clone();
+        let ticket = self.submit_to_shard(op, inputs, len)?;
+        let (rtx, rrx) = mpsc::channel();
+        if !obs.send_mirror(op, mirror_planes, len, Some(rtx.clone())) {
+            // observatory gone (service shutting down): deliver the
+            // "mirror did not run" report so the ticket still resolves
+            let _ = rtx.send(super::observatory::MirrorReport {
+                op,
+                len,
+                models: Vec::new(),
+            });
+        }
+        Ok(TicketSet::new(ticket, rrx))
     }
 
     /// Number of shards behind this handle.
@@ -267,6 +341,12 @@ impl Service {
         if spec.shards.is_empty() {
             return Err(ServiceError::Backend("empty shard set".into()));
         }
+        // fail fast on a bad observatory spec — before any shard thread
+        // exists
+        if let Some(o) = &spec.observe {
+            o.validate()?;
+        }
+        let observe = spec.observe.clone();
         // sanitise the fusion ladder: a zero rung would make
         // `batcher::plan`'s head loop spin forever on the shard
         // thread, and the planner's contract wants ascending unique
@@ -313,7 +393,18 @@ impl Service {
                     ServiceError::Backend("device thread died during startup".into())
                 })??;
         }
-        Ok(Service { txs, meta, policy, metrics, live, joins })
+        // the observatory rides beside the shard set: its own thread,
+        // its own backends, fed by Arc-clones at dispatch
+        let (obs, obs_join) = match observe {
+            Some(ospec) => {
+                let (tx, rx) = mpsc::channel();
+                let ctl = Arc::new(observatory::ObsCtl::new(&ospec));
+                let join = observatory::spawn(ospec, ctl.clone(), rx)?;
+                (Some(ObsLink { tx, ctl }), Some(join))
+            }
+            None => (None, None),
+        };
+        Ok(Service { txs, meta, policy, metrics, live, joins, obs, obs_join })
     }
 
     pub fn handle(&self) -> Handle {
@@ -321,6 +412,7 @@ impl Service {
             txs: self.txs.clone(),
             meta: self.meta.clone(),
             policy: self.policy.clone(),
+            obs: self.obs.clone(),
         }
     }
 
@@ -364,6 +456,29 @@ impl Service {
         self.meta[shard].supported_ops()
     }
 
+    /// Whether an accuracy observatory rides beside this service.
+    pub fn has_observatory(&self) -> bool {
+        self.obs.is_some()
+    }
+
+    /// Snapshot the observatory's live accuracy surface — per-(model,
+    /// op) ulp-error intervals, means, relative-error EWMAs and
+    /// worst-offender captures. `None` when no observatory is armed.
+    ///
+    /// The snapshot is **flushed**: every mirror queued before this
+    /// call is folded in before the report is taken (the call blocks
+    /// while the observatory catches up).
+    pub fn accuracy_report(&self) -> Option<AccuracyReport> {
+        let obs = self.obs.as_ref()?;
+        let (tx, rx) = mpsc::channel();
+        if obs.tx.send(ObsMsg::Flush(tx)).is_ok() {
+            // a dead observatory drops the ack sender; fall through to
+            // whatever was already recorded
+            let _ = rx.recv();
+        }
+        Some(AccuracyReport::collect(&obs.ctl))
+    }
+
     /// Name of the active routing policy.
     pub fn routing(&self) -> &'static str {
         self.policy.name()
@@ -384,7 +499,13 @@ impl Drop for Service {
             let _ = tx.send(Msg::Shutdown);
         }
         self.txs.clear();
+        if let Some(obs) = &self.obs {
+            let _ = obs.tx.send(ObsMsg::Shutdown);
+        }
         for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+        if let Some(j) = self.obs_join.take() {
             let _ = j.join();
         }
     }

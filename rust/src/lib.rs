@@ -44,7 +44,12 @@
 //!   [`coordinator::routing::RoutingPolicy`] — round-robin,
 //!   queue-depth-aware, capability-aware op-affinity, or
 //!   telemetry-driven measured routing — places each request over the
-//!   live per-shard [`coordinator::routing::TelemetryView`];
+//!   live per-shard [`coordinator::routing::TelemetryView`]; and the
+//!   **accuracy observatory** ([`coordinator::observatory`]) mirrors a
+//!   configurable fraction of live traffic onto a native reference
+//!   plus simulated GPU models, diffing replies lane-by-lane in ulps —
+//!   the paper's Tables 2 and 5 as a continuous experiment
+//!   ([`coordinator::Service::accuracy_report`]);
 //! * [`harness`] — workload generators and table emitters that regenerate
 //!   every table of the paper's evaluation section, plus the
 //!   substrate-neutral [`harness::timing::backend_grid`].

@@ -24,12 +24,15 @@
 //! `--fuse-window N` holds each shard's batch open N ms so cross-client
 //! requests fuse into padded ladder launches, and `--workers N`
 //! overrides the persistent worker-crew size of every native shard.
+//! `--observe F` mirrors fraction F of the demo traffic through the
+//! accuracy observatory (`--observe-models nv35,r300,chopped`) and
+//! prints the live Table-2/Table-5 accuracy report at the end.
 //!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
 
 use ffgpu::backend::{BackendSpec, Op};
-use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
 use ffgpu::runtime::Runtime;
 use ffgpu::util::{Rng, Timer};
@@ -54,6 +57,8 @@ fn main() {
     let deadline_ms: u64 = get_flag("--deadline-ms", String::new()).parse().unwrap_or(0);
     let fuse_window_ms: u64 = get_flag("--fuse-window", String::new()).parse().unwrap_or(0);
     let workers_flag: Option<usize> = get_flag("--workers", String::new()).parse().ok();
+    let observe_flag = get_flag("--observe", String::new());
+    let observe_models = get_flag("--observe-models", "nv35,r300,chopped".into());
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -64,7 +69,7 @@ fn main() {
         "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
         "serve-demo" => cmd_serve_demo(
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
-            deadline_ms, fuse_window_ms, workers_flag,
+            deadline_ms, fuse_window_ms, workers_flag, &observe_flag, &observe_models,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -85,7 +90,7 @@ ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
 USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
                        [--backend B] [--shards N] [--workers N]
                        [--shard-spec LIST] [--routing P] [--deadline-ms N]
-                       [--fuse-window N]
+                       [--fuse-window N] [--observe F] [--observe-models LIST]
 
 COMMANDS:
   info        platform, backend catalogues, artifact inventory, Table 1
@@ -121,6 +126,14 @@ SHARD SETS (serve-demo):
                                       stream-size ladder (4096..1048576)
   --workers N                         persistent worker-crew size of every
                                       native shard (0 = one per core)
+  --observe F                         mirror fraction F (0..1) of the demo
+                                      traffic through the accuracy
+                                      observatory (native reference + GPU
+                                      models) and print the live Table-2/5
+                                      accuracy report
+  --observe-models M1,M2              GPU models the observatory diffs
+                                      against (default nv35,r300,chopped;
+                                      also: ieee-rn, nv40)
 ";
 
 fn cmd_info(artifacts: &Path) -> i32 {
@@ -308,7 +321,7 @@ fn cmd_accuracy(artifacts: &Path, samples: usize) -> i32 {
 fn cmd_serve_demo(
     artifacts: &Path, backend_flag: &str, shards: usize, shard_spec: &str,
     routing_flag: &str, deadline_ms: u64, fuse_window_ms: u64,
-    workers_flag: Option<usize>,
+    workers_flag: Option<usize>, observe_flag: &str, observe_models: &str,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -352,15 +365,31 @@ fn cmd_serve_demo(
             .with_fuse_window(std::time::Duration::from_millis(fuse_window_ms))
             .with_fuse_sizes(ffgpu::coordinator::PAPER_FUSE_SIZES.to_vec());
     }
+    // --observe arms the accuracy observatory: a fraction of the demo
+    // traffic is mirrored onto a native reference + the listed GPU
+    // models, and a live Table-2/Table-5 report prints at the end
+    if !observe_flag.is_empty() {
+        match ObservatorySpec::from_cli(observe_flag, observe_models) {
+            Ok(o) => spec = spec.with_observatory(o),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        }
+    }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
     println!(
-        "shards: [{}]  routing: {}  fusion: {}",
+        "shards: [{}]  routing: {}  fusion: {}  observatory: {}",
         labels.join(", "),
         routing.name(),
         if fuse_window_ms > 0 {
             format!("{fuse_window_ms}ms window, ladder {:?}", spec.fuse_sizes)
         } else {
             "off".to_string()
+        },
+        match &spec.observe {
+            Some(o) => format!("{:.0}% -> [{}]", o.fraction * 100.0, o.models.join(", ")),
+            None => "off".to_string(),
         }
     );
     let svc = match Service::start(spec) {
@@ -372,8 +401,9 @@ fn cmd_serve_demo(
     };
     // mixed-op workload over the whole catalogue, dispatched through
     // the typed Plan API; the gpusim soft-float VM is orders of
-    // magnitude slower than native, so shrink batches when it serves
-    let slow = svc.shard_labels().iter().any(|&l| l == "gpusim");
+    // magnitude slower than native, so shrink batches when it serves —
+    // or when the observatory mirrors onto it
+    let slow = svc.shard_labels().iter().any(|&l| l == "gpusim") || svc.has_observatory();
     let (top, rounds) = if slow { (2000, 20) } else { (9000, 50) };
     let t0 = std::time::Instant::now();
     let mut joins = Vec::new();
@@ -439,6 +469,12 @@ fn cmd_serve_demo(
         println!("  shard {i} [{label}]: requests={} batches={} elements={} \
                   measured Melem/s: {}",
                  s.requests, s.batches, s.elements, rates.join(" "));
+    }
+    // the live accuracy surface: what the paper measured once, observed
+    // continuously under the demo's traffic
+    if let Some(rep) = svc.accuracy_report() {
+        print!("\n{}", rep.render_table2_live());
+        print!("\n{}", rep.render_table5_live());
     }
     0
 }

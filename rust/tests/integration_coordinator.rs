@@ -5,8 +5,9 @@
 //! backend paths when artifacts exist.
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
-use ffgpu::coordinator::{Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::observatory::one_shot_sweep;
 use ffgpu::coordinator::routing::OpAffinity;
+use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::ff::FF32;
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -508,4 +509,129 @@ fn cpu_and_xla_backends_agree() {
             }
         }
     }
+}
+
+/// Tentpole acceptance: the live observatory's error bounds over a
+/// mirrored canary stream must match the one-shot harness for nv35
+/// within tolerance — the exact same input chunks stream through both
+/// paths, so the intervals, means and max relative errors agree.
+#[test]
+fn live_observatory_matches_one_shot_nv35() {
+    let total = 4096usize;
+    let chunk = 1024usize;
+    let seed = 0x0B5E;
+    let svc = Service::start(
+        ServiceSpec::uniform(BackendSpec::native_single(), 1).with_observatory(
+            // exact-size mirror launches: the ladder adds padding, and
+            // this test wants bit-for-bit the one-shot stream
+            ObservatorySpec::new(1.0, ["nv35"]).with_ladder(vec![]),
+        ),
+    )
+    .unwrap();
+    let h = svc.handle();
+    let ops = [Op::Add12, Op::Mul12, Op::Add22];
+    for op in ops {
+        for idx in 0..(total / chunk) as u64 {
+            let planes = workload::planes_for(op.name(), chunk, seed ^ (idx << 20));
+            h.dispatch_mirrored(Plan::new(op, planes).unwrap())
+                .unwrap()
+                .wait()
+                .unwrap();
+        }
+    }
+    let rep = svc.accuracy_report().expect("observatory armed");
+    for op in ops {
+        let one = one_shot_sweep("nv35", op, total, chunk, seed).unwrap();
+        let live = rep
+            .row("nv35", op)
+            .unwrap_or_else(|| panic!("no live row for {op}"));
+        assert_eq!(live.lanes, total as u64, "{op}");
+        assert!(
+            (live.max_ulp - one.max_ulp).abs() <= 1e-9,
+            "{op}: live max {} vs one-shot {}",
+            live.max_ulp,
+            one.max_ulp
+        );
+        assert!(
+            (live.min_ulp - one.min_ulp).abs() <= 1e-9,
+            "{op}: live min {} vs one-shot {}",
+            live.min_ulp,
+            one.min_ulp
+        );
+        assert!(
+            (live.mean_abs_ulp - one.mean_abs_ulp).abs() <= 1e-9,
+            "{op}: live mean {} vs one-shot {}",
+            live.mean_abs_ulp,
+            one.mean_abs_ulp
+        );
+        assert!(
+            (live.max_rel - one.max_rel).abs() <= 1e-30,
+            "{op}: live rel {} vs one-shot {}",
+            live.max_rel,
+            one.max_rel
+        );
+    }
+    // nv35's truncated adds must actually show error on add22 — a
+    // trivially all-zero surface would make the equalities vacuous
+    let add22 = rep.row("nv35", Op::Add22).unwrap();
+    assert!(add22.max_ulp > 0.0 || add22.min_ulp < 0.0, "{add22:?}");
+}
+
+/// Tentpole acceptance: mirrored observation traffic must not perturb
+/// measured routing. Mirrors execute on the observatory's own
+/// backends, so the telemetry the `measured` policy routes over —
+/// per-(shard, op) attempts/samples, queue depths — sees exactly the
+/// client's requests and nothing else.
+#[test]
+fn observation_does_not_perturb_measured_routing() {
+    let mk = || {
+        ServiceSpec::heterogeneous(vec![
+            BackendSpec::native_single(),
+            BackendSpec::native_single(),
+        ])
+        .with_routing(Routing::Measured)
+    };
+    let plain = Service::start(mk()).unwrap();
+    let observed = Service::start(
+        mk().with_observatory(ObservatorySpec::new(1.0, ["nv35"])),
+    )
+    .unwrap();
+    let mut plain_picks = Vec::new();
+    let mut observed_picks = Vec::new();
+    for round in 0..8u64 {
+        let planes = workload::planes_for("add22", 256, round);
+        for (svc, picks) in [
+            (&plain, &mut plain_picks),
+            (&observed, &mut observed_picks),
+        ] {
+            let t = svc
+                .handle()
+                .dispatch(Plan::new(Op::Add22, planes.clone()).unwrap())
+                .unwrap();
+            picks.push(t.shard());
+            t.wait().unwrap();
+        }
+    }
+    // cold exploration is deterministic: identical request sequences
+    // explore identically whether or not every request is mirrored
+    assert_eq!(plain_picks[..2], observed_picks[..2]);
+    for svc in [&plain, &observed] {
+        // sequential waits mean one executed group per request; a
+        // mirror that touched a shard would inflate these counters
+        let view = svc.telemetry();
+        let attempts: u64 = (0..svc.shards()).map(|s| view.attempts(s, Op::Add22)).sum();
+        let samples: u64 = (0..svc.shards()).map(|s| view.samples(s, Op::Add22)).sum();
+        assert_eq!(attempts, 8);
+        assert_eq!(samples, 8);
+        for s in 0..svc.shards() {
+            assert_eq!(view.samples(s, Op::Mul22), 0, "phantom traffic on shard {s}");
+        }
+        assert_eq!(svc.metrics().requests, 8);
+        assert_eq!(svc.handle().queue_depths(), vec![0, 0]);
+    }
+    // and the mirrors really ran: nv35 scored every request's lanes
+    let rep = observed.accuracy_report().unwrap();
+    assert_eq!(rep.mirrored_requests, 8);
+    assert_eq!(rep.row("nv35", Op::Add22).unwrap().lanes, 8 * 256);
+    assert!(plain.accuracy_report().is_none(), "no observatory on the plain set");
 }
