@@ -13,10 +13,18 @@
 //! FFGPU_DEADLINE_MS=5 cargo run --release --example serve_demo
 //! FFGPU_FUSE_WINDOW_MS=2 cargo run --release --example serve_demo  # fusion stage
 //! FFGPU_WORKERS=4 cargo run --release --example serve_demo
+//! FFGPU_KERNEL_TIER=scalar cargo run --release --example serve_demo
+//! FFGPU_CHUNK_ELEMS=65536 cargo run --release --example serve_demo
 //! FFGPU_OBSERVE=0.25 FFGPU_OBSERVE_MODELS=nv35,r300 \
 //!     cargo run --release --example serve_demo          # accuracy observatory
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! ```
+//!
+//! `FFGPU_KERNEL_TIER` (scalar | blocked | blocked-fma | auto) is read
+//! by every native shard at construction ([`ffgpu::backend::KernelTier`]
+//! resolution order: explicit spec > env > CPU detection), so it needs
+//! no plumbing here; `FFGPU_CHUNK_ELEMS` overrides the L2-sized
+//! auto-chunk on every native shard.
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
@@ -47,6 +55,10 @@ fn main() {
         .unwrap_or(0);
     let workers_env: Option<usize> =
         std::env::var("FFGPU_WORKERS").ok().and_then(|s| s.parse().ok());
+    // FFGPU_CHUNK_ELEMS retunes every native shard's chunk size (0 =
+    // the L2-sized auto chunk, which is also the default)
+    let chunk_env: Option<usize> =
+        std::env::var("FFGPU_CHUNK_ELEMS").ok().and_then(|s| s.parse().ok());
     // FFGPU_OBSERVE + FFGPU_OBSERVE_MODELS arm the accuracy
     // observatory: that fraction of the demo traffic is mirrored onto
     // a native reference + the listed GPU models, and the live
@@ -85,6 +97,13 @@ fn main() {
             }
         }
     }
+    if let Some(c) = chunk_env {
+        for s in &mut spec.shards {
+            if let BackendSpec::Native { chunk, .. } = s {
+                *chunk = c;
+            }
+        }
+    }
     if fuse_window_ms > 0 {
         spec = spec
             .with_fuse_window(Duration::from_millis(fuse_window_ms))
@@ -115,11 +134,14 @@ fn main() {
         Err(e) if explicit_backend.is_none() && shard_spec.is_none() => {
             println!("(xla backend unavailable: {e}; falling back to native)");
             let mut native = fallback;
-            // keep routing/fusion AND the FFGPU_WORKERS override
+            // keep routing/fusion AND the FFGPU_WORKERS /
+            // FFGPU_CHUNK_ELEMS overrides (tier: None defers to
+            // FFGPU_KERNEL_TIER / CPU detection at construction)
             native.shards = vec![
                 BackendSpec::Native {
-                    chunk: ffgpu::backend::native::DEFAULT_CHUNK,
+                    chunk: chunk_env.unwrap_or(0),
                     workers: workers_env.unwrap_or(0),
+                    tier: None,
                 };
                 shards.max(1)
             ];
@@ -196,6 +218,7 @@ fn main() {
              pct(0.50) * 1e3, pct(0.95) * 1e3, pct(0.99) * 1e3);
     println!("errors: {}  deadline misses: {missed} (shard-side skipped={} cancelled={})",
              m.errors, m.expired, m.cancelled);
+    let tiers = svc.shard_kernel_tiers();
     for (i, (s, label)) in svc
         .shard_metrics()
         .iter()
@@ -209,7 +232,13 @@ fn main() {
                 None => format!("{op}=cold"),
             })
             .collect();
-        println!("shard {i} [{label}]: requests={} batches={} elements={} mean lat={:.2}ms",
+        // attribute the shard's Melem/s to the CPU kernel tier that
+        // produced them (non-native shards report no tier)
+        let tier = match tiers.get(i).copied().flatten() {
+            Some(t) => format!(" tier={t}"),
+            None => String::new(),
+        };
+        println!("shard {i} [{label}]{tier}: requests={} batches={} elements={} mean lat={:.2}ms",
                  s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
         println!("  measured Melem/s: {}", rates.join("  "));
     }

@@ -31,8 +31,19 @@
 //! report (written to `TABLE2_LIVE.txt`, uploaded as a CI artifact)
 //! and an `accuracy` section of per-(model, op) min/max/mean ulp error
 //! and max log2 relative error in `BENCH_coordinator.json`.
+//!
+//! Kernel-tier instrumentation (the SIMD/FMA tier engine): every
+//! available tier (scalar / blocked / blocked-fma) is swept per op at
+//! single-worker, chunk > n — a pure kernel measurement with no
+//! crew/queue overhead — and recorded as the `kernel_tiers` section of
+//! `BENCH_coordinator.json`, so per-tier Melem/s is machine-comparable
+//! across PRs and build flavours. The blocked-vs-scalar mul22 ratio is
+//! printed as an `[ok]`/`[!!]` shape check (not asserted: shared CI
+//! hosts are too noisy for a hard perf gate).
 
-use ffgpu::backend::{BackendSpec, ExecJob, KernelBackend, NativeBackend, Op, ServiceError};
+use ffgpu::backend::{
+    BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
+};
 use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::ff::vector;
 use ffgpu::harness::workload;
@@ -75,6 +86,15 @@ struct AccRow {
     max_ulp: f64,
     mean_abs_ulp: f64,
     max_rel_log2: Option<f64>,
+}
+
+/// One `kernel_tiers` row of `BENCH_coordinator.json`: single-worker
+/// native kernel throughput for one (tier, op, batch size) cell.
+struct TierRow {
+    tier: &'static str,
+    op: &'static str,
+    n: usize,
+    melem_per_s: f64,
 }
 
 /// Ops the routing comparison cycles through. Includes `div22` — the
@@ -287,7 +307,7 @@ fn observatory_rows() -> Vec<AccRow> {
         .collect()
 }
 
-fn emit_json(rows: &[Row], accuracy: &[AccRow]) {
+fn emit_json(rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow]) {
     let mut out = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \
          \"melem_per_s\": \"1e6 elements/s\", \"canary_share\": \
@@ -328,6 +348,23 @@ fn emit_json(rows: &[Row], accuracy: &[AccRow]) {
             if i + 1 < rows.len() { "," } else { "" },
         ));
     }
+    // per-tier per-op single-worker kernel throughput (the SIMD/FMA
+    // tier engine's acceptance surface)
+    out.push_str(&format!(
+        "  ],\n  \"detected_tier\": \"{}\",\n  \"kernel_tiers\": [\n",
+        KernelTier::detect()
+    ));
+    for (i, t) in tiers.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"tier\": \"{}\", \"op\": \"{}\", \"n\": {}, \
+             \"melem_per_s\": {:.3}}}{}\n",
+            t.tier,
+            t.op,
+            t.n,
+            t.melem_per_s,
+            if i + 1 < tiers.len() { "," } else { "" },
+        ));
+    }
     out.push_str("  ],\n  \"accuracy\": [\n");
     for (i, a) in accuracy.iter().enumerate() {
         let rel = match a.max_rel_log2 {
@@ -352,8 +389,9 @@ fn emit_json(rows: &[Row], accuracy: &[AccRow]) {
     let path = "BENCH_coordinator.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!(
-            "\nwrote {path} ({} rows, {} accuracy cells)",
+            "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells)",
             rows.len(),
+            tiers.len(),
             accuracy.len()
         ),
         Err(e) => println!("\ncould not write {path}: {e}"),
@@ -463,6 +501,68 @@ fn exec_rows() -> Vec<Row> {
                 canary_share: None,
                 fuse_window_ms: 0,
             });
+        }
+    }
+    rows
+}
+
+/// SIMD/FMA tier instrument: sweep every available kernel tier over
+/// the ff op set at single-worker with chunk > n, so the measured loop
+/// is the kernel itself — no chunk queueing, no crew handoff. Feeds
+/// the `kernel_tiers` section of `BENCH_coordinator.json`.
+fn kernel_tier_rows() -> Vec<TierRow> {
+    println!("== kernel tiers: single-worker native Melem/s per (tier, op)");
+    println!(
+        "  detected tier: {} (fast FMA: {})",
+        KernelTier::detect(),
+        ffgpu::ff::simd::fma_available()
+    );
+    let ops = [Op::Add22, Op::Mul22, Op::Mul12, Op::Div22, Op::Mad22];
+    let sizes = [65_536usize, 1_048_576];
+    let mut rows = Vec::new();
+    for tier in KernelTier::ALL {
+        if !tier.available() {
+            println!("  (skipping tier {tier}: not fast on this host/build)");
+            continue;
+        }
+        // chunk 1 << 22 > every n: the whole batch runs serially in
+        // one kernel call on the requesting thread
+        let mut be = NativeBackend::with_tier(1 << 22, 1, Some(tier));
+        for &n in &sizes {
+            for op in ops {
+                let planes = workload::planes_for(op.name(), n, 0x71E2);
+                let job = ExecJob::new(op, planes).unwrap();
+                let mut outs = vec![vec![0.0f32; n]; op.n_out()];
+                be.execute(&job, &mut outs).unwrap(); // warmup
+                let reps = if n >= 1_000_000 { 5 } else { 30 };
+                let mut best = f64::INFINITY;
+                for _ in 0..reps {
+                    let t0 = Instant::now();
+                    be.execute(&job, &mut outs).unwrap();
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                let melem = n as f64 / best / 1e6;
+                println!("  {:<12} {:<6} n={n:>8}: {melem:>8.1} Melem/s",
+                         tier.name(), op.name());
+                rows.push(TierRow { tier: tier.name(), op: op.name(), n, melem_per_s: melem });
+            }
+        }
+    }
+    // acceptance shape: the blocked tier should not lose to scalar on
+    // mul22 at large batches; printed, not asserted (shared CI hosts
+    // are too noisy for a hard perf gate)
+    for &n in &sizes {
+        let rate = |t: &str| {
+            rows.iter()
+                .find(|r| r.tier == t && r.op == "mul22" && r.n == n)
+                .map(|r| r.melem_per_s)
+        };
+        if let (Some(s), Some(b)) = (rate("scalar"), rate("blocked")) {
+            println!(
+                "  [{}] blocked/scalar mul22 @ {n}: {:.2}x",
+                if b >= s { "ok" } else { "!!" },
+                b / s
+            );
         }
     }
     rows
@@ -657,8 +757,11 @@ fn main() {
         println!("(skipping xla backend: no artifacts)");
     }
 
+    // per-tier kernel throughput: the SIMD/FMA engine's perf surface
+    let tiers = kernel_tier_rows();
+
     // the live accuracy surface: Table 2/5 as a continuous experiment
     let accuracy = observatory_rows();
 
-    emit_json(&rows, &accuracy);
+    emit_json(&rows, &tiers, &accuracy);
 }

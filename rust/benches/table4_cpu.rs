@@ -1,24 +1,34 @@
 //! Bench: paper Table 4 — float-float operators on the CPU path
-//! (native rust scalar kernels), normalised to Add at 4096.
+//! (native rust kernels), normalised to Add at 4096.
 //!
 //! Reproduces the paper's CPU protocol including the *branchy* Add22
 //! (their CPU library variant whose test "breaks the execution
 //! pipeline"). Shape checks: Add22-branchy costs the most among the ff
 //! ops; CPU small-to-large growth far exceeds the GPU path's.
+//!
+//! The grid runs on the kernel tier this host resolves to
+//! (`FFGPU_KERNEL_TIER` > CPU detection), and every row is labelled
+//! with it so numbers from different machines/builds stay
+//! attributable. `FFGPU_KERNEL_TIER=scalar` recovers the paper-era
+//! scalar protocol exactly.
 
+use ffgpu::backend::KernelTier;
 use ffgpu::harness::{timing, workload};
 use ffgpu::util::Timer;
 
 fn main() {
+    let tier = KernelTier::resolve(None);
     let timer = Timer::new(3, 9);
-    let grid = timing::cpu_grid(&workload::PAPER_SIZES, &workload::PAPER_OPS,
-                                &timer, 0x7AB4);
-    print!("{}", grid.render("Table 4 (measured) — native CPU path, normalised to Add@4096"));
+    let grid = timing::cpu_grid_tier(&workload::PAPER_SIZES, &workload::PAPER_OPS,
+                                     &timer, 0x7AB4, tier);
+    print!("{}", grid.render(&format!(
+        "Table 4 (measured) — native CPU path, kernel tier '{tier}', \
+         normalised to Add@4096")));
 
-    println!("\nraw median seconds:");
+    println!("\nraw median seconds (tier {tier}):");
     for (si, &n) in grid.sizes.iter().enumerate() {
         let row: Vec<String> = grid.seconds[si].iter().map(|s| format!("{s:.3e}")).collect();
-        println!("  n={n:>8}: {}", row.join("  "));
+        println!("  n={n:>8} [{tier}]: {}", row.join("  "));
     }
 
     let (_, paper) = timing::paper_table4();
@@ -36,8 +46,10 @@ fn main() {
     println!("\nshape checks:");
     println!("  [{}] Mul22/Mul at 1M (paper ~4.1x): {ff_cost_1m:.2} (accept 2..12)",
              if (2.0..12.0).contains(&ff_cost_1m) { "ok" } else { "!!" });
-    println!("  [{}] branchy Add22 vs Mul22 at 1M (paper 2.8x): {add22_vs_mul22:.2} (accept 0.8..8)",
-             if (0.8..8.0).contains(&add22_vs_mul22) { "ok" } else { "!!" });
+    // blocked tiers speed up mul22 but add22 stays the branchy scalar
+    // protocol, so the upper bound leaves room for the tier gap
+    println!("  [{}] branchy Add22 vs Mul22 at 1M (paper 2.8x): {add22_vs_mul22:.2} (accept 0.8..16)",
+             if (0.8..16.0).contains(&add22_vs_mul22) { "ok" } else { "!!" });
     println!("  [{}] Add growth 4096->1M (paper 270x incl. cache effects): {growth:.1} (accept 100..3000)",
              if (100.0..3000.0).contains(&growth) { "ok" } else { "!!" });
 }

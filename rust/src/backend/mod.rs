@@ -55,6 +55,7 @@ pub mod pool;
 pub mod ulp;
 pub mod xla;
 
+pub use crate::ff::simd::KernelTier;
 pub use error::ServiceError;
 pub use gpusim::GpuSimBackend;
 pub use native::NativeBackend;
@@ -230,6 +231,13 @@ pub trait KernelBackend {
         self.execute(&job, outputs)
     }
 
+    /// The CPU kernel tier this backend runs on, for Melem/s
+    /// attribution in telemetry, banners and bench JSON. `None` for
+    /// substrates where the concept does not apply (gpusim, XLA).
+    fn kernel_tier(&self) -> Option<KernelTier> {
+        None
+    }
+
     /// Cumulative counters since construction.
     fn stats(&self) -> BackendStats;
 }
@@ -261,9 +269,11 @@ pub(crate) fn check_outputs(
 /// into a live [`KernelBackend`] *on* the shard thread that owns it.
 #[derive(Clone, Debug)]
 pub enum BackendSpec {
-    /// Native `ff::vector` kernels, parallel over `chunk`-sized slices.
-    /// `workers == 0` means one worker per available core.
-    Native { chunk: usize, workers: usize },
+    /// Native CPU kernels, parallel over `chunk`-sized slices.
+    /// `workers == 0` means one worker per available core; `chunk == 0`
+    /// picks an L2-sized chunk; `tier: None` resolves the kernel tier
+    /// via `FFGPU_KERNEL_TIER` / CPU detection.
+    Native { chunk: usize, workers: usize, tier: Option<KernelTier> },
     /// The gpusim stream VM on the named GPU arithmetic model
     /// ("ieee-rn", "nv35", "nv40", "r300", "chopped").
     GpuSim { model: String },
@@ -272,14 +282,15 @@ pub enum BackendSpec {
 }
 
 impl BackendSpec {
-    /// Default native spec (auto worker count, 16k-element chunks).
+    /// Default native spec (auto worker count, auto L2-sized chunks,
+    /// auto kernel tier).
     pub fn native() -> BackendSpec {
-        BackendSpec::Native { chunk: native::DEFAULT_CHUNK, workers: 0 }
+        BackendSpec::Native { chunk: 0, workers: 0, tier: None }
     }
 
     /// Single-threaded native spec (the seed's serving behaviour).
     pub fn native_single() -> BackendSpec {
-        BackendSpec::Native { chunk: native::DEFAULT_CHUNK, workers: 1 }
+        BackendSpec::Native { chunk: 0, workers: 1, tier: None }
     }
 
     /// GpuSim spec on the IEEE round-to-nearest model (bit-identical to
@@ -312,7 +323,7 @@ impl BackendSpec {
                     })?,
                     None => 0,
                 };
-                Ok(BackendSpec::Native { chunk: native::DEFAULT_CHUNK, workers })
+                Ok(BackendSpec::Native { chunk: 0, workers, tier: None })
             }
             "gpusim" => Ok(BackendSpec::GpuSim {
                 model: tail.unwrap_or("ieee-rn").to_string(),
@@ -328,8 +339,8 @@ impl BackendSpec {
     /// Materialise the backend. Must run on the thread that will own it.
     pub fn build(&self) -> Result<Box<dyn KernelBackend>, ServiceError> {
         match self {
-            BackendSpec::Native { chunk, workers } => {
-                Ok(Box::new(NativeBackend::new(*chunk, *workers)))
+            BackendSpec::Native { chunk, workers, tier } => {
+                Ok(Box::new(NativeBackend::with_tier(*chunk, *workers, *tier)))
             }
             BackendSpec::GpuSim { model } => {
                 Ok(Box::new(GpuSimBackend::by_name(model)?))
@@ -449,5 +460,20 @@ mod tests {
         assert_eq!(BackendSpec::native().build().unwrap().name(), "native");
         assert_eq!(BackendSpec::gpusim_ieee().build().unwrap().name(), "gpusim");
         assert!(BackendSpec::GpuSim { model: "voodoo2".into() }.build().is_err());
+    }
+
+    #[test]
+    fn kernel_tier_reported_by_native_only() {
+        // native resolves to a concrete tier; substrates without CPU
+        // kernel tiers keep the trait default
+        assert!(BackendSpec::native_single().build().unwrap().kernel_tier().is_some());
+        assert_eq!(BackendSpec::gpusim_ieee().build().unwrap().kernel_tier(), None);
+        // an explicit spec tier survives the build
+        let spec = BackendSpec::Native {
+            chunk: 0,
+            workers: 1,
+            tier: Some(KernelTier::Scalar),
+        };
+        assert_eq!(spec.build().unwrap().kernel_tier(), Some(KernelTier::Scalar));
     }
 }

@@ -24,28 +24,44 @@
 //!
 //! Small batches (under two chunks) skip the crew entirely: a channel
 //! round-trip costs more than the kernel at that size.
+//!
+//! Kernels themselves are tiered ([`crate::ff::simd::KernelTier`]):
+//! the tier is resolved **once**, at construction (explicit spec >
+//! `FFGPU_KERNEL_TIER` > CPU detection), stored on the backend, and
+//! rides every [`ChunkJob`] into the crew — both the serial path and
+//! every worker run the *same* tier, so chunking never mixes kernels.
+//! The chunk size is likewise configurable (`chunk == 0` picks an
+//! L2-sized block per worker), keeping the lane-blocked kernels
+//! cache-resident.
 
 use super::pool::WorkerArenas;
 use super::{
     check_outputs, BackendStats, ExecJob, ExecReport, KernelBackend, Op, ServiceError,
 };
-use crate::ff::vector;
+use crate::ff::simd::{self, KernelTier};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Default chunk: 16k lanes ≈ 64 KiB per plane, L2-friendly and small
-/// enough that a 4-chunk batch spreads over 4 cores.
+/// Fixed fallback chunk: 16k lanes ≈ 64 KiB per plane. Kept for callers
+/// that want a deterministic size; specs default to `0` = auto, which
+/// sizes a chunk to the machine's L2 instead ([`auto_chunk`]).
 pub const DEFAULT_CHUNK: usize = 16 * 1024;
 
 /// Floor on the chunk size; below this the queue overhead dominates.
 const MIN_CHUNK: usize = 1024;
+
+/// Ceiling on the auto-sized chunk: past ~1 MiB per plane the block no
+/// longer fits any L2 and splitting finer only helps parallelism.
+const MAX_CHUNK: usize = 256 * 1024;
 
 /// One chunk of a batch, dispatched to a persistent worker: shared
 /// input planes plus the per-chunk output range `[start, start + len)`
 /// this job covers.
 struct ChunkJob {
     op: Op,
+    /// Kernel tier the owning backend resolved at construction.
+    tier: KernelTier,
     inputs: Vec<Arc<Vec<f32>>>,
     start: usize,
     len: usize,
@@ -130,14 +146,14 @@ fn worker_main(
             Ok(guard) => guard.recv(),
             Err(_) => break,
         };
-        let Ok(ChunkJob { op, inputs, start, len, done }) = job else { break };
+        let Ok(ChunkJob { op, tier, inputs, start, len, done }) = job else { break };
         let ins: Vec<&[f32]> = inputs.iter().map(|p| &p[start..start + len]).collect();
         let mut outs: Vec<Vec<f32>> =
             (0..op.n_out()).map(|_| arenas.take(me, len)).collect();
         let err = {
             let mut windows: Vec<&mut [f32]> =
                 outs.iter_mut().map(|v| v.as_mut_slice()).collect();
-            vector::dispatch_slices(op.name(), &ins, &mut windows).err()
+            simd::dispatch_slices(tier, op.name(), &ins, &mut windows).err()
         };
         drop(ins);
         // release the Arc clones *before* signalling completion, so a
@@ -152,6 +168,7 @@ fn worker_main(
 /// worker crew.
 pub struct NativeBackend {
     chunk: usize,
+    tier: KernelTier,
     /// `None` in single-worker (serial) mode.
     pool: Option<WorkerPool>,
     stats: BackendStats,
@@ -159,15 +176,28 @@ pub struct NativeBackend {
 
 impl NativeBackend {
     /// `workers == 0` selects one worker per available core; `1` is the
-    /// serial (seed-comparable) mode with no crew at all.
+    /// serial (seed-comparable) mode with no crew at all. `chunk == 0`
+    /// picks an L2-sized chunk; the kernel tier comes from
+    /// [`KernelTier::resolve`] (env var, then CPU detection).
     pub fn new(chunk: usize, workers: usize) -> NativeBackend {
+        NativeBackend::with_tier(chunk, workers, None)
+    }
+
+    /// [`Self::new`] with an explicit kernel tier (`None` = resolve via
+    /// `FFGPU_KERNEL_TIER` / CPU detection). Forcing a tier the host
+    /// cannot run fast is allowed — results stay bit-correct.
+    pub fn with_tier(
+        chunk: usize, workers: usize, tier: Option<KernelTier>,
+    ) -> NativeBackend {
         let workers = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             workers
         };
+        let chunk = if chunk == 0 { auto_chunk() } else { chunk.max(MIN_CHUNK) };
         NativeBackend {
-            chunk: chunk.max(MIN_CHUNK),
+            chunk,
+            tier: KernelTier::resolve(tier),
             pool: WorkerPool::spawn(workers),
             stats: BackendStats::default(),
         }
@@ -180,6 +210,11 @@ impl NativeBackend {
 
     pub fn chunk(&self) -> usize {
         self.chunk
+    }
+
+    /// The kernel tier every chunk of every batch runs on.
+    pub fn tier(&self) -> KernelTier {
+        self.tier
     }
 
     /// Chunk buffers currently parked across the worker arenas (0 in
@@ -215,6 +250,7 @@ impl KernelBackend for NativeBackend {
                     let len = self.chunk.min(n - start);
                     tx.send(ChunkJob {
                         op: job.op(),
+                        tier: self.tier,
                         inputs: job.inputs().to_vec(),
                         start,
                         len,
@@ -259,7 +295,7 @@ impl KernelBackend for NativeBackend {
             // round-trip costs more than the kernel at this size
             _ => {
                 let ins = job.input_refs();
-                vector::dispatch(job.op().name(), &ins, outputs)
+                simd::dispatch(self.tier, job.op().name(), &ins, outputs)
                     .map_err(ServiceError::Backend)?;
                 1
             }
@@ -270,9 +306,47 @@ impl KernelBackend for NativeBackend {
         Ok(ExecReport { launches, padded_elements: 0 })
     }
 
+    fn kernel_tier(&self) -> Option<KernelTier> {
+        Some(self.tier)
+    }
+
     fn stats(&self) -> BackendStats {
         self.stats
     }
+}
+
+/// Chunk lanes sized so one chunk's working set (inputs + outputs,
+/// ~8 planes × 4 bytes for the widest op) fills about 3/4 of the L2
+/// cache, rounded to a [`MIN_CHUNK`] multiple and clamped to
+/// `[MIN_CHUNK, MAX_CHUNK]`. Falls back to [`DEFAULT_CHUNK`] territory
+/// (512 KiB assumed L2) when the cache size cannot be read.
+fn auto_chunk() -> usize {
+    let l2 = detect_l2_bytes().unwrap_or(512 * 1024);
+    let lanes = (l2 / 4 * 3) / 32; // 3/4 of L2, 32 B/lane working set
+    (lanes / MIN_CHUNK * MIN_CHUNK).clamp(MIN_CHUNK, MAX_CHUNK)
+}
+
+/// L2 data-cache size of cpu0 via sysfs (Linux; `None` elsewhere —
+/// there is no portable std API for cache geometry).
+fn detect_l2_bytes() -> Option<usize> {
+    if cfg!(target_os = "linux") {
+        let s =
+            std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index2/size")
+                .ok()?;
+        parse_cache_size(s.trim())
+    } else {
+        None
+    }
+}
+
+/// Parse sysfs cache sizes: `"512K"`, `"1M"`, `"1024"` (bytes).
+fn parse_cache_size(s: &str) -> Option<usize> {
+    let (digits, mult) = match s.as_bytes().last()? {
+        b'K' | b'k' => (&s[..s.len() - 1], 1024),
+        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    digits.parse::<usize>().ok().map(|n| n * mult)
 }
 
 #[cfg(test)]
@@ -390,6 +464,53 @@ mod tests {
         assert!(b.chunk() >= MIN_CHUNK);
         assert!(b.supports(Op::Add22));
         assert_eq!(b.ops().len(), Op::COUNT);
+    }
+
+    #[test]
+    fn forced_tiers_agree_bitwise_through_the_backend() {
+        use crate::ff::simd::KernelTier;
+        // the whole execute pipeline — chunking, crew, arenas — under
+        // each tier must reproduce the scalar reference bit-for-bit
+        let mut scalar = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
+        for tier in [KernelTier::Blocked, KernelTier::BlockedFma] {
+            let mut tiered = NativeBackend::with_tier(MIN_CHUNK, 4, Some(tier));
+            assert_eq!(tiered.tier(), tier);
+            assert_eq!(tiered.kernel_tier(), Some(tier));
+            for op in [Op::Add22, Op::Mul22, Op::Mul12, Op::Div22, Op::Mad22, Op::Mad] {
+                let n = MIN_CHUNK * 5 + 77;
+                let a = run(&mut scalar, op, n, 0xD00D);
+                let b = run(&mut tiered, op, n, 0xD00D);
+                for (pa, pb) in a.iter().zip(&b) {
+                    for i in 0..n {
+                        assert_eq!(
+                            pa[i].to_bits(),
+                            pb[i].to_bits(),
+                            "tier={tier} op={op} lane={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_chunk_is_sane() {
+        let c = auto_chunk();
+        assert!((MIN_CHUNK..=MAX_CHUNK).contains(&c), "auto chunk {c}");
+        assert_eq!(c % MIN_CHUNK, 0, "auto chunk {c} not a MIN_CHUNK multiple");
+        // chunk == 0 routes through auto sizing; explicit sizes clamp up
+        assert_eq!(NativeBackend::new(0, 1).chunk(), c);
+        assert_eq!(NativeBackend::new(17, 1).chunk(), MIN_CHUNK);
+    }
+
+    #[test]
+    fn cache_size_parsing() {
+        assert_eq!(parse_cache_size("512K"), Some(512 * 1024));
+        assert_eq!(parse_cache_size("1M"), Some(1024 * 1024));
+        assert_eq!(parse_cache_size("2048k"), Some(2048 * 1024));
+        assert_eq!(parse_cache_size("65536"), Some(65536));
+        assert_eq!(parse_cache_size(""), None);
+        assert_eq!(parse_cache_size("big"), None);
     }
 
     #[test]

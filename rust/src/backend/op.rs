@@ -180,6 +180,15 @@ impl Op {
         Ok(n)
     }
 
+    /// Whether this operator's kernel contains an exact product —
+    /// the ops whose `BlockedFma` tier swaps Dekker's `two_prod` for
+    /// the 2-flop FMA form ([`crate::ff::two_prod_fma`]). The baseline
+    /// `mad` is *not* in this set: it is deliberately two-rounding in
+    /// every tier.
+    pub const fn uses_exact_product(self) -> bool {
+        matches!(self, Op::Mul12 | Op::Mul22 | Op::Div22 | Op::Mad22)
+    }
+
     /// Catalogue row ([`crate::backend::OpSpec`]) for this operator.
     pub fn spec(self) -> &'static super::OpSpec {
         &super::CATALOG[self.index()]
@@ -236,6 +245,14 @@ mod tests {
             Err(ServiceError::UnknownOp(s)) if s == "frobnicate"
         ));
         assert!("".parse::<Op>().is_err());
+    }
+
+    #[test]
+    fn exact_product_set_matches_kernels() {
+        let want = [Op::Mul12, Op::Mul22, Op::Div22, Op::Mad22];
+        for op in Op::ALL {
+            assert_eq!(op.uses_exact_product(), want.contains(&op), "{op}");
+        }
     }
 
     #[test]

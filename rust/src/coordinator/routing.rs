@@ -44,12 +44,16 @@
 //! ```
 
 use super::metrics::Telemetry;
-use crate::backend::{Op, ServiceError};
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use crate::backend::{KernelTier, Op, ServiceError};
+use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Every-op capability mask (`Op::COUNT <= 32`).
 const ALL_OPS_MASK: u32 = (1 << Op::COUNT) - 1;
+
+/// Sentinel in [`ShardMeta::tier`] while the kernel tier is unknown
+/// (pre-build, or a substrate without CPU kernel tiers).
+const TIER_UNSET: u8 = u8::MAX;
 
 /// Live, routing-visible state of one shard: which substrate it runs,
 /// how many requests it currently has in flight, which operators its
@@ -64,6 +68,11 @@ pub struct ShardMeta {
     /// builds its backend — before `Service::start` returns, so no
     /// routable request ever sees the placeholder.
     supports: AtomicU32,
+    /// Kernel tier of the shard's backend, as `KernelTier::index() as
+    /// u8` ([`TIER_UNSET`] = none): published like `supports`, when the
+    /// shard thread builds its backend, so telemetry and banners can
+    /// attribute Melem/s to a tier.
+    tier: AtomicU8,
     telemetry: Telemetry,
 }
 
@@ -73,6 +82,7 @@ impl ShardMeta {
             label,
             depth: AtomicUsize::new(0),
             supports: AtomicU32::new(ALL_OPS_MASK),
+            tier: AtomicU8::new(TIER_UNSET),
             telemetry: Telemetry::new(),
         }
     }
@@ -104,9 +114,24 @@ impl ShardMeta {
         &self.telemetry
     }
 
+    /// The CPU kernel tier this shard's backend runs, `None` for
+    /// substrates where tiers do not apply (gpusim, XLA) or before the
+    /// backend is built.
+    pub fn kernel_tier(&self) -> Option<KernelTier> {
+        match self.tier.load(Ordering::Relaxed) {
+            TIER_UNSET => None,
+            ix => KernelTier::from_index(ix as usize),
+        }
+    }
+
     pub(crate) fn set_supports(&self, ops: &[Op]) {
         let mask = ops.iter().fold(0u32, |m, op| m | (1 << op.index()));
         self.supports.store(mask, Ordering::Relaxed);
+    }
+
+    pub(crate) fn set_kernel_tier(&self, tier: Option<KernelTier>) {
+        let v = tier.map_or(TIER_UNSET, |t| t.index() as u8);
+        self.tier.store(v, Ordering::Relaxed);
     }
 
     pub(crate) fn enter(&self) {
@@ -150,6 +175,12 @@ impl<'a> TelemetryView<'a> {
 
     pub fn supports(&self, shard: usize, op: Op) -> bool {
         self.shards[shard].supports(op)
+    }
+
+    /// CPU kernel tier of `shard`'s backend (`None` on non-native
+    /// substrates) — lets Melem/s readings be attributed to a tier.
+    pub fn kernel_tier(&self, shard: usize) -> Option<KernelTier> {
+        self.shards[shard].kernel_tier()
     }
 
     /// Measured throughput of `op` on `shard` (Melem/s), `None` while
@@ -699,6 +730,20 @@ mod tests {
         assert!(m.supports(Op::Add22));
         assert!(!m.supports(Op::Div22));
         assert_eq!(m.supported_ops(), vec![Op::Add22, Op::Mul22]);
+    }
+
+    #[test]
+    fn shard_meta_publishes_kernel_tier() {
+        let m = ShardMeta::new("native");
+        assert_eq!(m.kernel_tier(), None, "unset until the backend is built");
+        for tier in KernelTier::ALL {
+            m.set_kernel_tier(Some(tier));
+            assert_eq!(m.kernel_tier(), Some(tier));
+        }
+        m.set_kernel_tier(None);
+        assert_eq!(m.kernel_tier(), None);
+        let metas = [m];
+        assert_eq!(TelemetryView::new(&metas).kernel_tier(0), None);
     }
 
     #[test]

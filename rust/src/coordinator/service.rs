@@ -456,6 +456,12 @@ impl Service {
         self.meta[shard].supported_ops()
     }
 
+    /// CPU kernel tier per shard, in shard order (`None` on substrates
+    /// without tiers — gpusim, XLA).
+    pub fn shard_kernel_tiers(&self) -> Vec<Option<crate::backend::KernelTier>> {
+        self.meta.iter().map(ShardMeta::kernel_tier).collect()
+    }
+
     /// Whether an accuracy observatory rides beside this service.
     pub fn has_observatory(&self) -> bool {
         self.obs.is_some()
@@ -529,6 +535,10 @@ fn device_thread(
     // *before* acking: no dispatch can race the placeholder mask
     // because `Service::start` only returns after every shard acks
     meta[shard].set_supports(&backend.ops());
+    // same deal for the kernel tier the backend resolved (None on
+    // substrates without CPU kernel tiers) — banners and telemetry
+    // readers can attribute this shard's Melem/s from the first batch
+    meta[shard].set_kernel_tier(backend.kernel_tier());
     // count as live *before* acking, so `is_running()` is already true
     // the moment `Service::start` returns
     live.fetch_add(1, Ordering::Relaxed);
@@ -1087,6 +1097,12 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(svc.shard_labels(), vec!["native", "gpusim"]);
+        // tier attribution: the native shard published a concrete
+        // kernel tier before start() returned; gpusim has none
+        let tiers = svc.shard_kernel_tiers();
+        assert!(tiers[0].is_some(), "native shard must report its tier");
+        assert_eq!(tiers[1], None, "gpusim has no CPU kernel tier");
+        assert_eq!(svc.telemetry().kernel_tier(0), tiers[0]);
         let out = run(&svc.handle(), Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]])
             .unwrap();
         assert_eq!(out[0], vec![4.0, 6.0]);

@@ -52,14 +52,51 @@ pub fn split(a: f32) -> (f32, f32) {
 /// Valid on any IEEE round-to-nearest machine; may round `hi` *up* to a
 /// 12-bit value larger than `|a|`'s leading bits (then `lo < 0`), which
 /// is fine — the pair is still a non-overlapping exact decomposition.
+///
+/// The textbook sequence overflows for `|a| >= 2^115` (`4097·a` → inf,
+/// poisoning the whole split with NaN); inputs that large take a scaled
+/// path instead, so the decomposition stays exact all the way to
+/// `f32::MAX`. The mask form ([`split`]) is immune by construction and
+/// stays the kernel default.
 #[inline(always)]
 pub fn split_dekker(a: f32) -> (f32, f32) {
     const SPLIT: f32 = 4097.0; // 2^12 + 1
+    // |a| >= 2^115 <=> biased exponent >= 115 + 127 (also catches
+    // inf/NaN, which were garbage-in under the textbook sequence too)
+    const HUGE: u32 = (115 + 127) << 23;
+    if (a.to_bits() & 0x7F80_0000) >= HUGE {
+        return split_dekker_huge(a);
+    }
     let c = SPLIT * a;
     let a_big = c - a;
     let hi = c - a_big;
     let lo = a - hi;
     (hi, lo)
+}
+
+/// Overflow-safe Dekker split for `|a| >= 2^115`: run the sequence on
+/// `a·2^-12` (an *exact* power-of-two scale at these magnitudes — no
+/// underflow possible) and rescale. Rounding is scale-invariant across
+/// the normal range, so for inputs the textbook path could handle this
+/// produces bit-identical pairs. Within ~2^11 ulps of `f32::MAX` the
+/// 12-bit rounding of `a` can land on 2^128 (the rescaled `hi` goes
+/// infinite — no rounded-up Dekker pair exists in `f32`); the mask
+/// split's truncated pair is the exact decomposition there.
+#[cold]
+fn split_dekker_huge(a: f32) -> (f32, f32) {
+    const DOWN: f32 = 1.0 / 4096.0; // 2^-12
+    const UP: f32 = 4096.0; // 2^12
+    let a2 = a * DOWN;
+    let c = 4097.0 * a2;
+    let a_big = c - a2;
+    let hi2 = c - a_big;
+    let lo2 = a2 - hi2;
+    let hi = hi2 * UP; // exact when finite (power-of-two scale)
+    if hi.is_finite() {
+        (hi, lo2 * UP)
+    } else {
+        split(a)
+    }
 }
 
 /// Dekker two-product (paper Th. 4, "Mul12"): returns `(x, y)` with
@@ -166,6 +203,76 @@ mod tests {
                 let scaled = frac * 4096.0;
                 assert_eq!(scaled, scaled.round(), "hi={hi} not 12-bit");
             }
+        }
+    }
+
+    #[test]
+    fn split_dekker_survives_huge_inputs() {
+        // the textbook sequence turned these into inf/NaN (4097·a
+        // overflows from |a| ≈ 2^115.99); the scaled path must stay
+        // exact all the way out to f32::MAX
+        let huge = [
+            f32::MAX,
+            -f32::MAX,
+            f32::MAX / 2.0,
+            f32::MAX / 4097.0,
+            2f32.powi(115),
+            -2f32.powi(115),
+            2f32.powi(116) * 1.333,
+            2f32.powi(127),
+            1.7e38,
+            -3.0e34,
+        ];
+        for &a in &huge {
+            let (hi, lo) = split_dekker(a);
+            assert!(hi.is_finite() && lo.is_finite(), "a={a}: ({hi}, {lo})");
+            // both halves ≤ 24 bits, span ≤ 12 bits: the f64 sum is exact
+            assert_eq!(exact_f64(hi, lo), a as f64, "a={a}");
+            let (frac, _) = frexp(hi.abs() as f64);
+            let scaled = frac * 4096.0;
+            assert_eq!(scaled, scaled.round(), "a={a}: hi={hi} not 12-bit");
+        }
+        // random sweep over the previously-overflowing decades (cap the
+        // exponent at 126 so the draws themselves stay finite)
+        let mut rng = Rng::new(7);
+        for _ in 0..50_000 {
+            let a = rng.spread_f32(110, 126);
+            let (hi, lo) = split_dekker(a);
+            assert!(hi.is_finite(), "a={a}");
+            assert_eq!(exact_f64(hi, lo), a as f64, "a={a}");
+        }
+    }
+
+    #[test]
+    fn split_dekker_huge_path_matches_textbook_where_both_work() {
+        // between 2^115 and MAX/4097 the textbook sequence still works;
+        // the scaled path must agree bit-for-bit there (rounding is
+        // scale-invariant), so the guard threshold changes nothing
+        let mut rng = Rng::new(8);
+        for _ in 0..50_000 {
+            let a = rng.spread_f32(115, 115); // |a| in [2^115, 2^116)
+            let c = 4097.0f32 * a;
+            if !c.is_finite() {
+                continue; // past MAX/4097 — textbook has no answer here
+            }
+            let (hi, lo) = split_dekker(a);
+            // textbook sequence, inline
+            let a_big = c - a;
+            let want_hi = c - a_big;
+            let want_lo = a - want_hi;
+            assert_eq!(hi.to_bits(), want_hi.to_bits(), "a={a}");
+            assert_eq!(lo.to_bits(), want_lo.to_bits(), "a={a}");
+        }
+    }
+
+    #[test]
+    fn split_mask_is_immune_at_f32_max() {
+        // the mask form never multiplies, so it is exact at the very
+        // top of the range — this is why it stays the kernel default
+        for &a in &[f32::MAX, -f32::MAX, f32::MAX / 2.0] {
+            let (hi, lo) = split(a);
+            assert!(hi.is_finite() && lo.is_finite());
+            assert_eq!(exact_f64(hi, lo), a as f64, "a={a}");
         }
     }
 

@@ -12,6 +12,9 @@
 //!   (`+ - * /`), comparisons, and conversions;
 //! * [`vector`] — SoA slice kernels mirroring the Pallas L1 kernels
 //!   bit-for-bit (the "CPU path" of the paper's Table 4);
+//! * [`simd`] — lane-blocked kernel tiers ([`KernelTier`]: scalar /
+//!   blocked / blocked-FMA) with runtime CPU dispatch, the native
+//!   backend's hot path;
 //! * [`dd64`] — double-double on `f64` (Briggs/Bailey comparator, used
 //!   by the examples to show the same algorithms at the next precision
 //!   level);
@@ -22,8 +25,10 @@ pub mod compensated;
 pub mod dd64;
 pub mod eft;
 pub mod ff32;
+pub mod simd;
 pub mod vector;
 
 pub use dd64::DD64;
 pub use eft::{fast_two_sum, split, split_dekker, two_prod, two_prod_fma, two_sum};
 pub use ff32::FF32;
+pub use simd::KernelTier;

@@ -1,0 +1,1020 @@
+//! Lane-blocked float-float kernels with a runtime-selected tier —
+//! the raw-speed ceiling of the native backend (ROADMAP "SIMD/FMA
+//! kernel rewrite").
+//!
+//! The paper's premise is squeezing double-float throughput out of
+//! *vector* hardware; the scalar [`crate::ff::vector`] loops walk one
+//! lane at a time through `two_sum`/`two_prod` and leave that ceiling
+//! artificially low. This module restructures every servable op around
+//! fixed-width [`LANES`]-blocks over the flat SoA planes: the inner
+//! bodies are branch-free, free of per-lane bounds checks (blocks are
+//! loaded into `[f32; LANES]` windows), and shaped for the
+//! autovectorizer. Three tiers share the *identical* per-lane operation
+//! sequence:
+//!
+//! * [`KernelTier::Scalar`] — the seed's `ff::vector` loops, kept as
+//!   the portable bit-reference.
+//! * [`KernelTier::Blocked`] — the lane-blocked bodies below, still
+//!   Dekker/mask-split `two_prod`. Bit-identical to Scalar everywhere:
+//!   lanes are independent, so blocking only reorders *between* lanes.
+//! * [`KernelTier::BlockedFma`] — the exact product comes from
+//!   [`two_prod_fma`] (`fma(a, b, -x)`, 2 flops) instead of Dekker's
+//!   17-flop split dance. Bit-identical to Scalar on the in-range
+//!   domain (paper Th. 3/4: both compute the *exact* product error);
+//!   divergence only where Dekker's intermediates hit subnormals —
+//!   pinned by `tests/kernel_tiers.rs`.
+//!
+//! Tier selection happens **once**, at [`crate::backend::NativeBackend`]
+//! construction ([`KernelTier::resolve`]): an explicit
+//! `BackendSpec`/`--kernel-tier` choice wins, then the
+//! `FFGPU_KERNEL_TIER` env var, then [`KernelTier::detect`]. Detection
+//! is deliberately conservative: `BlockedFma` is only picked when FMA
+//! is *fast* — compiled in (`-C target-cpu=native`, aarch64) or
+//! reachable through the `simd-intrinsics` AVX paths — because without
+//! hardware lowering `f32::mul_add` is a correctly-rounded but slow
+//! libm call. See DESIGN.md "Kernel tiers".
+
+use super::eft::{fast_two_sum, split, two_prod, two_prod_fma, two_sum};
+use super::vector;
+use std::fmt;
+
+/// Fixed block width of the lane-blocked kernels: 8 f32 lanes = one
+/// AVX register, two NEON registers — and a comfortable unroll for the
+/// autovectorizer on anything else.
+pub const LANES: usize = 8;
+
+/// Which kernel implementation the native backend runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum KernelTier {
+    /// The seed's scalar `ff::vector` loops — the portable reference.
+    Scalar,
+    /// Lane-blocked bodies, Dekker/mask-split exact product.
+    Blocked,
+    /// Lane-blocked bodies, FMA exact product (plus explicit AVX/FMA
+    /// intrinsic paths when built with `--features simd-intrinsics`).
+    BlockedFma,
+}
+
+impl KernelTier {
+    /// Every tier, in escalation order.
+    pub const ALL: [KernelTier; 3] =
+        [KernelTier::Scalar, KernelTier::Blocked, KernelTier::BlockedFma];
+
+    /// Stable label used by CLI flags, telemetry and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Blocked => "blocked",
+            KernelTier::BlockedFma => "blocked-fma",
+        }
+    }
+
+    /// Position in [`Self::ALL`] — the wire form the coordinator's
+    /// shard metadata stores in an atomic cell.
+    pub fn index(self) -> usize {
+        match self {
+            KernelTier::Scalar => 0,
+            KernelTier::Blocked => 1,
+            KernelTier::BlockedFma => 2,
+        }
+    }
+
+    /// Inverse of [`Self::index`].
+    pub fn from_index(ix: usize) -> Option<KernelTier> {
+        KernelTier::ALL.get(ix).copied()
+    }
+
+    /// Parse a CLI/env tier name. `auto` (or empty) runs detection.
+    pub fn parse(s: &str) -> Result<KernelTier, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Ok(KernelTier::Scalar),
+            "blocked" | "simd" => Ok(KernelTier::Blocked),
+            "blocked-fma" | "blocked_fma" | "blockedfma" | "fma" => {
+                Ok(KernelTier::BlockedFma)
+            }
+            "" | "auto" => Ok(KernelTier::detect()),
+            other => Err(format!(
+                "unknown kernel tier '{other}' (scalar | blocked | blocked-fma | auto)"
+            )),
+        }
+    }
+
+    /// Whether this tier makes sense on the running host/build.
+    /// `Scalar` and `Blocked` always do; `BlockedFma` only where FMA is
+    /// fast (see [`fma_available`]). Forcing an unavailable tier is
+    /// still allowed — results stay correct, only slower.
+    pub fn available(self) -> bool {
+        match self {
+            KernelTier::Scalar | KernelTier::Blocked => true,
+            KernelTier::BlockedFma => fma_available(),
+        }
+    }
+
+    /// The best tier this host/build can run at full speed.
+    pub fn detect() -> KernelTier {
+        if fma_available() {
+            KernelTier::BlockedFma
+        } else {
+            KernelTier::Blocked
+        }
+    }
+
+    /// Resolution order used at backend construction: explicit request
+    /// (spec / `--kernel-tier`) > `FFGPU_KERNEL_TIER` env var >
+    /// [`Self::detect`]. A malformed env value warns and falls through.
+    pub fn resolve(requested: Option<KernelTier>) -> KernelTier {
+        if let Some(t) = requested {
+            return t;
+        }
+        if let Ok(v) = std::env::var("FFGPU_KERNEL_TIER") {
+            if !v.is_empty() {
+                match KernelTier::parse(&v) {
+                    Ok(t) => return t,
+                    Err(e) => eprintln!("FFGPU_KERNEL_TIER ignored: {e}"),
+                }
+            }
+        }
+        KernelTier::detect()
+    }
+}
+
+impl fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// True when `f32::mul_add` is a *fast* (single-instruction) FMA here,
+/// rather than a correctly-rounded libm fallback:
+///
+/// * compiled with the `fma` target feature (`-C target-cpu=native` on
+///   any FMA-capable x86_64), or
+/// * aarch64, whose base ISA fuses (`fmadd`), or
+/// * the `simd-intrinsics` AVX paths are compiled in **and** the CPU
+///   reports AVX2+FMA at runtime (the intrinsic kernels carry their own
+///   `#[target_feature]`, so no special RUSTFLAGS are needed).
+///
+/// Bare runtime detection without one of those escape hatches must
+/// *not* enable the FMA tier: the default build would route the hot
+/// path through a per-lane libm call and regress.
+pub fn fma_available() -> bool {
+    if cfg!(target_feature = "fma") {
+        return true;
+    }
+    if cfg!(target_arch = "aarch64") {
+        return true;
+    }
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    {
+        if avx::ready() {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Per-lane bodies — the single source of truth for the operation order.
+// Each mirrors the corresponding `ff::vector` loop body exactly; the
+// blocked drivers and the AVX tails both call these.
+// ---------------------------------------------------------------------------
+
+/// Exact product: Dekker (`FMA = false`) or hardware FMA (`FMA = true`).
+#[inline(always)]
+fn prod<const FMA: bool>(a: f32, b: f32) -> (f32, f32) {
+    if FMA {
+        two_prod_fma(a, b)
+    } else {
+        two_prod(a, b)
+    }
+}
+
+#[inline(always)]
+fn add12_lane(a: f32, b: f32) -> (f32, f32) {
+    two_sum(a, b)
+}
+
+#[inline(always)]
+fn split_lane(a: f32) -> (f32, f32) {
+    split(a)
+}
+
+#[inline(always)]
+fn mul12_lane<const FMA: bool>(a: f32, b: f32) -> (f32, f32) {
+    prod::<FMA>(a, b)
+}
+
+#[inline(always)]
+fn add22_lane(ah: f32, al: f32, bh: f32, bl: f32) -> (f32, f32) {
+    let (sh, se) = two_sum(ah, bh);
+    let te = (al + bl) + se;
+    fast_two_sum(sh, te)
+}
+
+#[inline(always)]
+fn mul22_lane<const FMA: bool>(ah: f32, al: f32, bh: f32, bl: f32) -> (f32, f32) {
+    let (ph, pl) = prod::<FMA>(ah, bh);
+    let pl = pl + (ah * bl + al * bh);
+    fast_two_sum(ph, pl)
+}
+
+#[inline(always)]
+fn div22_lane<const FMA: bool>(ah: f32, al: f32, bh: f32, bl: f32) -> (f32, f32) {
+    let q1 = ah / bh;
+    let (th, tl) = prod::<FMA>(q1, bh);
+    let r = (((ah - th) - tl) + al - q1 * bl) / bh;
+    fast_two_sum(q1, r)
+}
+
+#[inline(always)]
+fn mad22_lane<const FMA: bool>(
+    ah: f32, al: f32, bh: f32, bl: f32, ch: f32, cl: f32,
+) -> (f32, f32) {
+    let (mh, ml) = mul22_lane::<FMA>(ah, al, bh, bl);
+    // add22 of the product and c — same sequence as FF32::add22
+    let (sh, se) = two_sum(mh, ch);
+    let te = (ml + cl) + se;
+    fast_two_sum(sh, te)
+}
+
+// ---------------------------------------------------------------------------
+// Block drivers: load LANES-wide windows into fixed arrays (one bounds
+// check per block, none per lane), apply the lane body, store. The tail
+// runs the *same* lane body scalar-wise, so chunk boundaries never
+// change bits.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn blocks_1_2(
+    a: &[f32], o1: &mut [f32], o2: &mut [f32], lane: impl Fn(f32) -> (f32, f32) + Copy,
+) {
+    let n = a.len();
+    assert!(o1.len() == n && o2.len() == n);
+    let mut i = 0;
+    while i + LANES <= n {
+        let va: [f32; LANES] = a[i..i + LANES].try_into().unwrap();
+        let mut r1 = [0.0f32; LANES];
+        let mut r2 = [0.0f32; LANES];
+        for j in 0..LANES {
+            let (x, y) = lane(va[j]);
+            r1[j] = x;
+            r2[j] = y;
+        }
+        o1[i..i + LANES].copy_from_slice(&r1);
+        o2[i..i + LANES].copy_from_slice(&r2);
+        i += LANES;
+    }
+    while i < n {
+        let (x, y) = lane(a[i]);
+        o1[i] = x;
+        o2[i] = y;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn blocks_2_2(
+    a: &[f32], b: &[f32], o1: &mut [f32], o2: &mut [f32],
+    lane: impl Fn(f32, f32) -> (f32, f32) + Copy,
+) {
+    let n = a.len();
+    assert!(b.len() == n && o1.len() == n && o2.len() == n);
+    let mut i = 0;
+    while i + LANES <= n {
+        let va: [f32; LANES] = a[i..i + LANES].try_into().unwrap();
+        let vb: [f32; LANES] = b[i..i + LANES].try_into().unwrap();
+        let mut r1 = [0.0f32; LANES];
+        let mut r2 = [0.0f32; LANES];
+        for j in 0..LANES {
+            let (x, y) = lane(va[j], vb[j]);
+            r1[j] = x;
+            r2[j] = y;
+        }
+        o1[i..i + LANES].copy_from_slice(&r1);
+        o2[i..i + LANES].copy_from_slice(&r2);
+        i += LANES;
+    }
+    while i < n {
+        let (x, y) = lane(a[i], b[i]);
+        o1[i] = x;
+        o2[i] = y;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn blocks_4_2(
+    a: &[f32], b: &[f32], c: &[f32], d: &[f32], o1: &mut [f32], o2: &mut [f32],
+    lane: impl Fn(f32, f32, f32, f32) -> (f32, f32) + Copy,
+) {
+    let n = a.len();
+    assert!(
+        b.len() == n && c.len() == n && d.len() == n && o1.len() == n && o2.len() == n
+    );
+    let mut i = 0;
+    while i + LANES <= n {
+        let va: [f32; LANES] = a[i..i + LANES].try_into().unwrap();
+        let vb: [f32; LANES] = b[i..i + LANES].try_into().unwrap();
+        let vc: [f32; LANES] = c[i..i + LANES].try_into().unwrap();
+        let vd: [f32; LANES] = d[i..i + LANES].try_into().unwrap();
+        let mut r1 = [0.0f32; LANES];
+        let mut r2 = [0.0f32; LANES];
+        for j in 0..LANES {
+            let (x, y) = lane(va[j], vb[j], vc[j], vd[j]);
+            r1[j] = x;
+            r2[j] = y;
+        }
+        o1[i..i + LANES].copy_from_slice(&r1);
+        o2[i..i + LANES].copy_from_slice(&r2);
+        i += LANES;
+    }
+    while i < n {
+        let (x, y) = lane(a[i], b[i], c[i], d[i]);
+        o1[i] = x;
+        o2[i] = y;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn blocks_6_2(
+    a: &[f32], b: &[f32], c: &[f32], d: &[f32], e: &[f32], f: &[f32], o1: &mut [f32],
+    o2: &mut [f32], lane: impl Fn(f32, f32, f32, f32, f32, f32) -> (f32, f32) + Copy,
+) {
+    let n = a.len();
+    assert!(b.len() == n && c.len() == n && d.len() == n && e.len() == n && f.len() == n);
+    assert!(o1.len() == n && o2.len() == n);
+    let mut i = 0;
+    while i + LANES <= n {
+        let va: [f32; LANES] = a[i..i + LANES].try_into().unwrap();
+        let vb: [f32; LANES] = b[i..i + LANES].try_into().unwrap();
+        let vc: [f32; LANES] = c[i..i + LANES].try_into().unwrap();
+        let vd: [f32; LANES] = d[i..i + LANES].try_into().unwrap();
+        let ve: [f32; LANES] = e[i..i + LANES].try_into().unwrap();
+        let vf: [f32; LANES] = f[i..i + LANES].try_into().unwrap();
+        let mut r1 = [0.0f32; LANES];
+        let mut r2 = [0.0f32; LANES];
+        for j in 0..LANES {
+            let (x, y) = lane(va[j], vb[j], vc[j], vd[j], ve[j], vf[j]);
+            r1[j] = x;
+            r2[j] = y;
+        }
+        o1[i..i + LANES].copy_from_slice(&r1);
+        o2[i..i + LANES].copy_from_slice(&r2);
+        i += LANES;
+    }
+    while i < n {
+        let (x, y) = lane(a[i], b[i], c[i], d[i], e[i], f[i]);
+        o1[i] = x;
+        o2[i] = y;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn blocks_2_1(a: &[f32], b: &[f32], o: &mut [f32], lane: impl Fn(f32, f32) -> f32 + Copy) {
+    let n = a.len();
+    assert!(b.len() == n && o.len() == n);
+    let mut i = 0;
+    while i + LANES <= n {
+        let va: [f32; LANES] = a[i..i + LANES].try_into().unwrap();
+        let vb: [f32; LANES] = b[i..i + LANES].try_into().unwrap();
+        let mut r = [0.0f32; LANES];
+        for j in 0..LANES {
+            r[j] = lane(va[j], vb[j]);
+        }
+        o[i..i + LANES].copy_from_slice(&r);
+        i += LANES;
+    }
+    while i < n {
+        o[i] = lane(a[i], b[i]);
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn blocks_3_1(
+    a: &[f32], b: &[f32], c: &[f32], o: &mut [f32],
+    lane: impl Fn(f32, f32, f32) -> f32 + Copy,
+) {
+    let n = a.len();
+    assert!(b.len() == n && c.len() == n && o.len() == n);
+    let mut i = 0;
+    while i + LANES <= n {
+        let va: [f32; LANES] = a[i..i + LANES].try_into().unwrap();
+        let vb: [f32; LANES] = b[i..i + LANES].try_into().unwrap();
+        let vc: [f32; LANES] = c[i..i + LANES].try_into().unwrap();
+        let mut r = [0.0f32; LANES];
+        for j in 0..LANES {
+            r[j] = lane(va[j], vb[j], vc[j]);
+        }
+        o[i..i + LANES].copy_from_slice(&r);
+        i += LANES;
+    }
+    while i < n {
+        o[i] = lane(a[i], b[i], c[i]);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public blocked kernels — one per servable op. The `fma` flag on the
+// product-bearing ops selects the exact-product variant; length
+// mismatches panic like their `ff::vector` counterparts.
+// ---------------------------------------------------------------------------
+
+/// Lane-blocked `s, e = two_sum(a, b)`.
+pub fn add12(a: &[f32], b: &[f32], s: &mut [f32], e: &mut [f32]) {
+    blocks_2_2(a, b, s, e, add12_lane);
+}
+
+/// Lane-blocked mask split.
+pub fn split_v(a: &[f32], hi: &mut [f32], lo: &mut [f32]) {
+    blocks_1_2(a, hi, lo, split_lane);
+}
+
+/// Lane-blocked exact product (Dekker or FMA form).
+pub fn mul12(fma: bool, a: &[f32], b: &[f32], x: &mut [f32], y: &mut [f32]) {
+    if fma {
+        blocks_2_2(a, b, x, y, mul12_lane::<true>);
+    } else {
+        blocks_2_2(a, b, x, y, mul12_lane::<false>);
+    }
+}
+
+/// Lane-blocked branch-free float-float addition (no product, so no
+/// FMA variant).
+pub fn add22(
+    ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+) {
+    blocks_4_2(ah, al, bh, bl, rh, rl, add22_lane);
+}
+
+/// Lane-blocked float-float multiplication.
+pub fn mul22(
+    fma: bool, ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32],
+    rl: &mut [f32],
+) {
+    if fma {
+        blocks_4_2(ah, al, bh, bl, rh, rl, mul22_lane::<true>);
+    } else {
+        blocks_4_2(ah, al, bh, bl, rh, rl, mul22_lane::<false>);
+    }
+}
+
+/// Lane-blocked float-float division.
+pub fn div22(
+    fma: bool, ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32],
+    rl: &mut [f32],
+) {
+    if fma {
+        blocks_4_2(ah, al, bh, bl, rh, rl, div22_lane::<true>);
+    } else {
+        blocks_4_2(ah, al, bh, bl, rh, rl, div22_lane::<false>);
+    }
+}
+
+/// Lane-blocked float-float multiply-add `r = a*b + c`.
+#[allow(clippy::too_many_arguments)]
+pub fn mad22(
+    fma: bool, ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], ch: &[f32], cl: &[f32],
+    rh: &mut [f32], rl: &mut [f32],
+) {
+    if fma {
+        blocks_6_2(ah, al, bh, bl, ch, cl, rh, rl, mad22_lane::<true>);
+    } else {
+        blocks_6_2(ah, al, bh, bl, ch, cl, rh, rl, mad22_lane::<false>);
+    }
+}
+
+/// Lane-blocked single-precision baselines. `mad` stays two-rounding
+/// (`a*b + c`, mul then add) in *every* tier — Rust never contracts,
+/// and the FMA tier must not change baseline bits either.
+pub fn base_add(a: &[f32], b: &[f32], r: &mut [f32]) {
+    blocks_2_1(a, b, r, |x, y| x + y);
+}
+
+pub fn base_mul(a: &[f32], b: &[f32], r: &mut [f32]) {
+    blocks_2_1(a, b, r, |x, y| x * y);
+}
+
+pub fn base_mad(a: &[f32], b: &[f32], c: &[f32], r: &mut [f32]) {
+    blocks_3_1(a, b, c, r, |x, y, z| x * y + z);
+}
+
+// ---------------------------------------------------------------------------
+// Tier dispatch — the entry point the native backend's workers call.
+// ---------------------------------------------------------------------------
+
+/// [`dispatch_slices`] over owned output vectors (the serial-path
+/// convenience, mirroring [`vector::dispatch`]).
+pub fn dispatch(
+    tier: KernelTier, op: &str, inputs: &[&[f32]], outputs: &mut [Vec<f32>],
+) -> Result<(), String> {
+    let mut slices: Vec<&mut [f32]> =
+        outputs.iter_mut().map(|v| v.as_mut_slice()).collect();
+    dispatch_slices(tier, op, inputs, &mut slices)
+}
+
+/// Run `op` over SoA planes with the selected tier's kernels.
+///
+/// `Scalar` routes to [`vector::dispatch_slices`] verbatim; the blocked
+/// tiers use the lane bodies above. `BlockedFma` additionally tries the
+/// explicit AVX/FMA intrinsic kernels when the build carries them
+/// (`--features simd-intrinsics`) and the CPU agrees at runtime.
+pub fn dispatch_slices(
+    tier: KernelTier, op: &str, inputs: &[&[f32]], outputs: &mut [&mut [f32]],
+) -> Result<(), String> {
+    if tier == KernelTier::Scalar {
+        return vector::dispatch_slices(op, inputs, outputs);
+    }
+    #[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+    {
+        if tier == KernelTier::BlockedFma
+            && avx::ready()
+            && avx::try_dispatch(op, inputs, outputs)
+        {
+            return Ok(());
+        }
+    }
+    let fma = tier == KernelTier::BlockedFma;
+    match op {
+        "add12" => {
+            let (s, e) = vector::split_two_mut(outputs);
+            add12(inputs[0], inputs[1], s, e);
+        }
+        "split" => {
+            let (h, l) = vector::split_two_mut(outputs);
+            split_v(inputs[0], h, l);
+        }
+        "mul12" => {
+            let (x, y) = vector::split_two_mut(outputs);
+            mul12(fma, inputs[0], inputs[1], x, y);
+        }
+        "add22" => {
+            let (h, l) = vector::split_two_mut(outputs);
+            add22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+        }
+        "mul22" => {
+            let (h, l) = vector::split_two_mut(outputs);
+            mul22(fma, inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+        }
+        "div22" => {
+            let (h, l) = vector::split_two_mut(outputs);
+            div22(fma, inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+        }
+        "mad22" => {
+            let (h, l) = vector::split_two_mut(outputs);
+            mad22(
+                fma, inputs[0], inputs[1], inputs[2], inputs[3], inputs[4], inputs[5],
+                h, l,
+            );
+        }
+        "add" => base_add(inputs[0], inputs[1], outputs[0]),
+        "mul" => base_mul(inputs[0], inputs[1], outputs[0]),
+        "mad" => base_mad(inputs[0], inputs[1], inputs[2], outputs[0]),
+        other => return Err(format!("unknown op {other}")),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Explicit AVX/FMA intrinsic paths (x86_64, `--features simd-intrinsics`).
+// Every vector instruction maps 1:1 to one individually-rounded scalar
+// op of the lane bodies — `_mm256_fmsub_ps(a, b, x) = fl(a·b − x)` is
+// exactly `fma(a, b, -x)` — so results stay bit-identical to the
+// portable BlockedFma blocks. Cross products and `q1·bl` use separate
+// mul-then-add/sub intrinsics: explicit intrinsics never contract, so
+// no accidental fusion can change bits.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd-intrinsics", target_arch = "x86_64"))]
+mod avx {
+    use core::arch::x86_64::*;
+
+    use super::LANES;
+
+    /// Runtime gate for the intrinsic kernels.
+    pub(super) fn ready() -> bool {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    }
+
+    /// Run `op` through its intrinsic kernel; `false` when `op` has
+    /// none (the caller falls back to the portable blocks). Caller must
+    /// have verified [`ready`].
+    pub(super) fn try_dispatch(
+        op: &str, inputs: &[&[f32]], outputs: &mut [&mut [f32]],
+    ) -> bool {
+        use crate::ff::vector::split_two_mut;
+        // SAFETY: `ready()` confirmed AVX2+FMA on this CPU; each kernel
+        // asserts plane-length agreement before touching memory.
+        unsafe {
+            match op {
+                "add12" => {
+                    let (s, e) = split_two_mut(outputs);
+                    add12(inputs[0], inputs[1], s, e);
+                }
+                "split" => {
+                    let (h, l) = split_two_mut(outputs);
+                    split_v(inputs[0], h, l);
+                }
+                "mul12" => {
+                    let (x, y) = split_two_mut(outputs);
+                    mul12(inputs[0], inputs[1], x, y);
+                }
+                "add22" => {
+                    let (h, l) = split_two_mut(outputs);
+                    add22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+                }
+                "mul22" => {
+                    let (h, l) = split_two_mut(outputs);
+                    mul22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+                }
+                "div22" => {
+                    let (h, l) = split_two_mut(outputs);
+                    div22(inputs[0], inputs[1], inputs[2], inputs[3], h, l);
+                }
+                "mad22" => {
+                    let (h, l) = split_two_mut(outputs);
+                    mad22(
+                        inputs[0], inputs[1], inputs[2], inputs[3], inputs[4],
+                        inputs[5], h, l,
+                    );
+                }
+                _ => return false,
+            }
+        }
+        true
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn two_sum_ps(a: __m256, b: __m256) -> (__m256, __m256) {
+        let s = _mm256_add_ps(a, b);
+        let bb = _mm256_sub_ps(s, a);
+        let err = _mm256_add_ps(
+            _mm256_sub_ps(a, _mm256_sub_ps(s, bb)),
+            _mm256_sub_ps(b, bb),
+        );
+        (s, err)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn fast_two_sum_ps(a: __m256, b: __m256) -> (__m256, __m256) {
+        let s = _mm256_add_ps(a, b);
+        let err = _mm256_sub_ps(b, _mm256_sub_ps(s, a));
+        (s, err)
+    }
+
+    /// FMA exact product: `y = fl(a·b − x)` via `vfmsub`.
+    #[inline]
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn two_prod_ps(a: __m256, b: __m256) -> (__m256, __m256) {
+        let x = _mm256_mul_ps(a, b);
+        let y = _mm256_fmsub_ps(a, b, x);
+        (x, y)
+    }
+
+    /// Mask split (`to_bits() & 0xFFFF_F000`) — bitwise, so trivially
+    /// identical to the scalar form.
+    #[inline]
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn split_ps(a: __m256) -> (__m256, __m256) {
+        let mask = _mm256_castsi256_ps(_mm256_set1_epi32(0xFFFF_F000u32 as i32));
+        let hi = _mm256_and_ps(a, mask);
+        let lo = _mm256_sub_ps(a, hi);
+        (hi, lo)
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn add12(a: &[f32], b: &[f32], s: &mut [f32], e: &mut [f32]) {
+        let n = a.len();
+        assert!(b.len() == n && s.len() == n && e.len() == n);
+        let mut i = 0;
+        while i + LANES <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            let (vs, ve) = two_sum_ps(va, vb);
+            _mm256_storeu_ps(s.as_mut_ptr().add(i), vs);
+            _mm256_storeu_ps(e.as_mut_ptr().add(i), ve);
+            i += LANES;
+        }
+        while i < n {
+            let (x, y) = super::add12_lane(a[i], b[i]);
+            s[i] = x;
+            e[i] = y;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn split_v(a: &[f32], hi: &mut [f32], lo: &mut [f32]) {
+        let n = a.len();
+        assert!(hi.len() == n && lo.len() == n);
+        let mut i = 0;
+        while i + LANES <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let (vh, vl) = split_ps(va);
+            _mm256_storeu_ps(hi.as_mut_ptr().add(i), vh);
+            _mm256_storeu_ps(lo.as_mut_ptr().add(i), vl);
+            i += LANES;
+        }
+        while i < n {
+            let (h, l) = super::split_lane(a[i]);
+            hi[i] = h;
+            lo[i] = l;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn mul12(a: &[f32], b: &[f32], x: &mut [f32], y: &mut [f32]) {
+        let n = a.len();
+        assert!(b.len() == n && x.len() == n && y.len() == n);
+        let mut i = 0;
+        while i + LANES <= n {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i));
+            let (vx, vy) = two_prod_ps(va, vb);
+            _mm256_storeu_ps(x.as_mut_ptr().add(i), vx);
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), vy);
+            i += LANES;
+        }
+        while i < n {
+            let (xi, yi) = super::mul12_lane::<true>(a[i], b[i]);
+            x[i] = xi;
+            y[i] = yi;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn add22(
+        ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+    ) {
+        let n = ah.len();
+        assert!(
+            al.len() == n
+                && bh.len() == n
+                && bl.len() == n
+                && rh.len() == n
+                && rl.len() == n
+        );
+        let mut i = 0;
+        while i + LANES <= n {
+            let vah = _mm256_loadu_ps(ah.as_ptr().add(i));
+            let val = _mm256_loadu_ps(al.as_ptr().add(i));
+            let vbh = _mm256_loadu_ps(bh.as_ptr().add(i));
+            let vbl = _mm256_loadu_ps(bl.as_ptr().add(i));
+            let (sh, se) = two_sum_ps(vah, vbh);
+            let te = _mm256_add_ps(_mm256_add_ps(val, vbl), se);
+            let (h, l) = fast_two_sum_ps(sh, te);
+            _mm256_storeu_ps(rh.as_mut_ptr().add(i), h);
+            _mm256_storeu_ps(rl.as_mut_ptr().add(i), l);
+            i += LANES;
+        }
+        while i < n {
+            let (h, l) = super::add22_lane(ah[i], al[i], bh[i], bl[i]);
+            rh[i] = h;
+            rl[i] = l;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn mul22(
+        ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+    ) {
+        let n = ah.len();
+        assert!(
+            al.len() == n
+                && bh.len() == n
+                && bl.len() == n
+                && rh.len() == n
+                && rl.len() == n
+        );
+        let mut i = 0;
+        while i + LANES <= n {
+            let vah = _mm256_loadu_ps(ah.as_ptr().add(i));
+            let val = _mm256_loadu_ps(al.as_ptr().add(i));
+            let vbh = _mm256_loadu_ps(bh.as_ptr().add(i));
+            let vbl = _mm256_loadu_ps(bl.as_ptr().add(i));
+            let (ph, pl) = two_prod_ps(vah, vbh);
+            // ah·bl and al·bh each rounded, then added — mirrors the
+            // scalar `ah*bl + al*bh`, no fusion
+            let cross =
+                _mm256_add_ps(_mm256_mul_ps(vah, vbl), _mm256_mul_ps(val, vbh));
+            let pl = _mm256_add_ps(pl, cross);
+            let (h, l) = fast_two_sum_ps(ph, pl);
+            _mm256_storeu_ps(rh.as_mut_ptr().add(i), h);
+            _mm256_storeu_ps(rl.as_mut_ptr().add(i), l);
+            i += LANES;
+        }
+        while i < n {
+            let (h, l) = super::mul22_lane::<true>(ah[i], al[i], bh[i], bl[i]);
+            rh[i] = h;
+            rl[i] = l;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    unsafe fn div22(
+        ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], rh: &mut [f32], rl: &mut [f32],
+    ) {
+        let n = ah.len();
+        assert!(
+            al.len() == n
+                && bh.len() == n
+                && bl.len() == n
+                && rh.len() == n
+                && rl.len() == n
+        );
+        let mut i = 0;
+        while i + LANES <= n {
+            let vah = _mm256_loadu_ps(ah.as_ptr().add(i));
+            let val = _mm256_loadu_ps(al.as_ptr().add(i));
+            let vbh = _mm256_loadu_ps(bh.as_ptr().add(i));
+            let vbl = _mm256_loadu_ps(bl.as_ptr().add(i));
+            let q1 = _mm256_div_ps(vah, vbh);
+            let (th, tl) = two_prod_ps(q1, vbh);
+            // (((ah - th) - tl) + al - q1·bl) / bh, every step rounded
+            let num = _mm256_sub_ps(
+                _mm256_add_ps(_mm256_sub_ps(_mm256_sub_ps(vah, th), tl), val),
+                _mm256_mul_ps(q1, vbl),
+            );
+            let r = _mm256_div_ps(num, vbh);
+            let (h, l) = fast_two_sum_ps(q1, r);
+            _mm256_storeu_ps(rh.as_mut_ptr().add(i), h);
+            _mm256_storeu_ps(rl.as_mut_ptr().add(i), l);
+            i += LANES;
+        }
+        while i < n {
+            let (h, l) = super::div22_lane::<true>(ah[i], al[i], bh[i], bl[i]);
+            rh[i] = h;
+            rl[i] = l;
+            i += 1;
+        }
+    }
+
+    /// # Safety
+    /// CPU must support AVX2+FMA ([`ready`]).
+    #[target_feature(enable = "avx,fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn mad22(
+        ah: &[f32], al: &[f32], bh: &[f32], bl: &[f32], ch: &[f32], cl: &[f32],
+        rh: &mut [f32], rl: &mut [f32],
+    ) {
+        let n = ah.len();
+        assert!(
+            al.len() == n
+                && bh.len() == n
+                && bl.len() == n
+                && ch.len() == n
+                && cl.len() == n
+        );
+        assert!(rh.len() == n && rl.len() == n);
+        let mut i = 0;
+        while i + LANES <= n {
+            let vah = _mm256_loadu_ps(ah.as_ptr().add(i));
+            let val = _mm256_loadu_ps(al.as_ptr().add(i));
+            let vbh = _mm256_loadu_ps(bh.as_ptr().add(i));
+            let vbl = _mm256_loadu_ps(bl.as_ptr().add(i));
+            let vch = _mm256_loadu_ps(ch.as_ptr().add(i));
+            let vcl = _mm256_loadu_ps(cl.as_ptr().add(i));
+            // mul22 part
+            let (ph, pl) = two_prod_ps(vah, vbh);
+            let cross =
+                _mm256_add_ps(_mm256_mul_ps(vah, vbl), _mm256_mul_ps(val, vbh));
+            let pl = _mm256_add_ps(pl, cross);
+            let (mh, ml) = fast_two_sum_ps(ph, pl);
+            // add22 part
+            let (sh, se) = two_sum_ps(mh, vch);
+            let te = _mm256_add_ps(_mm256_add_ps(ml, vcl), se);
+            let (h, l) = fast_two_sum_ps(sh, te);
+            _mm256_storeu_ps(rh.as_mut_ptr().add(i), h);
+            _mm256_storeu_ps(rl.as_mut_ptr().add(i), l);
+            i += LANES;
+        }
+        while i < n {
+            let (h, l) =
+                super::mad22_lane::<true>(ah[i], al[i], bh[i], bl[i], ch[i], cl[i]);
+            rh[i] = h;
+            rl[i] = l;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::workload;
+
+    const OPS: [(&str, usize); 10] = [
+        ("add12", 2),
+        ("split", 2),
+        ("mul12", 2),
+        ("add22", 2),
+        ("mul22", 2),
+        ("div22", 2),
+        ("mad22", 2),
+        ("add", 1),
+        ("mul", 1),
+        ("mad", 1),
+    ];
+
+    /// Sizes straddling the LANES boundary on both sides, plus odd
+    /// tails that exercise the scalar remainder.
+    const SIZES: [usize; 9] = [1, 7, 8, 9, 63, 64, 65, 1000, 8329];
+
+    fn run(tier: KernelTier, op: &str, planes: &[Vec<f32>], n_out: usize) -> Vec<Vec<f32>> {
+        let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
+        let mut outs = vec![vec![0.0f32; planes[0].len()]; n_out];
+        dispatch(tier, op, &refs, &mut outs).unwrap();
+        outs
+    }
+
+    fn assert_tier_matches_scalar(tier: KernelTier) {
+        for &(op, n_out) in &OPS {
+            for &n in &SIZES {
+                let planes = workload::planes_for(op, n, 0xBEEF ^ (n as u64));
+                let want = run(KernelTier::Scalar, op, &planes, n_out);
+                let got = run(tier, op, &planes, n_out);
+                for (o, (pw, pg)) in want.iter().zip(&got).enumerate() {
+                    for i in 0..n {
+                        assert_eq!(
+                            pw[i].to_bits(),
+                            pg[i].to_bits(),
+                            "tier={tier} op={op} n={n} out{o} lane{i}: \
+                             got {} want {}",
+                            pg[i],
+                            pw[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_scalar_bitwise_every_op() {
+        assert_tier_matches_scalar(KernelTier::Blocked);
+    }
+
+    #[test]
+    fn blocked_fma_matches_scalar_bitwise_in_range() {
+        // correctness does not need *fast* FMA — mul_add is correctly
+        // rounded even through libm — so this parity check always runs
+        assert_tier_matches_scalar(KernelTier::BlockedFma);
+    }
+
+    #[test]
+    fn tier_names_parse_round_trip() {
+        for tier in KernelTier::ALL {
+            assert_eq!(KernelTier::parse(tier.name()).unwrap(), tier);
+            assert_eq!(KernelTier::from_index(tier.index()), Some(tier));
+        }
+        assert_eq!(KernelTier::parse("FMA").unwrap(), KernelTier::BlockedFma);
+        assert_eq!(KernelTier::parse(" blocked ").unwrap(), KernelTier::Blocked);
+        assert_eq!(KernelTier::parse("auto").unwrap(), KernelTier::detect());
+        assert!(KernelTier::parse("warp").is_err());
+        assert_eq!(KernelTier::from_index(3), None);
+    }
+
+    #[test]
+    fn detect_returns_an_available_tier() {
+        let t = KernelTier::detect();
+        assert!(t.available(), "detected tier {t} must be runnable");
+        assert_ne!(t, KernelTier::Scalar, "detection never de-escalates to scalar");
+    }
+
+    #[test]
+    fn resolve_prefers_explicit_request() {
+        // explicit spec choice wins over env/detection unconditionally
+        for tier in KernelTier::ALL {
+            assert_eq!(KernelTier::resolve(Some(tier)), tier);
+        }
+    }
+
+    #[test]
+    fn dispatch_rejects_unknown_ops() {
+        for tier in KernelTier::ALL {
+            assert!(dispatch(tier, "nope", &[], &mut []).is_err());
+        }
+    }
+}

@@ -204,7 +204,11 @@ pub fn dispatch_slices(
     Ok(())
 }
 
-fn split_two_mut<'a>(outputs: &'a mut [&mut [f32]]) -> (&'a mut [f32], &'a mut [f32]) {
+/// Split the first two output windows apart — shared with the
+/// lane-blocked dispatch in [`crate::ff::simd`].
+pub(crate) fn split_two_mut<'a>(
+    outputs: &'a mut [&mut [f32]],
+) -> (&'a mut [f32], &'a mut [f32]) {
     let (a, b) = outputs.split_at_mut(1);
     (&mut *a[0], &mut *b[0])
 }

@@ -2,6 +2,7 @@
 //! additions (the paper's unit).
 
 use super::workload::planes_for;
+use crate::ff::simd::{self, KernelTier};
 use crate::ff::vector;
 use crate::runtime::Runtime;
 use crate::util::Timer;
@@ -50,12 +51,23 @@ fn capitalize(s: &str) -> String {
     }
 }
 
-/// Table 4 — the CPU path: native rust scalar loops.
+/// Table 4 — the CPU path on the scalar kernel tier (the paper-faithful
+/// protocol: its 2006 CPU baseline was scalar-era code).
 ///
 /// Per the paper, the CPU Add22 is the *branchy* variant ("the test in
 /// the Add22 algorithm is time consuming … as it breaks the execution
 /// pipeline"); everything else is the branch-free code.
 pub fn cpu_grid(sizes: &[usize], ops: &[&str], timer: &Timer, seed: u64) -> TimingGrid {
+    cpu_grid_tier(sizes, ops, timer, seed, KernelTier::Scalar)
+}
+
+/// [`cpu_grid`] on an explicit kernel tier — what `benches/table4_cpu`
+/// uses to attribute modern-CPU reproductions to the tier that ran
+/// them. Add22 stays the branchy scalar variant in every tier (it *is*
+/// the paper's CPU protocol; there is no blocked branchy kernel).
+pub fn cpu_grid_tier(
+    sizes: &[usize], ops: &[&str], timer: &Timer, seed: u64, tier: KernelTier,
+) -> TimingGrid {
     let mut seconds = Vec::with_capacity(sizes.len());
     for (si, &n) in sizes.iter().enumerate() {
         let mut row = Vec::with_capacity(ops.len());
@@ -71,7 +83,7 @@ pub fn cpu_grid(sizes: &[usize], ops: &[&str], timer: &Timer, seed: u64) -> Timi
                     vector::add22_branchy(refs[0], refs[1], refs[2], refs[3],
                                           &mut a[0], &mut b[0]);
                 } else {
-                    vector::dispatch(op, &refs, &mut outs).unwrap();
+                    simd::dispatch(tier, op, &refs, &mut outs).unwrap();
                 }
                 std::hint::black_box(&outs);
             });

@@ -9,7 +9,10 @@
 //!
 //! * [`ff`] — the numeric format itself on native IEEE-754 hardware
 //!   (scalar [`ff::FF32`], SoA vector ops, double-double comparator,
-//!   compensated algorithms);
+//!   compensated algorithms, and the tiered SIMD/FMA kernel engine
+//!   [`ff::simd`]: scalar / lane-blocked / FMA kernels selected per
+//!   CPU via [`ff::KernelTier`], bit-identical on the servable
+//!   domain);
 //! * [`gpusim`] — a software model of 2006-era GPU arithmetic
 //!   (configurable formats of the paper's Table 1, rounding behaviours of
 //!   Table 2, a mini-Brook stream VM) used to validate the paper's
@@ -25,7 +28,9 @@
 //!   construction), one [`backend::KernelBackend`] trait over both,
 //!   with native multicore ([`backend::NativeBackend`] — a persistent
 //!   channel-fed worker crew with per-worker
-//!   [`backend::WorkerArenas`], no spawn/join per batch),
+//!   [`backend::WorkerArenas`], no spawn/join per batch, running the
+//!   [`backend::KernelTier`] resolved at construction over L2-sized
+//!   chunks),
 //!   simulated-GPU ([`backend::GpuSimBackend`]) and PJRT/XLA
 //!   ([`backend::XlaBackend`]) implementations, typed
 //!   [`backend::ServiceError`]s, and the [`backend::BufferPool`] that

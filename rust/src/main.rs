@@ -24,6 +24,10 @@
 //! `--fuse-window N` holds each shard's batch open N ms so cross-client
 //! requests fuse into padded ladder launches, and `--workers N`
 //! overrides the persistent worker-crew size of every native shard.
+//! `--kernel-tier scalar|blocked|blocked-fma|auto` pins the CPU kernel
+//! tier of every native shard (default: `FFGPU_KERNEL_TIER`, then
+//! runtime CPU detection) and `--chunk-elems N` its chunk size (0 =
+//! L2-sized auto chunk); both also apply to `table4` / `tablex`.
 //! `--observe F` mirrors fraction F of the demo traffic through the
 //! accuracy observatory (`--observe-models nv35,r300,chopped`) and
 //! prints the live Table-2/Table-5 accuracy report at the end.
@@ -31,7 +35,7 @@
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
 
-use ffgpu::backend::{BackendSpec, Op};
+use ffgpu::backend::{BackendSpec, KernelTier, Op};
 use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
 use ffgpu::runtime::Runtime;
@@ -59,17 +63,34 @@ fn main() {
     let workers_flag: Option<usize> = get_flag("--workers", String::new()).parse().ok();
     let observe_flag = get_flag("--observe", String::new());
     let observe_models = get_flag("--observe-models", "nv35,r300,chopped".into());
+    // --kernel-tier pins the CPU tier of every native shard; absent it
+    // stays None so KernelTier::resolve falls through to
+    // FFGPU_KERNEL_TIER and then runtime CPU detection
+    let tier_raw = get_flag("--kernel-tier", String::new());
+    let tier_flag: Option<KernelTier> = if tier_raw.is_empty() {
+        None
+    } else {
+        match KernelTier::parse(&tier_raw) {
+            Ok(t) => Some(t),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let chunk_flag: Option<usize> = get_flag("--chunk-elems", String::new()).parse().ok();
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
         "paranoia" => cmd_paranoia(if samples > 0 { samples } else { 200_000 }),
         "table3" => cmd_table3(&artifacts),
-        "table4" => cmd_table4(),
-        "tablex" => cmd_tablex(&artifacts, &backend_flag),
+        "table4" => cmd_table4(tier_flag),
+        "tablex" => cmd_tablex(&artifacts, &backend_flag, tier_flag, chunk_flag),
         "accuracy" => cmd_accuracy(&artifacts, if samples > 0 { samples } else { 1 << 20 }),
         "serve-demo" => cmd_serve_demo(
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
-            deadline_ms, fuse_window_ms, workers_flag, &observe_flag, &observe_models,
+            deadline_ms, fuse_window_ms, workers_flag, tier_flag, chunk_flag,
+            &observe_flag, &observe_models,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -89,6 +110,7 @@ ffgpu — float-float operators on a stream processor (Da Graça & Defour 2006)
 
 USAGE: ffgpu <command> [--artifacts DIR] [--samples N]
                        [--backend B] [--shards N] [--workers N]
+                       [--kernel-tier T] [--chunk-elems N]
                        [--shard-spec LIST] [--routing P] [--deadline-ms N]
                        [--fuse-window N] [--observe F] [--observe-models LIST]
 
@@ -126,6 +148,18 @@ SHARD SETS (serve-demo):
                                       stream-size ladder (4096..1048576)
   --workers N                         persistent worker-crew size of every
                                       native shard (0 = one per core)
+  --kernel-tier scalar|blocked|blocked-fma|auto
+                                      CPU kernel tier of every native shard
+                                      and of table4/tablex (default: the
+                                      FFGPU_KERNEL_TIER env var, then
+                                      runtime CPU detection; blocked-fma
+                                      needs fast FMA — a build with
+                                      -C target-cpu=native or the
+                                      simd-intrinsics feature on avx2+fma
+                                      hardware)
+  --chunk-elems N                     per-worker chunk size (elements) of
+                                      every native shard (0 = L2-sized
+                                      auto chunk; also FFGPU_CHUNK_ELEMS)
   --observe F                         mirror fraction F (0..1) of the demo
                                       traffic through the accuracy
                                       observatory (native reference + GPU
@@ -209,25 +243,41 @@ fn cmd_table3(artifacts: &Path) -> i32 {
     }
 }
 
-fn cmd_table4() -> i32 {
+fn cmd_table4(tier_flag: Option<KernelTier>) -> i32 {
+    // default to the paper-faithful scalar protocol; --kernel-tier (or
+    // --kernel-tier auto) opts into the blocked/FMA reproductions
+    let tier = tier_flag.unwrap_or(KernelTier::Scalar);
     let timer = Timer::new(2, 7);
-    let grid = timing::cpu_grid(&workload::PAPER_SIZES, &workload::PAPER_OPS, &timer, 4);
-    print!("{}", grid.render(
-        "Table 4 — float-float operators on the native CPU path \
-         (normalised to Add @ 4096)"));
+    let grid = timing::cpu_grid_tier(
+        &workload::PAPER_SIZES, &workload::PAPER_OPS, &timer, 4, tier,
+    );
+    print!("{}", grid.render(&format!(
+        "Table 4 — float-float operators on the native CPU path, \
+         kernel tier '{tier}' (normalised to Add @ 4096)")));
     print_paper_grid("paper Table 4", timing::paper_table4());
     0
 }
 
 /// Substrate-neutral timing table through the backend layer.
-fn cmd_tablex(artifacts: &Path, backend_flag: &str) -> i32 {
-    let spec = match BackendSpec::from_cli(backend_flag, artifacts) {
+fn cmd_tablex(
+    artifacts: &Path, backend_flag: &str, tier_flag: Option<KernelTier>,
+    chunk_flag: Option<usize>,
+) -> i32 {
+    let mut spec = match BackendSpec::from_cli(backend_flag, artifacts) {
         Ok(s) => s,
         Err(e) => {
             eprintln!("{e}");
             return 2;
         }
     };
+    if let BackendSpec::Native { chunk, tier, .. } = &mut spec {
+        if let Some(t) = tier_flag {
+            *tier = Some(t);
+        }
+        if let Some(c) = chunk_flag {
+            *chunk = c;
+        }
+    }
     let mut backend = match spec.build() {
         Ok(b) => b,
         Err(e) => {
@@ -245,8 +295,14 @@ fn cmd_tablex(artifacts: &Path, backend_flag: &str) -> i32 {
     match timing::backend_grid(backend.as_mut(), &sizes, &workload::PAPER_OPS, &timer, 5)
     {
         Ok(grid) => {
+            // attribute the table to the kernel tier when the backend
+            // has one (native); gpusim/xla report no tier
+            let tier = match backend.kernel_tier() {
+                Some(t) => format!(", kernel tier '{t}'"),
+                None => String::new(),
+            };
             print!("{}", grid.render(&format!(
-                "Operator timings on backend '{}' (normalised to Add @ {})",
+                "Operator timings on backend '{}'{tier} (normalised to Add @ {})",
                 backend.name(), sizes[0]
             )));
             let st = backend.stats();
@@ -321,7 +377,8 @@ fn cmd_accuracy(artifacts: &Path, samples: usize) -> i32 {
 fn cmd_serve_demo(
     artifacts: &Path, backend_flag: &str, shards: usize, shard_spec: &str,
     routing_flag: &str, deadline_ms: u64, fuse_window_ms: u64,
-    workers_flag: Option<usize>, observe_flag: &str, observe_models: &str,
+    workers_flag: Option<usize>, tier_flag: Option<KernelTier>,
+    chunk_flag: Option<usize>, observe_flag: &str, observe_models: &str,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -350,11 +407,20 @@ fn cmd_serve_demo(
         }
     };
     let mut spec = spec.with_routing(routing);
-    // --workers retunes every native shard's persistent crew
-    if let Some(w) = workers_flag {
+    // --workers / --kernel-tier / --chunk-elems retune every native
+    // shard's persistent crew, CPU kernel tier and chunk size
+    if workers_flag.is_some() || tier_flag.is_some() || chunk_flag.is_some() {
         for s in &mut spec.shards {
-            if let BackendSpec::Native { workers, .. } = s {
-                *workers = w;
+            if let BackendSpec::Native { chunk, workers, tier } = s {
+                if let Some(w) = workers_flag {
+                    *workers = w;
+                }
+                if let Some(t) = tier_flag {
+                    *tier = Some(t);
+                }
+                if let Some(c) = chunk_flag {
+                    *chunk = c;
+                }
             }
         }
     }
@@ -399,6 +465,17 @@ fn cmd_serve_demo(
             return 1;
         }
     };
+    // kernel tiers are resolved per shard at backend construction and
+    // published before start() returned — print the attribution line
+    let shard_tiers = svc.shard_kernel_tiers();
+    let tier_cells: Vec<String> = shard_tiers
+        .iter()
+        .map(|t| match t {
+            Some(t) => t.to_string(),
+            None => "-".to_string(),
+        })
+        .collect();
+    println!("kernel tiers: [{}]", tier_cells.join(", "));
     // mixed-op workload over the whole catalogue, dispatched through
     // the typed Plan API; the gpusim soft-float VM is orders of
     // magnitude slower than native, so shrink batches when it serves —
@@ -466,7 +543,11 @@ fn cmd_serve_demo(
                 None => format!("{op}=cold"),
             })
             .collect();
-        println!("  shard {i} [{label}]: requests={} batches={} elements={} \
+        let tier = match shard_tiers.get(i).copied().flatten() {
+            Some(t) => format!(" tier={t}"),
+            None => String::new(),
+        };
+        println!("  shard {i} [{label}]{tier}: requests={} batches={} elements={} \
                   measured Melem/s: {}",
                  s.requests, s.batches, s.elements, rates.join(" "));
     }

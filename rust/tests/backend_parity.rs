@@ -9,7 +9,7 @@
 //! compares against the native reference lane by lane.
 
 use ffgpu::backend::{
-    BackendSpec, ExecJob, KernelBackend, NativeBackend, Op, ServiceError,
+    BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
 };
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
@@ -31,6 +31,9 @@ fn artifacts_dir() -> Option<PathBuf> {
 }
 
 /// Every backend that can be built in this environment, with a label.
+/// The native entries pin tiers explicitly: a blocked 4-worker crew
+/// always, plus the FMA tier (libm-lowered where the host has no fast
+/// FMA — slow but identical bits, so parity still holds).
 fn backends() -> Vec<(String, Box<dyn KernelBackend>)> {
     let mut v: Vec<(String, Box<dyn KernelBackend>)> = vec![
         (
@@ -38,10 +41,21 @@ fn backends() -> Vec<(String, Box<dyn KernelBackend>)> {
             Box::new(NativeBackend::new(2048, 4)),
         ),
         (
+            "native-blocked".to_string(),
+            Box::new(NativeBackend::with_tier(2048, 4, Some(KernelTier::Blocked))),
+        ),
+        (
+            "native-blocked-fma".to_string(),
+            Box::new(NativeBackend::with_tier(2048, 4, Some(KernelTier::BlockedFma))),
+        ),
+        (
             "gpusim-ieee".to_string(),
             BackendSpec::gpusim_ieee().build().unwrap(),
         ),
     ];
+    if !KernelTier::BlockedFma.available() {
+        eprintln!("(note: blocked-fma runs via libm fmaf on this host/build)");
+    }
     if let Some(dir) = artifacts_dir() {
         match (BackendSpec::Xla { artifacts: dir, precompile: false }).build() {
             Ok(b) => v.push(("xla".to_string(), b)),
@@ -65,8 +79,10 @@ fn execute(
 
 #[test]
 fn prop_backends_bit_match_native_on_random_batches() {
-    // reference: the seed's serving semantics (single-threaded native)
-    let mut reference = NativeBackend::new(1 << 20, 1);
+    // reference: the seed's serving semantics — single-threaded native
+    // on the scalar tier, pinned explicitly so env/detection can't
+    // move the goalposts
+    let mut reference = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
     let mut others = backends();
     let mut rng = Rng::new(0xBAC7);
     let cases = 60;
@@ -99,7 +115,7 @@ fn prop_backends_bit_match_native_on_random_batches() {
 fn prop_div22_agrees_within_tolerance_across_backends() {
     // div22 is recip-based on the stream VM — equivalent accuracy
     // class, not bit-equal; pin the tolerance so regressions surface.
-    let mut reference = NativeBackend::new(1 << 20, 1);
+    let mut reference = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
     let mut sim = BackendSpec::gpusim_ieee().build().unwrap();
     let mut rng = Rng::new(0xD1F2);
     for case in 0..20 {

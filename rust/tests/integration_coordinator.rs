@@ -364,7 +364,7 @@ fn fused_batches_slice_back_bit_identically_to_solo_serving() {
 fn persistent_native_workers_serve_many_service_batches() {
     // chunk floor is 1024, so 5000-lane requests engage the crew
     let svc = Service::start(ServiceSpec::uniform(
-        BackendSpec::Native { chunk: 1024, workers: 4 },
+        BackendSpec::Native { chunk: 1024, workers: 4, tier: None },
         1,
     ))
     .unwrap();
