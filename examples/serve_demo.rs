@@ -18,6 +18,8 @@
 //! FFGPU_OBSERVE=0.25 FFGPU_OBSERVE_MODELS=nv35,r300 \
 //!     cargo run --release --example serve_demo          # accuracy observatory
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
+//! FFGPU_LISTEN=127.0.0.1:7070 FFGPU_SERVE_SECS=30 \
+//!     cargo run --release --example serve_demo          # TCP wire front end
 //! ```
 //!
 //! `FFGPU_KERNEL_TIER` (scalar | blocked | blocked-fma | auto) is read
@@ -150,6 +152,22 @@ fn main() {
         Err(e) => panic!("service: {e}"),
     };
 
+    // FFGPU_LISTEN arms the TCP wire front end beside the in-process
+    // demo traffic; FFGPU_SERVE_SECS keeps it up after the workload so
+    // out-of-process clients (examples/wire_demo.rs) can connect
+    let listen = std::env::var("FFGPU_LISTEN").ok();
+    let serve_secs: u64 = std::env::var("FFGPU_SERVE_SECS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let wire = listen.as_deref().map(|addr| {
+        let srv =
+            ffgpu::net::WireServer::start(svc.handle(), addr, ffgpu::net::WireConfig::default())
+                .expect("wire listen");
+        println!("wire front end listening on {}", srv.local_addr());
+        srv
+    });
+
     // a mixed workload: 8 concurrent clients, varying ops and sizes,
     // dispatched through the typed Plan/Ticket API
     let ops = [Op::Add22, Op::Mul22, Op::Mul12, Op::Add12, Op::Div22];
@@ -246,5 +264,34 @@ fn main() {
     if let Some(rep) = svc.accuracy_report() {
         print!("\n{}", rep.render_table2_live());
         print!("\n{}", rep.render_table5_live());
+    }
+    // per-tenant wire attribution (only populated via the wire front end)
+    let tenants = svc.tenant_metrics();
+    if !tenants.is_empty() {
+        println!("\ntenants:");
+        for (tenant, c) in &tenants {
+            println!(
+                "  {tenant}: requests={} lanes={} shed={} denied={}",
+                c.requests, c.lanes, c.shed, c.denied
+            );
+        }
+    }
+    if let Some(srv) = wire {
+        if serve_secs > 0 {
+            println!("serving on {} for {serve_secs}s ...", srv.local_addr());
+            std::thread::sleep(Duration::from_secs(serve_secs));
+        }
+        srv.shutdown();
+        // tenants that arrived over the wire during the serve window
+        let tenants = svc.tenant_metrics();
+        if !tenants.is_empty() {
+            println!("tenants after serve window:");
+            for (tenant, c) in &tenants {
+                println!(
+                    "  {tenant}: requests={} lanes={} shed={} denied={}",
+                    c.requests, c.lanes, c.shed, c.denied
+                );
+            }
+        }
     }
 }

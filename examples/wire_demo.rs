@@ -1,0 +1,191 @@
+//! Wire front end demo: four concurrent TCP clients against a
+//! [`ffgpu::net::WireServer`] — three well-behaved `standard` tenants
+//! plus one `bulk` hog that deliberately exceeds its token-bucket
+//! contract. The demo **asserts** the serving invariants and exits
+//! non-zero if any is violated:
+//!
+//! * every standard-tenant request completes with correctly shaped
+//!   output (no overloads, no errors);
+//! * the hog sees at least one `Overloaded { retry_after_ms }` verdict;
+//! * the server's status frame attributes the shed/denied traffic to
+//!   the hog tenant, not to the standard tenants.
+//!
+//! ```bash
+//! cargo run --release --example wire_demo          # self-hosted loopback
+//! FFGPU_CONNECT=127.0.0.1:7070 cargo run --release --example wire_demo
+//! ```
+//!
+//! With `FFGPU_CONNECT` the demo drives an external server (e.g.
+//! `FFGPU_LISTEN=127.0.0.1:7070 ... --example serve_demo`); the
+//! admission assertions assume that server runs the default
+//! [`ffgpu::net::AdmissionConfig`].
+
+use ffgpu::backend::Op;
+use ffgpu::coordinator::{Routing, Service, ServiceSpec};
+use ffgpu::harness::workload;
+use ffgpu::net::{ClientClass, WireClient, WireConfig, WireError, WireServer};
+use ffgpu::util::Rng;
+use std::time::{Duration, Instant};
+
+/// Rounds per standard client.
+const STD_ROUNDS: usize = 30;
+/// Rounds the hog attempts.
+const HOG_ROUNDS: usize = 12;
+/// Lanes per hog submit: two full-burst submits drain the default bulk
+/// bucket (1M burst, 500k/s refill), so the third trips admission.
+const HOG_LANES: usize = 400_000;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+}
+
+fn main() {
+    // self-host a loopback server unless FFGPU_CONNECT names one
+    let connect = std::env::var("FFGPU_CONNECT").ok();
+    // tuple order matters: the wire server must drop (and join its
+    // workers) before the service it serves
+    let mut hosted: Option<(WireServer, Service)> = None;
+    let addr = match &connect {
+        Some(a) => a.clone(),
+        None => {
+            let spec = ServiceSpec::from_cli("native*2", &std::path::PathBuf::from("artifacts"))
+                .expect("spec")
+                .with_routing(Routing::QueueDepth)
+                .with_fuse_window(Duration::from_millis(1));
+            let svc = Service::start(spec).expect("service");
+            let srv = WireServer::start(svc.handle(), "127.0.0.1:0", WireConfig::default())
+                .expect("wire listen");
+            let addr = srv.local_addr().to_string();
+            println!("self-hosted wire server on {addr}");
+            hosted = Some((srv, svc));
+            addr
+        }
+    };
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+
+    // three standard tenants: moderate pipelined traffic, generous
+    // deadlines — these must never be pushed back
+    for c in 0..3u64 {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let tenant = format!("std-{c}");
+            let mut cli =
+                WireClient::connect(&addr, &tenant, ClientClass::Standard).expect("connect");
+            cli.set_io_timeout(Some(Duration::from_secs(30))).expect("timeout");
+            let ops = [Op::Add22, Op::Mul22, Op::Mul12];
+            let mut rng = Rng::new(0xace0 + c);
+            let mut lat = Vec::new();
+            for round in 0..STD_ROUNDS {
+                let op = ops[(c as usize + round) % ops.len()];
+                let n = 256 + rng.below(16_384);
+                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                let t = Instant::now();
+                match cli.call(op, planes, Some(5_000)) {
+                    Ok(out) => {
+                        lat.push(t.elapsed().as_secs_f64());
+                        assert_eq!(out.len(), op.n_out(), "{tenant}: output plane count");
+                        assert_eq!(out[0].len(), n, "{tenant}: output length");
+                    }
+                    Err(e) => panic!("{tenant} round {round}: {e}"),
+                }
+            }
+            lat
+        }));
+    }
+
+    // the hog: a bulk tenant hammering full-burst submits with no
+    // pause — must see Overloaded, must also eventually complete work
+    let hog_addr = addr.clone();
+    let hog = std::thread::spawn(move || {
+        let mut cli =
+            WireClient::connect(&hog_addr, "hog", ClientClass::Bulk).expect("hog connect");
+        cli.set_io_timeout(Some(Duration::from_secs(30))).expect("timeout");
+        let mut rng = Rng::new(0xb1f);
+        let mut done = 0u64;
+        let mut overloaded = 0u64;
+        for _ in 0..HOG_ROUNDS {
+            let planes = workload::planes_for(Op::Add22.name(), HOG_LANES, rng.next_u64());
+            match cli.call(Op::Add22, planes, None) {
+                Ok(out) => {
+                    assert_eq!(out[0].len(), HOG_LANES, "hog: output length");
+                    done += 1;
+                }
+                Err(WireError::Overloaded { retry_after_ms }) => {
+                    overloaded += 1;
+                    // honour the hint, capped so the demo stays quick
+                    std::thread::sleep(Duration::from_millis(retry_after_ms.min(150)));
+                }
+                Err(e) => panic!("hog: unexpected error: {e}"),
+            }
+        }
+        (done, overloaded)
+    });
+
+    let mut std_lat: Vec<f64> = Vec::new();
+    for j in joins {
+        std_lat.extend(j.join().expect("standard client"));
+    }
+    let (hog_done, hog_overloaded) = hog.join().expect("hog client");
+    let wall = t0.elapsed().as_secs_f64();
+
+    std_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "\n{} standard requests in {wall:.2}s: p50={:.2}ms p95={:.2}ms",
+        std_lat.len(),
+        percentile(&std_lat, 0.50) * 1e3,
+        percentile(&std_lat, 0.95) * 1e3,
+    );
+    println!("hog: {hog_done} completed, {hog_overloaded} pushed back");
+
+    // pull the server's own view of the run over the wire
+    let mut probe = WireClient::connect(&addr, "probe", ClientClass::Interactive)
+        .expect("probe connect");
+    let status = probe.status().expect("status");
+    let tiers: Vec<String> = status
+        .shards
+        .iter()
+        .map(|s| match s.tier {
+            Some(t) => format!("{}={}", s.label, t.name()),
+            None => format!("{}=-", s.label),
+        })
+        .collect();
+    println!("server shards: [{}]", tiers.join(", "));
+    for t in &status.tenants {
+        println!(
+            "  tenant {}: requests={} lanes={} shed={} denied={}",
+            t.tenant, t.requests, t.lanes, t.shed, t.denied
+        );
+    }
+
+    // the serving invariants this demo exists to pin
+    assert_eq!(
+        std_lat.len(),
+        3 * STD_ROUNDS,
+        "every standard request must complete"
+    );
+    assert!(
+        hog_overloaded > 0,
+        "the bulk hog must see at least one Overloaded verdict"
+    );
+    assert!(hog_done > 0, "pushback must shape the hog, not starve it");
+    let hog_row = status.tenants.iter().find(|t| t.tenant == "hog");
+    match hog_row {
+        Some(row) => assert!(
+            row.shed + row.denied > 0,
+            "server status must attribute pushback to the hog"
+        ),
+        None => panic!("server status must list the hog tenant"),
+    }
+    for t in &status.tenants {
+        if t.tenant.starts_with("std-") {
+            assert_eq!(t.shed + t.denied, 0, "standard tenant {} was pushed back", t.tenant);
+        }
+    }
+    println!("wire demo OK");
+    drop(hosted);
+}

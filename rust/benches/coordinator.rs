@@ -40,6 +40,12 @@
 //! across PRs and build flavours. The blocked-vs-scalar mul22 ratio is
 //! printed as an `[ok]`/`[!!]` shape check (not asserted: shared CI
 //! hosts are too noisy for a hard perf gate).
+//!
+//! Wire instrumentation (the TCP front end): the same workload runs
+//! in-process and through a loopback [`ffgpu::net::WireServer`] — the
+//! p50/p95 gap is the transport tax — and an over-quota bulk client
+//! runs against a tightened token bucket to record the pushback rate;
+//! both land in the `wire` section of `BENCH_coordinator.json`.
 
 use ffgpu::backend::{
     BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
@@ -47,6 +53,10 @@ use ffgpu::backend::{
 use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::ff::vector;
 use ffgpu::harness::workload;
+use ffgpu::net::{
+    AdmissionConfig, ClassLimits, ClientClass, WireClient, WireConfig, WireError,
+    WireServer,
+};
 use ffgpu::util::Rng;
 use std::path::PathBuf;
 use std::sync::Mutex;
@@ -95,6 +105,21 @@ struct TierRow {
     op: &'static str,
     n: usize,
     melem_per_s: f64,
+}
+
+/// One `wire` row of `BENCH_coordinator.json`: the TCP front end's
+/// transport overhead (loopback vs in-process over the same service)
+/// and pushback behaviour under deliberate overload.
+struct WireRow {
+    path: &'static str,
+    clients: usize,
+    req_n: usize,
+    rounds: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    completed: u64,
+    overloaded: u64,
 }
 
 /// Ops the routing comparison cycles through. Includes `div22` — the
@@ -307,7 +332,7 @@ fn observatory_rows() -> Vec<AccRow> {
         .collect()
 }
 
-fn emit_json(rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow]) {
+fn emit_json(rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow], wire: &[WireRow]) {
     let mut out = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \
          \"melem_per_s\": \"1e6 elements/s\", \"canary_share\": \
@@ -385,14 +410,34 @@ fn emit_json(rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow]) {
             if i + 1 < accuracy.len() { "," } else { "" },
         ));
     }
+    // the TCP front end: transport overhead + pushback behaviour
+    out.push_str("  ],\n  \"wire\": [\n");
+    for (i, w) in wire.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"path\": \"{}\", \"clients\": {}, \"req_n\": {}, \"rounds\": {}, \
+             \"req_per_s\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+             \"completed\": {}, \"overloaded\": {}}}{}\n",
+            w.path,
+            w.clients,
+            w.req_n,
+            w.rounds,
+            w.req_per_s,
+            w.p50_ms,
+            w.p95_ms,
+            w.completed,
+            w.overloaded,
+            if i + 1 < wire.len() { "," } else { "" },
+        ));
+    }
     out.push_str("  ]\n}\n");
     let path = "BENCH_coordinator.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!(
-            "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells)",
+            "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells, {} wire rows)",
             rows.len(),
             tiers.len(),
-            accuracy.len()
+            accuracy.len(),
+            wire.len()
         ),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
@@ -564,6 +609,163 @@ fn kernel_tier_rows() -> Vec<TierRow> {
                 b / s
             );
         }
+    }
+    rows
+}
+
+/// Wire front end instrument: the same `add22` workload dispatched
+/// in-process and over loopback TCP against the same service shape
+/// (per-request transport overhead), then a deliberately over-quota
+/// bulk client against a tightened token bucket (pushback rate —
+/// denied submits never reach the shards, so refusals stay cheap).
+/// Feeds the `wire` section of `BENCH_coordinator.json`.
+fn wire_rows() -> Vec<WireRow> {
+    println!("== wire front end: loopback TCP vs in-process, and token-bucket pushback");
+    let (clients, req_n, rounds) = (4usize, 4096usize, 50usize);
+    let mut rows = Vec::new();
+
+    let svc = Service::start(ServiceSpec::uniform(BackendSpec::native(), 2)).unwrap();
+    let srv =
+        WireServer::start(svc.handle(), "127.0.0.1:0", WireConfig::default()).unwrap();
+    let addr = srv.local_addr().to_string();
+
+    // in-process baseline: the same service, no transport
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xB135 + c as u64);
+            let mut lats = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                let t = Instant::now();
+                h.dispatch(Plan::new(Op::Add22, planes).unwrap())
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> =
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rows.push(WireRow {
+        path: "in-process",
+        clients,
+        req_n,
+        rounds,
+        req_per_s: (clients * rounds) as f64 / wall,
+        p50_ms: percentile(&lats, 0.50) * 1e3,
+        p95_ms: percentile(&lats, 0.95) * 1e3,
+        completed: (clients * rounds) as u64,
+        overloaded: 0,
+    });
+
+    // the same workload through the TCP front end on loopback
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let tenant = format!("bench-{c}");
+            let mut cli =
+                WireClient::connect(&addr, &tenant, ClientClass::Standard).unwrap();
+            cli.set_io_timeout(Some(Duration::from_secs(30))).unwrap();
+            let mut rng = Rng::new(0xC135 + c as u64);
+            let mut lats = Vec::with_capacity(rounds);
+            for _ in 0..rounds {
+                let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                let t = Instant::now();
+                cli.call(Op::Add22, planes, None).unwrap();
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> =
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rows.push(WireRow {
+        path: "wire-loopback",
+        clients,
+        req_n,
+        rounds,
+        req_per_s: (clients * rounds) as f64 / wall,
+        p50_ms: percentile(&lats, 0.50) * 1e3,
+        p95_ms: percentile(&lats, 0.95) * 1e3,
+        completed: (clients * rounds) as u64,
+        overloaded: 0,
+    });
+    srv.shutdown();
+    drop(svc);
+
+    // pushback under overload: one bulk client far past a tightened
+    // bucket — denials must appear and admitted work must still finish
+    let svc = Service::start(ServiceSpec::uniform(BackendSpec::native(), 2)).unwrap();
+    let admission = AdmissionConfig::default().with_limits(
+        ClientClass::Bulk,
+        ClassLimits {
+            lanes_per_sec: 50_000.0,
+            burst_lanes: 100_000.0,
+            max_inflight_bytes: 64 << 20,
+        },
+    );
+    let srv = WireServer::start(
+        svc.handle(),
+        "127.0.0.1:0",
+        WireConfig { admission, ..WireConfig::default() },
+    )
+    .unwrap();
+    let addr = srv.local_addr().to_string();
+    let (hog_rounds, hog_n) = (40usize, 16_384usize);
+    let mut cli = WireClient::connect(&addr, "bench-hog", ClientClass::Bulk).unwrap();
+    cli.set_io_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut rng = Rng::new(0xD135);
+    let (mut done, mut pushed) = (0u64, 0u64);
+    let mut lats = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..hog_rounds {
+        let planes = workload::planes_for("add22", hog_n, rng.next_u64());
+        let t = Instant::now();
+        match cli.call(Op::Add22, planes, None) {
+            Ok(_) => {
+                done += 1;
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            Err(WireError::Overloaded { .. }) => pushed += 1,
+            Err(e) => panic!("wire bench hog: {e}"),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    rows.push(WireRow {
+        path: "wire-overload",
+        clients: 1,
+        req_n: hog_n,
+        rounds: hog_rounds,
+        req_per_s: hog_rounds as f64 / wall,
+        p50_ms: percentile(&lats, 0.50) * 1e3,
+        p95_ms: percentile(&lats, 0.95) * 1e3,
+        completed: done,
+        overloaded: pushed,
+    });
+    assert!(pushed > 0, "over-quota bulk client must be pushed back");
+    assert!(done > 0, "pushback must shape the hog, not starve it");
+    srv.shutdown();
+    drop(svc);
+
+    for r in &rows {
+        println!(
+            "  {:<14} {} clients x {:>6} elems x {:>3}: {:>7.0} verdicts/s  \
+             p50={:.2}ms p95={:.2}ms  completed={} overloaded={}",
+            r.path, r.clients, r.req_n, r.rounds, r.req_per_s, r.p50_ms, r.p95_ms,
+            r.completed, r.overloaded,
+        );
     }
     rows
 }
@@ -763,5 +965,8 @@ fn main() {
     // the live accuracy surface: Table 2/5 as a continuous experiment
     let accuracy = observatory_rows();
 
-    emit_json(&rows, &tiers, &accuracy);
+    // the TCP serving surface: loopback overhead and pushback
+    let wire = wire_rows();
+
+    emit_json(&rows, &tiers, &accuracy, &wire);
 }

@@ -5,6 +5,15 @@
 //! service is shutting down" nor use `?` against `std::error::Error`
 //! consumers. Every layer above the kernels — backends, batcher,
 //! coordinator, handles — now speaks this enum.
+//!
+//! For the wire front end ([`crate::net`]) every variant additionally
+//! carries a **stable numeric code** ([`ServiceError::to_code`]):
+//! error frames ship `(code, display message)` and
+//! [`ServiceError::from_code`] reconstructs the typed error on the
+//! client side — structured payloads (op, plane counts) are recovered
+//! by parsing the canonical `Display` grammar, which is part of the
+//! wire contract and pinned by the round-trip tests below. Codes are
+//! append-only: never renumber, never reuse.
 
 use super::op::Op;
 use std::error::Error;
@@ -43,6 +52,102 @@ pub enum ServiceError {
     /// Substrate failure: PJRT compile/execute error, stream-VM fault,
     /// worker-pool failure, missing artifacts directory, ...
     Backend(String),
+}
+
+impl ServiceError {
+    /// Stable wire code of this variant (1-based; 0 is reserved for
+    /// protocol-level errors that are not `ServiceError`s). Codes are
+    /// append-only across releases so old clients keep decoding new
+    /// servers' errors.
+    pub fn to_code(&self) -> u16 {
+        match self {
+            ServiceError::QueueClosed => 1,
+            ServiceError::UnknownOp(_) => 2,
+            ServiceError::Arity { .. } => 3,
+            ServiceError::RaggedPlanes { .. } => 4,
+            ServiceError::EmptyBatch { .. } => 5,
+            ServiceError::Shape(_) => 6,
+            ServiceError::Unsupported { .. } => 7,
+            ServiceError::Cancelled => 8,
+            ServiceError::DeadlineExceeded => 9,
+            ServiceError::Backend(_) => 10,
+        }
+    }
+
+    /// Reconstruct the typed error from a wire `(code, message)` pair.
+    /// The message is the canonical [`fmt::Display`] rendering;
+    /// structured variants are re-parsed from it, so
+    /// `from_code(e.to_code(), &e.to_string()) == Some(e)` for every
+    /// error the server can emit (pinned exhaustively below). Returns
+    /// `None` for unknown codes or a message that does not match the
+    /// variant's grammar — callers should degrade to
+    /// [`ServiceError::Backend`] with the raw message rather than drop
+    /// the error.
+    pub fn from_code(code: u16, message: &str) -> Option<ServiceError> {
+        // shared helpers over the Display grammar
+        let quoted = |s: &str| -> Option<(String, &str)> {
+            // first '...'-quoted span; returns (content, rest-after)
+            let start = s.find('\'')? + 1;
+            let end = start + s[start..].find('\'')?;
+            Some((s[start..end].to_string(), &s[end + 1..]))
+        };
+        let num = |s: &str| -> Option<usize> {
+            let digits: String =
+                s.chars().skip_while(|c| !c.is_ascii_digit()).take_while(char::is_ascii_digit).collect();
+            digits.parse().ok()
+        };
+        match code {
+            1 => Some(ServiceError::QueueClosed),
+            2 => quoted(message).map(|(op, _)| ServiceError::UnknownOp(op)),
+            3 => {
+                // "op 'x' wants W input planes, got G"
+                let (opname, rest) = quoted(message)?;
+                let op = Op::parse(&opname).ok()?;
+                let (want_part, got_part) = rest.split_once(", got")?;
+                Some(ServiceError::Arity { op, want: num(want_part)?, got: num(got_part)? })
+            }
+            4 => {
+                // "op 'x': input plane P has length G, expected W (ragged planes)"
+                let (opname, rest) = quoted(message)?;
+                let op = Op::parse(&opname).ok()?;
+                let (plane_part, rest) = rest.split_once(" has length ")?;
+                let (got_part, want_part) = rest.split_once(", expected ")?;
+                Some(ServiceError::RaggedPlanes {
+                    op,
+                    plane: num(plane_part)?,
+                    want: num(want_part)?,
+                    got: num(got_part)?,
+                })
+            }
+            5 => {
+                let (opname, _) = quoted(message)?;
+                Some(ServiceError::EmptyBatch { op: Op::parse(&opname).ok()? })
+            }
+            6 => Some(ServiceError::Shape(
+                message.strip_prefix("bad shape: ").unwrap_or(message).to_string(),
+            )),
+            7 => {
+                // "backend 'b' does not serve op 'x'"; the backend name
+                // must map back to a &'static str — the known substrate
+                // labels do, anything else decodes as "remote"
+                let (backend, rest) = quoted(message)?;
+                let backend: &'static str = match backend.as_str() {
+                    "native" => "native",
+                    "gpusim" => "gpusim",
+                    "xla" => "xla",
+                    _ => "remote",
+                };
+                let (opname, _) = quoted(rest)?;
+                Some(ServiceError::Unsupported { backend, op: Op::parse(&opname).ok()? })
+            }
+            8 => Some(ServiceError::Cancelled),
+            9 => Some(ServiceError::DeadlineExceeded),
+            10 => Some(ServiceError::Backend(
+                message.strip_prefix("backend failure: ").unwrap_or(message).to_string(),
+            )),
+            _ => None,
+        }
+    }
 }
 
 impl fmt::Display for ServiceError {
@@ -114,5 +219,99 @@ mod tests {
         takes_err(&ServiceError::QueueClosed);
         let boxed: Box<dyn Error> = Box::new(ServiceError::UnknownOp("x".into()));
         assert!(boxed.to_string().contains("unknown op"));
+    }
+
+    /// One representative per variant, every field populated with
+    /// non-default values so a lossy decode cannot hide.
+    fn wire_representatives() -> Vec<ServiceError> {
+        vec![
+            ServiceError::QueueClosed,
+            ServiceError::UnknownOp("frob".into()),
+            ServiceError::Arity { op: Op::Mad22, want: 6, got: 2 },
+            ServiceError::RaggedPlanes { op: Op::Div22, plane: 3, want: 4096, got: 17 },
+            ServiceError::EmptyBatch { op: Op::Split },
+            ServiceError::Shape("output plane 1 has 5 lanes, want 9".into()),
+            ServiceError::Unsupported { backend: "xla", op: Op::Mul22 },
+            ServiceError::Cancelled,
+            ServiceError::DeadlineExceeded,
+            ServiceError::Backend("pjrt died: exit 3".into()),
+        ]
+    }
+
+    #[test]
+    fn wire_codes_are_stable_and_unique() {
+        // the numbers themselves are the contract: renumbering breaks
+        // every deployed client, so they are pinned here literally
+        let expect: Vec<(u16, ServiceError)> = vec![
+            (1, ServiceError::QueueClosed),
+            (2, ServiceError::UnknownOp(String::new())),
+            (3, ServiceError::Arity { op: Op::Add, want: 0, got: 0 }),
+            (4, ServiceError::RaggedPlanes { op: Op::Add, plane: 0, want: 0, got: 0 }),
+            (5, ServiceError::EmptyBatch { op: Op::Add }),
+            (6, ServiceError::Shape(String::new())),
+            (7, ServiceError::Unsupported { backend: "native", op: Op::Add }),
+            (8, ServiceError::Cancelled),
+            (9, ServiceError::DeadlineExceeded),
+            (10, ServiceError::Backend(String::new())),
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for (code, e) in expect {
+            assert_eq!(e.to_code(), code, "{e:?}");
+            assert!(seen.insert(code), "code {code} reused");
+        }
+    }
+
+    #[test]
+    fn from_code_round_trips_every_variant() {
+        for e in wire_representatives() {
+            let decoded = ServiceError::from_code(e.to_code(), &e.to_string());
+            assert_eq!(decoded, Some(e.clone()), "via code {} / '{}'", e.to_code(), e);
+        }
+    }
+
+    #[test]
+    fn from_code_round_trips_every_op_in_structured_variants() {
+        // the structured decoders re-parse op names out of the Display
+        // grammar; sweep the whole catalogue so no op name (including
+        // the digit-bearing ones like add12/mul22) confuses the parsers
+        for op in Op::ALL {
+            let cases = vec![
+                ServiceError::Arity { op, want: op.n_in(), got: op.n_in() + 1 },
+                ServiceError::RaggedPlanes { op, plane: 1, want: 8, got: 9 },
+                ServiceError::EmptyBatch { op },
+                ServiceError::Unsupported { backend: "gpusim", op },
+            ];
+            for e in cases {
+                assert_eq!(
+                    ServiceError::from_code(e.to_code(), &e.to_string()),
+                    Some(e.clone()),
+                    "{e}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_code_rejects_unknown_codes() {
+        assert_eq!(ServiceError::from_code(0, "protocol error"), None);
+        assert_eq!(ServiceError::from_code(11, "future variant"), None);
+        assert_eq!(ServiceError::from_code(u16::MAX, ""), None);
+    }
+
+    #[test]
+    fn from_code_rejects_garbled_structured_messages() {
+        // a structured code with a message that doesn't match the
+        // grammar must fail typed (None), never panic or fabricate
+        for code in [3u16, 4, 5, 7] {
+            assert_eq!(ServiceError::from_code(code, ""), None, "code {code}");
+            assert_eq!(ServiceError::from_code(code, "op 'nosuch' mangled"), None);
+        }
+    }
+
+    #[test]
+    fn unknown_backend_label_decodes_as_remote() {
+        let e = ServiceError::Unsupported { backend: "remote", op: Op::Add22 };
+        let weird = "backend 'fpga-farm-7' does not serve op 'add22'";
+        assert_eq!(ServiceError::from_code(7, weird), Some(e));
     }
 }

@@ -124,6 +124,71 @@ impl Metrics {
     }
 }
 
+/// Per-tenant dispatch attribution: how much work each tenant pushed
+/// through a [`crate::coordinator::Handle`], and how often the serving
+/// surface pushed back.
+///
+/// Written by [`crate::coordinator::Handle::dispatch_tagged`] and by
+/// the wire front end's admission/shed rejections
+/// ([`crate::net::WireServer`]); snapshotted by
+/// [`crate::coordinator::Service::tenant_metrics`] and shipped in the
+/// wire `Status` frame. One `Mutex`-guarded map: tenant attribution is
+/// off the per-shard hot path (it ticks once per dispatch, not per
+/// lane), so a lock is fine where the routing telemetry needed
+/// atomics.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Requests this tenant dispatched into the shard set.
+    pub requests: u64,
+    /// Total lanes across those requests.
+    pub lanes: u64,
+    /// Requests rejected by telemetry-driven load shedding.
+    pub shed: u64,
+    /// Requests rejected by token-bucket admission (rate or in-flight
+    /// byte budget).
+    pub denied: u64,
+}
+
+/// The ledger of [`TenantCounters`] per tenant name.
+#[derive(Debug, Default)]
+pub struct TenantLedger {
+    tenants: Mutex<std::collections::BTreeMap<String, TenantCounters>>,
+}
+
+impl TenantLedger {
+    pub fn new() -> TenantLedger {
+        TenantLedger::default()
+    }
+
+    fn with<F: FnOnce(&mut TenantCounters)>(&self, tenant: &str, f: F) {
+        let mut g = self.tenants.lock().unwrap();
+        f(g.entry(tenant.to_string()).or_default());
+    }
+
+    /// One request of `lanes` lanes dispatched for `tenant`.
+    pub fn record_dispatch(&self, tenant: &str, lanes: u64) {
+        self.with(tenant, |c| {
+            c.requests += 1;
+            c.lanes += lanes;
+        });
+    }
+
+    /// One request rejected by load shedding.
+    pub fn record_shed(&self, tenant: &str) {
+        self.with(tenant, |c| c.shed += 1);
+    }
+
+    /// One request rejected by token-bucket admission.
+    pub fn record_denied(&self, tenant: &str) {
+        self.with(tenant, |c| c.denied += 1);
+    }
+
+    /// Point-in-time copy of every tenant's counters.
+    pub fn snapshot(&self) -> std::collections::BTreeMap<String, TenantCounters> {
+        self.tenants.lock().unwrap().clone()
+    }
+}
+
 impl Snapshot {
     /// Fraction of launched lanes that were padding.
     pub fn padding_fraction(&self) -> f64 {
@@ -677,5 +742,23 @@ mod tests {
         assert_eq!(c.non_finite(), 0);
         c.record(&diff(0, 0.0, 0.0, 0.0, 0.0), None);
         assert_eq!(c.worst().unwrap().ulp, -2.5);
+    }
+
+    #[test]
+    fn tenant_ledger_attributes_per_tenant() {
+        let l = TenantLedger::new();
+        l.record_dispatch("alice", 4096);
+        l.record_dispatch("alice", 1024);
+        l.record_dispatch("bob", 512);
+        l.record_shed("bob");
+        l.record_denied("carol");
+        let snap = l.snapshot();
+        assert_eq!(
+            snap["alice"],
+            TenantCounters { requests: 2, lanes: 5120, shed: 0, denied: 0 }
+        );
+        assert_eq!(snap["bob"], TenantCounters { requests: 1, lanes: 512, shed: 1, denied: 0 });
+        assert_eq!(snap["carol"], TenantCounters { requests: 0, lanes: 0, shed: 0, denied: 1 });
+        assert_eq!(snap.len(), 3);
     }
 }

@@ -76,6 +76,7 @@ pub mod routing;
 pub mod service;
 
 pub use crate::backend::Op;
+pub use metrics::{TenantCounters, TenantLedger};
 pub use observatory::{
     AccuracyReport, MirrorReport, ModelDiff, ModelReport, ObservatorySpec,
     OpAccuracyRow, TicketSet,

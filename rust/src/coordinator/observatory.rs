@@ -612,6 +612,12 @@ pub struct AccuracyReport {
     pub dropped_requests: u64,
     /// Observatory-side execute failures.
     pub observatory_errors: u64,
+    /// Serving-plane shard tiers `(label, kernel tier)` in shard
+    /// order, filled by [`crate::coordinator::Service::accuracy_report`]
+    /// so rendered reports state which CPU kernel tier produced the
+    /// traffic the observatory mirrored (`None` on substrates without
+    /// tiers — gpusim, XLA).
+    pub serving_tiers: Vec<(String, Option<crate::backend::KernelTier>)>,
 }
 
 impl AccuracyReport {
@@ -632,6 +638,7 @@ impl AccuracyReport {
             mirrored_lanes: ctl.mirrored_lanes.load(Ordering::Relaxed),
             dropped_requests: ctl.dropped_requests.load(Ordering::Relaxed),
             observatory_errors: ctl.errors.load(Ordering::Relaxed),
+            serving_tiers: Vec::new(),
         }
     }
 
@@ -654,13 +661,27 @@ impl AccuracyReport {
     }
 
     fn footer(&self) -> String {
-        format!(
+        let mut out = format!(
             "mirrored: {} requests / {} lanes  dropped: {}  observatory errors: {}\n",
             self.mirrored_requests,
             self.mirrored_lanes,
             self.dropped_requests,
             self.observatory_errors
-        )
+        );
+        if !self.serving_tiers.is_empty() {
+            out.push_str("serving tiers: ");
+            for (i, (label, tier)) in self.serving_tiers.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                match tier {
+                    Some(t) => out.push_str(&format!("{}={}", label, t.name())),
+                    None => out.push_str(&format!("{}=-", label)),
+                }
+            }
+            out.push('\n');
+        }
+        out
     }
 
     /// Render the live Table-2 analogue: per-(model, op) ulp-error

@@ -212,6 +212,31 @@ impl<'a> TelemetryView<'a> {
     pub fn attempts(&self, shard: usize, op: Op) -> u64 {
         self.shards[shard].telemetry().attempts(op)
     }
+
+    /// Estimated seconds until a request of `op` enqueued on `shard`
+    /// **now** would complete: `(queue_depth + 1) ×` the measured
+    /// per-group latency EWMA — every request ahead of it plus its own
+    /// group. `None` while the (shard, op) cell is cold (no executed
+    /// group yet), which callers must treat as "admit": a cold shard
+    /// cannot justify shedding.
+    ///
+    /// This is the load-shedding input the wire front end reads
+    /// ([`crate::net::ShedPolicy`]): shed when the best achievable
+    /// estimate exceeds the request's declared deadline.
+    pub fn estimated_wait(&self, shard: usize, op: Op) -> Option<f64> {
+        let lat = self.measured_latency(shard, op)?;
+        Some((self.queue_depth(shard) + 1) as f64 * lat)
+    }
+
+    /// Minimum [`TelemetryView::estimated_wait`] across the shards
+    /// that serve `op`. `None` when every capable shard is cold — the
+    /// service has no measured basis to refuse work on.
+    pub fn best_estimated_wait(&self, op: Op) -> Option<f64> {
+        (0..self.len())
+            .filter(|&s| self.supports(s, op))
+            .filter_map(|s| self.estimated_wait(s, op))
+            .min_by(|a, b| a.total_cmp(b))
+    }
 }
 
 /// A shard-placement strategy. Implementations must be cheap — this

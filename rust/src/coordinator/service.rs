@@ -32,7 +32,7 @@
 //! arithmetic-model canary).
 
 use super::batcher;
-use super::metrics::{Metrics, Snapshot};
+use super::metrics::{Metrics, Snapshot, TenantCounters, TenantLedger};
 use super::observatory::{
     self, AccuracyReport, ObsLink, ObsMsg, ObservatorySpec, TicketSet,
 };
@@ -219,6 +219,7 @@ pub struct Service {
     joins: Vec<JoinHandle<()>>,
     obs: Option<ObsLink>,
     obs_join: Option<JoinHandle<()>>,
+    tenants: Arc<TenantLedger>,
 }
 
 /// Cheap cloneable submission handle; placement is delegated to the
@@ -229,6 +230,7 @@ pub struct Handle {
     meta: Arc<Vec<ShardMeta>>,
     policy: Arc<dyn RoutingPolicy>,
     obs: Option<ObsLink>,
+    tenants: Arc<TenantLedger>,
 }
 
 impl Handle {
@@ -275,6 +277,24 @@ impl Handle {
             o.send_mirror(op, planes, len, None);
         }
         Ok(ticket)
+    }
+
+    /// [`Handle::dispatch`] with **tenant attribution**: the dispatch
+    /// is recorded against `tenant` in the service's
+    /// [`TenantLedger`] before routing, so multi-tenant front ends
+    /// (the wire server tags each connection's tenant here) can
+    /// account per-client traffic without wrapping the handle.
+    pub fn dispatch_tagged(&self, tenant: &str, plan: Plan) -> Result<Ticket, ServiceError> {
+        self.tenants.record_dispatch(tenant, plan.len() as u64);
+        self.dispatch(plan)
+    }
+
+    /// The per-tenant attribution ledger (shared with the service).
+    /// Front ends record their admission/shed rejections here so
+    /// [`Service::tenant_metrics`] reconciles accepted vs pushed-back
+    /// traffic per tenant.
+    pub fn tenant_ledger(&self) -> &TenantLedger {
+        &self.tenants
     }
 
     /// [`Handle::dispatch`], with the mirror **forced** (regardless of
@@ -404,7 +424,8 @@ impl Service {
             }
             None => (None, None),
         };
-        Ok(Service { txs, meta, policy, metrics, live, joins, obs, obs_join })
+        let tenants = Arc::new(TenantLedger::new());
+        Ok(Service { txs, meta, policy, metrics, live, joins, obs, obs_join, tenants })
     }
 
     pub fn handle(&self) -> Handle {
@@ -413,6 +434,7 @@ impl Service {
             meta: self.meta.clone(),
             policy: self.policy.clone(),
             obs: self.obs.clone(),
+            tenants: self.tenants.clone(),
         }
     }
 
@@ -482,7 +504,21 @@ impl Service {
             // whatever was already recorded
             let _ = rx.recv();
         }
-        Some(AccuracyReport::collect(&obs.ctl))
+        let mut rep = AccuracyReport::collect(&obs.ctl);
+        rep.serving_tiers = self
+            .meta
+            .iter()
+            .map(|m| (m.label().to_string(), m.kernel_tier()))
+            .collect();
+        Some(rep)
+    }
+
+    /// Per-tenant dispatch attribution recorded by the wire front end
+    /// (and anything else that routes through
+    /// [`Handle::dispatch_tagged`]). Empty until a tagged dispatch or
+    /// shed/denial is recorded.
+    pub fn tenant_metrics(&self) -> std::collections::BTreeMap<String, TenantCounters> {
+        self.tenants.snapshot()
     }
 
     /// Name of the active routing policy.

@@ -1,9 +1,13 @@
-//! Minimal JSON parser — substrate for reading `artifacts/manifest.json`.
+//! Minimal JSON parser and emitter — substrate for reading
+//! `artifacts/manifest.json` and for the wire protocol's control
+//! frames ([`crate::net`]).
 //!
 //! The image vendors no serde/serde_json, so this is a small, strict
 //! recursive-descent parser covering the JSON the AOT pipeline emits
-//! (objects, arrays, strings with escapes, numbers, bools, null). Not a
-//! general-purpose library: no trailing commas, no comments, UTF-8 only.
+//! (objects, arrays, strings with escapes, numbers, bools, null), plus
+//! a matching [`Value::render`] emitter (`parse(v.render()) == v` for
+//! every finite value). Not a general-purpose library: no trailing
+//! commas, no comments, UTF-8 only.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -51,6 +55,91 @@ impl Value {
             _ => None,
         }
     }
+
+    /// Integer accessor for wire fields carried as JSON numbers (ids,
+    /// counts, millisecond budgets). Exact for |n| < 2^53, which covers
+    /// every field the protocol defines.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    /// Emit this value as a compact JSON document such that
+    /// `parse(&v.render()) == v` for every finite value. Non-finite
+    /// numbers (which JSON cannot represent) render as `null`; integral
+    /// numbers within the exactly-representable range render without a
+    /// fractional part, so `u64` wire fields round-trip through
+    /// [`Value::as_u64`].
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Value::Null => out.push_str("null"),
+            Value::Bool(true) => out.push_str("true"),
+            Value::Bool(false) => out.push_str("false"),
+            Value::Number(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Value::String(s) => escape_into(s, out),
+            Value::Array(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Value::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn escape_into(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Build an object value from key/value pairs — the emitter-side
+/// convenience the wire codecs use (`BTreeMap` construction inline is
+/// noisy).
+pub fn obj(pairs: Vec<(&str, Value)>) -> Value {
+    Value::Object(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
 /// Parse error with byte offset.
@@ -319,5 +408,50 @@ mod tests {
         let e = parse("[1, x]").unwrap_err();
         assert_eq!(e.offset, 4);
         assert!(e.to_string().contains("byte 4"));
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let docs = [
+            "null",
+            "true",
+            "[1,2.5,-3]",
+            r#"{"a":[{"b":"c"},null],"d":false}"#,
+            r#""quote \" backslash \\ newline \n tab \t""#,
+            r#"{"id":9007199254740992}"#,
+            r#""héllo ∞""#,
+        ];
+        for doc in docs {
+            let v = parse(doc).unwrap();
+            assert_eq!(parse(&v.render()).unwrap(), v, "doc: {doc}");
+        }
+    }
+
+    #[test]
+    fn render_integers_without_fraction() {
+        let v = obj(vec![("id", Value::Number(12345.0))]);
+        assert_eq!(v.render(), r#"{"id":12345}"#);
+        assert_eq!(parse(&v.render()).unwrap().get("id").unwrap().as_u64(), Some(12345));
+    }
+
+    #[test]
+    fn render_control_chars_escaped() {
+        let v = Value::String("a\u{1}b".into());
+        assert_eq!(v.render(), "\"a\\u0001b\"");
+        assert_eq!(parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn render_non_finite_as_null() {
+        assert_eq!(Value::Number(f64::NAN).render(), "null");
+        assert_eq!(Value::Number(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn as_u64_rejects_non_integers() {
+        assert_eq!(Value::Number(1.5).as_u64(), None);
+        assert_eq!(Value::Number(-1.0).as_u64(), None);
+        assert_eq!(Value::Number(42.0).as_u64(), Some(42));
+        assert_eq!(Value::String("42".into()).as_u64(), None);
     }
 }

@@ -55,6 +55,18 @@
 //!   plus simulated GPU models, diffing replies lane-by-lane in ulps —
 //!   the paper's Tables 2 and 5 as a continuous experiment
 //!   ([`coordinator::Service::accuracy_report`]);
+//! * [`net`] — the **wire front end**: a std-only, length-prefixed
+//!   binary protocol over TCP ([`net::frame`]) serving the coordinator
+//!   to out-of-process clients; [`net::WireServer`] owns a
+//!   [`coordinator::Handle`], admits work through per-client
+//!   token-bucket budgets ([`net::admission`], keyed by
+//!   [`net::ClientClass`]), sheds load from the live telemetry plane
+//!   ([`net::shed`] — an `Overloaded { retry_after_ms }` frame when
+//!   measured queue-depth × per-op latency already exceeds the
+//!   declared deadline), and drains connections round-robin so one hot
+//!   client cannot starve the fuse window; [`net::WireClient`] is the
+//!   matching blocking client with the Ticket-style dispatch/wait
+//!   surface;
 //! * [`harness`] — workload generators and table emitters that regenerate
 //!   every table of the paper's evaluation section, plus the
 //!   substrate-neutral [`harness::timing::backend_grid`].
@@ -70,5 +82,6 @@ pub mod gpusim;
 pub mod harness;
 pub mod json;
 pub mod mp;
+pub mod net;
 pub mod runtime;
 pub mod util;

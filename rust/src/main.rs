@@ -31,6 +31,11 @@
 //! `--observe F` mirrors fraction F of the demo traffic through the
 //! accuracy observatory (`--observe-models nv35,r300,chopped`) and
 //! prints the live Table-2/Table-5 accuracy report at the end.
+//! `--listen ADDR` (default: the `FFGPU_LISTEN` env var) additionally
+//! serves the coordinator over TCP through the wire front end
+//! ([`ffgpu::net`]) while the demo runs, and `--serve-secs N` keeps
+//! the listener up N seconds after the demo workload finishes so
+//! out-of-process clients (`examples/wire_demo.rs`) can connect.
 //!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
@@ -79,6 +84,17 @@ fn main() {
         }
     };
     let chunk_flag: Option<usize> = get_flag("--chunk-elems", String::new()).parse().ok();
+    // --listen arms the TCP wire front end beside serve-demo; the
+    // FFGPU_LISTEN env var is the no-flag default so harnesses can arm
+    // it without touching the argv
+    let listen_flag =
+        get_flag("--listen", std::env::var("FFGPU_LISTEN").unwrap_or_default());
+    let serve_secs: u64 = get_flag(
+        "--serve-secs",
+        std::env::var("FFGPU_SERVE_SECS").unwrap_or_default(),
+    )
+    .parse()
+    .unwrap_or(0);
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -90,7 +106,7 @@ fn main() {
         "serve-demo" => cmd_serve_demo(
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
             deadline_ms, fuse_window_ms, workers_flag, tier_flag, chunk_flag,
-            &observe_flag, &observe_models,
+            &observe_flag, &observe_models, &listen_flag, serve_secs,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -168,6 +184,14 @@ SHARD SETS (serve-demo):
   --observe-models M1,M2              GPU models the observatory diffs
                                       against (default nv35,r300,chopped;
                                       also: ieee-rn, nv40)
+  --listen ADDR                       serve the coordinator over TCP on
+                                      ADDR (e.g. 127.0.0.1:7070) through
+                                      the wire front end while the demo
+                                      runs (default: FFGPU_LISTEN)
+  --serve-secs N                      keep the TCP listener up N seconds
+                                      after the demo workload, for
+                                      out-of-process wire clients
+                                      (default: FFGPU_SERVE_SECS)
 ";
 
 fn cmd_info(artifacts: &Path) -> i32 {
@@ -379,6 +403,7 @@ fn cmd_serve_demo(
     routing_flag: &str, deadline_ms: u64, fuse_window_ms: u64,
     workers_flag: Option<usize>, tier_flag: Option<KernelTier>,
     chunk_flag: Option<usize>, observe_flag: &str, observe_models: &str,
+    listen: &str, serve_secs: u64,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -476,6 +501,25 @@ fn cmd_serve_demo(
         })
         .collect();
     println!("kernel tiers: [{}]", tier_cells.join(", "));
+    // --listen: serve the same coordinator over TCP while the demo runs
+    let wire = if listen.is_empty() {
+        None
+    } else {
+        match ffgpu::net::WireServer::start(
+            svc.handle(),
+            listen,
+            ffgpu::net::WireConfig::default(),
+        ) {
+            Ok(srv) => {
+                println!("wire front end listening on {}", srv.local_addr());
+                Some(srv)
+            }
+            Err(e) => {
+                eprintln!("wire listen {listen}: {e}");
+                return 1;
+            }
+        }
+    };
     // mixed-op workload over the whole catalogue, dispatched through
     // the typed Plan API; the gpusim soft-float VM is orders of
     // magnitude slower than native, so shrink batches when it serves —
@@ -556,6 +600,24 @@ fn cmd_serve_demo(
     if let Some(rep) = svc.accuracy_report() {
         print!("\n{}", rep.render_table2_live());
         print!("\n{}", rep.render_table5_live());
+    }
+    if let Some(srv) = wire {
+        if serve_secs > 0 {
+            println!("serving on {} for {serve_secs}s ...", srv.local_addr());
+            std::thread::sleep(std::time::Duration::from_secs(serve_secs));
+        }
+        srv.shutdown();
+        // per-tenant attribution of whatever arrived over the wire
+        let tenants = svc.tenant_metrics();
+        if !tenants.is_empty() {
+            println!("wire tenants:");
+            for (tenant, c) in &tenants {
+                println!(
+                    "  {tenant}: requests={} lanes={} shed={} denied={}",
+                    c.requests, c.lanes, c.shed, c.denied
+                );
+            }
+        }
     }
     0
 }

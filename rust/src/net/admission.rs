@@ -1,0 +1,317 @@
+//! Per-client admission control: token-bucket lane budgets plus an
+//! in-flight-bytes cap, keyed by [`ClientClass`].
+//!
+//! The unit of cost is the **lane** (one element of one SoA plane set)
+//! because that is what actually consumes kernel time downstream —
+//! request *count* is nearly free once fusion packs small requests
+//! into shared launches, but lanes are conserved. Each connection owns
+//! one [`Admission`] built from its class's [`ClassLimits`]: a
+//! [`TokenBucket`] refilled at `lanes_per_sec` with `burst_lanes`
+//! capacity, and a `max_inflight_bytes` budget released as replies
+//! drain. Denials are advisory — the server answers with an
+//! `Overloaded { retry_after_ms }` frame and the connection stays
+//! healthy.
+//!
+//! Time is injected (`Instant` parameters) so the maths is testable
+//! without sleeping.
+
+use std::time::{Duration, Instant};
+
+/// Admission class a client declares in its hello. Classes are a
+/// **contract shape**, not a priority bit: each maps to its own
+/// [`ClassLimits`] row in the server's [`AdmissionConfig`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ClientClass {
+    /// Small, latency-sensitive requests (dashboards, probes).
+    Interactive,
+    /// The default contract for ordinary clients.
+    Standard,
+    /// Throughput clients that tolerate backoff (bulk loaders).
+    Bulk,
+}
+
+impl ClientClass {
+    pub const ALL: [ClientClass; 3] =
+        [ClientClass::Interactive, ClientClass::Standard, ClientClass::Bulk];
+
+    /// Stable wire/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ClientClass::Interactive => "interactive",
+            ClientClass::Standard => "standard",
+            ClientClass::Bulk => "bulk",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ClientClass> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Some(ClientClass::Interactive),
+            "standard" => Some(ClientClass::Standard),
+            "bulk" => Some(ClientClass::Bulk),
+            _ => None,
+        }
+    }
+}
+
+/// The budget one class grants each connection.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassLimits {
+    /// Sustained lane rate the bucket refills at.
+    pub lanes_per_sec: f64,
+    /// Bucket capacity — the largest burst admitted from a full bucket.
+    pub burst_lanes: f64,
+    /// Cap on bytes of submitted-but-unanswered payload.
+    pub max_inflight_bytes: usize,
+}
+
+/// Per-class limits table. The defaults are sized for the demo and CI
+/// loopback scale: `Standard` never trips under a well-behaved client,
+/// while `Bulk` is deliberately tight enough that a hot loop of large
+/// submits hits the bucket within a few requests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    interactive: ClassLimits,
+    standard: ClassLimits,
+    bulk: ClassLimits,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            interactive: ClassLimits {
+                lanes_per_sec: 50_000_000.0,
+                burst_lanes: 8_000_000.0,
+                max_inflight_bytes: 64 << 20,
+            },
+            standard: ClassLimits {
+                lanes_per_sec: 20_000_000.0,
+                burst_lanes: 4_000_000.0,
+                max_inflight_bytes: 64 << 20,
+            },
+            bulk: ClassLimits {
+                lanes_per_sec: 500_000.0,
+                burst_lanes: 1_000_000.0,
+                max_inflight_bytes: 16 << 20,
+            },
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// The limits row for `class`.
+    pub fn limits(&self, class: ClientClass) -> &ClassLimits {
+        match class {
+            ClientClass::Interactive => &self.interactive,
+            ClientClass::Standard => &self.standard,
+            ClientClass::Bulk => &self.bulk,
+        }
+    }
+
+    /// Builder-style override of one class's row.
+    pub fn with_limits(mut self, class: ClientClass, limits: ClassLimits) -> AdmissionConfig {
+        match class {
+            ClientClass::Interactive => self.interactive = limits,
+            ClientClass::Standard => self.standard = limits,
+            ClientClass::Bulk => self.bulk = limits,
+        }
+        self
+    }
+}
+
+/// A classic token bucket over fractional tokens, refilled lazily on
+/// each take.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    capacity: f64,
+    refill_per_sec: f64,
+    tokens: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full.
+    pub fn new(capacity: f64, refill_per_sec: f64, now: Instant) -> TokenBucket {
+        TokenBucket {
+            capacity: capacity.max(1.0),
+            refill_per_sec: refill_per_sec.max(1e-6),
+            tokens: capacity.max(1.0),
+            last: now,
+        }
+    }
+
+    fn refill(&mut self, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.refill_per_sec).min(self.capacity);
+    }
+
+    /// Take `cost` tokens, or report how long (ms, >= 1) until the
+    /// deficit refills. A cost above the bucket capacity is clamped to
+    /// it — a single giant request must remain admissible eventually,
+    /// it just drains the whole bucket when it goes.
+    pub fn try_take(&mut self, cost: f64, now: Instant) -> Result<(), u64> {
+        self.refill(now);
+        let cost = cost.clamp(0.0, self.capacity);
+        if self.tokens >= cost {
+            self.tokens -= cost;
+            return Ok(());
+        }
+        let deficit = cost - self.tokens;
+        let secs = deficit / self.refill_per_sec;
+        Err(((secs * 1000.0).ceil() as u64).max(1))
+    }
+
+    /// Tokens currently available (after refill to `now`).
+    pub fn available(&mut self, now: Instant) -> f64 {
+        self.refill(now);
+        self.tokens
+    }
+}
+
+/// One connection's live admission state.
+#[derive(Clone, Debug)]
+pub struct Admission {
+    bucket: TokenBucket,
+    max_inflight_bytes: usize,
+    inflight_bytes: usize,
+}
+
+impl Admission {
+    pub fn new(limits: &ClassLimits, now: Instant) -> Admission {
+        Admission {
+            bucket: TokenBucket::new(limits.burst_lanes, limits.lanes_per_sec, now),
+            max_inflight_bytes: limits.max_inflight_bytes,
+            inflight_bytes: 0,
+        }
+    }
+
+    /// Admit a submit of `lanes` lanes carrying `bytes` of payload, or
+    /// return the suggested backoff in milliseconds. The in-flight
+    /// budget is checked **before** the bucket so a denial there never
+    /// burns tokens.
+    pub fn admit(&mut self, lanes: u64, bytes: usize, now: Instant) -> Result<(), u64> {
+        if self.inflight_bytes.saturating_add(bytes) > self.max_inflight_bytes
+            && self.inflight_bytes > 0
+        {
+            // budget frees as replies drain, not on a clock — suggest
+            // a short poll rather than a computed horizon
+            return Err(INFLIGHT_RETRY_MS);
+        }
+        self.bucket.try_take(lanes as f64, now)?;
+        self.inflight_bytes = self.inflight_bytes.saturating_add(bytes);
+        Ok(())
+    }
+
+    /// Release payload bytes when their reply (or failure) is sent.
+    pub fn release(&mut self, bytes: usize) {
+        self.inflight_bytes = self.inflight_bytes.saturating_sub(bytes);
+    }
+
+    /// Bytes submitted but not yet answered.
+    pub fn inflight_bytes(&self) -> usize {
+        self.inflight_bytes
+    }
+}
+
+/// Backoff hint when the in-flight-bytes budget (not the rate bucket)
+/// is what denied the request.
+pub const INFLIGHT_RETRY_MS: u64 = 5;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn bucket_grants_burst_then_denies_with_backoff() {
+        let now = t0();
+        let mut b = TokenBucket::new(1000.0, 1000.0, now);
+        assert!(b.try_take(600.0, now).is_ok());
+        assert!(b.try_take(400.0, now).is_ok());
+        // bucket empty: the 500-lane deficit refills in 500 ms
+        let retry = b.try_take(500.0, now).unwrap_err();
+        assert_eq!(retry, 500);
+    }
+
+    #[test]
+    fn bucket_refills_over_time_and_caps_at_capacity() {
+        let now = t0();
+        let mut b = TokenBucket::new(1000.0, 1000.0, now);
+        assert!(b.try_take(1000.0, now).is_ok());
+        let later = now + Duration::from_millis(250);
+        assert!((b.available(later) - 250.0).abs() < 1.0);
+        let much_later = now + Duration::from_secs(60);
+        assert!((b.available(much_later) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oversized_cost_clamps_to_capacity() {
+        let now = t0();
+        let mut b = TokenBucket::new(100.0, 100.0, now);
+        // 10x the capacity still admits from a full bucket (draining it)
+        assert!(b.try_take(1000.0, now).is_ok());
+        assert!(b.available(now) < 1e-9);
+    }
+
+    #[test]
+    fn inflight_budget_denies_before_burning_tokens() {
+        let limits = ClassLimits {
+            lanes_per_sec: 1_000_000.0,
+            burst_lanes: 1_000_000.0,
+            max_inflight_bytes: 100,
+        };
+        let now = t0();
+        let mut a = Admission::new(&limits, now);
+        assert!(a.admit(10, 80, now).is_ok());
+        assert_eq!(a.inflight_bytes(), 80);
+        // second submit would blow the byte budget
+        assert_eq!(a.admit(10, 80, now).unwrap_err(), INFLIGHT_RETRY_MS);
+        // tokens were not consumed by the denial
+        assert!((a.bucket.available(now) - (1_000_000.0 - 10.0)).abs() < 1e-6);
+        a.release(80);
+        assert!(a.admit(10, 80, now).is_ok());
+    }
+
+    #[test]
+    fn single_oversize_submit_is_still_admissible() {
+        // a first submit larger than the whole budget must not deadlock
+        let limits = ClassLimits {
+            lanes_per_sec: 1000.0,
+            burst_lanes: 1000.0,
+            max_inflight_bytes: 100,
+        };
+        let now = t0();
+        let mut a = Admission::new(&limits, now);
+        assert!(a.admit(10, 500, now).is_ok());
+        assert_eq!(a.inflight_bytes(), 500);
+        // and everything behind it queues on the budget
+        assert!(a.admit(10, 1, now).is_err());
+        a.release(500);
+        assert!(a.admit(10, 1, now).is_ok());
+    }
+
+    #[test]
+    fn default_config_shapes_bulk_below_standard() {
+        let cfg = AdmissionConfig::default();
+        let bulk = cfg.limits(ClientClass::Bulk);
+        let std_ = cfg.limits(ClientClass::Standard);
+        assert!(bulk.lanes_per_sec < std_.lanes_per_sec);
+        assert!(bulk.burst_lanes < std_.burst_lanes);
+        let tightened = cfg
+            .clone()
+            .with_limits(ClientClass::Standard, *bulk);
+        assert_eq!(tightened.limits(ClientClass::Standard), bulk);
+    }
+
+    #[test]
+    fn class_names_round_trip() {
+        for c in ClientClass::ALL {
+            assert_eq!(ClientClass::parse(c.name()), Some(c));
+        }
+        assert_eq!(ClientClass::parse("STANDARD"), Some(ClientClass::Standard));
+        assert_eq!(ClientClass::parse("vip"), None);
+    }
+}

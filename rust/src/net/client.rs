@@ -1,0 +1,171 @@
+//! [`WireClient`]: the blocking client half of the wire protocol,
+//! mirroring the in-process `dispatch` / `wait` Ticket surface.
+//!
+//! `dispatch` writes a Submit and returns its correlation id
+//! immediately — pipeline as many as you like — and `wait(id)` blocks
+//! until *that* id resolves, stashing any other replies that arrive
+//! first (the server answers in completion order, not submit order).
+//! Server pushback surfaces as [`WireError::Overloaded`] (with the
+//! server's `retry_after_ms` hint) and typed failures as
+//! [`WireError::Remote`] carrying the reconstructed
+//! [`crate::backend::ServiceError`].
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::backend::Op;
+
+use super::admission::ClientClass;
+use super::frame::{
+    encode_frame, read_frame, ClientHello, ErrorFrame, Frame, FrameKind, OverloadedFrame,
+    Reply, ServerHello, Status, Submit, WireError,
+};
+
+/// One blocking connection to a [`super::WireServer`].
+pub struct WireClient {
+    stream: TcpStream,
+    hello: ServerHello,
+    next_id: u64,
+    /// Replies that arrived while waiting for a different id.
+    stash: BTreeMap<u64, Result<Vec<Vec<f32>>, WireError>>,
+}
+
+impl WireClient {
+    /// Connect, introduce ourselves as `tenant` under `class`, and
+    /// complete the hello handshake.
+    pub fn connect(addr: &str, tenant: &str, class: ClientClass) -> Result<WireClient, WireError> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let hello = ClientHello { tenant: tenant.to_string(), class };
+        stream.write_all(&encode_frame(FrameKind::ClientHello, &hello.encode()))?;
+        let frame = read_frame(&mut stream)?.ok_or(WireError::Truncated)?;
+        let hello = match frame.kind {
+            FrameKind::ServerHello => ServerHello::decode(&frame.payload)?,
+            FrameKind::Error => return Err(decode_error(&frame.payload)?),
+            k => {
+                return Err(WireError::BadPayload(format!(
+                    "expected ServerHello, got {k:?}"
+                )))
+            }
+        };
+        Ok(WireClient { stream, hello, next_id: 1, stash: BTreeMap::new() })
+    }
+
+    /// The server's hello: protocol version and shard set (labels +
+    /// kernel tiers).
+    pub fn server_hello(&self) -> &ServerHello {
+        &self.hello
+    }
+
+    /// Arm socket read/write timeouts — a safety net for callers that
+    /// submit without deadlines. `None` blocks forever (the default).
+    pub fn set_io_timeout(&self, timeout: Option<Duration>) -> Result<(), WireError> {
+        self.stream.set_read_timeout(timeout)?;
+        self.stream.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Send one submit; returns its correlation id without waiting.
+    pub fn dispatch(
+        &mut self,
+        op: Op,
+        planes: Vec<Vec<f32>>,
+        deadline_ms: Option<u64>,
+    ) -> Result<u64, WireError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let sub = Submit { id, op, deadline_ms, planes };
+        self.stream
+            .write_all(&encode_frame(FrameKind::Submit, &sub.encode()))?;
+        Ok(id)
+    }
+
+    /// Block until `id` resolves: output planes, a typed remote error,
+    /// or an overload verdict. Replies for other in-flight ids are
+    /// stashed for their own `wait` calls.
+    pub fn wait(&mut self, id: u64) -> Result<Vec<Vec<f32>>, WireError> {
+        loop {
+            if let Some(res) = self.stash.remove(&id) {
+                return res;
+            }
+            let frame = read_frame(&mut self.stream)?.ok_or(WireError::Truncated)?;
+            self.absorb(frame)?;
+        }
+    }
+
+    /// `dispatch` + `wait` in one call.
+    pub fn call(
+        &mut self,
+        op: Op,
+        planes: Vec<Vec<f32>>,
+        deadline_ms: Option<u64>,
+    ) -> Result<Vec<Vec<f32>>, WireError> {
+        let id = self.dispatch(op, planes, deadline_ms)?;
+        self.wait(id)
+    }
+
+    /// Fetch the server's live status snapshot (shard tiers, queue
+    /// depths, per-tenant counters). In-flight replies arriving first
+    /// are stashed, not lost.
+    pub fn status(&mut self) -> Result<Status, WireError> {
+        self.stream
+            .write_all(&encode_frame(FrameKind::StatusReq, &[]))?;
+        loop {
+            let frame = read_frame(&mut self.stream)?.ok_or(WireError::Truncated)?;
+            if frame.kind == FrameKind::Status {
+                return Status::decode(&frame.payload);
+            }
+            self.absorb(frame)?;
+        }
+    }
+
+    /// Fold one server frame into the stash. Connection-level errors
+    /// (`id == 0`) abort the caller directly.
+    fn absorb(&mut self, frame: Frame) -> Result<(), WireError> {
+        match frame.kind {
+            FrameKind::Reply => {
+                let r = Reply::decode(&frame.payload)?;
+                self.stash.insert(r.id, Ok(r.planes));
+                Ok(())
+            }
+            FrameKind::Overloaded => {
+                let o = OverloadedFrame::decode(&frame.payload)?;
+                self.stash.insert(
+                    o.id,
+                    Err(WireError::Overloaded { retry_after_ms: o.retry_after_ms }),
+                );
+                Ok(())
+            }
+            FrameKind::Error => {
+                let ef = ErrorFrame::decode(&frame.payload)?;
+                let id = ef.id;
+                let err = error_frame_to_wire(ef);
+                if id == 0 {
+                    Err(err)
+                } else {
+                    self.stash.insert(id, Err(err));
+                    Ok(())
+                }
+            }
+            // a stale status (from an aborted status() call) is noise
+            FrameKind::Status => Ok(()),
+            k => Err(WireError::BadPayload(format!(
+                "unexpected frame kind {k:?} from server"
+            ))),
+        }
+    }
+}
+
+fn error_frame_to_wire(ef: ErrorFrame) -> WireError {
+    match ef.to_service() {
+        Some(e) => WireError::Remote(e),
+        None => WireError::BadPayload(ef.message),
+    }
+}
+
+fn decode_error(payload: &[u8]) -> Result<WireError, WireError> {
+    let ef = ErrorFrame::decode(payload)?;
+    Ok(error_frame_to_wire(ef))
+}

@@ -1,0 +1,876 @@
+//! The wire framing layer: a std-only, length-prefixed binary protocol.
+//!
+//! Every frame is `magic(4) + version(1) + kind(1) + payload_len(4 LE)`
+//! followed by `payload_len` bytes of payload. Control payloads
+//! (hellos, errors, status) are UTF-8 JSON rendered by [`crate::json`];
+//! the two data-bearing frames ([`Submit`] / [`Reply`]) prefix a JSON
+//! control block with its `u32` length and carry the SoA planes after
+//! it as raw little-endian `f32` words — no base64, no copy-through
+//! text encoding on the hot path.
+//!
+//! Decoding is defensive end to end: bad magic, unknown version or
+//! kind, oversized declarations, truncated payloads and garbled JSON
+//! all surface as typed [`WireError`]s — the codec never panics on
+//! attacker-controlled bytes (pinned by the fuzz corpus in this
+//! module's tests and `rust/tests/wire.rs`).
+
+use std::fmt;
+use std::io::{self, Read};
+
+use crate::backend::{Op, ServiceError};
+use crate::ff::simd::KernelTier;
+use crate::json::{self, Value};
+
+use super::admission::ClientClass;
+
+/// Frame preamble: `b"FFGW"` — float-float gateway.
+pub const MAGIC: [u8; 4] = *b"FFGW";
+
+/// Protocol version spoken by this build.
+pub const VERSION: u8 = 1;
+
+/// Bytes of header before the payload: magic + version + kind + len.
+pub const HEADER_LEN: usize = 10;
+
+/// Hard ceiling on a single frame's payload (64 MiB). A declared
+/// length above this is rejected *before* any allocation happens, so a
+/// hostile header cannot balloon server memory.
+pub const MAX_FRAME_BYTES: usize = 1 << 26;
+
+/// Frame discriminants on the wire (the `kind` header byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server, once, first: tenant name + admission class.
+    ClientHello = 1,
+    /// Server → client reply to the hello: protocol + shard set.
+    ServerHello = 2,
+    /// Client → server: one operator request (JSON control + planes).
+    Submit = 3,
+    /// Server → client: the output planes for one submit id.
+    Reply = 4,
+    /// Server → client: typed failure (`id == 0` ⇒ connection-level).
+    Error = 5,
+    /// Server → client: request shed or rate-limited; retry later.
+    Overloaded = 6,
+    /// Client → server: ask for the status snapshot (empty payload).
+    StatusReq = 7,
+    /// Server → client: shard tiers, queue depths, tenant counters.
+    Status = 8,
+}
+
+impl FrameKind {
+    fn from_byte(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::ClientHello),
+            2 => Some(FrameKind::ServerHello),
+            3 => Some(FrameKind::Submit),
+            4 => Some(FrameKind::Reply),
+            5 => Some(FrameKind::Error),
+            6 => Some(FrameKind::Overloaded),
+            7 => Some(FrameKind::StatusReq),
+            8 => Some(FrameKind::Status),
+            _ => None,
+        }
+    }
+}
+
+/// Everything that can go wrong on the wire, typed. The codec maps
+/// malformed bytes here — never to a panic — and the client surfaces
+/// server-side verdicts ([`WireError::Remote`],
+/// [`WireError::Overloaded`]) through the same enum so call sites
+/// match once.
+#[derive(Debug)]
+pub enum WireError {
+    /// Socket-level failure.
+    Io(io::Error),
+    /// The four preamble bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Peer speaks a protocol version this build does not.
+    BadVersion(u8),
+    /// Unknown `kind` header byte.
+    UnknownKind(u8),
+    /// Declared payload length exceeds [`MAX_FRAME_BYTES`].
+    Oversized(u32),
+    /// Peer disconnected mid-frame.
+    Truncated,
+    /// Frame parsed but its payload is malformed.
+    BadPayload(String),
+    /// The server answered with a typed [`ServiceError`].
+    Remote(ServiceError),
+    /// The server shed the request; retry after the given delay.
+    Overloaded { retry_after_ms: u64 },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io error: {e}"),
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported protocol version {v}"),
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::Oversized(n) => {
+                write!(f, "declared payload {n} B exceeds cap {MAX_FRAME_BYTES} B")
+            }
+            WireError::Truncated => write!(f, "peer disconnected mid-frame"),
+            WireError::BadPayload(msg) => write!(f, "malformed payload: {msg}"),
+            WireError::Remote(e) => write!(f, "server error: {e}"),
+            WireError::Overloaded { retry_after_ms } => {
+                write!(f, "server overloaded; retry after {retry_after_ms} ms")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// One decoded frame: the kind byte plus its raw payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub payload: Vec<u8>,
+}
+
+/// Encode a complete frame (header + payload) ready for the socket.
+pub fn encode_frame(kind: FrameKind, payload: &[u8]) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Incremental frame decoder for nonblocking reads: push whatever
+/// bytes the socket had, then drain complete frames with
+/// [`FrameBuffer::next`]. Also the fuzz surface — `next` returns typed
+/// errors for every malformed prefix and never panics.
+#[derive(Debug, Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+}
+
+impl FrameBuffer {
+    pub fn new() -> FrameBuffer {
+        FrameBuffer::default()
+    }
+
+    /// Bytes buffered but not yet drained into frames.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Append bytes read from the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame. `Ok(None)` means "need more
+    /// bytes"; an `Err` means the stream is unrecoverably out of sync
+    /// (the connection should be dropped after reporting it).
+    pub fn next(&mut self) -> Result<Option<Frame>, WireError> {
+        if self.buf.len() < HEADER_LEN {
+            // a partial header that already disagrees with MAGIC can
+            // be rejected without waiting for the rest
+            let n = self.buf.len().min(4);
+            if self.buf[..n] != MAGIC[..n] {
+                let mut m = [0u8; 4];
+                m[..n].copy_from_slice(&self.buf[..n]);
+                return Err(WireError::BadMagic(m));
+            }
+            return Ok(None);
+        }
+        if self.buf[..4] != MAGIC {
+            let mut m = [0u8; 4];
+            m.copy_from_slice(&self.buf[..4]);
+            return Err(WireError::BadMagic(m));
+        }
+        if self.buf[4] != VERSION {
+            return Err(WireError::BadVersion(self.buf[4]));
+        }
+        let kind = FrameKind::from_byte(self.buf[5]).ok_or(WireError::UnknownKind(self.buf[5]))?;
+        let len = u32::from_le_bytes([self.buf[6], self.buf[7], self.buf[8], self.buf[9]]);
+        if len as usize > MAX_FRAME_BYTES {
+            return Err(WireError::Oversized(len));
+        }
+        let total = HEADER_LEN + len as usize;
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let payload = self.buf[HEADER_LEN..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(Frame { kind, payload }))
+    }
+}
+
+/// Blocking read of one frame. `Ok(None)` on a clean EOF at a frame
+/// boundary; [`WireError::Truncated`] if the peer vanished mid-frame.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut got = 0;
+    while got < HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    if header[..4] != MAGIC {
+        let mut m = [0u8; 4];
+        m.copy_from_slice(&header[..4]);
+        return Err(WireError::BadMagic(m));
+    }
+    if header[4] != VERSION {
+        return Err(WireError::BadVersion(header[4]));
+    }
+    let kind = FrameKind::from_byte(header[5]).ok_or(WireError::UnknownKind(header[5]))?;
+    let len = u32::from_le_bytes([header[6], header[7], header[8], header[9]]);
+    if len as usize > MAX_FRAME_BYTES {
+        return Err(WireError::Oversized(len));
+    }
+    let mut payload = vec![0u8; len as usize];
+    let mut got = 0;
+    while got < payload.len() {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => return Err(WireError::Truncated),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(Some(Frame { kind, payload }))
+}
+
+fn bad(msg: impl Into<String>) -> WireError {
+    WireError::BadPayload(msg.into())
+}
+
+fn parse_json(payload: &[u8]) -> Result<Value, WireError> {
+    let text = std::str::from_utf8(payload).map_err(|_| bad("control block is not UTF-8"))?;
+    json::parse(text).map_err(|e| bad(format!("control block is not JSON: {e:?}")))
+}
+
+/// Split a data frame payload into its JSON control block and the raw
+/// plane bytes after it.
+fn split_control(payload: &[u8]) -> Result<(Value, &[u8]), WireError> {
+    if payload.len() < 4 {
+        return Err(bad("payload shorter than control-length prefix"));
+    }
+    let jlen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let rest = &payload[4..];
+    if jlen > rest.len() {
+        return Err(bad(format!(
+            "control block claims {jlen} B but only {} B follow",
+            rest.len()
+        )));
+    }
+    let ctl = parse_json(&rest[..jlen])?;
+    Ok((ctl, &rest[jlen..]))
+}
+
+/// Decode `count` planes of `n` lanes each from raw LE f32 bytes.
+fn decode_planes(bytes: &[u8], count: usize, n: usize) -> Result<Vec<Vec<f32>>, WireError> {
+    let want = count
+        .checked_mul(n)
+        .and_then(|lanes| lanes.checked_mul(4))
+        .ok_or_else(|| bad("plane geometry overflows"))?;
+    if bytes.len() != want {
+        return Err(bad(format!(
+            "expected {count} plane(s) x {n} lanes = {want} B of f32 data, got {} B",
+            bytes.len()
+        )));
+    }
+    let mut planes = Vec::with_capacity(count);
+    for p in 0..count {
+        let mut plane = Vec::with_capacity(n);
+        let base = p * n * 4;
+        for i in 0..n {
+            let o = base + i * 4;
+            plane.push(f32::from_le_bytes([
+                bytes[o],
+                bytes[o + 1],
+                bytes[o + 2],
+                bytes[o + 3],
+            ]));
+        }
+        planes.push(plane);
+    }
+    Ok(planes)
+}
+
+fn encode_planes(out: &mut Vec<u8>, planes: &[Vec<f32>]) {
+    for plane in planes {
+        for &x in plane {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn encode_with_control(ctl: &Value, planes: &[Vec<f32>]) -> Vec<u8> {
+    let jtext = ctl.render();
+    let jbytes = jtext.as_bytes();
+    let data: usize = planes.iter().map(|p| p.len() * 4).sum();
+    let mut out = Vec::with_capacity(4 + jbytes.len() + data);
+    out.extend_from_slice(&(jbytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(jbytes);
+    encode_planes(&mut out, planes);
+    out
+}
+
+fn get_u64(ctl: &Value, key: &str) -> Result<u64, WireError> {
+    ctl.get(key)
+        .and_then(Value::as_u64)
+        .ok_or_else(|| bad(format!("missing/invalid '{key}'")))
+}
+
+fn get_str<'a>(ctl: &'a Value, key: &str) -> Result<&'a str, WireError> {
+    ctl.get(key)
+        .and_then(Value::as_str)
+        .ok_or_else(|| bad(format!("missing/invalid '{key}'")))
+}
+
+/// One operator request on the wire. `planes` must hold exactly
+/// `op.n_in()` planes of equal length (the server re-validates through
+/// [`crate::coordinator::Plan::new`], so a lying control block becomes
+/// a typed error, not a crash).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Submit {
+    /// Client-chosen correlation id; must be non-zero (0 is reserved
+    /// for connection-level [`ErrorFrame`]s).
+    pub id: u64,
+    pub op: Op,
+    /// Client deadline in milliseconds. Drives both server-side load
+    /// shedding and the dispatched ticket's deadline.
+    pub deadline_ms: Option<u64>,
+    pub planes: Vec<Vec<f32>>,
+}
+
+impl Submit {
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.planes.first().map_or(0, Vec::len);
+        let mut pairs = vec![
+            ("id", Value::Number(self.id as f64)),
+            ("op", Value::String(self.op.name().to_string())),
+            ("n", Value::Number(n as f64)),
+        ];
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", Value::Number(d as f64)));
+        }
+        encode_with_control(&json::obj(pairs), &self.planes)
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Submit, WireError> {
+        let (ctl, data) = split_control(payload)?;
+        let id = get_u64(&ctl, "id")?;
+        if id == 0 {
+            return Err(bad("submit id 0 is reserved"));
+        }
+        let op = Op::parse(get_str(&ctl, "op")?).map_err(WireError::Remote)?;
+        let n = get_u64(&ctl, "n")? as usize;
+        let deadline_ms = match ctl.get("deadline_ms") {
+            None => None,
+            Some(v) => Some(v.as_u64().ok_or_else(|| bad("invalid 'deadline_ms'"))?),
+        };
+        let planes = decode_planes(data, op.n_in(), n)?;
+        Ok(Submit { id, op, deadline_ms, planes })
+    }
+}
+
+/// The output planes for one completed submit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Reply {
+    pub id: u64,
+    pub planes: Vec<Vec<f32>>,
+}
+
+impl Reply {
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.planes.first().map_or(0, Vec::len);
+        let ctl = json::obj(vec![
+            ("id", Value::Number(self.id as f64)),
+            ("planes", Value::Number(self.planes.len() as f64)),
+            ("n", Value::Number(n as f64)),
+        ]);
+        encode_with_control(&ctl, &self.planes)
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Reply, WireError> {
+        let (ctl, data) = split_control(payload)?;
+        let id = get_u64(&ctl, "id")?;
+        let count = get_u64(&ctl, "planes")? as usize;
+        let n = get_u64(&ctl, "n")? as usize;
+        if count > 16 {
+            return Err(bad(format!("implausible plane count {count}")));
+        }
+        let planes = decode_planes(data, count, n)?;
+        Ok(Reply { id, planes })
+    }
+}
+
+/// A typed failure. `id == 0` marks a connection-level protocol error
+/// (the server closes the connection after sending it); otherwise the
+/// id names the submit that failed. `code` is `0` for protocol errors,
+/// else the stable [`ServiceError::to_code`] value — `message` carries
+/// the canonical `Display` rendering so structured variants survive
+/// the round trip through [`ServiceError::from_code`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorFrame {
+    pub id: u64,
+    pub code: u16,
+    pub message: String,
+}
+
+impl ErrorFrame {
+    pub fn from_service(id: u64, err: &ServiceError) -> ErrorFrame {
+        ErrorFrame { id, code: err.to_code(), message: err.to_string() }
+    }
+
+    /// Reconstruct the [`ServiceError`] when `code` names one.
+    pub fn to_service(&self) -> Option<ServiceError> {
+        ServiceError::from_code(self.code, &self.message)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        json::obj(vec![
+            ("id", Value::Number(self.id as f64)),
+            ("code", Value::Number(self.code as f64)),
+            ("message", Value::String(self.message.clone())),
+        ])
+        .render()
+        .into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ErrorFrame, WireError> {
+        let ctl = parse_json(payload)?;
+        Ok(ErrorFrame {
+            id: get_u64(&ctl, "id")?,
+            code: get_u64(&ctl, "code")? as u16,
+            message: get_str(&ctl, "message")?.to_string(),
+        })
+    }
+}
+
+/// Request shed (admission bucket empty, in-flight budget blown, or
+/// telemetry says the deadline is already lost). Purely advisory
+/// backoff hint — the connection stays healthy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OverloadedFrame {
+    pub id: u64,
+    pub retry_after_ms: u64,
+}
+
+impl OverloadedFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        json::obj(vec![
+            ("id", Value::Number(self.id as f64)),
+            ("retry_after_ms", Value::Number(self.retry_after_ms as f64)),
+        ])
+        .render()
+        .into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<OverloadedFrame, WireError> {
+        let ctl = parse_json(payload)?;
+        Ok(OverloadedFrame {
+            id: get_u64(&ctl, "id")?,
+            retry_after_ms: get_u64(&ctl, "retry_after_ms")?,
+        })
+    }
+}
+
+/// First frame on every connection: who is calling and under which
+/// admission class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientHello {
+    pub tenant: String,
+    pub class: ClientClass,
+}
+
+impl ClientHello {
+    pub fn encode(&self) -> Vec<u8> {
+        json::obj(vec![
+            ("tenant", Value::String(self.tenant.clone())),
+            ("class", Value::String(self.class.name().to_string())),
+        ])
+        .render()
+        .into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ClientHello, WireError> {
+        let ctl = parse_json(payload)?;
+        let tenant = get_str(&ctl, "tenant")?.to_string();
+        if tenant.is_empty() || tenant.len() > 128 {
+            return Err(bad("tenant must be 1..=128 bytes"));
+        }
+        let class = ClientClass::parse(get_str(&ctl, "class")?)
+            .ok_or_else(|| bad("unknown client class"))?;
+        Ok(ClientHello { tenant, class })
+    }
+}
+
+/// One shard as the serving surface describes it: substrate label plus
+/// the CPU kernel tier it runs (`None` on substrates without tiers —
+/// gpusim, XLA).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardInfo {
+    pub label: String,
+    pub tier: Option<KernelTier>,
+}
+
+impl ShardInfo {
+    fn to_value(&self) -> Value {
+        let mut pairs = vec![("label", Value::String(self.label.clone()))];
+        if let Some(t) = self.tier {
+            pairs.push(("tier", Value::String(t.name().to_string())));
+        }
+        json::obj(pairs)
+    }
+
+    fn from_value(v: &Value) -> Result<ShardInfo, WireError> {
+        let label = get_str(v, "label")?.to_string();
+        let tier = match v.get("tier") {
+            None => None,
+            Some(t) => {
+                let name = t.as_str().ok_or_else(|| bad("invalid 'tier'"))?;
+                Some(KernelTier::parse(name).map_err(bad)?)
+            }
+        };
+        Ok(ShardInfo { label, tier })
+    }
+}
+
+fn shards_to_value(shards: &[ShardInfo]) -> Value {
+    Value::Array(shards.iter().map(ShardInfo::to_value).collect())
+}
+
+fn shards_from_value(ctl: &Value) -> Result<Vec<ShardInfo>, WireError> {
+    ctl.get("shards")
+        .and_then(Value::as_array)
+        .ok_or_else(|| bad("missing/invalid 'shards'"))?
+        .iter()
+        .map(ShardInfo::from_value)
+        .collect()
+}
+
+/// Server's answer to the hello: the protocol version it speaks and
+/// the shard set it serves (labels + kernel tiers — the serving-surface
+/// face of [`crate::coordinator::Service::shard_kernel_tiers`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerHello {
+    pub protocol: u8,
+    pub shards: Vec<ShardInfo>,
+}
+
+impl ServerHello {
+    pub fn encode(&self) -> Vec<u8> {
+        json::obj(vec![
+            ("protocol", Value::Number(self.protocol as f64)),
+            ("shards", shards_to_value(&self.shards)),
+        ])
+        .render()
+        .into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<ServerHello, WireError> {
+        let ctl = parse_json(payload)?;
+        Ok(ServerHello {
+            protocol: get_u64(&ctl, "protocol")? as u8,
+            shards: shards_from_value(&ctl)?,
+        })
+    }
+}
+
+/// Per-tenant counters as the status frame carries them.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TenantStatus {
+    pub tenant: String,
+    pub requests: u64,
+    pub lanes: u64,
+    pub shed: u64,
+    pub denied: u64,
+}
+
+/// Point-in-time serving snapshot: shard set with live queue depths
+/// plus per-tenant dispatch/shed/denial attribution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Status {
+    pub shards: Vec<ShardInfo>,
+    /// Queue depth per shard, index-aligned with `shards`.
+    pub queue_depths: Vec<u64>,
+    /// Sorted by tenant name.
+    pub tenants: Vec<TenantStatus>,
+}
+
+impl Status {
+    pub fn encode(&self) -> Vec<u8> {
+        let depths = Value::Array(
+            self.queue_depths.iter().map(|&d| Value::Number(d as f64)).collect(),
+        );
+        let tenants = Value::Array(
+            self.tenants
+                .iter()
+                .map(|t| {
+                    json::obj(vec![
+                        ("tenant", Value::String(t.tenant.clone())),
+                        ("requests", Value::Number(t.requests as f64)),
+                        ("lanes", Value::Number(t.lanes as f64)),
+                        ("shed", Value::Number(t.shed as f64)),
+                        ("denied", Value::Number(t.denied as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        json::obj(vec![
+            ("shards", shards_to_value(&self.shards)),
+            ("queue_depths", depths),
+            ("tenants", tenants),
+        ])
+        .render()
+        .into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Status, WireError> {
+        let ctl = parse_json(payload)?;
+        let shards = shards_from_value(&ctl)?;
+        let queue_depths = ctl
+            .get("queue_depths")
+            .and_then(Value::as_array)
+            .ok_or_else(|| bad("missing/invalid 'queue_depths'"))?
+            .iter()
+            .map(|v| v.as_u64().ok_or_else(|| bad("invalid queue depth")))
+            .collect::<Result<Vec<u64>, WireError>>()?;
+        let tenants = ctl
+            .get("tenants")
+            .and_then(Value::as_array)
+            .ok_or_else(|| bad("missing/invalid 'tenants'"))?
+            .iter()
+            .map(|v| {
+                Ok(TenantStatus {
+                    tenant: get_str(v, "tenant")?.to_string(),
+                    requests: get_u64(v, "requests")?,
+                    lanes: get_u64(v, "lanes")?,
+                    shed: get_u64(v, "shed")?,
+                    denied: get_u64(v, "denied")?,
+                })
+            })
+            .collect::<Result<Vec<TenantStatus>, WireError>>()?;
+        Ok(Status { shards, queue_depths, tenants })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_and_drain(bytes: &[u8]) -> Result<Option<Frame>, WireError> {
+        let mut fb = FrameBuffer::new();
+        fb.push(bytes);
+        fb.next()
+    }
+
+    #[test]
+    fn frame_round_trips_through_buffer() {
+        let sub = Submit {
+            id: 7,
+            op: Op::Add22,
+            deadline_ms: Some(250),
+            planes: vec![vec![1.0, 2.0], vec![0.5, 0.25], vec![3.0, 4.0], vec![0.0, -0.0]],
+        };
+        let wire = encode_frame(FrameKind::Submit, &sub.encode());
+        let mut fb = FrameBuffer::new();
+        // feed byte by byte: no boundary assumption survives untested
+        for &b in &wire {
+            fb.push(&[b]);
+        }
+        let frame = fb.next().unwrap().expect("complete frame");
+        assert_eq!(frame.kind, FrameKind::Submit);
+        assert_eq!(Submit::decode(&frame.payload).unwrap(), sub);
+        assert!(fb.next().unwrap().is_none());
+        assert_eq!(fb.pending_bytes(), 0);
+    }
+
+    #[test]
+    fn blocking_read_frame_round_trips() {
+        let rep = Reply { id: 9, planes: vec![vec![1.5f32; 3], vec![0.0f32; 3]] };
+        let wire = encode_frame(FrameKind::Reply, &rep.encode());
+        let mut cursor = io::Cursor::new(wire);
+        let frame = read_frame(&mut cursor).unwrap().expect("frame");
+        assert_eq!(frame.kind, FrameKind::Reply);
+        assert_eq!(Reply::decode(&frame.payload).unwrap(), rep);
+        // clean EOF at the boundary
+        assert!(read_frame(&mut cursor).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_is_typed_and_early() {
+        // rejected from the very first wrong byte — no need for 10
+        let mut fb = FrameBuffer::new();
+        fb.push(b"XF");
+        assert!(matches!(fb.next(), Err(WireError::BadMagic(_))));
+        assert!(matches!(push_and_drain(b"HTTP/1.1 GET /"), Err(WireError::BadMagic(_))));
+    }
+
+    #[test]
+    fn bad_version_and_kind_are_typed() {
+        let mut wire = encode_frame(FrameKind::StatusReq, &[]);
+        wire[4] = 99;
+        assert!(matches!(push_and_drain(&wire), Err(WireError::BadVersion(99))));
+        let mut wire = encode_frame(FrameKind::StatusReq, &[]);
+        wire[5] = 0;
+        assert!(matches!(push_and_drain(&wire), Err(WireError::UnknownKind(0))));
+    }
+
+    #[test]
+    fn oversized_declaration_rejected_before_allocation() {
+        let mut wire = encode_frame(FrameKind::Submit, &[]);
+        wire[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(push_and_drain(&wire), Err(WireError::Oversized(_))));
+        let mut cursor = io::Cursor::new(wire);
+        assert!(matches!(read_frame(&mut cursor), Err(WireError::Oversized(_))));
+    }
+
+    #[test]
+    fn truncated_stream_is_need_more_or_truncated() {
+        let sub = Submit {
+            id: 1,
+            op: Op::Add,
+            deadline_ms: None,
+            planes: vec![vec![1.0; 8], vec![2.0; 8]],
+        };
+        let wire = encode_frame(FrameKind::Submit, &sub.encode());
+        for cut in [1, 5, HEADER_LEN, HEADER_LEN + 3, wire.len() - 1] {
+            // incremental decoder: a prefix is just "not yet"
+            assert!(push_and_drain(&wire[..cut]).unwrap().is_none(), "cut={cut}");
+            // blocking reader: mid-frame EOF is typed
+            let mut cursor = io::Cursor::new(wire[..cut].to_vec());
+            assert!(
+                matches!(read_frame(&mut cursor), Err(WireError::Truncated)),
+                "cut={cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn submit_decode_rejects_malformed_controls() {
+        // lying lane count: control says 4 lanes, data carries 2
+        let mut sub = Submit {
+            id: 3,
+            op: Op::Mul,
+            deadline_ms: None,
+            planes: vec![vec![1.0, 2.0], vec![3.0, 4.0]],
+        };
+        let mut payload = sub.encode();
+        // rewrite "n":2 → "n":4 in the control block
+        let jlen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+        let text = String::from_utf8(payload[4..4 + jlen].to_vec()).unwrap();
+        let lied = text.replace("\"n\":2", "\"n\":4");
+        assert_ne!(text, lied);
+        let mut forged = Vec::new();
+        forged.extend_from_slice(&(lied.len() as u32).to_le_bytes());
+        forged.extend_from_slice(lied.as_bytes());
+        forged.extend_from_slice(&payload[4 + jlen..]);
+        assert!(matches!(Submit::decode(&forged), Err(WireError::BadPayload(_))));
+
+        // id 0 reserved
+        sub.id = 0;
+        payload = sub.encode();
+        assert!(matches!(Submit::decode(&payload), Err(WireError::BadPayload(_))));
+
+        // unknown op surfaces the typed service error
+        let ctl = r#"{"id":1,"op":"frob","n":0}"#;
+        let mut p = Vec::new();
+        p.extend_from_slice(&(ctl.len() as u32).to_le_bytes());
+        p.extend_from_slice(ctl.as_bytes());
+        assert!(matches!(
+            Submit::decode(&p),
+            Err(WireError::Remote(ServiceError::UnknownOp(_)))
+        ));
+    }
+
+    #[test]
+    fn fuzz_corpus_never_panics() {
+        // deterministic pseudo-random corpus over the incremental
+        // decoder: every outcome must be Ok or a typed error
+        let mut x = 0x9e3779b97f4a7c15u64;
+        let mut step = move || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for case in 0..200 {
+            let len = (step() % 64) as usize;
+            let mut bytes: Vec<u8> = (0..len).map(|_| (step() & 0xff) as u8).collect();
+            if case % 3 == 0 && bytes.len() >= 4 {
+                // bias towards valid magic so deeper paths get hit
+                bytes[..4].copy_from_slice(&MAGIC);
+            }
+            if case % 6 == 0 && bytes.len() >= 6 {
+                bytes[4] = VERSION;
+                bytes[5] = 1 + (bytes[5] % 8);
+            }
+            let mut fb = FrameBuffer::new();
+            fb.push(&bytes);
+            while let Ok(Some(frame)) = fb.next() {
+                // decoding any frame kind from garbage must also not panic
+                let _ = Submit::decode(&frame.payload);
+                let _ = Reply::decode(&frame.payload);
+                let _ = ErrorFrame::decode(&frame.payload);
+                let _ = ClientHello::decode(&frame.payload);
+                let _ = Status::decode(&frame.payload);
+            }
+        }
+    }
+
+    #[test]
+    fn control_frames_round_trip() {
+        let hello = ClientHello { tenant: "acme".into(), class: ClientClass::Bulk };
+        assert_eq!(ClientHello::decode(&hello.encode()).unwrap(), hello);
+
+        let sh = ServerHello {
+            protocol: VERSION,
+            shards: vec![
+                ShardInfo { label: "native".into(), tier: Some(KernelTier::BlockedFma) },
+                ShardInfo { label: "gpusim:nv35".into(), tier: None },
+            ],
+        };
+        assert_eq!(ServerHello::decode(&sh.encode()).unwrap(), sh);
+
+        let over = OverloadedFrame { id: 12, retry_after_ms: 40 };
+        assert_eq!(OverloadedFrame::decode(&over.encode()).unwrap(), over);
+
+        let status = Status {
+            shards: sh.shards.clone(),
+            queue_depths: vec![3, 0],
+            tenants: vec![TenantStatus {
+                tenant: "acme".into(),
+                requests: 5,
+                lanes: 4096,
+                shed: 1,
+                denied: 2,
+            }],
+        };
+        assert_eq!(Status::decode(&status.encode()).unwrap(), status);
+    }
+
+    #[test]
+    fn error_frame_round_trips_service_errors() {
+        let err = ServiceError::Arity { op: Op::Add22, want: 4, got: 3 };
+        let ef = ErrorFrame::from_service(11, &err);
+        let back = ErrorFrame::decode(&ef.encode()).unwrap();
+        assert_eq!(back, ef);
+        assert_eq!(back.to_service(), Some(err));
+        // protocol-level error (code 0) has no service mapping
+        let proto = ErrorFrame { id: 0, code: 0, message: "bad magic".into() };
+        assert_eq!(ErrorFrame::decode(&proto.encode()).unwrap().to_service(), None);
+    }
+}

@@ -1,0 +1,46 @@
+//! L4 wire front end — the TCP serving surface over the coordinator.
+//!
+//! The paper's operators become a *service* here: a std-only,
+//! length-prefixed binary protocol ([`frame`]: JSON control blocks via
+//! [`crate::json`], SoA planes as raw little-endian `f32` — no text
+//! encoding on the data path), served by [`WireServer`] over a
+//! [`crate::coordinator::Handle`] and consumed by the blocking
+//! [`WireClient`] whose `dispatch`/`wait` surface mirrors the
+//! in-process Ticket API. Outputs over the wire are **bit-identical**
+//! to in-process dispatch — the server adds transport, not arithmetic
+//! (pinned by `rust/tests/wire.rs`).
+//!
+//! Multi-tenant serving is defended in depth:
+//!
+//! * **admission** ([`admission`]) — per-connection token buckets in
+//!   units of lanes plus an in-flight-bytes budget, keyed by the
+//!   [`ClientClass`] the client declares in its hello;
+//! * **load shedding** ([`shed`]) — the live telemetry plane
+//!   ([`crate::coordinator::TelemetryView::best_estimated_wait`])
+//!   projects each deadline-bearing request's completion; hopeless
+//!   ones are refused *now* with a typed `Overloaded` frame instead of
+//!   expiring server-side after burning kernel time;
+//! * **fairness** — each worker sweep admits at most one submit per
+//!   connection, so pipelined bulk traffic interleaves lane-by-lane
+//!   with everyone else into the coordinator's fuse window;
+//! * **attribution** — every dispatch, shed and denial is recorded
+//!   per tenant in the coordinator's
+//!   [`crate::coordinator::TenantLedger`], surfaced over the wire in
+//!   the status frame and in-process via
+//!   [`crate::coordinator::Service::tenant_metrics`].
+
+pub mod admission;
+pub mod client;
+pub mod frame;
+pub mod server;
+pub mod shed;
+
+pub use admission::{Admission, AdmissionConfig, ClassLimits, ClientClass, TokenBucket};
+pub use client::WireClient;
+pub use frame::{
+    encode_frame, read_frame, ClientHello, ErrorFrame, Frame, FrameBuffer, FrameKind,
+    OverloadedFrame, Reply, ServerHello, ShardInfo, Status, Submit, TenantStatus,
+    WireError, MAGIC, MAX_FRAME_BYTES, VERSION,
+};
+pub use server::{WireConfig, WireServer};
+pub use shed::ShedPolicy;

@@ -1,0 +1,523 @@
+//! [`WireServer`]: the TCP serving surface over a
+//! [`crate::coordinator::Handle`].
+//!
+//! Shape: one **acceptor** thread (nonblocking accept, round-robin
+//! hand-off) feeds a small pool of **connection workers**. Each worker
+//! owns a disjoint set of connections and runs a readiness-style sweep
+//! loop over them — nonblocking reads into a per-connection
+//! [`FrameBuffer`], frame dispatch, and [`Ticket::try_wait`] polling
+//! of in-flight requests — so no thread ever blocks on one client
+//! while another has work ready.
+//!
+//! **Fairness**: each sweep admits at most *one* Submit per connection
+//! (control frames drain freely). A bulk client that pipelines a
+//! hundred submits therefore interleaves with every other connection
+//! on the worker lane by lane, and the coordinator's fuse window sees
+//! round-robin arrivals it can pack into shared launches — one hot
+//! socket cannot monopolise the batch former.
+//!
+//! **Pushback** is layered, cheapest first: telemetry-driven shedding
+//! ([`ShedPolicy`], zero state), then the connection's token-bucket
+//! admission ([`Admission`]). Both answer with an
+//! [`OverloadedFrame`] carrying `retry_after_ms`; typed request
+//! failures travel as [`ErrorFrame`]s with stable
+//! [`crate::backend::ServiceError::to_code`] codes; protocol
+//! violations get an `id == 0` error frame and the connection is
+//! closed. A malformed or hostile byte stream can end its own
+//! connection — never the process.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Handle, Plan, Ticket};
+
+use super::admission::{Admission, AdmissionConfig, ClientClass};
+use super::frame::{
+    encode_frame, ClientHello, ErrorFrame, Frame, FrameBuffer, FrameKind, OverloadedFrame,
+    Reply, ServerHello, ShardInfo, Status, Submit, TenantStatus, WireError, VERSION,
+};
+use super::shed::ShedPolicy;
+
+/// Tuning for one [`WireServer`].
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    pub admission: AdmissionConfig,
+    pub shed: ShedPolicy,
+    /// Connection-worker threads (each owns a subset of connections).
+    pub workers: usize,
+    /// Accept bound: connections beyond this are refused at accept.
+    pub max_conns: usize,
+}
+
+impl Default for WireConfig {
+    fn default() -> WireConfig {
+        WireConfig {
+            admission: AdmissionConfig::default(),
+            shed: ShedPolicy::default(),
+            workers: 2,
+            max_conns: 64,
+        }
+    }
+}
+
+/// Sweep sleep when a worker found no work anywhere.
+const IDLE_SLEEP: Duration = Duration::from_micros(300);
+/// Per-connection read chunk.
+const READ_CHUNK: usize = 64 * 1024;
+/// Reads drained per connection per sweep before yielding to peers.
+const READS_PER_SWEEP: usize = 4;
+/// Budget for retrying a nonblocking write before declaring the
+/// client unresponsive and dropping the connection.
+const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
+
+/// A live TCP front end serving one coordinator handle. Dropping the
+/// server stops the acceptor and workers and closes every connection;
+/// the coordinator service underneath is untouched.
+pub struct WireServer {
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<thread::JoinHandle<()>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7070"`, port 0 for ephemeral) and
+    /// start serving `handle` under `cfg`.
+    pub fn start(handle: Handle, addr: &str, cfg: WireConfig) -> io::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let live_conns = Arc::new(AtomicUsize::new(0));
+
+        let n_workers = cfg.workers.max(1);
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::channel::<TcpStream>();
+            txs.push(tx);
+            let worker = ConnWorker {
+                rx,
+                handle: handle.clone(),
+                admission: cfg.admission.clone(),
+                shed: cfg.shed,
+                stop: stop.clone(),
+                live_conns: live_conns.clone(),
+            };
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("wire-worker-{w}"))
+                    .spawn(move || worker.run())?,
+            );
+        }
+
+        let max_conns = cfg.max_conns.max(1);
+        let stop_a = stop.clone();
+        let acceptor = thread::Builder::new().name("wire-accept".into()).spawn(move || {
+            let mut next = 0usize;
+            while !stop_a.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        if live_conns.load(Ordering::Relaxed) >= max_conns {
+                            refuse(stream);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        live_conns.fetch_add(1, Ordering::Relaxed);
+                        if txs[next % txs.len()].send(stream).is_err() {
+                            // worker died; stop accepting
+                            live_conns.fetch_sub(1, Ordering::Relaxed);
+                            break;
+                        }
+                        next = next.wrapping_add(1);
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        })?;
+
+        Ok(WireServer { local, stop, acceptor: Some(acceptor), workers })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Stop accepting, close every connection, join the threads.
+    /// Also runs on drop.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.acceptor.take() {
+            let _ = j.join();
+        }
+        for j in self.workers.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Best-effort "over capacity" verdict for a refused accept.
+fn refuse(mut stream: TcpStream) {
+    let ef = ErrorFrame { id: 0, code: 0, message: "server at connection capacity".into() };
+    let _ = stream.write_all(&encode_frame(FrameKind::Error, &ef.encode()));
+}
+
+/// One request dispatched into the coordinator, awaiting its reply.
+struct Pending {
+    id: u64,
+    ticket: Ticket,
+    /// Payload bytes charged against the connection's in-flight budget.
+    bytes: usize,
+}
+
+/// Per-connection state owned by exactly one worker.
+struct Conn {
+    stream: TcpStream,
+    fb: FrameBuffer,
+    tenant: String,
+    admission: Admission,
+    hello_done: bool,
+    pending: Vec<Pending>,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, cfg: &AdmissionConfig) -> Conn {
+        Conn {
+            stream,
+            fb: FrameBuffer::new(),
+            tenant: String::new(),
+            // pre-hello traffic runs under the tightest class
+            admission: Admission::new(cfg.limits(ClientClass::Bulk), Instant::now()),
+            hello_done: false,
+            pending: Vec::new(),
+            dead: false,
+        }
+    }
+}
+
+struct ConnWorker {
+    rx: mpsc::Receiver<TcpStream>,
+    handle: Handle,
+    admission: AdmissionConfig,
+    shed: ShedPolicy,
+    stop: Arc<AtomicBool>,
+    live_conns: Arc<AtomicUsize>,
+}
+
+impl ConnWorker {
+    fn run(self) {
+        let mut conns: Vec<Conn> = Vec::new();
+        let mut scratch = vec![0u8; READ_CHUNK];
+        while !self.stop.load(Ordering::Relaxed) {
+            let mut progress = false;
+            while let Ok(stream) = self.rx.try_recv() {
+                conns.push(Conn::new(stream, &self.admission));
+                progress = true;
+            }
+            for conn in conns.iter_mut() {
+                progress |= self.sweep(conn, &mut scratch);
+            }
+            let before = conns.len();
+            conns.retain(|c| !c.dead);
+            let dropped = before - conns.len();
+            if dropped > 0 {
+                self.live_conns.fetch_sub(dropped, Ordering::Relaxed);
+            }
+            if !progress {
+                thread::sleep(IDLE_SLEEP);
+            }
+        }
+        self.live_conns.fetch_sub(conns.len(), Ordering::Relaxed);
+    }
+
+    /// One readiness pass over one connection. Returns whether any
+    /// byte or frame moved.
+    fn sweep(&self, conn: &mut Conn, scratch: &mut [u8]) -> bool {
+        let mut progress = false;
+
+        // 1. pull whatever the socket has (bounded per sweep)
+        for _ in 0..READS_PER_SWEEP {
+            match conn.stream.read(scratch) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.fb.push(&scratch[..n]);
+                    progress = true;
+                    if n < scratch.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+
+        // 2. drain control frames; admit at most ONE submit per sweep
+        //    so pipelined bulk clients interleave with everyone else
+        while !conn.dead {
+            match conn.fb.next() {
+                Ok(None) => break,
+                Ok(Some(frame)) => {
+                    progress = true;
+                    let was_submit = frame.kind == FrameKind::Submit;
+                    self.dispatch_frame(conn, frame);
+                    if was_submit {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    let ef = ErrorFrame { id: 0, code: 0, message: e.to_string() };
+                    write_frame(conn, FrameKind::Error, &ef.encode());
+                    conn.dead = true;
+                }
+            }
+        }
+
+        // 3. poll in-flight tickets; push replies out as they resolve
+        if !conn.pending.is_empty() {
+            let mut resolved: Vec<(usize, u64, usize, crate::coordinator::request::OpResult)> =
+                Vec::new();
+            for (ix, p) in conn.pending.iter().enumerate() {
+                if let Some(result) = p.ticket.try_wait() {
+                    resolved.push((ix, p.id, p.bytes, result));
+                }
+            }
+            for &(ix, ..) in resolved.iter().rev() {
+                conn.pending.swap_remove(ix);
+            }
+            for (_, id, bytes, result) in resolved {
+                progress = true;
+                conn.admission.release(bytes);
+                match result {
+                    Ok(planes) => {
+                        let rep = Reply { id, planes };
+                        write_frame(conn, FrameKind::Reply, &rep.encode());
+                    }
+                    Err(err) => {
+                        let ef = ErrorFrame::from_service(id, &err);
+                        write_frame(conn, FrameKind::Error, &ef.encode());
+                    }
+                }
+            }
+        }
+
+        progress
+    }
+
+    fn dispatch_frame(&self, conn: &mut Conn, frame: Frame) {
+        match frame.kind {
+            FrameKind::ClientHello => match ClientHello::decode(&frame.payload) {
+                Ok(hello) => {
+                    conn.tenant = hello.tenant;
+                    conn.admission =
+                        Admission::new(self.admission.limits(hello.class), Instant::now());
+                    conn.hello_done = true;
+                    let sh = ServerHello { protocol: VERSION, shards: self.shard_infos() };
+                    write_frame(conn, FrameKind::ServerHello, &sh.encode());
+                }
+                Err(e) => self.protocol_error(conn, &e),
+            },
+            FrameKind::Submit => {
+                if !conn.hello_done {
+                    self.protocol_error(conn, &WireError::BadPayload(
+                        "ClientHello must precede Submit".into(),
+                    ));
+                    return;
+                }
+                match Submit::decode(&frame.payload) {
+                    Ok(sub) => self.handle_submit(conn, sub),
+                    Err(WireError::Remote(err)) => {
+                        // e.g. unknown op name: typed, request-scoped —
+                        // the id is unrecoverable from a bad control
+                        // block, so it reports as connection-scoped 0
+                        // only when parsing never got that far
+                        let id = submit_id_best_effort(&frame.payload);
+                        let ef = ErrorFrame::from_service(id, &err);
+                        write_frame(conn, FrameKind::Error, &ef.encode());
+                    }
+                    Err(e) => self.protocol_error(conn, &e),
+                }
+            }
+            FrameKind::StatusReq => {
+                let status = self.status();
+                write_frame(conn, FrameKind::Status, &status.encode());
+            }
+            // server-to-client kinds arriving at the server are a
+            // protocol violation
+            FrameKind::ServerHello
+            | FrameKind::Reply
+            | FrameKind::Error
+            | FrameKind::Overloaded
+            | FrameKind::Status => {
+                self.protocol_error(
+                    conn,
+                    &WireError::BadPayload(format!(
+                        "client sent server-only frame kind {:?}",
+                        frame.kind
+                    )),
+                );
+            }
+        }
+    }
+
+    fn handle_submit(&self, conn: &mut Conn, sub: Submit) {
+        let lanes = sub.planes.first().map_or(0, Vec::len) as u64;
+        let bytes: usize = sub.planes.iter().map(|p| p.len() * 4).sum();
+
+        // cheapest refusal first: telemetry already says the deadline
+        // is unreachable — no tokens burned on a doomed request
+        if let Err(retry) = self.shed.assess(&self.handle.telemetry(), sub.op, sub.deadline_ms)
+        {
+            self.handle.tenant_ledger().record_shed(&conn.tenant);
+            let over = OverloadedFrame { id: sub.id, retry_after_ms: retry };
+            write_frame(conn, FrameKind::Overloaded, &over.encode());
+            return;
+        }
+
+        // then the client's own contract
+        if let Err(retry) = conn.admission.admit(lanes, bytes, Instant::now()) {
+            self.handle.tenant_ledger().record_denied(&conn.tenant);
+            let over = OverloadedFrame { id: sub.id, retry_after_ms: retry };
+            write_frame(conn, FrameKind::Overloaded, &over.encode());
+            return;
+        }
+
+        let plan = match Plan::new(sub.op, sub.planes) {
+            Ok(plan) => plan,
+            Err(err) => {
+                conn.admission.release(bytes);
+                let ef = ErrorFrame::from_service(sub.id, &err);
+                write_frame(conn, FrameKind::Error, &ef.encode());
+                return;
+            }
+        };
+        match self.handle.dispatch_tagged(&conn.tenant, plan) {
+            Ok(ticket) => {
+                let ticket = match sub.deadline_ms {
+                    Some(ms) => ticket.deadline(Duration::from_millis(ms)),
+                    None => ticket,
+                };
+                conn.pending.push(Pending { id: sub.id, ticket, bytes });
+            }
+            Err(err) => {
+                conn.admission.release(bytes);
+                let ef = ErrorFrame::from_service(sub.id, &err);
+                write_frame(conn, FrameKind::Error, &ef.encode());
+            }
+        }
+    }
+
+    fn shard_infos(&self) -> Vec<ShardInfo> {
+        let view = self.handle.telemetry();
+        (0..view.len())
+            .map(|s| ShardInfo {
+                label: view.label(s).to_string(),
+                tier: view.kernel_tier(s),
+            })
+            .collect()
+    }
+
+    fn status(&self) -> Status {
+        let view = self.handle.telemetry();
+        let queue_depths = (0..view.len()).map(|s| view.queue_depth(s) as u64).collect();
+        let tenants = self
+            .handle
+            .tenant_ledger()
+            .snapshot()
+            .into_iter()
+            .map(|(tenant, c)| TenantStatus {
+                tenant,
+                requests: c.requests,
+                lanes: c.lanes,
+                shed: c.shed,
+                denied: c.denied,
+            })
+            .collect();
+        Status { shards: self.shard_infos(), queue_depths, tenants }
+    }
+
+    fn protocol_error(&self, conn: &mut Conn, err: &WireError) {
+        let ef = ErrorFrame { id: 0, code: 0, message: err.to_string() };
+        write_frame(conn, FrameKind::Error, &ef.encode());
+        conn.dead = true;
+    }
+}
+
+/// Recover the submit id from a payload whose planes failed to decode,
+/// so the error can still be request-scoped. Falls back to 0
+/// (connection-scoped) when even the control block is unreadable.
+fn submit_id_best_effort(payload: &[u8]) -> u64 {
+    if payload.len() < 4 {
+        return 0;
+    }
+    let jlen = u32::from_le_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    let rest = &payload[4..];
+    if jlen > rest.len() {
+        return 0;
+    }
+    std::str::from_utf8(&rest[..jlen])
+        .ok()
+        .and_then(|t| crate::json::parse(t).ok())
+        .and_then(|v| v.get("id").and_then(crate::json::Value::as_u64))
+        .unwrap_or(0)
+}
+
+/// Write one frame to a nonblocking socket, retrying short writes with
+/// a bounded stall budget. Marks the connection dead on failure.
+fn write_frame(conn: &mut Conn, kind: FrameKind, payload: &[u8]) {
+    if conn.dead {
+        return;
+    }
+    let bytes = encode_frame(kind, payload);
+    let mut off = 0;
+    let start = Instant::now();
+    while off < bytes.len() {
+        match conn.stream.write(&bytes[off..]) {
+            Ok(0) => {
+                conn.dead = true;
+                return;
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if start.elapsed() > WRITE_STALL_LIMIT {
+                    conn.dead = true;
+                    return;
+                }
+                thread::sleep(Duration::from_micros(100));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                conn.dead = true;
+                return;
+            }
+        }
+    }
+}

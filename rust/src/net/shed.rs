@@ -1,0 +1,141 @@
+//! Telemetry-driven load shedding: refuse work the service already
+//! knows it cannot finish in time.
+//!
+//! Admission ([`super::admission`]) answers "is this client within its
+//! contract?"; shedding answers "can the *service* honour this
+//! request's deadline right now?". The input is the coordinator's live
+//! [`TelemetryView`]: for the best shard serving the op,
+//! `estimated_wait = (queue_depth + 1) x measured group latency`
+//! (EWMA, seconds). If that projection already exceeds the declared
+//! deadline, the server sheds with an `Overloaded` frame instead of
+//! queueing work that will only expire server-side — the client gets
+//! its answer *now* at zero kernel cost, and the queue stays short for
+//! requests that can still make it.
+//!
+//! Requests without a deadline are never shed (they asked for
+//! best-effort), and cold telemetry admits — shedding on guesses would
+//! refuse the very traffic that warms the estimator.
+
+use crate::backend::Op;
+use crate::coordinator::TelemetryView;
+
+/// The shedding rule. `headroom` scales the wait projection before
+/// comparing against the deadline: `1.0` sheds exactly at the
+/// break-even point, above 1.0 sheds earlier (pessimistic), below 1.0
+/// gambles on the EWMA overestimating.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedPolicy {
+    pub headroom: f64,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> ShedPolicy {
+        ShedPolicy { headroom: 1.0 }
+    }
+}
+
+impl ShedPolicy {
+    /// Judge one request: `Ok(())` to enqueue, `Err(retry_after_ms)`
+    /// to shed. The retry hint is the projected excess over the
+    /// deadline — the earliest moment retrying could plausibly succeed
+    /// if the queue only drains.
+    pub fn assess(
+        &self,
+        view: &TelemetryView<'_>,
+        op: Op,
+        deadline_ms: Option<u64>,
+    ) -> Result<(), u64> {
+        let Some(deadline_ms) = deadline_ms else {
+            return Ok(());
+        };
+        let Some(wait_s) = view.best_estimated_wait(op) else {
+            return Ok(()); // cold telemetry: admit and learn
+        };
+        let projected_ms = wait_s * 1000.0 * self.headroom.max(0.0);
+        if projected_ms <= deadline_ms as f64 {
+            return Ok(());
+        }
+        let excess = (projected_ms - deadline_ms as f64).ceil();
+        // cap the hint at a minute — beyond that it is "much later"
+        Err((excess as u64).clamp(1, 60_000))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::routing::ShardMeta;
+
+    fn warm_meta(latency_s: f64) -> ShardMeta {
+        let m = ShardMeta::new("native");
+        // telemetry EWMA seeds with the first observation, so one
+        // record pins the measured group latency exactly
+        m.telemetry().record(Op::Add22, 1024, latency_s, 0);
+        m
+    }
+
+    #[test]
+    fn no_deadline_is_never_shed() {
+        let metas = [warm_meta(10.0)];
+        let view = TelemetryView::new(&metas);
+        assert!(ShedPolicy::default().assess(&view, Op::Add22, None).is_ok());
+    }
+
+    #[test]
+    fn cold_telemetry_admits() {
+        let metas = [ShardMeta::new("native")];
+        let view = TelemetryView::new(&metas);
+        assert!(ShedPolicy::default().assess(&view, Op::Add22, Some(1)).is_ok());
+    }
+
+    #[test]
+    fn hopeless_deadline_sheds_with_excess_hint() {
+        // 125 ms measured latency (exact in binary), empty queue:
+        // wait = 1 x 125 ms
+        let metas = [warm_meta(0.125)];
+        let view = TelemetryView::new(&metas);
+        let p = ShedPolicy::default();
+        // deadline 50 ms: projected 125 ms -> shed, retry 75 ms
+        let retry = p.assess(&view, Op::Add22, Some(50)).unwrap_err();
+        assert_eq!(retry, 75);
+        // deadline 125 ms: exactly break-even -> admit
+        assert!(p.assess(&view, Op::Add22, Some(125)).is_ok());
+    }
+
+    #[test]
+    fn queue_depth_scales_the_projection() {
+        let metas = [warm_meta(0.0625)];
+        metas[0].enter();
+        metas[0].enter();
+        metas[0].enter();
+        // depth 3 -> wait = (3 + 1) x 62.5 ms = 250 ms
+        let view = TelemetryView::new(&metas);
+        let p = ShedPolicy::default();
+        assert!(p.assess(&view, Op::Add22, Some(250)).is_ok());
+        assert_eq!(p.assess(&view, Op::Add22, Some(200)).unwrap_err(), 50);
+    }
+
+    #[test]
+    fn best_shard_wins_not_worst() {
+        // one drowning shard + one idle fast shard: admit
+        let drowning = warm_meta(5.0);
+        for _ in 0..10 {
+            drowning.enter();
+        }
+        let fast = warm_meta(0.001);
+        let metas = [drowning, fast];
+        let view = TelemetryView::new(&metas);
+        assert!(ShedPolicy::default().assess(&view, Op::Add22, Some(10)).is_ok());
+    }
+
+    #[test]
+    fn headroom_shifts_the_break_even_point() {
+        let metas = [warm_meta(0.125)];
+        let view = TelemetryView::new(&metas);
+        // 2x headroom: 125 ms measured projects as 250 ms
+        let pessimist = ShedPolicy { headroom: 2.0 };
+        assert!(pessimist.assess(&view, Op::Add22, Some(200)).is_err());
+        let neutral = ShedPolicy::default();
+        assert!(neutral.assess(&view, Op::Add22, Some(200)).is_ok());
+    }
+}
