@@ -57,11 +57,16 @@ impl Value {
     }
 
     /// Integer accessor for wire fields carried as JSON numbers (ids,
-    /// counts, millisecond budgets). Exact for |n| < 2^53, which covers
-    /// every field the protocol defines.
+    /// counts, millisecond budgets). f64 represents every integer only
+    /// below 2^53, so values at or above that are rejected — a wire id
+    /// that would silently alias through the Number round-trip (and
+    /// mis-correlate replies) fails typed instead.
     pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
         match self {
-            Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            Value::Number(n) if *n >= 0.0 && n.fract() == 0.0 && *n < MAX_EXACT => {
+                Some(*n as u64)
+            }
             _ => None,
         }
     }
@@ -453,5 +458,17 @@ mod tests {
         assert_eq!(Value::Number(-1.0).as_u64(), None);
         assert_eq!(Value::Number(42.0).as_u64(), Some(42));
         assert_eq!(Value::String("42".into()).as_u64(), None);
+    }
+
+    #[test]
+    fn as_u64_rejects_beyond_exact_f64_range() {
+        // 2^53 - 1 is the last integer every neighbour of which f64
+        // still distinguishes; from 2^53 up, distinct u64 ids alias
+        let max_exact = (1u64 << 53) - 1;
+        assert_eq!(Value::Number(max_exact as f64).as_u64(), Some(max_exact));
+        assert_eq!(Value::Number((1u64 << 53) as f64).as_u64(), None);
+        // 2^53 + 1 parses to the f64 2^53 — must not yield a wrong id
+        assert_eq!(parse("9007199254740993").unwrap().as_u64(), None);
+        assert_eq!(Value::Number(1e18).as_u64(), None);
     }
 }

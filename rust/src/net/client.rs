@@ -44,6 +44,12 @@ impl WireClient {
         let hello = match frame.kind {
             FrameKind::ServerHello => ServerHello::decode(&frame.payload)?,
             FrameKind::Error => return Err(decode_error(&frame.payload)?),
+            // the server's accept cap refuses connections with the
+            // same retryable backoff signal as per-request pushback
+            FrameKind::Overloaded => {
+                let o = OverloadedFrame::decode(&frame.payload)?;
+                return Err(WireError::Overloaded { retry_after_ms: o.retry_after_ms });
+            }
             k => {
                 return Err(WireError::BadPayload(format!(
                     "expected ServerHello, got {k:?}"

@@ -5,9 +5,11 @@
 //! hand-off) feeds a small pool of **connection workers**. Each worker
 //! owns a disjoint set of connections and runs a readiness-style sweep
 //! loop over them — nonblocking reads into a per-connection
-//! [`FrameBuffer`], frame dispatch, and [`Ticket::try_wait`] polling
-//! of in-flight requests — so no thread ever blocks on one client
-//! while another has work ready.
+//! [`FrameBuffer`] (capped at `READ_BACKLOG_CAP` undrained bytes,
+//! after which TCP backpressure throttles the sender), frame dispatch,
+//! [`Ticket::try_wait`] polling of in-flight requests, and nonblocking
+//! flushes of each connection's outbound backlog — so no thread ever
+//! blocks on one client while another has work ready.
 //!
 //! **Fairness**: each sweep admits at most *one* Submit per connection
 //! (control frames drain freely). A bulk client that pipelines a
@@ -16,9 +18,10 @@
 //! round-robin arrivals it can pack into shared launches — one hot
 //! socket cannot monopolise the batch former.
 //!
-//! **Pushback** is layered, cheapest first: telemetry-driven shedding
-//! ([`ShedPolicy`], zero state), then the connection's token-bucket
-//! admission ([`Admission`]). Both answer with an
+//! **Pushback** is layered, cheapest first: the accept-time connection
+//! cap, then telemetry-driven shedding ([`ShedPolicy`], zero state),
+//! then the connection's token-bucket admission ([`Admission`]). All
+//! three answer with an
 //! [`OverloadedFrame`] carrying `retry_after_ms`; typed request
 //! failures travel as [`ErrorFrame`]s with stable
 //! [`crate::backend::ServiceError::to_code`] codes; protocol
@@ -38,7 +41,8 @@ use crate::coordinator::{Handle, Plan, Ticket};
 use super::admission::{Admission, AdmissionConfig, ClientClass};
 use super::frame::{
     encode_frame, ClientHello, ErrorFrame, Frame, FrameBuffer, FrameKind, OverloadedFrame,
-    Reply, ServerHello, ShardInfo, Status, Submit, TenantStatus, WireError, VERSION,
+    Reply, ServerHello, ShardInfo, Status, Submit, TenantStatus, WireError, HEADER_LEN,
+    MAX_FRAME_BYTES, VERSION,
 };
 use super::shed::ShedPolicy;
 
@@ -70,9 +74,17 @@ const IDLE_SLEEP: Duration = Duration::from_micros(300);
 const READ_CHUNK: usize = 64 * 1024;
 /// Reads drained per connection per sweep before yielding to peers.
 const READS_PER_SWEEP: usize = 4;
-/// Budget for retrying a nonblocking write before declaring the
-/// client unresponsive and dropping the connection.
+/// Per-connection ceiling on buffered-but-undrained inbound bytes.
+/// Once the backlog is past this, the sweep stops reading the socket
+/// and lets TCP backpressure throttle the sender — a client pipelining
+/// thousands of small submits cannot balloon server memory. Sized so
+/// one maximum frame can always complete.
+const READ_BACKLOG_CAP: usize = MAX_FRAME_BYTES + HEADER_LEN + READ_CHUNK;
+/// Budget for an outbound backlog to make zero byte progress before
+/// the client is declared unresponsive and dropped.
 const WRITE_STALL_LIMIT: Duration = Duration::from_secs(5);
+/// Backoff hint sent when the accept cap refuses a connection.
+const ACCEPT_RETRY_MS: u64 = 100;
 
 /// A live TCP front end serving one coordinator handle. Dropping the
 /// server stops the acceptor and workers and closes every connection;
@@ -177,10 +189,20 @@ impl Drop for WireServer {
     }
 }
 
-/// Best-effort "over capacity" verdict for a refused accept.
+/// Best-effort "over capacity" verdict for a refused accept: a
+/// retryable `Overloaded` frame (id 0 — connection-level), the same
+/// backoff signal every other capacity refusal uses, not a hard
+/// typed error.
 fn refuse(mut stream: TcpStream) {
-    let ef = ErrorFrame { id: 0, code: 0, message: "server at connection capacity".into() };
-    let _ = stream.write_all(&encode_frame(FrameKind::Error, &ef.encode()));
+    let over = OverloadedFrame { id: 0, retry_after_ms: ACCEPT_RETRY_MS };
+    let _ = stream.write_all(&encode_frame(FrameKind::Overloaded, &over.encode()));
+    // drain what the client already sent (typically its hello) before
+    // closing — dropping a socket with unread inbound data turns the
+    // close into a RST that can destroy the refusal frame in flight
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    let mut sink = [0u8; 256];
+    while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
 }
 
 /// One request dispatched into the coordinator, awaiting its reply.
@@ -199,6 +221,12 @@ struct Conn {
     admission: Admission,
     hello_done: bool,
     pending: Vec<Pending>,
+    /// Outbound bytes the socket has not yet accepted; flushed
+    /// incrementally each sweep so a slow reader never stalls the
+    /// worker. Growth is bounded in time by [`WRITE_STALL_LIMIT`].
+    out: Vec<u8>,
+    /// When the outbound backlog last stopped making progress.
+    stalled_since: Option<Instant>,
     dead: bool,
 }
 
@@ -212,6 +240,8 @@ impl Conn {
             admission: Admission::new(cfg.limits(ClientClass::Bulk), Instant::now()),
             hello_done: false,
             pending: Vec::new(),
+            out: Vec::new(),
+            stalled_since: None,
             dead: false,
         }
     }
@@ -257,25 +287,32 @@ impl ConnWorker {
     fn sweep(&self, conn: &mut Conn, scratch: &mut [u8]) -> bool {
         let mut progress = false;
 
-        // 1. pull whatever the socket has (bounded per sweep)
-        for _ in 0..READS_PER_SWEEP {
-            match conn.stream.read(scratch) {
-                Ok(0) => {
-                    conn.dead = true;
-                    break;
-                }
-                Ok(n) => {
-                    conn.fb.push(&scratch[..n]);
-                    progress = true;
-                    if n < scratch.len() {
+        // 0. push any outbound backlog from earlier sweeps
+        progress |= flush_out(conn);
+
+        // 1. pull whatever the socket has (bounded per sweep) — unless
+        //    undrained frames already exceed the backlog cap, in which
+        //    case stop reading and let TCP backpressure do its job
+        if conn.fb.pending_bytes() < READ_BACKLOG_CAP {
+            for _ in 0..READS_PER_SWEEP {
+                match conn.stream.read(scratch) {
+                    Ok(0) => {
+                        conn.dead = true;
                         break;
                     }
-                }
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(_) => {
-                    conn.dead = true;
-                    break;
+                    Ok(n) => {
+                        conn.fb.push(&scratch[..n]);
+                        progress = true;
+                        if n < scratch.len() {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
                 }
             }
         }
@@ -334,17 +371,33 @@ impl ConnWorker {
 
     fn dispatch_frame(&self, conn: &mut Conn, frame: Frame) {
         match frame.kind {
-            FrameKind::ClientHello => match ClientHello::decode(&frame.payload) {
-                Ok(hello) => {
-                    conn.tenant = hello.tenant;
-                    conn.admission =
-                        Admission::new(self.admission.limits(hello.class), Instant::now());
-                    conn.hello_done = true;
-                    let sh = ServerHello { protocol: VERSION, shards: self.shard_infos() };
-                    write_frame(conn, FrameKind::ServerHello, &sh.encode());
+            FrameKind::ClientHello => {
+                if conn.hello_done {
+                    // a second hello would mint a fresh Admission — a
+                    // full bucket and zeroed in-flight budget — letting
+                    // a client launder away every rate limit by
+                    // re-helloing after each denial. Protocol error.
+                    self.protocol_error(
+                        conn,
+                        &WireError::BadPayload(
+                            "duplicate ClientHello: admission is fixed at connection setup"
+                                .into(),
+                        ),
+                    );
+                    return;
                 }
-                Err(e) => self.protocol_error(conn, &e),
-            },
+                match ClientHello::decode(&frame.payload) {
+                    Ok(hello) => {
+                        conn.tenant = hello.tenant;
+                        conn.admission =
+                            Admission::new(self.admission.limits(hello.class), Instant::now());
+                        conn.hello_done = true;
+                        let sh = ServerHello { protocol: VERSION, shards: self.shard_infos() };
+                        write_frame(conn, FrameKind::ServerHello, &sh.encode());
+                    }
+                    Err(e) => self.protocol_error(conn, &e),
+                }
+            }
             FrameKind::Submit => {
                 if !conn.hello_done {
                     self.protocol_error(conn, &WireError::BadPayload(
@@ -490,34 +543,56 @@ fn submit_id_best_effort(payload: &[u8]) -> u64 {
         .unwrap_or(0)
 }
 
-/// Write one frame to a nonblocking socket, retrying short writes with
-/// a bounded stall budget. Marks the connection dead on failure.
+/// Queue one frame on the connection's outbound buffer and push as
+/// much as the socket will take right now. Whatever the socket refuses
+/// is flushed incrementally by later sweeps — no sleeps, no retries —
+/// so one client with a full receive window never stalls the other
+/// connections its worker owns.
 fn write_frame(conn: &mut Conn, kind: FrameKind, payload: &[u8]) {
     if conn.dead {
         return;
     }
     let bytes = encode_frame(kind, payload);
+    conn.out.extend_from_slice(&bytes);
+    flush_out(conn);
+}
+
+/// Nonblocking drain of the outbound backlog. Returns whether any byte
+/// moved. A backlog that makes zero progress for [`WRITE_STALL_LIMIT`]
+/// marks the connection dead (which also bounds how long an unread
+/// backlog can keep growing).
+fn flush_out(conn: &mut Conn) -> bool {
+    if conn.dead || conn.out.is_empty() {
+        return false;
+    }
     let mut off = 0;
-    let start = Instant::now();
-    while off < bytes.len() {
-        match conn.stream.write(&bytes[off..]) {
+    while off < conn.out.len() {
+        match conn.stream.write(&conn.out[off..]) {
             Ok(0) => {
                 conn.dead = true;
-                return;
+                break;
             }
             Ok(n) => off += n,
-            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
-                if start.elapsed() > WRITE_STALL_LIMIT {
-                    conn.dead = true;
-                    return;
-                }
-                thread::sleep(Duration::from_micros(100));
-            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(_) => {
                 conn.dead = true;
-                return;
+                break;
             }
         }
     }
+    let moved = off > 0;
+    if moved {
+        conn.out.drain(..off);
+    }
+    if conn.out.is_empty() || moved {
+        conn.stalled_since = None;
+    }
+    if !conn.out.is_empty() {
+        let since = *conn.stalled_since.get_or_insert_with(Instant::now);
+        if since.elapsed() > WRITE_STALL_LIMIT {
+            conn.dead = true;
+        }
+    }
+    moved
 }

@@ -8,8 +8,8 @@ use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::{Plan, Service, ServiceSpec};
 use ffgpu::harness::workload;
 use ffgpu::net::{
-    encode_frame, AdmissionConfig, ClassLimits, ClientClass, FrameKind, ShedPolicy,
-    WireClient, WireConfig, WireError, WireServer,
+    encode_frame, read_frame, AdmissionConfig, ClassLimits, ClientClass, ClientHello,
+    ErrorFrame, FrameKind, ShedPolicy, WireClient, WireConfig, WireError, WireServer,
 };
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -266,6 +266,50 @@ fn malformed_frames_never_kill_the_server() {
         .call(Op::Mul12, workload::planes_for(Op::Mul12.name(), 256, 9), None)
         .expect("server alive after corpus");
     assert_eq!(out[0].len(), 256);
+}
+
+/// A second ClientHello must not mint a fresh Admission (full token
+/// bucket, zeroed in-flight budget) — that would let a rate-limited
+/// client reset its quota after every denial. The server answers with
+/// a connection-level protocol error and closes.
+#[test]
+fn duplicate_hello_is_a_protocol_error() {
+    let (_srv, _svc, addr) = serve(WireConfig::default());
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let hello = ClientHello { tenant: "twice".into(), class: ClientClass::Standard };
+    s.write_all(&encode_frame(FrameKind::ClientHello, &hello.encode())).expect("hello 1");
+    let first = read_frame(&mut s).expect("read").expect("server hello");
+    assert_eq!(first.kind, FrameKind::ServerHello);
+    // the re-hello that would have laundered the rate limit away
+    s.write_all(&encode_frame(FrameKind::ClientHello, &hello.encode())).expect("hello 2");
+    let verdict = read_frame(&mut s).expect("read").expect("error frame");
+    assert_eq!(verdict.kind, FrameKind::Error);
+    let ef = ErrorFrame::decode(&verdict.payload).expect("decode");
+    assert_eq!(ef.id, 0, "connection-level error");
+    // ...and the connection is closed behind it
+    assert!(matches!(read_frame(&mut s), Ok(None) | Err(_)));
+}
+
+/// Connections beyond `max_conns` are refused with the same retryable
+/// Overloaded signal as per-request pushback, not a hard error.
+#[test]
+fn over_capacity_connect_is_overloaded_with_retry_hint() {
+    let cfg = WireConfig { max_conns: 1, ..WireConfig::default() };
+    let (_srv, _svc, addr) = serve(cfg);
+    // first connection holds the single slot (hello completed, so the
+    // acceptor has definitely counted it)
+    let mut holder =
+        WireClient::connect(&addr, "holder", ClientClass::Standard).expect("connect");
+    match WireClient::connect(&addr, "spill", ClientClass::Standard) {
+        Err(WireError::Overloaded { retry_after_ms }) => assert!(retry_after_ms >= 1),
+        other => panic!("expected Overloaded refusal, got {:?}", other.map(|_| ())),
+    }
+    // the admitted client is still healthy
+    let out = holder
+        .call(Op::Add22, workload::planes_for(Op::Add22.name(), 64, 2), None)
+        .expect("holder reply");
+    assert_eq!(out[0].len(), 64);
 }
 
 #[test]
