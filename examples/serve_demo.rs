@@ -17,6 +17,9 @@
 //! FFGPU_CHUNK_ELEMS=65536 cargo run --release --example serve_demo
 //! FFGPU_OBSERVE=0.25 FFGPU_OBSERVE_MODELS=nv35,r300 \
 //!     cargo run --release --example serve_demo          # accuracy observatory
+//! FFGPU_CACHE_MB=64 cargo run --release --example serve_demo  # result cache
+//! FFGPU_FUSE_WINDOW_MS=2 FFGPU_ADAPTIVE_LADDER=1 \
+//!     cargo run --release --example serve_demo      # waste-fed fuse ladders
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! FFGPU_LISTEN=127.0.0.1:7070 FFGPU_SERVE_SECS=30 \
 //!     cargo run --release --example serve_demo          # TCP wire front end
@@ -61,6 +64,20 @@ fn main() {
     // the L2-sized auto chunk, which is also the default)
     let chunk_env: Option<usize> =
         std::env::var("FFGPU_CHUNK_ELEMS").ok().and_then(|s| s.parse().ok());
+    // FFGPU_CACHE_MB arms the content-addressed result cache (MiB byte
+    // budget); the workload below pins itself to a small repeated-grid
+    // set when it's armed so hits and single-flight coalescing show up
+    let cache_mb: usize = std::env::var("FFGPU_CACHE_MB")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    // FFGPU_ADAPTIVE_LADDER=1 lets every shard densify its fuse ladder
+    // around sizes whose padding-waste EWMA runs hot (needs the fusion
+    // stage armed via FFGPU_FUSE_WINDOW_MS)
+    let adaptive_ladder = matches!(
+        std::env::var("FFGPU_ADAPTIVE_LADDER").as_deref(),
+        Ok("1") | Ok("true")
+    );
     // FFGPU_OBSERVE + FFGPU_OBSERVE_MODELS arm the accuracy
     // observatory: that fraction of the demo traffic is mirrored onto
     // a native reference + the listed GPU models, and the live
@@ -115,16 +132,30 @@ fn main() {
         let obs = ObservatorySpec::from_cli(f, &observe_models).expect("observe spec");
         spec = spec.with_observatory(obs);
     }
+    if cache_mb > 0 {
+        spec = spec.with_cache_mb(cache_mb);
+    }
+    if adaptive_ladder {
+        spec = spec.with_adaptive_ladder(true);
+    }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
     println!(
-        "shards: [{}]  routing: {}  fusion: {}  observatory: {}",
+        "shards: [{}]  routing: {}  fusion: {}  observatory: {}  cache: {}",
         labels.join(", "),
         routing.name(),
-        if fuse_window_ms > 0 { format!("{fuse_window_ms}ms window") } else { "off".into() },
+        if fuse_window_ms > 0 {
+            format!(
+                "{fuse_window_ms}ms window{}",
+                if adaptive_ladder { " (adaptive ladder)" } else { "" }
+            )
+        } else {
+            "off".into()
+        },
         match &spec.observe {
             Some(o) => format!("{:.0}% -> [{}]", o.fraction * 100.0, o.models.join(", ")),
             None => "off".into(),
-        }
+        },
+        if cache_mb > 0 { format!("{cache_mb} MiB") } else { "off".into() }
     );
     let fallback = spec.clone();
     let svc = match Service::start(spec) {
@@ -187,8 +218,15 @@ fn main() {
             let mut missed = 0u64;
             for round in 0..40 {
                 let op = ops[(c as usize + round) % ops.len()];
-                let n = 256 + rng.below(top);
-                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                // with the result cache armed, every client draws from
+                // the same small repeated-grid set: later rounds (and
+                // concurrent identical dispatches) hit or coalesce
+                let (n, seed) = if cache_mb > 0 {
+                    (4096, (round % 5) as u64)
+                } else {
+                    (256 + rng.below(top), rng.next_u64())
+                };
+                let planes = workload::planes_for(op.name(), n, seed);
                 let plan = Plan::new(op, planes).expect("plan");
                 // timer spans dispatch -> reply only, so the printed
                 // percentiles are honest client latency
@@ -259,6 +297,22 @@ fn main() {
         println!("shard {i} [{label}]{tier}: requests={} batches={} elements={} mean lat={:.2}ms",
                  s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
         println!("  measured Melem/s: {}", rates.join("  "));
+    }
+    // the result-cache banner: how much traffic resolved before routing
+    if let Some(cs) = svc.cache_stats() {
+        println!(
+            "cache: hits={} misses={} coalesced={} hit-rate={:.1}% \
+             inserted={}B evictions={} live={}B/{}B",
+            cs.hits, cs.misses, cs.coalesced, cs.hit_rate() * 100.0,
+            cs.inserted_bytes, cs.evictions, cs.live_bytes, cs.budget_bytes
+        );
+        // the repeated-grid workload above guarantees warm traffic:
+        // zero hits here would mean the cache is broken, so fail loudly
+        // (CI smokes run with FFGPU_CACHE_MB=64 and rely on this)
+        assert!(
+            cs.hits > 0,
+            "result cache armed with a repeated-grid workload but saw no hits"
+        );
     }
     // the live accuracy surface the observatory measured beside the run
     if let Some(rep) = svc.accuracy_report() {

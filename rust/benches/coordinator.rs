@@ -46,6 +46,18 @@
 //! p50/p95 gap is the transport tax — and an over-quota bulk client
 //! runs against a tightened token bucket to record the pushback rate;
 //! both land in the `wire` section of `BENCH_coordinator.json`.
+//!
+//! Cache instrumentation (the content-addressed result cache): the
+//! same concurrent workload runs twice against a single-worker shard —
+//! once with every grid distinct (all misses, every request executes)
+//! and once with every grid drawn from a primed repeated set (all
+//! hits, no request touches the shard) — at 65536 and 1048576 lanes;
+//! warm-vs-cold req/s and p50/p95 land in the `cache` section of
+//! `BENCH_coordinator.json`, with warm/cold ≥ 10x printed as an
+//! `[ok]`/`[!!]` shape check at 1M lanes. The same section carries the
+//! waste-fed fuse-ladder comparison: an awkwardly-sized request stream
+//! over the static ladder vs `adaptive_ladder`, whose padding-waste
+//! gap is asserted (the EWMA trigger is deterministic).
 
 use ffgpu::backend::{
     BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
@@ -120,6 +132,24 @@ struct WireRow {
     p95_ms: f64,
     completed: u64,
     overloaded: u64,
+}
+
+/// One `cache` row of `BENCH_coordinator.json`: the result cache's
+/// warm-vs-cold serving surface (`cache-cold` / `cache-warm`
+/// scenarios) and the waste-fed fuse-ladder comparison
+/// (`ladder-static` / `ladder-adaptive`, where `padding_fraction` is
+/// the payload and the hit/miss counters stay zero).
+struct CacheRow {
+    scenario: &'static str,
+    req_n: usize,
+    clients: usize,
+    rounds: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    hits: u64,
+    misses: u64,
+    padding_fraction: f64,
 }
 
 /// Ops the routing comparison cycles through. Includes `div22` — the
@@ -332,7 +362,10 @@ fn observatory_rows() -> Vec<AccRow> {
         .collect()
 }
 
-fn emit_json(rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow], wire: &[WireRow]) {
+fn emit_json(
+    rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow], wire: &[WireRow],
+    cache: &[CacheRow],
+) {
     let mut out = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \
          \"melem_per_s\": \"1e6 elements/s\", \"canary_share\": \
@@ -429,15 +462,39 @@ fn emit_json(rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow], wire: &[WireR
             if i + 1 < wire.len() { "," } else { "" },
         ));
     }
+    // the result cache + waste-fed planning: warm-vs-cold serving and
+    // static-vs-adaptive ladder padding waste
+    out.push_str("  ],\n  \"cache\": [\n");
+    for (i, c) in cache.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"req_n\": {}, \"clients\": {}, \
+             \"rounds\": {}, \"req_per_s\": {:.1}, \"p50_ms\": {:.3}, \
+             \"p95_ms\": {:.3}, \"hits\": {}, \"misses\": {}, \
+             \"padding_fraction\": {:.4}}}{}\n",
+            c.scenario,
+            c.req_n,
+            c.clients,
+            c.rounds,
+            c.req_per_s,
+            c.p50_ms,
+            c.p95_ms,
+            c.hits,
+            c.misses,
+            c.padding_fraction,
+            if i + 1 < cache.len() { "," } else { "" },
+        ));
+    }
     out.push_str("  ]\n}\n");
     let path = "BENCH_coordinator.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!(
-            "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells, {} wire rows)",
+            "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells, {} wire rows, \
+             {} cache rows)",
             rows.len(),
             tiers.len(),
             accuracy.len(),
-            wire.len()
+            wire.len(),
+            cache.len()
         ),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
@@ -770,6 +827,196 @@ fn wire_rows() -> Vec<WireRow> {
     rows
 }
 
+/// Ops the cache instrument cycles through — `div22` keeps the
+/// expensive tail in the mix so the cold phase pays real compute.
+const CACHE_OPS: [Op; 3] = [Op::Add22, Op::Mul22, Op::Div22];
+
+/// One measured phase of the cache instrument: `clients` concurrent
+/// threads, `rounds` dispatches each, cycling [`CACHE_OPS`]. With
+/// `warm_seed` set every thread draws from the same fixed grid per op
+/// (repeats → hits); without it every grid is distinct (→ misses).
+fn cache_phase(
+    svc: &Service, clients: usize, rounds: usize, req_n: usize, warm_seed: Option<u64>,
+) -> (Vec<f64>, f64) {
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xCAC4E + c as u64);
+            let mut lats = Vec::with_capacity(rounds);
+            for round in 0..rounds {
+                let op = CACHE_OPS[(c + round) % CACHE_OPS.len()];
+                let seed = warm_seed.unwrap_or_else(|| rng.next_u64());
+                let planes = workload::planes_for(op.name(), req_n, seed);
+                let t = Instant::now();
+                h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
+                lats.push(t.elapsed().as_secs_f64());
+            }
+            lats
+        }));
+    }
+    let mut lats: Vec<f64> =
+        joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (lats, wall)
+}
+
+/// Result-cache instrument: the same concurrent workload against a
+/// single-worker shard, cold (every grid distinct — every request
+/// executes, serialized on the one worker) vs warm (every grid from a
+/// primed repeated set — every request resolves at the cache, in
+/// parallel, without touching the shard). The warm phase's hit count
+/// is exact and asserted: nothing inserts between priming and the
+/// phase, so nothing can evict the primed entries.
+fn cache_rows() -> Vec<CacheRow> {
+    println!("== result cache: cold distinct grids vs warm repeated grids (single-worker shard)");
+    let mut rows = Vec::new();
+    let clients = 4usize;
+    for (req_n, rounds) in [(65_536usize, 40usize), (1_048_576, 8)] {
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1).with_cache_mb(512),
+        )
+        .unwrap();
+        let h = svc.handle();
+        // shard warmup (crew spin-up, page faults) — one distinct grid
+        h.dispatch(
+            Plan::new(Op::Div22, workload::planes_for("div22", req_n, 0xFEED)).unwrap(),
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+
+        let base = svc.cache_stats().unwrap();
+        let (cold_lats, cold_wall) = cache_phase(&svc, clients, rounds, req_n, None);
+        let after_cold = svc.cache_stats().unwrap();
+        let cold = CacheRow {
+            scenario: "cache-cold",
+            req_n,
+            clients,
+            rounds,
+            req_per_s: (clients * rounds) as f64 / cold_wall,
+            p50_ms: percentile(&cold_lats, 0.50) * 1e3,
+            p95_ms: percentile(&cold_lats, 0.95) * 1e3,
+            hits: after_cold.hits - base.hits,
+            misses: after_cold.misses - base.misses,
+            padding_fraction: 0.0,
+        };
+
+        // prime one grid per op, then measure pure repeats
+        for op in CACHE_OPS {
+            let planes = workload::planes_for(op.name(), req_n, 0x5EED);
+            h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
+        }
+        let primed = svc.cache_stats().unwrap();
+        let (warm_lats, warm_wall) =
+            cache_phase(&svc, clients, rounds, req_n, Some(0x5EED));
+        let after_warm = svc.cache_stats().unwrap();
+        let warm = CacheRow {
+            scenario: "cache-warm",
+            req_n,
+            clients,
+            rounds,
+            req_per_s: (clients * rounds) as f64 / warm_wall,
+            p50_ms: percentile(&warm_lats, 0.50) * 1e3,
+            p95_ms: percentile(&warm_lats, 0.95) * 1e3,
+            hits: after_warm.hits - primed.hits,
+            misses: after_warm.misses - primed.misses,
+            padding_fraction: 0.0,
+        };
+        assert_eq!(
+            warm.hits,
+            (clients * rounds) as u64,
+            "warm phase over primed grids must be all hits"
+        );
+        for r in [&cold, &warm] {
+            println!(
+                "  {:<12} {clients} clients x {req_n:>8} elems x {rounds:>3}: \
+                 {:>8.0} req/s  p50={:.2}ms p95={:.2}ms  hits={} misses={}",
+                r.scenario, r.req_per_s, r.p50_ms, r.p95_ms, r.hits, r.misses,
+            );
+        }
+        // acceptance shape: repeated grids must serve an order of
+        // magnitude faster warm than cold; printed, not asserted
+        // (shared CI hosts are too noisy for a hard perf gate)
+        if req_n >= 1_000_000 {
+            println!(
+                "  [{}] warm/cold req/s @ {req_n}: {:.1}x",
+                if warm.req_per_s >= 10.0 * cold.req_per_s { "ok" } else { "!!" },
+                warm.req_per_s / cold.req_per_s
+            );
+        }
+        rows.push(cold);
+        rows.push(warm);
+    }
+    rows
+}
+
+/// Waste-fed planning instrument: a stream of awkwardly-sized requests
+/// (6000 lanes against a 1024/4096/16384/65536 ladder) served with the
+/// static ladder vs `adaptive_ladder`. The first batch tail-splits to
+/// 4096+4096 (26.8% waste) either way and seeds the waste EWMA hot
+/// (past the 15% threshold); from the second batch the adaptive ladder
+/// densifies and plans 2560+4096 (9.9% waste). The gap is
+/// deterministic, so it's asserted.
+fn ladder_rows() -> Vec<CacheRow> {
+    println!("== fuse ladder: static vs waste-fed adaptive (6000-lane add22 stream)");
+    let (req_n, rounds) = (6000usize, 40usize);
+    let mut rows = Vec::new();
+    let mut pfs = Vec::new();
+    for (adaptive, scenario) in [(false, "ladder-static"), (true, "ladder-adaptive")] {
+        let mut spec = ServiceSpec::uniform(BackendSpec::native(), 1)
+            .with_fuse_window(Duration::from_millis(1))
+            .with_fuse_sizes(vec![1024, 4096, 16384, 65536]);
+        if adaptive {
+            spec = spec.with_adaptive_ladder(true);
+        }
+        let svc = Service::start(spec).unwrap();
+        let h = svc.handle();
+        let mut rng = Rng::new(0x1ADE);
+        let mut lats = Vec::with_capacity(rounds);
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            let planes = workload::planes_for("add22", req_n, rng.next_u64());
+            let t = Instant::now();
+            h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap().wait().unwrap();
+            lats.push(t.elapsed().as_secs_f64());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        // metrics for a batch land after its reply — settle first
+        std::thread::sleep(Duration::from_millis(50));
+        let pf = svc.metrics().padding_fraction();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        println!(
+            "  {scenario:<16} {rounds} x {req_n} elems: pad={:>5.1}%  {:>6.0} req/s",
+            pf * 100.0,
+            rounds as f64 / wall
+        );
+        pfs.push(pf);
+        rows.push(CacheRow {
+            scenario,
+            req_n,
+            clients: 1,
+            rounds,
+            req_per_s: rounds as f64 / wall,
+            p50_ms: percentile(&lats, 0.50) * 1e3,
+            p95_ms: percentile(&lats, 0.95) * 1e3,
+            hits: 0,
+            misses: 0,
+            padding_fraction: pf,
+        });
+    }
+    assert!(
+        pfs[1] < pfs[0],
+        "adaptive ladder must waste less padding than static: adaptive={:.3} vs \
+         static={:.3}",
+        pfs[1],
+        pfs[0]
+    );
+    rows
+}
+
 /// A 1 ms-deadline ticket against a saturated shard must resolve
 /// `DeadlineExceeded` promptly — and the shard must survive to serve
 /// the next request (the ROADMAP's "a stuck canary can't hold a
@@ -968,5 +1215,9 @@ fn main() {
     // the TCP serving surface: loopback overhead and pushback
     let wire = wire_rows();
 
-    emit_json(&rows, &tiers, &accuracy, &wire);
+    // the result cache and waste-fed fuse-ladder planning
+    let mut cache = cache_rows();
+    cache.extend(ladder_rows());
+
+    emit_json(&rows, &tiers, &accuracy, &wire, &cache);
 }

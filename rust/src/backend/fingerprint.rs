@@ -1,0 +1,188 @@
+//! Content fingerprinting of request planes — the keying half of the
+//! coordinator's result cache
+//! ([`crate::coordinator::cache::ResultCache`]).
+//!
+//! Every catalogue operator is a pure, deterministic function of its
+//! input planes (the backend-parity contract: bit-identical in,
+//! bit-identical out), so a request's identity is exactly
+//! `(op, plane count, per-plane length, per-lane f32 bit pattern)`.
+//! [`fingerprint`] folds that tuple into a 64-bit key.
+//!
+//! **Canonicalization is bitwise, deliberately.** Lanes hash as their
+//! raw [`f32::to_bits`] patterns: `-0.0` and `+0.0` key differently,
+//! and NaNs key by payload. That is not an accident — the serving
+//! contract is bit-identical replies, and `1.0 / -0.0` is `-inf` where
+//! `1.0 / 0.0` is `+inf`, so value-level equality would serve wrong
+//! signs from cache. Two requests share a key only when a backend
+//! would be *required* to produce byte-identical output planes for
+//! both. (A 64-bit key can collide in principle; at ~2⁻⁶⁴ per pair
+//! this is the standard content-address trade, same as any
+//! fingerprinted cache.)
+//!
+//! The mix is a 4-stripe FNV-1a over 64-bit words (two lanes per
+//! word): four independent accumulators take words round-robin, so the
+//! multiply latency of one stripe overlaps the next three and a
+//! million-lane plane hashes at close to memory speed, then the
+//! stripes fold together with two avalanche rounds. Std-only, no
+//! dependencies, and **pinned**: the constants and word order below
+//! are part of the on-disk/test contract (see
+//! `pinned_fingerprint_constant`), so keys are stable across runs,
+//! platforms and rebuilds.
+
+use super::op::Op;
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Independent accumulator stripes (see module docs).
+const STRIPES: usize = 4;
+
+/// Streaming plane hasher: feed 64-bit words / planes, then
+/// [`finish`](PlaneHasher::finish). Word order is part of the pinned
+/// contract — callers must not reorder planes.
+#[derive(Clone, Debug)]
+pub struct PlaneHasher {
+    lanes: [u64; STRIPES],
+    next: usize,
+}
+
+impl Default for PlaneHasher {
+    fn default() -> Self {
+        PlaneHasher::new()
+    }
+}
+
+impl PlaneHasher {
+    pub fn new() -> PlaneHasher {
+        // distinct per-stripe seeds: the offset basis advanced by one
+        // FNV step over the stripe index
+        let mut lanes = [FNV_OFFSET; STRIPES];
+        for k in 1..STRIPES {
+            lanes[k] = (lanes[k - 1] ^ k as u64).wrapping_mul(FNV_PRIME);
+        }
+        PlaneHasher { lanes, next: 0 }
+    }
+
+    /// Fold one 64-bit word into the current stripe.
+    #[inline]
+    pub fn write_u64(&mut self, word: u64) {
+        let k = self.next;
+        self.lanes[k] = (self.lanes[k] ^ word).wrapping_mul(FNV_PRIME);
+        self.next = (k + 1) % STRIPES;
+    }
+
+    /// Fold one plane: its length, then its lanes as raw bit patterns
+    /// packed two per word (an odd tail lane rides alone — the length
+    /// word already disambiguates it from a `[lane, 0.0]` pair).
+    pub fn write_plane(&mut self, plane: &[f32]) {
+        self.write_u64(plane.len() as u64);
+        let mut pairs = plane.chunks_exact(2);
+        for pair in &mut pairs {
+            let w = (pair[0].to_bits() as u64) | ((pair[1].to_bits() as u64) << 32);
+            self.write_u64(w);
+        }
+        if let [tail] = pairs.remainder() {
+            self.write_u64(tail.to_bits() as u64);
+        }
+    }
+
+    /// Fold the stripes together and avalanche into the final key.
+    pub fn finish(&self) -> u64 {
+        let mut h = self.lanes[0];
+        for k in 1..STRIPES {
+            h = (h ^ self.lanes[k]).wrapping_mul(FNV_PRIME);
+        }
+        h ^= h >> 32;
+        h = h.wrapping_mul(FNV_PRIME);
+        h ^ (h >> 29)
+    }
+}
+
+/// The content key of one request: operator discriminant, plane count,
+/// and every plane's shape + lane bit patterns (see module docs for
+/// the canonicalization contract).
+pub fn fingerprint(op: Op, planes: &[Vec<f32>]) -> u64 {
+    let mut h = PlaneHasher::new();
+    h.write_u64(op.index() as u64);
+    h.write_u64(planes.len() as u64);
+    for p in planes {
+        h.write_plane(p);
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_fingerprint_constant() {
+        // the key of this exact request is part of the contract: it
+        // must survive rebuilds, platforms and refactors. The input
+        // exercises the canonicalization corners — a negative zero
+        // lane and a payload-carrying NaN lane.
+        let planes = vec![
+            vec![1.5, -0.0, f32::from_bits(0x7FC0_0123)],
+            vec![0.0, 2.5, -1.0],
+        ];
+        assert_eq!(fingerprint(Op::Add, &planes), 0x35fa_d9ec_743a_ccbf);
+        // and it is deterministic call over call
+        assert_eq!(fingerprint(Op::Add, &planes), fingerprint(Op::Add, &planes));
+    }
+
+    #[test]
+    fn signed_zeros_key_differently() {
+        // 1.0 / +0.0 = +inf but 1.0 / -0.0 = -inf: value-level
+        // equality would serve the wrong sign from cache
+        let pz = fingerprint(Op::Add, &[vec![0.0], vec![1.0]]);
+        let nz = fingerprint(Op::Add, &[vec![-0.0], vec![1.0]]);
+        assert_ne!(pz, nz);
+        // pinned alongside the main constant (same contract)
+        assert_eq!(pz, 0xf38e_fe84_44b4_918e);
+        assert_eq!(nz, 0xf0a3_5274_ca6a_56c5);
+    }
+
+    #[test]
+    fn nan_payloads_key_differently() {
+        let a = fingerprint(Op::Add, &[vec![f32::from_bits(0x7FC0_0000)], vec![1.0]]);
+        let b = fingerprint(Op::Add, &[vec![f32::from_bits(0x7FC0_0001)], vec![1.0]]);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn operator_discriminant_is_keyed() {
+        let planes = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_ne!(
+            fingerprint(Op::Add, &planes),
+            fingerprint(Op::Mul, &planes)
+        );
+    }
+
+    #[test]
+    fn shapes_are_keyed_not_just_content() {
+        // same 4 bit patterns, different plane structure
+        let wide = fingerprint(Op::Add, &[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let tall = fingerprint(Op::Add22, &[vec![1.0], vec![2.0], vec![3.0], vec![4.0]]);
+        assert_ne!(wide, tall);
+        // a one-lane plane and the same lane padded with 0.0 (whose
+        // bit pattern is all zeros, like the packing's empty half)
+        // must not collide: the length word disambiguates
+        let lone = fingerprint(Op::Add, &[vec![1.0], vec![1.0]]);
+        let padded = fingerprint(Op::Add, &[vec![1.0, 0.0], vec![1.0, 0.0]]);
+        assert_ne!(lone, padded);
+    }
+
+    #[test]
+    fn streaming_hasher_matches_fingerprint() {
+        let planes = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]];
+        let mut h = PlaneHasher::new();
+        h.write_u64(Op::Mul.index() as u64);
+        h.write_u64(planes.len() as u64);
+        for p in &planes {
+            h.write_plane(p);
+        }
+        assert_eq!(h.finish(), fingerprint(Op::Mul, &planes));
+    }
+}

@@ -48,6 +48,7 @@
 //! [`crate::coordinator::routing::RoutingPolicy`] deciding placement.
 
 pub mod error;
+pub mod fingerprint;
 pub mod gpusim;
 pub mod native;
 pub mod op;
@@ -57,6 +58,7 @@ pub mod xla;
 
 pub use crate::ff::simd::KernelTier;
 pub use error::ServiceError;
+pub use fingerprint::{fingerprint, PlaneHasher};
 pub use gpusim::GpuSimBackend;
 pub use native::NativeBackend;
 pub use op::Op;

@@ -105,6 +105,52 @@ pub fn plan(total: usize, sizes: &[usize]) -> Option<Vec<Launch>> {
     Some(launches)
 }
 
+/// Measured padding-waste EWMA above which
+/// [`adapt`] starts densifying a ladder.
+pub const ADAPT_WASTE_THRESHOLD: f64 = 0.15;
+
+/// Smallest rung [`adapt`] will synthesise — paper kernels below this
+/// are launch-overhead-bound, so finer quantisation stops paying.
+pub const ADAPT_MIN_RUNG: usize = 64;
+
+/// Waste-fed ladder adaptation: given the configured `base` ladder and
+/// the shard's measured per-op padding-waste EWMA
+/// ([`crate::coordinator::metrics::Telemetry::waste`]), return the
+/// ladder to plan this group with.
+///
+/// While the signal is cold or healthy (`None`, or ≤
+/// [`ADAPT_WASTE_THRESHOLD`]) the base ladder is used untouched —
+/// adaptation never perturbs a well-packed workload. A hot waste EWMA
+/// means real traffic keeps landing between rungs, so the ladder is
+/// **densified**: a half-size rung below the smallest (if it stays ≥
+/// [`ADAPT_MIN_RUNG`]) plus the midpoint of every adjacent pair, so
+/// tails find a closer fit. E.g. 6000-lane groups over
+/// `[4096, 16384, 65536]` pad 2192 lanes/group (4096+4096); the
+/// densified ladder plans 4096+2048 and pads 144.
+///
+/// The extra rungs cost nothing to "compile" on the served substrates
+/// (native and gpusim size launches dynamically); XLA-style AOT
+/// substrates would hold the base ladder, which is why adaptation is
+/// opt-in per spec rather than always-on.
+pub fn adapt(base: &[usize], waste: Option<f64>) -> Vec<usize> {
+    let hot = matches!(waste, Some(w) if w > ADAPT_WASTE_THRESHOLD);
+    if !hot || base.is_empty() {
+        return base.to_vec();
+    }
+    let mut out = base.to_vec();
+    let lo = base[0] / 2;
+    if lo >= ADAPT_MIN_RUNG {
+        out.push(lo);
+    }
+    for pair in base.windows(2) {
+        let mid = pair[0] + (pair[1] - pair[0]) / 2;
+        out.push(mid);
+    }
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
 /// Padding waste fraction of a plan (extra lanes / useful lanes).
 pub fn waste(plan: &[Launch]) -> f64 {
     let useful: usize = plan.iter().map(|l| l.len).sum();
@@ -242,6 +288,41 @@ mod tests {
         // exact fit: ties go to the single launch
         let p = plan(16384, &sizes).unwrap();
         assert_eq!(p, vec![Launch { size: 16384, start: 0, len: 16384 }]);
+    }
+
+    #[test]
+    fn adapt_leaves_cold_or_healthy_ladders_alone() {
+        let base = [4096, 16384, 65536];
+        assert_eq!(adapt(&base, None), base.to_vec());
+        assert_eq!(adapt(&base, Some(0.05)), base.to_vec());
+        assert_eq!(adapt(&base, Some(ADAPT_WASTE_THRESHOLD)), base.to_vec());
+        assert!(adapt(&[], Some(0.9)).is_empty());
+    }
+
+    #[test]
+    fn adapt_densifies_hot_ladders() {
+        let base = [4096, 16384, 65536];
+        let dense = adapt(&base, Some(0.4));
+        assert_eq!(dense, vec![2048, 4096, 10240, 16384, 40960, 65536]);
+        // ascending + deduped, as batcher::plan requires
+        assert!(dense.windows(2).all(|w| w[0] < w[1]));
+        // the motivating shape: 6000-lane groups pad far less
+        let before: usize =
+            plan(6000, &base).unwrap().iter().map(|l| l.size - l.len).sum();
+        let after: usize =
+            plan(6000, &dense).unwrap().iter().map(|l| l.size - l.len).sum();
+        assert_eq!(before, 2192);
+        assert_eq!(after, 144);
+    }
+
+    #[test]
+    fn adapt_respects_minimum_rung() {
+        // half of 64 would be 32 < ADAPT_MIN_RUNG: no sub-rung appears
+        let dense = adapt(&[64, 256], Some(0.5));
+        assert_eq!(dense, vec![64, 160, 256]);
+        // 128 halves cleanly to 64
+        let dense = adapt(&[128], Some(0.5));
+        assert_eq!(dense, vec![64, 128]);
     }
 
     #[test]

@@ -1,0 +1,683 @@
+//! Content-addressed result cache with single-flight dedup.
+//!
+//! Every catalogue operator is a pure, deterministic function of its
+//! input planes, so a request's result is fully determined by its
+//! [`crate::backend::fingerprint`] key.
+//! [`Handle::dispatch`](crate::coordinator::service::Handle::dispatch)
+//! consults a [`ResultCache`] *before* routing:
+//!
+//! - **Hit** — the output planes are already resident: the reply is
+//!   pre-sent into the ticket's channel and no shard (and no routing
+//!   policy, and no observatory sampler) ever sees the request.
+//! - **Follow** — an identical request is in flight: the caller's
+//!   reply sender attaches to the leader's entry and the ticket
+//!   resolves when the leader's shard replies. One execution serves
+//!   all concurrent identical dispatches (single-flight).
+//! - **Lead** — first sighting: the dispatch proceeds normally,
+//!   carrying a [`CacheFill`] obligation in its
+//!   [`OpRequest`](crate::coordinator::request::OpRequest). The shard
+//!   resolves it exactly once — success inserts the result and fans it
+//!   out to followers, failure fans out the error — and if the request
+//!   is dropped unresolved (service shutdown), `CacheFill::drop` fails
+//!   the followers rather than leaving them blocked forever.
+//!
+//! **Leader lifecycle vs. followers.** A leader that is cancelled or
+//! deadline-expired at shard triage must not doom its followers — their
+//! tickets carry their *own* deadlines. The shard promotes a live
+//! follower into the leadership slot ([`ResultCache::pop_follower`])
+//! and executes for it. Genuine *execution* errors (backend failures)
+//! are shared with followers: they are the computation's outcome, not
+//! an artifact of the leader's client.
+//!
+//! **Memory bound.** The cache is split into [`CACHE_SHARDS`] lock
+//! stripes by the key's top bits; each stripe owns an equal slice of
+//! the byte budget and evicts with a cost-aware **segmented LRU**: new
+//! entries enter *probation*, a re-hit promotes to *protected* (capped
+//! at 3/4 of the stripe so scans cannot flush the working set), and
+//! eviction takes the least recently used probation entry — except
+//! when the second-oldest is cheaper to recompute per byte retained
+//! (measured execution seconds / entry bytes), in which case the
+//! cheap-dense one goes first.
+//!
+//! **Invisibility.** Hits and coalesced follows never call the routing
+//! policy, never touch [`ShardMeta`](crate::coordinator::routing::ShardMeta)
+//! queue depths or rate EWMAs, and never tick the observatory sampler
+//! — cache activity is accounted only in its own [`CacheTelemetry`]
+//! cells. See `cache_hits_do_not_perturb_routing_or_observatory` in
+//! the integration suite.
+
+use super::metrics::{CacheOpStats, CacheTelemetry};
+use super::plan::TicketState;
+use super::request::OpResult;
+use crate::backend::{Op, ServiceError};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Lock stripes. Keyed by the fingerprint's top 16 bits so stripe
+/// choice is independent of the HashMap's own bucket choice (low bits).
+pub const CACHE_SHARDS: usize = 16;
+
+/// Charged per cached entry beyond its lane payload (map slot, queues,
+/// bookkeeping), so a flood of tiny results still respects the budget.
+const ENTRY_OVERHEAD: usize = 64;
+
+/// Charged per output plane (Vec header + allocator slop).
+const PLANE_OVERHEAD: usize = 32;
+
+/// Fraction of a stripe's budget the protected segment may hold: 3/4.
+/// The remainder guarantees probation always has room to admit new
+/// entries, so one-shot scans recycle through probation without
+/// evicting the proven working set.
+const PROTECTED_NUM: usize = 3;
+const PROTECTED_DEN: usize = 4;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Segment {
+    Probation,
+    Protected,
+}
+
+/// One resident result.
+#[derive(Debug)]
+struct Entry {
+    op: Op,
+    planes: Arc<Vec<Vec<f32>>>,
+    bytes: usize,
+    /// Measured seconds the leader's execution took — the recompute
+    /// cost this entry saves, read by cost-aware eviction.
+    cost_s: f64,
+    /// Shard that produced the result; hit tickets report it so
+    /// attribution stays meaningful.
+    shard: usize,
+    segment: Segment,
+}
+
+/// One in-flight computation; followers' reply senders park here until
+/// the leader resolves.
+struct Inflight {
+    shard: usize,
+    followers: Vec<(mpsc::Sender<OpResult>, Arc<TicketState>)>,
+}
+
+#[derive(Default)]
+struct Stripe {
+    entries: HashMap<u64, Entry>,
+    /// LRU order within each segment: front = oldest.
+    probation: VecDeque<u64>,
+    protected: VecDeque<u64>,
+    bytes: usize,
+    protected_bytes: usize,
+    inflight: HashMap<u64, Inflight>,
+}
+
+/// What [`ResultCache::begin`] decided for one dispatch.
+#[derive(Debug)]
+pub(crate) enum Decision {
+    /// Resident: reply with these planes immediately; `shard` produced
+    /// them originally (ticket attribution only).
+    Hit { planes: Arc<Vec<Vec<f32>>>, shard: usize },
+    /// Coalesced onto an in-flight leader; the caller's sender is
+    /// attached and will receive the leader's outcome.
+    Follow { shard: usize },
+    /// First sighting: caller must dispatch and carry a [`CacheFill`].
+    Lead,
+}
+
+/// Aggregate cache counters — the shape that rides the wire Status
+/// frame and the serve_demo banner.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    /// Single-flight followers (identical dispatches that attached to
+    /// a leader instead of executing).
+    pub coalesced: u64,
+    pub inserted_bytes: u64,
+    pub evictions: u64,
+    pub live_bytes: u64,
+    pub budget_bytes: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (hits + coalesced count as saved
+    /// executions; misses as paid ones). 0.0 when cold.
+    pub fn hit_rate(&self) -> f64 {
+        let saved = self.hits + self.coalesced;
+        let total = saved + self.misses;
+        if total == 0 { 0.0 } else { saved as f64 / total as f64 }
+    }
+}
+
+/// The sharded, content-addressed result cache (see module docs).
+pub struct ResultCache {
+    stripes: Vec<Mutex<Stripe>>,
+    stripe_budget: usize,
+    telemetry: CacheTelemetry,
+}
+
+impl std::fmt::Debug for ResultCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResultCache")
+            .field("stripes", &self.stripes.len())
+            .field("stripe_budget", &self.stripe_budget)
+            .finish_non_exhaustive()
+    }
+}
+
+fn entry_bytes(planes: &[Vec<f32>]) -> usize {
+    ENTRY_OVERHEAD
+        + planes
+            .iter()
+            .map(|p| PLANE_OVERHEAD + p.len() * std::mem::size_of::<f32>())
+            .sum::<usize>()
+}
+
+impl ResultCache {
+    /// A cache bounded to `total_bytes`, split evenly across
+    /// [`CACHE_SHARDS`] lock stripes.
+    pub fn with_budget(total_bytes: usize) -> ResultCache {
+        ResultCache {
+            stripes: (0..CACHE_SHARDS).map(|_| Mutex::new(Stripe::default())).collect(),
+            stripe_budget: (total_bytes / CACHE_SHARDS).max(ENTRY_OVERHEAD),
+            telemetry: CacheTelemetry::new(),
+        }
+    }
+
+    fn stripe_for(&self, key: u64) -> &Mutex<Stripe> {
+        &self.stripes[(key >> 48) as usize % self.stripes.len()]
+    }
+
+    fn protected_cap(&self) -> usize {
+        self.stripe_budget * PROTECTED_NUM / PROTECTED_DEN
+    }
+
+    /// Resolve one dispatch against the cache, atomically under the
+    /// key's stripe lock: hit → promote + return planes; in-flight →
+    /// attach `reply`/`ctrl` as a follower; otherwise register the
+    /// caller as leader.
+    pub(crate) fn begin(
+        &self,
+        op: Op,
+        key: u64,
+        reply: &mpsc::Sender<OpResult>,
+        ctrl: &Arc<TicketState>,
+    ) -> Decision {
+        let mut s = self.stripe_for(key).lock().unwrap();
+        if s.entries.contains_key(&key) {
+            Self::promote(&mut s, key, self.protected_cap());
+            let e = &s.entries[&key];
+            let d = Decision::Hit { planes: e.planes.clone(), shard: e.shard };
+            self.telemetry.record_hit(op);
+            return d;
+        }
+        if let Some(f) = s.inflight.get_mut(&key) {
+            f.followers.push((reply.clone(), ctrl.clone()));
+            let shard = f.shard;
+            self.telemetry.record_coalesced(op);
+            return Decision::Follow { shard };
+        }
+        s.inflight.insert(key, Inflight { shard: 0, followers: Vec::new() });
+        self.telemetry.record_miss(op);
+        Decision::Lead
+    }
+
+    /// Record which shard the leader was routed to (followers that
+    /// attach before routing completes default to shard 0; this is
+    /// attribution only, never placement).
+    pub(crate) fn set_origin(&self, key: u64, shard: usize) {
+        let mut s = self.stripe_for(key).lock().unwrap();
+        if let Some(f) = s.inflight.get_mut(&key) {
+            f.shard = shard;
+        }
+    }
+
+    /// Detach one parked follower (most recently attached first) —
+    /// used by the shard to promote a live follower into the
+    /// leadership slot when the leader's client cancelled or expired.
+    pub(crate) fn pop_follower(
+        &self,
+        key: u64,
+    ) -> Option<(mpsc::Sender<OpResult>, Arc<TicketState>)> {
+        let mut s = self.stripe_for(key).lock().unwrap();
+        s.inflight.get_mut(&key).and_then(|f| f.followers.pop())
+    }
+
+    /// Leader succeeded: insert the result (unless it alone exceeds a
+    /// stripe's budget), evicting as needed, and return the followers'
+    /// senders so the caller can fan the planes out *outside* the
+    /// stripe lock.
+    pub(crate) fn fill_complete(
+        &self,
+        op: Op,
+        key: u64,
+        origin: usize,
+        planes: &Arc<Vec<Vec<f32>>>,
+        cost_s: f64,
+    ) -> Vec<mpsc::Sender<OpResult>> {
+        let mut s = self.stripe_for(key).lock().unwrap();
+        let followers =
+            s.inflight.remove(&key).map(|f| f.followers).unwrap_or_default();
+        if !s.entries.contains_key(&key) {
+            let bytes = entry_bytes(planes);
+            if bytes <= self.stripe_budget {
+                while s.bytes + bytes > self.stripe_budget {
+                    if !self.evict_one(&mut s) {
+                        break;
+                    }
+                }
+                s.bytes += bytes;
+                s.probation.push_back(key);
+                s.entries.insert(
+                    key,
+                    Entry {
+                        op,
+                        planes: planes.clone(),
+                        bytes,
+                        cost_s,
+                        shard: origin,
+                        segment: Segment::Probation,
+                    },
+                );
+                self.telemetry.record_insert(op, bytes as u64);
+            }
+        }
+        drop(s);
+        followers.into_iter().map(|(tx, _ctrl)| tx).collect()
+    }
+
+    /// Leader failed (or was dropped unresolved): clear the in-flight
+    /// entry and share the error with every parked follower — an
+    /// execution error is the computation's outcome, and a dropped
+    /// leader must not leave followers blocked forever.
+    pub(crate) fn fill_fail(&self, key: u64, err: &ServiceError) {
+        let followers = {
+            let mut s = self.stripe_for(key).lock().unwrap();
+            s.inflight.remove(&key).map(|f| f.followers).unwrap_or_default()
+        };
+        for (tx, _ctrl) in followers {
+            let _ = tx.send(Err(err.clone()));
+        }
+    }
+
+    /// Evict one entry from `s`: normally the oldest probation entry,
+    /// but when the two oldest differ in recompute value per byte
+    /// (cost_s / bytes), the cheaper-denser one goes first. Protected
+    /// entries fall only once probation is empty. Returns false when
+    /// the stripe is already empty.
+    fn evict_one(&self, s: &mut Stripe) -> bool {
+        let victim = if s.probation.len() >= 2 {
+            let (a, b) = (s.probation[0], s.probation[1]);
+            let density = |k: u64| {
+                let e = &s.entries[&k];
+                e.cost_s / e.bytes.max(1) as f64
+            };
+            if density(b) < density(a) {
+                s.probation.remove(1);
+                b
+            } else {
+                s.probation.pop_front();
+                a
+            }
+        } else if let Some(v) = s.probation.pop_front() {
+            v
+        } else if let Some(v) = s.protected.pop_front() {
+            v
+        } else {
+            return false;
+        };
+        let e = s.entries.remove(&victim).expect("queued key has an entry");
+        s.bytes -= e.bytes;
+        if e.segment == Segment::Protected {
+            s.protected_bytes -= e.bytes;
+        }
+        self.telemetry.record_eviction(e.op);
+        true
+    }
+
+    /// Segmented-LRU touch on a hit: probation → protected (demoting
+    /// the protected segment's oldest back to probation while it
+    /// overflows its cap), protected → refresh recency.
+    fn promote(s: &mut Stripe, key: u64, protected_cap: usize) {
+        let (segment, bytes) = match s.entries.get(&key) {
+            Some(e) => (e.segment, e.bytes),
+            None => return,
+        };
+        match segment {
+            Segment::Probation => {
+                if let Some(pos) = s.probation.iter().position(|&k| k == key) {
+                    s.probation.remove(pos);
+                }
+                s.protected.push_back(key);
+                s.entries.get_mut(&key).expect("present above").segment =
+                    Segment::Protected;
+                s.protected_bytes += bytes;
+                while s.protected_bytes > protected_cap {
+                    let Some(old) = s.protected.pop_front() else { break };
+                    let e = s.entries.get_mut(&old).expect("queued key has an entry");
+                    e.segment = Segment::Probation;
+                    s.protected_bytes -= e.bytes;
+                    s.probation.push_back(old);
+                }
+            }
+            Segment::Protected => {
+                if let Some(pos) = s.protected.iter().position(|&k| k == key) {
+                    s.protected.remove(pos);
+                    s.protected.push_back(key);
+                }
+            }
+        }
+    }
+
+    /// Bytes currently resident across all stripes.
+    pub fn live_bytes(&self) -> usize {
+        self.stripes.iter().map(|m| m.lock().unwrap().bytes).sum()
+    }
+
+    /// Configured capacity (stripe budget × stripe count; may round
+    /// below the requested total by up to [`CACHE_SHARDS`]−1 bytes).
+    pub fn budget_bytes(&self) -> usize {
+        self.stripe_budget * self.stripes.len()
+    }
+
+    /// Per-op counters.
+    pub fn op_stats(&self, op: Op) -> CacheOpStats {
+        self.telemetry.op_stats(op)
+    }
+
+    /// Aggregate counters + occupancy, the wire/banner shape.
+    pub fn stats(&self) -> CacheStats {
+        let t = self.telemetry.totals();
+        CacheStats {
+            hits: t.hits,
+            misses: t.misses,
+            coalesced: t.coalesced,
+            inserted_bytes: t.inserted_bytes,
+            evictions: t.evictions,
+            live_bytes: self.live_bytes() as u64,
+            budget_bytes: self.budget_bytes() as u64,
+        }
+    }
+}
+
+/// The leader's obligation to resolve its in-flight cache entry,
+/// carried inside the leader's `OpRequest`. Exactly one of
+/// [`complete`](CacheFill::complete) / [`fail`](CacheFill::fail) runs
+/// on the shard thread; if neither does (request dropped on shutdown),
+/// `Drop` fails the entry so followers unblock.
+pub(crate) struct CacheFill {
+    cache: Arc<ResultCache>,
+    op: Op,
+    key: u64,
+    shard: usize,
+    done: bool,
+}
+
+impl std::fmt::Debug for CacheFill {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CacheFill")
+            .field("op", &self.op)
+            .field("key", &format_args!("{:#018x}", self.key))
+            .field("shard", &self.shard)
+            .field("done", &self.done)
+            .finish()
+    }
+}
+
+impl CacheFill {
+    pub(crate) fn new(cache: Arc<ResultCache>, op: Op, key: u64) -> CacheFill {
+        CacheFill { cache, op, key, shard: 0, done: false }
+    }
+
+    /// Record the routed shard (attribution for hit tickets).
+    pub(crate) fn set_shard(&mut self, shard: usize) {
+        self.shard = shard;
+        self.cache.set_origin(self.key, shard);
+    }
+
+    /// Detach one parked follower for leadership promotion.
+    pub(crate) fn pop_follower(
+        &self,
+    ) -> Option<(mpsc::Sender<OpResult>, Arc<TicketState>)> {
+        self.cache.pop_follower(self.key)
+    }
+
+    /// Resolve with the executed output planes: insert into the cache,
+    /// fan copies out to followers, and hand the planes back for the
+    /// leader's own reply (reclaimed without a copy when the cache
+    /// skipped the insert, cloned outside any stripe lock otherwise).
+    /// `cost_s` is the measured execution time this entry would save.
+    pub(crate) fn complete(&mut self, planes: Vec<Vec<f32>>, cost_s: f64) -> Vec<Vec<f32>> {
+        self.done = true;
+        let shared = Arc::new(planes);
+        let followers =
+            self.cache.fill_complete(self.op, self.key, self.shard, &shared, cost_s);
+        for tx in followers {
+            let _ = tx.send(Ok(shared.as_ref().clone()));
+        }
+        match Arc::try_unwrap(shared) {
+            Ok(planes) => planes,
+            Err(shared) => shared.as_ref().clone(),
+        }
+    }
+
+    /// Resolve with an execution error, shared with followers.
+    pub(crate) fn fail(&mut self, err: &ServiceError) {
+        self.done = true;
+        self.cache.fill_fail(self.key, err);
+    }
+}
+
+impl Drop for CacheFill {
+    fn drop(&mut self) {
+        if !self.done {
+            // shutdown path: the request (and its fill) was dropped
+            // without executing — same verdict a shard-less submit gets
+            self.cache.fill_fail(self.key, &ServiceError::QueueClosed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn waiter() -> (mpsc::Sender<OpResult>, mpsc::Receiver<OpResult>, Arc<TicketState>) {
+        let (tx, rx) = mpsc::channel();
+        (tx, rx, Arc::new(TicketState::new()))
+    }
+
+    /// Keys sharing the top 16 bits land in one stripe, which makes
+    /// eviction order deterministic in tests.
+    fn same_stripe_key(n: u64) -> u64 {
+        assert!(n < (1 << 48));
+        n
+    }
+
+    fn planes_of(lanes: usize, fill: f32) -> Arc<Vec<Vec<f32>>> {
+        Arc::new(vec![vec![fill; lanes], vec![fill + 1.0; lanes]])
+    }
+
+    #[test]
+    fn lead_fill_hit_roundtrip_is_bit_identical() {
+        let c = ResultCache::with_budget(1 << 20);
+        let (tx, _rx, ctrl) = waiter();
+        let key = 42;
+        assert!(matches!(c.begin(Op::Add22, key, &tx, &ctrl), Decision::Lead));
+        let out = Arc::new(vec![vec![1.5f32, -0.0, f32::NAN], vec![0.25, 2.0, -1.0]]);
+        let followers = c.fill_complete(Op::Add22, key, 3, &out, 0.01);
+        assert!(followers.is_empty());
+        match c.begin(Op::Add22, key, &tx, &ctrl) {
+            Decision::Hit { planes, shard } => {
+                assert_eq!(shard, 3);
+                let same = planes.iter().zip(out.iter()).all(|(a, b)| {
+                    a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+                });
+                assert!(same, "hit planes must be bit-identical (incl. NaN/-0.0)");
+            }
+            d => panic!("expected hit, got {d:?}"),
+        }
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.coalesced), (1, 1, 0));
+        assert!(s.inserted_bytes > 0);
+        assert_eq!(s.live_bytes as usize, c.live_bytes());
+    }
+
+    #[test]
+    fn concurrent_identical_misses_coalesce_and_fan_out() {
+        let c = ResultCache::with_budget(1 << 20);
+        let key = 7;
+        let (lead_tx, _lead_rx, lead_ctrl) = waiter();
+        assert!(matches!(c.begin(Op::Mul22, key, &lead_tx, &lead_ctrl), Decision::Lead));
+        let (f1_tx, f1_rx, f1_ctrl) = waiter();
+        let (f2_tx, f2_rx, f2_ctrl) = waiter();
+        assert!(matches!(
+            c.begin(Op::Mul22, key, &f1_tx, &f1_ctrl),
+            Decision::Follow { .. }
+        ));
+        assert!(matches!(
+            c.begin(Op::Mul22, key, &f2_tx, &f2_ctrl),
+            Decision::Follow { .. }
+        ));
+        let out = planes_of(8, 0.5);
+        let followers = c.fill_complete(Op::Mul22, key, 0, &out, 0.001);
+        assert_eq!(followers.len(), 2);
+        for tx in followers {
+            tx.send(Ok(out.as_ref().clone())).unwrap();
+        }
+        assert_eq!(f1_rx.try_recv().unwrap().unwrap(), *out);
+        assert_eq!(f2_rx.try_recv().unwrap().unwrap(), *out);
+        let s = c.stats();
+        assert_eq!((s.misses, s.coalesced, s.hits), (1, 2, 0));
+    }
+
+    #[test]
+    fn failed_fill_shares_error_with_followers() {
+        let c = Arc::new(ResultCache::with_budget(1 << 20));
+        let key = 9;
+        let (lead_tx, _lead_rx, lead_ctrl) = waiter();
+        let mut fill = match c.begin(Op::Div22, key, &lead_tx, &lead_ctrl) {
+            Decision::Lead => CacheFill::new(c.clone(), Op::Div22, key),
+            d => panic!("expected lead, got {d:?}"),
+        };
+        let (f_tx, f_rx, f_ctrl) = waiter();
+        assert!(matches!(c.begin(Op::Div22, key, &f_tx, &f_ctrl), Decision::Follow { .. }));
+        fill.fail(&ServiceError::Backend("kernel exploded".into()));
+        match f_rx.try_recv().unwrap() {
+            Err(ServiceError::Backend(msg)) => assert_eq!(msg, "kernel exploded"),
+            other => panic!("expected backend error, got {other:?}"),
+        }
+        // the key is clear again: next dispatch leads fresh
+        assert!(matches!(c.begin(Op::Div22, key, &lead_tx, &lead_ctrl), Decision::Lead));
+    }
+
+    #[test]
+    fn dropped_unresolved_fill_unblocks_followers() {
+        let c = Arc::new(ResultCache::with_budget(1 << 20));
+        let key = 11;
+        let (lead_tx, _lead_rx, lead_ctrl) = waiter();
+        assert!(matches!(c.begin(Op::Add, key, &lead_tx, &lead_ctrl), Decision::Lead));
+        let fill = CacheFill::new(c.clone(), Op::Add, key);
+        let (f_tx, f_rx, f_ctrl) = waiter();
+        assert!(matches!(c.begin(Op::Add, key, &f_tx, &f_ctrl), Decision::Follow { .. }));
+        drop(fill); // leader dropped on shutdown without resolving
+        assert!(matches!(f_rx.try_recv().unwrap(), Err(ServiceError::QueueClosed)));
+    }
+
+    #[test]
+    fn eviction_respects_byte_budget() {
+        // stripe budget = 4096 bytes; each entry is 64 + 2*(32+4*100)
+        // = 928 bytes, so a stripe holds 4 entries and the 5th evicts
+        let c = ResultCache::with_budget(4096 * CACHE_SHARDS);
+        let (tx, _rx, ctrl) = waiter();
+        for n in 0..6u64 {
+            let key = same_stripe_key(n);
+            assert!(matches!(c.begin(Op::Add22, key, &tx, &ctrl), Decision::Lead));
+            c.fill_complete(Op::Add22, key, 0, &planes_of(100, n as f32), 0.01);
+        }
+        let s = c.stats();
+        assert!(s.evictions >= 2, "evictions: {}", s.evictions);
+        assert!(
+            c.live_bytes() <= c.budget_bytes(),
+            "live {} > budget {}",
+            c.live_bytes(),
+            c.budget_bytes()
+        );
+        // oldest entries gone, newest resident
+        assert!(matches!(c.begin(Op::Add22, 0, &tx, &ctrl), Decision::Lead));
+        assert!(matches!(c.begin(Op::Add22, 5, &tx, &ctrl), Decision::Hit { .. }));
+    }
+
+    #[test]
+    fn rehit_promotes_out_of_eviction_order() {
+        // stripe holds 2 entries of 928B within a 2048B budget
+        let c = ResultCache::with_budget(2048 * CACHE_SHARDS);
+        let (tx, _rx, ctrl) = waiter();
+        for n in [1u64, 2] {
+            c.begin(Op::Add22, n, &tx, &ctrl);
+            c.fill_complete(Op::Add22, n, 0, &planes_of(100, n as f32), 0.01);
+        }
+        // touch 1: probation → protected; now 2 is the probation head
+        assert!(matches!(c.begin(Op::Add22, 1, &tx, &ctrl), Decision::Hit { .. }));
+        c.begin(Op::Add22, 3, &tx, &ctrl);
+        c.fill_complete(Op::Add22, 3, 0, &planes_of(100, 3.0), 0.01);
+        // plain LRU would evict 1 (oldest insert); segmented evicts 2
+        assert!(matches!(c.begin(Op::Add22, 1, &tx, &ctrl), Decision::Hit { .. }));
+        assert!(matches!(c.begin(Op::Add22, 2, &tx, &ctrl), Decision::Lead));
+    }
+
+    #[test]
+    fn eviction_prefers_cheap_to_recompute_entries() {
+        let c = ResultCache::with_budget(2048 * CACHE_SHARDS);
+        let (tx, _rx, ctrl) = waiter();
+        // same bytes, wildly different measured cost
+        c.begin(Op::Div22, 1, &tx, &ctrl);
+        c.fill_complete(Op::Div22, 1, 0, &planes_of(100, 1.0), 0.5); // expensive
+        c.begin(Op::Add22, 2, &tx, &ctrl);
+        c.fill_complete(Op::Add22, 2, 0, &planes_of(100, 2.0), 1e-5); // cheap
+        c.begin(Op::Add22, 3, &tx, &ctrl);
+        c.fill_complete(Op::Add22, 3, 0, &planes_of(100, 3.0), 0.01);
+        // LRU head is 1, but 2 is far cheaper per byte: 2 goes first
+        assert!(matches!(c.begin(Op::Div22, 1, &tx, &ctrl), Decision::Hit { .. }));
+        assert!(matches!(c.begin(Op::Add22, 2, &tx, &ctrl), Decision::Lead));
+    }
+
+    #[test]
+    fn oversize_results_are_not_cached() {
+        let c = ResultCache::with_budget(1024 * CACHE_SHARDS);
+        let (tx, _rx, ctrl) = waiter();
+        c.begin(Op::Add22, 1, &tx, &ctrl);
+        // 2 planes × 1000 lanes ≈ 8128 bytes > 1024 stripe budget
+        c.fill_complete(Op::Add22, 1, 0, &planes_of(1000, 1.0), 0.01);
+        assert_eq!(c.live_bytes(), 0);
+        assert!(matches!(c.begin(Op::Add22, 1, &tx, &ctrl), Decision::Lead));
+        let s = c.stats();
+        assert_eq!(s.inserted_bytes, 0);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn follower_promotion_pops_most_recent() {
+        let c = Arc::new(ResultCache::with_budget(1 << 20));
+        let key = 21;
+        let (lead_tx, _lead_rx, lead_ctrl) = waiter();
+        assert!(matches!(c.begin(Op::Add, key, &lead_tx, &lead_ctrl), Decision::Lead));
+        let mut fill = CacheFill::new(c.clone(), Op::Add, key);
+        fill.set_shard(5);
+        let (f_tx, f_rx, f_ctrl) = waiter();
+        c.begin(Op::Add, key, &f_tx, &f_ctrl);
+        let (tx, ctrl) = fill.pop_follower().expect("one follower parked");
+        assert!(fill.pop_follower().is_none());
+        assert!(!ctrl.is_cancelled());
+        tx.send(Ok(vec![vec![1.0]])).unwrap();
+        assert_eq!(f_rx.try_recv().unwrap().unwrap(), vec![vec![1.0]]);
+        // resolve so Drop has nothing to fail
+        fill.complete(vec![vec![1.0]], 0.0);
+    }
+
+    #[test]
+    fn hit_rate_counts_coalesced_as_saved() {
+        let s = CacheStats { hits: 6, misses: 2, coalesced: 2, ..CacheStats::default() };
+        assert!((s.hit_rate() - 0.8).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+    }
+}

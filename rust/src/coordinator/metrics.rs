@@ -389,6 +389,98 @@ impl Telemetry {
     }
 }
 
+/// One operator's result-cache counters (monotonic, relaxed — each is
+/// an independent tally, no cross-field ordering to publish).
+#[derive(Debug, Default)]
+struct CacheOpCell {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Concurrent identical misses that attached to an in-flight
+    /// leader instead of dispatching (single-flight followers).
+    coalesced: AtomicU64,
+    inserted_bytes: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Per-op result-cache telemetry: one [`CacheOpCell`] per catalogue
+/// operator, owned by [`crate::coordinator::cache::ResultCache`].
+///
+/// Deliberately separate from [`Telemetry`]: shard EWMAs drive
+/// routing, and cache activity must stay invisible there — a hit is
+/// work *not* done on any shard.
+#[derive(Debug)]
+pub struct CacheTelemetry {
+    cells: [CacheOpCell; Op::COUNT],
+}
+
+impl Default for CacheTelemetry {
+    fn default() -> Self {
+        CacheTelemetry::new()
+    }
+}
+
+/// Snapshot of one operator's cache counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheOpStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub coalesced: u64,
+    pub inserted_bytes: u64,
+    pub evictions: u64,
+}
+
+impl CacheTelemetry {
+    pub fn new() -> CacheTelemetry {
+        CacheTelemetry { cells: std::array::from_fn(|_| CacheOpCell::default()) }
+    }
+
+    pub fn record_hit(&self, op: Op) {
+        self.cells[op.index()].hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_miss(&self, op: Op) {
+        self.cells[op.index()].misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_coalesced(&self, op: Op) {
+        self.cells[op.index()].coalesced.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_insert(&self, op: Op, bytes: u64) {
+        self.cells[op.index()].inserted_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_eviction(&self, op: Op) {
+        self.cells[op.index()].evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One operator's counters.
+    pub fn op_stats(&self, op: Op) -> CacheOpStats {
+        let c = &self.cells[op.index()];
+        CacheOpStats {
+            hits: c.hits.load(Ordering::Relaxed),
+            misses: c.misses.load(Ordering::Relaxed),
+            coalesced: c.coalesced.load(Ordering::Relaxed),
+            inserted_bytes: c.inserted_bytes.load(Ordering::Relaxed),
+            evictions: c.evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Counters summed across all operators.
+    pub fn totals(&self) -> CacheOpStats {
+        let mut t = CacheOpStats::default();
+        for op in Op::ALL {
+            let s = self.op_stats(op);
+            t.hits += s.hits;
+            t.misses += s.misses;
+            t.coalesced += s.coalesced;
+            t.inserted_bytes += s.inserted_bytes;
+            t.evictions += s.evictions;
+        }
+        t
+    }
+}
+
 /// The inputs and outputs of the worst lane one accuracy cell has
 /// seen: what the observatory captures so the largest error is
 /// reproducible, not just a number.
@@ -760,5 +852,31 @@ mod tests {
         assert_eq!(snap["bob"], TenantCounters { requests: 1, lanes: 512, shed: 1, denied: 0 });
         assert_eq!(snap["carol"], TenantCounters { requests: 0, lanes: 0, shed: 0, denied: 1 });
         assert_eq!(snap.len(), 3);
+    }
+
+    #[test]
+    fn cache_telemetry_counts_per_op_and_totals() {
+        let t = CacheTelemetry::new();
+        t.record_miss(Op::Add22);
+        t.record_insert(Op::Add22, 4096);
+        t.record_hit(Op::Add22);
+        t.record_hit(Op::Add22);
+        t.record_coalesced(Op::Add22);
+        t.record_miss(Op::Mul22);
+        t.record_insert(Op::Mul22, 1024);
+        t.record_eviction(Op::Add22);
+        let a = t.op_stats(Op::Add22);
+        assert_eq!(
+            a,
+            CacheOpStats { hits: 2, misses: 1, coalesced: 1, inserted_bytes: 4096, evictions: 1 }
+        );
+        // other ops untouched
+        assert_eq!(t.op_stats(Op::Div22), CacheOpStats::default());
+        let sum = t.totals();
+        assert_eq!(sum.hits, 2);
+        assert_eq!(sum.misses, 2);
+        assert_eq!(sum.inserted_bytes, 5120);
+        assert_eq!(sum.coalesced, 1);
+        assert_eq!(sum.evictions, 1);
     }
 }

@@ -54,7 +54,13 @@
 //!   tables — read them via [`Service::accuracy_report`] or force a
 //!   per-request verdict with [`Handle::dispatch_mirrored`]. Mirrored
 //!   work runs on the observatory's own backends, so observation never
-//!   perturbs routing telemetry or queue depths.
+//!   perturbs routing telemetry or queue depths;
+//! * the **result cache** ([`cache`]) content-addresses replies by
+//!   bitwise input fingerprint ([`crate::backend::fingerprint`]):
+//!   repeated requests resolve from memory before routing, concurrent
+//!   identical misses coalesce single-flight behind one execution, and
+//!   a byte-budgeted segmented LRU bounds residency — all invisible to
+//!   routing telemetry and the observatory sampler.
 //!
 //! The seed's stringly-typed surface — `Handle::submit("add22", ...)`,
 //! `Handle::call`, the single-spec `ServiceConfig` — is gone: the last
@@ -68,6 +74,7 @@
 //! exceeded, substrate failure.
 
 pub mod batcher;
+pub mod cache;
 pub mod metrics;
 pub mod observatory;
 pub mod plan;
@@ -76,7 +83,8 @@ pub mod routing;
 pub mod service;
 
 pub use crate::backend::Op;
-pub use metrics::{TenantCounters, TenantLedger};
+pub use cache::{CacheStats, ResultCache};
+pub use metrics::{CacheOpStats, TenantCounters, TenantLedger};
 pub use observatory::{
     AccuracyReport, MirrorReport, ModelDiff, ModelReport, ObservatorySpec,
     OpAccuracyRow, TicketSet,

@@ -7,6 +7,7 @@
 //! [`crate::coordinator::plan::Plan`], and the backends' own
 //! `execute` validation.
 
+use super::cache::CacheFill;
 use super::plan::TicketState;
 use crate::backend::{Op, ServiceError};
 use std::sync::{mpsc, Arc};
@@ -30,6 +31,12 @@ pub struct OpRequest {
     /// [`crate::coordinator::Ticket`]: the shard serve loop checks it
     /// before executing and skips cancelled/expired requests.
     pub ctrl: Arc<TicketState>,
+    /// Present when this request *leads* a result-cache miss: the
+    /// shard must resolve it exactly once (insert + fan out to
+    /// single-flight followers on success, share the error on
+    /// failure). `None` for cache-off, forced-measurement and follower
+    /// dispatches.
+    pub(crate) fill: Option<CacheFill>,
 }
 
 impl OpRequest {
@@ -42,6 +49,7 @@ impl OpRequest {
             inputs: inputs.into_iter().map(Arc::new).collect(),
             reply,
             ctrl: Arc::new(TicketState::new()),
+            fill: None,
         }
     }
 

@@ -370,9 +370,12 @@ impl RoutingPolicy for OpAffinity {
 ///   cold shard at a time while the rest of the burst routes by
 ///   measurement.
 /// * Among measured candidates the pick minimises estimated
-///   completion time `(queue_depth + 1) · len / rate` — a slow shard
-///   (the gpusim canary, say) only wins when the fast shards are
-///   backlogged in proportion to how much slower it is. Candidates
+///   completion time `(queue_depth + 1) · len / rate · (1 + waste)` —
+///   a slow shard (the gpusim canary, say) only wins when the fast
+///   shards are backlogged in proportion to how much slower it is, and
+///   the padding-waste EWMA surcharges shards whose fused launches of
+///   this op keep padding (phantom lanes the useful-lane rate cannot
+///   see). Candidates
 ///   attempted but never measured (failing, or mid-first-group) are
 ///   skipped; if *no* candidate is measured yet, least-loaded keeps
 ///   traffic moving.
@@ -419,7 +422,13 @@ impl RoutingPolicy for Measured {
             }
             let Some(rate) = view.measured_rate(i, op) else { continue };
             let backlog = view.queue_depth(i) as f64 + 1.0;
-            let score = backlog * (len as f64 / 1e6) / rate.max(1e-9);
+            // waste-fed penalty: a shard whose fused groups of this op
+            // keep padding heavily burns substrate time the rate EWMA
+            // (useful lanes only) cannot see — (1 + waste) charges the
+            // estimate for those phantom lanes, so a poorly-packing
+            // shard loses traffic in proportion to its waste fraction
+            let waste = view.measured_waste(i, op).unwrap_or(0.0);
+            let score = backlog * (len as f64 / 1e6) / rate.max(1e-9) * (1.0 + waste);
             let better = match best {
                 Some((best_s, _)) => score < best_s,
                 None => true,
@@ -666,6 +675,30 @@ mod tests {
             m[0].enter();
         }
         assert_eq!(p.route(Op::Mul22, 4096, &v), 1);
+    }
+
+    #[test]
+    fn measured_high_waste_shard_loses_traffic() {
+        let m = metas(2);
+        // identical useful-lane rates (1000 Melem/s each), but shard 1's
+        // fused groups pad half their launched lanes: its (1 + waste)
+        // surcharge must lose it the tie
+        warm(&m[0], Op::Add22, 1_000_000_000, 1.0);
+        m[1].telemetry().record_attempt(Op::Add22);
+        m[1].telemetry().record(Op::Add22, 1_000_000_000, 1.0, 1_000_000_000);
+        let v = TelemetryView::new(&m);
+        assert!((v.measured_waste(1, Op::Add22).unwrap() - 0.5).abs() < 1e-12);
+        let p = Measured::new();
+        for _ in 0..10 {
+            assert_eq!(p.route(Op::Add22, 4096, &v), 0);
+        }
+        // the penalty is proportional, not a ban: once the clean shard
+        // backlogs past the waste surcharge, the wasteful one wins
+        // (score0 = 4·4096/1e6/1000 > score1 = 1.5·4096/1e6/1000)
+        for _ in 0..3 {
+            m[0].enter();
+        }
+        assert_eq!(p.route(Op::Add22, 4096, &v), 1);
     }
 
     #[test]

@@ -32,6 +32,7 @@
 //! arithmetic-model canary).
 
 use super::batcher;
+use super::cache::{CacheFill, CacheStats, Decision, ResultCache};
 use super::metrics::{Metrics, Snapshot, TenantCounters, TenantLedger};
 use super::observatory::{
     self, AccuracyReport, ObsLink, ObsMsg, ObservatorySpec, TicketSet,
@@ -40,7 +41,7 @@ use super::plan::{Plan, Ticket, TicketState};
 use super::request::OpRequest;
 use super::routing::{Routing, RoutingPolicy, ShardMeta, TelemetryView};
 use crate::backend::{
-    BackendSpec, BufferPool, ExecJob, KernelBackend, Op, ServiceError,
+    fingerprint, BackendSpec, BufferPool, ExecJob, KernelBackend, Op, ServiceError,
 };
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -95,6 +96,15 @@ pub struct ServiceSpec {
     /// ([`Service::accuracy_report`]). `None` (the default) serves
     /// without observation.
     pub observe: Option<ObservatorySpec>,
+    /// Byte budget of the content-addressed result cache in MiB
+    /// ([`crate::coordinator::cache`]). 0 (the default) serves without
+    /// a cache: every dispatch routes to a shard.
+    pub cache_mb: usize,
+    /// Let each shard *adapt* its fusion ladder per operator from the
+    /// measured padding-waste EWMA ([`batcher::adapt`]): a ladder
+    /// that keeps padding gains denser rungs until the waste drains.
+    /// Off by default — the static ladder is the paper-faithful grid.
+    pub adaptive_ladder: bool,
 }
 
 impl Default for ServiceSpec {
@@ -113,6 +123,8 @@ impl ServiceSpec {
             fuse_window: Duration::ZERO,
             fuse_sizes: Vec::new(),
             observe: None,
+            cache_mb: 0,
+            adaptive_ladder: false,
         }
     }
 
@@ -150,6 +162,20 @@ impl ServiceSpec {
     /// fraction fail startup.
     pub fn with_observatory(mut self, observe: ObservatorySpec) -> ServiceSpec {
         self.observe = Some(observe);
+        self
+    }
+
+    /// Arm the content-addressed result cache with a `mb`-MiB byte
+    /// budget (see [`ServiceSpec::cache_mb`]).
+    pub fn with_cache_mb(mut self, mb: usize) -> ServiceSpec {
+        self.cache_mb = mb;
+        self
+    }
+
+    /// Let shards adapt their fusion ladders from measured padding
+    /// waste (see [`ServiceSpec::adaptive_ladder`]).
+    pub fn with_adaptive_ladder(mut self, on: bool) -> ServiceSpec {
+        self.adaptive_ladder = on;
         self
     }
 
@@ -202,6 +228,7 @@ struct ShardConfig {
     max_batch: usize,
     fuse_window: Duration,
     fuse_sizes: Vec<usize>,
+    adaptive_ladder: bool,
 }
 
 enum Msg {
@@ -220,6 +247,7 @@ pub struct Service {
     obs: Option<ObsLink>,
     obs_join: Option<JoinHandle<()>>,
     tenants: Arc<TenantLedger>,
+    cache: Option<Arc<ResultCache>>,
 }
 
 /// Cheap cloneable submission handle; placement is delegated to the
@@ -231,6 +259,7 @@ pub struct Handle {
     policy: Arc<dyn RoutingPolicy>,
     obs: Option<ObsLink>,
     tenants: Arc<TenantLedger>,
+    cache: Option<Arc<ResultCache>>,
 }
 
 impl Handle {
@@ -240,12 +269,18 @@ impl Handle {
     /// a lane.
     fn submit_to_shard(
         &self, op: Op, inputs: Vec<Arc<Vec<f32>>>, len: usize,
+        mut fill: Option<CacheFill>,
     ) -> Result<Ticket, ServiceError> {
         let view = TelemetryView::new(&self.meta);
         let shard = self.policy.route(op, len, &view) % self.txs.len();
+        if let Some(f) = fill.as_mut() {
+            // attribution only: followers that resolve off this leader
+            // report the shard that actually executed
+            f.set_shard(shard);
+        }
         let (reply, rx) = mpsc::channel();
         let state = Arc::new(TicketState::new());
-        let req = OpRequest { op, inputs, reply, ctrl: state.clone() };
+        let req = OpRequest { op, inputs, reply, ctrl: state.clone(), fill };
         self.meta[shard].enter();
         if self.txs[shard].send(Msg::Submit(req)).is_err() {
             self.meta[shard].leave(1);
@@ -264,15 +299,45 @@ impl Handle {
     /// fraction of dispatches is mirrored onto the observatory's own
     /// backends **after** routing — the mirror is an `Arc`-clone of the
     /// input planes and never touches a shard queue or its telemetry.
+    ///
+    /// With a result cache armed ([`ServiceSpec::cache_mb`]), the
+    /// dispatch is resolved against it *first* — before the observatory
+    /// sampler ticks and before the routing policy runs — so hits and
+    /// coalesced follows are invisible to both: no queue-depth bump, no
+    /// rate-EWMA sample, no mirror. A hit's reply is pre-sent into the
+    /// ticket's channel, which preserves the full lifecycle contract
+    /// ([`Ticket::wait_timeout`] drains the channel before ruling
+    /// expiry, and an explicit [`Ticket::cancel`] still wins) exactly
+    /// as if a shard had replied instantly.
     pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
         let (op, raw, len) = plan.into_parts();
+        let mut fill = None;
+        if let Some(cache) = &self.cache {
+            let key = fingerprint(op, &raw);
+            let (reply, rx) = mpsc::channel();
+            let state = Arc::new(TicketState::new());
+            match cache.begin(op, key, &reply, &state) {
+                Decision::Hit { planes, shard } => {
+                    let _ = reply.send(Ok(planes.as_ref().clone()));
+                    return Ok(Ticket { rx, op, shard, len, state });
+                }
+                Decision::Follow { shard } => {
+                    // the leader's shard resolves this ticket; rx was
+                    // attached under the cache's stripe lock
+                    return Ok(Ticket { rx, op, shard, len, state });
+                }
+                Decision::Lead => {
+                    fill = Some(CacheFill::new(cache.clone(), op, key));
+                }
+            }
+        }
         let inputs: Vec<Arc<Vec<f32>>> = raw.into_iter().map(Arc::new).collect();
         // sampling ticks per dispatch; the clone is refcount bumps only
         let mirror = match &self.obs {
             Some(o) if o.ctl.sample() => Some(inputs.clone()),
             _ => None,
         };
-        let ticket = self.submit_to_shard(op, inputs, len)?;
+        let ticket = self.submit_to_shard(op, inputs, len, fill)?;
         if let (Some(o), Some(planes)) = (&self.obs, mirror) {
             o.send_mirror(op, planes, len, None);
         }
@@ -313,7 +378,9 @@ impl Handle {
         let (op, raw, len) = plan.into_parts();
         let inputs: Vec<Arc<Vec<f32>>> = raw.into_iter().map(Arc::new).collect();
         let mirror_planes = inputs.clone();
-        let ticket = self.submit_to_shard(op, inputs, len)?;
+        // forced-measurement path: bypass the cache (no lookup, no
+        // fill) so the shard genuinely executes what the mirror diffs
+        let ticket = self.submit_to_shard(op, inputs, len, None)?;
         let (rtx, rrx) = mpsc::channel();
         if !obs.send_mirror(op, mirror_planes, len, Some(rtx.clone())) {
             // observatory gone (service shutting down): deliver the
@@ -342,6 +409,12 @@ impl Handle {
     /// queue depth, per-op capability and measured rates per shard.
     pub fn telemetry(&self) -> TelemetryView<'_> {
         TelemetryView::new(&self.meta)
+    }
+
+    /// Aggregate result-cache counters and occupancy; `None` when no
+    /// cache is armed ([`ServiceSpec::cache_mb`] = 0).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 }
 
@@ -379,7 +452,10 @@ impl Service {
             max_batch: spec.max_batch.max(1),
             fuse_window: spec.fuse_window,
             fuse_sizes,
+            adaptive_ladder: spec.adaptive_ladder,
         };
+        let cache = (spec.cache_mb > 0)
+            .then(|| Arc::new(ResultCache::with_budget(spec.cache_mb << 20)));
         let shards = spec.shards.len();
         let meta: Arc<Vec<ShardMeta>> =
             Arc::new(spec.shards.iter().map(|s| ShardMeta::new(s.label())).collect());
@@ -425,7 +501,18 @@ impl Service {
             None => (None, None),
         };
         let tenants = Arc::new(TenantLedger::new());
-        Ok(Service { txs, meta, policy, metrics, live, joins, obs, obs_join, tenants })
+        Ok(Service {
+            txs,
+            meta,
+            policy,
+            metrics,
+            live,
+            joins,
+            obs,
+            obs_join,
+            tenants,
+            cache,
+        })
     }
 
     pub fn handle(&self) -> Handle {
@@ -435,6 +522,7 @@ impl Service {
             policy: self.policy.clone(),
             obs: self.obs.clone(),
             tenants: self.tenants.clone(),
+            cache: self.cache.clone(),
         }
     }
 
@@ -519,6 +607,12 @@ impl Service {
     /// shed/denial is recorded.
     pub fn tenant_metrics(&self) -> std::collections::BTreeMap<String, TenantCounters> {
         self.tenants.snapshot()
+    }
+
+    /// Aggregate result-cache counters and occupancy; `None` when no
+    /// cache is armed ([`ServiceSpec::cache_mb`] = 0).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
     }
 
     /// Name of the active routing policy.
@@ -651,9 +745,20 @@ fn device_thread(
         }
         let mut executed_any = false;
         for (op, reqs) in groups {
+            // waste-fed planning: when adaptation is armed, densify the
+            // ladder for ops whose measured padding-waste EWMA runs hot
+            // (a fresh Vec per group — the EWMA moves batch to batch)
+            let adapted: Vec<usize>;
+            let ladder: &[usize] = if cfg.adaptive_ladder && !cfg.fuse_sizes.is_empty()
+            {
+                adapted =
+                    batcher::adapt(&cfg.fuse_sizes, meta[shard].telemetry().waste(op));
+                &adapted
+            } else {
+                &cfg.fuse_sizes
+            };
             executed_any |= serve_group(
-                backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs,
-                &cfg.fuse_sizes,
+                backend.as_mut(), &mut pool, &metrics, &meta[shard], op, reqs, ladder,
             );
         }
         // triage-only drains (every request cancelled/expired) ran no
@@ -705,23 +810,37 @@ fn serve_group(
     // abandonment only.
     let now = Instant::now();
     let mut live = Vec::with_capacity(reqs.len());
-    for r in reqs {
+    for mut r in reqs {
         if r.ctrl.expired(now) {
             // mark it so a racing client-side wait agrees the request
             // is dead
             r.ctrl.cancel();
-            meta.leave(1);
             metrics.record_expired(1);
             let _ = r.reply.send(Err(ServiceError::DeadlineExceeded));
+            if promote_follower(&mut r, now) {
+                // a live single-flight follower takes over leadership:
+                // the request stays in the group (and keeps its queue
+                // slot — the work is still in flight) with the
+                // follower's reply channel and lifecycle state
+                live.push(r);
+            } else {
+                meta.leave(1);
+                // dropping `r` drops its unresolved fill (if any),
+                // clearing the in-flight cache entry
+            }
         } else if r.ctrl.is_cancelled() {
-            meta.leave(1);
             metrics.record_cancelled(1);
             let _ = r.reply.send(Err(ServiceError::Cancelled));
+            if promote_follower(&mut r, now) {
+                live.push(r);
+            } else {
+                meta.leave(1);
+            }
         } else {
             live.push(r);
         }
     }
-    let reqs = live;
+    let mut reqs = live;
     if reqs.is_empty() {
         return false;
     }
@@ -735,13 +854,12 @@ fn serve_group(
     // its own shared planes (no gather/scatter copies) and its output
     // planes become the reply
     if reqs.len() == 1 && fuse_sizes.is_empty() {
-        let req = &reqs[0];
-        let n = req.len();
-        let job = match ExecJob::from_shared(op, req.inputs.clone()) {
+        let n = reqs[0].len();
+        let job = match ExecJob::from_shared(op, reqs[0].inputs.clone()) {
             Ok(j) => j,
             Err(e) => {
                 meta.leave(1);
-                fail_group(metrics, &reqs, e);
+                fail_group(metrics, &mut reqs, e);
                 return true;
             }
         };
@@ -753,14 +871,24 @@ fn serve_group(
         let result = backend.execute(&job, &mut outs);
         let exec_s = t_exec.elapsed().as_secs_f64();
         meta.leave(1);
+        let req = &mut reqs[0];
         match result {
             Ok(rep) => {
                 meta.telemetry().record(op, n as u64, exec_s, rep.padded_elements);
                 metrics.record_batch(1, rep.launches, n as u64, rep.padded_elements);
+                let outs = match req.fill.take() {
+                    // cache leader: insert + fan out to followers, then
+                    // reply with the (possibly reclaimed) planes
+                    Some(mut fill) => fill.complete(outs, exec_s),
+                    None => outs,
+                };
                 let _ = req.reply.send(Ok(outs));
             }
             Err(e) => {
                 metrics.record_error();
+                if let Some(mut fill) = req.fill.take() {
+                    fill.fail(&e);
+                }
                 let _ = req.reply.send(Err(e));
             }
         }
@@ -834,22 +962,62 @@ fn serve_group(
         None => {
             meta.telemetry().record(op, total as u64, exec_s, padded);
             metrics.record_batch(reqs.len(), launches_done, total as u64, padded);
-            for (r, planes) in reqs.iter().zip(acc) {
+            for (r, planes) in reqs.iter_mut().zip(acc) {
+                let planes = match r.fill.take() {
+                    Some(mut fill) => {
+                        // the cache's recompute-cost signal: this
+                        // request's lane-proportional share of the
+                        // group's measured execution time
+                        let cost = exec_s * r.len() as f64 / total.max(1) as f64;
+                        fill.complete(planes, cost)
+                    }
+                    None => planes,
+                };
                 let _ = r.reply.send(Ok(planes));
             }
         }
         Some(e) => {
-            fail_group(metrics, &reqs, e);
+            fail_group(metrics, &mut reqs, e);
         }
     }
     true
 }
 
-fn fail_group(metrics: &Metrics, reqs: &[OpRequest], err: ServiceError) {
+/// A dead cache leader hands its in-flight entry to a live parked
+/// follower: the follower's reply sender and lifecycle state are
+/// substituted into the request, which stays in the group. Dead
+/// followers (expired first, then cancelled — same triage order as
+/// leaders) get their own verdicts and are skipped. Followers never
+/// entered a shard queue, so no queue-depth or shard-metrics
+/// accounting applies to them here. Returns false when no live
+/// follower exists.
+fn promote_follower(r: &mut OpRequest, now: Instant) -> bool {
+    let Some(fill) = r.fill.as_ref() else { return false };
+    while let Some((tx, ctrl)) = fill.pop_follower() {
+        if ctrl.expired(now) {
+            ctrl.cancel();
+            let _ = tx.send(Err(ServiceError::DeadlineExceeded));
+        } else if ctrl.is_cancelled() {
+            let _ = tx.send(Err(ServiceError::Cancelled));
+        } else {
+            r.reply = tx;
+            r.ctrl = ctrl;
+            return true;
+        }
+    }
+    false
+}
+
+fn fail_group(metrics: &Metrics, reqs: &mut [OpRequest], err: ServiceError) {
     // one error per request, not per group — `errors` must reconcile
     // against `requests`
     metrics.record_errors(reqs.len());
     for r in reqs {
+        if let Some(mut fill) = r.fill.take() {
+            // execution errors are the computation's outcome: followers
+            // share them
+            fill.fail(&err);
+        }
         let _ = r.reply.send(Err(err.clone()));
     }
 }
@@ -1166,6 +1334,9 @@ mod tests {
         // fusion defaults: off until armed
         assert!(spec.fuse_window.is_zero());
         assert!(spec.fuse_sizes.is_empty());
+        // cache and adaptive planning default off too
+        assert_eq!(spec.cache_mb, 0);
+        assert!(!spec.adaptive_ladder);
         assert!(ServiceSpec::from_cli("", dir).is_err());
         assert!(ServiceSpec::from_cli("native*lots", dir).is_err());
         assert!(ServiceSpec::from_cli("native*0,gpusim", dir).is_err());
@@ -1288,6 +1459,44 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_ladder_pads_less_than_static_on_awkward_sizes() {
+        // a 6000-lane stream against a 1024/4096/16384/65536 ladder
+        // tail-splits to 4096+4096 (26.8% waste) — past the 15%
+        // adaptation threshold. With `adaptive_ladder` armed the hot
+        // waste EWMA densifies later batches (2560+4096, 9.9%), so the
+        // cumulative padding fraction must come out strictly below the
+        // static ladder's. Sequential dispatch->wait keeps one request
+        // per batch, which makes both plans deterministic.
+        let rounds = 6u64;
+        let mut fractions = Vec::new();
+        for adaptive in [false, true] {
+            let mut spec = ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_fuse_window(Duration::from_millis(1))
+                .with_fuse_sizes(vec![1024, 4096, 16384, 65536]);
+            if adaptive {
+                spec = spec.with_adaptive_ladder(true);
+            }
+            let svc = Service::start(spec).unwrap();
+            let h = svc.handle();
+            for seed in 0..rounds {
+                let planes = crate::harness::workload::planes_for("add22", 6000, seed);
+                h.dispatch(Plan::new(Op::Add22, planes).unwrap())
+                    .unwrap()
+                    .wait()
+                    .unwrap();
+            }
+            // waste metrics for a batch land after its reply is sent
+            std::thread::sleep(Duration::from_millis(50));
+            fractions.push(svc.metrics().padding_fraction());
+        }
+        assert!(fractions[0] > 0.15, "static ladder should run hot: {fractions:?}");
+        assert!(
+            fractions[1] < fractions[0],
+            "adaptive ladder must waste less padding than static: {fractions:?}"
+        );
+    }
+
+    #[test]
     fn fuse_window_never_holds_a_deadline_armed_request() {
         // a window far longer than the deadline: the shard must launch
         // as soon as it notices the deadline instead of fusing the
@@ -1374,5 +1583,117 @@ mod tests {
             .unwrap()
             .into_receiver();
         assert_eq!(rx.recv().unwrap().unwrap()[0], vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn cache_hit_serves_bit_identical_without_reexecuting() {
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1).with_cache_mb(16),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let planes = add22_planes(500, 17);
+        let cold = run(&h, Op::Add22, planes.clone()).unwrap();
+        let warm = run(&h, Op::Add22, planes.clone()).unwrap();
+        for p in 0..2 {
+            for i in 0..500 {
+                assert_eq!(cold[p][i].to_bits(), warm[p][i].to_bits(), "p={p} i={i}");
+            }
+        }
+        // the warm dispatch never reached the shard
+        let m = svc.metrics();
+        assert_eq!(m.requests, 1);
+        let s = svc.cache_stats().unwrap();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert!(s.live_bytes > 0 && s.live_bytes <= s.budget_bytes);
+        // different content is a fresh miss, not a collision hit
+        let other = run(&h, Op::Add22, add22_planes(500, 18)).unwrap();
+        assert_eq!(other.len(), 2);
+        assert_eq!(svc.cache_stats().unwrap().misses, 2);
+    }
+
+    #[test]
+    fn cache_hit_honors_deadline_and_cancel_semantics() {
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1).with_cache_mb(16),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let planes = add22_planes(64, 3);
+        run(&h, Op::Add22, planes.clone()).unwrap(); // warm the cache
+        // hit-before-deadline: the pre-sent reply is drained before any
+        // expiry verdict, even when the wait happens after the deadline
+        // has technically passed
+        let t = h
+            .dispatch(Plan::new(Op::Add22, planes.clone()).unwrap())
+            .unwrap()
+            .deadline(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        let out = t.wait().expect("hit reply beats expiry, like any arrived reply");
+        assert_eq!(out.len(), 2);
+        // cancel-after-hit: explicit cancellation is sticky and wins
+        // over the already-delivered reply, exactly as with a shard
+        let t = h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap();
+        t.cancel();
+        assert!(matches!(t.wait(), Err(ServiceError::Cancelled)));
+        // both dispatches above were cache hits — shard saw one request
+        assert_eq!(svc.metrics().requests, 1);
+    }
+
+    #[test]
+    fn single_flight_coalesces_concurrent_identical_dispatches() {
+        // hold the leader's batch open with a fuse window so identical
+        // dispatches from other threads land while it is in flight
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 1)
+                .with_cache_mb(16)
+                .with_max_batch(64)
+                .with_fuse_window(Duration::from_millis(50)),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let planes = add22_planes(2000, 23);
+        let n_clients = 8;
+        let tickets: Vec<Ticket> = (0..n_clients)
+            .map(|_| h.dispatch(Plan::new(Op::Add22, planes.clone()).unwrap()).unwrap())
+            .collect();
+        let mut outs = Vec::new();
+        for t in tickets {
+            outs.push(t.wait().unwrap());
+        }
+        for o in &outs[1..] {
+            for p in 0..2 {
+                for i in 0..2000 {
+                    assert_eq!(o[p][i].to_bits(), outs[0][p][i].to_bits());
+                }
+            }
+        }
+        // exactly one execution: one attempt on the only shard, one
+        // request through its metrics, N-1 coalesced followers
+        assert_eq!(svc.telemetry().attempts(0, Op::Add22), 1);
+        assert_eq!(svc.metrics().requests, 1);
+        let s = svc.cache_stats().unwrap();
+        assert_eq!((s.misses, s.coalesced), (1, (n_clients - 1) as u64));
+    }
+
+    #[test]
+    fn cached_service_survives_mixed_traffic_on_gpusim() {
+        // hit outputs must be bit-identical to cold misses on the
+        // simulated-GPU substrate too (its arithmetic differs from
+        // native — the cache must never cross substrates' results)
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1).with_cache_mb(8),
+        )
+        .unwrap();
+        let h = svc.handle();
+        let planes = add22_planes(300, 41);
+        let cold = run(&h, Op::Add22, planes.clone()).unwrap();
+        let warm = run(&h, Op::Add22, planes).unwrap();
+        for p in 0..2 {
+            for i in 0..300 {
+                assert_eq!(cold[p][i].to_bits(), warm[p][i].to_bits());
+            }
+        }
+        assert_eq!(svc.cache_stats().unwrap().hits, 1);
     }
 }

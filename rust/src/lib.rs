@@ -54,7 +54,19 @@
 //!   configurable fraction of live traffic onto a native reference
 //!   plus simulated GPU models, diffing replies lane-by-lane in ulps —
 //!   the paper's Tables 2 and 5 as a continuous experiment
-//!   ([`coordinator::Service::accuracy_report`]);
+//!   ([`coordinator::Service::accuracy_report`]); in front of routing
+//!   sits an opt-in **content-addressed result cache**
+//!   ([`coordinator::ResultCache`], armed via
+//!   [`coordinator::ServiceSpec::cache_mb`]): repeated identical
+//!   grids resolve without touching a shard, concurrent identical
+//!   misses coalesce single-flight behind one leader, memory stays
+//!   under a byte budget via cost-aware segmented-LRU eviction, and
+//!   hits are provably invisible to routing telemetry and the
+//!   observatory; padding-waste EWMAs feed back into planning — the
+//!   `measured` policy surcharges wasteful placements and
+//!   [`coordinator::ServiceSpec::adaptive_ladder`] lets each shard
+//!   densify its fuse ladder around hot sizes
+//!   ([`coordinator::batcher::adapt`]);
 //! * [`net`] — the **wire front end**: a std-only, length-prefixed
 //!   binary protocol over TCP ([`net::frame`]) serving the coordinator
 //!   to out-of-process clients; [`net::WireServer`] owns a

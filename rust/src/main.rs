@@ -31,6 +31,12 @@
 //! `--observe F` mirrors fraction F of the demo traffic through the
 //! accuracy observatory (`--observe-models nv35,r300,chopped`) and
 //! prints the live Table-2/Table-5 accuracy report at the end.
+//! `--cache-mb N` (default: `FFGPU_CACHE_MB`) arms the coordinator's
+//! content-addressed result cache with an N MiB budget — repeated
+//! identical grids resolve without touching a shard — and
+//! `--adaptive-ladder` (default: `FFGPU_ADAPTIVE_LADDER=1`) lets each
+//! shard densify its fuse ladder around sizes whose padding-waste EWMA
+//! runs hot.
 //! `--listen ADDR` (default: the `FFGPU_LISTEN` env var) additionally
 //! serves the coordinator over TCP through the wire front end
 //! ([`ffgpu::net`]) while the demo runs, and `--serve-secs N` keeps
@@ -95,6 +101,19 @@ fn main() {
     )
     .parse()
     .unwrap_or(0);
+    // --cache-mb arms the content-addressed result cache; the env var
+    // is the no-flag default so CI smokes can arm it without argv edits
+    let cache_mb: usize = get_flag(
+        "--cache-mb",
+        std::env::var("FFGPU_CACHE_MB").unwrap_or_default(),
+    )
+    .parse()
+    .unwrap_or(0);
+    let adaptive_ladder = args.iter().any(|a| a == "--adaptive-ladder")
+        || matches!(
+            std::env::var("FFGPU_ADAPTIVE_LADDER").as_deref(),
+            Ok("1") | Ok("true")
+        );
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -107,6 +126,7 @@ fn main() {
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
             deadline_ms, fuse_window_ms, workers_flag, tier_flag, chunk_flag,
             &observe_flag, &observe_models, &listen_flag, serve_secs,
+            cache_mb, adaptive_ladder,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -184,6 +204,18 @@ SHARD SETS (serve-demo):
   --observe-models M1,M2              GPU models the observatory diffs
                                       against (default nv35,r300,chopped;
                                       also: ieee-rn, nv40)
+  --cache-mb N                        arm the content-addressed result
+                                      cache with an N MiB byte budget:
+                                      repeated identical grids resolve
+                                      without touching a shard, and the
+                                      demo workload pins itself to a
+                                      small repeated-grid set so hits
+                                      show up (default: FFGPU_CACHE_MB)
+  --adaptive-ladder                   let each shard densify its fuse
+                                      ladder around sizes whose padding
+                                      waste EWMA runs hot (needs
+                                      --fuse-window; also
+                                      FFGPU_ADAPTIVE_LADDER=1)
   --listen ADDR                       serve the coordinator over TCP on
                                       ADDR (e.g. 127.0.0.1:7070) through
                                       the wire front end while the demo
@@ -403,7 +435,7 @@ fn cmd_serve_demo(
     routing_flag: &str, deadline_ms: u64, fuse_window_ms: u64,
     workers_flag: Option<usize>, tier_flag: Option<KernelTier>,
     chunk_flag: Option<usize>, observe_flag: &str, observe_models: &str,
-    listen: &str, serve_secs: u64,
+    listen: &str, serve_secs: u64, cache_mb: usize, adaptive_ladder: bool,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -456,6 +488,15 @@ fn cmd_serve_demo(
             .with_fuse_window(std::time::Duration::from_millis(fuse_window_ms))
             .with_fuse_sizes(ffgpu::coordinator::PAPER_FUSE_SIZES.to_vec());
     }
+    // --cache-mb arms the content-addressed result cache in front of
+    // routing; --adaptive-ladder opts every shard into waste-fed fuse
+    // ladder densification
+    if cache_mb > 0 {
+        spec = spec.with_cache_mb(cache_mb);
+    }
+    if adaptive_ladder {
+        spec = spec.with_adaptive_ladder(true);
+    }
     // --observe arms the accuracy observatory: a fraction of the demo
     // traffic is mirrored onto a native reference + the listed GPU
     // models, and a live Table-2/Table-5 report prints at the end
@@ -470,17 +511,26 @@ fn cmd_serve_demo(
     }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
     println!(
-        "shards: [{}]  routing: {}  fusion: {}  observatory: {}",
+        "shards: [{}]  routing: {}  fusion: {}  observatory: {}  cache: {}",
         labels.join(", "),
         routing.name(),
         if fuse_window_ms > 0 {
-            format!("{fuse_window_ms}ms window, ladder {:?}", spec.fuse_sizes)
+            format!(
+                "{fuse_window_ms}ms window, ladder {:?}{}",
+                spec.fuse_sizes,
+                if adaptive_ladder { " (adaptive)" } else { "" }
+            )
         } else {
             "off".to_string()
         },
         match &spec.observe {
             Some(o) => format!("{:.0}% -> [{}]", o.fraction * 100.0, o.models.join(", ")),
             None => "off".to_string(),
+        },
+        if cache_mb > 0 {
+            format!("{cache_mb} MiB")
+        } else {
+            "off".to_string()
         }
     );
     let svc = match Service::start(spec) {
@@ -536,8 +586,15 @@ fn cmd_serve_demo(
             let mut missed = 0u64;
             for round in 0..rounds {
                 let op = Op::ALL[(client as usize + round) % Op::COUNT];
-                let n = 1000 + rng.below(top);
-                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                // with the result cache armed, pin every client to a
+                // small repeated-grid set so hits (and single-flight
+                // coalescing across clients) actually show up
+                let (n, seed) = if cache_mb > 0 {
+                    (4096, (round % 5) as u64)
+                } else {
+                    (1000 + rng.below(top), rng.next_u64())
+                };
+                let planes = workload::planes_for(op.name(), n, seed);
                 let plan = Plan::new(op, planes).expect("plan");
                 let mut ticket = h.dispatch(plan).expect("dispatch");
                 if deadline_ms > 0 {
@@ -594,6 +651,15 @@ fn cmd_serve_demo(
         println!("  shard {i} [{label}]{tier}: requests={} batches={} elements={} \
                   measured Melem/s: {}",
                  s.requests, s.batches, s.elements, rates.join(" "));
+    }
+    // the result-cache banner: how much traffic resolved before routing
+    if let Some(cs) = svc.cache_stats() {
+        println!(
+            "  cache: hits={} misses={} coalesced={} hit-rate={:.1}% \
+             inserted={}B evictions={} live={}B/{}B",
+            cs.hits, cs.misses, cs.coalesced, cs.hit_rate() * 100.0,
+            cs.inserted_bytes, cs.evictions, cs.live_bytes, cs.budget_bytes
+        );
     }
     // the live accuracy surface: what the paper measured once, observed
     // continuously under the demo's traffic

@@ -113,8 +113,9 @@ impl WireClient {
     }
 
     /// Fetch the server's live status snapshot (shard tiers, queue
-    /// depths, per-tenant counters). In-flight replies arriving first
-    /// are stashed, not lost.
+    /// depths, per-tenant counters, and — when the server has one
+    /// armed — result-cache counters in [`Status::cache`]). In-flight
+    /// replies arriving first are stashed, not lost.
     pub fn status(&mut self) -> Result<Status, WireError> {
         self.stream
             .write_all(&encode_frame(FrameKind::StatusReq, &[]))?;

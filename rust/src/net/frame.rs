@@ -18,6 +18,7 @@ use std::fmt;
 use std::io::{self, Read};
 
 use crate::backend::{Op, ServiceError};
+use crate::coordinator::CacheStats;
 use crate::ff::simd::KernelTier;
 use crate::json::{self, Value};
 
@@ -608,6 +609,10 @@ pub struct Status {
     pub queue_depths: Vec<u64>,
     /// Sorted by tenant name.
     pub tenants: Vec<TenantStatus>,
+    /// Result-cache counters; `None` when the server serves without a
+    /// cache (the field is omitted on the wire, so pre-cache peers
+    /// interoperate both ways).
+    pub cache: Option<CacheStats>,
 }
 
 impl Status {
@@ -629,13 +634,26 @@ impl Status {
                 })
                 .collect(),
         );
-        json::obj(vec![
+        let mut fields = vec![
             ("shards", shards_to_value(&self.shards)),
             ("queue_depths", depths),
             ("tenants", tenants),
-        ])
-        .render()
-        .into_bytes()
+        ];
+        if let Some(c) = &self.cache {
+            fields.push((
+                "cache",
+                json::obj(vec![
+                    ("hits", Value::Number(c.hits as f64)),
+                    ("misses", Value::Number(c.misses as f64)),
+                    ("coalesced", Value::Number(c.coalesced as f64)),
+                    ("inserted_bytes", Value::Number(c.inserted_bytes as f64)),
+                    ("evictions", Value::Number(c.evictions as f64)),
+                    ("live_bytes", Value::Number(c.live_bytes as f64)),
+                    ("budget_bytes", Value::Number(c.budget_bytes as f64)),
+                ]),
+            ));
+        }
+        json::obj(fields).render().into_bytes()
     }
 
     pub fn decode(payload: &[u8]) -> Result<Status, WireError> {
@@ -663,7 +681,21 @@ impl Status {
                 })
             })
             .collect::<Result<Vec<TenantStatus>, WireError>>()?;
-        Ok(Status { shards, queue_depths, tenants })
+        // optional for both-ways compat with pre-cache peers; when
+        // present, every counter must parse
+        let cache = match ctl.get("cache") {
+            None => None,
+            Some(c) => Some(CacheStats {
+                hits: get_u64(c, "hits")?,
+                misses: get_u64(c, "misses")?,
+                coalesced: get_u64(c, "coalesced")?,
+                inserted_bytes: get_u64(c, "inserted_bytes")?,
+                evictions: get_u64(c, "evictions")?,
+                live_bytes: get_u64(c, "live_bytes")?,
+                budget_bytes: get_u64(c, "budget_bytes")?,
+            }),
+        };
+        Ok(Status { shards, queue_depths, tenants, cache })
     }
 }
 
@@ -858,8 +890,37 @@ mod tests {
                 shed: 1,
                 denied: 2,
             }],
+            cache: None,
         };
         assert_eq!(Status::decode(&status.encode()).unwrap(), status);
+
+        // cache counters ride along when the server has a cache armed
+        let cached = Status {
+            cache: Some(CacheStats {
+                hits: 10,
+                misses: 4,
+                coalesced: 3,
+                inserted_bytes: 1 << 20,
+                evictions: 1,
+                live_bytes: 900_000,
+                budget_bytes: 64 << 20,
+            }),
+            ..status
+        };
+        assert_eq!(Status::decode(&cached.encode()).unwrap(), cached);
+    }
+
+    #[test]
+    fn status_without_cache_field_decodes_for_old_peers() {
+        // a pre-cache server's status payload has no "cache" key at
+        // all; a new client must decode it as None, not error
+        let payload = br#"{"shards":[{"label":"native"}],"queue_depths":[0],"tenants":[]}"#;
+        let s = Status::decode(payload).unwrap();
+        assert_eq!(s.cache, None);
+        assert_eq!(s.shards.len(), 1);
+        // a present-but-garbled cache block is a decode error, not None
+        let garbled = br#"{"shards":[],"queue_depths":[],"tenants":[],"cache":{"hits":"lots"}}"#;
+        assert!(Status::decode(garbled).is_err());
     }
 
     #[test]

@@ -514,7 +514,12 @@ impl ConnWorker {
                 denied: c.denied,
             })
             .collect();
-        Status { shards: self.shard_infos(), queue_depths, tenants }
+        Status {
+            shards: self.shard_infos(),
+            queue_depths,
+            tenants,
+            cache: self.handle.cache_stats(),
+        }
     }
 
     fn protocol_error(&self, conn: &mut Conn, err: &WireError) {

@@ -1,8 +1,9 @@
 //! Integration: the coordinator service end-to-end — heterogeneous
 //! native+gpusim shard sets with routing policies, telemetry-driven
-//! measured placement, ticket deadlines/cancellation, and the fusion
-//! stage's cross-request batch packing (always runnable), plus the XLA
-//! backend paths when artifacts exist.
+//! measured placement, ticket deadlines/cancellation, the fusion
+//! stage's cross-request batch packing, and the result cache's
+//! isolation from routing telemetry and the observatory (always
+//! runnable), plus the XLA backend paths when artifacts exist.
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::observatory::one_shot_sweep;
@@ -634,4 +635,66 @@ fn observation_does_not_perturb_measured_routing() {
     assert_eq!(rep.mirrored_requests, 8);
     assert_eq!(rep.row("nv35", Op::Add22).unwrap().lanes, 8 * 256);
     assert!(plain.accuracy_report().is_none(), "no observatory on the plain set");
+}
+
+/// Tentpole acceptance: result-cache hits are invisible to routing
+/// telemetry and to the observatory. With the cache armed, measured
+/// routing on, and an observatory mirroring every sampled request, N
+/// repeats of one grid must leave exactly one attempt/sample in shard
+/// telemetry (so the rate EWMAs the `measured` policy scores over see
+/// one execution, not N), one mirrored observatory request, and one
+/// service-level request — the N-1 hits resolve before the sampler
+/// tick and before routing, and never touch a shard.
+#[test]
+fn cache_hits_are_invisible_to_telemetry_and_observatory() {
+    let svc = Service::start(
+        ServiceSpec::heterogeneous(vec![
+            BackendSpec::native_single(),
+            BackendSpec::native_single(),
+        ])
+        .with_routing(Routing::Measured)
+        .with_cache_mb(16)
+        .with_observatory(ObservatorySpec::new(1.0, ["nv35"])),
+    )
+    .unwrap();
+    let h = svc.handle();
+    let planes = workload::planes_for("add22", 512, 0xCAFE);
+    let rounds = 10u64;
+    let mut first: Option<Vec<Vec<f32>>> = None;
+    for _ in 0..rounds {
+        let out = h
+            .dispatch(Plan::new(Op::Add22, planes.clone()).unwrap())
+            .unwrap()
+            .wait()
+            .unwrap();
+        match &first {
+            None => first = Some(out),
+            // every hit is bit-identical to the cold execution
+            Some(want) => {
+                for (pw, po) in want.iter().zip(&out) {
+                    for i in 0..pw.len() {
+                        assert_eq!(pw[i].to_bits(), po[i].to_bits(), "lane {i}");
+                    }
+                }
+            }
+        }
+    }
+    // exactly one execution ever reached the shard layer
+    let view = svc.telemetry();
+    let attempts: u64 = (0..svc.shards()).map(|s| view.attempts(s, Op::Add22)).sum();
+    let samples: u64 = (0..svc.shards()).map(|s| view.samples(s, Op::Add22)).sum();
+    assert_eq!(attempts, 1, "cache hits fed routing attempt telemetry");
+    assert_eq!(samples, 1, "cache hits fed a shard rate EWMA");
+    assert_eq!(svc.metrics().requests, 1);
+    let shard_reqs: u64 = svc.shard_metrics().iter().map(|s| s.requests).sum();
+    assert_eq!(shard_reqs, 1, "a hit landed on a shard");
+    assert_eq!(h.queue_depths(), vec![0, 0]);
+    // the observatory mirrored exactly the one executed request
+    let rep = svc.accuracy_report().unwrap();
+    assert_eq!(rep.mirrored_requests, 1, "cache hits ticked the sampler");
+    assert_eq!(rep.row("nv35", Op::Add22).unwrap().lanes, 512);
+    // and the cache accounts for everything the shards never saw
+    let cs = svc.cache_stats().unwrap();
+    assert_eq!((cs.hits, cs.misses), (rounds - 1, 1));
+    assert!(cs.live_bytes > 0);
 }
