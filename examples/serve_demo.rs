@@ -15,6 +15,7 @@
 //! FFGPU_WORKERS=4 cargo run --release --example serve_demo
 //! FFGPU_KERNEL_TIER=scalar cargo run --release --example serve_demo
 //! FFGPU_CHUNK_ELEMS=65536 cargo run --release --example serve_demo
+//! FFGPU_NUMA=off cargo run --release --example serve_demo  # no node pinning
 //! FFGPU_OBSERVE=0.25 FFGPU_OBSERVE_MODELS=nv35,r300 \
 //!     cargo run --release --example serve_demo          # accuracy observatory
 //! FFGPU_CACHE_MB=64 cargo run --release --example serve_demo  # result cache
@@ -29,7 +30,12 @@
 //! by every native shard at construction ([`ffgpu::backend::KernelTier`]
 //! resolution order: explicit spec > env > CPU detection), so it needs
 //! no plumbing here; `FFGPU_CHUNK_ELEMS` overrides the L2-sized
-//! auto-chunk on every native shard.
+//! auto-chunk on every native shard. `FFGPU_NUMA` (`auto` | `off` |
+//! `<node>`) controls NUMA placement of native shards and needs no
+//! plumbing either — [`ServiceSpec`] reads it at start. The demo ends
+//! with a deterministic `results checksum:` line over a fixed dispatch
+//! grid; it must be bit-identical between `FFGPU_NUMA=auto` and `=off`
+//! runs (the CI smoke diffs exactly that line).
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
@@ -175,6 +181,7 @@ fn main() {
                     chunk: chunk_env.unwrap_or(0),
                     workers: workers_env.unwrap_or(0),
                     tier: None,
+                    node: None,
                 };
                 shards.max(1)
             ];
@@ -182,6 +189,14 @@ fn main() {
         }
         Err(e) => panic!("service: {e}"),
     };
+    // NUMA placement resolved at start (FFGPU_NUMA; auto degrades to
+    // unpinned on single-node hosts)
+    let nodes: Vec<String> = svc
+        .shard_numa_nodes()
+        .iter()
+        .map(|n| n.map_or("-".to_string(), |n| format!("node{n}")))
+        .collect();
+    println!("numa nodes: [{}]", nodes.join(", "));
 
     // FFGPU_LISTEN arms the TCP wire front end beside the in-process
     // demo traffic; FFGPU_SERVE_SECS keeps it up after the workload so
@@ -298,6 +313,38 @@ fn main() {
                  s.requests, s.batches, s.elements, s.mean_latency_s * 1e3);
         println!("  measured Melem/s: {}", rates.join("  "));
     }
+    // gather/execute/scatter split of each shard's fused groups (EWMA;
+    // only fused groups record one, so unfused runs print nothing)
+    for i in 0..svc.shards() {
+        if let Some((g, e, s)) = svc.shard_stage_split(i) {
+            println!(
+                "shard {i} data path: gather={:.3}ms execute={:.3}ms scatter={:.3}ms",
+                g * 1e3, e * 1e3, s * 1e3
+            );
+        }
+    }
+    // deterministic results checksum: a fixed dispatch grid, FNV-1a
+    // over the reply bits. This line must be identical run to run —
+    // and in particular between FFGPU_NUMA=auto and =off serves (the
+    // CI smoke diffs exactly this line) — because placement may move
+    // the copies across threads and nodes but must never change a bit
+    let mut fnv: u64 = 0xcbf29ce484222325;
+    for (k, &op) in ops.iter().enumerate() {
+        let planes = workload::planes_for(op.name(), 1537, 0xC0FFEE + k as u64);
+        let out = svc
+            .handle()
+            .dispatch(Plan::new(op, planes).expect("plan"))
+            .expect("dispatch")
+            .wait()
+            .expect("checksum reply");
+        for plane in &out {
+            for v in plane {
+                fnv ^= v.to_bits() as u64;
+                fnv = fnv.wrapping_mul(0x100000001b3);
+            }
+        }
+    }
+    println!("results checksum: {fnv:#018x}");
     // the result-cache banner: how much traffic resolved before routing
     if let Some(cs) = svc.cache_stats() {
         println!(

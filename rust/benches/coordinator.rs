@@ -58,11 +58,25 @@
 //! waste-fed fuse-ladder comparison: an awkwardly-sized request stream
 //! over the static ladder vs `adaptive_ladder`, whose padding-waste
 //! gap is asserted (the EWMA trigger is deterministic).
+//!
+//! Data-path instrumentation (the NUMA-aware data path): a fused tiny-
+//! request workload runs against a multi-worker shard (gather/scatter
+//! staged on the persistent crew) and against the `workers = 1`
+//! degenerate case (the serial loops, kept as the baseline); each
+//! shard's EWMA gather/execute/scatter wall split lands in the
+//! `data_path` section of `BENCH_coordinator.json`. The same sharded
+//! workload then runs with `NumaMode::Auto` (topology-pinned crews and
+//! first-touch arenas) vs `NumaMode::Off`; req/s and p50/p95 land in
+//! the `numa` section together with a `single_node` label from
+//! [`Topology::detect`], so cross-PR comparisons know when the host
+//! could not express locality at all.
 
 use ffgpu::backend::{
     BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
 };
-use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::{
+    NumaMode, ObservatorySpec, Plan, Routing, Service, ServiceSpec, Topology,
+};
 use ffgpu::ff::vector;
 use ffgpu::harness::workload;
 use ffgpu::net::{
@@ -150,6 +164,41 @@ struct CacheRow {
     hits: u64,
     misses: u64,
     padding_fraction: f64,
+}
+
+/// One `data_path` row of `BENCH_coordinator.json`: a shard's EWMA
+/// gather/execute/scatter wall-time split over a fused workload —
+/// staged parallel copies on the persistent crew vs the `workers = 1`
+/// serial baseline.
+struct DataPathRow {
+    mode: &'static str,
+    workers: usize,
+    req_n: usize,
+    gather_ms: f64,
+    execute_ms: f64,
+    scatter_ms: f64,
+}
+
+/// The `numa` section of `BENCH_coordinator.json`: pinned-vs-unpinned
+/// rows plus the host's topology verdict.
+struct NumaSection {
+    /// `true` when [`Topology::detect`] saw one node — the pinned run
+    /// was then unpinned by construction, not a measurement.
+    single_node: bool,
+    rows: Vec<NumaRow>,
+}
+
+/// One `numa` row of `BENCH_coordinator.json`: sharded serving with
+/// topology pinning on (`auto`) vs off, same workload and shard shape.
+struct NumaRow {
+    mode: &'static str,
+    shards: usize,
+    req_n: usize,
+    req_per_s: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    /// Node id each shard landed on (`null` = unpinned).
+    nodes: Vec<Option<usize>>,
 }
 
 /// Ops the routing comparison cycles through. Includes `div22` — the
@@ -364,7 +413,7 @@ fn observatory_rows() -> Vec<AccRow> {
 
 fn emit_json(
     rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow], wire: &[WireRow],
-    cache: &[CacheRow],
+    cache: &[CacheRow], data_path: &[DataPathRow], numa: &NumaSection,
 ) {
     let mut out = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \
@@ -484,17 +533,64 @@ fn emit_json(
             if i + 1 < cache.len() { "," } else { "" },
         ));
     }
-    out.push_str("  ]\n}\n");
+    // the NUMA-aware data path: per-group gather/execute/scatter wall
+    // split, staged crew vs the workers=1 serial baseline
+    out.push_str("  ],\n  \"data_path\": [\n");
+    for (i, d) in data_path.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"mode\": \"{}\", \"workers\": {}, \"req_n\": {}, \
+             \"gather_ms\": {:.4}, \"execute_ms\": {:.4}, \"scatter_ms\": {:.4}}}{}\n",
+            d.mode,
+            d.workers,
+            d.req_n,
+            d.gather_ms,
+            d.execute_ms,
+            d.scatter_ms,
+            if i + 1 < data_path.len() { "," } else { "" },
+        ));
+    }
+    // topology pinning on vs off over the same sharded workload; on a
+    // single-node host the "auto" run is unpinned by construction
+    out.push_str(&format!(
+        "  ],\n  \"numa\": {{\n    \"single_node\": {},\n    \"rows\": [\n",
+        numa.single_node
+    ));
+    for (i, r) in numa.rows.iter().enumerate() {
+        let cells: Vec<String> = r
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Some(id) => id.to_string(),
+                None => "null".to_string(),
+            })
+            .collect();
+        out.push_str(&format!(
+            "      {{\"mode\": \"{}\", \"shards\": {}, \"req_n\": {}, \
+             \"req_per_s\": {:.1}, \"p50_ms\": {:.3}, \"p95_ms\": {:.3}, \
+             \"nodes\": [{}]}}{}\n",
+            r.mode,
+            r.shards,
+            r.req_n,
+            r.req_per_s,
+            r.p50_ms,
+            r.p95_ms,
+            cells.join(", "),
+            if i + 1 < numa.rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("    ]\n  }\n}\n");
     let path = "BENCH_coordinator.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!(
             "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells, {} wire rows, \
-             {} cache rows)",
+             {} cache rows, {} data-path rows, {} numa rows)",
             rows.len(),
             tiers.len(),
             accuracy.len(),
             wire.len(),
-            cache.len()
+            cache.len(),
+            data_path.len(),
+            numa.rows.len()
         ),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
@@ -1017,6 +1113,144 @@ fn ladder_rows() -> Vec<CacheRow> {
     rows
 }
 
+/// Data-path instrument: the same fused tiny-request stream against a
+/// 4-worker shard (gather/scatter staged on the persistent crew) and
+/// the `workers = 1` degenerate case (the serial loops). The shard's
+/// [`Service::shard_stage_split`] EWMA — recorded per fused group —
+/// is the payload; the split shows how much of a group's wall time the
+/// data path (copies) costs relative to the kernels.
+fn data_path_rows() -> Vec<DataPathRow> {
+    println!("== data path: gather/execute/scatter split (staged crew vs serial workers=1)");
+    let (clients, req_n, rounds) = (4usize, 2048usize, 30usize);
+    let mut rows = Vec::new();
+    for (mode, workers) in [("staged", 4usize), ("serial", 1)] {
+        let spec = ServiceSpec::uniform(
+            BackendSpec::Native { chunk: 4096, workers, tier: None, node: None },
+            1,
+        )
+        .with_max_batch(64)
+        .with_fuse_window(Duration::from_millis(1))
+        .with_fuse_sizes(vec![1024, 4096, 16384, 65536]);
+        let svc = Service::start(spec).unwrap();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xDA7A + c as u64);
+                for round in 0..rounds {
+                    let op = MIX_OPS[(c + round) % MIX_OPS.len()];
+                    let planes = workload::planes_for(op.name(), req_n, rng.next_u64());
+                    h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // the split for a group lands after its replies — settle first
+        std::thread::sleep(Duration::from_millis(50));
+        let (g, e, s) = svc
+            .shard_stage_split(0)
+            .expect("fused groups must record a stage split");
+        let row = DataPathRow {
+            mode,
+            workers,
+            req_n,
+            gather_ms: g * 1e3,
+            execute_ms: e * 1e3,
+            scatter_ms: s * 1e3,
+        };
+        println!(
+            "  {:<8} workers={} {clients} clients x {req_n:>5} elems x {rounds}: \
+             gather={:.3}ms execute={:.3}ms scatter={:.3}ms per group",
+            row.mode, row.workers, row.gather_ms, row.execute_ms, row.scatter_ms,
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+/// NUMA instrument: the same sharded `add22` workload with topology
+/// pinning on (`auto` — crews and first-touch arenas land node-local)
+/// vs off (the scheduler floats threads freely). On a single-node or
+/// containerized host the pinned run degrades to unpinned — the
+/// `single_node` label in the JSON says so, and the comparison is then
+/// a no-op by construction rather than a measurement.
+fn numa_rows() -> NumaSection {
+    let single_node = Topology::detect().is_single_node();
+    println!(
+        "== numa: pinned (auto) vs unpinned (off), 2 native shards{}",
+        if single_node { "  [single-node host: pinning is a no-op]" } else { "" }
+    );
+    let (clients, req_n, rounds) = (4usize, 65_536usize, 30usize);
+    let mut rows = Vec::new();
+    for (mode, label) in [(NumaMode::Auto, "auto"), (NumaMode::Off, "off")] {
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native(), 2).with_numa(mode),
+        )
+        .unwrap();
+        let h = svc.handle();
+        // warmup: touch both shards, fault the arenas in
+        for i in 0..4u64 {
+            h.dispatch(
+                Plan::new(Op::Add22, workload::planes_for("add22", req_n, 1 + i))
+                    .unwrap(),
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        }
+        let t0 = Instant::now();
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let h = svc.handle();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0x40DE + c as u64);
+                let mut lats = Vec::with_capacity(rounds);
+                for _ in 0..rounds {
+                    let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                    let t = Instant::now();
+                    h.dispatch(Plan::new(Op::Add22, planes).unwrap())
+                        .unwrap()
+                        .wait()
+                        .unwrap();
+                    lats.push(t.elapsed().as_secs_f64());
+                }
+                lats
+            }));
+        }
+        let mut lats: Vec<f64> =
+            joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let nodes = svc.shard_numa_nodes();
+        let row = NumaRow {
+            mode: label,
+            shards: nodes.len(),
+            req_n,
+            req_per_s: (clients * rounds) as f64 / wall,
+            p50_ms: percentile(&lats, 0.50) * 1e3,
+            p95_ms: percentile(&lats, 0.95) * 1e3,
+            nodes,
+        };
+        let cells: Vec<String> = row
+            .nodes
+            .iter()
+            .map(|n| match n {
+                Some(id) => format!("node{id}"),
+                None => "-".to_string(),
+            })
+            .collect();
+        println!(
+            "  {:<5} {clients} clients x {req_n:>6} elems x {rounds}: {:>7.0} req/s  \
+             p50={:.2}ms p95={:.2}ms  shards=[{}]",
+            row.mode, row.req_per_s, row.p50_ms, row.p95_ms, cells.join(", "),
+        );
+        rows.push(row);
+    }
+    NumaSection { single_node, rows }
+}
+
 /// A 1 ms-deadline ticket against a saturated shard must resolve
 /// `DeadlineExceeded` promptly — and the shard must survive to serve
 /// the next request (the ROADMAP's "a stuck canary can't hold a
@@ -1219,5 +1453,10 @@ fn main() {
     let mut cache = cache_rows();
     cache.extend(ladder_rows());
 
-    emit_json(&rows, &tiers, &accuracy, &wire, &cache);
+    // the NUMA-aware data path: staged-vs-serial copy split, then
+    // pinned-vs-unpinned sharded serving
+    let data_path = data_path_rows();
+    let numa = numa_rows();
+
+    emit_json(&rows, &tiers, &accuracy, &wire, &cache, &data_path, &numa);
 }

@@ -29,7 +29,10 @@
 //! * [`BufferPool`] — reusable `Vec<f32>` planes so the dispatch hot
 //!   path performs no per-batch allocation, and [`WorkerArenas`] — one
 //!   pool per persistent worker, so the crew never contends on a
-//!   single free-list;
+//!   single free-list (byte-capped, with drop-on-overflow counters);
+//! * [`topology`] — std-only NUMA/cache discovery from sysfs plus the
+//!   libc-free `sched_setaffinity` pin, so shard threads, worker crews
+//!   and their arenas can be node-local ([`Topology`], [`NumaMode`]);
 //! * [`ulp`] — the lane-by-lane ulp-diff kernel the accuracy
 //!   observatory ([`crate::coordinator::observatory`]) scores one
 //!   substrate's replies against a reference with, pad lanes of fused
@@ -53,6 +56,7 @@ pub mod gpusim;
 pub mod native;
 pub mod op;
 pub mod pool;
+pub mod topology;
 pub mod ulp;
 pub mod xla;
 
@@ -63,6 +67,7 @@ pub use gpusim::GpuSimBackend;
 pub use native::NativeBackend;
 pub use op::Op;
 pub use pool::{BufferPool, WorkerArenas};
+pub use topology::{NumaMode, Topology};
 pub use ulp::UlpDiff;
 pub use xla::XlaBackend;
 
@@ -119,6 +124,21 @@ pub struct BackendStats {
     pub elements: u64,
     /// Wall-clock seconds spent inside `execute`.
     pub busy_seconds: f64,
+    /// Staging buffers dropped by the worker arenas' byte caps
+    /// (backends without a crew report 0).
+    pub arena_dropped: u64,
+}
+
+/// One executed launch staged for the parallel scatter: the window of
+/// the concatenated batch it covered, plus its output planes.
+#[derive(Debug)]
+pub struct LaunchOut {
+    /// Offset of this launch's window in the concatenated batch.
+    pub start: usize,
+    /// Useful lanes in the window (everything past it is padding).
+    pub len: usize,
+    /// Output planes, `n_out` of them, each at least `len` long.
+    pub outs: Vec<Vec<f32>>,
 }
 
 /// An owned, validated execution job: one operator plus its SoA input
@@ -240,6 +260,57 @@ pub trait KernelBackend {
         None
     }
 
+    /// Parallel staging lanes this backend offers the coordinator's
+    /// gather/scatter data path. `0` (the default) means no crew: the
+    /// coordinator stays on its serial path. A backend advertising
+    /// `> 1` must implement [`KernelBackend::stage_gather`] and
+    /// [`KernelBackend::stage_scatter`].
+    fn staging_workers(&self) -> usize {
+        0
+    }
+
+    /// Gather the window `[start, start + len)` of each input plane's
+    /// concatenation (`sources[plane]` lists the per-request planes in
+    /// concatenation order) into launch buffers of `size` lanes, short
+    /// windows padded with the op's pad value. Returns per-plane
+    /// `(worker, buffer)` pairs where `worker` names the arena the
+    /// buffer must go back to via [`KernelBackend::stage_reclaim`].
+    ///
+    /// Bit-parity contract: the gathered lanes must be byte-identical
+    /// to [`crate::coordinator::batcher::gather_plane_into`]'s output
+    /// for the same window.
+    #[allow(unused_variables)]
+    fn stage_gather(
+        &mut self, op: Op, sources: &[Vec<Arc<Vec<f32>>>], size: usize, start: usize,
+        len: usize,
+    ) -> Result<Vec<(usize, Vec<f32>)>, ServiceError> {
+        Err(ServiceError::Backend(format!(
+            "{}: no staging crew (staging_workers() <= 1)",
+            self.name()
+        )))
+    }
+
+    /// Scatter executed launches back into freshly allocated
+    /// per-request output planes, sharded by request range across the
+    /// crew. `spans[i]` is request `i`'s `(offset, len)` in the
+    /// concatenated batch. Returns the per-request planes (in request
+    /// order, `n_out` planes each) plus the launches' output buffers,
+    /// reclaimed for the caller's pool.
+    #[allow(unused_variables)]
+    fn stage_scatter(
+        &mut self, launches: Vec<LaunchOut>, spans: &[(usize, usize)], n_out: usize,
+    ) -> Result<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>), ServiceError> {
+        Err(ServiceError::Backend(format!(
+            "{}: no staging crew (staging_workers() <= 1)",
+            self.name()
+        )))
+    }
+
+    /// Return a staging buffer to the worker arena it was gathered
+    /// into, closing the node-local recycling loop. Default: drop it.
+    #[allow(unused_variables)]
+    fn stage_reclaim(&mut self, worker: usize, buf: Vec<f32>) {}
+
     /// Cumulative counters since construction.
     fn stats(&self) -> BackendStats;
 }
@@ -274,8 +345,12 @@ pub enum BackendSpec {
     /// Native CPU kernels, parallel over `chunk`-sized slices.
     /// `workers == 0` means one worker per available core; `chunk == 0`
     /// picks an L2-sized chunk; `tier: None` resolves the kernel tier
-    /// via `FFGPU_KERNEL_TIER` / CPU detection.
-    Native { chunk: usize, workers: usize, tier: Option<KernelTier> },
+    /// via `FFGPU_KERNEL_TIER` / CPU detection. `node: Some(n)` pins
+    /// the owning thread and its worker crew to NUMA node `n`
+    /// ([`topology::pin_current_thread`]); `None` leaves placement to
+    /// the service-level [`NumaMode`] resolution (or unpinned when
+    /// built directly).
+    Native { chunk: usize, workers: usize, tier: Option<KernelTier>, node: Option<usize> },
     /// The gpusim stream VM on the named GPU arithmetic model
     /// ("ieee-rn", "nv35", "nv40", "r300", "chopped").
     GpuSim { model: String },
@@ -287,12 +362,12 @@ impl BackendSpec {
     /// Default native spec (auto worker count, auto L2-sized chunks,
     /// auto kernel tier).
     pub fn native() -> BackendSpec {
-        BackendSpec::Native { chunk: 0, workers: 0, tier: None }
+        BackendSpec::Native { chunk: 0, workers: 0, tier: None, node: None }
     }
 
     /// Single-threaded native spec (the seed's serving behaviour).
     pub fn native_single() -> BackendSpec {
-        BackendSpec::Native { chunk: 0, workers: 1, tier: None }
+        BackendSpec::Native { chunk: 0, workers: 1, tier: None, node: None }
     }
 
     /// GpuSim spec on the IEEE round-to-nearest model (bit-identical to
@@ -325,7 +400,7 @@ impl BackendSpec {
                     })?,
                     None => 0,
                 };
-                Ok(BackendSpec::Native { chunk: 0, workers, tier: None })
+                Ok(BackendSpec::Native { chunk: 0, workers, tier: None, node: None })
             }
             "gpusim" => Ok(BackendSpec::GpuSim {
                 model: tail.unwrap_or("ieee-rn").to_string(),
@@ -338,11 +413,20 @@ impl BackendSpec {
         }
     }
 
-    /// Materialise the backend. Must run on the thread that will own it.
+    /// The NUMA node this spec pins to (native only; `None` = unpinned).
+    pub fn numa_node(&self) -> Option<usize> {
+        match self {
+            BackendSpec::Native { node, .. } => *node,
+            _ => None,
+        }
+    }
+
+    /// Materialise the backend. Must run on the thread that will own
+    /// it — a native spec with a `node` pins the calling thread there.
     pub fn build(&self) -> Result<Box<dyn KernelBackend>, ServiceError> {
         match self {
-            BackendSpec::Native { chunk, workers, tier } => {
-                Ok(Box::new(NativeBackend::with_tier(*chunk, *workers, *tier)))
+            BackendSpec::Native { chunk, workers, tier, node } => {
+                Ok(Box::new(NativeBackend::with_placement(*chunk, *workers, *tier, *node)))
             }
             BackendSpec::GpuSim { model } => {
                 Ok(Box::new(GpuSimBackend::by_name(model)?))
@@ -475,7 +559,19 @@ mod tests {
             chunk: 0,
             workers: 1,
             tier: Some(KernelTier::Scalar),
+            node: None,
         };
         assert_eq!(spec.build().unwrap().kernel_tier(), Some(KernelTier::Scalar));
+    }
+
+    #[test]
+    fn numa_node_reported_for_native_pins_only() {
+        assert_eq!(BackendSpec::native().numa_node(), None);
+        assert_eq!(BackendSpec::gpusim_ieee().numa_node(), None);
+        let spec = BackendSpec::Native { chunk: 0, workers: 1, tier: None, node: Some(1) };
+        assert_eq!(spec.numa_node(), Some(1));
+        // building with an unknown node degrades to an unpinned backend
+        let spec = BackendSpec::Native { chunk: 0, workers: 2, tier: None, node: Some(9999) };
+        assert_eq!(spec.build().unwrap().name(), "native");
     }
 }

@@ -33,10 +33,27 @@
 //! The chunk size is likewise configurable (`chunk == 0` picks an
 //! L2-sized block per worker), keeping the lane-blocked kernels
 //! cache-resident.
+//!
+//! Since the NUMA revision the same crew is also the coordinator's
+//! **staging engine**: the channel carries [`WorkerJob`]s — execute
+//! chunks as before, plus [`GatherJob`]s (one per input plane: gather a
+//! launch window from request planes into an arena buffer) and
+//! [`ScatterJob`]s (slice executed launches back into per-request
+//! output planes, sharded by request range). Gather buffers come from
+//! the gathering worker's own arena, so on a pinned crew every staging
+//! page is first-touched on the owning node and, because buffers only
+//! ever return to the arena they came from
+//! ([`KernelBackend::stage_reclaim`]), never migrates off it. A spec
+//! `node` pins the constructing thread (the shard thread builds its
+//! backend on-thread) and every worker via
+//! [`super::topology::pin_current_thread`]; unknown nodes and
+//! single-node hosts degrade to no pinning.
 
 use super::pool::WorkerArenas;
+use super::topology::{self, Topology};
 use super::{
-    check_outputs, BackendStats, ExecJob, ExecReport, KernelBackend, Op, ServiceError,
+    check_outputs, BackendStats, ExecJob, ExecReport, KernelBackend, LaunchOut, Op,
+    ServiceError,
 };
 use crate::ff::simd::{self, KernelTier};
 use std::sync::{mpsc, Arc, Mutex};
@@ -78,13 +95,66 @@ struct ChunkResult {
     err: Option<String>,
 }
 
+/// Gather one launch window of one input plane from per-request planes
+/// into a buffer from the gathering worker's arena (node-local first
+/// touch on a pinned crew).
+struct GatherJob {
+    /// Which input plane this job assembles.
+    plane: usize,
+    /// The op's pad value for this plane.
+    pad: f32,
+    /// Per-request planes in concatenation order.
+    sources: Vec<Arc<Vec<f32>>>,
+    /// Launch size (the buffer is padded up to it).
+    size: usize,
+    /// Window `[start, start + len)` of the concatenated batch.
+    start: usize,
+    len: usize,
+    done: mpsc::Sender<GatherResult>,
+}
+
+/// A gathered plane: the buffer plus the arena it must return to.
+struct GatherResult {
+    plane: usize,
+    worker: usize,
+    buf: Vec<f32>,
+}
+
+/// Scatter a contiguous range of requests out of the executed launches:
+/// the worker allocates the requests' output planes itself (node-local
+/// first touch) and fills them from every overlapping launch window.
+struct ScatterJob {
+    /// All executed launches of the group, shared across scatter jobs.
+    launches: Arc<Vec<LaunchOut>>,
+    /// `(offset, len)` in the concatenated batch per request in this
+    /// job's range.
+    spans: Vec<(usize, usize)>,
+    /// Index of the first request in the range (for reassembly order).
+    first: usize,
+    n_out: usize,
+    done: mpsc::Sender<ScatterResult>,
+}
+
+struct ScatterResult {
+    first: usize,
+    /// `n_out` planes per request, in range order.
+    planes: Vec<Vec<Vec<f32>>>,
+}
+
+/// Everything the crew's shared queue carries.
+enum WorkerJob {
+    Chunk(ChunkJob),
+    Gather(GatherJob),
+    Scatter(ScatterJob),
+}
+
 /// The standing crew: one shared job queue, N long-lived threads,
 /// per-worker buffer arenas. Dropping it disconnects the queue and
 /// joins every worker.
 struct WorkerPool {
     /// `Some` for the pool's whole life; taken in `drop` so the queue
     /// disconnects before the joins.
-    job_tx: Option<mpsc::Sender<ChunkJob>>,
+    job_tx: Option<mpsc::Sender<WorkerJob>>,
     arenas: Arc<WorkerArenas>,
     handles: Vec<JoinHandle<()>>,
 }
@@ -92,21 +162,27 @@ struct WorkerPool {
 impl WorkerPool {
     /// Spawn `workers` threads; `None` when one worker (or fewer) is
     /// requested — the serial path needs no crew. Spawn failures
-    /// degrade to however many threads came up.
-    fn spawn(workers: usize) -> Option<WorkerPool> {
+    /// degrade to however many threads came up. When `cpus` is given,
+    /// each worker pins itself to that CPU set *before* touching any
+    /// memory, so its arena pages land on the owning node.
+    fn spawn(workers: usize, cpus: Option<Arc<Vec<usize>>>) -> Option<WorkerPool> {
         if workers <= 1 {
             return None;
         }
-        let (job_tx, job_rx) = mpsc::channel::<ChunkJob>();
+        let (job_tx, job_rx) = mpsc::channel::<WorkerJob>();
         let queue = Arc::new(Mutex::new(job_rx));
         let arenas = Arc::new(WorkerArenas::new(workers));
         let mut handles = Vec::with_capacity(workers);
         for me in 0..workers {
-            let (q, a) = (queue.clone(), arenas.clone());
+            let (q, a, c) = (queue.clone(), arenas.clone(), cpus.clone());
             match std::thread::Builder::new()
                 .name(format!("ffgpu-native-worker-{me}"))
-                .spawn(move || worker_main(me, q, a))
-            {
+                .spawn(move || {
+                    if let Some(cpus) = &c {
+                        topology::pin_current_thread(cpus);
+                    }
+                    worker_main(me, q, a)
+                }) {
                 Ok(h) => handles.push(h),
                 Err(_) => break,
             }
@@ -133,11 +209,10 @@ impl Drop for WorkerPool {
     }
 }
 
-/// A worker's whole life: pull a chunk job, compute it into buffers
-/// from this worker's arena, report the range back, repeat until the
-/// queue disconnects.
+/// A worker's whole life: pull a job, run it, report back, repeat
+/// until the queue disconnects.
 fn worker_main(
-    me: usize, queue: Arc<Mutex<mpsc::Receiver<ChunkJob>>>, arenas: Arc<WorkerArenas>,
+    me: usize, queue: Arc<Mutex<mpsc::Receiver<WorkerJob>>>, arenas: Arc<WorkerArenas>,
 ) {
     loop {
         // the lock is held across the blocking recv: idle workers queue
@@ -146,22 +221,106 @@ fn worker_main(
             Ok(guard) => guard.recv(),
             Err(_) => break,
         };
-        let Ok(ChunkJob { op, tier, inputs, start, len, done }) = job else { break };
-        let ins: Vec<&[f32]> = inputs.iter().map(|p| &p[start..start + len]).collect();
-        let mut outs: Vec<Vec<f32>> =
-            (0..op.n_out()).map(|_| arenas.take(me, len)).collect();
-        let err = {
-            let mut windows: Vec<&mut [f32]> =
-                outs.iter_mut().map(|v| v.as_mut_slice()).collect();
-            simd::dispatch_slices(tier, op.name(), &ins, &mut windows).err()
-        };
-        drop(ins);
-        // release the Arc clones *before* signalling completion, so a
-        // caller that drains all chunk results can reclaim its gather
-        // buffers through `Arc::try_unwrap` immediately
-        drop(inputs);
-        let _ = done.send(ChunkResult { start, worker: me, outs, err });
+        match job {
+            Ok(WorkerJob::Chunk(job)) => run_chunk(me, job, &arenas),
+            Ok(WorkerJob::Gather(job)) => run_gather(me, job, &arenas),
+            Ok(WorkerJob::Scatter(job)) => run_scatter(job),
+            Err(_) => break,
+        }
     }
+}
+
+/// Compute one execute chunk into buffers from this worker's arena.
+fn run_chunk(me: usize, job: ChunkJob, arenas: &WorkerArenas) {
+    let ChunkJob { op, tier, inputs, start, len, done } = job;
+    let ins: Vec<&[f32]> = inputs.iter().map(|p| &p[start..start + len]).collect();
+    let mut outs: Vec<Vec<f32>> = (0..op.n_out()).map(|_| arenas.take(me, len)).collect();
+    let err = {
+        let mut windows: Vec<&mut [f32]> =
+            outs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        simd::dispatch_slices(tier, op.name(), &ins, &mut windows).err()
+    };
+    drop(ins);
+    // release the Arc clones *before* signalling completion, so a
+    // caller that drains all chunk results can reclaim its gather
+    // buffers through `Arc::try_unwrap` immediately
+    drop(inputs);
+    let _ = done.send(ChunkResult { start, worker: me, outs, err });
+}
+
+/// Gather one plane's launch window into an arena buffer.
+fn run_gather(me: usize, job: GatherJob, arenas: &WorkerArenas) {
+    let GatherJob { plane, pad, sources, size, start, len, done } = job;
+    let mut buf = arenas.take_empty(me);
+    gather_window_into(&sources, size, start, len, pad, &mut buf);
+    // drop the source Arcs before reporting, mirroring run_chunk
+    drop(sources);
+    let _ = done.send(GatherResult { plane, worker: me, buf });
+}
+
+/// Gather the window `[start, start + len)` of the concatenation of
+/// `sources` into `out`, padded to `size` lanes with `pad`.
+///
+/// This mirrors [`crate::coordinator::batcher::gather_plane_into`]
+/// copy-for-copy (same walk, same `extend_from_slice` windows, same
+/// `resize` padding), so the parallel stage is bit-identical to the
+/// serial one by construction; the parity is pinned by tests here and
+/// end-to-end in the coordinator.
+pub fn gather_window_into(
+    sources: &[Arc<Vec<f32>>], size: usize, start: usize, len: usize, pad: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(size);
+    // walk the concatenated space [start, start+len)
+    let mut skipped = 0usize;
+    for s in sources {
+        let rl = s.len();
+        if skipped + rl <= start {
+            skipped += rl;
+            continue;
+        }
+        let from = start.saturating_sub(skipped);
+        let need = (start + len).saturating_sub(skipped.max(start));
+        let take = need.min(rl - from);
+        out.extend_from_slice(&s[from..from + take]);
+        skipped += rl;
+        if out.len() >= len {
+            break;
+        }
+    }
+    debug_assert_eq!(out.len(), len);
+    out.resize(size, pad);
+}
+
+/// Build and fill the output planes of one contiguous request range
+/// from every overlapping launch window. Allocating the planes *here*
+/// (not on the shard thread) is the point: a pinned worker
+/// first-touches the reply pages on its own node.
+fn run_scatter(job: ScatterJob) {
+    let ScatterJob { launches, spans, first, n_out, done } = job;
+    let mut planes = Vec::with_capacity(spans.len());
+    for &(g, n) in &spans {
+        let mut req_planes: Vec<Vec<f32>> = (0..n_out).map(|_| vec![0.0f32; n]).collect();
+        for l in launches.iter() {
+            // overlap of request [g, g+n) with launch window [start, start+len)
+            let lo = g.max(l.start);
+            let hi = (g + n).min(l.start + l.len);
+            if lo >= hi {
+                continue;
+            }
+            for (oi, plane) in req_planes.iter_mut().enumerate() {
+                plane[lo - g..hi - g]
+                    .copy_from_slice(&l.outs[oi][lo - l.start..hi - l.start]);
+            }
+        }
+        planes.push(req_planes);
+    }
+    // drop our launch handle before reporting so the assembler can
+    // reclaim the launch buffers via `Arc::try_unwrap` once every
+    // scatter result is in
+    drop(launches);
+    let _ = done.send(ScatterResult { first, planes });
 }
 
 /// Native CPU backend: chunked execution over a persistent channel-fed
@@ -169,6 +328,8 @@ fn worker_main(
 pub struct NativeBackend {
     chunk: usize,
     tier: KernelTier,
+    /// NUMA node this backend (and its crew) is pinned to, if any.
+    node: Option<usize>,
     /// `None` in single-worker (serial) mode.
     pool: Option<WorkerPool>,
     stats: BackendStats,
@@ -189,16 +350,36 @@ impl NativeBackend {
     pub fn with_tier(
         chunk: usize, workers: usize, tier: Option<KernelTier>,
     ) -> NativeBackend {
+        NativeBackend::with_placement(chunk, workers, tier, None)
+    }
+
+    /// [`Self::with_tier`] plus NUMA placement. `node: Some(n)` pins
+    /// the **calling** thread (backends are built on the shard thread
+    /// that owns them) and every crew worker to node `n`'s CPUs, so
+    /// shard-thread pool buffers and worker arena buffers alike are
+    /// first-touched on the owning node. An unknown node, a single-node
+    /// host, or a refused syscall all degrade to no pinning; `None`
+    /// performs no placement side effect at all.
+    pub fn with_placement(
+        chunk: usize, workers: usize, tier: Option<KernelTier>, node: Option<usize>,
+    ) -> NativeBackend {
         let workers = if workers == 0 {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         } else {
             workers
         };
         let chunk = if chunk == 0 { auto_chunk() } else { chunk.max(MIN_CHUNK) };
+        let cpus: Option<Arc<Vec<usize>>> = node.and_then(|n| {
+            Topology::detect().cpus_of(n).map(|c| Arc::new(c.to_vec()))
+        });
+        if let Some(cpus) = &cpus {
+            topology::pin_current_thread(cpus);
+        }
         NativeBackend {
             chunk,
             tier: KernelTier::resolve(tier),
-            pool: WorkerPool::spawn(workers),
+            node,
+            pool: WorkerPool::spawn(workers, cpus),
             stats: BackendStats::default(),
         }
     }
@@ -217,10 +398,24 @@ impl NativeBackend {
         self.tier
     }
 
+    /// The NUMA node this backend was asked to pin to (`None` =
+    /// unpinned; pinning to an unknown node keeps the label but has no
+    /// placement effect).
+    pub fn node(&self) -> Option<usize> {
+        self.node
+    }
+
     /// Chunk buffers currently parked across the worker arenas (0 in
     /// serial mode) — observability for the arena recycling path.
     pub fn idle_buffers(&self) -> usize {
         self.pool.as_ref().map_or(0, |p| p.arenas.idle())
+    }
+
+    fn crew_tx(&self) -> Result<&mpsc::Sender<WorkerJob>, ServiceError> {
+        let pool = self.pool.as_ref().ok_or_else(|| {
+            ServiceError::Backend("native: no staging crew (workers <= 1)".into())
+        })?;
+        Ok(pool.job_tx.as_ref().expect("queue lives as long as the pool"))
     }
 }
 
@@ -248,14 +443,14 @@ impl KernelBackend for NativeBackend {
                 let mut start = 0usize;
                 while start < n {
                     let len = self.chunk.min(n - start);
-                    tx.send(ChunkJob {
+                    tx.send(WorkerJob::Chunk(ChunkJob {
                         op: job.op(),
                         tier: self.tier,
                         inputs: job.inputs().to_vec(),
                         start,
                         len,
                         done: done_tx.clone(),
-                    })
+                    }))
                     .map_err(|_| {
                         ServiceError::Backend("native worker crew is gone".into())
                     })?;
@@ -310,8 +505,99 @@ impl KernelBackend for NativeBackend {
         Some(self.tier)
     }
 
+    fn staging_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, WorkerPool::size)
+    }
+
+    fn stage_gather(
+        &mut self, op: Op, sources: &[Vec<Arc<Vec<f32>>>], size: usize, start: usize,
+        len: usize,
+    ) -> Result<Vec<(usize, Vec<f32>)>, ServiceError> {
+        let tx = self.crew_tx()?;
+        let n_in = sources.len();
+        let (done_tx, done_rx) = mpsc::channel::<GatherResult>();
+        for (plane, srcs) in sources.iter().enumerate() {
+            tx.send(WorkerJob::Gather(GatherJob {
+                plane,
+                pad: op.pad_value(plane),
+                sources: srcs.clone(),
+                size,
+                start,
+                len,
+                done: done_tx.clone(),
+            }))
+            .map_err(|_| ServiceError::Backend("native worker crew is gone".into()))?;
+        }
+        drop(done_tx);
+        let mut planes: Vec<Option<(usize, Vec<f32>)>> = (0..n_in).map(|_| None).collect();
+        for _ in 0..n_in {
+            let Ok(res) = done_rx.recv() else {
+                return Err(ServiceError::Backend("native worker died mid-gather".into()));
+            };
+            planes[res.plane] = Some((res.worker, res.buf));
+        }
+        Ok(planes
+            .into_iter()
+            .map(|p| p.expect("every gather job reports exactly one plane"))
+            .collect())
+    }
+
+    fn stage_scatter(
+        &mut self, launches: Vec<LaunchOut>, spans: &[(usize, usize)], n_out: usize,
+    ) -> Result<(Vec<Vec<Vec<f32>>>, Vec<Vec<f32>>), ServiceError> {
+        let workers = self.staging_workers().max(1);
+        let tx = self.crew_tx()?;
+        let launches = Arc::new(launches);
+        // shard the request list into one contiguous range per worker
+        let jobs = workers.min(spans.len().max(1));
+        let per = spans.len().div_ceil(jobs).max(1);
+        let (done_tx, done_rx) = mpsc::channel::<ScatterResult>();
+        let mut sent = 0usize;
+        let mut first = 0usize;
+        while first < spans.len() {
+            let range = &spans[first..(first + per).min(spans.len())];
+            tx.send(WorkerJob::Scatter(ScatterJob {
+                launches: launches.clone(),
+                spans: range.to_vec(),
+                first,
+                n_out,
+                done: done_tx.clone(),
+            }))
+            .map_err(|_| ServiceError::Backend("native worker crew is gone".into()))?;
+            sent += 1;
+            first += range.len();
+        }
+        drop(done_tx);
+        let mut results = Vec::with_capacity(sent);
+        for _ in 0..sent {
+            let Ok(res) = done_rx.recv() else {
+                return Err(ServiceError::Backend("native worker died mid-scatter".into()));
+            };
+            results.push(res);
+        }
+        results.sort_by_key(|r| r.first);
+        let planes: Vec<Vec<Vec<f32>>> =
+            results.into_iter().flat_map(|r| r.planes).collect();
+        // every worker dropped its launch handle before reporting, so
+        // the unwrap succeeds and the launch buffers go home
+        let reclaimed = match Arc::try_unwrap(launches) {
+            Ok(ls) => ls.into_iter().flat_map(|l| l.outs).collect(),
+            Err(_) => Vec::new(),
+        };
+        Ok((planes, reclaimed))
+    }
+
+    fn stage_reclaim(&mut self, worker: usize, buf: Vec<f32>) {
+        if let Some(pool) = &self.pool {
+            pool.arenas.put(worker, buf);
+        }
+    }
+
     fn stats(&self) -> BackendStats {
-        self.stats
+        BackendStats {
+            arena_dropped: self.pool.as_ref().map_or(0, |p| p.arenas.dropped()),
+            ..self.stats
+        }
     }
 }
 
@@ -321,32 +607,9 @@ impl KernelBackend for NativeBackend {
 /// `[MIN_CHUNK, MAX_CHUNK]`. Falls back to [`DEFAULT_CHUNK`] territory
 /// (512 KiB assumed L2) when the cache size cannot be read.
 fn auto_chunk() -> usize {
-    let l2 = detect_l2_bytes().unwrap_or(512 * 1024);
+    let l2 = topology::detect_cache_bytes(2).unwrap_or(512 * 1024);
     let lanes = (l2 / 4 * 3) / 32; // 3/4 of L2, 32 B/lane working set
     (lanes / MIN_CHUNK * MIN_CHUNK).clamp(MIN_CHUNK, MAX_CHUNK)
-}
-
-/// L2 data-cache size of cpu0 via sysfs (Linux; `None` elsewhere —
-/// there is no portable std API for cache geometry).
-fn detect_l2_bytes() -> Option<usize> {
-    if cfg!(target_os = "linux") {
-        let s =
-            std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index2/size")
-                .ok()?;
-        parse_cache_size(s.trim())
-    } else {
-        None
-    }
-}
-
-/// Parse sysfs cache sizes: `"512K"`, `"1M"`, `"1024"` (bytes).
-fn parse_cache_size(s: &str) -> Option<usize> {
-    let (digits, mult) = match s.as_bytes().last()? {
-        b'K' | b'k' => (&s[..s.len() - 1], 1024),
-        b'M' | b'm' => (&s[..s.len() - 1], 1024 * 1024),
-        _ => (s, 1),
-    };
-    digits.parse::<usize>().ok().map(|n| n * mult)
 }
 
 #[cfg(test)]
@@ -504,16 +767,6 @@ mod tests {
     }
 
     #[test]
-    fn cache_size_parsing() {
-        assert_eq!(parse_cache_size("512K"), Some(512 * 1024));
-        assert_eq!(parse_cache_size("1M"), Some(1024 * 1024));
-        assert_eq!(parse_cache_size("2048k"), Some(2048 * 1024));
-        assert_eq!(parse_cache_size("65536"), Some(65536));
-        assert_eq!(parse_cache_size(""), None);
-        assert_eq!(parse_cache_size("big"), None);
-    }
-
-    #[test]
     fn execute_planes_convenience_matches_job_path() {
         let mut b = NativeBackend::new(DEFAULT_CHUNK, 1);
         let planes = workload::planes_for("add", 64, 9);
@@ -522,5 +775,138 @@ mod tests {
         b.execute_planes(Op::Add, &refs, &mut via_planes).unwrap();
         let via_job = run(&mut b, Op::Add, 64, 9);
         assert_eq!(via_planes[0], via_job[0]);
+    }
+
+    /// The obviously-correct serial gather: concatenate everything,
+    /// slice the window, pad to size.
+    fn ref_gather(
+        sources: &[Arc<Vec<f32>>], size: usize, start: usize, len: usize, pad: f32,
+    ) -> Vec<f32> {
+        let mut all = Vec::new();
+        for s in sources {
+            all.extend_from_slice(s);
+        }
+        let mut out = all[start..start + len].to_vec();
+        out.resize(size, pad);
+        out
+    }
+
+    #[test]
+    fn staged_gather_matches_serial_reference_bitwise() {
+        let mut b = NativeBackend::new(MIN_CHUNK, 4);
+        // request planes of awkward lengths straddling chunk seams
+        let lens = [3usize, MIN_CHUNK, 137, MIN_CHUNK * 2 + 1, 1];
+        let op = Op::Div22; // pad values differ per plane
+        let n_in = op.n_in();
+        let mut sources: Vec<Vec<Arc<Vec<f32>>>> = vec![Vec::new(); n_in];
+        for (ri, &l) in lens.iter().enumerate() {
+            let planes = workload::planes_for(op.name(), l, 7 + ri as u64);
+            for (p, plane) in planes.into_iter().enumerate() {
+                sources[p].push(Arc::new(plane));
+            }
+        }
+        let total: usize = lens.iter().sum();
+        // windows straddling request seams, all with pad lanes or
+        // awkward starts; the last one ends mid-batch with padding
+        let windows = [
+            (total.next_power_of_two(), 0usize, total),
+            (MIN_CHUNK, 2, MIN_CHUNK),
+            (256, MIN_CHUNK + 100, 256),
+            (512, total - 300, 300),
+        ];
+        for &(size, start, len) in &windows {
+            let got = b.stage_gather(op, &sources, size, start, len).unwrap();
+            assert_eq!(got.len(), n_in);
+            for (plane, (worker, buf)) in got.into_iter().enumerate() {
+                let want =
+                    ref_gather(&sources[plane], size, start, len, op.pad_value(plane));
+                assert_eq!(buf.len(), size);
+                for i in 0..size {
+                    assert_eq!(
+                        buf[i].to_bits(),
+                        want[i].to_bits(),
+                        "plane={plane} lane={i} window=({size},{start},{len})"
+                    );
+                }
+                b.stage_reclaim(worker, buf);
+            }
+        }
+        assert!(b.idle_buffers() > 0, "gather buffers went back to the arenas");
+    }
+
+    #[test]
+    fn staged_scatter_reassembles_requests_bitwise() {
+        let mut b = NativeBackend::new(MIN_CHUNK, 3);
+        // five requests with awkward spans, covered by three launches
+        // with padded tails; request 3 straddles both launch seams
+        let lens = [5usize, 700, 64, 1200, 31];
+        let total: usize = lens.iter().sum();
+        let mut spans = Vec::new();
+        let mut off = 0usize;
+        for &l in &lens {
+            spans.push((off, l));
+            off += l;
+        }
+        let reference: Vec<Vec<f32>> = (0..2)
+            .map(|o| (0..total).map(|i| (o * 1_000_000 + i) as f32).collect())
+            .collect();
+        let cuts = [(0usize, 1000usize, 1024usize), (1000, 900, 1024), (1900, 100, 2048)];
+        let launches: Vec<LaunchOut> = cuts
+            .iter()
+            .map(|&(start, len, size)| LaunchOut {
+                start,
+                len,
+                outs: reference
+                    .iter()
+                    .map(|p| {
+                        let mut v = p[start..start + len].to_vec();
+                        v.resize(size, -1.0); // pad lanes must never leak
+                        v
+                    })
+                    .collect(),
+            })
+            .collect();
+        let (planes, reclaimed) = b.stage_scatter(launches, &spans, 2).unwrap();
+        assert_eq!(planes.len(), lens.len());
+        assert_eq!(reclaimed.len(), 6, "all launch buffers reclaimed");
+        for (ri, &(g, n)) in spans.iter().enumerate() {
+            for o in 0..2 {
+                assert_eq!(planes[ri][o].len(), n);
+                for i in 0..n {
+                    assert_eq!(
+                        planes[ri][o][i].to_bits(),
+                        reference[o][g + i].to_bits(),
+                        "req={ri} plane={o} lane={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_mode_has_no_staging_crew() {
+        let mut b = NativeBackend::new(DEFAULT_CHUNK, 1);
+        assert_eq!(b.staging_workers(), 0);
+        assert!(b.stage_gather(Op::Add, &[], 8, 0, 8).is_err());
+        assert!(b.stage_scatter(Vec::new(), &[], 1).is_err());
+        // reclaim on a crewless backend is a silent drop
+        b.stage_reclaim(0, vec![0.0; 8]);
+        assert_eq!(b.idle_buffers(), 0);
+    }
+
+    #[test]
+    fn placement_degrades_to_unpinned_on_unknown_nodes() {
+        // pinning to a node the topology doesn't know is a no-op, not
+        // an error — the containerized-host acceptance criterion
+        let mut b = NativeBackend::with_placement(MIN_CHUNK, 2, None, Some(9_999));
+        assert_eq!(b.node(), Some(9_999));
+        assert_eq!(b.staging_workers(), 2);
+        let n = MIN_CHUNK * 3;
+        let planes = workload::planes_for("add22", n, 11);
+        let job = ExecJob::new(Op::Add22, planes).unwrap();
+        let mut outs = vec![vec![0.0f32; n]; 2];
+        b.execute(&job, &mut outs).unwrap();
+        assert_eq!(NativeBackend::new(0, 1).node(), None);
+        assert_eq!(b.stats().arena_dropped, 0);
     }
 }

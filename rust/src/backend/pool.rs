@@ -13,16 +13,37 @@
 //! so workers never contend with each other on a single free-list (a
 //! worker's arena mutex is only ever touched by that worker and,
 //! briefly, by the assembler handing buffers back).
+//!
+//! Arenas are also the stack's **NUMA locality anchor**: a pinned
+//! worker first-touches every page of a fresh buffer on its own node
+//! (the zero-fill in [`BufferPool::take`] faults the pages in), and
+//! because buffers only ever return to the arena they came from, a
+//! recycled plane never migrates to another worker — or another node.
+//!
+//! Retention is bounded by **bytes**, not buffer count: after a burst
+//! of giant fused batches a count cap would permanently pin dozens of
+//! peak-sized planes. Overflow buffers are dropped and counted
+//! ([`BufferPool::dropped`]), and the coordinator forwards the counter
+//! into service telemetry.
 
 use std::sync::Mutex;
+
+/// Default retained-byte cap per free-list (32 MiB — a handful of
+/// top-rung launch planes, enough to keep steady state allocation-free
+/// without pinning a burst forever).
+pub const DEFAULT_RETAINED_BYTES: usize = 32 << 20;
 
 /// A trivial free-list of `f32` planes. Not thread-safe by design: one
 /// pool per shard thread.
 #[derive(Debug)]
 pub struct BufferPool {
     free: Vec<Vec<f32>>,
-    /// Max buffers retained (bounds memory after a burst of huge batches).
-    max_retained: usize,
+    /// Byte budget for parked capacity; `put` past it drops instead.
+    max_retained_bytes: usize,
+    /// Capacity bytes currently parked in `free`.
+    retained_bytes: usize,
+    /// Buffers dropped because the budget was full.
+    dropped: u64,
 }
 
 impl Default for BufferPool {
@@ -33,12 +54,30 @@ impl Default for BufferPool {
 
 impl BufferPool {
     pub fn new() -> BufferPool {
-        BufferPool { free: Vec::new(), max_retained: 32 }
+        Self::with_byte_cap(DEFAULT_RETAINED_BYTES)
+    }
+
+    /// A pool retaining at most `max_retained_bytes` of parked capacity.
+    pub fn with_byte_cap(max_retained_bytes: usize) -> BufferPool {
+        BufferPool {
+            free: Vec::new(),
+            max_retained_bytes,
+            retained_bytes: 0,
+            dropped: 0,
+        }
+    }
+
+    fn pop(&mut self) -> Option<Vec<f32>> {
+        let v = self.free.pop()?;
+        self.retained_bytes = self
+            .retained_bytes
+            .saturating_sub(v.capacity() * std::mem::size_of::<f32>());
+        Some(v)
     }
 
     /// A zero-filled buffer of exactly `len` elements.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut v = self.free.pop().unwrap_or_default();
+        let mut v = self.pop().unwrap_or_default();
         v.clear();
         v.resize(len, 0.0);
         v
@@ -46,15 +85,23 @@ impl BufferPool {
 
     /// An empty buffer (len 0), ready for `extend`-style gathering.
     pub fn take_empty(&mut self) -> Vec<f32> {
-        let mut v = self.free.pop().unwrap_or_default();
+        let mut v = self.pop().unwrap_or_default();
         v.clear();
         v
     }
 
-    /// Return a buffer to the pool.
+    /// Return a buffer to the pool; past the byte budget it is dropped
+    /// and counted instead of parked.
     pub fn put(&mut self, v: Vec<f32>) {
-        if self.free.len() < self.max_retained && v.capacity() > 0 {
+        let bytes = v.capacity() * std::mem::size_of::<f32>();
+        if bytes == 0 {
+            return; // zero-capacity buffers are not worth parking
+        }
+        if self.retained_bytes + bytes <= self.max_retained_bytes {
+            self.retained_bytes += bytes;
             self.free.push(v);
+        } else {
+            self.dropped += 1;
         }
     }
 
@@ -62,19 +109,31 @@ impl BufferPool {
     pub fn idle(&self) -> usize {
         self.free.len()
     }
+
+    /// Capacity bytes currently parked.
+    pub fn retained_bytes(&self) -> usize {
+        self.retained_bytes
+    }
+
+    /// Buffers dropped on overflow since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
 }
 
 /// Per-worker buffer arenas for a persistent worker crew: worker `i`
 /// takes from arena `i`, and whoever assembles the batch returns each
 /// chunk buffer to the arena it came from. No free-list is shared
-/// between workers, so the crew never contends on one pool.
+/// between workers, so the crew never contends on one pool — and on a
+/// pinned crew, no buffer ever changes NUMA node.
 #[derive(Debug)]
 pub struct WorkerArenas {
     arenas: Vec<Mutex<BufferPool>>,
 }
 
 impl WorkerArenas {
-    /// One arena per worker (at least one).
+    /// One arena per worker (at least one), each byte-capped at
+    /// [`DEFAULT_RETAINED_BYTES`].
     pub fn new(workers: usize) -> WorkerArenas {
         WorkerArenas {
             arenas: (0..workers.max(1)).map(|_| Mutex::new(BufferPool::new())).collect(),
@@ -95,6 +154,14 @@ impl WorkerArenas {
         }
     }
 
+    /// An empty buffer from `worker`'s arena, ready for gathering.
+    pub fn take_empty(&self, worker: usize) -> Vec<f32> {
+        match self.arenas[worker].lock() {
+            Ok(mut pool) => pool.take_empty(),
+            Err(_) => Vec::new(),
+        }
+    }
+
     /// Return a buffer to the arena it was taken from.
     pub fn put(&self, worker: usize, v: Vec<f32>) {
         if let Ok(mut pool) = self.arenas[worker].lock() {
@@ -107,6 +174,22 @@ impl WorkerArenas {
         self.arenas
             .iter()
             .map(|a| a.lock().map(|p| p.idle()).unwrap_or(0))
+            .sum()
+    }
+
+    /// Buffers dropped on overflow across all arenas.
+    pub fn dropped(&self) -> u64 {
+        self.arenas
+            .iter()
+            .map(|a| a.lock().map(|p| p.dropped()).unwrap_or(0))
+            .sum()
+    }
+
+    /// Capacity bytes parked across all arenas.
+    pub fn retained_bytes(&self) -> usize {
+        self.arenas
+            .iter()
+            .map(|a| a.lock().map(|p| p.retained_bytes()).unwrap_or(0))
             .sum()
     }
 }
@@ -141,15 +224,29 @@ mod tests {
     }
 
     #[test]
-    fn retention_is_bounded() {
-        let mut pool = BufferPool::new();
-        for _ in 0..100 {
-            pool.put(vec![0.0; 8]);
+    fn retention_is_bounded_by_bytes() {
+        // budget of ~two 128-element planes
+        let mut pool = BufferPool::with_byte_cap(1024);
+        for _ in 0..4 {
+            pool.put(Vec::with_capacity(128)); // 512 bytes each
         }
-        assert!(pool.idle() <= 32);
-        // zero-capacity buffers are not worth parking
+        assert!(pool.retained_bytes() <= 1024);
+        assert_eq!(pool.idle(), 2);
+        assert_eq!(pool.dropped(), 2, "overflow buffers counted, not parked");
+        // taking a buffer frees budget for the next put
+        let v = pool.take(128);
+        pool.put(v);
+        assert_eq!(pool.idle(), 2);
+        assert_eq!(pool.dropped(), 2);
+        // zero-capacity buffers are neither parked nor counted
         pool.put(Vec::new());
-        assert!(pool.idle() <= 32);
+        assert_eq!(pool.idle(), 2);
+        assert_eq!(pool.dropped(), 2);
+        // a single buffer bigger than the whole budget is never parked
+        let mut big = BufferPool::with_byte_cap(64);
+        big.put(vec![0.0; 1000]);
+        assert_eq!(big.idle(), 0);
+        assert_eq!(big.dropped(), 1);
     }
 
     #[test]
@@ -174,5 +271,19 @@ mod tests {
         let arenas = WorkerArenas::new(0);
         assert_eq!(arenas.workers(), 1);
         assert_eq!(arenas.take(0, 8).len(), 8);
+        let e = arenas.take_empty(0);
+        assert_eq!(e.len(), 0);
+    }
+
+    #[test]
+    fn worker_arenas_aggregate_drop_counts() {
+        let arenas = WorkerArenas::new(2);
+        assert_eq!(arenas.dropped(), 0);
+        // overflow one arena far past the byte budget
+        let huge = DEFAULT_RETAINED_BYTES / std::mem::size_of::<f32>();
+        arenas.put(0, vec![0.0; huge]);
+        arenas.put(0, vec![0.0; huge]);
+        assert!(arenas.dropped() >= 1);
+        assert!(arenas.retained_bytes() <= 2 * DEFAULT_RETAINED_BYTES);
     }
 }

@@ -45,6 +45,7 @@ struct Inner {
     errors: u64,
     cancelled: u64,
     expired: u64,
+    pool_dropped: u64,
     latency: Summary,
 }
 
@@ -62,6 +63,9 @@ pub struct Snapshot {
     /// Requests skipped because their deadline had already passed when
     /// the shard reached them.
     pub expired: u64,
+    /// Staging buffers dropped by byte-capped free lists (shard pool +
+    /// worker arenas) instead of being retained.
+    pub pool_dropped: u64,
     pub mean_latency_s: f64,
     pub max_latency_s: f64,
     /// Batches that contributed to the latency summary (weights the
@@ -106,6 +110,11 @@ impl Metrics {
         self.inner.lock().unwrap().expired += n as u64;
     }
 
+    /// `n` buffers dropped on free-list overflow since last recorded.
+    pub fn record_pool_dropped(&self, n: u64) {
+        self.inner.lock().unwrap().pool_dropped += n;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         Snapshot {
@@ -117,6 +126,7 @@ impl Metrics {
             errors: g.errors,
             cancelled: g.cancelled,
             expired: g.expired,
+            pool_dropped: g.pool_dropped,
             mean_latency_s: if g.latency.count > 0 { g.latency.mean() } else { 0.0 },
             max_latency_s: if g.latency.count > 0 { g.latency.max } else { 0.0 },
             latency_count: g.latency.count,
@@ -213,6 +223,7 @@ impl Snapshot {
             total.errors += s.errors;
             total.cancelled += s.cancelled;
             total.expired += s.expired;
+            total.pool_dropped += s.pool_dropped;
             total.latency_count += s.latency_count;
             total.max_latency_s = total.max_latency_s.max(s.max_latency_s);
             weighted += s.mean_latency_s * s.latency_count as f64;
@@ -386,6 +397,66 @@ impl Telemetry {
     /// Groups of `op` routed into execution on this shard (>= samples).
     pub fn attempts(&self, op: Op) -> u64 {
         self.cells[op.index()].attempts()
+    }
+}
+
+/// Data-path stage split of one shard's fused groups: EWMA seconds per
+/// group spent gathering launch inputs, executing kernels, and
+/// scattering results back to requests.
+///
+/// Same single-writer/lock-free-reader discipline as [`OpEwma`]: the
+/// shard thread records after each fused group, the bits are
+/// release-published through the sample count, and readers (bench
+/// `data_path` rows, [`crate::coordinator::routing::TelemetryView`])
+/// may see a value one group stale, never a torn one. This is the
+/// signal that attributes a NUMA win (or loss) to the staging copies
+/// rather than the kernels.
+#[derive(Debug, Default)]
+pub struct StageSplit {
+    gather_bits: AtomicU64,
+    execute_bits: AtomicU64,
+    scatter_bits: AtomicU64,
+    samples: AtomicU64,
+}
+
+impl StageSplit {
+    /// Fold one fused group's stage timings (seconds) into the EWMAs.
+    pub fn record(&self, gather: f64, execute: f64, scatter: f64) {
+        let n = self.samples.load(Ordering::Relaxed);
+        let (g, e, s) = if n == 0 {
+            (gather, execute, scatter)
+        } else {
+            let pg = f64::from_bits(self.gather_bits.load(Ordering::Relaxed));
+            let pe = f64::from_bits(self.execute_bits.load(Ordering::Relaxed));
+            let ps = f64::from_bits(self.scatter_bits.load(Ordering::Relaxed));
+            (
+                EWMA_ALPHA * gather + (1.0 - EWMA_ALPHA) * pg,
+                EWMA_ALPHA * execute + (1.0 - EWMA_ALPHA) * pe,
+                EWMA_ALPHA * scatter + (1.0 - EWMA_ALPHA) * ps,
+            )
+        };
+        self.gather_bits.store(g.to_bits(), Ordering::Relaxed);
+        self.execute_bits.store(e.to_bits(), Ordering::Relaxed);
+        self.scatter_bits.store(s.to_bits(), Ordering::Relaxed);
+        self.samples.store(n + 1, Ordering::Release);
+    }
+
+    /// `(gather, execute, scatter)` EWMA seconds per fused group;
+    /// `None` until the first fused group runs.
+    pub fn split(&self) -> Option<(f64, f64, f64)> {
+        if self.samples.load(Ordering::Acquire) == 0 {
+            return None;
+        }
+        Some((
+            f64::from_bits(self.gather_bits.load(Ordering::Relaxed)),
+            f64::from_bits(self.execute_bits.load(Ordering::Relaxed)),
+            f64::from_bits(self.scatter_bits.load(Ordering::Relaxed)),
+        ))
+    }
+
+    /// Fused groups folded in.
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Acquire)
     }
 }
 
@@ -762,6 +833,38 @@ mod tests {
         t.record(Op::Mul22, 1_000_000, 1.0, 0);
         assert_eq!(t.attempts(Op::Mul22), 2);
         assert_eq!(t.samples(Op::Mul22), 1);
+    }
+
+    #[test]
+    fn stage_split_is_cold_then_tracks_recent_groups() {
+        let s = StageSplit::default();
+        assert_eq!(s.split(), None);
+        assert_eq!(s.samples(), 0);
+        s.record(0.010, 0.080, 0.005);
+        let (g, e, sc) = s.split().unwrap();
+        assert!((g - 0.010).abs() < 1e-12);
+        assert!((e - 0.080).abs() < 1e-12);
+        assert!((sc - 0.005).abs() < 1e-12);
+        // converges to the recent split, clear of the seed
+        for _ in 0..40 {
+            s.record(0.001, 0.100, 0.002);
+        }
+        let (g, e, sc) = s.split().unwrap();
+        assert!(g < 0.002, "gather={g}");
+        assert!(e > 0.095, "execute={e}");
+        assert!(sc < 0.003, "scatter={sc}");
+        assert_eq!(s.samples(), 41);
+    }
+
+    #[test]
+    fn pool_drop_counter_accumulates_and_merges() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().pool_dropped, 0);
+        m.record_pool_dropped(3);
+        m.record_pool_dropped(2);
+        let s = m.snapshot();
+        assert_eq!(s.pool_dropped, 5);
+        assert_eq!(Snapshot::merged(&[s.clone(), s]).pool_dropped, 10);
     }
 
     #[test]

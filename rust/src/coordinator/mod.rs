@@ -39,7 +39,12 @@
 //!   [`ServiceSpec::fuse_sizes`] ladder ([`batcher::plan`], with the
 //!   tail split across two smaller sizes when that pads less), builds
 //!   owned [`crate::backend::ExecJob`]s, executes through the trait,
-//!   and slices outputs back per request;
+//!   and slices outputs back per request. On a multi-worker native
+//!   shard the gather/scatter copies themselves run in parallel on the
+//!   backend's persistent worker crew (bit-identical to the serial
+//!   loops), and [`ServiceSpec::numa`] / `FFGPU_NUMA` pins each
+//!   shard's crew — and its first-touched staging buffers — to one
+//!   NUMA node ([`crate::backend::Topology`]);
 //! * [`metrics`] tracks throughput, latency, batch shapes and padding
 //!   waste per shard (so heterogeneous sets are observable shard by
 //!   shard), merged on read — plus the **telemetry plane**: per-(shard,
@@ -91,5 +96,6 @@ pub use observatory::{
 };
 pub use plan::{Plan, RequestBuilder, Ticket, TicketState};
 pub use request::OpRequest;
+pub use crate::backend::{NumaMode, Topology};
 pub use routing::{Routing, RoutingPolicy, TelemetryView};
 pub use service::{Handle, Service, ServiceSpec, PAPER_FUSE_SIZES};

@@ -43,7 +43,7 @@
 //! # Ok::<(), ffgpu::backend::ServiceError>(())
 //! ```
 
-use super::metrics::Telemetry;
+use super::metrics::{StageSplit, Telemetry};
 use crate::backend::{KernelTier, Op, ServiceError};
 use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -54,6 +54,9 @@ const ALL_OPS_MASK: u32 = (1 << Op::COUNT) - 1;
 /// Sentinel in [`ShardMeta::tier`] while the kernel tier is unknown
 /// (pre-build, or a substrate without CPU kernel tiers).
 const TIER_UNSET: u8 = u8::MAX;
+
+/// Sentinel in [`ShardMeta::node`] for an unpinned shard.
+const NODE_UNSET: usize = usize::MAX;
 
 /// Live, routing-visible state of one shard: which substrate it runs,
 /// how many requests it currently has in flight, which operators its
@@ -73,6 +76,14 @@ pub struct ShardMeta {
     /// shard thread builds its backend, so telemetry and banners can
     /// attribute Melem/s to a tier.
     tier: AtomicU8,
+    /// NUMA node this shard is pinned to ([`NODE_UNSET`] = unpinned):
+    /// published like `supports`, when the shard thread builds its
+    /// backend, so telemetry and bench rows can attribute throughput
+    /// to placement.
+    node: AtomicUsize,
+    /// Gather/execute/scatter time split of this shard's fused groups
+    /// (EWMA; written by the shard thread after each fused group).
+    stages: StageSplit,
     telemetry: Telemetry,
 }
 
@@ -83,6 +94,8 @@ impl ShardMeta {
             depth: AtomicUsize::new(0),
             supports: AtomicU32::new(ALL_OPS_MASK),
             tier: AtomicU8::new(TIER_UNSET),
+            node: AtomicUsize::new(NODE_UNSET),
+            stages: StageSplit::default(),
             telemetry: Telemetry::new(),
         }
     }
@@ -134,6 +147,24 @@ impl ShardMeta {
         self.tier.store(v, Ordering::Relaxed);
     }
 
+    /// The NUMA node this shard's backend is pinned to (`None` =
+    /// unpinned — NUMA off, single-node host, or a non-native shard).
+    pub fn numa_node(&self) -> Option<usize> {
+        match self.node.load(Ordering::Relaxed) {
+            NODE_UNSET => None,
+            n => Some(n),
+        }
+    }
+
+    pub(crate) fn set_numa_node(&self, node: Option<usize>) {
+        self.node.store(node.unwrap_or(NODE_UNSET), Ordering::Relaxed);
+    }
+
+    /// Gather/execute/scatter split of this shard's fused groups.
+    pub fn stage_split(&self) -> &StageSplit {
+        &self.stages
+    }
+
     pub(crate) fn enter(&self) {
         self.depth.fetch_add(1, Ordering::Relaxed);
     }
@@ -181,6 +212,17 @@ impl<'a> TelemetryView<'a> {
     /// substrates) — lets Melem/s readings be attributed to a tier.
     pub fn kernel_tier(&self, shard: usize) -> Option<KernelTier> {
         self.shards[shard].kernel_tier()
+    }
+
+    /// NUMA node `shard` is pinned to (`None` = unpinned).
+    pub fn numa_node(&self, shard: usize) -> Option<usize> {
+        self.shards[shard].numa_node()
+    }
+
+    /// Gather/execute/scatter seconds split (EWMA) of `shard`'s fused
+    /// groups, `None` before the first fused group runs there.
+    pub fn stage_split(&self, shard: usize) -> Option<(f64, f64, f64)> {
+        self.shards[shard].stage_split().split()
     }
 
     /// Measured throughput of `op` on `shard` (Melem/s), `None` while
@@ -362,8 +404,14 @@ impl RoutingPolicy for OpAffinity {
 ///   ([`ShardMeta::supports`]); if none claims it, every shard is a
 ///   candidate and the backend's own `Unsupported` reply surfaces.
 /// * While any candidate is **cold** (never *attempted* for this op)
-///   *and idle*, one is picked (rotating tie-break) — cheap
-///   exploration that seeds every cell. Coldness is by attempts, not
+///   *and idle*, one is picked — cheap exploration that seeds every
+///   cell. The pick is seeded by the published
+///   [`KernelTier`]: among several cold idle candidates the one with
+///   the highest tier (widest SIMD/FMA kernels) takes the first
+///   groups, so the cold-start guess already reflects the one
+///   capability signal the backend publishes before any measurement
+///   exists; equal (or absent) tiers fall back to the rotating
+///   tie-break. Coldness is by attempts, not
 ///   successes, and busy cold candidates are skipped, so a shard that
 ///   keeps failing, or whose slow first group is queued or in flight,
 ///   cannot black-hole an op's traffic: at most one probe rides on a
@@ -401,13 +449,12 @@ impl RoutingPolicy for Measured {
         let candidate = |i: usize| !any_support || view.supports(i, op);
         let start = self.tie.fetch_add(1, Ordering::Relaxed) % n;
 
-        // cold exploration: an *idle*, never-attempted candidate first.
-        // Requiring depth 0 caps exploration at one in-flight probe per
-        // cold shard — a burst arriving while the probe grinds routes
-        // onward to measured shards instead of piling on.
-        if let Some(i) = least_loaded(view, start, |i| {
-            candidate(i) && view.attempts(i, op) == 0 && view.queue_depth(i) == 0
-        }) {
+        // cold exploration: an *idle*, never-attempted candidate first,
+        // highest published kernel tier winning ties. Requiring depth 0
+        // caps exploration at one in-flight probe per cold shard — a
+        // burst arriving while the probe grinds routes onward to
+        // measured shards instead of piling on.
+        if let Some(i) = best_cold(view, op, start, &candidate) {
             return i;
         }
 
@@ -445,6 +492,36 @@ impl RoutingPolicy for Measured {
         // first group): least-loaded candidate keeps traffic moving
         least_loaded(view, start, candidate).unwrap_or(start)
     }
+}
+
+/// Measured routing's cold-exploration pick: among candidates never
+/// attempted for `op` *and* currently idle, the one whose backend
+/// publishes the highest [`KernelTier`] wins (tierless substrates rank
+/// lowest). Scanning from `start` keeps equal-tier ties rotating, so a
+/// homogeneous shard set still seeds every cell round-robin. `None`
+/// when no cold idle candidate exists.
+fn best_cold<F: Fn(usize) -> bool>(
+    view: &TelemetryView, op: Op, start: usize, keep: &F,
+) -> Option<usize> {
+    let n = view.len();
+    let mut best: Option<(usize, usize)> = None; // (tier_rank, shard)
+    for off in 0..n {
+        let i = (start + off) % n;
+        if !keep(i) || view.attempts(i, op) != 0 || view.queue_depth(i) != 0 {
+            continue;
+        }
+        // rank 0 = no published tier, 1.. = KernelTier::index() + 1,
+        // so a tiered native shard always beats a tierless substrate
+        let rank = view.kernel_tier(i).map_or(0, |t| t.index() + 1);
+        let better = match best {
+            Some((best_r, _)) => rank > best_r,
+            None => true,
+        };
+        if better {
+            best = Some((rank, i));
+        }
+    }
+    best.map(|(_, i)| i)
 }
 
 /// Least-loaded shard among those `keep` accepts, scanning from
@@ -721,6 +798,30 @@ mod tests {
     }
 
     #[test]
+    fn measured_cold_start_prefers_higher_kernel_tiers() {
+        // three cold shards: scalar, blocked-fma, and one with no
+        // published tier. The cold-start guess must ride the published
+        // capability ladder — widest kernels first, tierless last.
+        let m = metas(3);
+        m[0].set_kernel_tier(Some(KernelTier::Scalar));
+        m[1].set_kernel_tier(Some(KernelTier::BlockedFma));
+        let v = TelemetryView::new(&m);
+        let p = Measured::new();
+        // repeated cold picks all land on the blocked-fma shard until
+        // it is attempted — the rotating tie-break must not override
+        // the tier ranking
+        for _ in 0..3 {
+            assert_eq!(p.route(Op::Add22, 1000, &v), 1);
+        }
+        warm(&m[1], Op::Add22, 1000, 1e-3);
+        // next-best cold candidate: the scalar shard beats tierless
+        assert_eq!(p.route(Op::Add22, 1000, &v), 0);
+        warm(&m[0], Op::Add22, 1000, 1e-3);
+        // tierless shard still gets its probe last
+        assert_eq!(p.route(Op::Add22, 1000, &v), 2);
+    }
+
+    #[test]
     fn measured_cold_exploration_skips_busy_cold_shards() {
         // the canary is cold for this op but already has work queued
         // (e.g. its first probe, or another op's slow group): a burst
@@ -802,6 +903,25 @@ mod tests {
         assert_eq!(m.kernel_tier(), None);
         let metas = [m];
         assert_eq!(TelemetryView::new(&metas).kernel_tier(0), None);
+    }
+
+    #[test]
+    fn shard_meta_publishes_numa_node_and_stage_split() {
+        let m = ShardMeta::new("native");
+        assert_eq!(m.numa_node(), None, "unset until the backend is built");
+        m.set_numa_node(Some(1));
+        assert_eq!(m.numa_node(), Some(1));
+        m.set_numa_node(None);
+        assert_eq!(m.numa_node(), None);
+        assert_eq!(m.stage_split().split(), None, "cold until a fused group runs");
+        m.stage_split().record(1e-3, 5e-3, 2e-3);
+        let metas = [m];
+        let v = TelemetryView::new(&metas);
+        assert_eq!(v.numa_node(0), None);
+        let (g, e, s) = v.stage_split(0).expect("recorded split visible");
+        assert!((g - 1e-3).abs() < 1e-12);
+        assert!((e - 5e-3).abs() < 1e-12);
+        assert!((s - 2e-3).abs() < 1e-12);
     }
 
     #[test]

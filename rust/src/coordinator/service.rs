@@ -41,7 +41,8 @@ use super::plan::{Plan, Ticket, TicketState};
 use super::request::OpRequest;
 use super::routing::{Routing, RoutingPolicy, ShardMeta, TelemetryView};
 use crate::backend::{
-    fingerprint, BackendSpec, BufferPool, ExecJob, KernelBackend, Op, ServiceError,
+    fingerprint, BackendSpec, BufferPool, ExecJob, KernelBackend, LaunchOut, NumaMode,
+    Op, ServiceError, Topology,
 };
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
@@ -105,6 +106,15 @@ pub struct ServiceSpec {
     /// that keeps padding gains denser rungs until the waste drains.
     /// Off by default — the static ladder is the paper-faithful grid.
     pub adaptive_ladder: bool,
+    /// NUMA placement mode for native shards whose spec leaves the
+    /// node unpinned (`BackendSpec::Native { node: None, .. }`).
+    /// `None` (the default) reads `FFGPU_NUMA` at start
+    /// ([`NumaMode::from_env`]); `Some(mode)` overrides the
+    /// environment. Under [`NumaMode::Auto`] unpinned native shards
+    /// are assigned round-robin over the host's NUMA nodes
+    /// ([`Topology::assign`]) — a clean no-op on single-node hosts.
+    /// An explicit per-shard `node` always wins over the mode.
+    pub numa: Option<NumaMode>,
 }
 
 impl Default for ServiceSpec {
@@ -125,6 +135,7 @@ impl ServiceSpec {
             observe: None,
             cache_mb: 0,
             adaptive_ladder: false,
+            numa: None,
         }
     }
 
@@ -176,6 +187,13 @@ impl ServiceSpec {
     /// waste (see [`ServiceSpec::adaptive_ladder`]).
     pub fn with_adaptive_ladder(mut self, on: bool) -> ServiceSpec {
         self.adaptive_ladder = on;
+        self
+    }
+
+    /// Force the NUMA placement mode (see [`ServiceSpec::numa`]),
+    /// overriding `FFGPU_NUMA`.
+    pub fn with_numa(mut self, mode: NumaMode) -> ServiceSpec {
+        self.numa = Some(mode);
         self
     }
 
@@ -456,15 +474,35 @@ impl Service {
         };
         let cache = (spec.cache_mb > 0)
             .then(|| Arc::new(ResultCache::with_budget(spec.cache_mb << 20)));
-        let shards = spec.shards.len();
+        // resolve NUMA placement into the per-shard specs, once, here:
+        // an explicit per-shard pin wins; unpinned native shards get a
+        // node from the mode (round-robin over the host topology under
+        // Auto — Topology::assign is None on single-node hosts, so the
+        // whole machinery degrades to unpinned where pinning cannot
+        // help). Non-native shards never pin.
+        let numa = spec.numa.unwrap_or_else(NumaMode::from_env);
+        let topo = Topology::detect();
+        let mut shard_specs = spec.shards;
+        for (shard, s) in shard_specs.iter_mut().enumerate() {
+            if let BackendSpec::Native { node, .. } = s {
+                if node.is_none() {
+                    *node = match numa {
+                        NumaMode::Off => None,
+                        NumaMode::Node(n) => Some(n),
+                        NumaMode::Auto => topo.assign(shard),
+                    };
+                }
+            }
+        }
+        let shards = shard_specs.len();
         let meta: Arc<Vec<ShardMeta>> =
-            Arc::new(spec.shards.iter().map(|s| ShardMeta::new(s.label())).collect());
+            Arc::new(shard_specs.iter().map(|s| ShardMeta::new(s.label())).collect());
         let live = Arc::new(AtomicUsize::new(0));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(), ServiceError>>();
         let mut txs = Vec::with_capacity(shards);
         let mut metrics = Vec::with_capacity(shards);
         let mut joins = Vec::with_capacity(shards);
-        for (shard, backend_spec) in spec.shards.into_iter().enumerate() {
+        for (shard, backend_spec) in shard_specs.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Msg>();
             let m = Arc::new(Metrics::new());
             let (c2, m2, l2, r2, meta2) =
@@ -572,6 +610,18 @@ impl Service {
         self.meta.iter().map(ShardMeta::kernel_tier).collect()
     }
 
+    /// NUMA node per shard, in shard order (`None` = unpinned: NUMA
+    /// off, a single-node host, or a non-native substrate).
+    pub fn shard_numa_nodes(&self) -> Vec<Option<usize>> {
+        self.meta.iter().map(ShardMeta::numa_node).collect()
+    }
+
+    /// Gather/execute/scatter seconds split (EWMA) of `shard`'s fused
+    /// groups, `None` before any fused group ran there.
+    pub fn shard_stage_split(&self, shard: usize) -> Option<(f64, f64, f64)> {
+        self.meta[shard].stage_split().split()
+    }
+
     /// Whether an accuracy observatory rides beside this service.
     pub fn has_observatory(&self) -> bool {
         self.obs.is_some()
@@ -669,11 +719,16 @@ fn device_thread(
     // substrates without CPU kernel tiers) — banners and telemetry
     // readers can attribute this shard's Melem/s from the first batch
     meta[shard].set_kernel_tier(backend.kernel_tier());
+    // and the NUMA node the spec resolved this shard to (None =
+    // unpinned), so telemetry and bench rows can attribute throughput
+    // to placement
+    meta[shard].set_numa_node(spec.numa_node());
     // count as live *before* acking, so `is_running()` is already true
     // the moment `Service::start` returns
     live.fetch_add(1, Ordering::Relaxed);
     let _ = ready.send(Ok(()));
     let mut pool = BufferPool::new();
+    let mut pool_drops_seen = 0u64;
 
     loop {
         // block for the first message, then drain the queue; with a
@@ -767,6 +822,13 @@ fn device_thread(
         if executed_any {
             metrics.record_latency(t0.elapsed().as_secs_f64());
         }
+        // forward free-list overflow drops (shard pool + backend worker
+        // arenas, both cumulative) into the shard's metrics as a delta
+        let drops = pool.dropped() + backend.stats().arena_dropped;
+        if drops > pool_drops_seen {
+            metrics.record_pool_dropped(drops - pool_drops_seen);
+            pool_drops_seen = drops;
+        }
         if shutdown {
             break;
         }
@@ -788,6 +850,17 @@ fn device_thread(
 /// `div22` padding lanes divide by one, never by zero), and each
 /// launch's outputs are sliced back per request — padding lanes never
 /// reach a reply.
+///
+/// When the backend has a staging crew
+/// ([`KernelBackend::staging_workers`] > 1 — the multi-worker native
+/// backend), the gather and scatter copies run **on that crew** in
+/// parallel, one job per plane / per request range, on the same
+/// (possibly node-pinned) threads that execute the kernels; the staged
+/// copies mirror the serial loops byte for byte, so replies are
+/// bit-identical either way. Otherwise (workers=1, gpusim, XLA) the
+/// serial loops below run on the shard thread. Either way the
+/// per-stage seconds land in the shard's [`ShardMeta::stage_split`]
+/// EWMA.
 ///
 /// The shard's queue depth ([`ShardMeta`]) is decremented *before* the
 /// replies go out, so once a client holds its reply the routing
@@ -906,52 +979,158 @@ fn serve_group(
         batcher::plan(total, fuse_sizes).expect("non-empty batch over non-empty ladder")
     };
 
-    // per-request output accumulators (owned by the replies)
-    let mut acc: Vec<Vec<Vec<f32>>> =
-        refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
     meta.telemetry().record_attempt(op);
     let t_exec = Instant::now();
     let mut failure: Option<ServiceError> = None;
     let mut launches_done = 0usize;
     let mut padded = 0u64;
-    for l in &launches {
-        // gather this launch's window into pooled, padded planes
-        let mut planes: Vec<Arc<Vec<f32>>> = Vec::with_capacity(n_in);
-        for p in 0..n_in {
-            let mut buf = pool.take_empty();
-            batcher::gather_plane_into(&refs, p, l.size, l.start, l.len, op, &mut buf);
-            planes.push(Arc::new(buf));
-        }
-        let job = match ExecJob::from_shared(op, planes) {
-            Ok(j) => j,
-            Err(e) => {
-                failure = Some(e);
+    let (mut gather_s, mut execute_s, mut scatter_s) = (0.0f64, 0.0f64, 0.0f64);
+    // per-request output accumulators (owned by the replies)
+    let mut acc: Vec<Vec<Vec<f32>>>;
+
+    if backend.staging_workers() > 1 {
+        // parallel data path: gathers and scatters run on the backend's
+        // persistent (and, when placed, node-pinned) worker crew — one
+        // job per plane for gathers, contiguous request ranges for
+        // scatters. The staged copies are byte-for-byte the serial
+        // loops below ([`crate::backend::native::gather_window_into`]
+        // mirrors [`batcher::gather_plane_into`]), so outputs stay
+        // bit-identical to serial serving.
+        let sources: Vec<Vec<Arc<Vec<f32>>>> = (0..n_in)
+            .map(|p| refs.iter().map(|r| r.inputs[p].clone()).collect())
+            .collect();
+        let mut staged: Vec<LaunchOut> = Vec::with_capacity(launches.len());
+        for l in &launches {
+            let t_g = Instant::now();
+            let gathered =
+                match backend.stage_gather(op, &sources, l.size, l.start, l.len) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                };
+            gather_s += t_g.elapsed().as_secs_f64();
+            let (homes, planes): (Vec<usize>, Vec<Arc<Vec<f32>>>) =
+                gathered.into_iter().map(|(w, b)| (w, Arc::new(b))).unzip();
+            let job = match ExecJob::from_shared(op, planes) {
+                Ok(j) => j,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
+            let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(l.size)).collect();
+            let t_e = Instant::now();
+            let result = backend.execute(&job, &mut outs);
+            execute_s += t_e.elapsed().as_secs_f64();
+            // each gather plane goes home: the workers dropped their
+            // Arc clones before reporting, so the unwrap succeeds and
+            // the buffer returns to the arena of the worker that
+            // faulted its pages in — never to another node's
+            for (plane, home) in job.into_inputs().into_iter().zip(homes) {
+                if let Ok(buf) = Arc::try_unwrap(plane) {
+                    backend.stage_reclaim(home, buf);
+                }
+            }
+            match result {
+                Ok(rep) => {
+                    launches_done += rep.launches;
+                    padded += rep.padded_elements + (l.size - l.len) as u64;
+                    staged.push(LaunchOut { start: l.start, len: l.len, outs });
+                }
+                Err(e) => {
+                    for b in outs {
+                        pool.put(b);
+                    }
+                    failure = Some(e);
+                }
+            }
+            if failure.is_some() {
                 break;
             }
-        };
-        let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(l.size)).collect();
-        let result = backend.execute(&job, &mut outs);
-        // reclaim the gather planes: persistent workers dropped their
-        // Arc clones before reporting their last chunk, so the unwrap
-        // succeeds and the buffers go back to the pool
-        for plane in job.into_inputs() {
-            if let Ok(buf) = Arc::try_unwrap(plane) {
-                pool.put(buf);
+        }
+        acc = Vec::new();
+        if failure.is_none() {
+            // request spans over the concatenation, in arrival order
+            let mut spans = Vec::with_capacity(refs.len());
+            let mut off = 0usize;
+            for r in &refs {
+                spans.push((off, r.len()));
+                off += r.len();
+            }
+            let t_s = Instant::now();
+            match backend.stage_scatter(staged, &spans, n_out) {
+                Ok((planes, reclaimed)) => {
+                    scatter_s += t_s.elapsed().as_secs_f64();
+                    acc = planes;
+                    for b in reclaimed {
+                        pool.put(b);
+                    }
+                }
+                Err(e) => failure = Some(e),
+            }
+            if failure.is_none() && acc.len() != refs.len() {
+                failure =
+                    Some(ServiceError::Backend("staged scatter shape mismatch".into()));
+            }
+        } else {
+            for lo in staged {
+                for b in lo.outs {
+                    pool.put(b);
+                }
             }
         }
-        match result {
-            Ok(rep) => {
-                batcher::scatter_outputs(&refs, &outs, l.start, l.len, &mut acc);
-                launches_done += rep.launches;
-                padded += rep.padded_elements + (l.size - l.len) as u64;
+    } else {
+        // serial data path: the workers=1 degenerate case and
+        // substrates without a staging crew (gpusim, XLA) — also the
+        // baseline the parallel stage is benchmarked against
+        acc = refs.iter().map(|r| vec![vec![0.0f32; r.len()]; n_out]).collect();
+        for l in &launches {
+            // gather this launch's window into pooled, padded planes
+            let t_g = Instant::now();
+            let mut planes: Vec<Arc<Vec<f32>>> = Vec::with_capacity(n_in);
+            for p in 0..n_in {
+                let mut buf = pool.take_empty();
+                batcher::gather_plane_into(&refs, p, l.size, l.start, l.len, op, &mut buf);
+                planes.push(Arc::new(buf));
             }
-            Err(e) => failure = Some(e),
-        }
-        for b in outs {
-            pool.put(b);
-        }
-        if failure.is_some() {
-            break;
+            gather_s += t_g.elapsed().as_secs_f64();
+            let job = match ExecJob::from_shared(op, planes) {
+                Ok(j) => j,
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            };
+            let mut outs: Vec<Vec<f32>> = (0..n_out).map(|_| pool.take(l.size)).collect();
+            let t_e = Instant::now();
+            let result = backend.execute(&job, &mut outs);
+            execute_s += t_e.elapsed().as_secs_f64();
+            // reclaim the gather planes: persistent workers dropped
+            // their Arc clones before reporting their last chunk, so
+            // the unwrap succeeds and the buffers go back to the pool
+            for plane in job.into_inputs() {
+                if let Ok(buf) = Arc::try_unwrap(plane) {
+                    pool.put(buf);
+                }
+            }
+            match result {
+                Ok(rep) => {
+                    let t_s = Instant::now();
+                    batcher::scatter_outputs(&refs, &outs, l.start, l.len, &mut acc);
+                    scatter_s += t_s.elapsed().as_secs_f64();
+                    launches_done += rep.launches;
+                    padded += rep.padded_elements + (l.size - l.len) as u64;
+                }
+                Err(e) => failure = Some(e),
+            }
+            for b in outs {
+                pool.put(b);
+            }
+            if failure.is_some() {
+                break;
+            }
         }
     }
     let exec_s = t_exec.elapsed().as_secs_f64();
@@ -961,6 +1140,7 @@ fn serve_group(
     match failure {
         None => {
             meta.telemetry().record(op, total as u64, exec_s, padded);
+            meta.stage_split().record(gather_s, execute_s, scatter_s);
             metrics.record_batch(reqs.len(), launches_done, total as u64, padded);
             for (r, planes) in reqs.iter_mut().zip(acc) {
                 let planes = match r.fill.take() {
@@ -1583,6 +1763,128 @@ mod tests {
             .unwrap()
             .into_receiver();
         assert_eq!(rx.recv().unwrap().unwrap()[0], vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn parallel_staging_matches_serial_bitwise() {
+        // the same mixed-size bursts through a staged (workers: 4) and
+        // a serial (workers: 1) shard with a ladder whose rungs
+        // straddle the chunk size and lane seams: replies must match
+        // bit for bit. The kernels are elementwise, so parity must
+        // hold regardless of how the fuse window happens to group each
+        // burst — the staged gather/scatter copies are the serial
+        // loops, spread over the crew.
+        let mk = |workers: usize| {
+            Service::start(
+                ServiceSpec::uniform(
+                    BackendSpec::Native { chunk: 1024, workers, tier: None, node: None },
+                    1,
+                )
+                .with_max_batch(64)
+                .with_fuse_window(Duration::from_millis(40))
+                .with_fuse_sizes(vec![256, 1024, 4096]),
+            )
+            .unwrap()
+        };
+        let staged = mk(4);
+        let serial = mk(1);
+        let sizes = [100usize, 777, 1024, 2048, 4097];
+        for op in [Op::Add22, Op::Div22] {
+            let all: Vec<Vec<Vec<f32>>> = sizes
+                .iter()
+                .enumerate()
+                .map(|(k, &n)| {
+                    crate::harness::workload::planes_for(op.name(), n, 7 * k as u64 + 1)
+                })
+                .collect();
+            let ts: Vec<Ticket> = all
+                .iter()
+                .map(|p| {
+                    staged.handle().dispatch(Plan::new(op, p.clone()).unwrap()).unwrap()
+                })
+                .collect();
+            let tr: Vec<Ticket> = all
+                .iter()
+                .map(|p| {
+                    serial.handle().dispatch(Plan::new(op, p.clone()).unwrap()).unwrap()
+                })
+                .collect();
+            for (k, (a, b)) in ts.into_iter().zip(tr).enumerate() {
+                let oa = a.wait().unwrap();
+                let ob = b.wait().unwrap();
+                assert_eq!(oa.len(), ob.len());
+                for (p, (pa, pb)) in oa.iter().zip(&ob).enumerate() {
+                    assert_eq!(pa.len(), pb.len(), "{op} req {k} plane {p}");
+                    for i in 0..pa.len() {
+                        assert_eq!(
+                            pa[i].to_bits(),
+                            pb[i].to_bits(),
+                            "{op} req {k} plane {p} lane {i}"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(staged.metrics().errors, 0);
+        assert_eq!(serial.metrics().errors, 0);
+        // both shards recorded a gather/execute/scatter split
+        for svc in [&staged, &serial] {
+            let (g, e, s) = svc.shard_stage_split(0).expect("split after fused groups");
+            assert!(g >= 0.0 && e > 0.0 && s >= 0.0, "split {g}/{e}/{s}");
+        }
+    }
+
+    #[test]
+    fn numa_modes_resolve_shard_placement() {
+        // an explicit per-shard pin always wins, even under Off
+        let svc = Service::start(
+            ServiceSpec::uniform(
+                BackendSpec::Native { chunk: 0, workers: 2, tier: None, node: Some(3) },
+                1,
+            )
+            .with_numa(NumaMode::Off),
+        )
+        .unwrap();
+        assert_eq!(svc.shard_numa_nodes(), vec![Some(3)]);
+        // a forced Node(0) pins every unpinned native shard there (node
+        // 0 always exists — the fallback topology is node 0 = all CPUs)
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 2)
+                .with_numa(NumaMode::Node(0)),
+        )
+        .unwrap();
+        assert_eq!(svc.shard_numa_nodes(), vec![Some(0), Some(0)]);
+        let out = run(&svc.handle(), Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]])
+            .unwrap();
+        assert_eq!(out[0], vec![4.0, 6.0]);
+        // Off leaves everything unpinned
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 2)
+                .with_numa(NumaMode::Off),
+        )
+        .unwrap();
+        assert_eq!(svc.shard_numa_nodes(), vec![None, None]);
+        // Auto round-robins over the host topology; on a single-node
+        // (or containerized) host that degrades to a clean no-op —
+        // pinned here so CI boxes exercise the degenerate path
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::native_single(), 2)
+                .with_numa(NumaMode::Auto),
+        )
+        .unwrap();
+        let topo = Topology::detect();
+        let want: Vec<Option<usize>> = (0..2).map(|s| topo.assign(s)).collect();
+        assert_eq!(svc.shard_numa_nodes(), want);
+        if topo.is_single_node() {
+            assert_eq!(svc.shard_numa_nodes(), vec![None, None]);
+        }
+        // non-native substrates never pin, whatever the mode
+        let svc = Service::start(
+            ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1)
+                .with_numa(NumaMode::Node(0)),
+        )
+        .unwrap();
+        assert_eq!(svc.shard_numa_nodes(), vec![None]);
     }
 
     #[test]

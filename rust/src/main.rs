@@ -28,6 +28,9 @@
 //! tier of every native shard (default: `FFGPU_KERNEL_TIER`, then
 //! runtime CPU detection) and `--chunk-elems N` its chunk size (0 =
 //! L2-sized auto chunk); both also apply to `table4` / `tablex`.
+//! `--numa auto|off|<node>` (default: `FFGPU_NUMA`, then `auto`)
+//! controls NUMA placement of native shards — worker crews and their
+//! staging buffers pin to one node each.
 //! `--observe F` mirrors fraction F of the demo traffic through the
 //! accuracy observatory (`--observe-models nv35,r300,chopped`) and
 //! prints the live Table-2/Table-5 accuracy report at the end.
@@ -46,7 +49,7 @@
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
 
-use ffgpu::backend::{BackendSpec, KernelTier, Op};
+use ffgpu::backend::{BackendSpec, KernelTier, NumaMode, Op};
 use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
 use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
 use ffgpu::runtime::Runtime;
@@ -114,6 +117,20 @@ fn main() {
             std::env::var("FFGPU_ADAPTIVE_LADDER").as_deref(),
             Ok("1") | Ok("true")
         );
+    // --numa pins native shards to NUMA nodes (auto | off | <node>);
+    // absent, the service itself reads FFGPU_NUMA (default: auto)
+    let numa_raw = get_flag("--numa", String::new());
+    let numa_flag: Option<NumaMode> = if numa_raw.is_empty() {
+        None
+    } else {
+        match NumaMode::from_cli(&numa_raw) {
+            Ok(m) => Some(m),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    };
 
     let code = match cmd {
         "info" => cmd_info(&artifacts),
@@ -126,7 +143,7 @@ fn main() {
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
             deadline_ms, fuse_window_ms, workers_flag, tier_flag, chunk_flag,
             &observe_flag, &observe_models, &listen_flag, serve_secs,
-            cache_mb, adaptive_ladder,
+            cache_mb, adaptive_ladder, numa_flag,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -196,6 +213,14 @@ SHARD SETS (serve-demo):
   --chunk-elems N                     per-worker chunk size (elements) of
                                       every native shard (0 = L2-sized
                                       auto chunk; also FFGPU_CHUNK_ELEMS)
+  --numa auto|off|<node>              NUMA placement of native shards:
+                                      auto round-robins shards (and their
+                                      worker crews + staging buffers)
+                                      across the host's nodes — a no-op
+                                      on single-node hosts — off disables
+                                      pinning, a node id pins every shard
+                                      there (default: FFGPU_NUMA, then
+                                      auto)
   --observe F                         mirror fraction F (0..1) of the demo
                                       traffic through the accuracy
                                       observatory (native reference + GPU
@@ -436,6 +461,7 @@ fn cmd_serve_demo(
     workers_flag: Option<usize>, tier_flag: Option<KernelTier>,
     chunk_flag: Option<usize>, observe_flag: &str, observe_models: &str,
     listen: &str, serve_secs: u64, cache_mb: usize, adaptive_ladder: bool,
+    numa_flag: Option<NumaMode>,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -468,7 +494,7 @@ fn cmd_serve_demo(
     // shard's persistent crew, CPU kernel tier and chunk size
     if workers_flag.is_some() || tier_flag.is_some() || chunk_flag.is_some() {
         for s in &mut spec.shards {
-            if let BackendSpec::Native { chunk, workers, tier } = s {
+            if let BackendSpec::Native { chunk, workers, tier, .. } = s {
                 if let Some(w) = workers_flag {
                     *workers = w;
                 }
@@ -496,6 +522,11 @@ fn cmd_serve_demo(
     }
     if adaptive_ladder {
         spec = spec.with_adaptive_ladder(true);
+    }
+    // --numa overrides FFGPU_NUMA; absent, the service resolves the
+    // env var itself at start
+    if let Some(mode) = numa_flag {
+        spec = spec.with_numa(mode);
     }
     // --observe arms the accuracy observatory: a fraction of the demo
     // traffic is mirrored onto a native reference + the listed GPU
@@ -551,6 +582,20 @@ fn cmd_serve_demo(
         })
         .collect();
     println!("kernel tiers: [{}]", tier_cells.join(", "));
+    // NUMA placement resolved at start: the node (or '-') per shard
+    let node_cells: Vec<String> = svc
+        .shard_numa_nodes()
+        .iter()
+        .map(|n| match n {
+            Some(n) => format!("node{n}"),
+            None => "-".to_string(),
+        })
+        .collect();
+    println!(
+        "numa: {} -> [{}]",
+        numa_flag.unwrap_or_else(NumaMode::from_env).describe(),
+        node_cells.join(", ")
+    );
     // --listen: serve the same coordinator over TCP while the demo runs
     let wire = if listen.is_empty() {
         None
