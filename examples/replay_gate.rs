@@ -1,0 +1,185 @@
+//! Replay regression gate (CI): re-drive the committed golden trace
+//! and fail on any determinism or drift regression.
+//!
+//! ```bash
+//! cargo run --release --example replay_gate
+//! ```
+//!
+//! What it pins, in order:
+//!
+//! 1. the golden trace (`rust/traces/golden.fftrace`) still decodes
+//!    and its shape matches `golden.expect.json` (record count, per-op
+//!    counts, tenant mix, the one deliberate deadline miss);
+//! 2. replaying it twice on one configuration yields **identical**
+//!    `determinism_key`s — the results checksum plus every per-op
+//!    request/verdict/lane count (exact match, no band);
+//! 3. replaying it on a second configuration (fused + cached) yields
+//!    the **same results checksum** — routing, fusion and the result
+//!    cache are bit-transparent, so the fold over (verdict, reply
+//!    bits) cannot move;
+//! 4. run-over-run metric drift stays inside the band: per-op p95
+//!    within a generous ratio (timing is hardware-noisy; correctness
+//!    is gated by 2/3, not this), padding waste within ±0.15.
+//!
+//! Any failure prints a diff summary and exits nonzero.
+
+use ffgpu::backend::BackendSpec;
+use ffgpu::coordinator::{replay, ReplayReport, Routing, Service, ServiceSpec, Trace};
+use std::path::Path;
+use std::time::Duration;
+
+const RATE: f64 = 16.0;
+/// p95 drift band: run-over-run ratio cap, after a floor that keeps
+/// microsecond-scale latencies from manufacturing huge ratios.
+const P95_FLOOR_MS: f64 = 2.0;
+const P95_RATIO_MAX: f64 = 10.0;
+const PADDING_BAND: f64 = 0.15;
+
+/// Pull `"key": <number>` out of the expect file. The file is flat
+/// enough (unique keys) that a scan beats vendoring a JSON parser.
+fn expect_num(json: &str, key: &str) -> f64 {
+    let tag = format!("\"{key}\":");
+    let at = json.find(&tag).unwrap_or_else(|| panic!("expect file lacks {key}"));
+    let rest = json[at + tag.len()..].trim_start();
+    let end = rest
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == 'e'))
+        .unwrap_or(rest.len());
+    rest[..end].parse().unwrap_or_else(|e| panic!("expect {key}: {e}"))
+}
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("traces");
+    let trace_path = dir.join("golden.fftrace");
+    let expect_path = dir.join("golden.expect.json");
+    let mut failures: Vec<String> = Vec::new();
+
+    // 1. the committed bytes still decode, and the shape matches
+    let bytes = std::fs::read(&trace_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", trace_path.display()));
+    let expect = std::fs::read_to_string(&expect_path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", expect_path.display()));
+    if bytes.len() as f64 != expect_num(&expect, "bytes") {
+        failures.push(format!(
+            "trace size: {} bytes on disk, expect file says {}",
+            bytes.len(),
+            expect_num(&expect, "bytes")
+        ));
+    }
+    let trace = Trace::decode(&bytes).unwrap_or_else(|e| panic!("decode golden: {e}"));
+    if trace.records.len() as f64 != expect_num(&expect, "records") {
+        failures.push(format!(
+            "record count: decoded {}, expected {}",
+            trace.records.len(),
+            expect_num(&expect, "records")
+        ));
+    }
+    for (op, n) in trace.op_counts() {
+        let want = expect_num(&expect, op.name());
+        if n as f64 != want {
+            failures.push(format!("op {op}: {n} records, expected {want}"));
+        }
+    }
+    for tenant in ["alpha", "beta"] {
+        let n = trace.records.iter().filter(|r| r.tenant == tenant).count();
+        let want = expect_num(&expect, tenant);
+        if n as f64 != want {
+            failures.push(format!("tenant {tenant}: {n} records, expected {want}"));
+        }
+    }
+    let misses = trace
+        .records
+        .iter()
+        .filter(|r| r.deadline() == Some(Duration::ZERO))
+        .count();
+    if misses as f64 != expect_num(&expect, "deadline_misses") {
+        failures.push(format!(
+            "deliberate deadline misses: {misses}, expected {}",
+            expect_num(&expect, "deadline_misses")
+        ));
+    }
+    let tenants: std::collections::BTreeSet<&str> =
+        trace.records.iter().map(|r| r.tenant.as_str()).collect();
+    println!(
+        "golden trace: {} records, {} bytes, {} tenants, {misses} deadline miss(es)",
+        trace.records.len(),
+        bytes.len(),
+        tenants.len()
+    );
+
+    // 2. determinism on one configuration: exact key equality
+    let run = |spec: ServiceSpec, label: &str| -> ReplayReport {
+        let svc = Service::start(spec).unwrap_or_else(|e| panic!("{label}: {e}"));
+        let rep = replay(&svc, &trace, RATE).unwrap_or_else(|e| panic!("{label}: {e}"));
+        println!("[{label}] {}", rep.render().trim_end().replace('\n', "\n  "));
+        rep
+    };
+    let sharded = || {
+        ServiceSpec::uniform(BackendSpec::native(), 2).with_routing(Routing::Measured)
+    };
+    let a1 = run(sharded(), "sharded-measured #1");
+    let a2 = run(sharded(), "sharded-measured #2");
+    if a1.determinism_key() != a2.determinism_key() {
+        failures.push(format!(
+            "determinism key moved between identical replays: {:#018x} vs {:#018x}",
+            a1.determinism_key(),
+            a2.determinism_key()
+        ));
+    }
+    for (r1, r2) in a1.per_op.iter().zip(&a2.per_op) {
+        let c1 = (r1.requests, r1.ok, r1.deadline_exceeded, r1.cancelled, r1.errors);
+        let c2 = (r2.requests, r2.ok, r2.deadline_exceeded, r2.cancelled, r2.errors);
+        if r1.op != r2.op || c1 != c2 {
+            failures.push(format!(
+                "per-op counts moved: {} {c1:?} vs {} {c2:?}",
+                r1.op, r2.op
+            ));
+        }
+    }
+
+    // 3. checksum equality across configurations
+    let fused = || {
+        ServiceSpec::uniform(BackendSpec::native(), 2)
+            .with_fuse_window(Duration::from_millis(1))
+            .with_fuse_sizes(vec![1024, 4096, 16384, 65536])
+            .with_cache_mb(64)
+    };
+    let b = run(fused(), "fused-cached");
+    if a1.results_fnv != b.results_fnv {
+        failures.push(format!(
+            "results checksum differs across configs: sharded {:#018x} vs fused {:#018x}",
+            a1.results_fnv, b.results_fnv
+        ));
+    }
+
+    // 4. drift bands (diagnostic noise stays bounded)
+    for (r1, r2) in a1.per_op.iter().zip(&a2.per_op) {
+        let (x, y) = (r1.p95_ms.max(P95_FLOOR_MS), r2.p95_ms.max(P95_FLOOR_MS));
+        let ratio = if x > y { x / y } else { y / x };
+        if ratio > P95_RATIO_MAX {
+            failures.push(format!(
+                "p95 drift for {}: {:.3}ms vs {:.3}ms (ratio {ratio:.1} > {P95_RATIO_MAX})",
+                r1.op, r1.p95_ms, r2.p95_ms
+            ));
+        }
+    }
+    if (a1.padding_waste - a2.padding_waste).abs() > PADDING_BAND {
+        failures.push(format!(
+            "padding waste drift: {:.4} vs {:.4} (band ±{PADDING_BAND})",
+            a1.padding_waste, a2.padding_waste
+        ));
+    }
+
+    if failures.is_empty() {
+        println!(
+            "replay gate OK: checksum {:#018x}, determinism key {:#018x}",
+            a1.results_fnv,
+            a1.determinism_key()
+        );
+    } else {
+        eprintln!("replay gate FAILED ({} finding(s)):", failures.len());
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -24,6 +24,10 @@
 //! FFGPU_BACKEND=xla cargo run --release --example serve_demo
 //! FFGPU_LISTEN=127.0.0.1:7070 FFGPU_SERVE_SECS=30 \
 //!     cargo run --release --example serve_demo          # TCP wire front end
+//! FFGPU_RECORD=/tmp/session.fftrace \
+//!     cargo run --release --example serve_demo          # capture a trace
+//! FFGPU_REPLAY=/tmp/session.fftrace FFGPU_REPLAY_RATE=8 \
+//!     cargo run --release --example serve_demo          # re-drive it at 8x
 //! ```
 //!
 //! `FFGPU_KERNEL_TIER` (scalar | blocked | blocked-fma | auto) is read
@@ -38,10 +42,14 @@
 //! runs (the CI smoke diffs exactly that line).
 
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
-use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::{
+    replay, ObservatorySpec, Plan, ResultChecksum, Routing, Service, ServiceSpec, Trace,
+    TraceRecorder,
+};
 use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn main() {
@@ -84,6 +92,25 @@ fn main() {
         std::env::var("FFGPU_ADAPTIVE_LADDER").as_deref(),
         Ok("1") | Ok("true")
     );
+    // FFGPU_RECORD=<path> arms the trace recorder: every dispatch that
+    // crosses the coordinator boundary (demo clients, the checksum
+    // grid, wire traffic) is captured into a versioned binary trace
+    // and saved at exit. FFGPU_RECORD_INLINE=1 stores full plane bits
+    // (bit-exact replays, bigger files); the default stores content
+    // fingerprints. FFGPU_REPLAY=<path> re-drives a recorded trace
+    // against whatever configuration this process was given, instead
+    // of the synthetic workload; FFGPU_REPLAY_RATE compresses the
+    // recorded arrival gaps (deadlines keep their recorded spans).
+    let record_path = std::env::var("FFGPU_RECORD").ok().map(PathBuf::from);
+    let record_inline = matches!(
+        std::env::var("FFGPU_RECORD_INLINE").as_deref(),
+        Ok("1") | Ok("true")
+    );
+    let replay_path = std::env::var("FFGPU_REPLAY").ok().map(PathBuf::from);
+    let replay_rate: f64 = std::env::var("FFGPU_REPLAY_RATE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
     // FFGPU_OBSERVE + FFGPU_OBSERVE_MODELS arm the accuracy
     // observatory: that fraction of the demo traffic is mirrored onto
     // a native reference + the listed GPU models, and the live
@@ -144,6 +171,14 @@ fn main() {
     if adaptive_ladder {
         spec = spec.with_adaptive_ladder(true);
     }
+    // the caller-side Arc clone keeps the capture reachable for the
+    // save at the end of the run (drop-not-block: 64 MiB budget)
+    let recorder = record_path
+        .as_ref()
+        .map(|_| Arc::new(TraceRecorder::new(64 << 20, record_inline)));
+    if let Some(rec) = &recorder {
+        spec = spec.with_recorder(Arc::clone(rec));
+    }
     let labels: Vec<&str> = spec.shards.iter().map(|s| s.label()).collect();
     println!(
         "shards: [{}]  routing: {}  fusion: {}  observatory: {}  cache: {}",
@@ -197,6 +232,25 @@ fn main() {
         .map(|n| n.map_or("-".to_string(), |n| format!("node{n}")))
         .collect();
     println!("numa nodes: [{}]", nodes.join(", "));
+
+    // FFGPU_REPLAY: re-drive a recorded session through this exact
+    // service configuration and print the scenario report instead of
+    // running the synthetic workload. The report's results checksum is
+    // the regression gate: same trace, any config -> identical line.
+    if let Some(path) = &replay_path {
+        let trace = Trace::load(path)
+            .unwrap_or_else(|e| panic!("load trace {}: {e}", path.display()));
+        println!(
+            "replaying {} ({} records, inline: {}) at {replay_rate}x",
+            path.display(),
+            trace.records.len(),
+            trace.all_inline()
+        );
+        let report = replay(&svc, &trace, replay_rate).expect("replay");
+        print!("{}", report.render());
+        println!("determinism key: {:#018x}", report.determinism_key());
+        return;
+    }
 
     // FFGPU_LISTEN arms the TCP wire front end beside the in-process
     // demo traffic; FFGPU_SERVE_SECS keeps it up after the workload so
@@ -324,11 +378,13 @@ fn main() {
         }
     }
     // deterministic results checksum: a fixed dispatch grid, FNV-1a
-    // over the reply bits. This line must be identical run to run —
-    // and in particular between FFGPU_NUMA=auto and =off serves (the
-    // CI smoke diffs exactly this line) — because placement may move
-    // the copies across threads and nodes but must never change a bit
-    let mut fnv: u64 = 0xcbf29ce484222325;
+    // over the reply bits ([`ResultChecksum`] — the same fold the
+    // replay verifier and the CI gate use). This line must be
+    // identical run to run — and in particular between FFGPU_NUMA=auto
+    // and =off serves (the CI smoke diffs exactly this line) — because
+    // placement may move the copies across threads and nodes but must
+    // never change a bit
+    let mut sum = ResultChecksum::new();
     for (k, &op) in ops.iter().enumerate() {
         let planes = workload::planes_for(op.name(), 1537, 0xC0FFEE + k as u64);
         let out = svc
@@ -337,14 +393,9 @@ fn main() {
             .expect("dispatch")
             .wait()
             .expect("checksum reply");
-        for plane in &out {
-            for v in plane {
-                fnv ^= v.to_bits() as u64;
-                fnv = fnv.wrapping_mul(0x100000001b3);
-            }
-        }
+        sum.update(&out);
     }
-    println!("results checksum: {fnv:#018x}");
+    println!("results checksum: {:#018x}", sum.value());
     // the result-cache banner: how much traffic resolved before routing
     if let Some(cs) = svc.cache_stats() {
         println!(
@@ -394,5 +445,20 @@ fn main() {
                 );
             }
         }
+    }
+    // FFGPU_RECORD: persist everything the recorder captured above
+    // (workload, checksum grid, any wire traffic) for later replays
+    if let (Some(path), Some(rec)) = (&record_path, &recorder) {
+        let trace = rec.trace();
+        trace
+            .save(path)
+            .unwrap_or_else(|e| panic!("save trace {}: {e}", path.display()));
+        println!(
+            "trace recorded: {} ({} records, {} bytes, dropped: {})",
+            path.display(),
+            trace.records.len(),
+            rec.bytes(),
+            rec.dropped()
+        );
     }
 }

@@ -71,14 +71,18 @@
 //! [`Topology::detect`], so cross-PR comparisons know when the host
 //! could not express locality at all.
 
+#[path = "../tests/common/mod.rs"]
+mod common;
+
+use common::WorkloadGen;
 use ffgpu::backend::{
     BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
 };
 use ffgpu::coordinator::{
-    NumaMode, ObservatorySpec, Plan, Routing, Service, ServiceSpec, Topology,
+    replay, NumaMode, ObservatorySpec, Plan, Routing, Service, ServiceSpec, Topology,
+    Trace,
 };
 use ffgpu::ff::vector;
-use ffgpu::harness::workload;
 use ffgpu::net::{
     AdmissionConfig, ClassLimits, ClientClass, WireClient, WireConfig, WireError,
     WireServer,
@@ -179,6 +183,21 @@ struct DataPathRow {
     scatter_ms: f64,
 }
 
+/// One `replay` row of `BENCH_coordinator.json`: the committed golden
+/// trace re-driven against one serving configuration. The results
+/// checksum is asserted identical across configurations — routing,
+/// fusion and caching may move latency, never bits.
+struct ReplayBenchRow {
+    config: &'static str,
+    records: usize,
+    rate: f64,
+    wall_s: f64,
+    padding_waste: f64,
+    cache_hit_rate: f64,
+    results_fnv: u64,
+    p95_ms_max: f64,
+}
+
 /// The `numa` section of `BENCH_coordinator.json`: pinned-vs-unpinned
 /// rows plus the host's topology verdict.
 struct NumaSection {
@@ -236,10 +255,11 @@ fn run_case(
     // before snapshotting: metrics for a batch land *after* its reply,
     // so an immediate snapshot would race and charge warmup cost to the
     // measured phase
+    let wl = WorkloadGen::from_env(label);
     let h = svc.handle();
     for i in 0..shards.max(1) * 2 {
         let op = if mixed_ops { MIX_OPS[i % MIX_OPS.len()] } else { Op::Add22 };
-        let planes = workload::planes_for(op.name(), req_n, 1 + i as u64);
+        let planes = wl.planes(op, req_n, 1 + i as u64);
         h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
     }
     std::thread::sleep(Duration::from_millis(50));
@@ -260,7 +280,7 @@ fn run_case(
                 } else {
                     Op::Add22
                 };
-                let planes = workload::planes_for(op.name(), req_n, rng.next_u64());
+                let planes = wl.planes(op, req_n, rng.next_u64());
                 let t = Instant::now();
                 let ticket = h.dispatch(Plan::new(op, planes).unwrap()).unwrap();
                 let shard = ticket.shard();
@@ -375,11 +395,12 @@ fn observatory_rows() -> Vec<AccRow> {
             .with_observatory(ObservatorySpec::new(1.0, ["nv35", "r300", "chopped"])),
     )
     .unwrap();
+    let wl = WorkloadGen::from_env("observatory");
     let h = svc.handle();
     let ops = [Op::Add12, Op::Mul12, Op::Add22, Op::Mul22];
     for op in ops {
         for round in 0..4u64 {
-            let planes = workload::planes_for(op.name(), 2048, 0xACC + round);
+            let planes = wl.planes(op, 2048, 0xACC + round);
             h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
         }
     }
@@ -411,9 +432,11 @@ fn observatory_rows() -> Vec<AccRow> {
         .collect()
 }
 
+#[allow(clippy::too_many_arguments)] // one sink, one section per instrument
 fn emit_json(
     rows: &[Row], tiers: &[TierRow], accuracy: &[AccRow], wire: &[WireRow],
     cache: &[CacheRow], data_path: &[DataPathRow], numa: &NumaSection,
+    replay_rows: &[ReplayBenchRow],
 ) {
     let mut out = String::from(
         "{\n  \"bench\": \"coordinator\",\n  \"unit\": {\"req_per_s\": \"requests/s\", \
@@ -578,19 +601,40 @@ fn emit_json(
             if i + 1 < numa.rows.len() { "," } else { "" },
         ));
     }
-    out.push_str("    ]\n  }\n}\n");
+    // the golden trace re-driven per serving configuration: a fixed
+    // recorded workload, so routing/fuse/cache quality is comparable
+    // across PRs without synthetic-load noise
+    out.push_str("    ]\n  },\n  \"replay\": [\n");
+    for (i, r) in replay_rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"config\": \"{}\", \"records\": {}, \"rate\": {:.1}, \
+             \"wall_s\": {:.4}, \"padding_waste\": {:.4}, \"cache_hit_rate\": {:.4}, \
+             \"p95_ms_max\": {:.3}, \"results_fnv\": \"{:#018x}\"}}{}\n",
+            r.config,
+            r.records,
+            r.rate,
+            r.wall_s,
+            r.padding_waste,
+            r.cache_hit_rate,
+            r.p95_ms_max,
+            r.results_fnv,
+            if i + 1 < replay_rows.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]\n}\n");
     let path = "BENCH_coordinator.json";
     match std::fs::write(path, &out) {
         Ok(()) => println!(
             "\nwrote {path} ({} rows, {} tier cells, {} accuracy cells, {} wire rows, \
-             {} cache rows, {} data-path rows, {} numa rows)",
+             {} cache rows, {} data-path rows, {} numa rows, {} replay rows)",
             rows.len(),
             tiers.len(),
             accuracy.len(),
             wire.len(),
             cache.len(),
             data_path.len(),
-            numa.rows.len()
+            numa.rows.len(),
+            replay_rows.len()
         ),
         Err(e) => println!("\ncould not write {path}: {e}"),
     }
@@ -645,9 +689,10 @@ fn scoped_pool_execute(
 fn exec_rows() -> Vec<Row> {
     println!("== native execute ≤16k: scoped spawn-per-batch baseline vs persistent crew");
     let (op, chunk, workers, reps) = (Op::Add22, 2048usize, 4usize, 400usize);
+    let wl = WorkloadGen::from_env("exec_rows");
     let mut rows = Vec::new();
     for req_n in [4096usize, 8192, 16384] {
-        let planes = workload::planes_for(op.name(), req_n, 0xE8EC);
+        let planes = wl.planes(op, req_n, 0xE8EC);
         let refs: Vec<&[f32]> = planes.iter().map(Vec::as_slice).collect();
         let job = ExecJob::new(op, planes.clone()).unwrap();
         let mut outs = vec![vec![0.0f32; req_n]; op.n_out()];
@@ -717,6 +762,7 @@ fn kernel_tier_rows() -> Vec<TierRow> {
     );
     let ops = [Op::Add22, Op::Mul22, Op::Mul12, Op::Div22, Op::Mad22];
     let sizes = [65_536usize, 1_048_576];
+    let wl = WorkloadGen::from_env("kernel_tiers");
     let mut rows = Vec::new();
     for tier in KernelTier::ALL {
         if !tier.available() {
@@ -728,7 +774,7 @@ fn kernel_tier_rows() -> Vec<TierRow> {
         let mut be = NativeBackend::with_tier(1 << 22, 1, Some(tier));
         for &n in &sizes {
             for op in ops {
-                let planes = workload::planes_for(op.name(), n, 0x71E2);
+                let planes = wl.planes(op, n, 0x71E2);
                 let job = ExecJob::new(op, planes).unwrap();
                 let mut outs = vec![vec![0.0f32; n]; op.n_out()];
                 be.execute(&job, &mut outs).unwrap(); // warmup
@@ -775,6 +821,7 @@ fn kernel_tier_rows() -> Vec<TierRow> {
 fn wire_rows() -> Vec<WireRow> {
     println!("== wire front end: loopback TCP vs in-process, and token-bucket pushback");
     let (clients, req_n, rounds) = (4usize, 4096usize, 50usize);
+    let wl = WorkloadGen::from_env("wire_rows");
     let mut rows = Vec::new();
 
     let svc = Service::start(ServiceSpec::uniform(BackendSpec::native(), 2)).unwrap();
@@ -791,7 +838,7 @@ fn wire_rows() -> Vec<WireRow> {
             let mut rng = Rng::new(0xB135 + c as u64);
             let mut lats = Vec::with_capacity(rounds);
             for _ in 0..rounds {
-                let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                let planes = wl.planes(Op::Add22, req_n, rng.next_u64());
                 let t = Instant::now();
                 h.dispatch(Plan::new(Op::Add22, planes).unwrap())
                     .unwrap()
@@ -831,7 +878,7 @@ fn wire_rows() -> Vec<WireRow> {
             let mut rng = Rng::new(0xC135 + c as u64);
             let mut lats = Vec::with_capacity(rounds);
             for _ in 0..rounds {
-                let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                let planes = wl.planes(Op::Add22, req_n, rng.next_u64());
                 let t = Instant::now();
                 cli.call(Op::Add22, planes, None).unwrap();
                 lats.push(t.elapsed().as_secs_f64());
@@ -883,7 +930,7 @@ fn wire_rows() -> Vec<WireRow> {
     let mut lats = Vec::new();
     let t0 = Instant::now();
     for _ in 0..hog_rounds {
-        let planes = workload::planes_for("add22", hog_n, rng.next_u64());
+        let planes = wl.planes(Op::Add22, hog_n, rng.next_u64());
         let t = Instant::now();
         match cli.call(Op::Add22, planes, None) {
             Ok(_) => {
@@ -932,7 +979,8 @@ const CACHE_OPS: [Op; 3] = [Op::Add22, Op::Mul22, Op::Div22];
 /// `warm_seed` set every thread draws from the same fixed grid per op
 /// (repeats → hits); without it every grid is distinct (→ misses).
 fn cache_phase(
-    svc: &Service, clients: usize, rounds: usize, req_n: usize, warm_seed: Option<u64>,
+    svc: &Service, wl: WorkloadGen, clients: usize, rounds: usize, req_n: usize,
+    warm_seed: Option<u64>,
 ) -> (Vec<f64>, f64) {
     let t0 = Instant::now();
     let mut joins = Vec::new();
@@ -943,8 +991,8 @@ fn cache_phase(
             let mut lats = Vec::with_capacity(rounds);
             for round in 0..rounds {
                 let op = CACHE_OPS[(c + round) % CACHE_OPS.len()];
-                let seed = warm_seed.unwrap_or_else(|| rng.next_u64());
-                let planes = workload::planes_for(op.name(), req_n, seed);
+                let case = warm_seed.unwrap_or_else(|| rng.next_u64());
+                let planes = wl.planes(op, req_n, case);
                 let t = Instant::now();
                 h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
                 lats.push(t.elapsed().as_secs_f64());
@@ -970,6 +1018,7 @@ fn cache_rows() -> Vec<CacheRow> {
     println!("== result cache: cold distinct grids vs warm repeated grids (single-worker shard)");
     let mut rows = Vec::new();
     let clients = 4usize;
+    let wl = WorkloadGen::from_env("cache_rows");
     for (req_n, rounds) in [(65_536usize, 40usize), (1_048_576, 8)] {
         let svc = Service::start(
             ServiceSpec::uniform(BackendSpec::native_single(), 1).with_cache_mb(512),
@@ -977,15 +1026,13 @@ fn cache_rows() -> Vec<CacheRow> {
         .unwrap();
         let h = svc.handle();
         // shard warmup (crew spin-up, page faults) — one distinct grid
-        h.dispatch(
-            Plan::new(Op::Div22, workload::planes_for("div22", req_n, 0xFEED)).unwrap(),
-        )
-        .unwrap()
-        .wait()
-        .unwrap();
+        h.dispatch(Plan::new(Op::Div22, wl.planes(Op::Div22, req_n, 0xFEED)).unwrap())
+            .unwrap()
+            .wait()
+            .unwrap();
 
         let base = svc.cache_stats().unwrap();
-        let (cold_lats, cold_wall) = cache_phase(&svc, clients, rounds, req_n, None);
+        let (cold_lats, cold_wall) = cache_phase(&svc, wl, clients, rounds, req_n, None);
         let after_cold = svc.cache_stats().unwrap();
         let cold = CacheRow {
             scenario: "cache-cold",
@@ -1002,12 +1049,12 @@ fn cache_rows() -> Vec<CacheRow> {
 
         // prime one grid per op, then measure pure repeats
         for op in CACHE_OPS {
-            let planes = workload::planes_for(op.name(), req_n, 0x5EED);
+            let planes = wl.planes(op, req_n, 0x5EED);
             h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
         }
         let primed = svc.cache_stats().unwrap();
         let (warm_lats, warm_wall) =
-            cache_phase(&svc, clients, rounds, req_n, Some(0x5EED));
+            cache_phase(&svc, wl, clients, rounds, req_n, Some(0x5EED));
         let after_warm = svc.cache_stats().unwrap();
         let warm = CacheRow {
             scenario: "cache-warm",
@@ -1059,6 +1106,7 @@ fn cache_rows() -> Vec<CacheRow> {
 fn ladder_rows() -> Vec<CacheRow> {
     println!("== fuse ladder: static vs waste-fed adaptive (6000-lane add22 stream)");
     let (req_n, rounds) = (6000usize, 40usize);
+    let wl = WorkloadGen::from_env("ladder_rows");
     let mut rows = Vec::new();
     let mut pfs = Vec::new();
     for (adaptive, scenario) in [(false, "ladder-static"), (true, "ladder-adaptive")] {
@@ -1074,7 +1122,7 @@ fn ladder_rows() -> Vec<CacheRow> {
         let mut lats = Vec::with_capacity(rounds);
         let t0 = Instant::now();
         for _ in 0..rounds {
-            let planes = workload::planes_for("add22", req_n, rng.next_u64());
+            let planes = wl.planes(Op::Add22, req_n, rng.next_u64());
             let t = Instant::now();
             h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap().wait().unwrap();
             lats.push(t.elapsed().as_secs_f64());
@@ -1122,6 +1170,7 @@ fn ladder_rows() -> Vec<CacheRow> {
 fn data_path_rows() -> Vec<DataPathRow> {
     println!("== data path: gather/execute/scatter split (staged crew vs serial workers=1)");
     let (clients, req_n, rounds) = (4usize, 2048usize, 30usize);
+    let wl = WorkloadGen::from_env("data_path_rows");
     let mut rows = Vec::new();
     for (mode, workers) in [("staged", 4usize), ("serial", 1)] {
         let spec = ServiceSpec::uniform(
@@ -1139,7 +1188,7 @@ fn data_path_rows() -> Vec<DataPathRow> {
                 let mut rng = Rng::new(0xDA7A + c as u64);
                 for round in 0..rounds {
                     let op = MIX_OPS[(c + round) % MIX_OPS.len()];
-                    let planes = workload::planes_for(op.name(), req_n, rng.next_u64());
+                    let planes = wl.planes(op, req_n, rng.next_u64());
                     h.dispatch(Plan::new(op, planes).unwrap()).unwrap().wait().unwrap();
                 }
             }));
@@ -1183,6 +1232,7 @@ fn numa_rows() -> NumaSection {
         if single_node { "  [single-node host: pinning is a no-op]" } else { "" }
     );
     let (clients, req_n, rounds) = (4usize, 65_536usize, 30usize);
+    let wl = WorkloadGen::from_env("numa_rows");
     let mut rows = Vec::new();
     for (mode, label) in [(NumaMode::Auto, "auto"), (NumaMode::Off, "off")] {
         let svc = Service::start(
@@ -1192,13 +1242,10 @@ fn numa_rows() -> NumaSection {
         let h = svc.handle();
         // warmup: touch both shards, fault the arenas in
         for i in 0..4u64 {
-            h.dispatch(
-                Plan::new(Op::Add22, workload::planes_for("add22", req_n, 1 + i))
-                    .unwrap(),
-            )
-            .unwrap()
-            .wait()
-            .unwrap();
+            h.dispatch(Plan::new(Op::Add22, wl.planes(Op::Add22, req_n, 1 + i)).unwrap())
+                .unwrap()
+                .wait()
+                .unwrap();
         }
         let t0 = Instant::now();
         let mut joins = Vec::new();
@@ -1208,7 +1255,7 @@ fn numa_rows() -> NumaSection {
                 let mut rng = Rng::new(0x40DE + c as u64);
                 let mut lats = Vec::with_capacity(rounds);
                 for _ in 0..rounds {
-                    let planes = workload::planes_for("add22", req_n, rng.next_u64());
+                    let planes = wl.planes(Op::Add22, req_n, rng.next_u64());
                     let t = Instant::now();
                     h.dispatch(Plan::new(Op::Add22, planes).unwrap())
                         .unwrap()
@@ -1251,6 +1298,70 @@ fn numa_rows() -> NumaSection {
     NumaSection { single_node, rows }
 }
 
+/// Trace-replay instrument: the committed golden trace re-driven at
+/// 16x against the routing/fuse/cache configurations the earlier
+/// sections measured with synthetic load — so those sections are also
+/// machine-comparable on a *fixed recorded workload* across PRs. The
+/// per-config results checksums are asserted equal: serving
+/// configuration may change placement and timing, never reply bits.
+fn replay_rows() -> Vec<ReplayBenchRow> {
+    println!("== trace replay: golden trace vs serving configurations (16x)");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("traces/golden.fftrace");
+    let trace = match Trace::load(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("  (skipping: cannot load {}: {e})", path.display());
+            return Vec::new();
+        }
+    };
+    let configs: Vec<(&'static str, ServiceSpec)> = vec![
+        ("single-rr", ServiceSpec::uniform(BackendSpec::native_single(), 1)),
+        (
+            "sharded-measured",
+            ServiceSpec::uniform(BackendSpec::native(), 2).with_routing(Routing::Measured),
+        ),
+        (
+            "fused-cached",
+            ServiceSpec::uniform(BackendSpec::native(), 2)
+                .with_fuse_window(Duration::from_millis(1))
+                .with_fuse_sizes(vec![1024, 4096, 16384, 65536])
+                .with_cache_mb(64),
+        ),
+    ];
+    let mut rows = Vec::new();
+    for (config, spec) in configs {
+        let svc = Service::start(spec).unwrap();
+        let rep = replay(&svc, &trace, 16.0).unwrap();
+        let p95_ms_max = rep.per_op.iter().map(|r| r.p95_ms).fold(0.0f64, f64::max);
+        println!(
+            "  {config:<16} {} records at {:.0}x: wall={:.3}s pad={:>4.1}% \
+             cache-hit={:>3.0}% worst-p95={:.2}ms fnv={:#018x}",
+            rep.records,
+            rep.rate,
+            rep.wall_s,
+            rep.padding_waste * 100.0,
+            rep.cache_hit_rate * 100.0,
+            p95_ms_max,
+            rep.results_fnv,
+        );
+        rows.push(ReplayBenchRow {
+            config,
+            records: rep.records,
+            rate: rep.rate,
+            wall_s: rep.wall_s,
+            padding_waste: rep.padding_waste,
+            cache_hit_rate: rep.cache_hit_rate,
+            results_fnv: rep.results_fnv,
+            p95_ms_max,
+        });
+    }
+    assert!(
+        rows.windows(2).all(|w| w[0].results_fnv == w[1].results_fnv),
+        "replay results checksum must be config-independent"
+    );
+    rows
+}
+
 /// A 1 ms-deadline ticket against a saturated shard must resolve
 /// `DeadlineExceeded` promptly — and the shard must survive to serve
 /// the next request (the ROADMAP's "a stuck canary can't hold a
@@ -1259,19 +1370,20 @@ fn deadline_demo() {
     println!("== deadline: 1 ms ticket against a saturated gpusim shard");
     let svc =
         Service::start(ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1)).unwrap();
+    let wl = WorkloadGen::from_env("deadline_demo");
     let h = svc.handle();
     // saturate: one big soft-float batch keeps the shard busy for a
     // while (the interpretive VM needs well over the sleep+deadline
     // even on a fast host)
     let sat = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 400_000, 1)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 400_000, 1)).unwrap())
         .unwrap();
     // let the shard drain the saturating request into execution (if it
     // somehow hasn't, the probe is batched with it and merely executes
     // — the client-side deadline verdict below holds either way)
     std::thread::sleep(Duration::from_millis(50));
     let probe = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 4096, 2)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 4096, 2)).unwrap())
         .unwrap()
         .deadline(Duration::from_millis(1));
     let t0 = Instant::now();
@@ -1285,7 +1397,7 @@ fn deadline_demo() {
     // the saturating request still completes...
     sat.wait().unwrap();
     // ...and the shard is alive for new work
-    h.dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 1024, 3)).unwrap())
+    h.dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 1024, 3)).unwrap())
         .unwrap()
         .wait()
         .unwrap();
@@ -1458,5 +1570,8 @@ fn main() {
     let data_path = data_path_rows();
     let numa = numa_rows();
 
-    emit_json(&rows, &tiers, &accuracy, &wire, &cache, &data_path, &numa);
+    // the golden trace across serving configurations
+    let replays = replay_rows();
+
+    emit_json(&rows, &tiers, &accuracy, &wire, &cache, &data_path, &numa, &replays);
 }

@@ -65,7 +65,16 @@
 //!   repeated requests resolve from memory before routing, concurrent
 //!   identical misses coalesce single-flight behind one execution, and
 //!   a byte-budgeted segmented LRU bounds residency — all invisible to
-//!   routing telemetry and the observatory sampler.
+//!   routing telemetry and the observatory sampler;
+//! * the **trace recorder/replayer** ([`trace`]) captures live traffic
+//!   at the dispatch boundary into a compact versioned binary trace
+//!   ([`trace::TraceRecorder`], drop-not-block past a byte budget) and
+//!   re-drives any trace deterministically at 1×/N× speed against an
+//!   arbitrary shard/routing/fuse/cache configuration
+//!   ([`trace::replay`]), producing a [`trace::ReplayReport`] whose
+//!   results checksum and verdict counts back the CI replay gate.
+//!   Recording, like cache hits and mirrors, is invisible to routing
+//!   telemetry and the observatory.
 //!
 //! The seed's stringly-typed surface — `Handle::submit("add22", ...)`,
 //! `Handle::call`, the single-spec `ServiceConfig` — is gone: the last
@@ -86,6 +95,7 @@ pub mod plan;
 pub mod request;
 pub mod routing;
 pub mod service;
+pub mod trace;
 
 pub use crate::backend::Op;
 pub use cache::{CacheStats, ResultCache};
@@ -99,3 +109,7 @@ pub use request::OpRequest;
 pub use crate::backend::{NumaMode, Topology};
 pub use routing::{Routing, RoutingPolicy, TelemetryView};
 pub use service::{Handle, Service, ServiceSpec, PAPER_FUSE_SIZES};
+pub use trace::{
+    replay, OpReplayRow, Payload, ReplayReport, ResultChecksum, Trace, TraceError,
+    TraceRecord, TraceRecorder, Verdict,
+};

@@ -40,6 +40,7 @@ use super::observatory::{
 use super::plan::{Plan, Ticket, TicketState};
 use super::request::OpRequest;
 use super::routing::{Routing, RoutingPolicy, ShardMeta, TelemetryView};
+use super::trace::TraceRecorder;
 use crate::backend::{
     fingerprint, BackendSpec, BufferPool, ExecJob, KernelBackend, LaunchOut, NumaMode,
     Op, ServiceError, Topology,
@@ -115,6 +116,14 @@ pub struct ServiceSpec {
     /// ([`Topology::assign`]) — a clean no-op on single-node hosts.
     /// An explicit per-shard `node` always wins over the mode.
     pub numa: Option<NumaMode>,
+    /// Arm a live traffic recorder
+    /// ([`crate::coordinator::trace::TraceRecorder`]): every dispatch
+    /// is captured at the coordinator boundary — before the cache
+    /// lookup, the observatory sampler and the routing policy — so
+    /// recording is invisible to shard telemetry, and past its byte
+    /// budget the recorder drops instead of blocking. `None` (the
+    /// default) serves without recording.
+    pub recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl Default for ServiceSpec {
@@ -136,6 +145,7 @@ impl ServiceSpec {
             cache_mb: 0,
             adaptive_ladder: false,
             numa: None,
+            recorder: None,
         }
     }
 
@@ -194,6 +204,14 @@ impl ServiceSpec {
     /// overriding `FFGPU_NUMA`.
     pub fn with_numa(mut self, mode: NumaMode) -> ServiceSpec {
         self.numa = Some(mode);
+        self
+    }
+
+    /// Arm a live traffic recorder (see [`ServiceSpec::recorder`]).
+    /// The caller keeps its own `Arc` clone to snapshot the trace
+    /// ([`TraceRecorder::trace`]) while the service runs.
+    pub fn with_recorder(mut self, recorder: Arc<TraceRecorder>) -> ServiceSpec {
+        self.recorder = Some(recorder);
         self
     }
 
@@ -266,6 +284,7 @@ pub struct Service {
     obs_join: Option<JoinHandle<()>>,
     tenants: Arc<TenantLedger>,
     cache: Option<Arc<ResultCache>>,
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 /// Cheap cloneable submission handle; placement is delegated to the
@@ -278,6 +297,7 @@ pub struct Handle {
     obs: Option<ObsLink>,
     tenants: Arc<TenantLedger>,
     cache: Option<Arc<ResultCache>>,
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl Handle {
@@ -287,7 +307,7 @@ impl Handle {
     /// a lane.
     fn submit_to_shard(
         &self, op: Op, inputs: Vec<Arc<Vec<f32>>>, len: usize,
-        mut fill: Option<CacheFill>,
+        mut fill: Option<CacheFill>, deadline: Option<Duration>,
     ) -> Result<Ticket, ServiceError> {
         let view = TelemetryView::new(&self.meta);
         let shard = self.policy.route(op, len, &view) % self.txs.len();
@@ -298,6 +318,13 @@ impl Handle {
         }
         let (reply, rx) = mpsc::channel();
         let state = Arc::new(TicketState::new());
+        // arm the deadline *before* the request enters the shard queue:
+        // the shard's lifecycle triage then sees it on first contact, so
+        // an already-expired deadline (e.g. a replayed zero-deadline
+        // record) is deterministically skipped, never raced
+        if let Some(d) = deadline {
+            state.set_deadline(d);
+        }
         let req = OpRequest { op, inputs, reply, ctrl: state.clone(), fill };
         self.meta[shard].enter();
         if self.txs[shard].send(Msg::Submit(req)).is_err() {
@@ -328,12 +355,34 @@ impl Handle {
     /// expiry, and an explicit [`Ticket::cancel`] still wins) exactly
     /// as if a shard had replied instantly.
     pub fn dispatch(&self, plan: Plan) -> Result<Ticket, ServiceError> {
+        self.dispatch_inner(plan, "", None)
+    }
+
+    /// The shared dispatch body behind [`Handle::dispatch`],
+    /// [`Handle::dispatch_tagged`] and
+    /// [`Handle::dispatch_tagged_deadline`].
+    ///
+    /// With a trace recorder armed ([`ServiceSpec::recorder`]), the
+    /// request is logged here — before the cache lookup, before the
+    /// sampler ticks and before routing — so the capture is complete
+    /// (cache hits are requests too) and provably invisible: the
+    /// recorder appends to its own buffer and never touches shard
+    /// telemetry, queue depths or the observatory.
+    fn dispatch_inner(
+        &self, plan: Plan, tenant: &str, deadline: Option<Duration>,
+    ) -> Result<Ticket, ServiceError> {
+        if let Some(rec) = &self.recorder {
+            rec.log(plan.op(), plan.inputs(), tenant, deadline);
+        }
         let (op, raw, len) = plan.into_parts();
         let mut fill = None;
         if let Some(cache) = &self.cache {
             let key = fingerprint(op, &raw);
             let (reply, rx) = mpsc::channel();
             let state = Arc::new(TicketState::new());
+            if let Some(d) = deadline {
+                state.set_deadline(d);
+            }
             match cache.begin(op, key, &reply, &state) {
                 Decision::Hit { planes, shard } => {
                     let _ = reply.send(Ok(planes.as_ref().clone()));
@@ -355,7 +404,7 @@ impl Handle {
             Some(o) if o.ctl.sample() => Some(inputs.clone()),
             _ => None,
         };
-        let ticket = self.submit_to_shard(op, inputs, len, fill)?;
+        let ticket = self.submit_to_shard(op, inputs, len, fill, deadline)?;
         if let (Some(o), Some(planes)) = (&self.obs, mirror) {
             o.send_mirror(op, planes, len, None);
         }
@@ -369,7 +418,31 @@ impl Handle {
     /// account per-client traffic without wrapping the handle.
     pub fn dispatch_tagged(&self, tenant: &str, plan: Plan) -> Result<Ticket, ServiceError> {
         self.tenants.record_dispatch(tenant, plan.len() as u64);
-        self.dispatch(plan)
+        self.dispatch_inner(plan, tenant, None)
+    }
+
+    /// [`Handle::dispatch_tagged`] with a deadline armed **before**
+    /// the request enters a shard queue (measured from dispatch).
+    /// Arming early matters twice: the fuse window's tightest-deadline
+    /// check sees the bound from the first drain, and an
+    /// already-expired deadline (a replayed zero-deadline record) is
+    /// deterministically triaged to
+    /// [`ServiceError::DeadlineExceeded`] instead of racing the shard.
+    /// The wire front end and [`super::trace::replay`] both dispatch
+    /// through here; with a recorder armed the deadline is captured in
+    /// the trace record.
+    pub fn dispatch_tagged_deadline(
+        &self, tenant: &str, plan: Plan, deadline: Option<Duration>,
+    ) -> Result<Ticket, ServiceError> {
+        self.tenants.record_dispatch(tenant, plan.len() as u64);
+        self.dispatch_inner(plan, tenant, deadline)
+    }
+
+    /// The armed trace recorder, if any ([`ServiceSpec::recorder`]) —
+    /// front ends use this to annotate tenants
+    /// ([`TraceRecorder::note_class`]) and snapshot the capture.
+    pub fn trace_recorder(&self) -> Option<&Arc<TraceRecorder>> {
+        self.recorder.as_ref()
     }
 
     /// The per-tenant attribution ledger (shared with the service).
@@ -397,8 +470,10 @@ impl Handle {
         let inputs: Vec<Arc<Vec<f32>>> = raw.into_iter().map(Arc::new).collect();
         let mirror_planes = inputs.clone();
         // forced-measurement path: bypass the cache (no lookup, no
-        // fill) so the shard genuinely executes what the mirror diffs
-        let ticket = self.submit_to_shard(op, inputs, len, None)?;
+        // fill) *and* the trace recorder — mirrored probes are
+        // instrumentation, not client traffic, so replaying a trace
+        // must not replay them
+        let ticket = self.submit_to_shard(op, inputs, len, None, None)?;
         let (rtx, rrx) = mpsc::channel();
         if !obs.send_mirror(op, mirror_planes, len, Some(rtx.clone())) {
             // observatory gone (service shutting down): deliver the
@@ -474,6 +549,7 @@ impl Service {
         };
         let cache = (spec.cache_mb > 0)
             .then(|| Arc::new(ResultCache::with_budget(spec.cache_mb << 20)));
+        let recorder = spec.recorder.clone();
         // resolve NUMA placement into the per-shard specs, once, here:
         // an explicit per-shard pin wins; unpinned native shards get a
         // node from the mode (round-robin over the host topology under
@@ -550,6 +626,7 @@ impl Service {
             obs_join,
             tenants,
             cache,
+            recorder,
         })
     }
 
@@ -561,6 +638,7 @@ impl Service {
             obs: self.obs.clone(),
             tenants: self.tenants.clone(),
             cache: self.cache.clone(),
+            recorder: self.recorder.clone(),
         }
     }
 
@@ -663,6 +741,11 @@ impl Service {
     /// cache is armed ([`ServiceSpec::cache_mb`] = 0).
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.stats())
+    }
+
+    /// The armed trace recorder, if any ([`ServiceSpec::recorder`]).
+    pub fn trace_recorder(&self) -> Option<&Arc<TraceRecorder>> {
+        self.recorder.as_ref()
     }
 
     /// Name of the active routing policy.

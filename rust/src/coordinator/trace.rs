@@ -1,0 +1,1118 @@
+//! Trace record/replay: deterministic regression gates over the
+//! serving stack.
+//!
+//! The paper's Tables 2–5 are one-shot measurements; this module turns
+//! the reproduction's serving surface into a **replayable** one. A
+//! [`TraceRecorder`] armed on
+//! [`ServiceSpec::recorder`](super::service::ServiceSpec::recorder)
+//! captures every
+//! dispatch at the coordinator boundary — operator, shape, plane
+//! payload (inline bits, a content fingerprint, or a generator seed),
+//! arrival offset, deadline, tenant and traffic class — into a compact
+//! versioned binary trace ([`Trace`]). [`replay`] then re-drives any
+//! trace against an arbitrary shard-spec/routing/fuse/cache
+//! configuration at 1×/N× speed and produces a [`ReplayReport`]:
+//! per-op latency percentiles, padding waste, cache hit rate,
+//! shed/denial counts and an FNV results checksum.
+//!
+//! **Recording is invisible.** The hook runs before the cache lookup,
+//! before the observatory sampler ticks and before the routing policy
+//! sees the request; it appends to the recorder's own buffer and never
+//! touches shard telemetry (attempts/samples), queue depths or the
+//! sampler — the same isolation contract the result cache and the
+//! observatory mirrors obey, pinned by `tests/replay.rs`. Past its
+//! byte budget the recorder **drops, never blocks**: an inline record
+//! that would overflow degrades to a fingerprint-only record, and a
+//! record that still would not fit is counted and discarded.
+//!
+//! **Replay is deterministic.** Arrival *gaps* are scaled by the
+//! replay rate on a virtual clock (`virtual_ns = arrival_ns / rate`),
+//! but deadlines and cancel offsets are applied **unscaled** — a
+//! request recorded with a zero deadline misses at any speed, and a
+//! cancel-at-dispatch request resolves `Cancelled` at any speed, so
+//! verdicts are speed-robust. Replies are bit-identical regardless of
+//! routing, fusion packing or cache residency (the fusion stage's
+//! slice-back contract), so the folded results checksum
+//! ([`ReplayReport::results_fnv`] — verdict code plus per-reply FNV,
+//! folded in **record order**, independent of completion order) is
+//! identical run over run and config over config. The CI replay gate
+//! asserts exactly that over a committed golden trace.
+//!
+//! The byte grammar is pinned (`FFTR` v1, little-endian; see
+//! `DESIGN.md` §11): decoding is total — truncated or corrupt bytes
+//! fail with a typed [`TraceError`], never a panic — and encoding is
+//! canonical, so decode∘encode is the identity on bytes (pinned by
+//! `tests/trace_codec.rs`).
+
+use super::plan::Plan;
+use super::service::Service;
+use crate::backend::fingerprint::{FNV_OFFSET, FNV_PRIME};
+use crate::backend::{fingerprint, Op, ServiceError};
+use crate::harness::workload;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Trace file magic: `FFTR` (float-float trace).
+pub const TRACE_MAGIC: [u8; 4] = *b"FFTR";
+/// Current trace format version.
+pub const TRACE_VERSION: u16 = 1;
+/// Header flag bit 0: every record carries inline planes, so a replay
+/// can reproduce the recorded session bit for bit.
+pub const FLAG_ALL_INLINE: u16 = 1;
+
+/// Sentinel for "no deadline" / "never cancelled" nanosecond fields.
+pub const NS_NONE: u64 = u64::MAX;
+
+/// Hard per-record lane cap: decode refuses anything larger before
+/// allocating, so a corrupt length field cannot OOM the process.
+pub const MAX_LANES: u32 = 1 << 27;
+
+/// Traffic-class codes carried per record (the coordinator cannot see
+/// `net::Class`, so the wire layer maps into these).
+pub const CLASS_UNSPECIFIED: u8 = 0;
+pub const CLASS_INTERACTIVE: u8 = 1;
+pub const CLASS_STANDARD: u8 = 2;
+pub const CLASS_BULK: u8 = 3;
+const CLASS_MAX: u8 = CLASS_BULK;
+
+/// Typed trace codec failures — decoding is total, never a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TraceError {
+    /// The first four bytes are not `FFTR`.
+    BadMagic,
+    /// Unknown format version.
+    BadVersion(u16),
+    /// Unknown header flag bits, or a flag that contradicts the
+    /// records (canonical encodings derive flags from content).
+    BadFlags(u16),
+    /// The buffer ended inside the named field.
+    Truncated(&'static str),
+    /// Operator index outside the catalogue.
+    BadOp(u8),
+    /// Traffic-class code outside the known set.
+    BadClass(u8),
+    /// Verdict code outside the known set.
+    BadVerdict(u8),
+    /// Payload-kind code outside the known set.
+    BadPayloadKind(u8),
+    /// Tenant bytes are not UTF-8.
+    BadTenant,
+    /// Inline payload's plane count disagrees with the operator arity.
+    ArityMismatch { op: Op, got: u8 },
+    /// A record declared zero lanes.
+    ZeroLanes,
+    /// A record declared more lanes than [`MAX_LANES`].
+    TooLarge { lanes: u32 },
+    /// Well-formed records followed by unconsumed bytes.
+    TrailingBytes(usize),
+    /// Filesystem failure on [`Trace::save`] / [`Trace::load`].
+    Io(String),
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TraceError::BadMagic => write!(f, "bad trace magic (want FFTR)"),
+            TraceError::BadVersion(v) => write!(f, "unsupported trace version {v}"),
+            TraceError::BadFlags(x) => write!(f, "bad trace flags {x:#06x}"),
+            TraceError::Truncated(what) => write!(f, "trace truncated in {what}"),
+            TraceError::BadOp(c) => write!(f, "bad op code {c}"),
+            TraceError::BadClass(c) => write!(f, "bad class code {c}"),
+            TraceError::BadVerdict(c) => write!(f, "bad verdict code {c}"),
+            TraceError::BadPayloadKind(c) => write!(f, "bad payload kind {c}"),
+            TraceError::BadTenant => write!(f, "tenant bytes are not UTF-8"),
+            TraceError::ArityMismatch { op, got } => {
+                write!(f, "inline payload has {got} planes, {op} wants {}", op.n_in())
+            }
+            TraceError::ZeroLanes => write!(f, "record declares zero lanes"),
+            TraceError::TooLarge { lanes } => {
+                write!(f, "record declares {lanes} lanes (cap {MAX_LANES})")
+            }
+            TraceError::TrailingBytes(n) => {
+                write!(f, "{n} trailing bytes after the last record")
+            }
+            TraceError::Io(e) => write!(f, "trace io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+/// Outcome of one request, as recorded or as observed by a replay.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Verdict {
+    /// Not recorded (live recorders cannot see the future).
+    Unknown = 0,
+    Ok = 1,
+    DeadlineExceeded = 2,
+    Cancelled = 3,
+    /// Any other dispatch/execution error.
+    Error = 4,
+}
+
+impl Verdict {
+    pub const fn code(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_code(c: u8) -> Result<Verdict, TraceError> {
+        match c {
+            0 => Ok(Verdict::Unknown),
+            1 => Ok(Verdict::Ok),
+            2 => Ok(Verdict::DeadlineExceeded),
+            3 => Ok(Verdict::Cancelled),
+            4 => Ok(Verdict::Error),
+            _ => Err(TraceError::BadVerdict(c)),
+        }
+    }
+}
+
+/// How a record carries its input planes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// Content fingerprint of the original planes
+    /// ([`crate::backend::fingerprint`]): replay-vs-replay
+    /// deterministic (the fingerprint seeds the workload generator),
+    /// but not bit-comparable to the original session.
+    Fingerprint(u64),
+    /// The exact input planes: replays reproduce the recorded session
+    /// bit for bit, at `n_in × lanes × 4` bytes per record.
+    Inline(Vec<Vec<f32>>),
+    /// A [`workload::planes_for`] seed: compact and fully
+    /// deterministic — the shape golden traces use.
+    Seeded(u64),
+}
+
+impl Payload {
+    const KIND_FINGERPRINT: u8 = 0;
+    const KIND_INLINE: u8 = 1;
+    const KIND_SEEDED: u8 = 2;
+
+    fn kind(&self) -> u8 {
+        match self {
+            Payload::Fingerprint(_) => Self::KIND_FINGERPRINT,
+            Payload::Inline(_) => Self::KIND_INLINE,
+            Payload::Seeded(_) => Self::KIND_SEEDED,
+        }
+    }
+}
+
+/// One recorded dispatch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    pub op: Op,
+    /// Traffic class ([`CLASS_UNSPECIFIED`]..[`CLASS_BULK`]).
+    pub class: u8,
+    /// Tenant name (≤ 255 bytes; longer names are truncated at a char
+    /// boundary when recorded).
+    pub tenant: String,
+    /// Arrival offset from the start of the session, nanoseconds.
+    pub arrival_ns: u64,
+    /// Deadline from dispatch, nanoseconds; [`NS_NONE`] = none.
+    pub deadline_ns: u64,
+    /// Cancel offset after dispatch, nanoseconds; [`NS_NONE`] = never.
+    pub cancel_ns: u64,
+    /// Recorded outcome ([`Verdict::Unknown`] for live captures).
+    pub verdict: Verdict,
+    /// Elements per plane.
+    pub lanes: u32,
+    pub payload: Payload,
+}
+
+impl TraceRecord {
+    /// A seeded record: `lanes` lanes of `op` drawn by
+    /// [`workload::planes_for`] from `seed`.
+    pub fn seeded(op: Op, lanes: u32, seed: u64) -> TraceRecord {
+        TraceRecord {
+            op,
+            class: CLASS_UNSPECIFIED,
+            tenant: String::new(),
+            arrival_ns: 0,
+            deadline_ns: NS_NONE,
+            cancel_ns: NS_NONE,
+            verdict: Verdict::Unknown,
+            lanes,
+            payload: Payload::Seeded(seed),
+        }
+    }
+
+    /// An inline record carrying the exact planes.
+    pub fn inline(op: Op, planes: Vec<Vec<f32>>) -> TraceRecord {
+        let lanes = planes.first().map_or(0, |p| p.len()) as u32;
+        TraceRecord { lanes, payload: Payload::Inline(planes), ..TraceRecord::seeded(op, 0, 0) }
+    }
+
+    /// Set the arrival offset (builder-style).
+    pub fn at(mut self, arrival_ns: u64) -> TraceRecord {
+        self.arrival_ns = arrival_ns;
+        self
+    }
+
+    pub fn tenant(mut self, tenant: &str) -> TraceRecord {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    pub fn class(mut self, class: u8) -> TraceRecord {
+        self.class = class;
+        self
+    }
+
+    pub fn deadline_ns(mut self, ns: u64) -> TraceRecord {
+        self.deadline_ns = ns;
+        self
+    }
+
+    pub fn cancel_ns(mut self, ns: u64) -> TraceRecord {
+        self.cancel_ns = ns;
+        self
+    }
+
+    pub fn verdict(mut self, v: Verdict) -> TraceRecord {
+        self.verdict = v;
+        self
+    }
+
+    /// Materialise this record's input planes for a replay: inline
+    /// payloads clone their bits; seeded and fingerprint payloads run
+    /// the deterministic workload generator (the fingerprint doubles
+    /// as the seed — replay-vs-replay stable, not original-comparable).
+    pub fn planes(&self) -> Vec<Vec<f32>> {
+        match &self.payload {
+            Payload::Inline(p) => p.clone(),
+            Payload::Seeded(s) => {
+                workload::planes_for(self.op.name(), self.lanes as usize, *s)
+            }
+            Payload::Fingerprint(fp) => {
+                workload::planes_for(self.op.name(), self.lanes as usize, *fp)
+            }
+        }
+    }
+
+    /// Deadline as a `Duration`, when armed.
+    pub fn deadline(&self) -> Option<Duration> {
+        (self.deadline_ns != NS_NONE).then(|| Duration::from_nanos(self.deadline_ns))
+    }
+
+    /// Cancel offset as a `Duration`, when the request was abandoned.
+    pub fn cancel_after(&self) -> Option<Duration> {
+        (self.cancel_ns != NS_NONE).then(|| Duration::from_nanos(self.cancel_ns))
+    }
+
+    /// Exact encoded size in bytes (the recorder budgets against this).
+    pub fn encoded_len(&self) -> usize {
+        // op + class + verdict + kind + tenant_len
+        let mut n = 5 + self.tenant.len();
+        // arrival + deadline + cancel
+        n += 8 * 3;
+        // lanes
+        n += 4;
+        n += match &self.payload {
+            Payload::Fingerprint(_) | Payload::Seeded(_) => 8,
+            Payload::Inline(p) => 1 + p.iter().map(|v| v.len() * 4).sum::<usize>(),
+        };
+        n
+    }
+
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        debug_assert!(self.tenant.len() <= u8::MAX as usize);
+        out.push(self.op.index() as u8);
+        out.push(self.class);
+        out.push(self.verdict.code());
+        out.push(self.payload.kind());
+        out.push(self.tenant.len() as u8);
+        out.extend_from_slice(self.tenant.as_bytes());
+        out.extend_from_slice(&self.arrival_ns.to_le_bytes());
+        out.extend_from_slice(&self.deadline_ns.to_le_bytes());
+        out.extend_from_slice(&self.cancel_ns.to_le_bytes());
+        out.extend_from_slice(&self.lanes.to_le_bytes());
+        match &self.payload {
+            Payload::Fingerprint(x) | Payload::Seeded(x) => {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+            Payload::Inline(planes) => {
+                out.push(planes.len() as u8);
+                for p in planes {
+                    for v in p {
+                        out.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A cursor over raw trace bytes with typed truncation failures.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], TraceError> {
+        if self.buf.len() - self.pos < n {
+            return Err(TraceError::Truncated(what));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &'static str) -> Result<u8, TraceError> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u16(&mut self, what: &'static str) -> Result<u16, TraceError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self, what: &'static str) -> Result<u32, TraceError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &'static str) -> Result<u64, TraceError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+}
+
+/// A recorded session: an ordered list of [`TraceRecord`]s.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub records: Vec<TraceRecord>,
+}
+
+impl Trace {
+    pub fn new(records: Vec<TraceRecord>) -> Trace {
+        Trace { records }
+    }
+
+    /// Whether every record carries inline planes (so a replay can
+    /// reproduce the recorded session bit for bit).
+    pub fn all_inline(&self) -> bool {
+        !self.records.is_empty()
+            && self.records.iter().all(|r| matches!(r.payload, Payload::Inline(_)))
+    }
+
+    /// Canonical binary encoding (`FFTR` v1, little-endian). The flags
+    /// word is derived from the records, so equal traces encode to
+    /// equal bytes and decode∘encode is the identity.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            12 + self.records.iter().map(TraceRecord::encoded_len).sum::<usize>(),
+        );
+        out.extend_from_slice(&TRACE_MAGIC);
+        out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
+        let flags = if self.all_inline() { FLAG_ALL_INLINE } else { 0 };
+        out.extend_from_slice(&flags.to_le_bytes());
+        out.extend_from_slice(&(self.records.len() as u32).to_le_bytes());
+        for r in &self.records {
+            r.encode_into(&mut out);
+        }
+        out
+    }
+
+    /// Decode a trace; total — every malformation is a typed
+    /// [`TraceError`], never a panic, and no allocation happens before
+    /// the byte counts backing it are validated.
+    pub fn decode(bytes: &[u8]) -> Result<Trace, TraceError> {
+        let mut c = Cursor { buf: bytes, pos: 0 };
+        if c.take(4, "magic")? != TRACE_MAGIC {
+            return Err(TraceError::BadMagic);
+        }
+        let version = c.u16("version")?;
+        if version != TRACE_VERSION {
+            return Err(TraceError::BadVersion(version));
+        }
+        let flags = c.u16("flags")?;
+        if flags & !FLAG_ALL_INLINE != 0 {
+            return Err(TraceError::BadFlags(flags));
+        }
+        let count = c.u32("count")? as usize;
+        let mut records = Vec::new();
+        for _ in 0..count {
+            let op_code = c.u8("op")?;
+            let op = *Op::ALL.get(op_code as usize).ok_or(TraceError::BadOp(op_code))?;
+            let class = c.u8("class")?;
+            if class > CLASS_MAX {
+                return Err(TraceError::BadClass(class));
+            }
+            let verdict = Verdict::from_code(c.u8("verdict")?)?;
+            let kind = c.u8("payload kind")?;
+            let tenant_len = c.u8("tenant length")? as usize;
+            let tenant = std::str::from_utf8(c.take(tenant_len, "tenant")?)
+                .map_err(|_| TraceError::BadTenant)?
+                .to_string();
+            let arrival_ns = c.u64("arrival")?;
+            let deadline_ns = c.u64("deadline")?;
+            let cancel_ns = c.u64("cancel")?;
+            let lanes = c.u32("lanes")?;
+            if lanes == 0 {
+                return Err(TraceError::ZeroLanes);
+            }
+            if lanes > MAX_LANES {
+                return Err(TraceError::TooLarge { lanes });
+            }
+            let payload = match kind {
+                Payload::KIND_FINGERPRINT => Payload::Fingerprint(c.u64("fingerprint")?),
+                Payload::KIND_SEEDED => Payload::Seeded(c.u64("seed")?),
+                Payload::KIND_INLINE => {
+                    let n_planes = c.u8("plane count")?;
+                    if n_planes as usize != op.n_in() {
+                        return Err(TraceError::ArityMismatch { op, got: n_planes });
+                    }
+                    // length check before the alloc: a corrupt lanes
+                    // field must fail typed, not OOM
+                    let mut planes = Vec::with_capacity(n_planes as usize);
+                    for _ in 0..n_planes {
+                        let raw = c.take(lanes as usize * 4, "inline plane")?;
+                        let mut p = Vec::with_capacity(lanes as usize);
+                        for w in raw.chunks_exact(4) {
+                            p.push(f32::from_bits(u32::from_le_bytes(
+                                w.try_into().unwrap(),
+                            )));
+                        }
+                        planes.push(p);
+                    }
+                    Payload::Inline(planes)
+                }
+                other => return Err(TraceError::BadPayloadKind(other)),
+            };
+            records.push(TraceRecord {
+                op,
+                class,
+                tenant,
+                arrival_ns,
+                deadline_ns,
+                cancel_ns,
+                verdict,
+                lanes,
+                payload,
+            });
+        }
+        if c.pos != bytes.len() {
+            return Err(TraceError::TrailingBytes(bytes.len() - c.pos));
+        }
+        let trace = Trace { records };
+        // canonicality: the flags must say what the records say
+        let want = if trace.all_inline() { FLAG_ALL_INLINE } else { 0 };
+        if flags != want {
+            return Err(TraceError::BadFlags(flags));
+        }
+        Ok(trace)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<(), TraceError> {
+        std::fs::write(path, self.encode()).map_err(|e| TraceError::Io(e.to_string()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Trace, TraceError> {
+        let bytes =
+            std::fs::read(path).map_err(|e| TraceError::Io(e.to_string()))?;
+        Trace::decode(&bytes)
+    }
+
+    /// Per-op request counts, catalogue order (ops absent from the
+    /// trace are omitted).
+    pub fn op_counts(&self) -> Vec<(Op, u64)> {
+        let mut counts = [0u64; Op::COUNT];
+        for r in &self.records {
+            counts[r.op.index()] += 1;
+        }
+        Op::ALL
+            .iter()
+            .filter(|o| counts[o.index()] > 0)
+            .map(|o| (*o, counts[o.index()]))
+            .collect()
+    }
+}
+
+/// Streaming FNV-1a checksum over reply planes — the exact fold
+/// `serve_demo`'s results banner prints and the CI NUMA-diff job
+/// greps, now shared with the replay verifier and the replay gate.
+/// Order-sensitive: callers fold replies in a deterministic order.
+#[derive(Clone, Debug)]
+pub struct ResultChecksum {
+    fnv: u64,
+}
+
+impl Default for ResultChecksum {
+    fn default() -> Self {
+        ResultChecksum::new()
+    }
+}
+
+impl ResultChecksum {
+    pub fn new() -> ResultChecksum {
+        ResultChecksum { fnv: FNV_OFFSET }
+    }
+
+    /// Fold one reply's output planes, plane-major, lane order.
+    pub fn update(&mut self, planes: &[Vec<f32>]) {
+        for p in planes {
+            for v in p {
+                self.fnv ^= v.to_bits() as u64;
+                self.fnv = self.fnv.wrapping_mul(FNV_PRIME);
+            }
+        }
+    }
+
+    /// Fold one raw 64-bit word (verdict codes, sub-checksums).
+    pub fn update_word(&mut self, word: u64) {
+        self.fnv ^= word;
+        self.fnv = self.fnv.wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn value(&self) -> u64 {
+        self.fnv
+    }
+}
+
+/// Live traffic recorder, armed on
+/// [`ServiceSpec::recorder`](super::service::ServiceSpec::recorder)
+/// (`ServiceSpec::with_recorder`). Thread-safe; cloned `Arc`s share
+/// one buffer. Drop-not-block: see the module docs.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    budget: usize,
+    inline: bool,
+    inner: Mutex<RecorderInner>,
+    degraded: AtomicU64,
+    dropped: AtomicU64,
+}
+
+#[derive(Debug)]
+struct RecorderInner {
+    started: Instant,
+    records: Vec<TraceRecord>,
+    bytes: usize,
+    classes: BTreeMap<String, u8>,
+}
+
+impl TraceRecorder {
+    /// A recorder with a `budget_bytes` cap on the encoded trace.
+    /// `inline` records full plane bits (bit-exact replays, large
+    /// traces); otherwise each record carries a content fingerprint.
+    pub fn new(budget_bytes: usize, inline: bool) -> TraceRecorder {
+        TraceRecorder {
+            budget: budget_bytes,
+            inline,
+            inner: Mutex::new(RecorderInner {
+                started: Instant::now(),
+                records: Vec::new(),
+                bytes: 12, // header
+                classes: BTreeMap::new(),
+            }),
+            degraded: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Note `tenant`'s traffic class (the wire front end calls this at
+    /// `ClientHello`); subsequent records for that tenant carry it.
+    pub fn note_class(&self, tenant: &str, class: u8) {
+        let mut g = self.inner.lock().unwrap();
+        g.classes.insert(tenant.to_string(), class.min(CLASS_MAX));
+    }
+
+    /// Record one dispatch. Called by the coordinator at the dispatch
+    /// boundary — before cache, sampler and routing — so the capture
+    /// is complete and invisible. Never blocks on the budget: an
+    /// over-budget inline record degrades to fingerprint-only; a
+    /// record that still does not fit is dropped and counted.
+    pub fn log(
+        &self, op: Op, planes: &[Vec<f32>], tenant: &str, deadline: Option<Duration>,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        let arrival_ns =
+            u64::try_from(g.started.elapsed().as_nanos()).unwrap_or(u64::MAX - 1);
+        let lanes = planes.first().map_or(0, |p| p.len()) as u32;
+        if lanes == 0 || lanes > MAX_LANES {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut tenant = tenant;
+        if tenant.len() > u8::MAX as usize {
+            // truncate at a char boundary; recording must not fail
+            let mut cut = u8::MAX as usize;
+            while !tenant.is_char_boundary(cut) {
+                cut -= 1;
+            }
+            tenant = &tenant[..cut];
+        }
+        let class = g.classes.get(tenant).copied().unwrap_or(CLASS_UNSPECIFIED);
+        let base = TraceRecord {
+            op,
+            class,
+            tenant: tenant.to_string(),
+            arrival_ns,
+            deadline_ns: deadline
+                .map(|d| u64::try_from(d.as_nanos()).unwrap_or(NS_NONE - 1))
+                .unwrap_or(NS_NONE),
+            cancel_ns: NS_NONE,
+            verdict: Verdict::Unknown,
+            lanes,
+            payload: Payload::Fingerprint(0),
+        };
+        let mut rec = if self.inline {
+            TraceRecord { payload: Payload::Inline(planes.to_vec()), ..base.clone() }
+        } else {
+            TraceRecord { payload: Payload::Fingerprint(fingerprint(op, planes)), ..base.clone() }
+        };
+        if g.bytes + rec.encoded_len() > self.budget {
+            if matches!(rec.payload, Payload::Inline(_)) {
+                // degrade, then re-check the fingerprint-sized record
+                rec = TraceRecord {
+                    payload: Payload::Fingerprint(fingerprint(op, planes)),
+                    ..base
+                };
+                if g.bytes + rec.encoded_len() > self.budget {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                self.degraded.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        g.bytes += rec.encoded_len();
+        g.records.push(rec);
+    }
+
+    /// Snapshot the recorded session.
+    pub fn trace(&self) -> Trace {
+        Trace { records: self.inner.lock().unwrap().records.clone() }
+    }
+
+    /// Records captured so far.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Encoded bytes the captured trace will occupy.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// Records whose inline planes were degraded to fingerprints by
+    /// the byte budget.
+    pub fn degraded(&self) -> u64 {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Records discarded outright by the byte budget.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-op replay outcome row.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OpReplayRow {
+    pub op: &'static str,
+    pub requests: u64,
+    pub ok: u64,
+    pub deadline_exceeded: u64,
+    pub cancelled: u64,
+    pub errors: u64,
+    /// Useful lanes across this op's requests.
+    pub lanes: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+}
+
+/// What one [`replay`] measured.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayReport {
+    /// Speed multiplier the arrival gaps were replayed at.
+    pub rate: f64,
+    /// Records dispatched.
+    pub records: usize,
+    /// Wall-clock seconds the replay took.
+    pub wall_s: f64,
+    /// The trace's virtual span (last arrival offset), seconds.
+    pub virtual_s: f64,
+    /// Per-op rows, catalogue order (ops absent from the trace omitted).
+    pub per_op: Vec<OpReplayRow>,
+    /// Padding-waste fraction over the lanes this replay launched
+    /// (service-delta, so a shared service only counts this replay).
+    pub padding_waste: f64,
+    /// Cache hit rate over this replay's lookups (0 when no cache).
+    pub cache_hit_rate: f64,
+    /// Tenant-ledger shed/denial deltas (nonzero only when a front end
+    /// in front of the service rejects during the replay).
+    pub shed: u64,
+    pub denied: u64,
+    /// FNV fold of (verdict code, per-reply checksum) in record order
+    /// — identical run over run and config over config.
+    pub results_fnv: u64,
+    /// Whether every record carried inline planes (the checksum is
+    /// then also comparable to the recorded session's banner).
+    pub all_inline: bool,
+}
+
+impl ReplayReport {
+    /// One value pinning everything determinism guarantees: the
+    /// results checksum plus every per-op request/verdict/lane count.
+    /// Two replays of one trace on one config must agree on this.
+    pub fn determinism_key(&self) -> u64 {
+        let mut c = ResultChecksum::new();
+        c.update_word(self.results_fnv);
+        for row in &self.per_op {
+            for w in [
+                row.requests,
+                row.ok,
+                row.deadline_exceeded,
+                row.cancelled,
+                row.errors,
+                row.lanes,
+            ] {
+                c.update_word(w);
+            }
+        }
+        c.value()
+    }
+
+    /// Human-readable multi-line summary (the demo and gate print it).
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "replay: {} records at {}x, wall {:.3}s (virtual {:.3}s)\n",
+            self.records, self.rate, self.wall_s, self.virtual_s
+        );
+        for r in &self.per_op {
+            s.push_str(&format!(
+                "  {:<6} req={:<4} ok={:<4} dl={:<3} cancel={:<3} err={:<3} \
+                 lanes={:<8} p50={:.3}ms p95={:.3}ms\n",
+                r.op,
+                r.requests,
+                r.ok,
+                r.deadline_exceeded,
+                r.cancelled,
+                r.errors,
+                r.lanes,
+                r.p50_ms,
+                r.p95_ms
+            ));
+        }
+        s.push_str(&format!(
+            "  padding waste {:.4}  cache hit rate {:.4}  shed {}  denied {}\n",
+            self.padding_waste, self.cache_hit_rate, self.shed, self.denied
+        ));
+        s.push_str(&format!(
+            "  results checksum: {:#018x}  (inline: {})\n",
+            self.results_fnv, self.all_inline
+        ));
+        s
+    }
+}
+
+/// In-flight cap during a replay: beyond this many outstanding
+/// tickets the scheduler joins the oldest waiter before dispatching
+/// more (bounds thread count on huge traces).
+const REPLAY_MAX_IN_FLIGHT: usize = 512;
+
+struct Outcome {
+    verdict: Verdict,
+    latency_s: f64,
+    fnv: u64,
+}
+
+/// Replay `trace` against `svc` at `rate`× recorded speed.
+///
+/// Virtual-clock pacing: record `i` dispatches once
+/// `arrival_ns[i] / rate` of wall clock has elapsed since the replay
+/// started (a slow service pushes the clock late; gaps never stretch).
+/// Deadlines and cancel offsets apply **unscaled** so verdicts are
+/// speed-robust (see the module docs). Tenants are re-attributed
+/// through [`super::Handle::dispatch_tagged_deadline`], so the
+/// replayed service's tenant ledger sees the recorded traffic mix.
+///
+/// Determinism: replaying one trace twice on one configuration yields
+/// identical [`ReplayReport::results_fnv`] and identical per-op
+/// request/verdict counts ([`ReplayReport::determinism_key`]) — and
+/// because the serving stack's routing/fusion/cache layers are
+/// bit-transparent, the same holds *across* configurations.
+pub fn replay(svc: &Service, trace: &Trace, rate: f64) -> Result<ReplayReport, ServiceError> {
+    if !rate.is_finite() || rate <= 0.0 {
+        return Err(ServiceError::Backend(format!("bad replay rate {rate}")));
+    }
+    let h = svc.handle();
+    let before = svc.metrics();
+    let cache_before = svc.cache_stats();
+    let tenants_before = svc.tenant_metrics();
+
+    let n = trace.records.len();
+    let mut outcomes: Vec<Option<Outcome>> = Vec::with_capacity(n);
+    outcomes.resize_with(n, || None);
+    type Waiters = std::collections::VecDeque<std::thread::JoinHandle<(usize, Outcome)>>;
+    let mut waiters: Waiters = Waiters::new();
+    fn join_one(waiters: &mut Waiters, outcomes: &mut [Option<Outcome>]) {
+        if let Some(jh) = waiters.pop_front() {
+            if let Ok((idx, out)) = jh.join() {
+                outcomes[idx] = Some(out);
+            }
+        }
+    }
+
+    let started = Instant::now();
+    for (idx, rec) in trace.records.iter().enumerate() {
+        // virtual clock: the recorded arrival offset, scaled by 1/rate
+        let target = Duration::from_nanos((rec.arrival_ns as f64 / rate) as u64);
+        let now = started.elapsed();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let plan = Plan::new(rec.op, rec.planes())?;
+        let ticket = h.dispatch_tagged_deadline(&rec.tenant, plan, rec.deadline())?;
+        let cancel_after = rec.cancel_after();
+        let dispatched = Instant::now();
+        let jh = std::thread::spawn(move || {
+            if let Some(d) = cancel_after {
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+                ticket.cancel();
+            }
+            let result = ticket.wait();
+            let latency_s = dispatched.elapsed().as_secs_f64();
+            let (verdict, fnv) = match result {
+                Ok(planes) => {
+                    let mut c = ResultChecksum::new();
+                    c.update(&planes);
+                    (Verdict::Ok, c.value())
+                }
+                Err(ServiceError::DeadlineExceeded) => (Verdict::DeadlineExceeded, 0),
+                Err(ServiceError::Cancelled) => (Verdict::Cancelled, 0),
+                Err(_) => (Verdict::Error, 0),
+            };
+            (idx, Outcome { verdict, latency_s, fnv })
+        });
+        waiters.push_back(jh);
+        while waiters.len() > REPLAY_MAX_IN_FLIGHT {
+            join_one(&mut waiters, &mut outcomes);
+        }
+    }
+    while !waiters.is_empty() {
+        join_one(&mut waiters, &mut outcomes);
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+
+    // fold outcomes in record order: completion order cannot leak in
+    let mut results = ResultChecksum::new();
+    let mut rows: Vec<OpReplayRow> = Vec::new();
+    let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); Op::COUNT];
+    let mut row_ix = [usize::MAX; Op::COUNT];
+    for (rec, out) in trace.records.iter().zip(&outcomes) {
+        // a waiter that died (joined Err) counts as an error verdict
+        let verdict = out.as_ref().map_or(Verdict::Error, |o| o.verdict);
+        let fnv = out.as_ref().map_or(0, |o| o.fnv);
+        let latency_s = out.as_ref().map_or(0.0, |o| o.latency_s);
+        results.update_word(verdict.code() as u64);
+        results.update_word(fnv);
+        let k = rec.op.index();
+        if row_ix[k] == usize::MAX {
+            row_ix[k] = rows.len();
+            rows.push(OpReplayRow { op: rec.op.name(), ..OpReplayRow::default() });
+        }
+        let row = &mut rows[row_ix[k]];
+        row.requests += 1;
+        row.lanes += rec.lanes as u64;
+        match verdict {
+            Verdict::Ok => row.ok += 1,
+            Verdict::DeadlineExceeded => row.deadline_exceeded += 1,
+            Verdict::Cancelled => row.cancelled += 1,
+            _ => row.errors += 1,
+        }
+        latencies[k].push(latency_s);
+    }
+    // catalogue order, independent of arrival order
+    rows.sort_by_key(|r| Op::parse(r.op).map(Op::index).unwrap_or(usize::MAX));
+    for row in &mut rows {
+        let k = Op::parse(row.op).expect("row op is canonical").index();
+        let lat = &mut latencies[k];
+        lat.sort_by(|a, b| a.total_cmp(b));
+        row.p50_ms = percentile(lat, 50.0) * 1e3;
+        row.p95_ms = percentile(lat, 95.0) * 1e3;
+    }
+
+    let after = svc.metrics();
+    let d_useful = after.elements.saturating_sub(before.elements);
+    let d_padded = after.padded_elements.saturating_sub(before.padded_elements);
+    let padding_waste = if d_useful + d_padded == 0 {
+        0.0
+    } else {
+        d_padded as f64 / (d_useful + d_padded) as f64
+    };
+    let cache_hit_rate = match (cache_before, svc.cache_stats()) {
+        (Some(b), Some(a)) => {
+            let hits = a.hits.saturating_sub(b.hits);
+            let misses = a.misses.saturating_sub(b.misses);
+            if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 }
+        }
+        _ => 0.0,
+    };
+    let tenants_after = svc.tenant_metrics();
+    let sum = |m: &BTreeMap<String, super::metrics::TenantCounters>| {
+        m.values().fold((0u64, 0u64), |(s, d), c| (s + c.shed, d + c.denied))
+    };
+    let (shed_b, denied_b) = sum(&tenants_before);
+    let (shed_a, denied_a) = sum(&tenants_after);
+
+    Ok(ReplayReport {
+        rate,
+        records: n,
+        wall_s,
+        virtual_s: trace.records.last().map_or(0.0, |r| r.arrival_ns as f64 / 1e9),
+        per_op: rows,
+        padding_waste,
+        cache_hit_rate,
+        shed: shed_a.saturating_sub(shed_b),
+        denied: denied_a.saturating_sub(denied_b),
+        results_fnv: results.value(),
+        all_inline: trace.all_inline(),
+    })
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        Trace::new(vec![
+            TraceRecord::seeded(Op::Add22, 64, 7).tenant("alpha").at(0),
+            TraceRecord::seeded(Op::Mul22, 33, 9)
+                .tenant("beta")
+                .class(CLASS_INTERACTIVE)
+                .at(1_000)
+                .deadline_ns(5_000_000_000)
+                .verdict(Verdict::Ok),
+            TraceRecord::inline(Op::Add, vec![vec![1.0, 2.0], vec![3.0, 4.0]])
+                .at(2_000)
+                .cancel_ns(0)
+                .verdict(Verdict::Cancelled),
+        ])
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical() {
+        let t = sample_trace();
+        let bytes = t.encode();
+        let back = Trace::decode(&bytes).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.encode(), bytes);
+        // mixed payloads: not all inline
+        assert!(!t.all_inline());
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+    }
+
+    #[test]
+    fn all_inline_flag_derives_from_records() {
+        let t = Trace::new(vec![TraceRecord::inline(
+            Op::Add,
+            vec![vec![1.0], vec![2.0]],
+        )]);
+        assert!(t.all_inline());
+        let bytes = t.encode();
+        assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), FLAG_ALL_INLINE);
+        assert_eq!(Trace::decode(&bytes).unwrap(), t);
+        // empty traces are not "all inline"
+        assert!(!Trace::default().all_inline());
+    }
+
+    #[test]
+    fn truncation_fails_typed_everywhere() {
+        let bytes = sample_trace().encode();
+        for cut in 0..bytes.len() {
+            let err = Trace::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(err, TraceError::Truncated(_)),
+                "cut at {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn recorder_budget_degrades_then_drops() {
+        // header (12) + one inline add record (67) + one fingerprint
+        // record (42) = 121 bytes; 140 holds exactly that and no more
+        let rec = TraceRecorder::new(140, true);
+        let planes = vec![vec![1.0f32; 4], vec![2.0f32; 4]];
+        rec.log(Op::Add, &planes, "t", None); // inline fits: 12+67=79
+        assert_eq!((rec.len(), rec.degraded(), rec.dropped()), (1, 0, 0));
+        rec.log(Op::Add, &planes, "t", None); // inline would burst: degrade
+        assert_eq!((rec.len(), rec.degraded(), rec.dropped()), (2, 1, 0));
+        rec.log(Op::Add, &planes, "t", None); // even a fingerprint bursts: drop
+        assert_eq!((rec.len(), rec.degraded(), rec.dropped()), (2, 1, 1));
+        let t = rec.trace();
+        assert!(matches!(t.records[0].payload, Payload::Inline(_)));
+        assert!(matches!(t.records[1].payload, Payload::Fingerprint(_)));
+        assert!(t.encode().len() <= 140);
+    }
+
+    #[test]
+    fn recorder_tracks_class_and_deadline() {
+        let rec = TraceRecorder::new(1 << 20, false);
+        rec.note_class("alpha", CLASS_INTERACTIVE);
+        let planes = vec![vec![1.0f32; 2], vec![2.0f32; 2]];
+        rec.log(Op::Add, &planes, "alpha", Some(Duration::from_millis(3)));
+        rec.log(Op::Add, &planes, "beta", None);
+        let t = rec.trace();
+        assert_eq!(t.records[0].class, CLASS_INTERACTIVE);
+        assert_eq!(t.records[0].deadline_ns, 3_000_000);
+        assert_eq!(t.records[1].class, CLASS_UNSPECIFIED);
+        assert_eq!(t.records[1].deadline_ns, NS_NONE);
+        assert!(t.records[1].arrival_ns >= t.records[0].arrival_ns);
+    }
+
+    #[test]
+    fn checksum_matches_manual_fnv_fold() {
+        let planes = vec![vec![1.5f32, -2.25], vec![0.0f32, 3.0]];
+        let mut c = ResultChecksum::new();
+        c.update(&planes);
+        let mut want = FNV_OFFSET;
+        for p in &planes {
+            for v in p {
+                want ^= v.to_bits() as u64;
+                want = want.wrapping_mul(FNV_PRIME);
+            }
+        }
+        assert_eq!(c.value(), want);
+        assert_ne!(c.value(), ResultChecksum::new().value());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 95.0), 4.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn seeded_planes_are_deterministic_and_shaped() {
+        let r = TraceRecord::seeded(Op::Mul22, 100, 42);
+        let a = r.planes();
+        let b = r.planes();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), Op::Mul22.n_in());
+        assert!(a.iter().all(|p| p.len() == 100));
+    }
+}

@@ -45,12 +45,19 @@
 //! ([`ffgpu::net`]) while the demo runs, and `--serve-secs N` keeps
 //! the listener up N seconds after the demo workload finishes so
 //! out-of-process clients (`examples/wire_demo.rs`) can connect.
+//! `--record PATH` (default: `FFGPU_RECORD`) captures every dispatch
+//! into a binary trace saved at exit; `--replay PATH` (default:
+//! `FFGPU_REPLAY`) re-drives a recorded trace through the configured
+//! service instead of the synthetic workload, at `--replay-rate Nx`
+//! (default: `FFGPU_REPLAY_RATE`, then 1) recorded speed.
 //!
 //! Hand-rolled argument parsing: the build image vendors no CLI crate
 //! (documented substitution, DESIGN.md).
 
 use ffgpu::backend::{BackendSpec, KernelTier, NumaMode, Op};
-use ffgpu::coordinator::{ObservatorySpec, Plan, Routing, Service, ServiceSpec};
+use ffgpu::coordinator::{
+    replay, ObservatorySpec, Plan, Routing, Service, ServiceSpec, Trace, TraceRecorder,
+};
 use ffgpu::harness::{accuracy, paranoia_table, timing, workload};
 use ffgpu::runtime::Runtime;
 use ffgpu::util::{Rng, Timer};
@@ -117,6 +124,21 @@ fn main() {
             std::env::var("FFGPU_ADAPTIVE_LADDER").as_deref(),
             Ok("1") | Ok("true")
         );
+    // --record captures serve-demo traffic into a binary trace;
+    // --replay re-drives a recorded trace instead of the synthetic
+    // workload; --replay-rate compresses the recorded arrival gaps.
+    // Env vars are the no-flag defaults so harnesses can arm them
+    // without touching the argv
+    let record_flag =
+        get_flag("--record", std::env::var("FFGPU_RECORD").unwrap_or_default());
+    let replay_flag =
+        get_flag("--replay", std::env::var("FFGPU_REPLAY").unwrap_or_default());
+    let replay_rate: f64 = get_flag(
+        "--replay-rate",
+        std::env::var("FFGPU_REPLAY_RATE").unwrap_or_default(),
+    )
+    .parse()
+    .unwrap_or(1.0);
     // --numa pins native shards to NUMA nodes (auto | off | <node>);
     // absent, the service itself reads FFGPU_NUMA (default: auto)
     let numa_raw = get_flag("--numa", String::new());
@@ -143,7 +165,8 @@ fn main() {
             &artifacts, &backend_flag, shards, &shard_spec_flag, &routing_flag,
             deadline_ms, fuse_window_ms, workers_flag, tier_flag, chunk_flag,
             &observe_flag, &observe_models, &listen_flag, serve_secs,
-            cache_mb, adaptive_ladder, numa_flag,
+            cache_mb, adaptive_ladder, numa_flag, &record_flag, &replay_flag,
+            replay_rate,
         ),
         "selftest" => cmd_selftest(&artifacts),
         "help" | "--help" | "-h" => {
@@ -249,6 +272,26 @@ SHARD SETS (serve-demo):
                                       after the demo workload, for
                                       out-of-process wire clients
                                       (default: FFGPU_SERVE_SECS)
+  --record PATH                       capture every dispatch (demo
+                                      workload + wire traffic) into a
+                                      binary trace at PATH, saved when
+                                      the demo exits; set
+                                      FFGPU_RECORD_INLINE=1 to store
+                                      full plane bits instead of
+                                      content fingerprints (default:
+                                      FFGPU_RECORD)
+  --replay PATH                       re-drive the recorded trace at
+                                      PATH through the configured
+                                      service instead of the synthetic
+                                      workload, and print the replay
+                                      report (p50/p95 per op, padding
+                                      waste, cache hit rate, results
+                                      checksum) (default: FFGPU_REPLAY)
+  --replay-rate N                     replay arrival gaps N times
+                                      faster than recorded; deadlines
+                                      and cancel offsets stay unscaled
+                                      (default: FFGPU_REPLAY_RATE,
+                                      then 1)
 ";
 
 fn cmd_info(artifacts: &Path) -> i32 {
@@ -461,7 +504,8 @@ fn cmd_serve_demo(
     workers_flag: Option<usize>, tier_flag: Option<KernelTier>,
     chunk_flag: Option<usize>, observe_flag: &str, observe_models: &str,
     listen: &str, serve_secs: u64, cache_mb: usize, adaptive_ladder: bool,
-    numa_flag: Option<NumaMode>,
+    numa_flag: Option<NumaMode>, record: &str, replay_path: &str,
+    replay_rate: f64,
 ) -> i32 {
     // --shard-spec describes the set shard by shard; otherwise fall
     // back to the uniform --backend/--shards pair
@@ -527,6 +571,19 @@ fn cmd_serve_demo(
     // env var itself at start
     if let Some(mode) = numa_flag {
         spec = spec.with_numa(mode);
+    }
+    // --record arms the trace recorder at the dispatch boundary
+    // (drop-not-block, 64 MiB budget); the caller-side Arc clone keeps
+    // the capture reachable for the save at exit
+    let recorder = (!record.is_empty()).then(|| {
+        let inline = matches!(
+            std::env::var("FFGPU_RECORD_INLINE").as_deref(),
+            Ok("1") | Ok("true")
+        );
+        std::sync::Arc::new(TraceRecorder::new(64 << 20, inline))
+    });
+    if let Some(rec) = &recorder {
+        spec = spec.with_recorder(std::sync::Arc::clone(rec));
     }
     // --observe arms the accuracy observatory: a fraction of the demo
     // traffic is mirrored onto a native reference + the listed GPU
@@ -596,6 +653,35 @@ fn cmd_serve_demo(
         numa_flag.unwrap_or_else(NumaMode::from_env).describe(),
         node_cells.join(", ")
     );
+    // --replay: re-drive a recorded session through this exact service
+    // configuration and print the scenario report instead of running
+    // the synthetic workload. The report's results checksum is the
+    // regression gate: same trace, any config -> identical line
+    if !replay_path.is_empty() {
+        let trace = match Trace::load(Path::new(replay_path)) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("load trace {replay_path}: {e}");
+                return 1;
+            }
+        };
+        println!(
+            "replaying {replay_path} ({} records, inline: {}) at {replay_rate}x",
+            trace.records.len(),
+            trace.all_inline()
+        );
+        match replay(&svc, &trace, replay_rate) {
+            Ok(report) => {
+                print!("{}", report.render());
+                println!("determinism key: {:#018x}", report.determinism_key());
+                return 0;
+            }
+            Err(e) => {
+                eprintln!("replay: {e}");
+                return 1;
+            }
+        }
+    }
     // --listen: serve the same coordinator over TCP while the demo runs
     let wire = if listen.is_empty() {
         None
@@ -729,6 +815,21 @@ fn cmd_serve_demo(
                 );
             }
         }
+    }
+    // --record: persist everything the recorder captured above for
+    // later replays
+    if let Some(rec) = &recorder {
+        let trace = rec.trace();
+        if let Err(e) = trace.save(Path::new(record)) {
+            eprintln!("save trace {record}: {e}");
+            return 1;
+        }
+        println!(
+            "trace recorded: {record} ({} records, {} bytes, dropped: {})",
+            trace.records.len(),
+            rec.bytes(),
+            rec.dropped()
+        );
     }
     0
 }

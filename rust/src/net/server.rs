@@ -36,7 +36,7 @@ use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::{Handle, Plan, Ticket};
+use crate::coordinator::{trace, Handle, Plan, Ticket};
 
 use super::admission::{Admission, AdmissionConfig, ClientClass};
 use super::frame::{
@@ -388,6 +388,17 @@ impl ConnWorker {
                 }
                 match ClientHello::decode(&frame.payload) {
                     Ok(hello) => {
+                        // an armed trace recorder learns the tenant's
+                        // class here, so replayed traces carry the same
+                        // attribution the wire saw
+                        if let Some(rec) = self.handle.trace_recorder() {
+                            let code = match hello.class {
+                                ClientClass::Interactive => trace::CLASS_INTERACTIVE,
+                                ClientClass::Standard => trace::CLASS_STANDARD,
+                                ClientClass::Bulk => trace::CLASS_BULK,
+                            };
+                            rec.note_class(&hello.tenant, code);
+                        }
                         conn.tenant = hello.tenant;
                         conn.admission =
                             Admission::new(self.admission.limits(hello.class), Instant::now());
@@ -472,12 +483,12 @@ impl ConnWorker {
                 return;
             }
         };
-        match self.handle.dispatch_tagged(&conn.tenant, plan) {
+        // deadline travels with the dispatch so it is armed before the
+        // request enters the shard queue (deterministic triage) and so
+        // an armed trace recorder captures it alongside the tenant
+        let deadline = sub.deadline_ms.map(Duration::from_millis);
+        match self.handle.dispatch_tagged_deadline(&conn.tenant, plan, deadline) {
             Ok(ticket) => {
-                let ticket = match sub.deadline_ms {
-                    Some(ms) => ticket.deadline(Duration::from_millis(ms)),
-                    None => ticket,
-                };
                 conn.pending.push(Pending { id: sub.id, ticket, bytes });
             }
             Err(err) => {

@@ -8,10 +8,12 @@
 //! available backend through the *same* `KernelBackend` interface, and
 //! compares against the native reference lane by lane.
 
+mod common;
+
+use common::WorkloadGen;
 use ffgpu::backend::{
     BackendSpec, ExecJob, KernelBackend, KernelTier, NativeBackend, Op, ServiceError,
 };
-use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 use std::path::PathBuf;
 
@@ -84,13 +86,14 @@ fn prop_backends_bit_match_native_on_random_batches() {
     // move the goalposts
     let mut reference = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
     let mut others = backends();
+    let wl = WorkloadGen::from_env("backend_parity");
     let mut rng = Rng::new(0xBAC7);
     let cases = 60;
     for case in 0..cases {
         let op = PARITY_OPS[rng.below(PARITY_OPS.len())];
         // sizes straddle the native chunking threshold and stay odd
         let n = 1 + rng.below(9000);
-        let planes = workload::planes_for(op.name(), n, 0x9000 + case as u64);
+        let planes = wl.planes(op, n, 0x9000 + case as u64);
         let want = execute(&mut reference, op, &planes).unwrap();
         for (label, b) in others.iter_mut() {
             let got = execute(b.as_mut(), op, &planes).unwrap();
@@ -117,10 +120,11 @@ fn prop_div22_agrees_within_tolerance_across_backends() {
     // class, not bit-equal; pin the tolerance so regressions surface.
     let mut reference = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
     let mut sim = BackendSpec::gpusim_ieee().build().unwrap();
+    let wl = WorkloadGen::from_env("div22_tolerance");
     let mut rng = Rng::new(0xD1F2);
     for case in 0..20 {
         let n = 1 + rng.below(2000);
-        let planes = workload::planes_for("div22", n, 0x7000 + case as u64);
+        let planes = wl.planes(Op::Div22, n, 0x7000 + case as u64);
         let want = execute(&mut reference, Op::Div22, &planes).unwrap();
         let got = execute(sim.as_mut(), Op::Div22, &planes).unwrap();
         for i in 0..n {
@@ -205,11 +209,12 @@ fn sharded_service_matches_single_shard_bitwise() {
         ServiceSpec::uniform(BackendSpec::native(), 4).with_max_batch(32),
     )
     .unwrap();
+    let wl = WorkloadGen::from_env("sharded_bitwise");
     let mut rng = Rng::new(0x54A2);
     for round in 0..12 {
         let op = PARITY_OPS[rng.below(PARITY_OPS.len())];
         let n = 100 + rng.below(20_000);
-        let planes = workload::planes_for(op.name(), n, round);
+        let planes = wl.planes(op, n, round);
         let a = single
             .handle()
             .dispatch(Plan::new(op, planes.clone()).unwrap())

@@ -1,0 +1,115 @@
+//! Shared test-support: one seeded workload generator for every
+//! integration test and bench.
+//!
+//! Before this module existed, four call sites
+//! (`integration_coordinator.rs`, `backend_parity.rs`,
+//! `kernel_tiers.rs`, `benches/coordinator.rs`) each rolled their own
+//! plane-filling loop with hand-picked magic seeds. A parity failure in
+//! one file could not be reproduced from another because the fill
+//! recipes diverged. Now everything funnels through [`WorkloadGen`]:
+//! a SplitMix64 stream keyed by one session seed, printed at
+//! construction so any failing run can be replayed exactly with
+//! `FFGPU_TEST_SEED=<seed> cargo test ...`.
+//!
+//! Benches include this file by path
+//! (`#[path = "../tests/common/mod.rs"] mod common;`), so the recipe is
+//! literally the same code in both worlds.
+
+// Each test binary includes this module separately and uses a
+// different slice of it — silence per-binary dead-code noise.
+#![allow(dead_code)]
+
+use ffgpu::backend::Op;
+use ffgpu::harness::workload;
+
+/// Default session seed — any fixed odd-ish constant works; this one
+/// spells "f f g p u" on a phone keypad, give or take.
+pub const DEFAULT_SEED: u64 = 0x1FF6_7085_F0CE_ED01;
+
+/// SplitMix64: the canonical 64-bit mix (Steele et al.). Tiny state,
+/// full-period, and — crucially — *splittable*: `gen.sub(case)`
+/// derives an independent stream per test case, so adding a case never
+/// shifts the values any other case sees.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seeded workload generator. Construct once per test via
+/// [`WorkloadGen::from_env`]; derive per-case seeds with
+/// [`WorkloadGen::sub`]; materialise operand planes with
+/// [`WorkloadGen::planes`].
+#[derive(Clone, Copy, Debug)]
+pub struct WorkloadGen {
+    seed: u64,
+}
+
+impl WorkloadGen {
+    /// Generator over an explicit seed.
+    pub fn new(seed: u64) -> WorkloadGen {
+        WorkloadGen { seed }
+    }
+
+    /// Generator seeded from `FFGPU_TEST_SEED` (decimal or `0x` hex)
+    /// when set, else [`DEFAULT_SEED`]. Prints the seed so a failing
+    /// CI log always carries the reproduction recipe.
+    pub fn from_env(label: &str) -> WorkloadGen {
+        let seed = std::env::var("FFGPU_TEST_SEED")
+            .ok()
+            .and_then(|s| {
+                let s = s.trim();
+                if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                    u64::from_str_radix(hex, 16).ok()
+                } else {
+                    s.parse().ok()
+                }
+            })
+            .unwrap_or(DEFAULT_SEED);
+        println!("[{label}] workload seed: {seed:#018x} (override: FFGPU_TEST_SEED)");
+        WorkloadGen { seed }
+    }
+
+    /// The session seed this generator runs on.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Derived per-case seed: an independent SplitMix64 draw keyed by
+    /// `(session seed, case)`. Stable under reordering of other cases.
+    pub fn sub(&self, case: u64) -> u64 {
+        let mut s = self.seed ^ case.wrapping_mul(0xA24B_AED4_963E_E407);
+        splitmix64(&mut s)
+    }
+
+    /// `op.n_in()` operand planes of `n` lanes for case `case`, via the
+    /// shared [`workload::planes_for`] recipe (float-float pairs
+    /// normalised, `div22` divisors bounded away from zero).
+    pub fn planes(&self, op: Op, n: usize, case: u64) -> Vec<Vec<f32>> {
+        workload::planes_for(op.name(), n, self.sub(case))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sub_streams_are_independent_and_stable() {
+        let g = WorkloadGen::new(42);
+        assert_eq!(g.sub(0), WorkloadGen::new(42).sub(0));
+        assert_ne!(g.sub(0), g.sub(1));
+        assert_ne!(g.sub(1), WorkloadGen::new(43).sub(1));
+    }
+
+    #[test]
+    fn planes_match_shared_recipe() {
+        let g = WorkloadGen::new(7);
+        let p = g.planes(Op::Add22, 16, 3);
+        assert_eq!(p.len(), Op::Add22.n_in());
+        assert!(p.iter().all(|pl| pl.len() == 16));
+        assert_eq!(p, workload::planes_for("add22", 16, g.sub(3)));
+    }
+}

@@ -5,6 +5,9 @@
 //! isolation from routing telemetry and the observatory (always
 //! runnable), plus the XLA backend paths when artifacts exist.
 
+mod common;
+
+use common::WorkloadGen;
 use ffgpu::backend::{BackendSpec, Op, ServiceError};
 use ffgpu::coordinator::observatory::one_shot_sweep;
 use ffgpu::coordinator::routing::OpAffinity;
@@ -70,6 +73,7 @@ fn heterogeneous_shard_set_bit_parity_and_attribution() {
     assert_eq!(svc.shard_labels(), vec!["native", "native", "gpusim"]);
     assert_eq!(svc.routing(), "op-affinity");
 
+    let wl = WorkloadGen::from_env("heterogeneous_shard_set");
     let parity_ops = [Op::Add12, Op::Mul12, Op::Add22, Op::Mul22, Op::Mad22];
     let per_op = 4usize;
     let h = svc.handle();
@@ -77,7 +81,7 @@ fn heterogeneous_shard_set_bit_parity_and_attribution() {
     for op in parity_ops {
         for round in 0..per_op {
             let n = 100 + 37 * round;
-            let planes = workload::planes_for(op.name(), n, (op.index() * 10 + round) as u64);
+            let planes = wl.planes(op, n, (op.index() * 10 + round) as u64);
             // typed dispatch, and the ticket reports the policy's pick
             let ticket = h.dispatch(Plan::new(op, planes.clone()).unwrap()).unwrap();
             assert_eq!(ticket.shard(), OpAffinity::home(op, 3), "{op}");
@@ -126,11 +130,12 @@ fn queue_depth_routing_serves_heterogeneous_set() {
         .with_routing(Routing::QueueDepth),
     )
     .unwrap();
+    let wl = WorkloadGen::from_env("queue_depth_routing");
     let h = svc.handle();
     let mut tickets = Vec::new();
     let mut wants = Vec::new();
     for k in 0..12u64 {
-        let planes = workload::planes_for("add22", 300, k);
+        let planes = wl.planes(Op::Add22, 300, k);
         wants.push(expect_add22(&planes));
         tickets.push(h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap());
     }
@@ -158,7 +163,7 @@ fn typed_plan_dispatch_on_default_spec() {
     // coverage in coordinator::service)
     let svc = Service::start(ServiceSpec::default()).unwrap();
     let h = svc.handle();
-    let planes = workload::planes_for("add22", 500, 0xCA11);
+    let planes = WorkloadGen::from_env("typed_plan_dispatch").planes(Op::Add22, 500, 0xCA11);
     let want = expect_add22(&planes);
     let out = h
         .dispatch(Plan::new(Op::Add22, planes).unwrap())
@@ -200,11 +205,12 @@ fn measured_routing_starves_the_slow_canary() {
     )
     .unwrap();
     assert_eq!(svc.routing(), "measured");
+    let wl = WorkloadGen::from_env("measured_routing");
     let h = svc.handle();
     let rounds = 16usize;
     let mut canary = 0usize;
     for k in 0..rounds {
-        let planes = workload::planes_for("mul22", 256, k as u64);
+        let planes = wl.planes(Op::Mul22, 256, k as u64);
         let ticket = h.dispatch(Plan::new(Op::Mul22, planes).unwrap()).unwrap();
         if svc.shard_labels()[ticket.shard()] == "gpusim" {
             canary += 1;
@@ -234,15 +240,16 @@ fn deadline_expired_ticket_returns_promptly_and_shard_survives() {
     // the shard, and the shard must stay live for later work
     let svc =
         Service::start(ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1)).unwrap();
+    let wl = WorkloadGen::from_env("deadline_expired");
     let h = svc.handle();
     let sat = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 400_000, 1)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 400_000, 1)).unwrap())
         .unwrap();
     // let the shard pull the saturating request into execution (the
     // soft-float VM needs far longer than this sleep to finish it)
     std::thread::sleep(Duration::from_millis(50));
     let probe = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 4096, 2)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 4096, 2)).unwrap())
         .unwrap()
         .deadline(Duration::from_millis(1));
     let t0 = Instant::now();
@@ -254,7 +261,7 @@ fn deadline_expired_ticket_returns_promptly_and_shard_survives() {
     // the saturating request still completes, and the shard serves on
     sat.wait().unwrap();
     let out = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 512, 3)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 512, 3)).unwrap())
         .unwrap()
         .wait()
         .unwrap();
@@ -273,19 +280,20 @@ fn deadline_expired_ticket_returns_promptly_and_shard_survives() {
 fn cancelled_request_is_skipped_by_the_shard() {
     let svc =
         Service::start(ServiceSpec::uniform(BackendSpec::gpusim_ieee(), 1)).unwrap();
+    let wl = WorkloadGen::from_env("cancelled_request");
     let h = svc.handle();
     let sat = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 400_000, 1)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 400_000, 1)).unwrap())
         .unwrap();
     std::thread::sleep(Duration::from_millis(50));
     let victim = h
-        .dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 4096, 2)).unwrap())
+        .dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 4096, 2)).unwrap())
         .unwrap();
     victim.cancel();
     assert_eq!(victim.wait(), Err(ServiceError::Cancelled));
     sat.wait().unwrap();
     // drain the queue past the victim with a fresh request
-    h.dispatch(Plan::new(Op::Mul22, workload::planes_for("mul22", 256, 3)).unwrap())
+    h.dispatch(Plan::new(Op::Mul22, wl.planes(Op::Mul22, 256, 3)).unwrap())
         .unwrap()
         .wait()
         .unwrap();
@@ -302,6 +310,7 @@ fn cancelled_request_is_skipped_by_the_shard() {
 #[test]
 fn fused_batches_slice_back_bit_identically_to_solo_serving() {
     let ladder = vec![256usize, 1024, 4096, 16384];
+    let wl = WorkloadGen::from_env("fused_batches");
     for backend in [BackendSpec::native_single(), BackendSpec::gpusim_ieee()] {
         let fused = Service::start(
             ServiceSpec::uniform(backend.clone(), 1)
@@ -319,9 +328,7 @@ fn fused_batches_slice_back_bit_identically_to_solo_serving() {
             let all: Vec<Vec<Vec<f32>>> = sizes
                 .iter()
                 .enumerate()
-                .map(|(k, &n)| {
-                    workload::planes_for(op.name(), n, (op.index() * 100 + k) as u64)
-                })
+                .map(|(k, &n)| wl.planes(op, n, (op.index() * 100 + k) as u64))
                 .collect();
             // burst-dispatch so the window fuses them
             let h = fused.handle();
@@ -365,14 +372,15 @@ fn fused_batches_slice_back_bit_identically_to_solo_serving() {
 fn persistent_native_workers_serve_many_service_batches() {
     // chunk floor is 1024, so 5000-lane requests engage the crew
     let svc = Service::start(ServiceSpec::uniform(
-        BackendSpec::Native { chunk: 1024, workers: 4, tier: None },
+        BackendSpec::Native { chunk: 1024, workers: 4, tier: None, node: None },
         1,
     ))
     .unwrap();
+    let wl = WorkloadGen::from_env("persistent_native_workers");
     let h = svc.handle();
     for round in 0..6u64 {
         let n = 5000 + 617 * round as usize;
-        let planes = workload::planes_for("add22", n, round);
+        let planes = wl.planes(Op::Add22, n, round);
         let want = expect_add22(&planes);
         let out = h
             .dispatch(Plan::new(Op::Add22, planes).unwrap())
@@ -396,9 +404,10 @@ fn persistent_native_workers_serve_many_service_batches() {
 fn odd_sizes_are_padded_and_correct() {
     let Some(dir) = artifacts_dir() else { return };
     let svc = xla_service(dir);
+    let wl = WorkloadGen::from_env("odd_sizes");
     // sizes that don't match any artifact: padding and windowing paths
     for n in [1usize, 7, 100, 4095, 4097, 10_000] {
-        let planes = workload::planes_for("add22", n, n as u64);
+        let planes = wl.planes(Op::Add22, n, n as u64);
         let out = call(&svc, Op::Add22, planes.clone());
         assert_eq!(out[0].len(), n);
         let want = expect_add22(&planes);
@@ -420,7 +429,7 @@ fn oversize_requests_split_across_launches() {
     let svc = xla_service(dir);
     // bigger than the largest artifact (1048576): forces multi-launch
     let n = 1_200_000;
-    let planes = workload::planes_for("add", n, 99);
+    let planes = WorkloadGen::from_env("oversize_requests").planes(Op::Add, n, 99);
     let out = call(&svc, Op::Add, planes.clone());
     for i in (0..n).step_by(10_007) {
         assert_eq!(out[0][i], planes[0][i] + planes[1][i], "lane {i}");
@@ -433,6 +442,7 @@ fn oversize_requests_split_across_launches() {
 fn mixed_ops_from_concurrent_clients() {
     let Some(dir) = artifacts_dir() else { return };
     let svc = xla_service(dir);
+    let wl = WorkloadGen::from_env("mixed_ops_concurrent");
     let mut joins = Vec::new();
     for t in 0..6u64 {
         let h = svc.handle();
@@ -442,7 +452,7 @@ fn mixed_ops_from_concurrent_clients() {
             for round in 0..10 {
                 let op = ops[(t as usize + round) % ops.len()];
                 let n = 500 + rng.below(5000);
-                let planes = workload::planes_for(op.name(), n, rng.next_u64());
+                let planes = wl.planes(op, n, rng.next_u64());
                 let out = h
                     .dispatch(Plan::new(op, planes.clone()).unwrap())
                     .unwrap()
@@ -473,11 +483,12 @@ fn batching_coalesces_same_op_requests() {
     let svc = Service::start(ServiceSpec::uniform(xla_spec(dir), 1).with_max_batch(64))
         .unwrap();
     // submit many small async requests before the device thread drains
+    let wl = WorkloadGen::from_env("batching_coalesces");
     let h = svc.handle();
     let mut pending = Vec::new();
     let mut wants = Vec::new();
     for k in 0..40 {
-        let planes = workload::planes_for("add22", 50 + k, k as u64);
+        let planes = wl.planes(Op::Add22, 50 + k, k as u64);
         wants.push(expect_add22(&planes));
         pending.push(h.dispatch(Plan::new(Op::Add22, planes).unwrap()).unwrap());
     }
@@ -500,8 +511,9 @@ fn cpu_and_xla_backends_agree() {
     let Some(dir) = artifacts_dir() else { return };
     let xla = xla_service(dir);
     let cpu = Service::start(ServiceSpec::default()).unwrap();
+    let wl = WorkloadGen::from_env("cpu_xla_agree");
     for op in [Op::Add12, Op::Mul12, Op::Add22, Op::Mul22, Op::Div22] {
-        let planes = workload::planes_for(op.name(), 3000, 0xE44E);
+        let planes = wl.planes(op, 3000, 0xE44E);
         let a = call(&xla, op, planes.clone());
         let b = call(&cpu, op, planes);
         for (pa, pb) in a.iter().zip(&b) {
@@ -597,10 +609,11 @@ fn observation_does_not_perturb_measured_routing() {
         mk().with_observatory(ObservatorySpec::new(1.0, ["nv35"])),
     )
     .unwrap();
+    let wl = WorkloadGen::from_env("observation_no_perturb");
     let mut plain_picks = Vec::new();
     let mut observed_picks = Vec::new();
     for round in 0..8u64 {
-        let planes = workload::planes_for("add22", 256, round);
+        let planes = wl.planes(Op::Add22, 256, round);
         for (svc, picks) in [
             (&plain, &mut plain_picks),
             (&observed, &mut observed_picks),
@@ -658,7 +671,7 @@ fn cache_hits_are_invisible_to_telemetry_and_observatory() {
     )
     .unwrap();
     let h = svc.handle();
-    let planes = workload::planes_for("add22", 512, 0xCAFE);
+    let planes = WorkloadGen::from_env("cache_invisible").planes(Op::Add22, 512, 0xCAFE);
     let rounds = 10u64;
     let mut first: Option<Vec<Vec<f32>>> = None;
     for _ in 0..rounds {

@@ -17,16 +17,20 @@
 //! slow but still correctly rounded, so the bit-parity claims hold
 //! everywhere. Only *perf* commentary is gated on availability.
 
+mod common;
+
+use common::WorkloadGen;
 use ffgpu::backend::{ExecJob, KernelTier, NativeBackend, Op};
 use ffgpu::ff::{two_prod, two_prod_fma};
-use ffgpu::harness::workload;
 use ffgpu::util::Rng;
 
 /// Every op the native backend serves.
 const OPS: [Op; 10] = Op::ALL;
 
-fn run_backend(be: &mut NativeBackend, op: Op, n: usize, seed: u64) -> Vec<Vec<f32>> {
-    let planes = workload::planes_for(op.name(), n, seed);
+fn run_backend(
+    be: &mut NativeBackend, wl: &WorkloadGen, op: Op, n: usize, case: u64,
+) -> Vec<Vec<f32>> {
+    let planes = wl.planes(op, n, case);
     let job = ExecJob::new(op, planes).unwrap();
     let mut outs = vec![vec![0.0f32; n]; op.n_out()];
     be.execute(&job, &mut outs).unwrap();
@@ -54,6 +58,7 @@ fn assert_bitwise(a: &[Vec<f32>], b: &[Vec<f32>], ctx: &str) {
 #[test]
 fn every_tier_matches_scalar_through_the_backend() {
     let sizes = [1usize, 7, 8, 9, 1023, 1024, 1025, 5000];
+    let wl = WorkloadGen::from_env("every_tier_matches_scalar");
     let mut reference = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
     for tier in [KernelTier::Blocked, KernelTier::BlockedFma] {
         if tier == KernelTier::BlockedFma && !tier.available() {
@@ -65,11 +70,11 @@ fn every_tier_matches_scalar_through_the_backend() {
         assert_eq!(serial.tier(), tier);
         for op in OPS {
             for &n in &sizes {
-                let seed = 0x7133 ^ (n as u64);
-                let want = run_backend(&mut reference, op, n, seed);
-                let got = run_backend(&mut serial, op, n, seed);
+                let case = 0x7133 ^ (n as u64);
+                let want = run_backend(&mut reference, &wl, op, n, case);
+                let got = run_backend(&mut serial, &wl, op, n, case);
                 assert_bitwise(&want, &got, &format!("{tier}/serial {op} n={n}"));
-                let got = run_backend(&mut chunked, op, n, seed);
+                let got = run_backend(&mut chunked, &wl, op, n, case);
                 assert_bitwise(&want, &got, &format!("{tier}/chunked {op} n={n}"));
             }
         }
@@ -82,11 +87,12 @@ fn every_tier_matches_scalar_through_the_backend() {
 #[test]
 fn detected_tier_matches_scalar() {
     let detected = KernelTier::detect();
+    let wl = WorkloadGen::from_env("detected_tier_matches_scalar");
     let mut reference = NativeBackend::with_tier(1 << 20, 1, Some(KernelTier::Scalar));
     let mut auto = NativeBackend::with_tier(2048, 4, Some(detected));
     for op in OPS {
-        let want = run_backend(&mut reference, op, 4096, 0xD7C7);
-        let got = run_backend(&mut auto, op, 4096, 0xD7C7);
+        let want = run_backend(&mut reference, &wl, op, 4096, 0xD7C7);
+        let got = run_backend(&mut auto, &wl, op, 4096, 0xD7C7);
         assert_bitwise(&want, &got, &format!("detected {detected} {op}"));
     }
 }

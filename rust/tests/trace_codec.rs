@@ -1,0 +1,269 @@
+//! Trace codec property suite (ISSUE: trace record/replay).
+//!
+//! The codec's contract is *total and canonical*: `decode ∘ encode`
+//! is the identity on every well-formed trace, equal traces encode to
+//! equal bytes (flags are derived from content, never caller-chosen),
+//! and every malformed byte stream fails with a typed [`TraceError`]
+//! — never a panic, never an unbounded allocation. The malformed
+//! corpus mirrors the wire-frame suite's approach: hand-corrupt one
+//! field at a time at a known offset and pin the exact error variant.
+//!
+//! No proptest crate in the vendored set, so the round-trip property
+//! runs as the repo's seeded random search (same substitution as
+//! `backend_parity.rs`).
+
+mod common;
+
+use common::WorkloadGen;
+use ffgpu::backend::Op;
+use ffgpu::coordinator::{trace, Payload, Trace, TraceError, TraceRecord, Verdict};
+use ffgpu::util::Rng;
+
+/// A random well-formed record drawn from the full shape space:
+/// every op, all three payload kinds, tenants from empty to 255
+/// bytes (including multi-byte UTF-8), all classes and verdicts,
+/// deadline/cancel fields spanning none / zero / finite.
+fn random_record(rng: &mut Rng, wl: &WorkloadGen, case: u64) -> TraceRecord {
+    let op = Op::ALL[rng.below(Op::COUNT)];
+    let lanes = 1 + rng.below(96) as u32;
+    let mut rec = match rng.below(3) {
+        0 => TraceRecord::seeded(op, lanes, rng.next_u64()),
+        1 => TraceRecord {
+            lanes,
+            payload: Payload::Fingerprint(rng.next_u64()),
+            ..TraceRecord::seeded(op, lanes, 0)
+        },
+        _ => TraceRecord::inline(op, wl.planes(op, lanes as usize, case)),
+    };
+    rec = rec.at(rng.next_u64() >> 20);
+    rec.class = [
+        trace::CLASS_UNSPECIFIED,
+        trace::CLASS_INTERACTIVE,
+        trace::CLASS_STANDARD,
+        trace::CLASS_BULK,
+    ][rng.below(4)];
+    rec.verdict = [
+        Verdict::Unknown,
+        Verdict::Ok,
+        Verdict::DeadlineExceeded,
+        Verdict::Cancelled,
+        Verdict::Error,
+    ][rng.below(5)];
+    rec = match rng.below(3) {
+        0 => rec,
+        1 => rec.deadline_ns(0),
+        _ => rec.deadline_ns(1 + (rng.next_u64() >> 32)),
+    };
+    if rng.below(4) == 0 {
+        rec = rec.cancel_ns(rng.next_u64() >> 40);
+    }
+    let long = "x".repeat(255);
+    let tenants = ["", "a", "alpha", "β-tenant-ü", long.as_str()];
+    rec.tenant(tenants[rng.below(tenants.len())])
+}
+
+#[test]
+fn prop_traces_round_trip_bit_identically() {
+    let wl = WorkloadGen::from_env("trace_round_trip");
+    let mut rng = Rng::new(0x72AC);
+    for session in 0..60u64 {
+        let n = rng.below(12);
+        let records: Vec<TraceRecord> = (0..n)
+            .map(|i| random_record(&mut rng, &wl, session * 64 + i as u64))
+            .collect();
+        let t = Trace::new(records);
+        let bytes = t.encode();
+        let back = Trace::decode(&bytes).expect("well-formed trace decodes");
+        assert_eq!(back, t, "session {session}: decode ∘ encode != id");
+        // canonical: re-encoding the decoded trace reproduces the bytes
+        assert_eq!(back.encode(), bytes, "session {session}: bytes moved");
+    }
+}
+
+#[test]
+fn empty_trace_round_trips() {
+    let t = Trace::default();
+    let bytes = t.encode();
+    assert_eq!(bytes.len(), 12, "header only");
+    assert_eq!(Trace::decode(&bytes).unwrap(), t);
+    assert!(!t.all_inline(), "vacuous all-inline must not set the flag");
+}
+
+#[test]
+fn inline_flag_is_derived_from_content() {
+    let all_inline = Trace::new(vec![
+        TraceRecord::inline(Op::Add12, vec![vec![1.0; 4], vec![2.0; 4]]),
+        TraceRecord::inline(Op::Mul, vec![vec![3.0; 2], vec![4.0; 2]]),
+    ]);
+    assert!(all_inline.all_inline());
+    // flags live at header bytes 6..8 (little-endian u16)
+    let bytes = all_inline.encode();
+    assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), trace::FLAG_ALL_INLINE);
+    let mixed = Trace::new(vec![
+        TraceRecord::inline(Op::Add12, vec![vec![1.0; 4], vec![2.0; 4]]),
+        TraceRecord::seeded(Op::Mul22, 8, 7),
+    ]);
+    assert!(!mixed.all_inline());
+    let bytes = mixed.encode();
+    assert_eq!(u16::from_le_bytes([bytes[6], bytes[7]]), 0);
+}
+
+#[test]
+fn save_load_round_trips_and_io_fails_typed() {
+    let wl = WorkloadGen::from_env("trace_save_load");
+    let mut rng = Rng::new(0x10AD);
+    let records: Vec<TraceRecord> =
+        (0..5).map(|i| random_record(&mut rng, &wl, i)).collect();
+    let t = Trace::new(records);
+    let path = std::env::temp_dir().join(format!(
+        "ffgpu-trace-codec-{}.fftrace",
+        std::process::id()
+    ));
+    t.save(&path).unwrap();
+    assert_eq!(Trace::load(&path).unwrap(), t);
+    std::fs::remove_file(&path).unwrap();
+    assert!(matches!(Trace::load(&path), Err(TraceError::Io(_))));
+}
+
+/// One well-formed single-record trace whose field offsets are known
+/// exactly (seeded payload, 2-byte tenant), for surgical corruption:
+///
+/// ```text
+/// 0  magic      4  version    6  flags      8  count
+/// 12 op         13 class      14 verdict    15 kind
+/// 16 tenant_len 17 tenant[2]  19 arrival    27 deadline
+/// 35 cancel     43 lanes      47 seed       55 end
+/// ```
+fn base_bytes() -> Vec<u8> {
+    let t = Trace::new(vec![
+        TraceRecord::seeded(Op::Mul22, 33, 0xFEED).tenant("ab").at(17)
+    ]);
+    let bytes = t.encode();
+    assert_eq!(bytes.len(), 55);
+    assert_eq!(Trace::decode(&bytes).unwrap(), t);
+    bytes
+}
+
+/// The malformed corpus: one corruption per case, one typed error per
+/// corruption. Every entry is a (mutate, expected-error) pair over the
+/// known-good base trace.
+#[test]
+fn malformed_traces_fail_typed() {
+    type Mutate = fn(&mut Vec<u8>);
+    let corpus: Vec<(&str, Mutate, TraceError)> = vec![
+        (
+            "bad magic",
+            |b| b[0] = b'X',
+            TraceError::BadMagic,
+        ),
+        (
+            "unknown version",
+            |b| b[4] = 2,
+            TraceError::BadVersion(2),
+        ),
+        (
+            "unknown flag bits",
+            |b| b[7] = 0x80,
+            TraceError::BadFlags(0x8000),
+        ),
+        (
+            "inline flag contradicting a seeded record",
+            |b| b[6] = 1,
+            TraceError::BadFlags(trace::FLAG_ALL_INLINE),
+        ),
+        (
+            "op code outside the catalogue",
+            |b| b[12] = Op::COUNT as u8,
+            TraceError::BadOp(Op::COUNT as u8),
+        ),
+        (
+            "class code outside the known set",
+            |b| b[13] = 9,
+            TraceError::BadClass(9),
+        ),
+        (
+            "verdict code outside the known set",
+            |b| b[14] = 9,
+            TraceError::BadVerdict(9),
+        ),
+        (
+            "payload kind outside the known set",
+            |b| b[15] = 3,
+            TraceError::BadPayloadKind(3),
+        ),
+        (
+            "tenant bytes that are not UTF-8",
+            |b| {
+                b[17] = 0xFF;
+                b[18] = 0xFE;
+            },
+            TraceError::BadTenant,
+        ),
+        (
+            "zero lanes",
+            |b| b[43..47].fill(0),
+            TraceError::ZeroLanes,
+        ),
+        (
+            "lanes beyond the allocation cap",
+            |b| b[43..47].copy_from_slice(&u32::MAX.to_le_bytes()),
+            TraceError::TooLarge { lanes: u32::MAX },
+        ),
+        (
+            "trailing bytes after the last record",
+            |b| b.extend_from_slice(&[0, 0, 0]),
+            TraceError::TrailingBytes(3),
+        ),
+        (
+            "count promising more records than the buffer holds",
+            |b| b[8] = 2,
+            TraceError::Truncated("op"),
+        ),
+        (
+            "buffer cut mid-field",
+            |b| b.truncate(50),
+            TraceError::Truncated("seed"),
+        ),
+        (
+            "buffer cut inside the header",
+            |b| b.truncate(9),
+            TraceError::Truncated("count"),
+        ),
+    ];
+    for (what, mutate, want) in corpus {
+        let mut bytes = base_bytes();
+        mutate(&mut bytes);
+        match Trace::decode(&bytes) {
+            Err(e) => assert_eq!(e, want, "{what}: wrong error"),
+            Ok(t) => panic!("{what}: decoded {} record(s) from corrupt bytes", t.records.len()),
+        }
+    }
+}
+
+/// Inline payloads carry their own arity hazard: a plane count that
+/// disagrees with the op is unrepresentable after decode, and a lanes
+/// field larger than the remaining buffer must fail before allocating.
+#[test]
+fn malformed_inline_payloads_fail_typed() {
+    let t = Trace::new(vec![TraceRecord::inline(
+        Op::Add12,
+        vec![vec![1.5; 8], vec![2.5; 8]],
+    )]);
+    let good = t.encode();
+    assert_eq!(Trace::decode(&good).unwrap(), t);
+    // plane-count byte sits right after the lanes field: header 12 +
+    // (4 fixed + 1 len + 0 tenant) + 24 ns fields + 4 lanes = 45
+    let mut bad_arity = good.clone();
+    assert_eq!(bad_arity[45], 2, "plane count byte");
+    bad_arity[45] = 1;
+    // one inline plane shorter than promised => arity first
+    assert_eq!(
+        Trace::decode(&bad_arity),
+        Err(TraceError::ArityMismatch { op: Op::Add12, got: 1 })
+    );
+    // an honest arity but a lanes field bigger than the buffer: the
+    // length check fires before any plane allocation happens
+    let mut short = good;
+    short[41..45].copy_from_slice(&1000u32.to_le_bytes());
+    assert_eq!(Trace::decode(&short), Err(TraceError::Truncated("inline plane")));
+}

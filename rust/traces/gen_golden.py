@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Regenerate golden.fftrace + golden.expect.json.
+
+Mirrors the FFTR v1 codec in rust/src/coordinator/trace.rs (the Rust
+property suite round-trips the same layout; this script only exists so
+the committed golden bytes can be rebuilt and audited by hand).
+
+Layout (little-endian):
+  header:  b"FFTR"  u16 version=1  u16 flags  u32 count
+  record:  u8 op  u8 class  u8 verdict  u8 payload_kind
+           u8 tenant_len  tenant bytes
+           u64 arrival_ns  u64 deadline_ns  u64 cancel_ns
+           u32 lanes  u64 seed            (payload_kind 2 = seeded)
+
+The golden session: 24 seeded records, six float-float ops in
+rotation, two tenants (alpha=interactive, beta=bulk), 0.4 ms arrival
+gaps, and exactly one deliberate deadline miss (record 10 carries a
+0 ns deadline, which the replay scheduler triages deterministically).
+"""
+
+import json
+import struct
+from pathlib import Path
+
+NS_NONE = 2**64 - 1
+
+# op codes: catalogue order of backend::Op
+OPS = [("add22", 3), ("mul22", 4), ("mul12", 2), ("add12", 0), ("div22", 5), ("mad22", 6)]
+LANES = [1024, 1537, 4096, 257, 2048, 769]
+V_OK, V_DEADLINE = 1, 2
+CLASS_INTERACTIVE, CLASS_BULK = 1, 3
+COUNT = 24
+DEADLINE_MISS_AT = 10
+GAP_NS = 400_000
+
+records = []
+for i in range(COUNT):
+    name, op = OPS[i % len(OPS)]
+    tenant = "alpha" if i % 2 == 0 else "beta"
+    klass = CLASS_INTERACTIVE if i % 2 == 0 else CLASS_BULK
+    lanes = LANES[i % len(LANES)]
+    seed = (0x60D1DEA + i * 0x9E3779B97F4A7C15) % 2**64
+    deadline = 0 if i == DEADLINE_MISS_AT else NS_NONE
+    verdict = V_DEADLINE if i == DEADLINE_MISS_AT else V_OK
+    records.append((name, op, klass, tenant, i * GAP_NS, deadline, lanes, seed, verdict))
+
+out = bytearray()
+out += b"FFTR"
+out += struct.pack("<HHI", 1, 0, COUNT)  # version, flags (no inline), count
+for name, op, klass, tenant, arrival, deadline, lanes, seed, verdict in records:
+    t = tenant.encode()
+    out += struct.pack("<BBBBB", op, klass, verdict, 2, len(t)) + t
+    out += struct.pack("<QQQIQ", arrival, deadline, NS_NONE, lanes, seed)
+
+here = Path(__file__).parent
+(here / "golden.fftrace").write_bytes(out)
+
+expect = {
+    "records": COUNT,
+    "deadline_misses": 1,
+    "tenants": {"alpha": COUNT // 2, "beta": COUNT // 2},
+    "op_counts": {name: COUNT // len(OPS) for name, _ in OPS},
+    "virtual_s": records[-1][4] / 1e9,
+    "bytes": len(out),
+}
+(here / "golden.expect.json").write_text(json.dumps(expect, indent=2) + "\n")
+print(f"golden.fftrace: {len(out)} bytes, {COUNT} records")
